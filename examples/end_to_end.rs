@@ -1,0 +1,130 @@
+//! End-to-end driver: the full three-layer system on the paper's real
+//! workload.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+//!
+//! Exercises every layer in one run:
+//!   L1/L2  the Pallas/JAX actor-critic, AOT-compiled to HLO, executed
+//!          via PJRT on every policy forward and PPO update;
+//!   L3     the Chiplet-Gym environment, GAE/rollouts, SA, and Alg. 1.
+//!
+//! Flow: (1) load + verify artifacts against the jax golden vectors,
+//! (2) run Algorithm 1 (SA instances + PPO agents + exhaustive argmax),
+//! (3) evaluate the winning design on the MLPerf suite vs the monolithic
+//! baseline and report the paper's headline ratios. Results are appended
+//! to bench_results/end_to_end.txt (EXPERIMENTS.md records a run).
+//!
+//! Scale: quick by default (~2 min); CHIPLET_GYM_FULL=1 for the paper's
+//! full 20+20 agents at 500K/250K.
+
+use chiplet_gym::cost::Calib;
+use chiplet_gym::model::space::DesignSpace;
+use chiplet_gym::opt::combined::{combined_optimize, CombinedConfig};
+use chiplet_gym::opt::sa::SaConfig;
+use chiplet_gym::report;
+use chiplet_gym::rl::PpoConfig;
+use chiplet_gym::runtime::{Engine, Golden};
+use chiplet_gym::workloads::{mapping, mlperf::mlperf_suite, Monolithic};
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::var("CHIPLET_GYM_FULL").is_ok();
+    let mut log = String::new();
+    let mut out = |s: String| {
+        println!("{s}");
+        log.push_str(&s);
+        log.push('\n');
+    };
+
+    // ---- (1) load artifacts, verify numerics against jax ----
+    let t0 = std::time::Instant::now();
+    let engine = Engine::discover()?;
+    out(format!(
+        "[1] engine up on '{}' in {:.1}s: {} params, {} logits, artifacts at {}",
+        engine.platform(),
+        t0.elapsed().as_secs_f64(),
+        engine.manifest.param_count,
+        engine.manifest.act_total,
+        engine.artifact_dir().display()
+    ));
+    let golden = Golden::load(engine.artifact_dir())?;
+    let params = engine.golden_params()?;
+    let fwd = engine.policy_forward(&params, &golden.forward_obs)?;
+    let value_err = (fwd.value[0] as f64 - golden.forward_value).abs();
+    anyhow::ensure!(value_err < 1e-4, "golden forward mismatch: {value_err}");
+    out(format!(
+        "    golden check: PJRT value {:.6} == jax value {:.6} (err {value_err:.2e})",
+        fwd.value[0], golden.forward_value
+    ));
+
+    // ---- (2) Algorithm 1 ----
+    let space = DesignSpace::case_i();
+    let calib = Calib::default();
+    let mut ppo = PpoConfig::from_manifest(&engine);
+    ppo.total_timesteps = if full { 250_000 } else { 40_960 };
+    let cfg = CombinedConfig {
+        sa: SaConfig {
+            iterations: if full { 500_000 } else { 150_000 },
+            trace_every: 0,
+            ..SaConfig::default()
+        },
+        ppo,
+        sa_seeds: if full { (0..20).collect() } else { (0..5).collect() },
+        rl_seeds: if full { (0..20).collect() } else { (0..2).collect() },
+    };
+    let t1 = std::time::Instant::now();
+    let outcome = combined_optimize(&engine, space, &calib, &cfg)?;
+    out(format!(
+        "[2] Algorithm 1: {} SA + {} RL agents in {:.1}s (paper: ~10 min)",
+        cfg.sa_seeds.len(),
+        cfg.rl_seeds.len(),
+        t1.elapsed().as_secs_f64()
+    ));
+    for c in &outcome.candidates {
+        out(format!("      {:>6} seed {:2}: {:8.2}", c.source, c.seed, c.eval.reward));
+    }
+    let best = space.decode(&outcome.best.action);
+    let e = outcome.best.eval;
+    out(format!(
+        "    winner: {} seed {} -> {} | {} chiplets ({}x{} mesh), {} HBMs, obj {:.1} (paper band 178-185)",
+        outcome.best.source, outcome.best.seed, best.arch.name(),
+        best.n_chiplets, e.mesh_m, e.mesh_n, best.n_hbm(), e.reward
+    ));
+
+    // ---- (3) MLPerf evaluation vs monolithic ----
+    let mono = Monolithic::new(&calib);
+    out("[3] MLPerf (Fig. 12) — optimized chiplet system vs monolithic GPU:".into());
+    let mut speedups = Vec::new();
+    let mut gains = Vec::new();
+    for w in mlperf_suite() {
+        let u = mapping::u_chip(e.pe_per_chiplet, best.n_chiplets, &w);
+        let tops = e.throughput_tops / calib.default_u_chip * u;
+        let rate = tops * 1e12 / (w.gmac_per_task() * 1e9);
+        let m_rate = mono.tasks_per_sec(&calib, &w);
+        let eff = 1.0 / (e.e_op_pj * w.gmac_per_task() * 1e-3);
+        let m_eff = mono.tasks_per_joule(&w);
+        speedups.push(rate / m_rate);
+        gains.push(eff / m_eff);
+        out(format!(
+            "      {:>13}: {:>12.0} inf/s ({:.2}x mono)   {:>8.1} inf/J ({:.2}x mono)",
+            w.name, rate, rate / m_rate, eff, eff / m_eff
+        ));
+    }
+    let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len() as f64;
+    out(format!(
+        "    headline: {:.2}x throughput (paper 1.52x), {:.2}x energy eff (paper 3.7x),",
+        mean(&speedups),
+        mean(&gains)
+    ));
+    out(format!(
+        "              {:.4}x die cost (paper 0.01x), {:.2}x package cost (paper 1.62x)",
+        e.die_cost / mono.die_cost,
+        e.pkg_cost / mono.pkg_cost
+    ));
+    out(format!("total wall time {:.1}s", t0.elapsed().as_secs_f64()));
+
+    let path = report::write_text("end_to_end.txt", &log);
+    println!("\nrun log written to {}", path.display());
+    Ok(())
+}

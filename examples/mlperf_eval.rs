@@ -1,0 +1,84 @@
+//! MLPerf evaluation (Fig. 12) of arbitrary design points.
+//!
+//! ```bash
+//! cargo run --release --example mlperf_eval
+//! cargo run --release --example mlperf_eval -- --action 2,59,29,1,19,61,0,0,22,31,1,19,97,0
+//! ```
+//!
+//! Evaluates a design point (default: the paper's Table 6 optima for both
+//! cases) on the MLPerf workloads of Table 7 and prints the comparison
+//! against the monolithic baseline.
+
+use chiplet_gym::cost::{evaluate, Calib};
+use chiplet_gym::model::space::{paper_points, DesignSpace, N_HEADS};
+use chiplet_gym::util::cli::Args;
+use chiplet_gym::util::table::{fnum, Table};
+use chiplet_gym::workloads::{mapping, mlperf::mlperf_suite, Monolithic};
+
+fn main() {
+    let args = Args::from_env();
+    let calib = Calib::default();
+    let mono = Monolithic::new(&calib);
+
+    let systems: Vec<(String, DesignSpace, [usize; N_HEADS])> =
+        if let Some(spec) = args.get("action") {
+            let parts: Vec<usize> = spec
+                .split(',')
+                .map(|p| p.trim().parse().expect("--action: 14 ints"))
+                .collect();
+            assert_eq!(parts.len(), N_HEADS);
+            let mut a = [0usize; N_HEADS];
+            a.copy_from_slice(&parts);
+            vec![("custom".into(), DesignSpace::case_ii(), a)]
+        } else {
+            vec![
+                ("60-chiplet (Table 6 i)".into(), DesignSpace::case_i(),
+                 paper_points::table6_case_i()),
+                ("112-chiplet (Table 6 ii)".into(), DesignSpace::case_ii(),
+                 paper_points::table6_case_ii()),
+            ]
+        };
+
+    println!(
+        "monolithic baseline: {:.0} mm2, {:.0} TMAC/s peak, yield {:.0}%, E_op {:.2} pJ\n",
+        mono.die_mm2,
+        mono.peak_tops,
+        mono.die_yield * 100.0,
+        mono.e_op_pj
+    );
+
+    for (name, space, action) in systems {
+        let p = space.decode(&action);
+        let e = evaluate(&calib, &p);
+        println!(
+            "=== {name}: {} | {} chiplets, {} HBMs, {:.1} TMAC/s effective ===",
+            p.arch.name(),
+            p.n_chiplets,
+            p.n_hbm(),
+            e.throughput_tops
+        );
+        let mut t = Table::new([
+            "benchmark", "U_chip", "inf/s", "vs mono", "inf/J", "vs mono",
+        ]);
+        for w in mlperf_suite() {
+            let u = mapping::u_chip(e.pe_per_chiplet, p.n_chiplets, &w);
+            let tops = e.throughput_tops / calib.default_u_chip * u;
+            let rate = tops * 1e12 / (w.gmac_per_task() * 1e9);
+            let eff = 1.0 / (e.e_op_pj * w.gmac_per_task() * 1e-3);
+            t.row([
+                w.name.to_string(),
+                format!("{u:.2}"),
+                fnum(rate),
+                format!("{:.2}x", rate / mono.tasks_per_sec(&calib, &w)),
+                fnum(eff),
+                format!("{:.2}x", eff / mono.tasks_per_joule(&w)),
+            ]);
+        }
+        t.print();
+        println!(
+            "die cost {:.4}x mono, package cost {:.2}x mono\n",
+            e.die_cost / mono.die_cost,
+            e.pkg_cost / mono.pkg_cost
+        );
+    }
+}

@@ -1,0 +1,86 @@
+//! Full Algorithm 1 run — the paper's production optimizer configuration.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example optimize_full          # quick
+//! CHIPLET_GYM_FULL=1 cargo run --release --example optimize_full        # paper scale
+//! cargo run --release --example optimize_full -- --case ii --seeds 0,1,2
+//! ```
+//!
+//! Runs N SA instances (Alg. 2) and N PPO agents (Table 5) with distinct
+//! seeds, then the exhaustive argmax over all outputs (Alg. 1), for both
+//! chiplet caps, and prints the optimized parameters Table-6 style.
+
+use chiplet_gym::config::RunConfig;
+use chiplet_gym::cost::evaluate;
+use chiplet_gym::opt::combined::{combined_optimize, CombinedConfig};
+use chiplet_gym::rl::PpoConfig;
+use chiplet_gym::runtime::Engine;
+use chiplet_gym::util::cli::Args;
+use chiplet_gym::util::stats::Summary;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let full = std::env::var("CHIPLET_GYM_FULL").is_ok();
+    let mut cfg = RunConfig::default();
+    cfg.apply_args(&args);
+    if !full && args.get("seeds").is_none() {
+        cfg.sa_seeds = (0..8).collect();
+        cfg.rl_seeds = (0..3).collect();
+        cfg.sa.iterations = 150_000;
+        cfg.ppo_total_timesteps = 40_960;
+    }
+
+    let engine = Engine::discover()?;
+    let mut ppo = PpoConfig::from_manifest(&engine);
+    ppo.total_timesteps = cfg.ppo_total_timesteps;
+    ppo.episode_len = cfg.ppo_episode_len;
+    ppo.ent_coef = cfg.ppo_ent_coef;
+    let combined = CombinedConfig {
+        sa: cfg.sa,
+        ppo,
+        sa_seeds: cfg.sa_seeds.clone(),
+        rl_seeds: cfg.rl_seeds.clone(),
+    };
+
+    println!(
+        "Algorithm 1 on case ({}): {} SA x {} iters, {} PPO x {} steps",
+        if cfg.chiplet_cap == 64 { "i" } else { "ii" },
+        combined.sa_seeds.len(),
+        combined.sa.iterations,
+        combined.rl_seeds.len(),
+        combined.ppo.total_timesteps,
+    );
+    let t0 = std::time::Instant::now();
+    let out = combined_optimize(&engine, cfg.space(), &cfg.calib, &combined)?;
+    println!("finished in {:.1}s (paper: ~10 min for 20+20)", t0.elapsed().as_secs_f64());
+
+    let sa: Vec<f64> = out.candidates.iter().filter(|c| c.source == "SA").map(|c| c.eval.reward).collect();
+    let rl: Vec<f64> = out.candidates.iter().filter(|c| c.source == "RL").map(|c| c.eval.reward).collect();
+    if !sa.is_empty() {
+        let s = Summary::of(&sa);
+        println!("SA bests: [{:.1}, {:.1}] mean {:.1}", s.min, s.max, s.mean);
+    }
+    if !rl.is_empty() {
+        let s = Summary::of(&rl);
+        println!("RL bests: [{:.1}, {:.1}] mean {:.1}", s.min, s.max, s.mean);
+    }
+
+    let p = cfg.space().decode(&out.best.action);
+    let e = evaluate(&cfg.calib, &p);
+    println!("\noptimized parameters ({} seed {}):", out.best.source, out.best.seed);
+    println!("  architecture   {}", p.arch.name());
+    println!("  chiplets       {} ({}x{} mesh of {} footprints)", p.n_chiplets, e.mesh_m, e.mesh_n, e.n_footprints);
+    println!("  HBM            {} @ {:?}", p.n_hbm(), p.hbm_locs());
+    println!("  AI2AI 2.5D     {} {} Gbps x {} ({:.1} Tbps), trace {} mm",
+        p.ai2ai_25d.props().name, p.ai2ai_25d_gbps, p.ai2ai_25d_links,
+        p.bw_ai2ai_25d_tbps(), p.ai2ai_25d_trace_mm);
+    if p.arch.uses_3d() {
+        println!("  AI2AI 3D       {} {} Gbps x {} ({:.1} Tbps)",
+            p.ai2ai_3d.props().name, p.ai2ai_3d_gbps, p.ai2ai_3d_links, p.bw_ai2ai_3d_tbps());
+    }
+    println!("  AI2HBM 2.5D    {} {} Gbps x {} ({:.1} Tbps), trace {} mm",
+        p.ai2hbm.props().name, p.ai2hbm_gbps, p.ai2hbm_links,
+        p.bw_ai2hbm_tbps(), p.ai2hbm_trace_mm);
+    println!("  objective      {:.2}", e.reward);
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! HBM placement sweep — the Fig. 4 study as a runnable example.
+//!
+//! ```bash
+//! cargo run --release --example placement_sweep
+//! ```
+//!
+//! Sweeps all 2^6 − 1 HBM placement combinations for the case (i) layout
+//! and shows how partitioning memory across multiple locations cuts the
+//! worst-case supply hops (the paper's 6 → 3 hop illustration) and what
+//! that does to throughput and reward.
+
+use chiplet_gym::cost::{evaluate, Calib};
+use chiplet_gym::mesh::grid::MeshGrid;
+use chiplet_gym::model::space::{paper_points, DesignSpace};
+use chiplet_gym::util::table::Table;
+
+fn main() {
+    let space = DesignSpace::case_i();
+    let calib = Calib::default();
+    let base = paper_points::table6_case_i();
+
+    println!("sweeping 63 HBM placement masks on the Table 6 case (i) design\n");
+    let mut rows: Vec<(u8, usize, usize, f64, f64, f64)> = Vec::new();
+    for mask in 1u8..=63 {
+        let mut action = base;
+        action[2] = mask as usize - 1;
+        let p = space.decode(&action);
+        let grid = MeshGrid::new(p.n_footprints(), &p.hbm_locs());
+        let e = evaluate(&calib, &p);
+        rows.push((
+            p.hbm_mask,
+            p.n_hbm(),
+            grid.max_hbm_hops(),
+            grid.mean_hbm_hops(),
+            e.throughput_tops,
+            e.reward,
+        ));
+    }
+
+    // Fig. 4 narrative: single left HBM vs the 5-way spread.
+    let single_left = rows.iter().find(|r| r.0 == 0b000001).unwrap();
+    let spread5 = rows.iter().find(|r| r.0 == 0b011111).unwrap();
+    println!(
+        "Fig. 4 checkpoints: 1 HBM @ left -> {} worst-case hops; 5 spread HBMs -> {} hops",
+        single_left.2, spread5.2
+    );
+
+    rows.sort_by(|a, b| b.5.partial_cmp(&a.5).unwrap());
+    let mut t = Table::new([
+        "mask", "n_hbm", "max hops", "mean hops", "throughput", "reward",
+    ]);
+    println!("\ntop 10 placements by reward:");
+    for r in rows.iter().take(10) {
+        t.row([
+            format!("{:06b}", r.0),
+            format!("{}", r.1),
+            format!("{}", r.2),
+            format!("{:.2}", r.3),
+            format!("{:.1}", r.4),
+            format!("{:.1}", r.5),
+        ]);
+    }
+    t.print();
+
+    let mut worst = Table::new([
+        "mask", "n_hbm", "max hops", "mean hops", "throughput", "reward",
+    ]);
+    println!("\nbottom 3:");
+    for r in rows.iter().rev().take(3) {
+        worst.row([
+            format!("{:06b}", r.0),
+            format!("{}", r.1),
+            format!("{}", r.2),
+            format!("{:.2}", r.3),
+            format!("{:.1}", r.4),
+            format!("{:.1}", r.5),
+        ]);
+    }
+    worst.print();
+    println!("\n(the paper's chosen 4-HBM spread trades one stack of area for 2-hop supply)");
+}

@@ -1,0 +1,61 @@
+//! Quickstart: evaluate a design point, run a short SA, inspect results.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! No artifacts needed — this exercises the analytical model and the SA
+//! optimizer only. See `end_to_end.rs` for the full three-layer flow.
+
+use chiplet_gym::cost::{evaluate, Calib};
+use chiplet_gym::model::space::{paper_points, DesignSpace};
+use chiplet_gym::opt::sa::{simulated_annealing, SaConfig};
+
+fn main() {
+    // 1. The design space of Table 1 (case i: at most 64 AI chiplets).
+    let space = DesignSpace::case_i();
+    println!(
+        "design space: 14 parameters, {:.2e} design points",
+        space.cardinality()
+    );
+
+    // 2. Evaluate the paper's own Table 6 optimum under the PPAC model.
+    let calib = Calib::default();
+    let point = space.decode(&paper_points::table6_case_i());
+    let eval = evaluate(&calib, &point);
+    println!("\npaper's Table 6 case (i) design point:");
+    println!("  {} x {} chiplets ({}x{} mesh), {} HBMs",
+        point.n_chiplets, "1", eval.mesh_m, eval.mesh_n, point.n_hbm());
+    println!("  area/chiplet   {:.1} mm2 (yield {:.1}%)", eval.area_per_chiplet, eval.die_yield * 100.0);
+    println!("  throughput     {:.1} TMAC/s (peak {:.1})", eval.throughput_tops, eval.peak_tops);
+    println!("  energy/op      {:.2} pJ", eval.e_op_pj);
+    println!("  package cost   {:.1} (eq. 16 units)", eval.pkg_cost);
+    println!("  reward (eq.17) {:.1}", eval.reward);
+
+    // 3. Let simulated annealing (Alg. 2) search the space for 100K iters.
+    let cfg = SaConfig {
+        iterations: 100_000,
+        trace_every: 10_000,
+        ..SaConfig::default()
+    };
+    let t0 = std::time::Instant::now();
+    let trace = simulated_annealing(&space, &calib, &cfg, 0);
+    println!(
+        "\nSA: {} iterations in {:.2}s ({:.1}M evals/s)",
+        cfg.iterations,
+        t0.elapsed().as_secs_f64(),
+        cfg.iterations as f64 / t0.elapsed().as_secs_f64() / 1e6
+    );
+    for (iter, best) in &trace.history {
+        println!("  iter {iter:>7}: best {best:.1}");
+    }
+    let best = space.decode(&trace.best_action);
+    println!(
+        "\nSA optimum: {} with {} chiplets, {} HBMs -> objective {:.1}",
+        best.arch.name(),
+        best.n_chiplets,
+        best.n_hbm(),
+        trace.best_eval.reward
+    );
+    println!("(paper's optimizer lands in the 178-185 band for case (i))");
+}

@@ -1,0 +1,206 @@
+"""AOT compile path: lower the L2/L1 computations to HLO text artifacts.
+
+Emits into ``artifacts/``:
+
+* ``policy_forward.hlo.txt``  — rollout forward, batch=1 (Pallas kernels)
+* ``policy_forward_b64.hlo.txt`` — batched forward for deterministic
+  evaluation sweeps (batch=64)
+* ``ppo_update.hlo.txt``      — one PPO minibatch Adam step (batch=64)
+* ``manifest.json``           — shapes, parameter layout, action dims,
+  hyper-parameters: the contract consumed by rust/src/runtime/artifact.rs
+* ``golden.json`` + ``golden_params.f32.bin`` — concrete input/output
+  vectors produced by executing the same computations under jax; the Rust
+  integration tests replay them through PJRT and assert agreement.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+EVAL_BATCH = 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_policy_forward(batch: int):
+    p = jax.ShapeDtypeStruct((model.param_count(),), jnp.float32)
+    obs = jax.ShapeDtypeStruct((batch, model.OBS_DIM), jnp.float32)
+    return jax.jit(model.policy_forward).lower(p, obs)
+
+
+def lower_ppo_epochs():
+    h = model.HYPERPARAMS
+    n = h["n_steps"]
+    m = h["batch_size"]
+    k = h["n_epoch"] * (n // m)
+    pc = model.param_count()
+    f32 = jnp.float32
+    args = (
+        jax.ShapeDtypeStruct((pc,), f32),             # params
+        jax.ShapeDtypeStruct((pc,), f32),             # adam m
+        jax.ShapeDtypeStruct((pc,), f32),             # adam v
+        jax.ShapeDtypeStruct((1,), f32),              # step0
+        jax.ShapeDtypeStruct((n, model.OBS_DIM), f32),  # obs
+        jax.ShapeDtypeStruct((n, model.N_HEADS), jnp.int32),  # actions
+        jax.ShapeDtypeStruct((n,), f32),              # old_logp
+        jax.ShapeDtypeStruct((n,), f32),              # advantages
+        jax.ShapeDtypeStruct((n,), f32),              # returns
+        jax.ShapeDtypeStruct((k, m), jnp.int32),      # perm
+        jax.ShapeDtypeStruct((3,), f32),              # hyper
+    )
+    return jax.jit(model.ppo_epochs).lower(*args)
+
+
+def lower_ppo_update():
+    m = model.HYPERPARAMS["batch_size"]
+    pc = model.param_count()
+    f32 = jnp.float32
+    args = (
+        jax.ShapeDtypeStruct((pc,), f32),             # params
+        jax.ShapeDtypeStruct((pc,), f32),             # adam m
+        jax.ShapeDtypeStruct((pc,), f32),             # adam v
+        jax.ShapeDtypeStruct((1,), f32),              # step
+        jax.ShapeDtypeStruct((m, model.OBS_DIM), f32),  # obs
+        jax.ShapeDtypeStruct((m, model.N_HEADS), jnp.int32),  # actions
+        jax.ShapeDtypeStruct((m,), f32),              # old_logp
+        jax.ShapeDtypeStruct((m,), f32),              # advantages
+        jax.ShapeDtypeStruct((m,), f32),              # returns
+        jax.ShapeDtypeStruct((3,), f32),              # hyper [lr, clip, ent]
+    )
+    return jax.jit(model.ppo_update).lower(*args)
+
+
+def write_manifest(outdir: str) -> None:
+    manifest = {
+        "version": 1,
+        "obs_dim": model.OBS_DIM,
+        "hidden": model.HIDDEN,
+        "action_dims": list(model.ACTION_DIMS),
+        "act_total": model.ACT_TOTAL,
+        "n_heads": model.N_HEADS,
+        "param_count": model.param_count(),
+        "eval_batch": EVAL_BATCH,
+        "params": model.param_offsets(),
+        "hyperparams": model.HYPERPARAMS,
+        "artifacts": {
+            "policy_forward": "policy_forward.hlo.txt",
+            "policy_forward_b64": "policy_forward_b64.hlo.txt",
+            "ppo_update": "ppo_update.hlo.txt",
+            "ppo_epochs": "ppo_epochs.hlo.txt",
+        },
+    }
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def write_golden(outdir: str) -> None:
+    """Execute the lowered computations in jax and record golden vectors."""
+    rng = np.random.default_rng(0)
+    flat = model.init_params(jax.random.PRNGKey(0))
+    flat_np = np.asarray(flat, np.float32)
+    with open(os.path.join(outdir, "golden_params.f32.bin"), "wb") as f:
+        f.write(struct.pack(f"<{flat_np.size}f", *flat_np.tolist()))
+
+    # --- forward golden (batch 1 and batch 64 share params) ---
+    obs1 = rng.standard_normal((1, model.OBS_DIM)).astype(np.float32)
+    logp_all, value = jax.jit(model.policy_forward)(flat, jnp.asarray(obs1))
+    logp_all = np.asarray(logp_all)
+
+    # --- update golden ---
+    m = model.HYPERPARAMS["batch_size"]
+    obs_b = rng.standard_normal((m, model.OBS_DIM)).astype(np.float32)
+    actions = np.stack(
+        [rng.integers(0, d, size=m) for d in model.ACTION_DIMS], axis=1
+    ).astype(np.int32)
+    old_logp = (-rng.random(m) * 5.0).astype(np.float32)
+    adv = rng.standard_normal(m).astype(np.float32)
+    ret = rng.standard_normal(m).astype(np.float32)
+    hyper = np.array(
+        [
+            model.HYPERPARAMS["learning_rate"],
+            model.HYPERPARAMS["clip_range"],
+            model.HYPERPARAMS["ent_coef"],
+        ],
+        np.float32,
+    )
+    zeros = jnp.zeros_like(flat)
+    new_p, new_m, new_v, stats = jax.jit(model.ppo_update)(
+        flat, zeros, zeros, jnp.ones((1,), jnp.float32),
+        jnp.asarray(obs_b), jnp.asarray(actions), jnp.asarray(old_logp),
+        jnp.asarray(adv), jnp.asarray(ret), jnp.asarray(hyper),
+    )
+    new_p = np.asarray(new_p)
+
+    golden = {
+        "forward": {
+            "obs": obs1[0].tolist(),
+            "logp_head0": logp_all[0, : model.ACTION_DIMS[0]].tolist(),
+            "logp_sum": float(logp_all[0].sum()),
+            "value": float(np.asarray(value)[0]),
+        },
+        "update": {
+            "obs": obs_b.reshape(-1).tolist(),
+            "actions": actions.reshape(-1).tolist(),
+            "old_logp": old_logp.tolist(),
+            "advantages": adv.tolist(),
+            "returns": ret.tolist(),
+            "hyper": hyper.tolist(),
+            "stats": np.asarray(stats).tolist(),
+            "new_params_head": new_p[:8].tolist(),
+            "new_params_l2": float(np.sqrt((new_p.astype(np.float64) ** 2).sum())),
+        },
+    }
+    with open(os.path.join(outdir, "golden.json"), "w") as f:
+        json.dump(golden, f)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--skip-golden", action="store_true")
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+
+    for name, lowered in (
+        ("policy_forward", lower_policy_forward(1)),
+        ("policy_forward_b64", lower_policy_forward(EVAL_BATCH)),
+        ("ppo_update", lower_ppo_update()),
+        ("ppo_epochs", lower_ppo_epochs()),
+    ):
+        text = to_hlo_text(lowered)
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    write_manifest(outdir)
+    print(f"wrote {outdir}/manifest.json")
+    if not args.skip_golden:
+        write_golden(outdir)
+        print(f"wrote {outdir}/golden.json + golden_params.f32.bin")
+
+
+if __name__ == "__main__":
+    main()

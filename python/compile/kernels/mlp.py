@@ -1,0 +1,114 @@
+"""L1 — Pallas kernels for the Chiplet-Gym policy/value network.
+
+The PPO agent's compute hot-spot is the actor-critic MLP: it runs once per
+environment step (250K+ forwards per trained agent, x20 agents under
+Alg. 1 of the paper). These kernels implement the fused ``tanh(x @ W + b)``
+layer (and the linear head) as Pallas kernels so that the whole forward
+pass lowers into the AOT'd HLO executed by the Rust coordinator.
+
+TPU mapping notes (see DESIGN.md section "Hardware adaptation"):
+
+* The weight matrices are small (<= 64x591) and are kept whole-resident in
+  VMEM: their ``BlockSpec`` index_map is constant, so Mosaic hoists the
+  HBM->VMEM copy out of the grid loop.
+* The batch is tiled with ``BLOCK_B`` rows per grid step; each grid step
+  performs a single MXU-shaped matmul (``jnp.dot`` with
+  ``preferred_element_type=float32``).
+* ``interpret=True`` is required on this CPU-PJRT image — real-TPU lowering
+  emits a Mosaic custom-call the CPU plugin cannot execute. The kernel
+  structure (BlockSpec schedule, fused activation) is what we optimize;
+  wall-clock TPU performance is estimated analytically in EXPERIMENTS.md.
+
+Autodiff: interpret-mode ``pallas_call`` does not support reverse-mode AD,
+so these kernels appear only in the *forward* (rollout) artifact. The PPO
+update artifact uses the numerically identical pure-jnp reference
+(``ref.py``); pytest asserts the two paths agree to float32 tolerance.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows of the batch processed per grid step. 8 is the f32 sublane count on
+# TPU; the rollout path uses batch=1 so a single grid step covers it.
+BLOCK_B = 8
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str):
+    """Fused ``activation(x @ W + b)`` over one batch tile.
+
+    x_ref: (block_b, in_dim)  VMEM tile of the input batch
+    w_ref: (in_dim, out_dim)  whole weight matrix, VMEM-resident
+    b_ref: (1, out_dim)       bias row
+    o_ref: (block_b, out_dim) output tile
+    """
+    x = x_ref[...]
+    w = w_ref[...]
+    # MXU-shaped matmul; keep the accumulator in f32 regardless of the
+    # input dtype so bf16 inputs still accumulate exactly like the ref.
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...]
+    if activation == "tanh":
+        acc = jnp.tanh(acc)
+    elif activation != "linear":  # pragma: no cover - guarded by callers
+        raise ValueError(f"unknown activation {activation!r}")
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _dense(x: jax.Array, w: jax.Array, b: jax.Array, activation: str) -> jax.Array:
+    """Batch-tiled Pallas dispatch of the fused dense layer."""
+    batch, in_dim = x.shape
+    in_dim_w, out_dim = w.shape
+    assert in_dim == in_dim_w, (x.shape, w.shape)
+    assert b.shape == (out_dim,), (b.shape, out_dim)
+
+    block_b = min(BLOCK_B, batch)
+    grid = (pl.cdiv(batch, block_b),)
+    kernel = functools.partial(_dense_kernel, activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # batch tile marches down the grid...
+            pl.BlockSpec((block_b, in_dim), lambda i: (i, 0)),
+            # ...weights and bias stay resident (constant index_map).
+            pl.BlockSpec((in_dim, out_dim), lambda i: (0, 0)),
+            pl.BlockSpec((1, out_dim), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, out_dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, out_dim), x.dtype),
+        interpret=True,
+    )(x, w, b.reshape(1, out_dim))
+
+
+def dense_tanh(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """``tanh(x @ W + b)`` — the MLP hidden layer (Pallas)."""
+    return _dense(x, w, b, "tanh")
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """``x @ W + b`` — the linear output head (Pallas)."""
+    return _dense(x, w, b, "linear")
+
+
+def mlp_forward(params: dict, obs: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Actor-critic forward pass built from the Pallas layers.
+
+    params: dict of arrays (see model.param_spec) — pi_w1, pi_b1, pi_w2,
+        pi_b2, pi_wh, pi_bh, vf_w1, vf_b1, vf_w2, vf_b2, vf_wh, vf_bh.
+    obs: (batch, obs_dim) float32.
+
+    Returns (logits (batch, act_total), value (batch,)).
+    """
+    h = dense_tanh(obs, params["pi_w1"], params["pi_b1"])
+    h = dense_tanh(h, params["pi_w2"], params["pi_b2"])
+    logits = dense(h, params["pi_wh"], params["pi_bh"])
+
+    hv = dense_tanh(obs, params["vf_w1"], params["vf_b1"])
+    hv = dense_tanh(hv, params["vf_w2"], params["vf_b2"])
+    value = dense(hv, params["vf_wh"], params["vf_bh"])
+    return logits, value[:, 0]

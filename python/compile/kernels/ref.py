@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the Pallas kernels (L1 correctness reference).
+
+Every Pallas kernel in ``mlp.py`` has an exact pure-jnp twin here. pytest
+(``tests/test_kernels.py``) sweeps shapes and dtypes with hypothesis and
+asserts allclose between the two. The PPO *update* path (which needs
+reverse-mode AD, unsupported through interpret-mode pallas_call) uses these
+reference functions directly — so proving kernel == ref also proves the
+rollout policy and the differentiated policy are the same function.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_tanh_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """``tanh(x @ W + b)`` with an f32 accumulator (matches the kernel)."""
+    return jnp.tanh(
+        jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+    ).astype(x.dtype)
+
+
+def dense_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """``x @ W + b`` with an f32 accumulator (matches the kernel)."""
+    return (jnp.dot(x, w, preferred_element_type=jnp.float32) + b).astype(x.dtype)
+
+
+def mlp_forward_ref(params: dict, obs: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Actor-critic forward pass — pure-jnp twin of ``mlp.mlp_forward``."""
+    h = dense_tanh_ref(obs, params["pi_w1"], params["pi_b1"])
+    h = dense_tanh_ref(h, params["pi_w2"], params["pi_b2"])
+    logits = dense_ref(h, params["pi_wh"], params["pi_bh"])
+
+    hv = dense_tanh_ref(obs, params["vf_w1"], params["vf_b1"])
+    hv = dense_tanh_ref(hv, params["vf_w2"], params["vf_b2"])
+    value = dense_ref(hv, params["vf_wh"], params["vf_bh"])
+    return logits, value[:, 0]

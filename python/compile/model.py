@@ -1,0 +1,343 @@
+"""L2 — JAX actor-critic model and PPO update for Chiplet-Gym.
+
+This module defines, in JAX, everything the Rust coordinator needs from the
+neural side of the paper's optimizer (Section 4.1 / Table 5):
+
+* the MultiDiscrete actor-critic network (MLP [obs,64,64,act_total] for the
+  policy, [obs,64,64,1] for the value function, tanh activations — exactly
+  the SB3 architecture reported in the paper, Section 5.2.1);
+* ``policy_forward`` — the rollout-path forward pass (built on the L1
+  Pallas kernels) returning per-head log-probabilities and the value;
+* ``ppo_update`` — one clipped-PPO minibatch gradient step with Adam,
+  global grad-norm clipping and per-minibatch advantage normalization
+  (SB3 semantics, hyper-parameters of Table 5).
+
+Both functions are AOT-lowered to HLO text by ``aot.py`` and executed from
+Rust via PJRT; Python never runs during optimization.
+
+Parameters travel as ONE flat f32 vector. The layout (name/shape/offset) is
+fixed by ``param_spec()`` and exported in ``artifacts/manifest.json`` so the
+Rust side can initialize, checkpoint and inspect parameters without ever
+deserializing a pytree.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import mlp, ref
+
+# ---------------------------------------------------------------------------
+# Design-space geometry (single source of truth, mirrored into manifest.json;
+# rust/src/model/space.rs asserts equality at startup).
+#
+# Table 1 of the paper, in order:
+#   arch type, #chiplets, HBM placement bitmask, AI2AI-2.5D {ic, DR, links,
+#   trace}, AI2AI-3D {ic, DR, links}, AI2HBM-2.5D {ic, DR, links, trace}.
+# ---------------------------------------------------------------------------
+ACTION_DIMS: tuple[int, ...] = (3, 128, 63, 2, 20, 100, 10, 2, 31, 100, 2, 20, 100, 10)
+ACT_TOTAL: int = sum(ACTION_DIMS)  # 591 policy logits
+N_HEADS: int = len(ACTION_DIMS)  # 14 design parameters
+OBS_DIM: int = 10  # paper section 5.2.1 (observation Box space)
+HIDDEN: int = 64  # SB3 MlpPolicy default, confirmed by the paper
+
+# PPO hyper-parameters — Table 5 of the paper (SB3 defaults + ent_coef 0.1).
+# lr / clip / ent_coef are *runtime inputs* of the update artifact (packed
+# into a f32[3] "hyper" vector) so Fig. 7/8 sweeps reuse one artifact; the
+# rest are baked into the traced computation.
+HYPERPARAMS = {
+    "n_steps": 2048,
+    "batch_size": 64,
+    "n_epoch": 10,
+    "learning_rate": 3e-4,
+    "clip_range": 0.2,
+    "ent_coef": 0.1,
+    "vf_coef": 0.5,
+    "gamma": 0.99,
+    "gae_lambda": 0.95,
+    "max_grad_norm": 0.5,
+    "adam_beta1": 0.9,
+    "adam_beta2": 0.999,
+    "adam_eps": 1e-5,
+    "total_timesteps": 250_000,
+    "episode_length": 2,
+}
+
+
+def param_spec() -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) list defining the flat parameter layout."""
+    return [
+        ("pi_w1", (OBS_DIM, HIDDEN)),
+        ("pi_b1", (HIDDEN,)),
+        ("pi_w2", (HIDDEN, HIDDEN)),
+        ("pi_b2", (HIDDEN,)),
+        ("pi_wh", (HIDDEN, ACT_TOTAL)),
+        ("pi_bh", (ACT_TOTAL,)),
+        ("vf_w1", (OBS_DIM, HIDDEN)),
+        ("vf_b1", (HIDDEN,)),
+        ("vf_w2", (HIDDEN, HIDDEN)),
+        ("vf_b2", (HIDDEN,)),
+        ("vf_wh", (HIDDEN, 1)),
+        ("vf_bh", (1,)),
+    ]
+
+
+def param_count() -> int:
+    """Total number of scalars in the flat parameter vector."""
+    total = 0
+    for _, shape in param_spec():
+        n = 1
+        for s in shape:
+            n *= s
+        total += n
+    return total
+
+
+def param_offsets() -> list[dict]:
+    """Manifest entries: name, shape, offset, size for every tensor."""
+    out, off = [], 0
+    for name, shape in param_spec():
+        n = 1
+        for s in shape:
+            n *= s
+        out.append({"name": name, "shape": list(shape), "offset": off, "size": n})
+        off += n
+    return out
+
+
+def unflatten(flat: jax.Array) -> dict:
+    """Slice the flat f32[P] vector into the named parameter dict."""
+    params, off = {}, 0
+    for name, shape in param_spec():
+        n = 1
+        for s in shape:
+            n *= s
+        params[name] = flat[off : off + n].reshape(shape)
+        off += n
+    return params
+
+
+def flatten(params: dict) -> jax.Array:
+    """Inverse of :func:`unflatten` (used by tests only)."""
+    return jnp.concatenate([params[name].reshape(-1) for name, _ in param_spec()])
+
+
+def init_params(key: jax.Array) -> jax.Array:
+    """Orthogonal initialization, SB3-style gains (tests + golden vectors).
+
+    Hidden layers gain sqrt(2); policy head 0.01; value head 1.0. The Rust
+    side ships its own initializer with the same gain schedule; agreement is
+    checked statistically, not bit-exactly (different RNG streams).
+    """
+    spec = param_spec()
+    keys = jax.random.split(key, len(spec))
+    gains = {
+        "pi_w1": 2.0**0.5, "pi_w2": 2.0**0.5, "pi_wh": 0.01,
+        "vf_w1": 2.0**0.5, "vf_w2": 2.0**0.5, "vf_wh": 1.0,
+    }
+    parts = []
+    for k, (name, shape) in zip(keys, spec):
+        if name.endswith(("b1", "b2", "bh")):
+            parts.append(jnp.zeros(shape, jnp.float32).reshape(-1))
+        else:
+            w = jax.nn.initializers.orthogonal(gains[name])(k, shape, jnp.float32)
+            parts.append(w.reshape(-1))
+    return jnp.concatenate(parts)
+
+
+# ---------------------------------------------------------------------------
+# MultiDiscrete head utilities
+# ---------------------------------------------------------------------------
+
+def _head_slices() -> list[tuple[int, int]]:
+    """(start, end) of every categorical head inside the logit vector."""
+    out, off = [], 0
+    for d in ACTION_DIMS:
+        out.append((off, off + d))
+        off += d
+    return out
+
+
+def log_softmax_heads(logits: jax.Array) -> jax.Array:
+    """Per-head log-softmax over the concatenated logit vector.
+
+    logits: (batch, ACT_TOTAL). Each of the 14 head segments is normalized
+    independently — the MultiDiscrete distribution of SB3.
+    """
+    outs = []
+    for start, end in _head_slices():
+        outs.append(jax.nn.log_softmax(logits[:, start:end], axis=-1))
+    return jnp.concatenate(outs, axis=-1)
+
+
+def action_log_prob(logp_all: jax.Array, actions: jax.Array) -> jax.Array:
+    """Joint log-probability of a MultiDiscrete action.
+
+    logp_all: (batch, ACT_TOTAL) per-head log-softmax; actions: (batch,
+    N_HEADS) int32 of per-head indices. Returns (batch,).
+    """
+    total = jnp.zeros(logp_all.shape[0], jnp.float32)
+    for h, (start, _end) in enumerate(_head_slices()):
+        idx = start + actions[:, h]
+        total = total + jnp.take_along_axis(logp_all, idx[:, None], axis=1)[:, 0]
+    return total
+
+
+def entropy_heads(logp_all: jax.Array) -> jax.Array:
+    """Sum of per-head categorical entropies, (batch,)."""
+    ent = jnp.zeros(logp_all.shape[0], jnp.float32)
+    for start, end in _head_slices():
+        seg = logp_all[:, start:end]
+        ent = ent - jnp.sum(jnp.exp(seg) * seg, axis=-1)
+    return ent
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def policy_forward(flat_params: jax.Array, obs: jax.Array):
+    """Rollout-path forward (PALLAS kernels) — the AOT'd hot path.
+
+    Returns (logp_all (B, ACT_TOTAL), value (B,)). The Rust coordinator
+    samples each head from exp(logp) and accumulates the joint log-prob,
+    so no logits need to cross the FFI boundary.
+    """
+    params = unflatten(flat_params)
+    logits, value = mlp.mlp_forward(params, obs)
+    return log_softmax_heads(logits), value
+
+
+def policy_forward_ref(flat_params: jax.Array, obs: jax.Array):
+    """Pure-jnp twin of :func:`policy_forward` (AD-capable)."""
+    params = unflatten(flat_params)
+    logits, value = ref.mlp_forward_ref(params, obs)
+    return log_softmax_heads(logits), value
+
+
+# ---------------------------------------------------------------------------
+# PPO clipped-surrogate update (SB3 semantics)
+# ---------------------------------------------------------------------------
+
+def ppo_loss(flat_params, obs, actions, old_logp, advantages, returns,
+             clip_range, ent_coef):
+    """SB3 PPO loss for one minibatch.
+
+    advantages are normalized per minibatch (SB3 ``normalize_advantage``);
+    value loss is un-clipped MSE (SB3 default ``clip_range_vf=None``).
+    Returns (loss, aux) with aux = (pi_loss, vf_loss, entropy, approx_kl,
+    clip_frac).
+    """
+    logp_all, value = policy_forward_ref(flat_params, obs)
+    logp = action_log_prob(logp_all, actions)
+    entropy = jnp.mean(entropy_heads(logp_all))
+
+    adv = (advantages - jnp.mean(advantages)) / (jnp.std(advantages) + 1e-8)
+    ratio = jnp.exp(logp - old_logp)
+    unclipped = adv * ratio
+    clipped = adv * jnp.clip(ratio, 1.0 - clip_range, 1.0 + clip_range)
+    pi_loss = -jnp.mean(jnp.minimum(unclipped, clipped))
+
+    vf_loss = jnp.mean((returns - value) ** 2)
+
+    loss = pi_loss + HYPERPARAMS["vf_coef"] * vf_loss - ent_coef * entropy
+
+    log_ratio = logp - old_logp
+    approx_kl = jnp.mean(jnp.exp(log_ratio) - 1.0 - log_ratio)
+    clip_frac = jnp.mean((jnp.abs(ratio - 1.0) > clip_range).astype(jnp.float32))
+    return loss, (pi_loss, vf_loss, entropy, approx_kl, clip_frac)
+
+
+def ppo_update(flat_params, adam_m, adam_v, step,
+               obs, actions, old_logp, advantages, returns, hyper):
+    """One PPO minibatch gradient step with Adam — the AOT'd update.
+
+    Inputs (shapes fixed at trace time, M = batch_size):
+      flat_params, adam_m, adam_v   : f32[P]
+      step                          : f32[1]   (1-based Adam timestep)
+      obs                           : f32[M, OBS_DIM]
+      actions                       : i32[M, N_HEADS]
+      old_logp, advantages, returns : f32[M]
+      hyper                         : f32[3] = [learning_rate, clip_range,
+                                                ent_coef]
+
+    Returns (new_params, new_m, new_v, stats f32[8]) with stats =
+    [loss, pi_loss, vf_loss, entropy, approx_kl, clip_frac, grad_norm,
+     update_norm].
+    """
+    lr, clip_range, ent_coef = hyper[0], hyper[1], hyper[2]
+
+    (loss, aux), grads = jax.value_and_grad(ppo_loss, has_aux=True)(
+        flat_params, obs, actions, old_logp, advantages, returns,
+        clip_range, ent_coef,
+    )
+    pi_loss, vf_loss, entropy, approx_kl, clip_frac = aux
+
+    # Global grad-norm clipping (SB3 max_grad_norm).
+    gnorm = jnp.sqrt(jnp.sum(grads * grads))
+    scale = jnp.minimum(1.0, HYPERPARAMS["max_grad_norm"] / (gnorm + 1e-12))
+    grads = grads * scale
+
+    # Adam with bias correction (torch.optim.Adam semantics — matches SB3).
+    b1 = HYPERPARAMS["adam_beta1"]
+    b2 = HYPERPARAMS["adam_beta2"]
+    eps = HYPERPARAMS["adam_eps"]
+    t = step[0]
+    new_m = b1 * adam_m + (1.0 - b1) * grads
+    new_v = b2 * adam_v + (1.0 - b2) * grads * grads
+    m_hat = new_m / (1.0 - b1**t)
+    v_hat = new_v / (1.0 - b2**t)
+    update = lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    new_params = flat_params - update
+
+    stats = jnp.stack([
+        loss, pi_loss, vf_loss, entropy, approx_kl, clip_frac,
+        gnorm, jnp.sqrt(jnp.sum(update * update)),
+    ])
+    return new_params, new_m, new_v, stats
+
+
+def ppo_epochs(flat_params, adam_m, adam_v, step0,
+               obs, actions, old_logp, advantages, returns, perm, hyper):
+    """A full PPO optimize phase (n_epoch × minibatches) in ONE call.
+
+    Performance-critical fusion (EXPERIMENTS.md §Perf): the per-minibatch
+    artifact crosses the Rust↔PJRT boundary 320 times per training
+    iteration, shipping the 48K-float parameter/Adam vectors both ways
+    each call. This variant scans over the pre-shuffled minibatch index
+    matrix inside XLA, so one iteration is one boundary crossing.
+
+    Inputs (N = n_steps, M = batch_size, K = n_epoch·N/M):
+      flat_params, adam_m, adam_v : f32[P]
+      step0                       : f32[1] (1-based Adam step of the first
+                                    minibatch)
+      obs                         : f32[N, OBS_DIM]
+      actions                     : i32[N, N_HEADS]
+      old_logp, advantages, returns : f32[N]
+      perm                        : i32[K, M] — shuffled row indices,
+                                    produced by the Rust RNG (keeps the
+                                    stochasticity on the coordinator side)
+      hyper                       : f32[3] = [lr, clip, ent_coef]
+
+    Returns (params', m', v', stats_mean f32[8]) with stats averaged over
+    all K minibatch steps (same layout as ppo_update's stats).
+    """
+
+    def body(carry, idx):
+        p, m, v, t = carry
+        new_p, new_m, new_v, stats = ppo_update(
+            p, m, v, t,
+            jnp.take(obs, idx, axis=0),
+            jnp.take(actions, idx, axis=0),
+            jnp.take(old_logp, idx, axis=0),
+            jnp.take(advantages, idx, axis=0),
+            jnp.take(returns, idx, axis=0),
+            hyper,
+        )
+        return (new_p, new_m, new_v, t + 1.0), stats
+
+    (p, m, v, _), stats = jax.lax.scan(
+        body, (flat_params, adam_m, adam_v, step0), perm
+    )
+    return p, m, v, jnp.mean(stats, axis=0)

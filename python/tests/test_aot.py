@@ -1,0 +1,113 @@
+"""AOT artifact tests: manifest consistency and golden reproducibility."""
+
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "..", "artifacts")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+
+
+def _entry_param_count(text: str) -> int:
+    entry = text[text.index("ENTRY"):]
+    entry = entry[: entry.index("\n}")]
+    return entry.count("parameter(")
+
+
+def test_hlo_text_lowering_smoke():
+    """Lowering a tiny forward produces parseable-looking HLO text."""
+    text = aot.to_hlo_text(aot.lower_policy_forward(1))
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # forward takes exactly (params, obs).
+    assert _entry_param_count(text) == 2
+
+
+@needs_artifacts
+def test_manifest_matches_model():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["obs_dim"] == model.OBS_DIM
+    assert man["hidden"] == model.HIDDEN
+    assert tuple(man["action_dims"]) == model.ACTION_DIMS
+    assert man["act_total"] == model.ACT_TOTAL
+    assert man["param_count"] == model.param_count()
+    assert man["params"] == model.param_offsets()
+    for k, v in model.HYPERPARAMS.items():
+        assert man["hyperparams"][k] == v
+    for rel in man["artifacts"].values():
+        assert os.path.exists(os.path.join(ART, rel)), rel
+
+
+@needs_artifacts
+def test_golden_params_file_roundtrip():
+    path = os.path.join(ART, "golden_params.f32.bin")
+    raw = open(path, "rb").read()
+    n = len(raw) // 4
+    assert n == model.param_count()
+    vals = np.asarray(struct.unpack(f"<{n}f", raw), np.float32)
+    want = np.asarray(model.init_params(jax.random.PRNGKey(0)))
+    assert_allclose(vals, want, rtol=0, atol=0)
+
+
+@needs_artifacts
+def test_golden_forward_reproducible():
+    """Recompute the golden forward from the stored inputs."""
+    with open(os.path.join(ART, "golden.json")) as f:
+        golden = json.load(f)
+    flat = model.init_params(jax.random.PRNGKey(0))
+    obs = jnp.asarray(np.array(golden["forward"]["obs"], np.float32)[None, :])
+    logp_all, value = jax.jit(model.policy_forward)(flat, obs)
+    assert_allclose(
+        np.asarray(logp_all)[0, : model.ACTION_DIMS[0]],
+        np.array(golden["forward"]["logp_head0"]),
+        rtol=1e-5, atol=1e-6,
+    )
+    assert_allclose(float(value[0]), golden["forward"]["value"], rtol=1e-5)
+
+
+@needs_artifacts
+def test_golden_update_reproducible():
+    with open(os.path.join(ART, "golden.json")) as f:
+        g = json.load(f)["update"]
+    m = model.HYPERPARAMS["batch_size"]
+    flat = model.init_params(jax.random.PRNGKey(0))
+    z = jnp.zeros_like(flat)
+    new_p, _, _, stats = jax.jit(model.ppo_update)(
+        flat, z, z, jnp.ones((1,), jnp.float32),
+        jnp.asarray(np.array(g["obs"], np.float32).reshape(m, model.OBS_DIM)),
+        jnp.asarray(np.array(g["actions"], np.int32).reshape(m, model.N_HEADS)),
+        jnp.asarray(np.array(g["old_logp"], np.float32)),
+        jnp.asarray(np.array(g["advantages"], np.float32)),
+        jnp.asarray(np.array(g["returns"], np.float32)),
+        jnp.asarray(np.array(g["hyper"], np.float32)),
+    )
+    assert_allclose(np.asarray(stats), np.array(g["stats"]), rtol=1e-4, atol=1e-5)
+    assert_allclose(np.asarray(new_p)[:8], np.array(g["new_params_head"]),
+                    rtol=1e-5, atol=1e-7)
+
+
+@needs_artifacts
+def test_hlo_artifacts_have_expected_interfaces():
+    """Entry parameter counts encode the Rust-side call contract."""
+    fwd = open(os.path.join(ART, "policy_forward.hlo.txt")).read()
+    upd = open(os.path.join(ART, "ppo_update.hlo.txt")).read()
+    assert fwd.startswith("HloModule")
+    assert upd.startswith("HloModule")
+    assert _entry_param_count(fwd) == 2
+    # update takes 10 parameters (params, m, v, step, obs, act, logp, adv,
+    # ret, hyper)
+    assert _entry_param_count(upd) == 10

@@ -1,0 +1,118 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against the reference
+is THE core correctness signal for the kernel layer — the AOT'd rollout
+artifact is built from these kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import mlp, ref
+from compile import model
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(key, *shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * 0.5).astype(dtype)
+
+
+@settings(**SETTINGS)
+@given(
+    batch=st.integers(1, 33),
+    in_dim=st.integers(1, 80),
+    out_dim=st.integers(1, 80),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_tanh_matches_ref(batch, in_dim, out_dim, seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = _rand(k1, batch, in_dim)
+    w = _rand(k2, in_dim, out_dim)
+    b = _rand(k3, out_dim)
+    got = mlp.dense_tanh(x, w, b)
+    want = ref.dense_tanh_ref(x, w, b)
+    assert got.shape == (batch, out_dim)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    batch=st.integers(1, 33),
+    in_dim=st.integers(1, 80),
+    out_dim=st.integers(1, 80),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_linear_matches_ref(batch, in_dim, out_dim, seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = _rand(k1, batch, in_dim)
+    w = _rand(k2, in_dim, out_dim)
+    b = _rand(k3, out_dim)
+    got = mlp.dense(x, w, b)
+    want = ref.dense_ref(x, w, b)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dense_dtypes(dtype):
+    """bf16 inputs accumulate in f32 in both paths (MXU-style)."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(7), 3)
+    x = _rand(k1, 8, 16, dtype=dtype)
+    w = _rand(k2, 16, 12, dtype=dtype)
+    b = _rand(k3, 12, dtype=dtype)
+    got = np.asarray(mlp.dense_tanh(x, w, b), np.float32)
+    want = np.asarray(ref.dense_tanh_ref(x, w, b), np.float32)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("batch", [1, 7, 8, 9, 64])
+def test_ragged_batch_tiles(batch):
+    """Batches that don't divide BLOCK_B exercise Pallas block padding."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(batch), 3)
+    x = _rand(k1, batch, 10)
+    w = _rand(k2, 10, 30)
+    b = _rand(k3, 30)
+    assert_allclose(
+        np.asarray(mlp.dense(x, w, b)),
+        np.asarray(ref.dense_ref(x, w, b)),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(batch=st.integers(1, 9), seed=st.integers(0, 2**31 - 1))
+def test_full_network_matches_ref(batch, seed):
+    """Whole actor-critic forward: Pallas composition == jnp composition."""
+    flat = model.init_params(jax.random.PRNGKey(seed))
+    obs = _rand(jax.random.PRNGKey(seed + 1), batch, model.OBS_DIM)
+    params = model.unflatten(flat)
+    logits_k, value_k = mlp.mlp_forward(params, obs)
+    logits_r, value_r = ref.mlp_forward_ref(params, obs)
+    assert logits_k.shape == (batch, model.ACT_TOTAL)
+    assert value_k.shape == (batch,)
+    assert_allclose(np.asarray(logits_k), np.asarray(logits_r), rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(value_k), np.asarray(value_r), rtol=1e-5, atol=1e-6)
+
+
+def test_policy_forward_paths_agree():
+    """policy_forward (Pallas) == policy_forward_ref (jnp, AD-capable).
+
+    This equivalence is what justifies differentiating the ref network in
+    the AOT'd ppo_update while rolling out with the Pallas network.
+    """
+    flat = model.init_params(jax.random.PRNGKey(3))
+    obs = _rand(jax.random.PRNGKey(4), 5, model.OBS_DIM)
+    lp_k, v_k = model.policy_forward(flat, obs)
+    lp_r, v_r = model.policy_forward_ref(flat, obs)
+    assert_allclose(np.asarray(lp_k), np.asarray(lp_r), rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(v_k), np.asarray(v_r), rtol=1e-5, atol=1e-6)
+
+
+def test_kernel_rejects_bad_activation():
+    with pytest.raises(ValueError):
+        mlp._dense(jnp.ones((2, 2)), jnp.ones((2, 2)), jnp.ones((2,)), "relu")

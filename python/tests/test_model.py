@@ -1,0 +1,269 @@
+"""L2 correctness: MultiDiscrete head math, PPO loss, Adam update."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+
+
+def test_param_layout_roundtrip():
+    flat = model.init_params(jax.random.PRNGKey(0))
+    assert flat.shape == (model.param_count(),)
+    back = model.flatten(model.unflatten(flat))
+    assert_allclose(np.asarray(back), np.asarray(flat))
+
+
+def test_param_offsets_cover_vector_exactly():
+    offs = model.param_offsets()
+    pos = 0
+    for entry in offs:
+        assert entry["offset"] == pos
+        n = 1
+        for s in entry["shape"]:
+            n *= s
+        assert entry["size"] == n
+        pos += n
+    assert pos == model.param_count()
+
+
+def test_action_dims_match_paper_table1():
+    # Table 1 cardinalities (see DESIGN.md section 3).
+    assert model.ACTION_DIMS == (3, 128, 63, 2, 20, 100, 10, 2, 31, 100, 2, 20, 100, 10)
+    assert model.ACT_TOTAL == 591
+    # > 2e17 design points, as the paper states.
+    total = 1.0
+    for d in model.ACTION_DIMS:
+        total *= d
+    assert total > 2e17
+
+
+def test_log_softmax_heads_normalized():
+    logits = jax.random.normal(jax.random.PRNGKey(1), (4, model.ACT_TOTAL)) * 3
+    lp = np.asarray(model.log_softmax_heads(logits))
+    off = 0
+    for d in model.ACTION_DIMS:
+        seg = lp[:, off : off + d]
+        assert_allclose(np.exp(seg).sum(axis=-1), 1.0, rtol=1e-5)
+        off += d
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_action_log_prob_matches_manual(seed):
+    key = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(key, (3, model.ACT_TOTAL))
+    lp = model.log_softmax_heads(logits)
+    rng = np.random.default_rng(seed)
+    actions = np.stack(
+        [rng.integers(0, d, size=3) for d in model.ACTION_DIMS], axis=1
+    ).astype(np.int32)
+    got = np.asarray(model.action_log_prob(lp, jnp.asarray(actions)))
+    lp_np = np.asarray(lp)
+    want = np.zeros(3)
+    off = 0
+    for h, d in enumerate(model.ACTION_DIMS):
+        for b in range(3):
+            want[b] += lp_np[b, off + actions[b, h]]
+        off += d
+    assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_entropy_bounds():
+    """0 <= entropy <= sum(log(d_h)); uniform logits hit the upper bound."""
+    logits = jnp.zeros((1, model.ACT_TOTAL))
+    ent = float(model.entropy_heads(model.log_softmax_heads(logits))[0])
+    upper = sum(np.log(d) for d in model.ACTION_DIMS)
+    assert_allclose(ent, upper, rtol=1e-5)
+    # Peaked logits approach zero entropy.
+    peaked = jnp.full((1, model.ACT_TOTAL), -100.0)
+    off = 0
+    idx = []
+    for d in model.ACTION_DIMS:
+        idx.append(off)
+        off += d
+    peaked = peaked.at[0, jnp.asarray(idx)].set(100.0)
+    ent2 = float(model.entropy_heads(model.log_softmax_heads(peaked))[0])
+    assert ent2 < 1e-3
+
+
+def _batch(seed, m=None):
+    m = m or model.HYPERPARAMS["batch_size"]
+    rng = np.random.default_rng(seed)
+    obs = rng.standard_normal((m, model.OBS_DIM)).astype(np.float32)
+    actions = np.stack(
+        [rng.integers(0, d, size=m) for d in model.ACTION_DIMS], axis=1
+    ).astype(np.int32)
+    adv = rng.standard_normal(m).astype(np.float32)
+    ret = rng.standard_normal(m).astype(np.float32)
+    return jnp.asarray(obs), jnp.asarray(actions), jnp.asarray(adv), jnp.asarray(ret)
+
+
+def test_ppo_loss_zero_advantage_is_entropy_plus_value():
+    """With adv==0 the surrogate term vanishes (after normalization it's
+    0/std -> 0), leaving vf_coef*MSE - ent_coef*entropy."""
+    flat = model.init_params(jax.random.PRNGKey(0))
+    obs, actions, _, ret = _batch(0)
+    lp_all, value = model.policy_forward_ref(flat, obs)
+    old_logp = model.action_log_prob(lp_all, actions)
+    zeros = jnp.zeros_like(ret)
+    loss, (pi_loss, vf_loss, entropy, kl, cf) = model.ppo_loss(
+        flat, obs, actions, old_logp, zeros, ret, 0.2, 0.1
+    )
+    assert abs(float(pi_loss)) < 1e-6
+    assert float(kl) < 1e-6  # same policy -> ratio == 1
+    want = model.HYPERPARAMS["vf_coef"] * float(vf_loss) - 0.1 * float(entropy)
+    assert_allclose(float(loss), want, rtol=1e-5)
+
+
+def test_ppo_ratio_one_at_old_policy():
+    flat = model.init_params(jax.random.PRNGKey(2))
+    obs, actions, adv, ret = _batch(2)
+    lp_all, _ = model.policy_forward_ref(flat, obs)
+    old_logp = model.action_log_prob(lp_all, actions)
+    _, (_, _, _, kl, clip_frac) = model.ppo_loss(
+        flat, obs, actions, old_logp, adv, ret, 0.2, 0.1
+    )
+    assert float(kl) < 1e-6
+    assert float(clip_frac) == 0.0
+
+
+def test_ppo_update_moves_toward_lower_loss():
+    """Repeated updates on a fixed batch must reduce the PPO loss."""
+    flat = model.init_params(jax.random.PRNGKey(4))
+    obs, actions, adv, ret = _batch(4)
+    lp_all, _ = model.policy_forward_ref(flat, obs)
+    old_logp = model.action_log_prob(lp_all, actions)
+    hyper = jnp.asarray([3e-4, 0.2, 0.1], jnp.float32)
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    update = jax.jit(model.ppo_update)
+    losses = []
+    p = flat
+    for t in range(1, 16):
+        p, m, v, stats = update(
+            p, m, v, jnp.asarray([float(t)], jnp.float32),
+            obs, actions, old_logp, adv, ret, hyper,
+        )
+        losses.append(float(stats[0]))
+    assert losses[-1] < losses[0], losses
+
+
+def test_ppo_update_grad_clip_enforced():
+    """grad_norm stat is pre-clip; effective step obeys max_grad_norm."""
+    flat = model.init_params(jax.random.PRNGKey(5))
+    obs, actions, adv, ret = _batch(5)
+    # Huge synthetic advantages force a large gradient.
+    adv = adv * 1e6
+    lp_all, _ = model.policy_forward_ref(flat, obs)
+    old_logp = model.action_log_prob(lp_all, actions)
+    hyper = jnp.asarray([3e-4, 0.2, 0.1], jnp.float32)
+    z = jnp.zeros_like(flat)
+    _, new_m, _, stats = jax.jit(model.ppo_update)(
+        flat, z, z, jnp.asarray([1.0], jnp.float32),
+        obs, actions, old_logp, adv, ret, hyper,
+    )
+    gnorm = float(stats[6])
+    assert gnorm > model.HYPERPARAMS["max_grad_norm"]
+    # first-moment = (1-b1) * clipped_grad; check its norm implies clipping
+    mnorm = float(jnp.sqrt(jnp.sum(new_m * new_m)))
+    clipped_norm = mnorm / (1.0 - model.HYPERPARAMS["adam_beta1"])
+    assert clipped_norm <= model.HYPERPARAMS["max_grad_norm"] * 1.01
+
+
+def test_adam_matches_manual_reference():
+    """One ppo_update step == hand-computed Adam on the same gradient."""
+    flat = model.init_params(jax.random.PRNGKey(6))
+    obs, actions, adv, ret = _batch(6, m=model.HYPERPARAMS["batch_size"])
+    lp_all, _ = model.policy_forward_ref(flat, obs)
+    old_logp = model.action_log_prob(lp_all, actions)
+    hyper = np.array([3e-4, 0.2, 0.1], np.float32)
+
+    grad_fn = jax.grad(
+        lambda p: model.ppo_loss(p, obs, actions, old_logp, adv, ret, 0.2, 0.1)[0]
+    )
+    g = np.asarray(grad_fn(flat), np.float64)
+    gnorm = np.sqrt((g * g).sum())
+    g = g * min(1.0, model.HYPERPARAMS["max_grad_norm"] / (gnorm + 1e-12))
+    b1, b2 = 0.9, 0.999
+    m = (1 - b1) * g
+    v = (1 - b2) * g * g
+    m_hat = m / (1 - b1)
+    v_hat = v / (1 - b2)
+    want = np.asarray(flat, np.float64) - 3e-4 * m_hat / (np.sqrt(v_hat) + 1e-5)
+
+    z = jnp.zeros_like(flat)
+    new_p, _, _, _ = jax.jit(model.ppo_update)(
+        flat, z, z, jnp.asarray([1.0], jnp.float32),
+        obs, actions, old_logp, adv, ret, jnp.asarray(hyper),
+    )
+    assert_allclose(np.asarray(new_p, np.float64), want, rtol=2e-4, atol=2e-6)
+
+
+def test_ppo_epochs_matches_sequential_updates():
+    """The fused scan (one HLO call) must equal N sequential ppo_update
+    calls with the same minibatch order — the §Perf optimization must be
+    numerically free."""
+    flat = model.init_params(jax.random.PRNGKey(10))
+    n, m = 256, model.HYPERPARAMS["batch_size"]
+    rng = np.random.default_rng(10)
+    obs = jnp.asarray(rng.standard_normal((n, model.OBS_DIM)).astype(np.float32))
+    actions = jnp.asarray(np.stack(
+        [rng.integers(0, d, size=n) for d in model.ACTION_DIMS], axis=1
+    ).astype(np.int32))
+    old_logp = jnp.asarray((-rng.random(n) * 5).astype(np.float32))
+    adv = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    ret = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    hyper = jnp.asarray([3e-4, 0.2, 0.1], np.float32)
+    k = 2 * (n // m)  # 2 epochs
+    perm = jnp.asarray(
+        np.stack([rng.permutation(n)[:m] for _ in range(k)]).astype(np.int32)
+    )
+
+    # fused
+    p_f, m_f, v_f, stats_mean = jax.jit(model.ppo_epochs)(
+        flat, jnp.zeros_like(flat), jnp.zeros_like(flat),
+        jnp.ones((1,), jnp.float32), obs, actions, old_logp, adv, ret,
+        perm, hyper,
+    )
+
+    # sequential
+    p, mm, vv = flat, jnp.zeros_like(flat), jnp.zeros_like(flat)
+    stats_all = []
+    upd = jax.jit(model.ppo_update)
+    for t in range(k):
+        idx = perm[t]
+        p, mm, vv, stats = upd(
+            p, mm, vv, jnp.asarray([1.0 + t], jnp.float32),
+            obs[idx], actions[idx], old_logp[idx], adv[idx], ret[idx], hyper,
+        )
+        stats_all.append(np.asarray(stats))
+
+    assert_allclose(np.asarray(p_f), np.asarray(p), rtol=2e-4, atol=2e-6)
+    assert_allclose(np.asarray(m_f), np.asarray(mm), rtol=2e-4, atol=1e-7)
+    assert_allclose(
+        np.asarray(stats_mean), np.mean(stats_all, axis=0), rtol=1e-3, atol=1e-5
+    )
+
+
+def test_hyper_vector_controls_entropy_coef():
+    """ent_coef enters through the hyper input, not the trace."""
+    flat = model.init_params(jax.random.PRNGKey(7))
+    obs, actions, adv, ret = _batch(7)
+    lp_all, _ = model.policy_forward_ref(flat, obs)
+    old_logp = model.action_log_prob(lp_all, actions)
+    z = jnp.zeros_like(flat)
+    upd = jax.jit(model.ppo_update)
+    outs = []
+    for ent in (0.0, 0.1):
+        hyper = jnp.asarray([3e-4, 0.2, ent], jnp.float32)
+        _, _, _, stats = upd(
+            flat, z, z, jnp.asarray([1.0], jnp.float32),
+            obs, actions, old_logp, adv, ret, hyper,
+        )
+        outs.append(float(stats[0]))
+    # loss differs by ent_coef * entropy
+    assert outs[0] != outs[1]

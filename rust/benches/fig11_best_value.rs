@@ -1,0 +1,87 @@
+//! Fig. 11: highest cost-model value achieved by SA and RL per run,
+//! for case (i) and case (ii).
+//!
+//! The paper reports RL at 178–185 (case i) / 188–194 (case ii) and SA at
+//! 151–176 / 170–188 over 10 runs. Quick mode uses 10 SA × 100K iters and
+//! 4 RL × 32K steps; CHIPLET_GYM_FULL=1 restores 500K / 10 × 250K.
+//! Emits `bench_results/fig11_best_values.csv`.
+
+use chiplet_gym::cost::Calib;
+use chiplet_gym::gym::ChipletGymEnv;
+use chiplet_gym::model::space::DesignSpace;
+use chiplet_gym::opt::sa::{simulated_annealing, SaConfig};
+use chiplet_gym::report;
+use chiplet_gym::rl::{train_ppo, PpoConfig};
+use chiplet_gym::runtime::Engine;
+use chiplet_gym::util::table::Table;
+
+fn main() {
+    let full = std::env::var("CHIPLET_GYM_FULL").is_ok();
+    let sa_iters = if full { 500_000 } else { 100_000 };
+    let rl_steps = if full { 250_000 } else { 32_768 };
+    let sa_seeds: Vec<u64> = (0..10).collect();
+    let rl_seeds: Vec<u64> = if full { (0..10).collect() } else { (0..4).collect() };
+
+    let calib = Calib::default();
+    let engine = Engine::discover().ok();
+    let mut csv = report::csv(
+        "fig11_best_values.csv",
+        &["case", "optimizer", "seed", "best_objective"],
+    );
+
+    for (case, space, paper_rl, paper_sa) in [
+        ("i", DesignSpace::case_i(), "178-185", "151-176"),
+        ("ii", DesignSpace::case_ii(), "188-194", "170-188"),
+    ] {
+        let mut t = Table::new(["run", "SA best", "RL best"]);
+        let mut sa_all = Vec::new();
+        let mut rl_all = Vec::new();
+        for (k, &seed) in sa_seeds.iter().enumerate() {
+            let cfg = SaConfig {
+                iterations: sa_iters,
+                trace_every: 0,
+                ..SaConfig::default()
+            };
+            let sa_best = simulated_annealing(&space, &calib, &cfg, seed)
+                .best_eval
+                .reward;
+            csv.labeled_row(case, &[0.0, seed as f64, sa_best]).ok();
+            sa_all.push(sa_best);
+
+            let rl_best = if let (Some(engine), true) = (&engine, k < rl_seeds.len()) {
+                let mut cfg = PpoConfig::from_manifest(engine);
+                cfg.total_timesteps = rl_steps;
+                let mut env = ChipletGymEnv::new(space, calib.clone(), cfg.episode_len);
+                let b = train_ppo(engine, &mut env, &cfg, seed)
+                    .expect("ppo")
+                    .best_reward;
+                csv.labeled_row(case, &[1.0, seed as f64, b]).ok();
+                rl_all.push(b);
+                format!("{b:.1}")
+            } else {
+                "-".to_string()
+            };
+            t.row([format!("{}", k + 1), format!("{sa_best:.1}"), rl_best]);
+        }
+        println!("=== Fig. 11 case ({case}) ===");
+        t.print();
+        let range = |xs: &[f64]| {
+            if xs.is_empty() {
+                "-".to_string()
+            } else {
+                format!(
+                    "{:.1}-{:.1}",
+                    xs.iter().cloned().fold(f64::INFINITY, f64::min),
+                    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+                )
+            }
+        };
+        println!(
+            "measured: SA {} (paper {paper_sa}), RL {} (paper {paper_rl})\n",
+            range(&sa_all),
+            range(&rl_all)
+        );
+    }
+    csv.flush().unwrap();
+    println!("wrote {}", report::result_path("fig11_best_values.csv").display());
+}

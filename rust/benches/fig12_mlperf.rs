@@ -1,0 +1,106 @@
+//! Fig. 12: MLPerf comparison of the 60-chiplet and 112-chiplet systems
+//! against the monolithic GPU — (a) inferences/sec, (b) inferences/joule,
+//! (c) die + package cost. Table 7 features are printed as the preamble.
+//!
+//! Paper headline: 1.52× throughput, 3.7×/3.6× energy efficiency, 76×/143×
+//! cheaper dies, 1.62×/2.46× package cost. Emits
+//! `bench_results/fig12_mlperf.csv`.
+
+use chiplet_gym::cost::{evaluate, Calib};
+use chiplet_gym::model::space::{paper_points, DesignSpace};
+use chiplet_gym::report;
+use chiplet_gym::util::table::{fnum, Table};
+use chiplet_gym::workloads::{mapping, mlperf::mlperf_suite, Monolithic};
+
+fn main() {
+    let calib = Calib::default();
+    let suite = mlperf_suite();
+
+    // ---- Table 7 preamble ----
+    let mut t7 = Table::new(["model", "domain", "dataset", "GFLOPs/task"]);
+    for w in &suite {
+        t7.row([
+            w.name.to_string(),
+            w.domain.to_string(),
+            w.dataset.to_string(),
+            format!("{}", w.gflops_per_task),
+        ]);
+    }
+    println!("Table 7 benchmark features:");
+    t7.print();
+
+    let mono = Monolithic::new(&calib);
+    let sys60 = DesignSpace::case_i().decode(&paper_points::table6_case_i());
+    let sys112 = DesignSpace::case_ii().decode(&paper_points::table6_case_ii());
+    let e60 = evaluate(&calib, &sys60);
+    let e112 = evaluate(&calib, &sys112);
+
+    let mut csv = report::csv(
+        "fig12_mlperf.csv",
+        &["benchmark", "system", "inf_per_sec", "inf_per_joule"],
+    );
+    let mut ta = Table::new([
+        "benchmark", "mono inf/s", "60c inf/s", "112c inf/s", "60c speedup", "112c speedup",
+    ]);
+    let mut tb = Table::new([
+        "benchmark", "mono inf/J", "60c inf/J", "112c inf/J", "60c gain", "112c gain",
+    ]);
+
+    let mut speed60 = Vec::new();
+    let mut gain60 = Vec::new();
+    for w in &suite {
+        let m_rate = mono.tasks_per_sec(&calib, w);
+        let m_eff = mono.tasks_per_joule(w);
+        let mut rates = Vec::new();
+        let mut effs = Vec::new();
+        for (sys, e) in [(&sys60, &e60), (&sys112, &e112)] {
+            let u = mapping::u_chip(e.pe_per_chiplet, sys.n_chiplets, w);
+            let tops = e.throughput_tops / calib.default_u_chip * u;
+            let rate = tops * 1e12 / (w.gmac_per_task() * 1e9);
+            let eff = 1.0 / (e.e_op_pj * w.gmac_per_task() * 1e-3);
+            rates.push(rate);
+            effs.push(eff);
+        }
+        csv.row_str(&[w.name.into(), "mono".into(), format!("{m_rate}"), format!("{m_eff}")]).unwrap();
+        csv.row_str(&[w.name.into(), "60-chiplet".into(), format!("{}", rates[0]), format!("{}", effs[0])]).unwrap();
+        csv.row_str(&[w.name.into(), "112-chiplet".into(), format!("{}", rates[1]), format!("{}", effs[1])]).unwrap();
+        ta.row([
+            w.name.to_string(), fnum(m_rate), fnum(rates[0]), fnum(rates[1]),
+            format!("{:.2}x", rates[0] / m_rate), format!("{:.2}x", rates[1] / m_rate),
+        ]);
+        tb.row([
+            w.name.to_string(), fnum(m_eff), fnum(effs[0]), fnum(effs[1]),
+            format!("{:.2}x", effs[0] / m_eff), format!("{:.2}x", effs[1] / m_eff),
+        ]);
+        speed60.push(rates[0] / m_rate);
+        gain60.push(effs[0] / m_eff);
+    }
+    csv.flush().unwrap();
+
+    println!("\nFig. 12(a) inferences/sec:");
+    ta.print();
+    println!("\nFig. 12(b) inferences/joule:");
+    tb.print();
+
+    println!("\nFig. 12(c) cost:");
+    let mut tc = Table::new(["system", "die cost", "pkg cost", "die vs mono", "pkg vs mono"]);
+    tc.row(["monolithic".to_string(), fnum(mono.die_cost), fnum(mono.pkg_cost), "1.00x".into(), "1.00x".into()]);
+    for (name, e) in [("60-chiplet", &e60), ("112-chiplet", &e112)] {
+        tc.row([
+            name.to_string(), fnum(e.die_cost), fnum(e.pkg_cost),
+            format!("{:.4}x", e.die_cost / mono.die_cost),
+            format!("{:.2}x", e.pkg_cost / mono.pkg_cost),
+        ]);
+    }
+    tc.print();
+
+    let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len() as f64;
+    println!("\nheadline vs paper:");
+    println!("{}", report::compare_line("  throughput gain (60c)", 1.52, mean(&speed60)));
+    println!("{}", report::compare_line("  energy-eff gain (60c)", 3.7, mean(&gain60)));
+    println!("{}", report::compare_line("  die cost ratio (mono/60c)", 76.0, mono.die_cost / e60.die_cost));
+    println!("{}", report::compare_line("  die cost ratio (mono/112c)", 143.0, mono.die_cost / e112.die_cost));
+    println!("{}", report::compare_line("  pkg cost ratio (60c/mono)", 1.62, e60.pkg_cost / mono.pkg_cost));
+    println!("{}", report::compare_line("  pkg cost ratio (112c/mono)", 2.46, e112.pkg_cost / mono.pkg_cost));
+    println!("wrote {}", report::result_path("fig12_mlperf.csv").display());
+}

@@ -1,0 +1,69 @@
+//! Fig. 3(a): yield (left axis) and normalized cost per yielded area
+//! (right axis) vs die area, at several tech nodes.
+//!
+//! Regenerates the exact curves the paper uses to justify the 400 mm²
+//! per-chiplet cap. Emits `bench_results/fig3a_yield_cost.csv` and prints
+//! the series; also times the yield evaluation itself.
+
+use chiplet_gym::cost::yield_model::{
+    cost_per_yielded_area, die_yield, node_defect_density,
+};
+use chiplet_gym::report;
+use chiplet_gym::util::bench::Runner;
+use chiplet_gym::util::table::Table;
+
+fn main() {
+    let nodes = [14u32, 10, 7];
+    let alpha = 4.0;
+    let areas: Vec<f64> = (1..=16).map(|i| i as f64 * 50.0).collect();
+
+    let mut csv = report::csv(
+        "fig3a_yield_cost.csv",
+        &["area_mm2", "node_nm", "yield", "norm_cost_per_yielded_area"],
+    );
+    let mut table = Table::new(["area (mm2)", "14nm Y", "10nm Y", "7nm Y", "7nm cost"]);
+    for &a in &areas {
+        let mut row = vec![format!("{a}")];
+        let mut cost7 = 0.0;
+        for &node in &nodes {
+            let d = node_defect_density(node);
+            let y = die_yield(a, d, alpha);
+            let c = cost_per_yielded_area(a, d, alpha, 1.0);
+            if node == 7 {
+                cost7 = c;
+            }
+            csv.row(&[a, node as f64, y, c]).unwrap();
+            row.push(format!("{y:.3}"));
+        }
+        row.push(format!("{cost7:.3}"));
+        table.row(row);
+    }
+    csv.flush().unwrap();
+    table.print();
+
+    // Paper checkpoints
+    println!("\npaper checkpoints (7nm, alpha 4):");
+    println!(
+        "  Y(826mm2) = {:.3}  (paper: 0.48)",
+        die_yield(826.0, node_defect_density(7), alpha)
+    );
+    println!(
+        "  Y(26mm2)  = {:.3}  (paper: 0.97)",
+        die_yield(26.0, node_defect_density(7), alpha)
+    );
+    println!(
+        "  Y(14mm2)  = {:.3}  (paper: 0.98)",
+        die_yield(14.0, node_defect_density(7), alpha)
+    );
+
+    let mut runner = Runner::new();
+    runner.bench("die_yield(400mm2)", || {
+        std::hint::black_box(die_yield(
+            std::hint::black_box(400.0),
+            node_defect_density(7),
+            alpha,
+        ));
+    });
+    println!("\n{}", runner.report());
+    println!("wrote {}", report::result_path("fig3a_yield_cost.csv").display());
+}

@@ -1,0 +1,66 @@
+//! Fig. 3(b): normalized communication latency vs number of chiplets
+//! (2D mesh, worst-case source-destination pair).
+//!
+//! Emits `bench_results/fig3b_latency.csv`.
+
+use chiplet_gym::mesh::grid::MeshGrid;
+use chiplet_gym::mesh::latency::{comm_latency_ns, LatencyParams};
+use chiplet_gym::model::space::HbmLoc;
+use chiplet_gym::report;
+use chiplet_gym::util::bench::Runner;
+use chiplet_gym::util::table::Table;
+
+fn main() {
+    let params = LatencyParams::d25();
+    let counts = [1usize, 2, 4, 8, 16, 32, 64, 96, 128];
+    let base = {
+        let g = MeshGrid::new(1, &[HbmLoc::Left]);
+        comm_latency_ns(&params, g.max_ai_hops().max(1), 20.0, 1000)
+    };
+
+    let mut csv = report::csv(
+        "fig3b_latency.csv",
+        &["n_chiplets", "mesh_m", "mesh_n", "max_hops", "latency_ns", "normalized"],
+    );
+    let mut t = Table::new(["chiplets", "mesh", "max hops", "latency (ns)", "normalized"]);
+    for &n in &counts {
+        let g = MeshGrid::new(n, &[HbmLoc::Left]);
+        let hops = g.max_ai_hops().max(1);
+        let l = comm_latency_ns(&params, hops, 20.0, 1000);
+        csv.row(&[
+            n as f64,
+            g.m as f64,
+            g.n as f64,
+            hops as f64,
+            l,
+            l / base,
+        ])
+        .unwrap();
+        t.row([
+            format!("{n}"),
+            format!("{}x{}", g.m, g.n),
+            format!("{hops}"),
+            format!("{l:.2}"),
+            format!("{:.2}", l / base),
+        ]);
+    }
+    csv.flush().unwrap();
+    t.print();
+    println!(
+        "\nshape check: latency grows ~sqrt(n) — 128 chiplets is {:.1}x of 1",
+        comm_latency_ns(
+            &params,
+            MeshGrid::new(128, &[HbmLoc::Left]).max_ai_hops(),
+            20.0,
+            1000
+        ) / base
+    );
+
+    let mut runner = Runner::new();
+    runner.bench("MeshGrid::new(128) + max hops", || {
+        let g = MeshGrid::new(std::hint::black_box(128), &[HbmLoc::Left]);
+        std::hint::black_box(g.max_hbm_hops());
+    });
+    println!("\n{}", runner.report());
+    println!("wrote {}", report::result_path("fig3b_latency.csv").display());
+}

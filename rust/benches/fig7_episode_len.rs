@@ -1,0 +1,68 @@
+//! Fig. 7: impact of episode length on PPO convergence.
+//!
+//! Trains PPO agents at episode length 2 and 10 and reports (a) the mean
+//! episodic reward and (b) the cost-model value
+//! (= mean_episodic_reward / episode_length). The paper's observation:
+//! longer episodes inflate the episodic reward but *not* the cost-model
+//! value — exploitation wins over exploration.
+//!
+//! Quick mode (default) trains 32K steps; set CHIPLET_GYM_FULL=1 for the
+//! paper's 250K. Emits `bench_results/fig7_episode_len.csv`.
+
+use chiplet_gym::gym::ChipletGymEnv;
+use chiplet_gym::report;
+use chiplet_gym::rl::{train_ppo, PpoConfig};
+use chiplet_gym::runtime::Engine;
+
+fn main() {
+    let engine = match Engine::discover() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("SKIP fig7 (artifacts missing): {e:#}");
+            return;
+        }
+    };
+    let full = std::env::var("CHIPLET_GYM_FULL").is_ok();
+    let timesteps = if full { 250_000 } else { 32_768 };
+
+    let mut csv = report::csv(
+        "fig7_episode_len.csv",
+        &["episode_len", "timesteps", "ep_rew_mean", "cost_value"],
+    );
+    let mut finals = Vec::new();
+    for &ep_len in &[2usize, 10] {
+        let mut cfg = PpoConfig::from_manifest(&engine);
+        cfg.total_timesteps = timesteps;
+        cfg.episode_len = ep_len;
+        let mut env = ChipletGymEnv::case_i();
+        let t0 = std::time::Instant::now();
+        let trace = train_ppo(&engine, &mut env, &cfg, 0).expect("ppo");
+        for s in &trace.history {
+            csv.row(&[
+                ep_len as f64,
+                s.timesteps as f64,
+                s.ep_rew_mean,
+                s.cost_value,
+            ])
+            .unwrap();
+        }
+        let last = trace.history.last().unwrap();
+        println!(
+            "episode_len {ep_len:>2}: {} steps in {:.1}s -> ep_rew_mean {:.1}, cost_value {:.1}, best {:.1}",
+            timesteps,
+            t0.elapsed().as_secs_f64(),
+            last.ep_rew_mean,
+            last.cost_value,
+            trace.best_reward
+        );
+        finals.push((ep_len, last.ep_rew_mean, last.cost_value));
+    }
+    csv.flush().unwrap();
+
+    let (l2, r2, c2) = finals[0];
+    let (l10, r10, c10) = finals[1];
+    println!("\npaper shape (Fig. 7): ep-len {l10} episodic reward ({r10:.0}) should");
+    println!("exceed ep-len {l2}'s ({r2:.0}) by roughly the episode-length ratio, while");
+    println!("the cost-model values stay comparable: {c2:.1} vs {c10:.1}");
+    println!("wrote {}", report::result_path("fig7_episode_len.csv").display());
+}

@@ -1,0 +1,105 @@
+//! Figs. 9 and 10: convergence behavior of SA and RL over 10 seeds, for
+//! case (i) (64-chiplet cap, Fig. 9) and case (ii) (128, Fig. 10).
+//!
+//! Quick mode: 10 SA seeds × 100K iters (full: 500K) and 4 RL seeds ×
+//! 24K steps (full: 10 × 250K). Emits
+//! `bench_results/fig{9,10}_{sa,rl}_convergence.csv`.
+
+use chiplet_gym::cost::Calib;
+use chiplet_gym::gym::ChipletGymEnv;
+use chiplet_gym::model::space::DesignSpace;
+use chiplet_gym::opt::sa::{simulated_annealing, SaConfig};
+use chiplet_gym::report;
+use chiplet_gym::rl::{train_ppo, PpoConfig};
+use chiplet_gym::runtime::Engine;
+use chiplet_gym::util::stats::Summary;
+
+fn main() {
+    let full = std::env::var("CHIPLET_GYM_FULL").is_ok();
+    let sa_iters = if full { 500_000 } else { 100_000 };
+    let sa_seeds: Vec<u64> = (0..10).collect();
+    let rl_steps = if full { 250_000 } else { 24_576 };
+    let rl_seeds: Vec<u64> = if full { (0..10).collect() } else { (0..4).collect() };
+
+    let engine = Engine::discover().ok();
+    if engine.is_none() {
+        eprintln!("artifacts missing — RL curves skipped, SA only");
+    }
+    let calib = Calib::default();
+
+    for (fig, space) in [(9, DesignSpace::case_i()), (10, DesignSpace::case_ii())] {
+        println!("=== Fig. {fig}: case {} (cap {}) ===", if fig == 9 { "i" } else { "ii" }, space.chiplet_cap);
+
+        // ---- SA, 10 seeds ----
+        let mut csv = report::csv(
+            &format!("fig{fig}_sa_convergence.csv"),
+            &["seed", "iteration", "best_objective"],
+        );
+        let mut sa_bests = Vec::new();
+        let t0 = std::time::Instant::now();
+        for &seed in &sa_seeds {
+            let cfg = SaConfig {
+                iterations: sa_iters,
+                trace_every: sa_iters / 100,
+                ..SaConfig::default()
+            };
+            let trace = simulated_annealing(&space, &calib, &cfg, seed);
+            for &(iter, obj) in &trace.history {
+                csv.row(&[seed as f64, iter as f64, obj]).unwrap();
+            }
+            sa_bests.push(trace.best_eval.reward);
+        }
+        csv.flush().unwrap();
+        let s = Summary::of(&sa_bests);
+        println!(
+            "SA : {} seeds x {sa_iters} iters in {:.1}s -> best range [{:.1}, {:.1}], mean {:.1}",
+            sa_seeds.len(),
+            t0.elapsed().as_secs_f64(),
+            s.min,
+            s.max,
+            s.mean
+        );
+
+        // ---- RL, seeds ----
+        if let Some(engine) = &engine {
+            let mut csv = report::csv(
+                &format!("fig{fig}_rl_convergence.csv"),
+                &["seed", "timesteps", "ep_rew_mean", "cost_value"],
+            );
+            let mut rl_bests = Vec::new();
+            let t0 = std::time::Instant::now();
+            for &seed in &rl_seeds {
+                let mut cfg = PpoConfig::from_manifest(engine);
+                cfg.total_timesteps = rl_steps;
+                let mut env = ChipletGymEnv::new(space, calib.clone(), cfg.episode_len);
+                let trace = train_ppo(engine, &mut env, &cfg, seed).expect("ppo");
+                for st in &trace.history {
+                    csv.row(&[
+                        seed as f64,
+                        st.timesteps as f64,
+                        st.ep_rew_mean,
+                        st.cost_value,
+                    ])
+                    .unwrap();
+                }
+                rl_bests.push(trace.best_reward);
+            }
+            csv.flush().unwrap();
+            let s = Summary::of(&rl_bests);
+            println!(
+                "RL : {} seeds x {rl_steps} steps in {:.1}s -> best range [{:.1}, {:.1}], mean {:.1}",
+                rl_seeds.len(),
+                t0.elapsed().as_secs_f64(),
+                s.min,
+                s.max,
+                s.mean
+            );
+        }
+        println!(
+            "(paper Fig. {fig}: case {} converges to ~{} band)",
+            if fig == 9 { "i" } else { "ii" },
+            if fig == 9 { "178-185 (RL) / 151-176 (SA)" } else { "188-194 (RL) / 170-188 (SA)" }
+        );
+        println!();
+    }
+}

@@ -1,0 +1,132 @@
+//! Hot-path micro-benchmarks — the §Perf numbers of EXPERIMENTS.md.
+//!
+//! * `evaluate(design_point)` — the SA inner loop (paper: 500K iters
+//!   < 1 min ⇒ ≥ 8.3K evals/s; target here: > 1M/s).
+//! * SA end-to-end iterations/sec.
+//! * `policy_forward` HLO call — the PPO rollout inner loop.
+//! * `ppo_update` HLO call — the PPO optimize inner loop.
+//! * One full PPO iteration (2048 rollout steps + 320 updates).
+
+use chiplet_gym::cost::{evaluate, Calib};
+use chiplet_gym::gym::ChipletGymEnv;
+use chiplet_gym::model::space::DesignSpace;
+use chiplet_gym::opt::sa::{simulated_annealing, SaConfig};
+use chiplet_gym::report;
+use chiplet_gym::rl::{train_ppo, PpoConfig};
+use chiplet_gym::runtime::Engine;
+use chiplet_gym::util::bench::Runner;
+use chiplet_gym::util::Rng;
+
+fn main() {
+    let calib = Calib::default();
+    let space = DesignSpace::case_i();
+    let mut runner = Runner::new();
+
+    // ---- L3: evaluate() ----
+    let mut rng = Rng::new(0);
+    let points: Vec<_> = (0..1024)
+        .map(|_| space.decode(&space.random_action(&mut rng)))
+        .collect();
+    let mut i = 0;
+    runner.bench("L3 evaluate(design_point)", || {
+        let p = &points[i & 1023];
+        i += 1;
+        std::hint::black_box(evaluate(&calib, p));
+    });
+
+    // ---- L3: SA end-to-end ----
+    let sa_cfg = SaConfig { iterations: 10_000, trace_every: 0, ..SaConfig::default() };
+    runner.bench("L3 SA 10K iterations", || {
+        std::hint::black_box(simulated_annealing(&space, &calib, &sa_cfg, 7));
+    });
+
+    // ---- L2/L1: HLO calls ----
+    if let Ok(engine) = Engine::discover() {
+        let params = engine.golden_params().expect("golden params");
+        let obs = vec![0.1f32; engine.manifest.obs_dim];
+        runner.bench("L2/L1 policy_forward (HLO, params upload)", || {
+            std::hint::black_box(engine.policy_forward(&params, &obs).unwrap());
+        });
+        let session = engine.forward_session(&params).unwrap();
+        runner.bench("L2/L1 policy_forward (HLO, cached params)", || {
+            std::hint::black_box(session.forward(&obs).unwrap());
+        });
+
+        let m = &engine.manifest;
+        let mb = m.hyper.batch_size;
+        let obs_b = vec![0.1f32; mb * m.obs_dim];
+        let mut act = vec![0i32; mb * m.n_heads];
+        for (k, a) in act.iter_mut().enumerate() {
+            *a = (k % 2) as i32;
+        }
+        let vecs = vec![0.1f32; mb];
+        let zeros = vec![0f32; params.len()];
+        runner.bench("L2 ppo_update (HLO)", || {
+            std::hint::black_box(
+                engine
+                    .ppo_update(
+                        &params, &zeros, &zeros, 1.0, &obs_b, &act, &vecs, &vecs,
+                        &vecs, [3e-4, 0.2, 0.1],
+                    )
+                    .unwrap(),
+            );
+        });
+
+        // ---- epoch-fused optimize phase ----
+        if engine.has_epochs() {
+            let n = m.hyper.n_steps;
+            let k = m.hyper.n_epoch * (n / mb);
+            let obs_n = vec![0.1f32; n * m.obs_dim];
+            let mut act_n = vec![0i32; n * m.n_heads];
+            for (i, a) in act_n.iter_mut().enumerate() {
+                *a = (i % 2) as i32;
+            }
+            let vec_n = vec![0.1f32; n];
+            let mut perm = vec![0i32; k * mb];
+            for (i, p) in perm.iter_mut().enumerate() {
+                *p = (i % n) as i32;
+            }
+            let mut quick = Runner::quick();
+            quick.bench("L2 ppo_epochs (320 fused minibatches)", || {
+                std::hint::black_box(
+                    engine
+                        .ppo_epochs(
+                            &params, &zeros, &zeros, 1.0, &obs_n, &act_n, &vec_n,
+                            &vec_n, &vec_n, &perm, [3e-4, 0.2, 0.1],
+                        )
+                        .unwrap(),
+                );
+            });
+            println!("{}", quick.report());
+        }
+
+        // ---- full PPO iteration ----
+        let mut quick = Runner::quick();
+        let mut cfg = PpoConfig::from_manifest(&engine);
+        cfg.total_timesteps = cfg.n_steps; // exactly one iteration
+        quick.bench("PPO one iteration (2048 steps + 320 updates)", || {
+            let mut env = ChipletGymEnv::case_i();
+            std::hint::black_box(train_ppo(&engine, &mut env, &cfg, 0).unwrap());
+        });
+        println!("{}", quick.report());
+    } else {
+        eprintln!("artifacts missing — HLO benches skipped");
+    }
+
+    println!("{}", runner.report());
+
+    // paper runtime checkpoints
+    let evals_per_sec = 1e9
+        / runner
+            .results()
+            .iter()
+            .find(|r| r.name.contains("evaluate"))
+            .unwrap()
+            .ns_per_iter
+            .mean;
+    println!("SA inner loop: {evals_per_sec:.0} evals/s (paper needs >= 8.3K/s for 500K < 1 min)");
+    report::write_text(
+        "perf_hotpath.txt",
+        &format!("{}\nevals_per_sec={evals_per_sec:.0}\n", runner.report()),
+    );
+}

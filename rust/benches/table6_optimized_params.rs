@@ -1,0 +1,108 @@
+//! Table 6: optimized parameters found by the combined optimizer for
+//! α, β, γ = [1, 1, 0.1], cases (i) and (ii) — side by side with the
+//! paper's reported optimum.
+//!
+//! Also prints Tables 3–4 (the interconnect property inputs). Quick mode:
+//! 6 SA seeds × 150K iters + 2 RL seeds × 32K steps; CHIPLET_GYM_FULL=1
+//! restores the paper's 20+20 × (500K / 250K).
+//! Emits `bench_results/table6_optimized.csv`.
+
+use chiplet_gym::cost::{evaluate, Calib};
+use chiplet_gym::model::packaging::INTERCONNECTS;
+use chiplet_gym::model::space::{paper_points, DesignSpace};
+use chiplet_gym::opt::combined::{combined_optimize, sa_only_optimize, CombinedConfig};
+use chiplet_gym::opt::sa::SaConfig;
+use chiplet_gym::report;
+use chiplet_gym::rl::PpoConfig;
+use chiplet_gym::runtime::Engine;
+use chiplet_gym::util::table::Table;
+
+fn main() {
+    // ---- Tables 3-4 preamble ----
+    let mut t34 = Table::new(["interconnect", "class", "pitch (um)", "pJ/bit", "cost tier"]);
+    for ic in INTERCONNECTS {
+        let p = ic.props();
+        t34.row([
+            p.name.to_string(),
+            format!("{:?}", p.class),
+            format!("{}", p.bump_pitch_um),
+            format!("{}-{}", p.e_bit_min_pj, p.e_bit_max_pj),
+            format!("{:?}", p.cost_tier),
+        ]);
+    }
+    println!("Table 4 inputs:");
+    t34.print();
+
+    let full = std::env::var("CHIPLET_GYM_FULL").is_ok();
+    let calib = Calib::default();
+    let engine = Engine::discover().ok();
+
+    let mut csv = report::csv(
+        "table6_optimized.csv",
+        &["case", "source", "objective", "arch", "n_chiplets", "n_hbm",
+          "ai2ai_tbps", "ai2ai_3d_tbps", "ai2hbm_tbps"],
+    );
+
+    for (case, space, paper_action) in [
+        ("i", DesignSpace::case_i(), paper_points::table6_case_i()),
+        ("ii", DesignSpace::case_ii(), paper_points::table6_case_ii()),
+    ] {
+        println!("\n=== Table 6 case ({case}), alpha,beta,gamma = [1,1,0.1] ===");
+        let sa = SaConfig {
+            iterations: if full { 500_000 } else { 150_000 },
+            trace_every: 0,
+            ..SaConfig::default()
+        };
+        let outcome = if let Some(engine) = &engine {
+            let mut ppo = PpoConfig::from_manifest(engine);
+            ppo.total_timesteps = if full { 250_000 } else { 32_768 };
+            let cfg = CombinedConfig {
+                sa,
+                ppo,
+                sa_seeds: if full { (0..20).collect() } else { (0..6).collect() },
+                rl_seeds: if full { (0..20).collect() } else { (0..2).collect() },
+            };
+            combined_optimize(engine, space, &calib, &cfg).expect("alg1")
+        } else {
+            sa_only_optimize(space, &calib, &sa, &(0..6).collect::<Vec<_>>())
+        };
+
+        let ours = space.decode(&outcome.best.action);
+        let ours_eval = evaluate(&calib, &ours);
+        let paper = space.decode(&paper_action);
+        let paper_eval = evaluate(&calib, &paper);
+
+        let mut t = Table::new(["parameter", "ours (Alg. 1)", "paper Table 6"]);
+        t.row(["objective".to_string(),
+               format!("{:.1}", ours_eval.reward),
+               format!("{:.1}", paper_eval.reward)]);
+        t.row(["architecture".to_string(), ours.arch.name().into(), paper.arch.name().into()]);
+        t.row(["chiplets".to_string(),
+               format!("{} ({}x{})", ours.n_chiplets, ours_eval.mesh_m, ours_eval.mesh_n),
+               format!("{} ({}x{})", paper.n_chiplets, paper_eval.mesh_m, paper_eval.mesh_n)]);
+        t.row(["HBMs".to_string(),
+               format!("{} @ {:?}", ours.n_hbm(), ours.hbm_locs()),
+               format!("{} @ {:?}", paper.n_hbm(), paper.hbm_locs())]);
+        t.row(["AI2AI 2.5D".to_string(),
+               format!("{} {}Gbps x{}", ours.ai2ai_25d.props().name, ours.ai2ai_25d_gbps, ours.ai2ai_25d_links),
+               format!("{} {}Gbps x{}", paper.ai2ai_25d.props().name, paper.ai2ai_25d_gbps, paper.ai2ai_25d_links)]);
+        t.row(["AI2AI 3D".to_string(),
+               format!("{} {}Gbps x{}", ours.ai2ai_3d.props().name, ours.ai2ai_3d_gbps, ours.ai2ai_3d_links),
+               format!("{} {}Gbps x{}", paper.ai2ai_3d.props().name, paper.ai2ai_3d_gbps, paper.ai2ai_3d_links)]);
+        t.row(["AI2HBM".to_string(),
+               format!("{} {}Gbps x{} ({:.0} Tbps)", ours.ai2hbm.props().name, ours.ai2hbm_gbps, ours.ai2hbm_links, ours.bw_ai2hbm_tbps()),
+               format!("{} {}Gbps x{} ({:.0} Tbps)", paper.ai2hbm.props().name, paper.ai2hbm_gbps, paper.ai2hbm_links, paper.bw_ai2hbm_tbps())]);
+        t.print();
+
+        csv.row_str(&[
+            case.to_string(), outcome.best.source.clone(),
+            format!("{:.2}", ours_eval.reward), ours.arch.name().to_string(),
+            format!("{}", ours.n_chiplets), format!("{}", ours.n_hbm()),
+            format!("{:.1}", ours.bw_ai2ai_25d_tbps()),
+            format!("{:.1}", ours.bw_ai2ai_3d_tbps()),
+            format!("{:.1}", ours.bw_ai2hbm_tbps()),
+        ]).unwrap();
+    }
+    csv.flush().unwrap();
+    println!("\nwrote {}", report::result_path("table6_optimized.csv").display());
+}

@@ -1,0 +1,183 @@
+//! Experiment configuration: JSON config files + CLI overrides.
+//!
+//! The launcher (`chiplet-gym` binary) reads an optional JSON config
+//! (`configs/*.json`), then applies `--key value` CLI overrides. Configs
+//! are deliberately flat: every knob of the paper's experiments is one
+//! key (see `configs/default.json`).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::cost::Calib;
+use crate::model::space::DesignSpace;
+use crate::opt::sa::SaConfig;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Top-level run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Chiplet cap: 64 (case i) or 128 (case ii).
+    pub chiplet_cap: usize,
+    pub calib: Calib,
+    pub sa: SaConfig,
+    pub ppo_total_timesteps: usize,
+    pub ppo_episode_len: usize,
+    pub ppo_ent_coef: f64,
+    pub sa_seeds: Vec<u64>,
+    pub rl_seeds: Vec<u64>,
+    pub out_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> RunConfig {
+        RunConfig {
+            chiplet_cap: 64,
+            calib: Calib::default(),
+            sa: SaConfig::default(),
+            ppo_total_timesteps: 250_000,
+            ppo_episode_len: 2,
+            ppo_ent_coef: 0.1,
+            sa_seeds: (0..20).collect(),
+            rl_seeds: (0..20).collect(),
+            out_dir: "bench_results".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn space(&self) -> DesignSpace {
+        DesignSpace { chiplet_cap: self.chiplet_cap }
+    }
+
+    /// Load from a JSON file (all keys optional).
+    pub fn load(path: &Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("config parse: {e}"))?;
+        let mut cfg = RunConfig::default();
+        cfg.apply_json(&v);
+        Ok(cfg)
+    }
+
+    fn apply_json(&mut self, v: &Json) {
+        let num = |key: &str| v.get(key).and_then(Json::as_f64);
+        if let Some(x) = num("chiplet_cap") {
+            self.chiplet_cap = x as usize;
+        }
+        if let Some(x) = num("sa_iterations") {
+            self.sa.iterations = x as usize;
+        }
+        if let Some(x) = num("sa_temperature") {
+            self.sa.temperature = x;
+        }
+        if let Some(x) = num("sa_step_size") {
+            self.sa.step_size = x;
+        }
+        if let Some(x) = num("ppo_total_timesteps") {
+            self.ppo_total_timesteps = x as usize;
+        }
+        if let Some(x) = num("ppo_episode_len") {
+            self.ppo_episode_len = x as usize;
+        }
+        if let Some(x) = num("ppo_ent_coef") {
+            self.ppo_ent_coef = x;
+        }
+        if let Some(x) = num("alpha") {
+            self.calib.alpha = x;
+        }
+        if let Some(x) = num("beta") {
+            self.calib.beta = x;
+        }
+        if let Some(x) = num("gamma") {
+            self.calib.gamma = x;
+        }
+        if let Some(seeds) = v.get("sa_seeds").and_then(Json::as_usize_vec) {
+            self.sa_seeds = seeds.into_iter().map(|s| s as u64).collect();
+        }
+        if let Some(seeds) = v.get("rl_seeds").and_then(Json::as_usize_vec) {
+            self.rl_seeds = seeds.into_iter().map(|s| s as u64).collect();
+        }
+        if let Some(s) = v.get("out_dir").and_then(Json::as_str) {
+            self.out_dir = s.to_string();
+        }
+    }
+
+    /// Apply CLI overrides on top (CLI wins over config file).
+    pub fn apply_args(&mut self, args: &Args) {
+        if let Some(case) = args.get("case") {
+            self.chiplet_cap = match case {
+                "i" | "64" => 64,
+                "ii" | "128" => 128,
+                other => other.parse().expect("--case must be i|ii|64|128"),
+            };
+        }
+        self.sa.iterations = args.get_parse("sa-iters", self.sa.iterations);
+        self.sa.temperature = args.get_parse("sa-temp", self.sa.temperature);
+        self.sa.step_size = args.get_parse("sa-step", self.sa.step_size);
+        self.ppo_total_timesteps = args.get_parse("timesteps", self.ppo_total_timesteps);
+        self.ppo_episode_len = args.get_parse("episode-len", self.ppo_episode_len);
+        self.ppo_ent_coef = args.get_parse("ent-coef", self.ppo_ent_coef);
+        self.calib.alpha = args.get_parse("alpha", self.calib.alpha);
+        self.calib.beta = args.get_parse("beta", self.calib.beta);
+        self.calib.gamma = args.get_parse("gamma", self.calib.gamma);
+        if args.get("seeds").is_some() {
+            let seeds = args.get_u64_list("seeds", &self.sa_seeds);
+            self.sa_seeds = seeds.clone();
+            self.rl_seeds = seeds;
+        }
+        if let Some(out) = args.get("out-dir") {
+            self.out_dir = out.to_string();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = RunConfig::default();
+        assert_eq!(c.chiplet_cap, 64);
+        assert_eq!(c.sa.iterations, 500_000);
+        assert_eq!(c.sa.temperature, 200.0);
+        assert_eq!(c.sa.step_size, 10.0);
+        assert_eq!(c.ppo_total_timesteps, 250_000);
+        assert_eq!(c.ppo_episode_len, 2);
+        assert_eq!(c.sa_seeds.len(), 20);
+        assert_eq!(c.rl_seeds.len(), 20);
+    }
+
+    #[test]
+    fn json_overrides() {
+        let mut cfg = RunConfig::default();
+        let v = Json::parse(
+            r#"{"chiplet_cap": 128, "sa_iterations": 1000,
+                "gamma": 0.5, "sa_seeds": [7, 8]}"#,
+        )
+        .unwrap();
+        cfg.apply_json(&v);
+        assert_eq!(cfg.chiplet_cap, 128);
+        assert_eq!(cfg.sa.iterations, 1000);
+        assert_eq!(cfg.calib.gamma, 0.5);
+        assert_eq!(cfg.sa_seeds, vec![7, 8]);
+        // untouched keys keep defaults
+        assert_eq!(cfg.ppo_episode_len, 2);
+    }
+
+    #[test]
+    fn cli_overrides_config() {
+        let mut cfg = RunConfig::default();
+        let args = Args::parse(
+            "optimize --case ii --sa-iters 5000 --seeds 1,2,3"
+                .split_whitespace()
+                .map(String::from),
+        );
+        cfg.apply_args(&args);
+        assert_eq!(cfg.chiplet_cap, 128);
+        assert_eq!(cfg.sa.iterations, 5000);
+        assert_eq!(cfg.rl_seeds, vec![1, 2, 3]);
+    }
+}

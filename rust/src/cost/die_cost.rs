@@ -1,0 +1,104 @@
+//! Die (silicon) manufacturing cost.
+//!
+//! Two models, as in the paper's Section 5.3.2:
+//!
+//! 1. **KGD power law** — cost_KGD ∝ A^q: the paper's Taylor-expansion
+//!    argument gives q = 5/2; q = 2.4 (default) reproduces its reported
+//!    76×/143× monolithic-over-chiplet system die-cost ratios.
+//! 2. **Wafer model** — cost per good die = wafer cost / (dies-per-wafer ×
+//!    yield), the Chiplet-Actuary-style [6] physical grounding, used for
+//!    cross-checks and the Fig. 3(a) normalized-cost axis.
+
+use super::constants::Calib;
+use super::yield_model::die_yield;
+
+/// Cost of one known-good die of `area_mm2` under the KGD power law.
+pub fn kgd_cost(c: &Calib, area_mm2: f64) -> f64 {
+    c.kgd_unit_cost * area_mm2.powf(c.kgd_exponent)
+}
+
+/// Total silicon cost of a system of `n_dies` identical dies.
+pub fn system_die_cost(c: &Calib, area_mm2: f64, n_dies: usize) -> f64 {
+    kgd_cost(c, area_mm2) * n_dies as f64
+}
+
+/// Gross dies per wafer with edge loss (the standard DPW approximation).
+pub fn dies_per_wafer(c: &Calib, area_mm2: f64) -> f64 {
+    let d = c.wafer_diameter_mm;
+    let gross = std::f64::consts::PI * (d / 2.0) * (d / 2.0) / area_mm2;
+    let edge = std::f64::consts::PI * d / (2.0 * area_mm2).sqrt();
+    (gross - edge).max(0.0)
+}
+
+/// Wafer-model cost per known-good die: wafer cost / (DPW × yield).
+pub fn wafer_kgd_cost(c: &Calib, area_mm2: f64) -> f64 {
+    let dpw = dies_per_wafer(c, area_mm2);
+    let y = die_yield(area_mm2, c.defect_per_mm2, c.cluster_alpha);
+    if dpw < 1.0 {
+        return f64::INFINITY; // die bigger than a wafer
+    }
+    c.wafer_cost / (dpw * y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_paper_die_cost_ratios() {
+        // Section 5.3.2: monolithic die cost 76× the 60-chiplet system
+        // (26 mm² dies) and 143× the 112-chiplet system (14 mm² dies).
+        let c = Calib::default();
+        let mono = system_die_cost(&c, c.mono_die_mm2, 1);
+        let sys60 = system_die_cost(&c, 26.0, 60);
+        let sys112 = system_die_cost(&c, 14.0, 112);
+        let r60 = mono / sys60;
+        let r112 = mono / sys112;
+        assert!((60.0..=95.0).contains(&r60), "60-chiplet ratio {r60}");
+        assert!((115.0..=175.0).contains(&r112), "112-chiplet ratio {r112}");
+    }
+
+    #[test]
+    fn headline_0_01x_die_cost() {
+        // "0.01× die cost ... of its monolithic counterpart" = 1/76.
+        let c = Calib::default();
+        let ratio = system_die_cost(&c, 26.0, 60) / system_die_cost(&c, c.mono_die_mm2, 1);
+        assert!(ratio < 0.02, "chiplet/mono die cost {ratio}");
+    }
+
+    #[test]
+    fn kgd_superlinear_in_area() {
+        let c = Calib::default();
+        // doubling area more than doubles cost
+        assert!(kgd_cost(&c, 200.0) > 2.0 * kgd_cost(&c, 100.0));
+    }
+
+    #[test]
+    fn wafer_model_sane() {
+        let c = Calib::default();
+        let dpw = dies_per_wafer(&c, 826.0);
+        assert!((50.0..80.0).contains(&dpw), "dpw {dpw}");
+        // A 26 mm² die costs far less than the 826 mm² one.
+        let small = wafer_kgd_cost(&c, 26.0);
+        let big = wafer_kgd_cost(&c, 826.0);
+        assert!(big / small > 40.0, "big {big} small {small}");
+    }
+
+    #[test]
+    fn wafer_model_rejects_oversized_die() {
+        let c = Calib::default();
+        assert!(wafer_kgd_cost(&c, 80_000.0).is_infinite());
+    }
+
+    #[test]
+    fn both_models_agree_on_direction() {
+        let c = Calib::default();
+        // System of many small dies beats one big die in both models.
+        let mono_k = system_die_cost(&c, 826.0, 1);
+        let chip_k = system_die_cost(&c, 26.0, 60);
+        assert!(mono_k > chip_k);
+        let mono_w = wafer_kgd_cost(&c, 826.0);
+        let chip_w = wafer_kgd_cost(&c, 26.0) * 60.0;
+        assert!(mono_w > chip_w);
+    }
+}

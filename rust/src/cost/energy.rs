@@ -1,0 +1,153 @@
+//! Energy model — eqs. (6), (7) and (15) of the paper.
+//!
+//! E_op = E_comm + E_op* (eq. 7). E_comm = E_bit_pkg × bits (eq. 15),
+//! where E_bit depends on the interconnect technology and trace length
+//! (Table 4) and bits/op is the operand traffic after on-chip reuse,
+//! weighted by the mean hop distance (each hop re-drives the link).
+//!
+//! The monolithic *cluster* baseline (Section 5.3.2's counter-intuitive
+//! discussion) replaces package links with on-die wires for local traffic
+//! and off-board (PCB/NVLink-class, ≥10× energy) links for the share of
+//! traffic that crosses chip boundaries at iso-throughput.
+
+use crate::mesh::grid::{HopStats, MeshGrid};
+use crate::model::space::{ArchType, DesignPoint};
+
+use super::constants::Calib;
+
+/// Package communication energy per op, pJ (eq. 15 normalized per op).
+pub fn e_comm_per_op_pj(c: &Calib, p: &DesignPoint, grid: &MeshGrid) -> f64 {
+    e_comm_per_op_pj_from_stats(c, p, &HopStats::of(grid))
+}
+
+/// [`e_comm_per_op_pj`] from precomputed hop statistics (§Perf fast path).
+pub fn e_comm_per_op_pj_from_stats(c: &Calib, p: &DesignPoint, stats: &HopStats) -> f64 {
+    // HBM→AI share: operands fetched over the AI↔HBM link, re-driven at
+    // every mesh hop on the way (mean supply distance).
+    let hbm_bits = c.link_bits_per_op * (1.0 - c.ai2ai_traffic_frac);
+    let e_hbm = p.ai2hbm.e_bit_pj(p.ai2hbm_trace_mm) * hbm_bits * stats.mean_hbm_hops.max(1.0);
+
+    // AI→AI share: neighbor exchanges, 1 hop by construction (Fig. 5
+    // mapping has no partial-sum traffic; neighbor streaming only).
+    let ai_bits = c.link_bits_per_op * c.ai2ai_traffic_frac;
+    let e_ai = p.ai2ai_25d.e_bit_pj(p.ai2ai_25d_trace_mm) * ai_bits;
+
+    // 3D bond share: the upper tier of a stacked pair receives its
+    // operands through the bond (half the dies are upper tiers).
+    let e_bond = if p.arch == ArchType::LogicOnLogic {
+        0.5 * hbm_bits * p.ai2ai_3d.e_bit_pj(0.08)
+    } else {
+        0.0
+    };
+    e_hbm + e_ai + e_bond
+}
+
+/// Total energy per operation of the chiplet system, pJ (eq. 7 +
+/// DRAM access share).
+pub fn e_op_pj(c: &Calib, p: &DesignPoint, grid: &MeshGrid) -> f64 {
+    e_op_pj_from_stats(c, p, &HopStats::of(grid))
+}
+
+/// [`e_op_pj`] from precomputed hop statistics (§Perf fast path).
+pub fn e_op_pj_from_stats(c: &Calib, p: &DesignPoint, stats: &HopStats) -> f64 {
+    c.e_mac_pj + c.e_dram_pj_bit * c.dram_bits_per_op + e_comm_per_op_pj_from_stats(c, p, stats)
+}
+
+/// Energy per operation of the iso-throughput monolithic cluster, pJ.
+///
+/// Same MAC and DRAM energy; operand traffic is split between on-die
+/// wires and off-board links (`mono_cross_traffic_frac` crossing chips).
+pub fn mono_e_op_pj(c: &Calib) -> f64 {
+    let local = (1.0 - c.mono_cross_traffic_frac) * c.link_bits_per_op * c.e_ondie_pj_bit;
+    let cross = c.mono_cross_traffic_frac * c.link_bits_per_op * c.e_offboard_pj_bit;
+    c.e_mac_pj + c.e_dram_pj_bit * c.dram_bits_per_op + local + cross
+}
+
+/// Energy per task in millijoule for a workload of `gmac_per_task` GMACs
+/// (eq. 6 inverted: joules/task = E_op × ops/task).
+pub fn energy_per_task_mj(e_op_pj: f64, gmac_per_task: f64) -> f64 {
+    // pJ/op × G-ops = 1e-12 J × 1e9 = mJ
+    e_op_pj * gmac_per_task
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::space::{DesignSpace, N_HEADS};
+
+    fn point(trace: usize, emib: bool) -> DesignPoint {
+        let space = DesignSpace::case_i();
+        let mut a = [0usize; N_HEADS];
+        a[0] = 2;
+        a[1] = 59;
+        a[2] = 0b011110 - 1;
+        a[3] = if emib { 1 } else { 0 };
+        a[6] = trace - 1;
+        a[10] = if emib { 1 } else { 0 };
+        a[13] = trace - 1;
+        a[11] = 19;
+        a[12] = 97;
+        space.decode(&a)
+    }
+
+    fn grid_of(p: &DesignPoint) -> MeshGrid {
+        MeshGrid::new(p.n_footprints(), &p.hbm_locs())
+    }
+
+    #[test]
+    fn energy_efficiency_ratio_near_3_7x() {
+        // Fig. 12(b): the 60-chiplet system is ~3.7× more energy
+        // efficient than the iso-throughput monolithic cluster.
+        let c = Calib::default();
+        let p = point(1, true);
+        let g = grid_of(&p);
+        let ratio = mono_e_op_pj(&c) / e_op_pj(&c, &p, &g);
+        assert!((2.8..=4.6).contains(&ratio), "ratio {ratio} (paper 3.7)");
+    }
+
+    #[test]
+    fn headline_0_27x_energy() {
+        // 0.27× energy = 1/3.7.
+        let c = Calib::default();
+        let p = point(1, true);
+        let g = grid_of(&p);
+        let frac = e_op_pj(&c, &p, &g) / mono_e_op_pj(&c);
+        assert!((0.2..=0.36).contains(&frac), "frac {frac} (paper 0.27)");
+    }
+
+    #[test]
+    fn longer_trace_costs_more_energy() {
+        let c = Calib::default();
+        let near = point(1, true);
+        let far = point(10, true);
+        let g = grid_of(&near);
+        assert!(e_comm_per_op_pj(&c, &far, &g) > e_comm_per_op_pj(&c, &near, &g));
+    }
+
+    #[test]
+    fn mac_energy_is_a_floor() {
+        let c = Calib::default();
+        let p = point(1, true);
+        let g = grid_of(&p);
+        assert!(e_op_pj(&c, &p, &g) > c.e_mac_pj);
+    }
+
+    #[test]
+    fn energy_per_task_scales_with_ops() {
+        // BERT (16 GMAC) vs ResNet-50 (2 GMAC): 8× the energy per task.
+        let e = 2.0; // pJ/op
+        let bert = energy_per_task_mj(e, 16.0);
+        let resnet = energy_per_task_mj(e, 2.0);
+        assert!((bert / resnet - 8.0).abs() < 1e-12);
+        assert!((bert - 32.0).abs() < 1e-9); // 2 pJ × 16e9 = 32 mJ
+    }
+
+    #[test]
+    fn offboard_dominates_mono_comm() {
+        let c = Calib::default();
+        // the cross-traffic term should dominate the local term
+        let local = (1.0 - c.mono_cross_traffic_frac) * c.link_bits_per_op * c.e_ondie_pj_bit;
+        let cross = c.mono_cross_traffic_frac * c.link_bits_per_op * c.e_offboard_pj_bit;
+        assert!(cross > 10.0 * local);
+    }
+}

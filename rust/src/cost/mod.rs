@@ -1,0 +1,18 @@
+//! Analytical PPAC model — Section 3 of the paper.
+//!
+//! Everything is a pure function of a [`crate::model::DesignPoint`] and
+//! the calibration constants in [`constants::Calib`]; evaluating a design
+//! point allocates nothing and is the inner loop of both optimizers
+//! (500K+ evaluations per SA run).
+
+pub mod bandwidth;
+pub mod constants;
+pub mod die_cost;
+pub mod energy;
+pub mod package_cost;
+pub mod ppac;
+pub mod throughput;
+pub mod yield_model;
+
+pub use constants::Calib;
+pub use ppac::{evaluate, Evaluation};

@@ -1,0 +1,260 @@
+//! The aggregate PPAC evaluator: one design point → one [`Evaluation`].
+//!
+//! This is the SA inner loop and the Gym environment's step function, so
+//! it is allocation-free after the `MeshGrid` attach vector (≤ 6 entries)
+//! and fast enough for millions of calls.
+
+use crate::mesh::grid::hop_stats;
+use crate::model::space::DesignPoint;
+
+use super::bandwidth;
+use super::constants::Calib;
+use super::die_cost;
+use super::energy;
+use super::package_cost;
+use super::throughput::{self, Geometry, Latencies};
+
+/// Full evaluation of a design point under the analytical model.
+#[derive(Clone, Copy, Debug)]
+pub struct Evaluation {
+    pub feasible: bool,
+    // geometry
+    pub mesh_m: usize,
+    pub mesh_n: usize,
+    pub n_footprints: usize,
+    pub area_per_chiplet: f64,
+    pub logic_area: f64,
+    pub pe_per_chiplet: f64,
+    pub sram_mb: f64,
+    // latency
+    pub l_ai2ai_ns: f64,
+    pub l_hbm2ai_ns: f64,
+    pub cycles_per_op: f64,
+    // bandwidth
+    pub bw_req_hbm_tbps: f64,
+    pub bw_act_hbm_tbps: f64,
+    pub u_sys: f64,
+    // throughput
+    pub peak_tops: f64,
+    pub throughput_tops: f64,
+    // energy
+    pub e_comm_pj: f64,
+    pub e_op_pj: f64,
+    pub energy_mj_per_ref_task: f64,
+    // cost
+    pub die_yield: f64,
+    pub die_cost: f64,
+    pub pkg_cost: f64,
+    // reward
+    pub reward: f64,
+}
+
+impl Evaluation {
+    fn infeasible(geo: &Geometry) -> Evaluation {
+        Evaluation {
+            feasible: false,
+            mesh_m: geo.m,
+            mesh_n: geo.n,
+            n_footprints: geo.n_footprints,
+            area_per_chiplet: geo.area_per_chiplet,
+            logic_area: 0.0,
+            pe_per_chiplet: 0.0,
+            sram_mb: 0.0,
+            l_ai2ai_ns: 0.0,
+            l_hbm2ai_ns: 0.0,
+            cycles_per_op: 1.0,
+            bw_req_hbm_tbps: 0.0,
+            bw_act_hbm_tbps: 0.0,
+            u_sys: 0.0,
+            peak_tops: 0.0,
+            throughput_tops: 0.0,
+            e_comm_pj: 0.0,
+            e_op_pj: 0.0,
+            energy_mj_per_ref_task: 0.0,
+            die_yield: 0.0,
+            die_cost: 0.0,
+            pkg_cost: 0.0,
+            // A large negative reward steers both optimizers away from
+            // infeasible layouts without NaN poisoning.
+            reward: -100.0,
+        }
+    }
+}
+
+/// Evaluate a design point (Section 3's full model + eq. 17 reward).
+pub fn evaluate(c: &Calib, p: &DesignPoint) -> Evaluation {
+    let geo = throughput::geometry(c, p);
+    if !geo.feasible {
+        return Evaluation::infeasible(&geo);
+    }
+    // §Perf: hop statistics are memoized over (footprints, HBM mask) —
+    // this function is the SA inner loop (millions of calls per run).
+    let stats = hop_stats(p.n_footprints(), p.hbm_mask);
+    let lat: Latencies = throughput::latencies_from_stats(p, &stats);
+
+    let peak_chip = throughput::chip_peak_ops(c, &geo);
+    let peak_tops = peak_chip * p.n_chiplets as f64 / 1e12;
+    let u_sys = bandwidth::u_sys(c, p, peak_chip);
+    let tput = peak_chip / throughput::cycles_per_op(c, &lat)
+        * c.default_u_chip
+        * p.n_chiplets as f64
+        * u_sys
+        / 1e12;
+
+    let e_comm = energy::e_comm_per_op_pj_from_stats(c, p, &stats);
+    let e_op = c.e_mac_pj + c.e_dram_pj_bit * c.dram_bits_per_op + e_comm;
+    let e_task = energy::energy_per_task_mj(e_op, c.ref_task_gmac);
+
+    let die_yield = super::yield_model::die_yield(
+        geo.area_per_chiplet,
+        c.defect_per_mm2,
+        c.cluster_alpha,
+    );
+    let die_cost = die_cost::system_die_cost(c, geo.area_per_chiplet, p.n_chiplets);
+    let pkg_cost = package_cost::package_cost_from_stats(c, p, &stats);
+
+    // eq. 17: r = αT − βC − γE. T in effective TMAC/s, C the packaging
+    // cost (eq. 16 units), E the communication+compute energy per
+    // reference task in mJ — see DESIGN.md §4 for the unit rationale.
+    let reward = c.alpha * tput - c.beta * pkg_cost - c.gamma * e_task;
+
+    Evaluation {
+        feasible: true,
+        mesh_m: geo.m,
+        mesh_n: geo.n,
+        n_footprints: geo.n_footprints,
+        area_per_chiplet: geo.area_per_chiplet,
+        logic_area: geo.logic_area,
+        pe_per_chiplet: geo.pe_per_chiplet,
+        sram_mb: geo.sram_mb,
+        l_ai2ai_ns: lat.ai2ai_ns,
+        l_hbm2ai_ns: lat.hbm2ai_ns,
+        cycles_per_op: throughput::cycles_per_op(c, &lat),
+        bw_req_hbm_tbps: bandwidth::bw_req_hbm_tbps(c, peak_chip),
+        bw_act_hbm_tbps: bandwidth::bw_act_hbm_tbps(c, p),
+        u_sys,
+        peak_tops,
+        throughput_tops: tput,
+        e_comm_pj: e_comm,
+        e_op_pj: e_op,
+        energy_mj_per_ref_task: e_task,
+        die_yield,
+        die_cost,
+        pkg_cost,
+        reward,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::space::{DesignSpace, N_HEADS};
+    use crate::util::Rng;
+
+    fn paper_case_i_action() -> [usize; N_HEADS] {
+        let mut a = [0usize; N_HEADS];
+        a[0] = 2;
+        a[1] = 59;
+        a[2] = 0b011110 - 1;
+        a[3] = 1;
+        a[4] = 19;
+        a[5] = 61;
+        a[6] = 0;
+        a[7] = 0;
+        a[8] = 22;
+        a[9] = 31;
+        a[10] = 1;
+        a[11] = 19;
+        a[12] = 97;
+        a[13] = 0;
+        a
+    }
+
+    #[test]
+    fn paper_optimum_scores_in_case_i_band() {
+        // Fig. 11(a): RL best cost-model values 178–185 for case (i).
+        // The paper's own Table 6 design point should land near that band
+        // under our calibration (±15%).
+        let c = Calib::default();
+        let space = DesignSpace::case_i();
+        let p = space.decode(&paper_case_i_action());
+        let e = evaluate(&c, &p);
+        assert!(e.feasible);
+        assert!(
+            (140.0..=220.0).contains(&e.reward),
+            "case i reward {} (paper band 178-185)",
+            e.reward
+        );
+    }
+
+    #[test]
+    fn all_random_points_evaluate_finite() {
+        let c = Calib::default();
+        let space = DesignSpace::case_ii();
+        let mut rng = Rng::new(123);
+        for _ in 0..5_000 {
+            let a = space.random_action(&mut rng);
+            let p = space.decode(&a);
+            let e = evaluate(&c, &p);
+            assert!(e.reward.is_finite(), "{p:?}");
+            assert!(e.throughput_tops >= 0.0);
+            assert!(e.pkg_cost >= 0.0 || !e.feasible);
+            assert!(e.u_sys >= 0.0 && e.u_sys <= 1.0);
+        }
+    }
+
+    #[test]
+    fn throughput_never_exceeds_peak() {
+        let c = Calib::default();
+        let space = DesignSpace::case_ii();
+        let mut rng = Rng::new(7);
+        for _ in 0..2_000 {
+            let p = space.decode(&space.random_action(&mut rng));
+            let e = evaluate(&c, &p);
+            assert!(
+                e.throughput_tops <= e.peak_tops + 1e-9,
+                "tput {} > peak {}",
+                e.throughput_tops,
+                e.peak_tops
+            );
+        }
+    }
+
+    #[test]
+    fn reward_decomposition_matches_eq17() {
+        let c = Calib::default();
+        let space = DesignSpace::case_i();
+        let p = space.decode(&paper_case_i_action());
+        let e = evaluate(&c, &p);
+        let want = c.alpha * e.throughput_tops - c.beta * e.pkg_cost
+            - c.gamma * e.energy_mj_per_ref_task;
+        assert!((e.reward - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weights_change_reward_not_metrics() {
+        let c1 = Calib::default();
+        let c2 = Calib::default().with_weights(2.0, 1.0, 0.1);
+        let space = DesignSpace::case_i();
+        let p = space.decode(&paper_case_i_action());
+        let e1 = evaluate(&c1, &p);
+        let e2 = evaluate(&c2, &p);
+        assert_eq!(e1.throughput_tops, e2.throughput_tops);
+        assert_eq!(e1.pkg_cost, e2.pkg_cost);
+        assert!(e2.reward > e1.reward);
+    }
+
+    #[test]
+    fn single_chiplet_design_is_feasible_but_weak() {
+        let c = Calib::default();
+        let space = DesignSpace::case_i();
+        let mut a = paper_case_i_action();
+        a[0] = 0; // 2.5D
+        a[1] = 0; // 1 chiplet
+        let e = evaluate(&c, &space.decode(&a));
+        assert!(e.feasible);
+        // One 400 mm²-capped die cannot reach the 60-chiplet throughput.
+        let best = evaluate(&c, &space.decode(&paper_case_i_action()));
+        assert!(e.throughput_tops < best.throughput_tops / 2.0);
+    }
+}

@@ -1,0 +1,295 @@
+//! Geometry and throughput — eqs. (1)–(5) of the paper.
+//!
+//! The package geometry determines per-chiplet area (fixed 900 mm²
+//! package, 1 mm spacing, HBM footprints), per-chiplet area determines PE
+//! count (40% compute area × MAC density), and communication latency
+//! (eq. 11) plus bandwidth utilization (eq. 12) shave the peak.
+
+use crate::mesh::grid::{mesh_dims, HopStats, MeshGrid};
+use crate::mesh::latency::{comm_latency_ns, LatencyParams};
+use crate::model::space::{ArchType, DesignPoint, HbmLoc};
+
+use super::bandwidth;
+use super::constants::Calib;
+
+/// Derived package geometry of a design point.
+#[derive(Clone, Copy, Debug)]
+pub struct Geometry {
+    /// Mesh dimensions over footprints (m ≤ n).
+    pub m: usize,
+    pub n: usize,
+    pub n_footprints: usize,
+    pub n_hbm_25d: usize,
+    /// Silicon area per chiplet die, mm² (capped at max_chiplet_area).
+    pub area_per_chiplet: f64,
+    /// Area usable for logic after TSV + keep-out (3D architectures).
+    pub logic_area: f64,
+    /// MAC units per chiplet.
+    pub pe_per_chiplet: f64,
+    /// On-chip SRAM per chiplet, MB.
+    pub sram_mb: f64,
+    /// False when the configuration cannot be laid out (no area left).
+    pub feasible: bool,
+}
+
+/// Compute the package geometry (Section 5.1's area accounting:
+/// usable = 900 − (m + n + 2) − HBM footprints, split over footprints).
+pub fn geometry(c: &Calib, p: &DesignPoint) -> Geometry {
+    let n_fp = p.n_footprints();
+    let (m, n) = mesh_dims(n_fp);
+    let n_hbm_25d = p.n_hbm_25d();
+    let spacing = (m + n + 2) as f64;
+    let avail = c.pkg_area_mm2 - spacing - c.hbm_area_mm2 * n_hbm_25d as f64;
+    if avail <= 0.0 {
+        return Geometry {
+            m,
+            n,
+            n_footprints: n_fp,
+            n_hbm_25d,
+            area_per_chiplet: 0.0,
+            logic_area: 0.0,
+            pe_per_chiplet: 0.0,
+            sram_mb: 0.0,
+            feasible: false,
+        };
+    }
+    // Area per die; the 400 mm² yield cap wastes any excess (the
+    // optimizer learns that too few chiplets squander package area).
+    let area = (avail / n_fp as f64).min(c.max_chiplet_area_mm2);
+    let tsv_overhead = if p.arch.uses_3d() {
+        c.tsv_area_mm2 + c.tsv_keepout_frac * area
+    } else {
+        0.0
+    };
+    let logic = area - tsv_overhead;
+    if logic <= 0.0 {
+        return Geometry {
+            m,
+            n,
+            n_footprints: n_fp,
+            n_hbm_25d,
+            area_per_chiplet: area,
+            logic_area: 0.0,
+            pe_per_chiplet: 0.0,
+            sram_mb: 0.0,
+            feasible: false,
+        };
+    }
+    Geometry {
+        m,
+        n,
+        n_footprints: n_fp,
+        n_hbm_25d,
+        area_per_chiplet: area,
+        logic_area: logic,
+        pe_per_chiplet: logic * c.compute_frac * c.mac_per_mm2,
+        sram_mb: logic * c.sram_frac * c.sram_mb_per_mm2,
+        feasible: true,
+    }
+}
+
+/// Peak ops/sec of one chiplet (eq. 4 numerator): PE_tot × f.
+pub fn chip_peak_ops(c: &Calib, geo: &Geometry) -> f64 {
+    geo.pe_per_chiplet * c.freq_ghz * 1e9
+}
+
+/// Communication latencies of the design point, ns.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Latencies {
+    /// Worst-case AI→AI over the 2.5D mesh (eq. 11 with H = m + n − 2).
+    pub ai2ai_ns: f64,
+    /// Worst-case HBM→AI (nearest-HBM supply).
+    pub hbm2ai_ns: f64,
+    /// Intra-pair 3D bond hop (logic-on-logic only).
+    pub bond_ns: f64,
+}
+
+/// Evaluate eq. (11) for the design point's links over the mesh `grid`.
+pub fn latencies(p: &DesignPoint, grid: &MeshGrid) -> Latencies {
+    latencies_from_stats(p, &HopStats::of(grid))
+}
+
+/// Evaluate eq. (11) from precomputed hop statistics (§Perf fast path).
+pub fn latencies_from_stats(p: &DesignPoint, stats: &HopStats) -> Latencies {
+    let d25 = LatencyParams::d25();
+    let d3 = LatencyParams::d3();
+    let ai = comm_latency_ns(&d25, stats.max_ai_hops, p.ai2ai_25d_gbps, p.ai2ai_25d_links);
+    let hbm = comm_latency_ns(&d25, stats.max_hbm_hops, p.ai2hbm_gbps, p.ai2hbm_links);
+    let bond = if p.arch == ArchType::LogicOnLogic {
+        comm_latency_ns(&d3, 1, p.ai2ai_3d_gbps, p.ai2ai_3d_links)
+    } else if p.arch == ArchType::MemOnLogic
+        && p.hbm_locs().contains(&HbmLoc::Stacked3D)
+    {
+        comm_latency_ns(&d3, 1, p.ai2ai_3d_gbps, p.ai2ai_3d_links)
+    } else {
+        0.0
+    };
+    Latencies {
+        ai2ai_ns: ai,
+        hbm2ai_ns: hbm + bond, // stacked supply crosses the bond too
+        bond_ns: bond,
+    }
+}
+
+/// Effective cycles per operation (eq. 5): one MAC cycle plus the supply
+/// latency amortized over `latency_hiding_ops` pipelined operations.
+pub fn cycles_per_op(c: &Calib, lat: &Latencies) -> f64 {
+    let supply_cycles = lat.hbm2ai_ns * c.freq_ghz; // ns × GHz = cycles
+    1.0 + supply_cycles / c.latency_hiding_ops
+}
+
+/// System throughput in ops/sec (eqs. 3–5), given the chiplet mapping
+/// efficiency `u_chip` (defaults to `calib.default_u_chip` in the env).
+pub fn system_ops_per_sec(
+    c: &Calib,
+    p: &DesignPoint,
+    geo: &Geometry,
+    lat: &Latencies,
+    u_chip: f64,
+) -> f64 {
+    if !geo.feasible {
+        return 0.0;
+    }
+    let peak = chip_peak_ops(c, geo);
+    let u_sys = bandwidth::u_sys(c, p, peak);
+    peak / cycles_per_op(c, lat) * u_chip * p.n_chiplets as f64 * u_sys
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::space::{DesignSpace, N_HEADS};
+
+    fn case_i_point() -> DesignPoint {
+        let space = DesignSpace::case_i();
+        let mut a = [0usize; N_HEADS];
+        a[0] = 2; // logic-on-logic
+        a[1] = 59; // 60
+        a[2] = 0b011110 - 1; // 4 HBMs
+        a[3] = 1;
+        a[4] = 19;
+        a[5] = 61;
+        a[7] = 0;
+        a[8] = 22;
+        a[9] = 31;
+        a[10] = 1;
+        a[11] = 19;
+        a[12] = 97;
+        space.decode(&a)
+    }
+
+    #[test]
+    fn geometry_matches_paper_die_sizes() {
+        // case (i): 30 footprints, 4 HBMs → ≈26 mm² dies;
+        let c = Calib::default();
+        let p = case_i_point();
+        let g = geometry(&c, &p);
+        assert!(g.feasible);
+        assert_eq!((g.m, g.n), (5, 6));
+        assert!(
+            (g.area_per_chiplet - 26.0).abs() < 1.0,
+            "area {} (paper 26)",
+            g.area_per_chiplet
+        );
+        // case (ii): 56 footprints → ≈14 mm²
+        let space = DesignSpace::case_ii();
+        let mut a = space.encode(&p);
+        a[1] = 111;
+        let p2 = space.decode(&a);
+        let g2 = geometry(&c, &p2);
+        assert_eq!((g2.m, g2.n), (7, 8));
+        assert!(
+            (g2.area_per_chiplet - 14.0).abs() < 0.7,
+            "area {} (paper 14)",
+            g2.area_per_chiplet
+        );
+    }
+
+    #[test]
+    fn logic_density_gain_over_25d_near_1_52x() {
+        // The headline: 3D logic-on-logic achieves ~1.52× the logic
+        // density of its 2.5D counterpart at the same package size.
+        let c = Calib::default();
+        let p3 = case_i_point();
+        let g3 = geometry(&c, &p3);
+        let total_3d = g3.logic_area * p3.n_chiplets as f64;
+
+        // 2.5D counterpart: same package, same HBMs, unstacked chiplets
+        // at the same die size (30 footprints).
+        let space = DesignSpace::case_i();
+        let mut a = space.encode(&p3);
+        a[0] = 0; // 2.5D
+        a[1] = 29; // 30 chiplets (one per footprint)
+        let p2 = space.decode(&a);
+        let g2 = geometry(&c, &p2);
+        let total_2d = g2.logic_area * p2.n_chiplets as f64;
+
+        let ratio = total_3d / total_2d;
+        assert!(
+            (1.35..=1.70).contains(&ratio),
+            "logic density ratio {ratio} (paper 1.52)"
+        );
+    }
+
+    #[test]
+    fn sram_capacity_sane() {
+        let c = Calib::default();
+        let g = geometry(&c, &case_i_point());
+        // 40% of ~21 mm² at 3.75 MB/mm² ≈ 31 MB per chiplet
+        assert!((20.0..45.0).contains(&g.sram_mb), "sram {}", g.sram_mb);
+    }
+
+    #[test]
+    fn infeasible_when_hbm_eats_package() {
+        let mut c = Calib::default();
+        c.hbm_area_mm2 = 300.0; // 4 stacks = 1200 mm² > package
+        let g = geometry(&c, &case_i_point());
+        assert!(!g.feasible);
+    }
+
+    #[test]
+    fn cycles_per_op_grows_with_latency() {
+        let c = Calib::default();
+        let lat_small = Latencies { ai2ai_ns: 1.0, hbm2ai_ns: 2.0, bond_ns: 0.0 };
+        let lat_big = Latencies { ai2ai_ns: 10.0, hbm2ai_ns: 30.0, bond_ns: 0.0 };
+        assert!(cycles_per_op(&c, &lat_big) > cycles_per_op(&c, &lat_small));
+        assert!(cycles_per_op(&c, &lat_small) >= 1.0);
+    }
+
+    #[test]
+    fn system_throughput_in_expected_band() {
+        // case (i) paper-optimum-like point lands in the ~150–260
+        // effective TMAC/s band (monolithic peak is ~198 TMAC/s; the
+        // chiplet system beats it at iso-area).
+        let c = Calib::default();
+        let p = case_i_point();
+        let geo = geometry(&c, &p);
+        let grid = MeshGrid::new(p.n_footprints(), &p.hbm_locs());
+        let lat = latencies(&p, &grid);
+        let t = system_ops_per_sec(&c, &p, &geo, &lat, c.default_u_chip) / 1e12;
+        assert!((120.0..300.0).contains(&t), "throughput {t} TMAC/s");
+    }
+
+    #[test]
+    fn more_chiplets_worse_per_chiplet_latency() {
+        let c = Calib::default();
+        let space = DesignSpace::case_ii();
+        let mut a = [0usize; N_HEADS];
+        a[0] = 2;
+        a[2] = 0b011110 - 1;
+        a[4] = 19;
+        a[5] = 61;
+        a[11] = 19;
+        a[12] = 97;
+        a[1] = 29; // 30 chiplets
+        let p30 = space.decode(&a);
+        a[1] = 119; // 120 chiplets
+        let p120 = space.decode(&a);
+        let g30 = MeshGrid::new(p30.n_footprints(), &p30.hbm_locs());
+        let g120 = MeshGrid::new(p120.n_footprints(), &p120.hbm_locs());
+        let l30 = latencies(&p30, &g30);
+        let l120 = latencies(&p120, &g120);
+        assert!(l120.ai2ai_ns > l30.ai2ai_ns);
+        assert!(cycles_per_op(&c, &l120) > cycles_per_op(&c, &l30));
+    }
+}

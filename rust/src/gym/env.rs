@@ -1,0 +1,203 @@
+//! The Chiplet-Gym environment implementation.
+
+use crate::cost::{evaluate, Calib, Evaluation};
+use crate::model::space::{DesignPoint, DesignSpace, N_HEADS};
+
+/// Observation dimensionality (paper Section 5.2.1: max package area,
+/// max area per chiplet, current area per chiplet, ai2ai latency, ai2hbm
+/// latency, communication energy, packaging cost, throughput — plus
+/// U_sys and chiplet count to make the state Markov over our decode).
+pub const OBS_DIM: usize = 10;
+
+/// One environment transition.
+#[derive(Clone, Debug)]
+pub struct Step {
+    pub obs: [f32; OBS_DIM],
+    pub reward: f64,
+    pub done: bool,
+    pub eval: Evaluation,
+}
+
+/// The Chiplet-Gym environment.
+///
+/// Episodes have fixed length (paper Section 5.2.1 trains with episode
+/// length 2 — Fig. 7 studies the effect); every step the agent emits a
+/// *complete* design point, the environment evaluates it analytically and
+/// returns eq. 17 as the reward. The environment also tracks the best
+/// design point it has ever evaluated: that argmax is the optimizer's
+/// actual output (Alg. 1 takes the best across agents).
+#[derive(Clone, Debug)]
+pub struct ChipletGymEnv {
+    pub space: DesignSpace,
+    pub calib: Calib,
+    pub episode_len: usize,
+    steps_in_episode: usize,
+    last_eval: Option<Evaluation>,
+    best_reward: f64,
+    best_point: Option<DesignPoint>,
+    total_steps: u64,
+}
+
+impl ChipletGymEnv {
+    pub fn new(space: DesignSpace, calib: Calib, episode_len: usize) -> ChipletGymEnv {
+        assert!(episode_len >= 1);
+        ChipletGymEnv {
+            space,
+            calib,
+            episode_len,
+            steps_in_episode: 0,
+            last_eval: None,
+            best_reward: f64::NEG_INFINITY,
+            best_point: None,
+            total_steps: 0,
+        }
+    }
+
+    /// Paper defaults: case (i) space, calibrated model, episode length
+    /// from Table 5 (2).
+    pub fn case_i() -> ChipletGymEnv {
+        Self::new(DesignSpace::case_i(), Calib::default(), 2)
+    }
+
+    pub fn case_ii() -> ChipletGymEnv {
+        Self::new(DesignSpace::case_ii(), Calib::default(), 2)
+    }
+
+    /// Reset to the start-of-episode observation (the neutral state:
+    /// only the static budget entries are non-zero).
+    pub fn reset(&mut self) -> [f32; OBS_DIM] {
+        self.steps_in_episode = 0;
+        self.last_eval = None;
+        self.observation()
+    }
+
+    /// Evaluate `action` (a 14-head MultiDiscrete sample), update state.
+    pub fn step(&mut self, action: &[usize]) -> Step {
+        assert_eq!(action.len(), N_HEADS);
+        let point = self.space.decode(action);
+        let eval = evaluate(&self.calib, &point);
+        if eval.reward > self.best_reward {
+            self.best_reward = eval.reward;
+            self.best_point = Some(point);
+        }
+        self.last_eval = Some(eval);
+        self.steps_in_episode += 1;
+        self.total_steps += 1;
+        let done = self.steps_in_episode >= self.episode_len;
+        let obs = self.observation();
+        if done {
+            // auto-reset bookkeeping happens in reset(); the caller sees
+            // the terminal observation first (gym semantics).
+        }
+        Step { obs, reward: eval.reward, done, eval }
+    }
+
+    /// Build the 10-dim observation from the last evaluation, normalized
+    /// to O(1) ranges for the tanh MLP.
+    pub fn observation(&self) -> [f32; OBS_DIM] {
+        let c = &self.calib;
+        let mut obs = [0f32; OBS_DIM];
+        obs[0] = (c.pkg_area_mm2 / 900.0) as f32;
+        obs[1] = (c.max_chiplet_area_mm2 / 400.0) as f32;
+        if let Some(e) = &self.last_eval {
+            obs[2] = (e.area_per_chiplet / 400.0) as f32;
+            obs[3] = (e.l_ai2ai_ns / 50.0) as f32;
+            obs[4] = (e.l_hbm2ai_ns / 50.0) as f32;
+            obs[5] = (e.e_comm_pj / 10.0) as f32;
+            obs[6] = (e.pkg_cost / 50.0) as f32;
+            obs[7] = (e.throughput_tops / 300.0) as f32;
+            obs[8] = e.u_sys as f32;
+            obs[9] = (e.n_footprints as f64 / 128.0) as f32;
+        }
+        obs
+    }
+
+    /// Best (reward, design point) discovered so far.
+    pub fn best(&self) -> Option<(f64, &DesignPoint)> {
+        self.best_point.as_ref().map(|p| (self.best_reward, p))
+    }
+
+    pub fn total_steps(&self) -> u64 {
+        self.total_steps
+    }
+
+    /// Evaluate a raw action without advancing the episode (used by SA
+    /// and the exhaustive combiner, which are not episodic).
+    pub fn peek(&self, action: &[usize]) -> Evaluation {
+        evaluate(&self.calib, &self.space.decode(action))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn episode_terminates_at_length() {
+        let mut env = ChipletGymEnv::case_i();
+        let mut rng = Rng::new(0);
+        env.reset();
+        let a = env.space.random_action(&mut rng);
+        let s1 = env.step(&a);
+        assert!(!s1.done);
+        let s2 = env.step(&a);
+        assert!(s2.done);
+        env.reset();
+        let s3 = env.step(&a);
+        assert!(!s3.done);
+    }
+
+    #[test]
+    fn reward_matches_direct_evaluation() {
+        let mut env = ChipletGymEnv::case_i();
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let a = env.space.random_action(&mut rng);
+            let direct = env.peek(&a);
+            let step = env.step(&a);
+            assert_eq!(step.reward, direct.reward);
+        }
+    }
+
+    #[test]
+    fn best_tracks_argmax() {
+        let mut env = ChipletGymEnv::case_i();
+        let mut rng = Rng::new(2);
+        let mut best = f64::NEG_INFINITY;
+        for _ in 0..500 {
+            let a = env.space.random_action(&mut rng);
+            let s = env.step(&a);
+            best = best.max(s.reward);
+        }
+        let (tracked, _) = env.best().unwrap();
+        assert_eq!(tracked, best);
+    }
+
+    #[test]
+    fn observation_is_finite_and_bounded() {
+        let mut env = ChipletGymEnv::case_ii();
+        let mut rng = Rng::new(3);
+        env.reset();
+        for _ in 0..200 {
+            let a = env.space.random_action(&mut rng);
+            let s = env.step(&a);
+            for (i, &x) in s.obs.iter().enumerate() {
+                assert!(x.is_finite(), "obs[{i}] not finite");
+                assert!(x.abs() < 100.0, "obs[{i}] = {x} unnormalized");
+            }
+        }
+    }
+
+    #[test]
+    fn reset_clears_dynamic_observation() {
+        let mut env = ChipletGymEnv::case_i();
+        let mut rng = Rng::new(4);
+        let a = env.space.random_action(&mut rng);
+        env.step(&a);
+        let obs = env.reset();
+        assert_eq!(obs[2], 0.0);
+        assert_eq!(obs[7], 0.0);
+        assert!(obs[0] > 0.0); // static budget entries survive
+    }
+}

@@ -1,0 +1,10 @@
+//! The Chiplet-Gym environment — Section 4.1 of the paper.
+//!
+//! A faithful Rust port of the paper's OpenAI-Gym environment: the
+//! analytical simulator of Section 3 wrapped in a reset/step interface
+//! with a MultiDiscrete action space (Table 1), a 10-dim Box observation
+//! (Section 5.2.1) and the reward r = αT − βC − γE (eq. 17).
+
+pub mod env;
+
+pub use env::{ChipletGymEnv, Step, OBS_DIM};

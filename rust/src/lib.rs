@@ -1,0 +1,49 @@
+//! # Chiplet-Gym
+//!
+//! Production reproduction of *Chiplet-Gym: Optimizing Chiplet-based AI
+//! Accelerator Design with Reinforcement Learning* (Mishty & Sadi, 2024) as
+//! a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate is the **Layer-3 coordinator**: it owns the analytical PPAC
+//! model (paper Section 3), the Chiplet-Gym environment (Section 4.1), the
+//! simulated-annealing and PPO optimizers (Sections 4.1–4.2, Algorithms
+//! 1–2), and the benchmark harness that regenerates every table and figure
+//! of the paper's evaluation (Section 5). The PPO policy/value network —
+//! the compute hot-spot — is authored in JAX/Pallas (Layers 2/1 under
+//! `python/compile/`), AOT-lowered once to HLO text, and executed from the
+//! [`runtime`] module via the PJRT C API. Python never runs at
+//! optimization time.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`util`] — zero-dependency substrate: PCG RNG, mini-JSON, stats, CLI,
+//!   tables, a criterion-lite bench harness and a proptest-lite framework.
+//! * [`model`] — the design space of Table 1 and the packaging-technology
+//!   tables (Tables 3–4).
+//! * [`mesh`] — 2D-mesh Network-on-Package hop/latency model (Fig. 4).
+//! * [`cost`] — analytical PPAC model: yield (eq. 8–9), die cost, package
+//!   cost (eq. 16), throughput (eq. 1–5), bandwidth (eq. 12–14), energy
+//!   (eq. 6–7, 15).
+//! * [`workloads`] — MLPerf workload models (Table 7), mapping (Fig. 5)
+//!   and the monolithic-GPU baseline used by Fig. 12.
+//! * [`gym`] — the Chiplet-Gym environment: MultiDiscrete action space,
+//!   10-dim observation, reward `r = αT − βC − γE` (eq. 17).
+//! * [`opt`] — simulated annealing (Alg. 2), random search, and the
+//!   combined Alg. 1 driver.
+//! * [`rl`] — PPO (Table 5 hyper-parameters): rollouts, GAE, MultiDiscrete
+//!   sampling and the Adam-step loop over the AOT'd HLO update.
+//! * [`runtime`] — PJRT client wrapper: loads `artifacts/*.hlo.txt`,
+//!   compiles once, executes on the hot path.
+//! * [`report`] — CSV/series emitters used by the per-figure benches.
+
+pub mod config;
+pub mod cost;
+pub mod gym;
+pub mod mesh;
+pub mod model;
+pub mod opt;
+pub mod report;
+pub mod rl;
+pub mod runtime;
+pub mod util;
+pub mod workloads;

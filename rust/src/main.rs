@@ -1,0 +1,291 @@
+//! `chiplet-gym` — the Layer-3 launcher.
+//!
+//! Subcommands:
+//!   optimize   Algorithm 1: N SA instances + N PPO agents, argmax.
+//!   sa         Simulated annealing only (no artifacts needed).
+//!   ppo        Train one PPO agent, print the convergence trace.
+//!   eval       Evaluate one design point (defaults to Table 6 case i).
+//!   mlperf     Fig. 12 comparison: chiplet systems vs monolithic GPU.
+//!   info       Show artifact manifest + PJRT platform.
+//!
+//! Common flags: --case i|ii, --seeds 0,1,2, --sa-iters N,
+//! --timesteps N, --alpha/--beta/--gamma, --config path.json.
+
+use anyhow::Result;
+
+use chiplet_gym::config::RunConfig;
+use chiplet_gym::cost::{evaluate, Calib};
+use chiplet_gym::gym::ChipletGymEnv;
+use chiplet_gym::model::space::{DesignSpace, N_HEADS};
+use chiplet_gym::opt::combined::{combined_optimize, sa_only_optimize, CombinedConfig};
+use chiplet_gym::opt::sa::simulated_annealing;
+use chiplet_gym::rl::{train_ppo, PpoConfig};
+use chiplet_gym::runtime::Engine;
+use chiplet_gym::util::cli::Args;
+use chiplet_gym::util::table::{fnum, Table};
+use chiplet_gym::workloads::{mapping, mlperf::mlperf_suite, Monolithic};
+
+use chiplet_gym::model::space::paper_points::table6_case_i as table6_case_i_action;
+
+fn print_design(space: &DesignSpace, calib: &Calib, action: &[usize]) {
+    let p = space.decode(action);
+    let e = evaluate(calib, &p);
+    let mut t = Table::new(["parameter", "value"]);
+    t.row(["Architecture type", p.arch.name()]);
+    t.row([
+        "No. of chiplets".to_string(),
+        format!(
+            "{} ({} footprints in {}x{} mesh)",
+            p.n_chiplets, e.n_footprints, e.mesh_m, e.mesh_n
+        ),
+    ]);
+    t.row([
+        "No. & location of HBMs".to_string(),
+        format!("{} @ {:?}", p.n_hbm(), p.hbm_locs()),
+    ]);
+    t.row(["AI2AI interconnect 2.5D", p.ai2ai_25d.props().name]);
+    t.row([
+        "AI2AI data rate / links 2.5D".to_string(),
+        format!(
+            "{} Gbps x {} = {:.1} Tbps",
+            p.ai2ai_25d_gbps,
+            p.ai2ai_25d_links,
+            p.bw_ai2ai_25d_tbps()
+        ),
+    ]);
+    t.row([
+        "AI2AI trace length 2.5D".to_string(),
+        format!("{} mm", p.ai2ai_25d_trace_mm),
+    ]);
+    if p.arch.uses_3d() {
+        t.row(["AI2AI interconnect 3D", p.ai2ai_3d.props().name]);
+        t.row([
+            "AI2AI data rate / links 3D".to_string(),
+            format!(
+                "{} Gbps x {} = {:.1} Tbps",
+                p.ai2ai_3d_gbps,
+                p.ai2ai_3d_links,
+                p.bw_ai2ai_3d_tbps()
+            ),
+        ]);
+    }
+    t.row(["AI2HBM interconnect 2.5D", p.ai2hbm.props().name]);
+    t.row([
+        "AI2HBM data rate / links".to_string(),
+        format!(
+            "{} Gbps x {} = {:.1} Tbps",
+            p.ai2hbm_gbps,
+            p.ai2hbm_links,
+            p.bw_ai2hbm_tbps()
+        ),
+    ]);
+    t.print();
+
+    let mut m = Table::new(["metric", "value"]);
+    m.row(["feasible".to_string(), format!("{}", e.feasible)]);
+    m.row(["area per chiplet (mm2)".to_string(), fnum(e.area_per_chiplet)]);
+    m.row(["logic area (mm2)".to_string(), fnum(e.logic_area)]);
+    m.row(["PEs per chiplet".to_string(), fnum(e.pe_per_chiplet)]);
+    m.row(["SRAM per chiplet (MB)".to_string(), fnum(e.sram_mb)]);
+    m.row(["die yield".to_string(), format!("{:.3}", e.die_yield)]);
+    m.row(["L AI2AI (ns)".to_string(), fnum(e.l_ai2ai_ns)]);
+    m.row(["L HBM2AI (ns)".to_string(), fnum(e.l_hbm2ai_ns)]);
+    m.row(["U_sys".to_string(), format!("{:.3}", e.u_sys)]);
+    m.row(["peak (TMAC/s)".to_string(), fnum(e.peak_tops)]);
+    m.row(["throughput (TMAC/s)".to_string(), fnum(e.throughput_tops)]);
+    m.row(["E_op (pJ)".to_string(), fnum(e.e_op_pj)]);
+    m.row(["die cost (norm)".to_string(), fnum(e.die_cost)]);
+    m.row(["package cost (norm)".to_string(), fnum(e.pkg_cost)]);
+    m.row(["reward (eq. 17)".to_string(), fnum(e.reward)]);
+    m.print();
+}
+
+fn cmd_eval(cfg: &RunConfig, args: &Args) {
+    let space = cfg.space();
+    let action = if let Some(spec) = args.get("action") {
+        let parts: Vec<usize> = spec
+            .split(',')
+            .map(|p| p.trim().parse().expect("--action must be 14 ints"))
+            .collect();
+        assert_eq!(parts.len(), N_HEADS, "--action needs 14 comma-separated heads");
+        let mut a = [0usize; N_HEADS];
+        a.copy_from_slice(&parts);
+        a
+    } else {
+        table6_case_i_action()
+    };
+    print_design(&space, &cfg.calib, &action);
+}
+
+fn cmd_sa(cfg: &RunConfig) {
+    let space = cfg.space();
+    println!(
+        "SA over {:.2e} design points: {} iters, temp {}, step {}",
+        cfg.space().cardinality(),
+        cfg.sa.iterations,
+        cfg.sa.temperature,
+        cfg.sa.step_size
+    );
+    if cfg.sa_seeds.len() == 1 {
+        let trace = simulated_annealing(&space, &cfg.calib, &cfg.sa, cfg.sa_seeds[0]);
+        println!("best objective: {:.2}", trace.best_eval.reward);
+        print_design(&space, &cfg.calib, &trace.best_action);
+    } else {
+        let out = sa_only_optimize(space, &cfg.calib, &cfg.sa, &cfg.sa_seeds);
+        for c in &out.candidates {
+            println!("  SA seed {:3}: {:.2}", c.seed, c.eval.reward);
+        }
+        println!("best objective: {:.2}", out.best.eval.reward);
+        print_design(&space, &cfg.calib, &out.best.action);
+    }
+}
+
+fn cmd_ppo(cfg: &RunConfig) -> Result<()> {
+    let engine = Engine::discover()?;
+    let mut ppo = PpoConfig::from_manifest(&engine);
+    ppo.total_timesteps = cfg.ppo_total_timesteps;
+    ppo.episode_len = cfg.ppo_episode_len;
+    ppo.ent_coef = cfg.ppo_ent_coef;
+    let seed = *cfg.rl_seeds.first().unwrap_or(&0);
+    let mut env = ChipletGymEnv::new(cfg.space(), cfg.calib.clone(), ppo.episode_len);
+    println!(
+        "PPO: {} timesteps, n_steps {}, minibatch {}, {} epochs, ent {}",
+        ppo.total_timesteps, ppo.n_steps, ppo.batch_size, ppo.n_epoch, ppo.ent_coef
+    );
+    let t0 = std::time::Instant::now();
+    let trace = train_ppo(&engine, &mut env, &ppo, seed)?;
+    for s in &trace.history {
+        println!(
+            "  steps {:>7}  ep_rew_mean {:>9.2}  cost_value {:>8.2}  kl {:.4}",
+            s.timesteps, s.ep_rew_mean, s.cost_value, s.approx_kl
+        );
+    }
+    println!(
+        "trained in {:.1}s; best objective {:.2}",
+        t0.elapsed().as_secs_f64(),
+        trace.best_reward
+    );
+    print_design(&cfg.space(), &cfg.calib, &trace.best_action);
+    Ok(())
+}
+
+fn cmd_optimize(cfg: &RunConfig) -> Result<()> {
+    let engine = Engine::discover()?;
+    let mut ppo = PpoConfig::from_manifest(&engine);
+    ppo.total_timesteps = cfg.ppo_total_timesteps;
+    ppo.episode_len = cfg.ppo_episode_len;
+    ppo.ent_coef = cfg.ppo_ent_coef;
+    let combined = CombinedConfig {
+        sa: cfg.sa,
+        ppo,
+        sa_seeds: cfg.sa_seeds.clone(),
+        rl_seeds: cfg.rl_seeds.clone(),
+    };
+    let t0 = std::time::Instant::now();
+    let out = combined_optimize(&engine, cfg.space(), &cfg.calib, &combined)?;
+    for c in &out.candidates {
+        println!("  {:>6} seed {:3}: {:.2}", c.source, c.seed, c.eval.reward);
+    }
+    println!(
+        "Algorithm 1 finished in {:.1}s; winner: {} seed {} @ {:.2}",
+        t0.elapsed().as_secs_f64(),
+        out.best.source,
+        out.best.seed,
+        out.best.eval.reward
+    );
+    print_design(&cfg.space(), &cfg.calib, &out.best.action);
+    Ok(())
+}
+
+fn cmd_mlperf(cfg: &RunConfig) {
+    let calib = &cfg.calib;
+    let mono = Monolithic::new(calib);
+    let space_i = DesignSpace::case_i();
+    let chip = space_i.decode(&table6_case_i_action());
+    let e = evaluate(calib, &chip);
+
+    let mut t = Table::new([
+        "benchmark", "mono inf/s", "chiplet inf/s", "speedup",
+        "mono inf/J", "chiplet inf/J", "eff gain",
+    ]);
+    for w in mlperf_suite() {
+        let m_rate = mono.tasks_per_sec(calib, &w);
+        let m_eff = mono.tasks_per_joule(&w);
+        let u = mapping::u_chip(e.pe_per_chiplet, chip.n_chiplets, &w);
+        let chip_tops = e.throughput_tops / calib.default_u_chip * u;
+        let c_rate = chip_tops * 1e12 / (w.gmac_per_task() * 1e9);
+        let c_eff = 1.0 / (e.e_op_pj * w.gmac_per_task() * 1e-3);
+        t.row([
+            w.name.to_string(),
+            fnum(m_rate),
+            fnum(c_rate),
+            format!("{:.2}x", c_rate / m_rate),
+            fnum(m_eff),
+            fnum(c_eff),
+            format!("{:.2}x", c_eff / m_eff),
+        ]);
+    }
+    t.print();
+    println!(
+        "die cost: chiplet {} vs mono {} ({:.3}x); package cost {:.1} vs {:.1} ({:.2}x)",
+        fnum(e.die_cost),
+        fnum(mono.die_cost),
+        e.die_cost / mono.die_cost,
+        e.pkg_cost,
+        mono.pkg_cost,
+        e.pkg_cost / mono.pkg_cost,
+    );
+}
+
+fn cmd_info() -> Result<()> {
+    let engine = Engine::discover()?;
+    let m = &engine.manifest;
+    println!("platform: {}", engine.platform());
+    println!("artifacts: {}", engine.artifact_dir().display());
+    println!(
+        "network: obs {} -> {}x{} tanh -> {} logits ({} heads) + value",
+        m.obs_dim, m.hidden, m.hidden, m.act_total, m.n_heads
+    );
+    println!("params: {}", m.param_count);
+    println!(
+        "PPO (Table 5): n_steps {} batch {} epochs {} lr {} clip {} ent {}",
+        m.hyper.n_steps,
+        m.hyper.batch_size,
+        m.hyper.n_epoch,
+        m.hyper.learning_rate,
+        m.hyper.clip_range,
+        m.hyper.ent_coef
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::load(std::path::Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    cfg.apply_args(&args);
+
+    match args.command.as_deref() {
+        Some("optimize") => cmd_optimize(&cfg)?,
+        Some("sa") => cmd_sa(&cfg),
+        Some("ppo") => cmd_ppo(&cfg)?,
+        Some("eval") => cmd_eval(&cfg, &args),
+        Some("mlperf") => cmd_mlperf(&cfg),
+        Some("info") => cmd_info()?,
+        other => {
+            if let Some(cmd) = other {
+                eprintln!("unknown command {cmd:?}\n");
+            }
+            eprintln!(
+                "usage: chiplet-gym <optimize|sa|ppo|eval|mlperf|info> \
+                 [--case i|ii] [--seeds 0,1,..] [--sa-iters N] \
+                 [--timesteps N] [--episode-len N] [--ent-coef X] \
+                 [--alpha X --beta X --gamma X] [--config file.json]"
+            );
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,284 @@
+//! Mesh geometry: footprint grid dimensions and hop-count computation.
+
+use crate::model::space::HbmLoc;
+
+/// Most-square factorization of `n` footprints into an m×n mesh
+/// (m ≤ n, m·n = n_footprints). The paper keeps the aspect ratio "as
+/// close as possible to 1" (Section 3.3.2); 30 → 5×6, 56 → 7×8 exactly
+/// as Table 6 reports.
+pub fn mesh_dims(n_footprints: usize) -> (usize, usize) {
+    assert!(n_footprints >= 1);
+    let mut m = (n_footprints as f64).sqrt() as usize;
+    while m >= 1 {
+        if n_footprints % m == 0 {
+            return (m, n_footprints / m);
+        }
+        m -= 1;
+    }
+    (1, n_footprints)
+}
+
+/// An m×n mesh of AI footprints with a set of HBM attach points.
+///
+/// Coordinates are (row, col) with row ∈ [0, m), col ∈ [0, n). Edge HBMs
+/// attach adjacent to the midpoint of their edge; `Middle` attaches next
+/// to the center tile; `Stacked3D` sits vertically on the center tile
+/// (zero lateral hops from its host).
+#[derive(Clone, Debug)]
+pub struct MeshGrid {
+    pub m: usize,
+    pub n: usize,
+    /// (attach tile, extra lateral hops to reach the HBM from that tile)
+    attach: Vec<((usize, usize), usize)>,
+}
+
+impl MeshGrid {
+    pub fn new(n_footprints: usize, hbm_locs: &[HbmLoc]) -> MeshGrid {
+        let (m, n) = mesh_dims(n_footprints);
+        let attach = hbm_locs
+            .iter()
+            .map(|&loc| {
+                let tile = match loc {
+                    HbmLoc::Left => (m / 2, 0),
+                    HbmLoc::Right => (m / 2, n - 1),
+                    HbmLoc::Top => (0, n / 2),
+                    HbmLoc::Bottom => (m - 1, n / 2),
+                    HbmLoc::Middle => (m / 2, n / 2),
+                    HbmLoc::Stacked3D => (m / 2, n / 2),
+                };
+                // Edge/middle HBMs are one package hop away from their
+                // attach tile; a stacked HBM is directly on top of it.
+                let extra = if loc == HbmLoc::Stacked3D { 0 } else { 1 };
+                (tile, extra)
+            })
+            .collect();
+        MeshGrid { m, n, attach }
+    }
+
+    /// Longest AI→AI hop count: H = m + n − 2 (eq. 11 context).
+    pub fn max_ai_hops(&self) -> usize {
+        self.m + self.n - 2
+    }
+
+    /// Mean AI→AI Manhattan distance over all ordered tile pairs
+    /// (average-case traffic distance; used for energy-weighted hops).
+    pub fn mean_ai_hops(&self) -> f64 {
+        // E[|Δrow|] over an m-line = (m² − 1) / (3m); rows/cols independent.
+        let e = |k: usize| {
+            let k = k as f64;
+            (k * k - 1.0) / (3.0 * k)
+        };
+        e(self.m) + e(self.n)
+    }
+
+    /// Hop distance from tile (r, c) to its *nearest* HBM attach point.
+    pub fn hbm_hops_from(&self, r: usize, c: usize) -> usize {
+        self.attach
+            .iter()
+            .map(|&((ar, ac), extra)| {
+                ar.abs_diff(r) + ac.abs_diff(c) + extra
+            })
+            .min()
+            .expect("at least one HBM attach point")
+    }
+
+    /// Worst-case HBM→AI hop count over all tiles (the paper's Fig. 4
+    /// "highest latency" metric).
+    pub fn max_hbm_hops(&self) -> usize {
+        (0..self.m)
+            .flat_map(|r| (0..self.n).map(move |c| (r, c)))
+            .map(|(r, c)| self.hbm_hops_from(r, c))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Mean HBM→AI hop count over all tiles (average supply distance).
+    pub fn mean_hbm_hops(&self) -> f64 {
+        let total: usize = (0..self.m)
+            .flat_map(|r| (0..self.n).map(move |c| (r, c)))
+            .map(|(r, c)| self.hbm_hops_from(r, c))
+            .sum();
+        total as f64 / (self.m * self.n) as f64
+    }
+
+    /// Number of 2.5D mesh edges between footprints: m(n−1) + n(m−1).
+    pub fn n_edges(&self) -> usize {
+        self.m * (self.n - 1) + self.n * (self.m - 1)
+    }
+}
+
+/// Precomputed hop statistics of one (footprint count, HBM mask) pair.
+#[derive(Clone, Copy, Debug)]
+pub struct HopStats {
+    pub m: usize,
+    pub n: usize,
+    pub max_ai_hops: usize,
+    pub mean_ai_hops: f64,
+    pub max_hbm_hops: usize,
+    pub mean_hbm_hops: f64,
+    pub n_edges: usize,
+}
+
+const MAX_FOOTPRINTS: usize = 128;
+
+/// Memoized hop statistics (§Perf): `evaluate()` is the SA inner loop and
+/// the mesh scan over m×n tiles dominated it; the domain is only
+/// 128 footprint counts × 63 masks, so the whole table is precomputed on
+/// first use (~8K entries).
+pub fn hop_stats(n_footprints: usize, hbm_mask: u8) -> HopStats {
+    use crate::model::space::HBM_LOCS;
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<Vec<HopStats>> = OnceLock::new();
+    debug_assert!((1..=63).contains(&hbm_mask));
+    if n_footprints > MAX_FOOTPRINTS {
+        // out-of-table fallback (not reachable from the Table 1 space)
+        return compute_stats(n_footprints, hbm_mask);
+    }
+    let table = TABLE.get_or_init(|| {
+        let mut v = Vec::with_capacity(MAX_FOOTPRINTS * 63);
+        for fp in 1..=MAX_FOOTPRINTS {
+            for mask in 1..=63u8 {
+                v.push(compute_stats(fp, mask));
+            }
+        }
+        let _ = &HBM_LOCS; // table covers every mask over these locations
+        v
+    });
+    table[(n_footprints - 1) * 63 + (hbm_mask as usize - 1)]
+}
+
+fn compute_stats(n_footprints: usize, hbm_mask: u8) -> HopStats {
+    use crate::model::space::HBM_LOCS;
+    let locs: Vec<_> = HBM_LOCS
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| hbm_mask & (1 << i) != 0)
+        .map(|(_, &l)| l)
+        .collect();
+    HopStats::of(&MeshGrid::new(n_footprints, &locs))
+}
+
+impl HopStats {
+    /// Collect the statistics of a constructed grid.
+    pub fn of(g: &MeshGrid) -> HopStats {
+        HopStats {
+            m: g.m,
+            n: g.n,
+            max_ai_hops: g.max_ai_hops(),
+            mean_ai_hops: g.mean_ai_hops(),
+            max_hbm_hops: g.max_hbm_hops(),
+            mean_hbm_hops: g.mean_hbm_hops(),
+            n_edges: g.n_edges(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::space::HbmLoc::*;
+
+    #[test]
+    fn dims_match_paper_table6() {
+        assert_eq!(mesh_dims(30), (5, 6)); // case (i): 60 chiplets, 30 pairs
+        assert_eq!(mesh_dims(56), (7, 8)); // case (ii): 112 chiplets, 56 pairs
+        assert_eq!(mesh_dims(1), (1, 1));
+        assert_eq!(mesh_dims(7), (1, 7)); // primes degrade to a line
+        assert_eq!(mesh_dims(64), (8, 8));
+    }
+
+    #[test]
+    fn max_ai_hops_is_m_plus_n_minus_2() {
+        let g = MeshGrid::new(30, &[Left]);
+        assert_eq!(g.max_ai_hops(), 5 + 6 - 2);
+    }
+
+    #[test]
+    fn more_hbms_reduce_worst_case_supply_distance() {
+        // Fig. 4: going from one corner-ish HBM to 5 spread HBMs cuts the
+        // worst-case hops roughly in half.
+        let one = MeshGrid::new(30, &[Left]);
+        let five = MeshGrid::new(30, &[Left, Right, Top, Bottom, Middle]);
+        assert!(five.max_hbm_hops() < one.max_hbm_hops());
+        assert!(five.max_hbm_hops() <= one.max_hbm_hops() / 2 + 1);
+    }
+
+    #[test]
+    fn fig4_style_hop_counts() {
+        // A 4x4 mesh (16 footprints) as in Fig. 4's illustration:
+        let left_only = MeshGrid::new(16, &[Left]);
+        // Farthest tile from a left-edge attach: cross all 3 cols + rows.
+        assert!(left_only.max_hbm_hops() >= 5);
+        let spread = MeshGrid::new(16, &[Left, Right, Top, Bottom, Middle]);
+        assert!(spread.max_hbm_hops() <= 3);
+    }
+
+    #[test]
+    fn stacked_hbm_is_closer_than_edge_hbm() {
+        let stacked = MeshGrid::new(30, &[Stacked3D]);
+        let middle = MeshGrid::new(30, &[Middle]);
+        assert!(stacked.max_hbm_hops() < middle.max_hbm_hops());
+        assert!(stacked.mean_hbm_hops() < middle.mean_hbm_hops());
+    }
+
+    #[test]
+    fn mean_hops_below_max() {
+        let g = MeshGrid::new(42, &[Left, Top]);
+        assert!(g.mean_hbm_hops() <= g.max_hbm_hops() as f64);
+        assert!(g.mean_ai_hops() <= g.max_ai_hops() as f64);
+    }
+
+    #[test]
+    fn mean_ai_hops_closed_form_matches_bruteforce() {
+        for &fp in &[4usize, 6, 12, 30] {
+            let g = MeshGrid::new(fp, &[Left]);
+            let (m, n) = (g.m, g.n);
+            let mut total = 0usize;
+            let mut count = 0usize;
+            for r1 in 0..m {
+                for c1 in 0..n {
+                    for r2 in 0..m {
+                        for c2 in 0..n {
+                            total += r1.abs_diff(r2) + c1.abs_diff(c2);
+                            count += 1;
+                        }
+                    }
+                }
+            }
+            let brute = total as f64 / count as f64;
+            assert!(
+                (brute - g.mean_ai_hops()).abs() < 1e-9,
+                "fp={fp} brute={brute} closed={}",
+                g.mean_ai_hops()
+            );
+        }
+    }
+
+    #[test]
+    fn edge_count() {
+        let g = MeshGrid::new(30, &[Left]);
+        assert_eq!(g.n_edges(), 5 * 5 + 6 * 4);
+    }
+
+    #[test]
+    fn hop_stats_table_matches_direct_computation() {
+        for &(fp, mask) in &[(1usize, 1u8), (30, 0b011110), (56, 0b011011), (128, 63)] {
+            let stats = hop_stats(fp, mask);
+            let direct = compute_stats(fp, mask);
+            assert_eq!(stats.m, direct.m);
+            assert_eq!(stats.max_ai_hops, direct.max_ai_hops);
+            assert_eq!(stats.max_hbm_hops, direct.max_hbm_hops);
+            assert!((stats.mean_hbm_hops - direct.mean_hbm_hops).abs() < 1e-12);
+            assert_eq!(stats.n_edges, direct.n_edges);
+        }
+    }
+
+    #[test]
+    fn latency_grows_with_chiplet_count() {
+        // Fig. 3(b): worst-case hops grow with the number of chiplets.
+        let h8 = MeshGrid::new(8, &[Left]).max_ai_hops();
+        let h32 = MeshGrid::new(32, &[Left]).max_ai_hops();
+        let h128 = MeshGrid::new(128, &[Left]).max_ai_hops();
+        assert!(h8 < h32 && h32 < h128);
+    }
+}

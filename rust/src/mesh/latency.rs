@@ -1,0 +1,107 @@
+//! Hop latency model — eq. (11) of the paper.
+//!
+//! L = H·t_w + H·t_r + T_c + T_s
+//!
+//! * t_w — per-hop wire delay (Table 3: 17.2 ps for 2.5D, 1.6 ps for 3D);
+//! * t_r — per-hop router traversal (a design-time constant; we use a
+//!   3-stage router at the accelerator clock, ≈ 1 ns at 1 GHz — Kite-class
+//!   interposer routers [29] report 2–4 cycles);
+//! * T_c — contention delay, workload dependent; modeled as a fractional
+//!   extra router wait per intermediate hop (ρ · (H−1) · t_r);
+//! * T_s — serialization delay: packet bits over aggregate link bandwidth.
+
+/// Latency model constants.
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyParams {
+    /// Per-hop wire delay, ps (Table 3).
+    pub t_w_ps: f64,
+    /// Per-hop router delay, ps.
+    pub t_r_ps: f64,
+    /// Contention factor ρ: expected extra router waits per intermediate
+    /// hop (0 = uncontended).
+    pub contention_rho: f64,
+    /// Packet size in bits for serialization delay (one flit burst).
+    pub packet_bits: f64,
+}
+
+impl LatencyParams {
+    /// 2.5D defaults (Table 3 + Kite-class router).
+    pub fn d25() -> LatencyParams {
+        LatencyParams {
+            t_w_ps: super::super::model::packaging::HOP_WIRE_DELAY_25D_PS,
+            t_r_ps: 1000.0,
+            contention_rho: 0.3,
+            packet_bits: 512.0,
+        }
+    }
+
+    /// 3D (vertical) defaults.
+    pub fn d3() -> LatencyParams {
+        LatencyParams {
+            t_w_ps: super::super::model::packaging::HOP_WIRE_DELAY_3D_PS,
+            t_r_ps: 1000.0,
+            contention_rho: 0.0, // point-to-point vertical link, no mesh
+            packet_bits: 512.0,
+        }
+    }
+}
+
+/// End-to-end latency of an `hops`-hop transfer over links with aggregate
+/// bandwidth `dr_gbps × links`, in nanoseconds (eq. 11).
+pub fn comm_latency_ns(p: &LatencyParams, hops: usize, dr_gbps: f64, links: usize) -> f64 {
+    let h = hops as f64;
+    let wire = h * p.t_w_ps * 1e-3;
+    let router = h * p.t_r_ps * 1e-3;
+    let contention = p.contention_rho * (h - 1.0).max(0.0) * p.t_r_ps * 1e-3;
+    // Serialization: bits / (Gbps * links) = ns
+    let bw_gbps = (dr_gbps * links as f64).max(1e-9);
+    let serialization = p.packet_bits / bw_gbps;
+    wire + router + contention + serialization
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_monotone_in_hops() {
+        let p = LatencyParams::d25();
+        let l1 = comm_latency_ns(&p, 1, 20.0, 1000);
+        let l9 = comm_latency_ns(&p, 9, 20.0, 1000);
+        assert!(l9 > l1 * 5.0);
+    }
+
+    #[test]
+    fn three_d_hop_is_much_faster() {
+        // Per-hop wire delay ratio 17.2/1.6 > 10x; with equal router cost
+        // a single 3D hop is still cheaper.
+        let l25 = comm_latency_ns(&LatencyParams::d25(), 1, 40.0, 3000);
+        let l3 = comm_latency_ns(&LatencyParams::d3(), 1, 40.0, 3000);
+        assert!(l3 < l25);
+    }
+
+    #[test]
+    fn serialization_dominates_for_thin_links() {
+        let p = LatencyParams::d25();
+        let thin = comm_latency_ns(&p, 1, 1.0, 50); // 50 Gbps aggregate
+        let fat = comm_latency_ns(&p, 1, 20.0, 5000); // 100 Tbps aggregate
+        assert!(thin > fat * 2.0, "thin={thin} fat={fat}");
+    }
+
+    #[test]
+    fn zero_hop_has_only_serialization() {
+        let p = LatencyParams::d3();
+        let l = comm_latency_ns(&p, 0, 42.0, 3200);
+        assert!((l - 512.0 / (42.0 * 3200.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn contention_adds_only_on_intermediate_hops() {
+        let mut p = LatencyParams::d25();
+        p.contention_rho = 1.0;
+        let one_hop = comm_latency_ns(&p, 1, 20.0, 1000);
+        p.contention_rho = 0.0;
+        let one_hop_nc = comm_latency_ns(&p, 1, 20.0, 1000);
+        assert!((one_hop - one_hop_nc).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,13 @@
+//! 2D-mesh Network-on-Package model (Sections 3.3.2 and Fig. 4).
+//!
+//! The AI-chiplet footprints form an m×n mesh; HBM stacks attach at up to
+//! six locations around/on the mesh. [`grid`] computes hop counts
+//! (H_{AI-AI} = m + n − 2 for the farthest pair, and per-tile distances to
+//! the nearest HBM attach point, reproducing the 6-hop → 3-hop improvement
+//! of Fig. 4); [`latency`] turns hops into nanoseconds via eq. (11).
+
+pub mod grid;
+pub mod latency;
+
+pub use grid::{mesh_dims, MeshGrid};
+pub use latency::{comm_latency_ns, LatencyParams};

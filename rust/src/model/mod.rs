@@ -1,0 +1,8 @@
+//! Domain model: the design space of Table 1 and the packaging-technology
+//! property tables (Tables 3–4) of the paper.
+
+pub mod packaging;
+pub mod space;
+
+pub use packaging::{ArchClass, Interconnect, INTERCONNECTS};
+pub use space::{ArchType, DesignPoint, DesignSpace, HbmLoc, ACTION_DIMS, N_HEADS};

@@ -1,0 +1,201 @@
+//! Packaging interconnect technologies — Tables 3 and 4 of the paper.
+//!
+//! Four commercial technologies are modeled: the 2.5D family (TSMC CoWoS,
+//! Intel EMIB) and the 3D family (TSMC SoIC, Intel FOVEROS). Each carries
+//! its bump/bond pitch, its energy-per-bit range (the low end at minimum
+//! trace length, the high end at maximum — Section 3.4.2: E_bit ∝
+//! trace length), and an implementation-cost tier that feeds the package
+//! cost regression of eq. (16).
+
+/// 2.5D (side-by-side on interposer/bridge) vs 3D (stacked) class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArchClass {
+    TwoPointFiveD,
+    ThreeD,
+}
+
+/// One packaging interconnect technology (a row of Table 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Interconnect {
+    CoWoS,
+    Emib,
+    SoIc,
+    Foveros,
+}
+
+/// Static properties of an interconnect technology.
+#[derive(Clone, Copy, Debug)]
+pub struct InterconnectProps {
+    pub name: &'static str,
+    pub class: ArchClass,
+    /// Micro-bump / bond pitch in µm (Table 4). Determines the maximum
+    /// link density per mm of die edge.
+    pub bump_pitch_um: f64,
+    /// Energy per bit at minimum trace length (pJ/bit, Table 4 low end).
+    pub e_bit_min_pj: f64,
+    /// Energy per bit at maximum trace length (pJ/bit, Table 4 high end).
+    pub e_bit_max_pj: f64,
+    /// Implementation-cost tier fed into eq. (16)'s µ2 intercept
+    /// (Low < Medium < High < Highest in Table 4).
+    pub cost_tier: CostTier,
+    /// Per-hop wire length in mm (Table 3).
+    pub hop_wire_len_mm: f64,
+    /// Per-hop wire delay in ps (Table 3).
+    pub hop_wire_delay_ps: f64,
+}
+
+/// Implementation-cost tier (Table 4's qualitative column, made
+/// quantitative in `cost::package_cost`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum CostTier {
+    Low,
+    Medium,
+    High,
+    Highest,
+}
+
+/// Per-hop constants of Table 3 shared by each class.
+pub const HOP_WIRE_LEN_25D_MM: f64 = 1.0;
+pub const HOP_WIRE_DELAY_25D_PS: f64 = 17.2;
+pub const HOP_WIRE_LEN_3D_MM: f64 = 0.08;
+pub const HOP_WIRE_DELAY_3D_PS: f64 = 1.6;
+
+impl Interconnect {
+    pub fn props(self) -> InterconnectProps {
+        match self {
+            Interconnect::CoWoS => InterconnectProps {
+                name: "CoWoS",
+                class: ArchClass::TwoPointFiveD,
+                bump_pitch_um: 35.0, // 30–40 µm in Table 4
+                e_bit_min_pj: 0.2,
+                e_bit_max_pj: 0.5,
+                cost_tier: CostTier::Medium,
+                hop_wire_len_mm: HOP_WIRE_LEN_25D_MM,
+                hop_wire_delay_ps: HOP_WIRE_DELAY_25D_PS,
+            },
+            Interconnect::Emib => InterconnectProps {
+                name: "EMIB",
+                class: ArchClass::TwoPointFiveD,
+                bump_pitch_um: 50.0, // 45–55 µm in Table 4
+                e_bit_min_pj: 0.17,
+                e_bit_max_pj: 0.7,
+                cost_tier: CostTier::Low,
+                hop_wire_len_mm: HOP_WIRE_LEN_25D_MM,
+                hop_wire_delay_ps: HOP_WIRE_DELAY_25D_PS,
+            },
+            Interconnect::SoIc => InterconnectProps {
+                name: "SoIC",
+                class: ArchClass::ThreeD,
+                bump_pitch_um: 9.0,
+                e_bit_min_pj: 0.1,
+                e_bit_max_pj: 0.2,
+                cost_tier: CostTier::High,
+                hop_wire_len_mm: HOP_WIRE_LEN_3D_MM,
+                hop_wire_delay_ps: HOP_WIRE_DELAY_3D_PS,
+            },
+            Interconnect::Foveros => InterconnectProps {
+                name: "FOVEROS",
+                class: ArchClass::ThreeD,
+                bump_pitch_um: 10.0, // "<10 µm"
+                e_bit_min_pj: 0.02,
+                e_bit_max_pj: 0.05, // "<0.05 pJ/bit"
+                cost_tier: CostTier::Highest,
+                hop_wire_len_mm: HOP_WIRE_LEN_3D_MM,
+                hop_wire_delay_ps: HOP_WIRE_DELAY_3D_PS,
+            },
+        }
+    }
+
+    /// Energy per bit at a given trace length, linearly interpolated
+    /// across the technology's [min, max] trace-length range (Section
+    /// 3.4.2: E_bit ∝ trace length).
+    ///
+    /// `trace_mm` is clamped into [1, 10] for 2.5D; 3D technologies have
+    /// an (almost) fixed vertical distance, so they always return the low
+    /// end.
+    pub fn e_bit_pj(self, trace_mm: f64) -> f64 {
+        let p = self.props();
+        match p.class {
+            ArchClass::ThreeD => p.e_bit_min_pj,
+            ArchClass::TwoPointFiveD => {
+                let t = (trace_mm.clamp(1.0, 10.0) - 1.0) / 9.0;
+                p.e_bit_min_pj + t * (p.e_bit_max_pj - p.e_bit_min_pj)
+            }
+        }
+    }
+
+    /// Maximum number of links that fit along `edge_mm` of die edge given
+    /// the bump pitch (two bump rows assumed, as in shoreline PHYs).
+    pub fn max_links_per_edge(self, edge_mm: f64) -> usize {
+        let pitch_mm = self.props().bump_pitch_um * 1e-3;
+        ((edge_mm / pitch_mm) * 2.0) as usize
+    }
+}
+
+/// All technologies, for sweeps and table dumps.
+pub const INTERCONNECTS: [Interconnect; 4] = [
+    Interconnect::CoWoS,
+    Interconnect::Emib,
+    Interconnect::SoIc,
+    Interconnect::Foveros,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classes_match_paper() {
+        assert_eq!(Interconnect::CoWoS.props().class, ArchClass::TwoPointFiveD);
+        assert_eq!(Interconnect::Emib.props().class, ArchClass::TwoPointFiveD);
+        assert_eq!(Interconnect::SoIc.props().class, ArchClass::ThreeD);
+        assert_eq!(Interconnect::Foveros.props().class, ArchClass::ThreeD);
+    }
+
+    #[test]
+    fn energy_ordering_matches_table4() {
+        // FOVEROS < SoIC < CoWoS ~ EMIB at min trace length.
+        let e = |ic: Interconnect| ic.e_bit_pj(1.0);
+        assert!(e(Interconnect::Foveros) < e(Interconnect::SoIc));
+        assert!(e(Interconnect::SoIc) < e(Interconnect::Emib));
+        assert!(e(Interconnect::SoIc) < e(Interconnect::CoWoS));
+    }
+
+    #[test]
+    fn e_bit_grows_with_trace_length() {
+        let lo = Interconnect::Emib.e_bit_pj(1.0);
+        let hi = Interconnect::Emib.e_bit_pj(10.0);
+        assert!((lo - 0.17).abs() < 1e-12);
+        assert!((hi - 0.7).abs() < 1e-12);
+        assert!(Interconnect::Emib.e_bit_pj(5.5) > lo);
+        assert!(Interconnect::Emib.e_bit_pj(5.5) < hi);
+    }
+
+    #[test]
+    fn three_d_e_bit_is_trace_independent() {
+        assert_eq!(
+            Interconnect::SoIc.e_bit_pj(1.0),
+            Interconnect::SoIc.e_bit_pj(10.0)
+        );
+    }
+
+    #[test]
+    fn cost_tiers_ordered_as_table4() {
+        use CostTier::*;
+        assert_eq!(Interconnect::Emib.props().cost_tier, Low);
+        assert_eq!(Interconnect::CoWoS.props().cost_tier, Medium);
+        assert_eq!(Interconnect::SoIc.props().cost_tier, High);
+        assert_eq!(Interconnect::Foveros.props().cost_tier, Highest);
+        assert!(Low < Medium && Medium < High && High < Highest);
+    }
+
+    #[test]
+    fn link_density_scales_with_pitch() {
+        // finer pitch -> more links on the same edge
+        let edge = 5.0;
+        assert!(
+            Interconnect::SoIc.max_links_per_edge(edge)
+                > Interconnect::CoWoS.max_links_per_edge(edge)
+        );
+    }
+}

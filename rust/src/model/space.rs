@@ -1,0 +1,417 @@
+//! The 14-parameter design space of Table 1 and its MultiDiscrete encoding.
+//!
+//! One action = one complete design point. The cardinalities here are the
+//! single source of truth on the Rust side and are asserted against
+//! `artifacts/manifest.json` at engine startup (the Python compile path
+//! mirrors them in `compile/model.py::ACTION_DIMS`).
+
+use super::packaging::Interconnect;
+
+/// Per-head cardinalities, in Table 1 order. Σ = 591 policy logits.
+pub const ACTION_DIMS: [usize; 14] = [3, 128, 63, 2, 20, 100, 10, 2, 31, 100, 2, 20, 100, 10];
+
+/// Number of design parameters (categorical heads).
+pub const N_HEADS: usize = 14;
+
+/// Top-level architecture (Fig. 2 of the paper).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArchType {
+    /// Fig. 2(a): all chiplets side-by-side through 2.5D interconnects.
+    TwoPointFiveD,
+    /// Fig. 2(b): 5.5D memory-on-logic — HBM stacked on AI chiplets.
+    MemOnLogic,
+    /// Fig. 2(c): 5.5D logic-on-logic — AI chiplets stacked in pairs.
+    LogicOnLogic,
+}
+
+impl ArchType {
+    pub fn name(self) -> &'static str {
+        match self {
+            ArchType::TwoPointFiveD => "2.5D",
+            ArchType::MemOnLogic => "5.5D-Memory-on-Logic",
+            ArchType::LogicOnLogic => "5.5D-Logic-on-Logic",
+        }
+    }
+
+    /// Does this architecture contain any 3D bond?
+    pub fn uses_3d(self) -> bool {
+        !matches!(self, ArchType::TwoPointFiveD)
+    }
+}
+
+/// The six candidate HBM locations around/on the AI-chiplet mesh
+/// (Section 3.3.2: "left, right, top, bottom, middle, and 3D stacking"),
+/// giving the 2^6 − 1 placement combinations of Table 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum HbmLoc {
+    Left,
+    Right,
+    Top,
+    Bottom,
+    Middle,
+    Stacked3D,
+}
+
+pub const HBM_LOCS: [HbmLoc; 6] = [
+    HbmLoc::Left,
+    HbmLoc::Right,
+    HbmLoc::Top,
+    HbmLoc::Bottom,
+    HbmLoc::Middle,
+    HbmLoc::Stacked3D,
+];
+
+/// A fully decoded design point (one element of the 2.1e17-point space).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DesignPoint {
+    pub arch: ArchType,
+    /// Total number of AI accelerator chiplets (1..=cap).
+    pub n_chiplets: usize,
+    /// HBM placement bitmask over [`HBM_LOCS`]; always non-zero.
+    pub hbm_mask: u8,
+    // -- AI↔AI 2.5D link --
+    pub ai2ai_25d: Interconnect,
+    pub ai2ai_25d_gbps: f64,
+    pub ai2ai_25d_links: usize,
+    pub ai2ai_25d_trace_mm: f64,
+    // -- AI↔AI 3D link (meaningful only when arch.uses_3d()) --
+    pub ai2ai_3d: Interconnect,
+    pub ai2ai_3d_gbps: f64,
+    pub ai2ai_3d_links: usize,
+    // -- AI↔HBM 2.5D link --
+    pub ai2hbm: Interconnect,
+    pub ai2hbm_gbps: f64,
+    pub ai2hbm_links: usize,
+    pub ai2hbm_trace_mm: f64,
+}
+
+impl DesignPoint {
+    /// HBM locations selected by the mask.
+    pub fn hbm_locs(&self) -> Vec<HbmLoc> {
+        HBM_LOCS
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| self.hbm_mask & (1 << i) != 0)
+            .map(|(_, &loc)| loc)
+            .collect()
+    }
+
+    /// Number of HBM stacks.
+    pub fn n_hbm(&self) -> usize {
+        self.hbm_mask.count_ones() as usize
+    }
+
+    /// HBMs occupying 2.5D package footprint (everything except the
+    /// 3D-stacked location, which sits on top of an AI chiplet).
+    pub fn n_hbm_25d(&self) -> usize {
+        self.hbm_locs()
+            .iter()
+            .filter(|&&l| l != HbmLoc::Stacked3D)
+            .count()
+    }
+
+    /// Package footprints occupied by AI silicon: logic-on-logic stacks
+    /// two chiplets per footprint (odd counts leave one unpaired die).
+    pub fn n_footprints(&self) -> usize {
+        match self.arch {
+            ArchType::LogicOnLogic => self.n_chiplets / 2 + self.n_chiplets % 2,
+            _ => self.n_chiplets,
+        }
+    }
+
+    /// Number of 3D bond operations during assembly: stacked AI pairs
+    /// plus stacked HBMs.
+    pub fn n_3d_bonds(&self) -> usize {
+        let pairs = match self.arch {
+            ArchType::LogicOnLogic => self.n_chiplets / 2,
+            _ => 0,
+        };
+        let stacked_hbm = if self.arch.uses_3d() {
+            self.n_hbm() - self.n_hbm_25d()
+        } else {
+            0
+        };
+        pairs + stacked_hbm
+    }
+
+    /// Aggregate AI↔HBM bandwidth in Tbps (eq. 14: DR × L).
+    pub fn bw_ai2hbm_tbps(&self) -> f64 {
+        self.ai2hbm_gbps * self.ai2hbm_links as f64 / 1e3
+    }
+
+    /// Aggregate AI↔AI 2.5D bandwidth in Tbps.
+    pub fn bw_ai2ai_25d_tbps(&self) -> f64 {
+        self.ai2ai_25d_gbps * self.ai2ai_25d_links as f64 / 1e3
+    }
+
+    /// Aggregate AI↔AI 3D bandwidth in Tbps.
+    pub fn bw_ai2ai_3d_tbps(&self) -> f64 {
+        self.ai2ai_3d_gbps * self.ai2ai_3d_links as f64 / 1e3
+    }
+}
+
+/// The decodable design space. `chiplet_cap` distinguishes the paper's
+/// case (i) (64) from case (ii) (128); the action head always has 128
+/// values and is folded modulo the cap so both cases share one policy
+/// artifact.
+#[derive(Clone, Copy, Debug)]
+pub struct DesignSpace {
+    pub chiplet_cap: usize,
+}
+
+impl DesignSpace {
+    pub fn case_i() -> DesignSpace {
+        DesignSpace { chiplet_cap: 64 }
+    }
+
+    pub fn case_ii() -> DesignSpace {
+        DesignSpace { chiplet_cap: 128 }
+    }
+
+    /// Total number of design points (for reporting; ≈ 2.1 × 10^17).
+    pub fn cardinality(&self) -> f64 {
+        ACTION_DIMS.iter().map(|&d| d as f64).product()
+    }
+
+    /// Decode a raw MultiDiscrete action into a design point.
+    ///
+    /// Every action decodes successfully (the RL agent must never be able
+    /// to emit an invalid action); semantic constraints (area budget) are
+    /// enforced later by the evaluator as reward penalties.
+    pub fn decode(&self, action: &[usize]) -> DesignPoint {
+        assert_eq!(action.len(), N_HEADS, "action must have 14 heads");
+        for (h, (&a, &d)) in action.iter().zip(ACTION_DIMS.iter()).enumerate() {
+            assert!(a < d, "head {h}: action {a} out of range {d}");
+        }
+        let arch = match action[0] {
+            0 => ArchType::TwoPointFiveD,
+            1 => ArchType::MemOnLogic,
+            _ => ArchType::LogicOnLogic,
+        };
+        let n_chiplets = 1 + (action[1] % self.chiplet_cap);
+        let mut hbm_mask = (action[2] + 1) as u8; // 1..=63
+        if !arch.uses_3d() && hbm_mask == 1 << 5 {
+            // Stacked-only placement is meaningless in a pure 2.5D system;
+            // fold it to the Middle location.
+            hbm_mask = 1 << 4;
+        }
+        DesignPoint {
+            arch,
+            n_chiplets,
+            hbm_mask,
+            ai2ai_25d: if action[3] == 0 { Interconnect::CoWoS } else { Interconnect::Emib },
+            ai2ai_25d_gbps: (action[4] + 1) as f64,
+            ai2ai_25d_links: 50 * (action[5] + 1),
+            ai2ai_25d_trace_mm: (action[6] + 1) as f64,
+            ai2ai_3d: if action[7] == 0 { Interconnect::SoIc } else { Interconnect::Foveros },
+            ai2ai_3d_gbps: (20 + action[8]) as f64,
+            ai2ai_3d_links: 100 * (action[9] + 1),
+            ai2hbm: if action[10] == 0 { Interconnect::CoWoS } else { Interconnect::Emib },
+            ai2hbm_gbps: (action[11] + 1) as f64,
+            ai2hbm_links: 50 * (action[12] + 1),
+            ai2hbm_trace_mm: (action[13] + 1) as f64,
+        }
+    }
+
+    /// Encode a design point back into action indices (inverse of
+    /// [`decode`] for points representable under this cap).
+    pub fn encode(&self, p: &DesignPoint) -> [usize; N_HEADS] {
+        [
+            match p.arch {
+                ArchType::TwoPointFiveD => 0,
+                ArchType::MemOnLogic => 1,
+                ArchType::LogicOnLogic => 2,
+            },
+            p.n_chiplets - 1,
+            p.hbm_mask as usize - 1,
+            if p.ai2ai_25d == Interconnect::CoWoS { 0 } else { 1 },
+            p.ai2ai_25d_gbps as usize - 1,
+            p.ai2ai_25d_links / 50 - 1,
+            p.ai2ai_25d_trace_mm as usize - 1,
+            if p.ai2ai_3d == Interconnect::SoIc { 0 } else { 1 },
+            p.ai2ai_3d_gbps as usize - 20,
+            p.ai2ai_3d_links / 100 - 1,
+            if p.ai2hbm == Interconnect::CoWoS { 0 } else { 1 },
+            p.ai2hbm_gbps as usize - 1,
+            p.ai2hbm_links / 50 - 1,
+            p.ai2hbm_trace_mm as usize - 1,
+        ]
+    }
+
+    /// Sample a uniformly random action.
+    pub fn random_action(&self, rng: &mut crate::util::Rng) -> [usize; N_HEADS] {
+        let mut a = [0usize; N_HEADS];
+        for (i, &d) in ACTION_DIMS.iter().enumerate() {
+            a[i] = rng.below(d as u64) as usize;
+        }
+        a
+    }
+}
+
+/// The paper's Table 6 optimized parameters, as raw actions — the
+/// reference design points used across benches and examples.
+pub mod paper_points {
+    use super::N_HEADS;
+
+    /// Table 6 case (i): 60 chiplets (30 SoIC pairs, 5×6 mesh), 4 HBMs,
+    /// EMIB 20 Gbps / 3100+4900 links, SoIC 42 Gbps / 3200 links.
+    pub fn table6_case_i() -> [usize; N_HEADS] {
+        let mut a = [0usize; N_HEADS];
+        a[0] = 2; // 5.5D logic-on-logic
+        a[1] = 59; // 60 chiplets
+        a[2] = 0b011110 - 1; // HBM @ right, top, bottom, middle
+        a[3] = 1; // EMIB
+        a[4] = 19; // 20 Gbps
+        a[5] = 61; // 3100 links
+        a[6] = 0; // 1 mm
+        a[7] = 0; // SoIC
+        a[8] = 22; // 42 Gbps
+        a[9] = 31; // 3200 links
+        a[10] = 1; // EMIB
+        a[11] = 19; // 20 Gbps
+        a[12] = 97; // 4900 links
+        a[13] = 0; // 1 mm
+        a
+    }
+
+    /// Table 6 case (ii): 112 chiplets (56 FOVEROS pairs, 7×8 mesh),
+    /// 4 HBMs, EMIB 20 Gbps / 1450+3850 links, FOVEROS 34 Gbps / 4400.
+    pub fn table6_case_ii() -> [usize; N_HEADS] {
+        let mut a = [0usize; N_HEADS];
+        a[0] = 2;
+        a[1] = 111; // 112 chiplets
+        a[2] = 0b011011 - 1; // left, right, bottom, middle
+        a[3] = 1;
+        a[4] = 19;
+        a[5] = 28; // 1450 links
+        a[6] = 0;
+        a[7] = 1; // FOVEROS
+        a[8] = 14; // 34 Gbps
+        a[9] = 43; // 4400 links
+        a[10] = 1;
+        a[11] = 19;
+        a[12] = 76; // 3850 links
+        a[13] = 0;
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn paper_points_decode_to_table6() {
+        let p = DesignSpace::case_i().decode(&paper_points::table6_case_i());
+        assert_eq!(p.n_chiplets, 60);
+        assert_eq!(p.n_hbm(), 4);
+        assert_eq!(p.arch, ArchType::LogicOnLogic);
+        let p2 = DesignSpace::case_ii().decode(&paper_points::table6_case_ii());
+        assert_eq!(p2.n_chiplets, 112);
+        assert_eq!(p2.ai2ai_3d, Interconnect::Foveros);
+        assert!((p2.bw_ai2ai_3d_tbps() - 149.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cardinality_exceeds_2e17() {
+        assert!(DesignSpace::case_i().cardinality() > 2e17);
+    }
+
+    #[test]
+    fn decode_bounds() {
+        let space = DesignSpace::case_i();
+        let mut rng = Rng::new(0);
+        for _ in 0..2_000 {
+            let a = space.random_action(&mut rng);
+            let p = space.decode(&a);
+            assert!((1..=64).contains(&p.n_chiplets));
+            assert!((1..=63).contains(&p.hbm_mask));
+            assert!((1.0..=20.0).contains(&p.ai2ai_25d_gbps));
+            assert!((50..=5000).contains(&p.ai2ai_25d_links));
+            assert!((1.0..=10.0).contains(&p.ai2ai_25d_trace_mm));
+            assert!((20.0..=50.0).contains(&p.ai2ai_3d_gbps));
+            assert!((100..=10_000).contains(&p.ai2ai_3d_links));
+            assert!((50..=5000).contains(&p.ai2hbm_links));
+            assert!(p.n_hbm() >= 1);
+        }
+    }
+
+    #[test]
+    fn case_ii_allows_up_to_128() {
+        let space = DesignSpace::case_ii();
+        let mut a = [0usize; N_HEADS];
+        a[2] = 0;
+        a[1] = 127;
+        assert_eq!(space.decode(&a).n_chiplets, 128);
+        assert_eq!(DesignSpace::case_i().decode(&a).n_chiplets, 64);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let space = DesignSpace::case_ii();
+        let mut rng = Rng::new(7);
+        for _ in 0..2_000 {
+            let a = space.random_action(&mut rng);
+            let p = space.decode(&a);
+            let p2 = space.decode(&space.encode(&p));
+            assert_eq!(p, p2);
+        }
+    }
+
+    #[test]
+    fn stacked_only_hbm_folds_to_middle_in_25d() {
+        let space = DesignSpace::case_i();
+        let mut a = [0usize; N_HEADS];
+        a[0] = 0; // 2.5D
+        a[2] = (1 << 5) - 1; // mask 0b100000 (stacked only)
+        let p = space.decode(&a);
+        assert_eq!(p.hbm_mask, 1 << 4);
+        assert_eq!(p.hbm_locs(), vec![HbmLoc::Middle]);
+    }
+
+    #[test]
+    fn footprints_and_bonds() {
+        let space = DesignSpace::case_i();
+        let mut a = [0usize; N_HEADS];
+        a[0] = 2; // logic-on-logic
+        a[1] = 59; // 60 chiplets
+        a[2] = 0b001111 - 1; // L,R,T,B
+        let p = space.decode(&a);
+        assert_eq!(p.n_chiplets, 60);
+        assert_eq!(p.n_footprints(), 30);
+        assert_eq!(p.n_3d_bonds(), 30);
+        assert_eq!(p.n_hbm_25d(), 4);
+
+        // odd chiplet count leaves an unpaired die
+        a[1] = 60; // 61 chiplets
+        let p = space.decode(&a);
+        assert_eq!(p.n_footprints(), 31);
+        assert_eq!(p.n_3d_bonds(), 30);
+    }
+
+    #[test]
+    fn stacked_hbm_counts_as_3d_bond() {
+        let space = DesignSpace::case_i();
+        let mut a = [0usize; N_HEADS];
+        a[0] = 1; // mem-on-logic
+        a[1] = 15; // 16 chiplets
+        a[2] = 0b110000 - 1; // middle + stacked
+        let p = space.decode(&a);
+        assert_eq!(p.n_hbm(), 2);
+        assert_eq!(p.n_hbm_25d(), 1);
+        assert_eq!(p.n_footprints(), 16);
+        assert_eq!(p.n_3d_bonds(), 1);
+    }
+
+    #[test]
+    fn bandwidth_helper_matches_eq14() {
+        let space = DesignSpace::case_i();
+        let mut a = [0usize; N_HEADS];
+        a[11] = 19; // 20 Gbps
+        a[12] = 97; // 4900 links
+        let p = space.decode(&a);
+        // paper Table 6 case (i): 20 Gbps x 4900 links = 98 Tbps
+        assert!((p.bw_ai2hbm_tbps() - 98.0).abs() < 1e-9);
+    }
+}

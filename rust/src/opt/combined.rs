@@ -1,0 +1,158 @@
+//! Algorithm 1 — the combined optimizer.
+//!
+//! Runs N_SA simulated-annealing instances and N_RL PPO agents with
+//! different seeds, then performs the exhaustive search over all their
+//! outputs (the paper's final optimizer: "20 SAs and 20 trained RL
+//! agents ... around 10 mins").
+
+use anyhow::Result;
+
+use crate::cost::{evaluate, Calib, Evaluation};
+use crate::gym::ChipletGymEnv;
+use crate::model::space::{DesignSpace, N_HEADS};
+use crate::rl::{train_ppo, PpoConfig};
+use crate::runtime::Engine;
+
+use super::sa::{simulated_annealing, SaConfig};
+
+/// Configuration of Algorithm 1.
+#[derive(Clone, Debug)]
+pub struct CombinedConfig {
+    pub sa: SaConfig,
+    pub ppo: PpoConfig,
+    pub sa_seeds: Vec<u64>,
+    pub rl_seeds: Vec<u64>,
+}
+
+/// One candidate produced by an optimizer instance.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub source: String,
+    pub seed: u64,
+    pub action: [usize; N_HEADS],
+    pub eval: Evaluation,
+}
+
+/// Output of Algorithm 1: the winner plus every per-instance candidate
+/// (Fig. 11 plots the per-run bests).
+#[derive(Clone, Debug)]
+pub struct OptOutcome {
+    pub best: Candidate,
+    pub candidates: Vec<Candidate>,
+}
+
+/// Run Algorithm 1: SA instances, PPO agents, exhaustive argmax.
+pub fn combined_optimize(
+    engine: &Engine,
+    space: DesignSpace,
+    calib: &Calib,
+    cfg: &CombinedConfig,
+) -> Result<OptOutcome> {
+    let mut candidates = Vec::new();
+
+    // lines 4–7: SA trials
+    for &seed in &cfg.sa_seeds {
+        let trace = simulated_annealing(&space, calib, &cfg.sa, seed);
+        candidates.push(Candidate {
+            source: "SA".into(),
+            seed,
+            action: trace.best_action,
+            eval: trace.best_eval,
+        });
+    }
+
+    // lines 8–11: RL trials
+    for &seed in &cfg.rl_seeds {
+        let mut env = ChipletGymEnv::new(space, calib.clone(), cfg.ppo.episode_len);
+        let trace = train_ppo(engine, &mut env, &cfg.ppo, seed)?;
+        let eval = evaluate(calib, &space.decode(&trace.best_action));
+        candidates.push(Candidate {
+            source: "RL".into(),
+            seed,
+            action: trace.best_action,
+            eval,
+        });
+        // The final deterministic policy is a second candidate (the
+        // exhaustive search is over everything the agents produce).
+        let det_eval = evaluate(calib, &space.decode(&trace.final_policy_action));
+        candidates.push(Candidate {
+            source: "RL-det".into(),
+            seed,
+            action: trace.final_policy_action,
+            eval: det_eval,
+        });
+    }
+
+    // line 13: exhaustive search over the outcomes
+    let best = candidates
+        .iter()
+        .max_by(|a, b| a.eval.reward.partial_cmp(&b.eval.reward).unwrap())
+        .expect("at least one optimizer instance")
+        .clone();
+
+    Ok(OptOutcome { best, candidates })
+}
+
+/// SA-only variant (no artifacts/engine needed) — used by CLI `sa` and
+/// headless tests.
+pub fn sa_only_optimize(
+    space: DesignSpace,
+    calib: &Calib,
+    sa: &SaConfig,
+    seeds: &[u64],
+) -> OptOutcome {
+    let mut candidates = Vec::new();
+    for &seed in seeds {
+        let trace = simulated_annealing(&space, calib, sa, seed);
+        candidates.push(Candidate {
+            source: "SA".into(),
+            seed,
+            action: trace.best_action,
+            eval: trace.best_eval,
+        });
+    }
+    let best = candidates
+        .iter()
+        .max_by(|a, b| a.eval.reward.partial_cmp(&b.eval.reward).unwrap())
+        .expect("at least one SA instance")
+        .clone();
+    OptOutcome { best, candidates }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sa_only_picks_argmax_across_seeds() {
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let cfg = SaConfig {
+            iterations: 3_000,
+            trace_every: 0,
+            ..SaConfig::default()
+        };
+        let out = sa_only_optimize(space, &calib, &cfg, &[0, 1, 2, 3]);
+        assert_eq!(out.candidates.len(), 4);
+        let max = out
+            .candidates
+            .iter()
+            .map(|c| c.eval.reward)
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(out.best.eval.reward, max);
+    }
+
+    #[test]
+    fn more_seeds_never_hurt() {
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let cfg = SaConfig {
+            iterations: 2_000,
+            trace_every: 0,
+            ..SaConfig::default()
+        };
+        let few = sa_only_optimize(space, &calib, &cfg, &[0, 1]);
+        let many = sa_only_optimize(space, &calib, &cfg, &[0, 1, 2, 3, 4, 5]);
+        assert!(many.best.eval.reward >= few.best.eval.reward);
+    }
+}

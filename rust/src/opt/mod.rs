@@ -1,0 +1,11 @@
+//! Non-RL optimizers and the combined Alg. 1 driver.
+
+pub mod combined;
+pub mod exhaustive;
+pub mod random_search;
+pub mod sa;
+
+pub use combined::{combined_optimize, CombinedConfig, OptOutcome};
+pub use exhaustive::{exhaustive_projected, ExhaustiveOutcome, PinRule};
+pub use random_search::random_search;
+pub use sa::{simulated_annealing, SaConfig, SaTrace};

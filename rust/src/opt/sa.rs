@@ -1,0 +1,185 @@
+//! Modified simulated annealing — Algorithm 2 of the paper.
+//!
+//! SA walks the *action index space* (the same 14-head MultiDiscrete the
+//! RL agent uses): a candidate is `current + U(−1, 1) · step` per head,
+//! rounded and clamped. The acceptance criterion is the paper's
+//! modification: the standard Metropolis exponential is replaced by
+//! `rand() < temp / iteration` (Section 5.2.2 explains why — the reward
+//! spans a huge range and the Metropolis exponent over/underflows).
+
+use crate::cost::{evaluate, Calib, Evaluation};
+use crate::model::space::{DesignSpace, ACTION_DIMS, N_HEADS};
+use crate::util::Rng;
+
+/// SA hyper-parameters (paper: temp 200, step 10, 500K iterations).
+#[derive(Clone, Copy, Debug)]
+pub struct SaConfig {
+    pub iterations: usize,
+    pub temperature: f64,
+    pub step_size: f64,
+    /// Record the best-so-far objective every `trace_every` iterations
+    /// (for the Fig. 8(b)/9/10 convergence curves). 0 disables tracing.
+    pub trace_every: usize,
+}
+
+impl Default for SaConfig {
+    fn default() -> SaConfig {
+        SaConfig {
+            iterations: 500_000,
+            temperature: 200.0,
+            step_size: 10.0,
+            trace_every: 1000,
+        }
+    }
+}
+
+/// Result of one SA run.
+#[derive(Clone, Debug)]
+pub struct SaTrace {
+    pub best_action: [usize; N_HEADS],
+    pub best_eval: Evaluation,
+    /// (iteration, best-so-far objective) samples.
+    pub history: Vec<(usize, f64)>,
+    pub evaluations: usize,
+}
+
+/// Run Algorithm 2.
+pub fn simulated_annealing(
+    space: &DesignSpace,
+    calib: &Calib,
+    cfg: &SaConfig,
+    seed: u64,
+) -> SaTrace {
+    let mut rng = Rng::new(seed);
+
+    // line 4-5: random initial solution
+    let mut current = space.random_action(&mut rng);
+    let mut o_curr = evaluate(calib, &space.decode(&current)).reward;
+    let mut best = current;
+    let mut o_best = o_curr;
+    let mut best_eval = evaluate(calib, &space.decode(&best));
+
+    let mut history = Vec::new();
+    let mut cand = [0usize; N_HEADS];
+
+    for iter in 1..=cfg.iterations {
+        // line 8: candidate = current + U(-1,1) * step_size, per head
+        for h in 0..N_HEADS {
+            let delta = rng.range_f64(-1.0, 1.0) * cfg.step_size;
+            let moved = current[h] as f64 + delta;
+            let hi = (ACTION_DIMS[h] - 1) as f64;
+            cand[h] = moved.round().clamp(0.0, hi) as usize;
+        }
+        // line 9: evaluate
+        let eval = evaluate(calib, &space.decode(&cand));
+        let o_cand = eval.reward;
+        // lines 10-12: track the best
+        if o_cand > o_best {
+            o_best = o_cand;
+            best = cand;
+            best_eval = eval;
+        }
+        // lines 14-16: modified acceptance — t = temp / iteration
+        let t = cfg.temperature / iter as f64;
+        if o_cand > o_curr || rng.f64() < t {
+            current = cand;
+            o_curr = o_cand;
+        }
+        if cfg.trace_every > 0 && iter % cfg.trace_every == 0 {
+            history.push((iter, o_best));
+        }
+    }
+
+    SaTrace {
+        best_action: best,
+        best_eval,
+        history,
+        evaluations: cfg.iterations,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg(iters: usize) -> SaConfig {
+        SaConfig {
+            iterations: iters,
+            temperature: 200.0,
+            step_size: 10.0,
+            trace_every: iters / 10,
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let a = simulated_annealing(&space, &calib, &quick_cfg(2_000), 42);
+        let b = simulated_annealing(&space, &calib, &quick_cfg(2_000), 42);
+        assert_eq!(a.best_action, b.best_action);
+        assert_eq!(a.best_eval.reward, b.best_eval.reward);
+    }
+
+    #[test]
+    fn beats_its_own_initial_sample() {
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let trace = simulated_annealing(&space, &calib, &quick_cfg(20_000), 0);
+        // The first trace entry is an early best; the final best must be
+        // at least as good (monotone best-so-far).
+        let first = trace.history.first().unwrap().1;
+        let last = trace.history.last().unwrap().1;
+        assert!(last >= first);
+        // and substantially better than a blind single draw
+        let mut rng = Rng::new(999);
+        let blind = evaluate(&calib, &space.decode(&space.random_action(&mut rng))).reward;
+        assert!(trace.best_eval.reward > blind);
+    }
+
+    #[test]
+    fn history_is_monotone_nondecreasing() {
+        let space = DesignSpace::case_ii();
+        let calib = Calib::default();
+        let trace = simulated_annealing(&space, &calib, &quick_cfg(10_000), 3);
+        for w in trace.history.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+        }
+    }
+
+    #[test]
+    fn higher_temperature_explores_more() {
+        // Fig. 8(b): temp 200 reaches a higher objective than temp ~1.
+        // Averaged over seeds to avoid flakiness.
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let mean_best = |temp: f64| -> f64 {
+            (0..5)
+                .map(|s| {
+                    let cfg = SaConfig {
+                        temperature: temp,
+                        ..quick_cfg(20_000)
+                    };
+                    simulated_annealing(&space, &calib, &cfg, s).best_eval.reward
+                })
+                .sum::<f64>()
+                / 5.0
+        };
+        let hot = mean_best(200.0);
+        let cold = mean_best(1.0);
+        assert!(
+            hot >= cold - 3.0,
+            "hot {hot} should not be materially worse than cold {cold}"
+        );
+    }
+
+    #[test]
+    fn best_action_in_bounds() {
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let t = simulated_annealing(&space, &calib, &quick_cfg(5_000), 11);
+        for (h, &a) in t.best_action.iter().enumerate() {
+            assert!(a < ACTION_DIMS[h]);
+        }
+    }
+}

@@ -1,0 +1,82 @@
+//! Minimal CSV writer for figure/table series.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::Result;
+
+/// Streaming CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    ncol: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: &Path, header: &[&str]) -> Result<CsvWriter> {
+        let file = File::create(path)?;
+        let mut out = BufWriter::new(file);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, ncol: header.len() })
+    }
+
+    /// Write one row of already-formatted cells.
+    pub fn row_str(&mut self, cells: &[String]) -> Result<()> {
+        assert_eq!(cells.len(), self.ncol, "csv row width mismatch");
+        for cell in cells {
+            assert!(
+                !cell.contains(',') && !cell.contains('\n'),
+                "csv cell needs quoting: {cell:?}"
+            );
+        }
+        writeln!(self.out, "{}", cells.join(","))?;
+        Ok(())
+    }
+
+    /// Write one row of numbers.
+    pub fn row(&mut self, cells: &[f64]) -> Result<()> {
+        let s: Vec<String> = cells.iter().map(|x| format!("{x}")).collect();
+        self.row_str(&s)
+    }
+
+    /// Write a labeled row: first column a string, rest numbers.
+    pub fn labeled_row(&mut self, label: &str, cells: &[f64]) -> Result<()> {
+        let mut s = vec![label.to_string()];
+        s.extend(cells.iter().map(|x| format!("{x}")));
+        self.row_str(&s)
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("chiplet_gym_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&[1.0, 2.5]).unwrap();
+            w.labeled_row("x", &[3.0]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2.5\nx,3\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn rejects_ragged() {
+        let dir = std::env::temp_dir().join("chiplet_gym_csv_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut w = CsvWriter::create(&dir.join("t.csv"), &["a", "b"]).unwrap();
+        w.row(&[1.0]).unwrap();
+    }
+}

@@ -1,0 +1,54 @@
+//! Result emitters: CSV series for every paper figure and aligned tables
+//! for the paper's tables, written under `bench_results/`.
+
+pub mod csv;
+
+pub use csv::CsvWriter;
+
+use std::path::{Path, PathBuf};
+
+/// Resolve (and create) the bench-results directory.
+pub fn results_dir() -> PathBuf {
+    let dir = std::env::var("CHIPLET_GYM_RESULTS").unwrap_or_else(|_| "bench_results".into());
+    let path = PathBuf::from(dir);
+    std::fs::create_dir_all(&path).expect("creating bench_results dir");
+    path
+}
+
+/// Write a small text report next to the CSVs.
+pub fn write_text(name: &str, contents: &str) -> PathBuf {
+    let path = results_dir().join(name);
+    std::fs::write(&path, contents).expect("writing report text");
+    path
+}
+
+/// Helper for benches: emit a named CSV under the results dir.
+pub fn csv(name: &str, header: &[&str]) -> CsvWriter {
+    CsvWriter::create(&results_dir().join(name), header).expect("creating csv")
+}
+
+/// Path helper for tests.
+pub fn result_path(name: &str) -> PathBuf {
+    results_dir().join(name)
+}
+
+/// Format a paper-vs-measured comparison line for EXPERIMENTS.md-style
+/// logs.
+pub fn compare_line(metric: &str, paper: f64, measured: f64) -> String {
+    let ratio = if paper != 0.0 { measured / paper } else { f64::NAN };
+    format!("{metric}: paper={paper:.3} measured={measured:.3} (x{ratio:.2})")
+}
+
+#[allow(unused)]
+fn _path_is_send(p: &Path) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compare_line_formats() {
+        let s = compare_line("throughput", 2.0, 3.0);
+        assert!(s.contains("x1.50"), "{s}");
+    }
+}

@@ -1,0 +1,109 @@
+//! MultiDiscrete categorical sampling from per-head log-probabilities.
+//!
+//! The forward artifact returns the concatenated per-head log-softmax
+//! (`logp_all`); sampling walks each head's CDF. The joint log-prob of
+//! the sampled action is the sum of the chosen per-head entries — the
+//! same formula `model.py::action_log_prob` uses inside the update
+//! artifact, so rollout log-probs and update log-probs are consistent.
+
+use crate::util::Rng;
+
+/// Sample one index from a head's log-probabilities via CDF inversion.
+pub fn sample_head(logp: &[f32], rng: &mut Rng) -> usize {
+    debug_assert!(!logp.is_empty());
+    let u = rng.f64();
+    let mut acc = 0.0f64;
+    for (i, &lp) in logp.iter().enumerate() {
+        acc += (lp as f64).exp();
+        if u < acc {
+            return i;
+        }
+    }
+    // Float round-off can leave acc slightly below 1; take the last.
+    logp.len() - 1
+}
+
+/// Sample a full MultiDiscrete action; returns (action, joint log-prob).
+pub fn sample_action(
+    logp_all: &[f32],
+    head_slices: &[(usize, usize)],
+    rng: &mut Rng,
+    out: &mut [usize],
+) -> f64 {
+    debug_assert_eq!(out.len(), head_slices.len());
+    let mut joint = 0.0f64;
+    for (h, &(start, end)) in head_slices.iter().enumerate() {
+        let idx = sample_head(&logp_all[start..end], rng);
+        out[h] = idx;
+        joint += logp_all[start + idx] as f64;
+    }
+    joint
+}
+
+/// Greedy (deterministic) action: per-head argmax.
+pub fn argmax_action(logp_all: &[f32], head_slices: &[(usize, usize)], out: &mut [usize]) {
+    for (h, &(start, end)) in head_slices.iter().enumerate() {
+        let slice = &logp_all[start..end];
+        let mut best = 0;
+        for (i, &v) in slice.iter().enumerate() {
+            if v > slice[best] {
+                best = i;
+            }
+        }
+        out[h] = best;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn logp_of(probs: &[f64]) -> Vec<f32> {
+        probs.iter().map(|&p| (p.ln()) as f32).collect()
+    }
+
+    #[test]
+    fn sample_respects_distribution() {
+        let logp = logp_of(&[0.7, 0.2, 0.1]);
+        let mut rng = Rng::new(0);
+        let mut counts = [0usize; 3];
+        let n = 60_000;
+        for _ in 0..n {
+            counts[sample_head(&logp, &mut rng)] += 1;
+        }
+        let f0 = counts[0] as f64 / n as f64;
+        let f2 = counts[2] as f64 / n as f64;
+        assert!((f0 - 0.7).abs() < 0.02, "{f0}");
+        assert!((f2 - 0.1).abs() < 0.01, "{f2}");
+    }
+
+    #[test]
+    fn near_deterministic_head() {
+        let logp = logp_of(&[1e-9, 1.0 - 2e-9, 1e-9]);
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            assert_eq!(sample_head(&logp, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn joint_logp_sums_heads() {
+        // two heads: [0.5, 0.5] and [1.0]
+        let logp_all = logp_of(&[0.5, 0.5, 1.0]);
+        let slices = [(0, 2), (2, 3)];
+        let mut rng = Rng::new(2);
+        let mut action = [0usize; 2];
+        let lp = sample_action(&logp_all, &slices, &mut rng, &mut action);
+        let want = logp_all[action[0]] as f64 + logp_all[2] as f64;
+        assert!((lp - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn argmax_picks_modes() {
+        let logp_all = logp_of(&[0.1, 0.8, 0.1, 0.3, 0.7]);
+        let slices = [(0, 3), (3, 5)];
+        let mut action = [0usize; 2];
+        argmax_action(&logp_all, &slices, &mut action);
+        assert_eq!(action, [1, 1]);
+    }
+}

@@ -1,0 +1,101 @@
+//! Parameter initialization on the Rust side.
+//!
+//! Scaled-Gaussian initialization with the SB3 gain schedule (hidden
+//! layers gain √2, policy head 0.01, value head 1.0; zero biases). The
+//! Python compile path ships an orthogonal initializer for its golden
+//! vectors; Gaussian-with-matched-scale is statistically equivalent for
+//! these layer sizes and keeps seeds cheap on the Rust side (no QR).
+
+use crate::runtime::Manifest;
+use crate::util::Rng;
+
+/// Gain for a parameter tensor by name (matches model.py's schedule).
+fn gain(name: &str) -> f64 {
+    match name {
+        "pi_wh" => 0.01,
+        "vf_wh" => 1.0,
+        _ => std::f64::consts::SQRT_2,
+    }
+}
+
+/// Initialize a flat parameter vector per the manifest layout.
+pub fn init_params(manifest: &Manifest, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ 0x9e37_79b9);
+    let mut flat = vec![0f32; manifest.param_count];
+    for entry in &manifest.params {
+        if entry.shape.len() == 1 {
+            continue; // biases stay zero
+        }
+        let fan_in = entry.shape[0] as f64;
+        let std = gain(&entry.name) / fan_in.sqrt();
+        for x in &mut flat[entry.offset..entry.offset + entry.size] {
+            *x = rng.normal_ms(0.0, std) as f32;
+        }
+    }
+    flat
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn manifest() -> Manifest {
+        // A small synthetic manifest exercising the layout logic.
+        let json = r#"{
+          "obs_dim": 4, "hidden": 8, "action_dims": [2, 3], "act_total": 5,
+          "n_heads": 2, "param_count": 61, "eval_batch": 8,
+          "params": [
+            {"name": "pi_w1", "shape": [4, 8], "offset": 0, "size": 32},
+            {"name": "pi_b1", "shape": [8], "offset": 32, "size": 8},
+            {"name": "pi_wh", "shape": [2, 8], "offset": 40, "size": 16},
+            {"name": "vf_bh", "shape": [5], "offset": 56, "size": 5}
+          ],
+          "hyperparams": {"n_steps": 8, "batch_size": 4, "n_epoch": 2,
+            "learning_rate": 0.001, "clip_range": 0.2, "ent_coef": 0.1,
+            "vf_coef": 0.5, "gamma": 0.99, "gae_lambda": 0.95,
+            "max_grad_norm": 0.5, "total_timesteps": 100,
+            "episode_length": 2},
+          "artifacts": {"policy_forward": "f", "policy_forward_b64": "fb",
+            "ppo_update": "u"}
+        }"#;
+        Manifest::from_json(&Json::parse(json).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn biases_zero_weights_nonzero() {
+        let m = manifest();
+        let p = init_params(&m, 0);
+        assert_eq!(p.len(), 61);
+        assert!(p[32..40].iter().all(|&x| x == 0.0)); // pi_b1
+        assert!(p[56..61].iter().all(|&x| x == 0.0)); // vf_bh
+        assert!(p[0..32].iter().any(|&x| x != 0.0)); // pi_w1
+    }
+
+    #[test]
+    fn head_weights_are_small() {
+        let m = manifest();
+        let p = init_params(&m, 1);
+        let head_max = p[40..56].iter().fold(0f32, |a, &x| a.max(x.abs()));
+        let body_max = p[0..32].iter().fold(0f32, |a, &x| a.max(x.abs()));
+        assert!(head_max < body_max / 5.0, "head {head_max} body {body_max}");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let m = manifest();
+        assert_ne!(init_params(&m, 0), init_params(&m, 1));
+        assert_eq!(init_params(&m, 2), init_params(&m, 2));
+    }
+
+    #[test]
+    fn hidden_std_matches_gain() {
+        let m = manifest();
+        let p = init_params(&m, 3);
+        let w = &p[0..32]; // fan_in 4, gain sqrt2 -> std ~0.707
+        let mean: f32 = w.iter().sum::<f32>() / 32.0;
+        let var: f32 = w.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / 32.0;
+        let std = var.sqrt();
+        assert!((0.3..1.3).contains(&std), "std {std}");
+    }
+}

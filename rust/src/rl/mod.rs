@@ -1,0 +1,15 @@
+//! PPO over the AOT'd JAX/Pallas network — Section 4.1 of the paper.
+//!
+//! The Rust side owns everything stochastic and sequential: parameter
+//! initialization, rollouts through the Chiplet-Gym environment,
+//! MultiDiscrete sampling, GAE, minibatch shuffling and the Adam step
+//! counter. The two numerical kernels — policy forward and the clipped
+//! PPO gradient step — execute as compiled HLO through
+//! [`crate::runtime::Engine`].
+
+pub mod categorical;
+pub mod init;
+pub mod ppo;
+pub mod rollout;
+
+pub use ppo::{train_ppo, PpoConfig, PpoTrace};

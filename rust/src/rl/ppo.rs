@@ -1,0 +1,267 @@
+//! The PPO training loop (SB3-faithful, Table 5 hyper-parameters).
+//!
+//! Rust drives everything; the network forward and the clipped-surrogate
+//! Adam step run as AOT-compiled HLO through [`Engine`]. One call to
+//! [`train_ppo`] trains one agent from one seed — Alg. 1 launches many.
+
+use anyhow::Result;
+
+use crate::gym::{ChipletGymEnv, OBS_DIM};
+use crate::model::space::N_HEADS;
+use crate::runtime::Engine;
+use crate::util::Rng;
+
+use super::categorical;
+use super::init::init_params;
+use super::rollout::RolloutBuffer;
+
+/// PPO hyper-parameters. Defaults mirror the artifact manifest (Table 5);
+/// the Fig. 7/8 benches override `episode_len` / `ent_coef`.
+#[derive(Clone, Copy, Debug)]
+pub struct PpoConfig {
+    pub total_timesteps: usize,
+    pub n_steps: usize,
+    pub batch_size: usize,
+    pub n_epoch: usize,
+    pub learning_rate: f64,
+    pub clip_range: f64,
+    pub ent_coef: f64,
+    pub gamma: f64,
+    pub gae_lambda: f64,
+    pub episode_len: usize,
+    /// Raw env rewards are divided by this before GAE (VecNormalize-lite;
+    /// reported statistics stay in raw units).
+    pub reward_scale: f64,
+}
+
+impl PpoConfig {
+    /// Pull Table 5 defaults from the artifact manifest.
+    pub fn from_manifest(engine: &Engine) -> PpoConfig {
+        let h = &engine.manifest.hyper;
+        PpoConfig {
+            total_timesteps: h.total_timesteps,
+            n_steps: h.n_steps,
+            batch_size: h.batch_size,
+            n_epoch: h.n_epoch,
+            learning_rate: h.learning_rate,
+            clip_range: h.clip_range,
+            ent_coef: h.ent_coef,
+            gamma: h.gamma,
+            gae_lambda: h.gae_lambda,
+            episode_len: h.episode_length,
+            reward_scale: 100.0,
+        }
+    }
+
+    /// Shrink the run for tests/benches while keeping the shape.
+    pub fn quick(mut self, total: usize) -> PpoConfig {
+        self.total_timesteps = total;
+        self.n_steps = self.n_steps.min(total.max(self.batch_size));
+        self
+    }
+}
+
+/// Per-iteration training statistics (one point of the Fig. 7/8/9/10
+/// convergence curves).
+#[derive(Clone, Copy, Debug)]
+pub struct IterStat {
+    pub timesteps: usize,
+    /// Mean episodic reward over the last ≤100 episodes (raw env units).
+    pub ep_rew_mean: f64,
+    /// Cost-model value = ep_rew_mean / episode_len (paper Fig. 7 note).
+    pub cost_value: f64,
+    pub loss: f64,
+    pub entropy: f64,
+    pub approx_kl: f64,
+}
+
+/// Output of one PPO training run.
+#[derive(Clone, Debug)]
+pub struct PpoTrace {
+    pub history: Vec<IterStat>,
+    pub best_action: [usize; N_HEADS],
+    pub best_reward: f64,
+    /// Deterministic (argmax) action of the final policy.
+    pub final_policy_action: [usize; N_HEADS],
+    pub timesteps: usize,
+}
+
+/// Train one PPO agent on the Chiplet-Gym environment.
+pub fn train_ppo(
+    engine: &Engine,
+    env: &mut ChipletGymEnv,
+    cfg: &PpoConfig,
+    seed: u64,
+) -> Result<PpoTrace> {
+    let manifest = &engine.manifest;
+    assert_eq!(
+        manifest.action_dims,
+        crate::model::space::ACTION_DIMS.to_vec(),
+        "artifact action space != Rust design space — rebuild artifacts"
+    );
+    env.episode_len = cfg.episode_len;
+
+    let head_slices = manifest.head_slices();
+    let hyper = [
+        cfg.learning_rate as f32,
+        cfg.clip_range as f32,
+        cfg.ent_coef as f32,
+    ];
+
+    let mut rng = Rng::new(seed);
+    let mut params = init_params(manifest, seed);
+    let mut adam_m = vec![0f32; params.len()];
+    let mut adam_v = vec![0f32; params.len()];
+    let mut adam_t: u64 = 0;
+
+    let mut buffer = RolloutBuffer::new(cfg.n_steps);
+    let mut obs = env.reset();
+    let mut action = [0usize; N_HEADS];
+
+    // episodic reward tracking (SB3's ep_info_buffer, window 100)
+    let mut ep_acc = 0.0f64;
+    let mut recent_eps: Vec<f64> = Vec::new();
+
+    // minibatch scratch
+    let mb = cfg.batch_size;
+    let mut mb_obs = vec![0f32; mb * OBS_DIM];
+    let mut mb_act = vec![0i32; mb * N_HEADS];
+    let mut mb_lp = vec![0f32; mb];
+    let mut mb_adv = vec![0f32; mb];
+    let mut mb_ret = vec![0f32; mb];
+
+    let mut history = Vec::new();
+    let mut steps = 0usize;
+
+    // §Perf: the epoch-fused artifact turns the 320 per-minibatch HLO
+    // calls of one iteration into a single call (EXPERIMENTS.md §Perf).
+    // Only usable when the rollout is exactly n_steps and minibatches
+    // tile it — always true here; the per-minibatch path remains for
+    // tests and partial batches.
+    let use_fused = engine.has_epochs() && cfg.n_steps % mb == 0;
+    let minibatches_per_iter = cfg.n_epoch * (cfg.n_steps / mb);
+    let mut perm_flat = vec![0i32; minibatches_per_iter * mb];
+
+    while steps < cfg.total_timesteps {
+        // ---- rollout (device-resident params via ForwardSession) ----
+        buffer.clear();
+        let session = engine.forward_session(&params)?;
+        while !buffer.is_full() {
+            let fwd = session.forward(&obs)?;
+            let logp = categorical::sample_action(
+                &fwd.logp_all,
+                &head_slices,
+                &mut rng,
+                &mut action,
+            );
+            let step = env.step(&action);
+            buffer.push(&obs, &action, logp, step.reward, fwd.value[0], step.done);
+            ep_acc += step.reward;
+            if step.done {
+                recent_eps.push(ep_acc);
+                if recent_eps.len() > 100 {
+                    recent_eps.remove(0);
+                }
+                ep_acc = 0.0;
+                obs = env.reset();
+            } else {
+                obs = step.obs;
+            }
+            steps += 1;
+        }
+        let last_value = session.forward(&obs)?.value[0];
+        drop(session);
+        buffer.compute_gae(last_value, cfg.gamma, cfg.gae_lambda, cfg.reward_scale);
+
+        // ---- optimize: n_epoch passes of shuffled minibatches ----
+        let mut last_stats = None;
+        if use_fused {
+            for epoch in 0..cfg.n_epoch {
+                let perm = rng.permutation(cfg.n_steps);
+                let base = epoch * cfg.n_steps;
+                for (i, &p) in perm.iter().enumerate() {
+                    perm_flat[base + i] = p as i32;
+                }
+            }
+            let out = engine.ppo_epochs(
+                &params,
+                &adam_m,
+                &adam_v,
+                (adam_t + 1) as f32,
+                &buffer.obs,
+                &buffer.actions,
+                &buffer.log_probs,
+                &buffer.advantages,
+                &buffer.returns,
+                &perm_flat,
+                hyper,
+            )?;
+            adam_t += minibatches_per_iter as u64;
+            params = out.params;
+            adam_m = out.adam_m;
+            adam_v = out.adam_v;
+            last_stats = Some(out.stats);
+        } else {
+            for _ in 0..cfg.n_epoch {
+                let perm = rng.permutation(cfg.n_steps);
+                for chunk in perm.chunks_exact(mb) {
+                    buffer.gather(
+                        chunk, &mut mb_obs, &mut mb_act, &mut mb_lp, &mut mb_adv,
+                        &mut mb_ret,
+                    );
+                    adam_t += 1;
+                    let out = engine.ppo_update(
+                        &params,
+                        &adam_m,
+                        &adam_v,
+                        adam_t as f32,
+                        &mb_obs,
+                        &mb_act,
+                        &mb_lp,
+                        &mb_adv,
+                        &mb_ret,
+                        hyper,
+                    )?;
+                    params = out.params;
+                    adam_m = out.adam_m;
+                    adam_v = out.adam_v;
+                    last_stats = Some(out.stats);
+                }
+            }
+        }
+
+        let ep_rew_mean = if recent_eps.is_empty() {
+            0.0
+        } else {
+            recent_eps.iter().sum::<f64>() / recent_eps.len() as f64
+        };
+        let s = last_stats.unwrap_or_default();
+        history.push(IterStat {
+            timesteps: steps,
+            ep_rew_mean,
+            cost_value: ep_rew_mean / cfg.episode_len as f64,
+            loss: s.loss as f64,
+            entropy: s.entropy as f64,
+            approx_kl: s.approx_kl as f64,
+        });
+    }
+
+    // Deterministic action of the final policy.
+    let final_obs = env.reset();
+    let fwd = engine.policy_forward(&params, &final_obs)?;
+    let mut final_action = [0usize; N_HEADS];
+    categorical::argmax_action(&fwd.logp_all, &head_slices, &mut final_action);
+
+    let (best_reward, best_point) = env
+        .best()
+        .map(|(r, p)| (r, env.space.encode(p)))
+        .unwrap_or((f64::NEG_INFINITY, [0; N_HEADS]));
+
+    Ok(PpoTrace {
+        history,
+        best_action: best_point,
+        best_reward,
+        final_policy_action: final_action,
+        timesteps: steps,
+    })
+}

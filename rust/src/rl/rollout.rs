@@ -1,0 +1,216 @@
+//! Rollout buffer with Generalized Advantage Estimation (SB3 semantics).
+//!
+//! Stores one on-policy batch of `n_steps` transitions, then computes
+//! GAE(γ, λ) advantages and returns. Matches SB3's `RolloutBuffer`:
+//! `delta = r + γ·V(s') ·(1−done) − V(s)`,
+//! `adv = delta + γλ·(1−done)·adv'`, `ret = adv + V(s)`.
+
+use crate::gym::OBS_DIM;
+use crate::model::space::N_HEADS;
+
+/// One on-policy rollout batch.
+#[derive(Clone, Debug)]
+pub struct RolloutBuffer {
+    pub n_steps: usize,
+    pub obs: Vec<f32>,        // n_steps × OBS_DIM
+    pub actions: Vec<i32>,    // n_steps × N_HEADS
+    pub log_probs: Vec<f32>,  // n_steps
+    pub rewards: Vec<f64>,    // n_steps (raw env scale)
+    pub values: Vec<f32>,     // n_steps
+    pub dones: Vec<bool>,     // n_steps (episode ended AFTER this step)
+    pub advantages: Vec<f32>, // n_steps
+    pub returns: Vec<f32>,    // n_steps
+    pos: usize,
+}
+
+impl RolloutBuffer {
+    pub fn new(n_steps: usize) -> RolloutBuffer {
+        RolloutBuffer {
+            n_steps,
+            obs: vec![0.0; n_steps * OBS_DIM],
+            actions: vec![0; n_steps * N_HEADS],
+            log_probs: vec![0.0; n_steps],
+            rewards: vec![0.0; n_steps],
+            values: vec![0.0; n_steps],
+            dones: vec![false; n_steps],
+            advantages: vec![0.0; n_steps],
+            returns: vec![0.0; n_steps],
+            pos: 0,
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.pos = 0;
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.pos == self.n_steps
+    }
+
+    pub fn len(&self) -> usize {
+        self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pos == 0
+    }
+
+    /// Append one transition.
+    pub fn push(
+        &mut self,
+        obs: &[f32; OBS_DIM],
+        action: &[usize; N_HEADS],
+        log_prob: f64,
+        reward: f64,
+        value: f32,
+        done: bool,
+    ) {
+        assert!(self.pos < self.n_steps, "rollout buffer overflow");
+        let o = self.pos * OBS_DIM;
+        self.obs[o..o + OBS_DIM].copy_from_slice(obs);
+        let a = self.pos * N_HEADS;
+        for (i, &x) in action.iter().enumerate() {
+            self.actions[a + i] = x as i32;
+        }
+        self.log_probs[self.pos] = log_prob as f32;
+        self.rewards[self.pos] = reward;
+        self.values[self.pos] = value;
+        self.dones[self.pos] = done;
+        self.pos += 1;
+    }
+
+    /// Compute GAE advantages and returns. `last_value` bootstraps the
+    /// final state; `reward_scale` maps raw env rewards into the network's
+    /// value range (SB3 users typically wrap the env — we divide here).
+    pub fn compute_gae(&mut self, last_value: f32, gamma: f64, lam: f64, reward_scale: f64) {
+        assert!(self.is_full(), "compute_gae on partial rollout");
+        let mut adv = 0.0f64;
+        for t in (0..self.n_steps).rev() {
+            let non_terminal = if self.dones[t] { 0.0 } else { 1.0 };
+            let next_value = if t + 1 < self.n_steps {
+                if self.dones[t] { 0.0 } else { self.values[t + 1] as f64 }
+            } else {
+                non_terminal * last_value as f64
+            };
+            let r = self.rewards[t] / reward_scale;
+            let delta = r + gamma * next_value - self.values[t] as f64;
+            adv = delta + gamma * lam * non_terminal * adv;
+            self.advantages[t] = adv as f32;
+            self.returns[t] = (adv + self.values[t] as f64) as f32;
+        }
+    }
+
+    /// Gather a minibatch by index list into the provided scratch arrays.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gather(
+        &self,
+        idx: &[usize],
+        obs: &mut [f32],
+        actions: &mut [i32],
+        log_probs: &mut [f32],
+        advantages: &mut [f32],
+        returns: &mut [f32],
+    ) {
+        for (row, &i) in idx.iter().enumerate() {
+            obs[row * OBS_DIM..(row + 1) * OBS_DIM]
+                .copy_from_slice(&self.obs[i * OBS_DIM..(i + 1) * OBS_DIM]);
+            actions[row * N_HEADS..(row + 1) * N_HEADS]
+                .copy_from_slice(&self.actions[i * N_HEADS..(i + 1) * N_HEADS]);
+            log_probs[row] = self.log_probs[i];
+            advantages[row] = self.advantages[i];
+            returns[row] = self.returns[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(n: usize, rewards: &[f64], values: &[f32], dones: &[bool]) -> RolloutBuffer {
+        let mut b = RolloutBuffer::new(n);
+        for t in 0..n {
+            b.push(
+                &[0.0; OBS_DIM],
+                &[0usize; N_HEADS],
+                -1.0,
+                rewards[t],
+                values[t],
+                dones[t],
+            );
+        }
+        b
+    }
+
+    #[test]
+    fn gae_matches_hand_computation_no_done() {
+        // 2 steps, no terminal: standard recursive GAE.
+        let mut b = filled(2, &[1.0, 1.0], &[0.5, 0.5], &[false, false]);
+        let (g, l, last_v) = (0.99, 0.95, 0.5f32);
+        b.compute_gae(last_v, g, l, 1.0);
+        let d1 = 1.0 + g * 0.5 - 0.5;
+        let a1 = d1;
+        let d0 = 1.0 + g * 0.5 - 0.5;
+        let a0 = d0 + g * l * a1;
+        assert!((b.advantages[1] as f64 - a1).abs() < 1e-6);
+        assert!((b.advantages[0] as f64 - a0).abs() < 1e-6);
+        assert!((b.returns[0] as f64 - (a0 + 0.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn done_cuts_bootstrap() {
+        // terminal at t=0: its advantage ignores V(s1).
+        let mut b = filled(2, &[2.0, 0.0], &[0.5, 9.0], &[true, false]);
+        b.compute_gae(9.0, 0.99, 0.95, 1.0);
+        let a0 = 2.0 - 0.5; // no next value, no propagation from t=1
+        assert!((b.advantages[0] as f64 - a0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn terminal_last_step_ignores_last_value() {
+        let mut b = filled(1, &[1.0], &[0.0], &[true]);
+        b.compute_gae(100.0, 0.99, 0.95, 1.0);
+        assert!((b.advantages[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reward_scale_divides() {
+        let mut a = filled(1, &[100.0], &[0.0], &[true]);
+        a.compute_gae(0.0, 0.99, 0.95, 100.0);
+        assert!((a.advantages[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gather_permutes_rows() {
+        let mut b = RolloutBuffer::new(3);
+        for t in 0..3 {
+            let mut obs = [0f32; OBS_DIM];
+            obs[0] = t as f32;
+            let mut act = [0usize; N_HEADS];
+            act[0] = t;
+            b.push(&obs, &act, -(t as f64), t as f64, t as f32, false);
+        }
+        b.compute_gae(0.0, 0.99, 0.95, 1.0);
+        let idx = [2usize, 0];
+        let mut obs = vec![0f32; 2 * OBS_DIM];
+        let mut actions = vec![0i32; 2 * N_HEADS];
+        let mut lp = vec![0f32; 2];
+        let mut adv = vec![0f32; 2];
+        let mut ret = vec![0f32; 2];
+        b.gather(&idx, &mut obs, &mut actions, &mut lp, &mut adv, &mut ret);
+        assert_eq!(obs[0], 2.0);
+        assert_eq!(obs[OBS_DIM], 0.0);
+        assert_eq!(actions[0], 2);
+        assert_eq!(lp[0], -2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn overflow_panics() {
+        let mut b = RolloutBuffer::new(1);
+        let obs = [0f32; OBS_DIM];
+        let act = [0usize; N_HEADS];
+        b.push(&obs, &act, 0.0, 0.0, 0.0, false);
+        b.push(&obs, &act, 0.0, 0.0, 0.0, false);
+    }
+}

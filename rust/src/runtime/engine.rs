@@ -1,0 +1,384 @@
+//! The PJRT execution engine: compiled artifacts + hot-path entry points.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+use xla::{
+    HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation,
+};
+
+use super::manifest::Manifest;
+
+/// Output of one policy forward: per-head log-probs and the value estimate.
+#[derive(Clone, Debug)]
+pub struct ForwardOut {
+    /// Concatenated per-head log-softmax, length `act_total * batch`.
+    pub logp_all: Vec<f32>,
+    /// Value estimates, length `batch`.
+    pub value: Vec<f32>,
+}
+
+/// PPO update statistics (mirrors model.py's stats vector).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UpdateStats {
+    pub loss: f32,
+    pub pi_loss: f32,
+    pub vf_loss: f32,
+    pub entropy: f32,
+    pub approx_kl: f32,
+    pub clip_frac: f32,
+    pub grad_norm: f32,
+    pub update_norm: f32,
+}
+
+impl UpdateStats {
+    fn from_slice(s: &[f32]) -> UpdateStats {
+        UpdateStats {
+            loss: s[0],
+            pi_loss: s[1],
+            vf_loss: s[2],
+            entropy: s[3],
+            approx_kl: s[4],
+            clip_frac: s[5],
+            grad_norm: s[6],
+            update_norm: s[7],
+        }
+    }
+}
+
+/// Output of one PPO minibatch step.
+#[derive(Clone, Debug)]
+pub struct UpdateOut {
+    pub params: Vec<f32>,
+    pub adam_m: Vec<f32>,
+    pub adam_v: Vec<f32>,
+    pub stats: UpdateStats,
+}
+
+/// Compiled artifacts bound to a PJRT client.
+///
+/// Construction compiles every HLO module once; the per-call cost is a
+/// host-literal transfer + execution.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: PjRtClient,
+    forward: PjRtLoadedExecutable,
+    forward_b64: PjRtLoadedExecutable,
+    update: PjRtLoadedExecutable,
+    /// Epoch-fused update (§Perf): one call = n_epoch × minibatch steps.
+    epochs: Option<PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl Engine {
+    /// Load the artifact directory and compile everything on the CPU
+    /// PJRT client.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let compile = |rel: &str| -> Result<PjRtLoadedExecutable> {
+            let path = dir.join(rel);
+            let proto = HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))
+        };
+        let forward = compile(&manifest.forward_hlo)?;
+        let forward_b64 = compile(&manifest.forward_b64_hlo)?;
+        let update = compile(&manifest.update_hlo)?;
+        let epochs = if manifest.epochs_hlo.is_empty() {
+            None
+        } else {
+            Some(compile(&manifest.epochs_hlo)?)
+        };
+        Ok(Engine {
+            manifest,
+            client,
+            forward,
+            forward_b64,
+            update,
+            epochs,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Locate artifacts via [`super::find_artifact_dir`] and load.
+    pub fn discover() -> Result<Engine> {
+        let dir = super::find_artifact_dir()
+            .context("artifacts/manifest.json not found — run `make artifacts`")?;
+        Self::load(&dir)
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn lit_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+        let numel: i64 = dims.iter().product();
+        if numel as usize != data.len() {
+            bail!("literal shape {:?} != data len {}", dims, data.len());
+        }
+        Ok(Literal::vec1(data).reshape(dims)?)
+    }
+
+    fn lit_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
+        let numel: i64 = dims.iter().product();
+        if numel as usize != data.len() {
+            bail!("literal shape {:?} != data len {}", dims, data.len());
+        }
+        Ok(Literal::vec1(data).reshape(dims)?)
+    }
+
+    /// Execute and return the root tuple literal. The computations are
+    /// lowered with `return_tuple=True`, so the root is a tuple of the N
+    /// outputs (NOT a 1-tuple wrapper): callers use `to_tuple2`/`to_tuple4`.
+    fn run(exe: &PjRtLoadedExecutable, inputs: &[Literal]) -> Result<Literal> {
+        Ok(exe.execute::<Literal>(inputs)?[0][0].to_literal_sync()?)
+    }
+
+    /// Single-observation policy forward (the rollout hot path).
+    ///
+    /// `params`: flat parameter vector (`manifest.param_count`);
+    /// `obs`: one observation (`manifest.obs_dim`).
+    pub fn policy_forward(&self, params: &[f32], obs: &[f32]) -> Result<ForwardOut> {
+        self.forward_batch_on(&self.forward, 1, params, obs)
+    }
+
+    /// Batched policy forward (`manifest.eval_batch` rows) for sweeps.
+    pub fn policy_forward_batch(&self, params: &[f32], obs: &[f32]) -> Result<ForwardOut> {
+        self.forward_batch_on(&self.forward_b64, self.manifest.eval_batch, params, obs)
+    }
+
+    fn forward_batch_on(
+        &self,
+        exe: &PjRtLoadedExecutable,
+        batch: usize,
+        params: &[f32],
+        obs: &[f32],
+    ) -> Result<ForwardOut> {
+        let m = &self.manifest;
+        if params.len() != m.param_count {
+            bail!("params len {} != {}", params.len(), m.param_count);
+        }
+        if obs.len() != batch * m.obs_dim {
+            bail!("obs len {} != {}x{}", obs.len(), batch, m.obs_dim);
+        }
+        let p = Self::lit_f32(params, &[m.param_count as i64])?;
+        let o = Self::lit_f32(obs, &[batch as i64, m.obs_dim as i64])?;
+        let out = Self::run(exe, &[p, o])?;
+        let (logp, value) = out.to_tuple2()?;
+        Ok(ForwardOut {
+            logp_all: logp.to_vec::<f32>()?,
+            value: value.to_vec::<f32>()?,
+        })
+    }
+
+    /// One PPO minibatch Adam step (batch = `manifest.hyper.batch_size`).
+    ///
+    /// `step` is the 1-based Adam timestep; `hyper` = [lr, clip, ent_coef].
+    #[allow(clippy::too_many_arguments)]
+    pub fn ppo_update(
+        &self,
+        params: &[f32],
+        adam_m: &[f32],
+        adam_v: &[f32],
+        step: f32,
+        obs: &[f32],
+        actions: &[i32],
+        old_logp: &[f32],
+        advantages: &[f32],
+        returns: &[f32],
+        hyper: [f32; 3],
+    ) -> Result<UpdateOut> {
+        let m = &self.manifest;
+        let mb = m.hyper.batch_size;
+        let pc = m.param_count as i64;
+        if params.len() != m.param_count || adam_m.len() != m.param_count
+            || adam_v.len() != m.param_count
+        {
+            bail!("param/adam vector length mismatch");
+        }
+        if obs.len() != mb * m.obs_dim
+            || actions.len() != mb * m.n_heads
+            || old_logp.len() != mb
+            || advantages.len() != mb
+            || returns.len() != mb
+        {
+            bail!("minibatch shape mismatch (expected {mb} rows)");
+        }
+        let inputs = [
+            Self::lit_f32(params, &[pc])?,
+            Self::lit_f32(adam_m, &[pc])?,
+            Self::lit_f32(adam_v, &[pc])?,
+            Self::lit_f32(&[step], &[1])?,
+            Self::lit_f32(obs, &[mb as i64, m.obs_dim as i64])?,
+            Self::lit_i32(actions, &[mb as i64, m.n_heads as i64])?,
+            Self::lit_f32(old_logp, &[mb as i64])?,
+            Self::lit_f32(advantages, &[mb as i64])?,
+            Self::lit_f32(returns, &[mb as i64])?,
+            Self::lit_f32(&hyper, &[3])?,
+        ];
+        let out = Self::run(&self.update, &inputs)?;
+        let (new_p, new_m, new_v, stats) = out.to_tuple4()?;
+        let stats_vec = stats.to_vec::<f32>()?;
+        Ok(UpdateOut {
+            params: new_p.to_vec::<f32>()?,
+            adam_m: new_m.to_vec::<f32>()?,
+            adam_v: new_v.to_vec::<f32>()?,
+            stats: UpdateStats::from_slice(&stats_vec),
+        })
+    }
+
+    /// Whether the epoch-fused update artifact is available.
+    pub fn has_epochs(&self) -> bool {
+        self.epochs.is_some()
+    }
+
+    /// One full PPO optimize phase (n_epoch × minibatches) in a single
+    /// HLO call — the §Perf fast path. `perm` is the flattened
+    /// [K × batch_size] shuffled index matrix (K = n_epoch · n_steps /
+    /// batch_size); `step0` the 1-based Adam step of the first minibatch.
+    ///
+    /// Returned stats are the mean over all K minibatch steps.
+    #[allow(clippy::too_many_arguments)]
+    pub fn ppo_epochs(
+        &self,
+        params: &[f32],
+        adam_m: &[f32],
+        adam_v: &[f32],
+        step0: f32,
+        obs: &[f32],
+        actions: &[i32],
+        old_logp: &[f32],
+        advantages: &[f32],
+        returns: &[f32],
+        perm: &[i32],
+        hyper: [f32; 3],
+    ) -> Result<UpdateOut> {
+        let exe = self
+            .epochs
+            .as_ref()
+            .context("ppo_epochs artifact missing — rerun `make artifacts`")?;
+        let m = &self.manifest;
+        let n = m.hyper.n_steps;
+        let k = m.hyper.n_epoch * (n / m.hyper.batch_size);
+        let pc = m.param_count as i64;
+        if obs.len() != n * m.obs_dim
+            || actions.len() != n * m.n_heads
+            || old_logp.len() != n
+            || advantages.len() != n
+            || returns.len() != n
+        {
+            bail!("rollout shape mismatch (expected {n} rows)");
+        }
+        if perm.len() != k * m.hyper.batch_size {
+            bail!(
+                "perm len {} != {}x{}",
+                perm.len(),
+                k,
+                m.hyper.batch_size
+            );
+        }
+        let inputs = [
+            Self::lit_f32(params, &[pc])?,
+            Self::lit_f32(adam_m, &[pc])?,
+            Self::lit_f32(adam_v, &[pc])?,
+            Self::lit_f32(&[step0], &[1])?,
+            Self::lit_f32(obs, &[n as i64, m.obs_dim as i64])?,
+            Self::lit_i32(actions, &[n as i64, m.n_heads as i64])?,
+            Self::lit_f32(old_logp, &[n as i64])?,
+            Self::lit_f32(advantages, &[n as i64])?,
+            Self::lit_f32(returns, &[n as i64])?,
+            Self::lit_i32(perm, &[k as i64, m.hyper.batch_size as i64])?,
+            Self::lit_f32(&hyper, &[3])?,
+        ];
+        let out = Self::run(exe, &inputs)?;
+        let (new_p, new_m, new_v, stats) = out.to_tuple4()?;
+        let stats_vec = stats.to_vec::<f32>()?;
+        Ok(UpdateOut {
+            params: new_p.to_vec::<f32>()?,
+            adam_m: new_m.to_vec::<f32>()?,
+            adam_v: new_v.to_vec::<f32>()?,
+            stats: UpdateStats::from_slice(&stats_vec),
+        })
+    }
+
+    /// Create a rollout session with the parameter vector resident on the
+    /// device (§Perf: the per-forward 193 KB params upload dominates the
+    /// rollout otherwise). Recreate the session whenever params change.
+    pub fn forward_session(&self, params: &[f32]) -> Result<ForwardSession<'_>> {
+        if params.len() != self.manifest.param_count {
+            bail!("params len {} != {}", params.len(), self.manifest.param_count);
+        }
+        let buf = self
+            .client
+            .buffer_from_host_buffer(params, &[self.manifest.param_count], None)?;
+        Ok(ForwardSession { engine: self, params_buf: buf })
+    }
+
+    /// Load the golden parameter vector written by aot.py.
+    pub fn golden_params(&self) -> Result<Vec<f32>> {
+        let path = self.dir.join("golden_params.f32.bin");
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() % 4 != 0 {
+            bail!("golden params file not a multiple of 4 bytes");
+        }
+        let mut out = Vec::with_capacity(bytes.len() / 4);
+        for chunk in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+        if out.len() != self.manifest.param_count {
+            bail!(
+                "golden params len {} != manifest param_count {}",
+                out.len(),
+                self.manifest.param_count
+            );
+        }
+        Ok(out)
+    }
+}
+
+/// A rollout session holding the parameter vector device-resident.
+///
+/// The PPO rollout performs `n_steps` (2048) forwards with *unchanged*
+/// parameters; uploading the 48K-float vector per call dominated the
+/// rollout cost (EXPERIMENTS.md §Perf). The session uploads it once and
+/// executes via `execute_b` with only the observation crossing the host
+/// boundary per step.
+pub struct ForwardSession<'a> {
+    engine: &'a Engine,
+    params_buf: PjRtBuffer,
+}
+
+impl<'a> ForwardSession<'a> {
+    /// Single-observation forward against the cached parameters.
+    pub fn forward(&self, obs: &[f32]) -> Result<ForwardOut> {
+        let m = &self.engine.manifest;
+        if obs.len() != m.obs_dim {
+            bail!("obs len {} != {}", obs.len(), m.obs_dim);
+        }
+        let obs_buf =
+            self.engine
+                .client
+                .buffer_from_host_buffer(obs, &[1, m.obs_dim], None)?;
+        let result = self
+            .engine
+            .forward
+            .execute_b(&[&self.params_buf, &obs_buf])?[0][0]
+            .to_literal_sync()?;
+        let (logp, value) = result.to_tuple2()?;
+        Ok(ForwardOut {
+            logp_all: logp.to_vec::<f32>()?,
+            value: value.to_vec::<f32>()?,
+        })
+    }
+}

@@ -1,0 +1,67 @@
+//! Golden-vector loader: cross-layer numerics contract.
+//!
+//! `aot.py` executes the lowered computations under jax and records inputs
+//! and outputs in `artifacts/golden.json`. The Rust integration tests
+//! replay the same inputs through the PJRT engine and assert agreement —
+//! proving the full chain Pallas → StableHLO → HLO text → xla_extension
+//! 0.5.1 → PJRT CPU preserves numerics.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Parsed golden.json.
+#[derive(Clone, Debug)]
+pub struct Golden {
+    pub forward_obs: Vec<f32>,
+    pub forward_logp_head0: Vec<f32>,
+    pub forward_logp_sum: f64,
+    pub forward_value: f64,
+    pub update_obs: Vec<f32>,
+    pub update_actions: Vec<i32>,
+    pub update_old_logp: Vec<f32>,
+    pub update_advantages: Vec<f32>,
+    pub update_returns: Vec<f32>,
+    pub update_hyper: [f32; 3],
+    pub update_stats: Vec<f32>,
+    pub update_new_params_head: Vec<f32>,
+    pub update_new_params_l2: f64,
+}
+
+impl Golden {
+    pub fn load(dir: &Path) -> Result<Golden> {
+        let path = dir.join("golden.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("golden parse: {e}"))?;
+        let fwd = v.req("forward");
+        let upd = v.req("update");
+        let hyper_v = upd.req("hyper").as_f32_vec().context("hyper")?;
+        Ok(Golden {
+            forward_obs: fwd.req("obs").as_f32_vec().context("obs")?,
+            forward_logp_head0: fwd.req("logp_head0").as_f32_vec().context("logp_head0")?,
+            forward_logp_sum: fwd.req("logp_sum").as_f64().context("logp_sum")?,
+            forward_value: fwd.req("value").as_f64().context("value")?,
+            update_obs: upd.req("obs").as_f32_vec().context("update obs")?,
+            update_actions: upd
+                .req("actions")
+                .as_f64_vec()
+                .context("actions")?
+                .into_iter()
+                .map(|x| x as i32)
+                .collect(),
+            update_old_logp: upd.req("old_logp").as_f32_vec().context("old_logp")?,
+            update_advantages: upd.req("advantages").as_f32_vec().context("advantages")?,
+            update_returns: upd.req("returns").as_f32_vec().context("returns")?,
+            update_hyper: [hyper_v[0], hyper_v[1], hyper_v[2]],
+            update_stats: upd.req("stats").as_f32_vec().context("stats")?,
+            update_new_params_head: upd
+                .req("new_params_head")
+                .as_f32_vec()
+                .context("new_params_head")?,
+            update_new_params_l2: upd.req("new_params_l2").as_f64().context("l2")?,
+        })
+    }
+}

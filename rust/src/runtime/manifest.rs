@@ -1,0 +1,227 @@
+//! The AOT contract: `artifacts/manifest.json` parsed into typed form.
+//!
+//! `python/compile/aot.py` writes this file; it pins the parameter-vector
+//! layout, the design-space action dimensions and the PPO hyper-parameters
+//! the artifacts were traced with. The Rust side trusts nothing implicit:
+//! `gym::space::DesignSpace` asserts its own action dims equal the
+//! manifest's at startup, so a stale artifact directory fails fast.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One tensor inside the flat parameter vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// PPO hyper-parameters the update artifact was traced with (Table 5).
+#[derive(Clone, Debug)]
+pub struct HyperParams {
+    pub n_steps: usize,
+    pub batch_size: usize,
+    pub n_epoch: usize,
+    pub learning_rate: f64,
+    pub clip_range: f64,
+    pub ent_coef: f64,
+    pub vf_coef: f64,
+    pub gamma: f64,
+    pub gae_lambda: f64,
+    pub max_grad_norm: f64,
+    pub total_timesteps: usize,
+    pub episode_length: usize,
+}
+
+/// Typed view of manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub obs_dim: usize,
+    pub hidden: usize,
+    pub action_dims: Vec<usize>,
+    pub act_total: usize,
+    pub n_heads: usize,
+    pub param_count: usize,
+    pub eval_batch: usize,
+    pub params: Vec<ParamEntry>,
+    pub hyper: HyperParams,
+    pub forward_hlo: String,
+    pub forward_b64_hlo: String,
+    pub update_hlo: String,
+    /// Epoch-fused update artifact (empty when built by an older aot.py;
+    /// the engine then falls back to per-minibatch updates).
+    pub epochs_hlo: String,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Manifest> {
+        let params: Vec<ParamEntry> = v
+            .req("params")
+            .as_arr()
+            .context("params not an array")?
+            .iter()
+            .map(|p| ParamEntry {
+                name: p.req("name").as_str().unwrap_or_default().to_string(),
+                shape: p.req("shape").as_usize_vec().unwrap_or_default(),
+                offset: p.req("offset").as_usize().unwrap_or(0),
+                size: p.req("size").as_usize().unwrap_or(0),
+            })
+            .collect();
+
+        let h = v.req("hyperparams");
+        let num = |key: &str| -> Result<f64> {
+            h.req(key)
+                .as_f64()
+                .with_context(|| format!("hyperparam {key} not numeric"))
+        };
+        let hyper = HyperParams {
+            n_steps: num("n_steps")? as usize,
+            batch_size: num("batch_size")? as usize,
+            n_epoch: num("n_epoch")? as usize,
+            learning_rate: num("learning_rate")?,
+            clip_range: num("clip_range")?,
+            ent_coef: num("ent_coef")?,
+            vf_coef: num("vf_coef")?,
+            gamma: num("gamma")?,
+            gae_lambda: num("gae_lambda")?,
+            max_grad_norm: num("max_grad_norm")?,
+            total_timesteps: num("total_timesteps")? as usize,
+            episode_length: num("episode_length")? as usize,
+        };
+
+        let arts = v.req("artifacts");
+        let man = Manifest {
+            obs_dim: v.req("obs_dim").as_usize().context("obs_dim")?,
+            hidden: v.req("hidden").as_usize().context("hidden")?,
+            action_dims: v.req("action_dims").as_usize_vec().context("action_dims")?,
+            act_total: v.req("act_total").as_usize().context("act_total")?,
+            n_heads: v.req("n_heads").as_usize().context("n_heads")?,
+            param_count: v.req("param_count").as_usize().context("param_count")?,
+            eval_batch: v.req("eval_batch").as_usize().context("eval_batch")?,
+            params,
+            hyper,
+            forward_hlo: arts.req("policy_forward").as_str().unwrap_or_default().into(),
+            forward_b64_hlo: arts
+                .req("policy_forward_b64")
+                .as_str()
+                .unwrap_or_default()
+                .into(),
+            update_hlo: arts.req("ppo_update").as_str().unwrap_or_default().into(),
+            epochs_hlo: arts
+                .get("ppo_epochs")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .into(),
+        };
+        man.validate()?;
+        Ok(man)
+    }
+
+    /// Internal consistency: action dims sum to act_total, parameter
+    /// entries tile the flat vector exactly.
+    pub fn validate(&self) -> Result<()> {
+        if self.action_dims.len() != self.n_heads {
+            bail!(
+                "n_heads {} != len(action_dims) {}",
+                self.n_heads,
+                self.action_dims.len()
+            );
+        }
+        let sum: usize = self.action_dims.iter().sum();
+        if sum != self.act_total {
+            bail!("act_total {} != sum(action_dims) {}", self.act_total, sum);
+        }
+        let mut pos = 0;
+        for p in &self.params {
+            if p.offset != pos {
+                bail!("param {} offset {} != running total {pos}", p.name, p.offset);
+            }
+            let n: usize = p.shape.iter().product();
+            if n != p.size {
+                bail!("param {} size {} != prod(shape) {n}", p.name, p.size);
+            }
+            pos += n;
+        }
+        if pos != self.param_count {
+            bail!("param_count {} != layout total {pos}", self.param_count);
+        }
+        Ok(())
+    }
+
+    /// (start, end) logit ranges of each categorical head.
+    pub fn head_slices(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.n_heads);
+        let mut off = 0;
+        for &d in &self.action_dims {
+            out.push((off, off + d));
+            off += d;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimal_json() -> String {
+        r#"{
+          "obs_dim": 2, "hidden": 4, "action_dims": [2, 3], "act_total": 5,
+          "n_heads": 2, "param_count": 6, "eval_batch": 8,
+          "params": [
+            {"name": "w", "shape": [2, 2], "offset": 0, "size": 4},
+            {"name": "b", "shape": [2], "offset": 4, "size": 2}
+          ],
+          "hyperparams": {
+            "n_steps": 8, "batch_size": 4, "n_epoch": 2,
+            "learning_rate": 0.001, "clip_range": 0.2, "ent_coef": 0.1,
+            "vf_coef": 0.5, "gamma": 0.99, "gae_lambda": 0.95,
+            "max_grad_norm": 0.5, "adam_beta1": 0.9, "adam_beta2": 0.999,
+            "adam_eps": 1e-5, "total_timesteps": 100, "episode_length": 2
+          },
+          "artifacts": {
+            "policy_forward": "f.hlo.txt",
+            "policy_forward_b64": "fb.hlo.txt",
+            "ppo_update": "u.hlo.txt"
+          }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let v = Json::parse(&minimal_json()).unwrap();
+        let m = Manifest::from_json(&v).unwrap();
+        assert_eq!(m.obs_dim, 2);
+        assert_eq!(m.action_dims, vec![2, 3]);
+        assert_eq!(m.head_slices(), vec![(0, 2), (2, 5)]);
+        assert_eq!(m.hyper.batch_size, 4);
+    }
+
+    #[test]
+    fn rejects_inconsistent_act_total() {
+        let bad = minimal_json().replace("\"act_total\": 5", "\"act_total\": 6");
+        let v = Json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_param_layout() {
+        let bad = minimal_json().replace("\"offset\": 4", "\"offset\": 5");
+        let v = Json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(&v).is_err());
+    }
+}

@@ -1,0 +1,39 @@
+//! PJRT runtime: load AOT'd HLO-text artifacts and execute them from Rust.
+//!
+//! This is the only module that touches the `xla` crate. The compile path
+//! (`python/compile/aot.py`) lowers the JAX/Pallas computations once to
+//! HLO text; [`Engine`] compiles them on a `PjRtClient` at startup and the
+//! optimizer then calls [`Engine::policy_forward`] / [`Engine::ppo_update`]
+//! on the hot path with plain `f32` slices — no Python anywhere.
+
+mod engine;
+mod golden;
+mod manifest;
+
+pub use engine::{Engine, ForwardOut, UpdateOut, UpdateStats};
+pub use golden::Golden;
+pub use manifest::{Manifest, ParamEntry};
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Locate the artifact directory: `$CHIPLET_GYM_ARTIFACTS`, else walk up
+/// from the current directory looking for `artifacts/manifest.json`.
+pub fn find_artifact_dir() -> Option<std::path::PathBuf> {
+    if let Ok(dir) = std::env::var("CHIPLET_GYM_ARTIFACTS") {
+        let p = std::path::PathBuf::from(dir);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let mut cur = std::env::current_dir().ok()?;
+    loop {
+        let cand = cur.join(DEFAULT_ARTIFACT_DIR);
+        if cand.join("manifest.json").exists() {
+            return Some(cand);
+        }
+        if !cur.pop() {
+            return None;
+        }
+    }
+}

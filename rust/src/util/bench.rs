@@ -1,0 +1,157 @@
+//! Criterion-lite micro-benchmark harness (criterion is unavailable in the
+//! offline build environment; see DESIGN.md §7 Substitutions).
+//!
+//! Same methodology as criterion: a warm-up phase, then timed batches with
+//! mean/std/min/max reporting. Paper-figure benches use [`Runner`] both
+//! for timing and to emit the figure/table series via `report::csv`.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Nanoseconds per iteration across timed batches.
+    pub ns_per_iter: Summary,
+    pub iters: u64,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self) -> f64 {
+        1e9 / self.ns_per_iter.mean
+    }
+}
+
+/// Bench runner: registers cases, times them, prints a summary table.
+pub struct Runner {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub batches: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        Runner {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(600),
+            batches: 10,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Runner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick mode for expensive end-to-end cases (single timed batch).
+    pub fn quick() -> Self {
+        Runner {
+            warmup: Duration::from_millis(0),
+            measure: Duration::from_millis(0),
+            batches: 1,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, auto-calibrating the per-batch iteration count.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warm-up and calibration: how many iters fit in a batch?
+        let start = Instant::now();
+        let mut calib_iters: u64 = 0;
+        loop {
+            f();
+            calib_iters += 1;
+            if start.elapsed() >= self.warmup && calib_iters >= 1 {
+                break;
+            }
+        }
+        let per_iter = start.elapsed().as_secs_f64() / calib_iters as f64;
+        let batch_time = (self.measure.as_secs_f64() / self.batches as f64).max(1e-4);
+        let iters_per_batch = ((batch_time / per_iter).ceil() as u64).max(1);
+
+        let mut samples = Vec::with_capacity(self.batches);
+        let mut total_iters = 0u64;
+        for _ in 0..self.batches {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_batch {
+                f();
+            }
+            let dt = t0.elapsed().as_nanos() as f64 / iters_per_batch as f64;
+            samples.push(dt);
+            total_iters += iters_per_batch;
+        }
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            ns_per_iter: Summary::of(&samples),
+            iters: total_iters,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Render all results as an aligned table.
+    pub fn report(&self) -> String {
+        let mut t = super::table::Table::new(["benchmark", "mean", "std", "min", "iters/s"]);
+        for r in &self.results {
+            t.row([
+                r.name.clone(),
+                fmt_ns(r.ns_per_iter.mean),
+                fmt_ns(r.ns_per_iter.std),
+                fmt_ns(r.ns_per_iter.min),
+                format!("{:.0}", r.throughput_per_sec()),
+            ]);
+        }
+        t.render()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Human-format a nanosecond quantity.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn times_a_cheap_closure() {
+        let mut r = Runner {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            batches: 3,
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        let res = r.bench("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(res.ns_per_iter.mean > 0.0);
+        assert!(res.iters > 0);
+        assert!(r.report().contains("noop-ish"));
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12e3).contains("µs"));
+        assert!(fmt_ns(12e6).contains("ms"));
+        assert!(fmt_ns(12e9).contains(" s"));
+    }
+}

@@ -1,0 +1,20 @@
+//! Zero-dependency substrate utilities.
+//!
+//! The offline build environment vendors only the `xla` crate and `anyhow`,
+//! so everything a production optimizer normally pulls from crates.io is
+//! implemented here from scratch: a PCG-family RNG ([`rng`]), a JSON
+//! parser/writer ([`json`]), descriptive statistics ([`stats`]), a CLI
+//! argument parser ([`cli`]), ASCII table rendering ([`table`]), a
+//! criterion-style micro-benchmark harness ([`bench`]) and a
+//! proptest-style property-testing framework with shrinking
+//! ([`proptest`]).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use rng::Rng;

@@ -1,0 +1,220 @@
+//! Proptest-lite: randomized property testing with shrinking.
+//!
+//! The real proptest crate is unavailable offline (DESIGN.md §7); this
+//! module recreates the core workflow used by the coordinator invariants:
+//! generate N random cases from a seeded RNG, run the property, and on
+//! failure greedily shrink the failing case toward a minimal example
+//! before reporting it.
+
+use super::rng::Rng;
+
+/// Number of cases per property (overridable per call site).
+pub const DEFAULT_CASES: usize = 256;
+
+/// A generator of random values together with a shrinking strategy.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate simpler values, tried in order during shrinking.
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Uniform integer in [lo, hi] with shrinking toward lo.
+pub struct IntGen {
+    pub lo: i64,
+    pub hi: i64,
+}
+
+impl Gen for IntGen {
+    type Value = i64;
+
+    fn generate(&self, rng: &mut Rng) -> i64 {
+        rng.range_i64(self.lo, self.hi)
+    }
+
+    fn shrink(&self, v: &i64) -> Vec<i64> {
+        let mut out = Vec::new();
+        if *v != self.lo {
+            out.push(self.lo);
+            let mid = self.lo + (*v - self.lo) / 2;
+            if mid != *v && mid != self.lo {
+                out.push(mid);
+            }
+            if *v - 1 >= self.lo {
+                out.push(*v - 1);
+            }
+        }
+        out
+    }
+}
+
+/// Uniform f64 in [lo, hi) with shrinking toward lo and simple fractions.
+pub struct FloatGen {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Gen for FloatGen {
+    type Value = f64;
+
+    fn generate(&self, rng: &mut Rng) -> f64 {
+        rng.range_f64(self.lo, self.hi)
+    }
+
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        if *v != self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*v - self.lo) / 2.0);
+        }
+        out
+    }
+}
+
+/// Fixed-length vector of an inner generator, shrinking element-wise.
+pub struct VecGen<G: Gen> {
+    pub inner: G,
+    pub len: usize,
+}
+
+impl<G: Gen> Gen for VecGen<G> {
+    type Value = Vec<G::Value>;
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (0..self.len).map(|_| self.inner.generate(rng)).collect()
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        for (i, item) in v.iter().enumerate() {
+            for simpler in self.inner.shrink(item) {
+                let mut copy = v.clone();
+                copy[i] = simpler;
+                out.push(copy);
+            }
+        }
+        out.truncate(32); // keep the shrink frontier bounded
+        out
+    }
+}
+
+/// Outcome of a property run.
+#[derive(Debug)]
+pub enum PropResult<V> {
+    Ok { cases: usize },
+    Failed { original: V, minimal: V, message: String },
+}
+
+/// Run `prop` on `cases` random values from `gen`; shrink on failure.
+///
+/// The property returns `Err(message)` to signal failure (so failures can
+/// carry diagnostics without panicking mid-shrink).
+pub fn check<G, F>(seed: u64, cases: usize, gen: &G, mut prop: F) -> PropResult<G::Value>
+where
+    G: Gen,
+    F: FnMut(&G::Value) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for _ in 0..cases {
+        let value = gen.generate(&mut rng);
+        if let Err(msg) = prop(&value) {
+            // Greedy shrink: repeatedly take the first simpler failing value.
+            let original = value.clone();
+            let mut current = value;
+            let mut message = msg;
+            'outer: loop {
+                for cand in gen.shrink(&current) {
+                    if let Err(m) = prop(&cand) {
+                        current = cand;
+                        message = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            return PropResult::Failed {
+                original,
+                minimal: current,
+                message,
+            };
+        }
+    }
+    PropResult::Ok { cases }
+}
+
+/// Assert wrapper: panics with the minimal counterexample.
+pub fn assert_prop<G, F>(seed: u64, gen: &G, prop: F)
+where
+    G: Gen,
+    F: FnMut(&G::Value) -> Result<(), String>,
+{
+    match check(seed, DEFAULT_CASES, gen, prop) {
+        PropResult::Ok { .. } => {}
+        PropResult::Failed {
+            original,
+            minimal,
+            message,
+        } => panic!(
+            "property failed: {message}\n  original: {original:?}\n  minimal:  {minimal:?}"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        assert_prop(0, &IntGen { lo: 0, hi: 100 }, |&x| {
+            if x >= 0 {
+                Ok(())
+            } else {
+                Err("negative".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_boundary() {
+        let result = check(0, 512, &IntGen { lo: 0, hi: 1000 }, |&x| {
+            if x < 500 {
+                Ok(())
+            } else {
+                Err(format!("{x} >= 500"))
+            }
+        });
+        match result {
+            PropResult::Failed { minimal, .. } => {
+                // Greedy shrinking should land exactly on the boundary.
+                assert_eq!(minimal, 500);
+            }
+            other => panic!("expected failure, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn vec_gen_generates_fixed_len() {
+        let gen = VecGen {
+            inner: IntGen { lo: 0, hi: 9 },
+            len: 14,
+        };
+        let mut rng = Rng::new(1);
+        let v = gen.generate(&mut rng);
+        assert_eq!(v.len(), 14);
+        assert!(v.iter().all(|&x| (0..=9).contains(&x)));
+    }
+
+    #[test]
+    fn vec_gen_shrinks_elementwise() {
+        let gen = VecGen {
+            inner: IntGen { lo: 0, hi: 9 },
+            len: 2,
+        };
+        let shrunk = gen.shrink(&vec![5, 0]);
+        assert!(shrunk.iter().any(|v| v[0] < 5 && v[1] == 0));
+    }
+}

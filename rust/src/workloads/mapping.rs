@@ -1,0 +1,120 @@
+//! Workload → PE-array mapping model (Fig. 5 + eq. 2/4's U_chip, M_eff).
+//!
+//! The Fig. 5 dataflow splits the input matrix along rows and the weight
+//! matrix along columns across the chiplet array; within one chiplet the
+//! GEMM tile maps onto a square systolic array. Mapping efficiency is the
+//! fraction of PE slots doing useful work: edge-tile waste in each of the
+//! three GEMM dimensions, weighted across the model's layers, discounted
+//! by the non-GEMM fraction running on the SFU.
+
+use super::mlperf::{GemmLayer, Workload};
+
+/// Utilization of a `rows`×`cols` systolic array on one GEMM tile.
+///
+/// The array processes ⌈M/rows⌉ × ⌈N/cols⌉ passes; the last pass in each
+/// dimension is partially filled. K only affects pipeline fill (amortized
+/// away for K ≫ array depth, penalized for tiny K).
+pub fn gemm_utilization(rows: usize, cols: usize, l: &GemmLayer) -> f64 {
+    let fill = |work: usize, dim: usize| -> f64 {
+        let passes = work.div_ceil(dim);
+        work as f64 / (passes * dim) as f64
+    };
+    let u_m = fill(l.m, rows);
+    let u_n = fill(l.n, cols);
+    // Pipeline fill/drain: K-cycle stream through a `rows`-deep array.
+    let u_k = l.k as f64 / (l.k as f64 + rows as f64);
+    u_m * u_n * u_k
+}
+
+/// Chiplet-level mapping efficiency U_chip (eq. 4) of a workload on a
+/// square systolic array of `pe_per_chiplet` MACs, split spatially across
+/// `n_chiplets` per Fig. 5 (rows of the input across chiplet rows,
+/// columns of the weights across chiplet columns).
+pub fn u_chip(pe_per_chiplet: f64, n_chiplets: usize, w: &Workload) -> f64 {
+    // Square array dimension per chiplet.
+    let dim = (pe_per_chiplet.max(1.0)).sqrt().floor() as usize;
+    let dim = dim.max(1);
+    // Fig. 5 spatial split: the array of chiplets tiles M (input rows)
+    // and N (weight cols); approximate the chiplet grid as square.
+    let grid = (n_chiplets as f64).sqrt().round().max(1.0) as usize;
+    let mut acc = 0.0;
+    for l in &w.layers {
+        let per_chiplet = GemmLayer {
+            m: l.m.div_ceil(grid).max(1),
+            k: l.k,
+            n: l.n.div_ceil(grid).max(1),
+            weight: l.weight,
+        };
+        acc += l.weight * gemm_utilization(dim, dim, &per_chiplet);
+    }
+    // Non-GEMM ops run on the SFU; they don't use the PE array at all.
+    acc * (1.0 - w.non_gemm_frac)
+}
+
+/// End-to-end mapping efficiency M_eff (eq. 2): currently identical to
+/// U_chip; kept separate because eq. 2 composes it with the ops/task
+/// decomposition (tasks/sec harness in `monolithic.rs` / Fig. 12 bench).
+pub fn m_eff(pe_per_chiplet: f64, n_chiplets: usize, w: &Workload) -> f64 {
+    u_chip(pe_per_chiplet, n_chiplets, w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::mlperf::mlperf_suite;
+
+    #[test]
+    fn perfect_fit_is_near_one() {
+        let l = GemmLayer { m: 6400, k: 6400, n: 6400, weight: 1.0 };
+        let u = gemm_utilization(64, 64, &l);
+        assert!(u > 0.95, "u {u}");
+    }
+
+    #[test]
+    fn tiny_gemm_underutilizes() {
+        let l = GemmLayer { m: 8, k: 8, n: 8, weight: 1.0 };
+        let u = gemm_utilization(64, 64, &l);
+        assert!(u < 0.05, "u {u}");
+    }
+
+    #[test]
+    fn edge_waste_matches_hand_calc() {
+        // M=96 on 64 rows: 2 passes, 96/128 = 0.75 fill; N=64 exact;
+        // K=4096 ≫ 64 ⇒ u_k ≈ 0.9846.
+        let l = GemmLayer { m: 96, k: 4096, n: 64, weight: 1.0 };
+        let u = gemm_utilization(64, 64, &l);
+        let want = 0.75 * 1.0 * (4096.0 / 4160.0);
+        assert!((u - want).abs() < 1e-9, "u {u} want {want}");
+    }
+
+    #[test]
+    fn u_chip_in_unit_interval_for_all_workloads() {
+        for w in mlperf_suite() {
+            for &(pe, n) in &[(4096.0, 60usize), (2048.0, 112), (165_000.0, 1)] {
+                let u = u_chip(pe, n, &w);
+                assert!(u > 0.0 && u <= 1.0, "{} pe={pe} n={n}: {u}", w.name);
+            }
+        }
+    }
+
+    #[test]
+    fn depthwise_maps_worse_than_dense() {
+        // EfficientDet's depthwise-thin GEMMs should map worse than
+        // BERT's fat GEMMs at the same configuration.
+        let suite = mlperf_suite();
+        let eff = suite.iter().find(|w| w.name == "efficientdet").unwrap();
+        let bert = suite.iter().find(|w| w.name == "bert").unwrap();
+        assert!(u_chip(4096.0, 60, eff) < u_chip(4096.0, 60, bert));
+    }
+
+    #[test]
+    fn spatial_split_degrades_small_models() {
+        // Splitting ResNet-50's small late-stage GEMMs across many
+        // chiplets wastes PE rows (Fig. 5 trade-off).
+        let suite = mlperf_suite();
+        let resnet = suite.iter().find(|w| w.name == "resnet50").unwrap();
+        let u1 = u_chip(4096.0, 1, resnet);
+        let u112 = u_chip(4096.0, 112, resnet);
+        assert!(u112 < u1, "u1 {u1} u112 {u112}");
+    }
+}

@@ -1,0 +1,167 @@
+//! MLPerf benchmark workload models — Table 7 of the paper.
+//!
+//! Each workload carries its per-task (forward-pass) MAC count and a small
+//! set of representative GEMM layers. The layers are used by [`super::
+//! mapping`] to estimate the PE-array mapping efficiency U_chip (eq. 4)
+//! and the fraction of non-GEMM work (eq. 2's (ops/task)_nG term).
+
+/// A GEMM layer: (M, K, N) — activations (M×K) times weights (K×N).
+/// Conv layers are given in their im2col GEMM form.
+#[derive(Clone, Copy, Debug)]
+pub struct GemmLayer {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Relative weight: how much of the model's total ops this layer
+    /// shape represents (layers repeat in stages).
+    pub weight: f64,
+}
+
+impl GemmLayer {
+    pub fn macs(&self) -> f64 {
+        self.m as f64 * self.k as f64 * self.n as f64
+    }
+}
+
+/// One MLPerf workload (a row of Table 7).
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub name: &'static str,
+    pub domain: &'static str,
+    pub dataset: &'static str,
+    /// Forward-pass work per task, GFLOPs (Table 7; 1 MAC = 2 FLOPs).
+    pub gflops_per_task: f64,
+    /// Fraction of ops that are non-GEMM (softmax, norms, NMS...) and run
+    /// on the SFU at lower throughput (eq. 2's (ops/task)_nG).
+    pub non_gemm_frac: f64,
+    /// Representative GEMM layer shapes.
+    pub layers: Vec<GemmLayer>,
+}
+
+impl Workload {
+    /// MACs per task (GFLOPs / 2), in G-MACs.
+    pub fn gmac_per_task(&self) -> f64 {
+        self.gflops_per_task / 2.0
+    }
+}
+
+/// The five MLPerf benchmarks of Table 7.
+pub fn mlperf_suite() -> Vec<Workload> {
+    vec![
+        Workload {
+            name: "resnet50",
+            domain: "Image classification",
+            dataset: "ImageNet",
+            gflops_per_task: 4.0,
+            non_gemm_frac: 0.03,
+            layers: vec![
+                // conv1 7x7/2 im2col, then representative stage shapes
+                GemmLayer { m: 12544, k: 147, n: 64, weight: 0.05 },
+                GemmLayer { m: 3136, k: 576, n: 64, weight: 0.25 },
+                GemmLayer { m: 784, k: 1152, n: 128, weight: 0.25 },
+                GemmLayer { m: 196, k: 2304, n: 256, weight: 0.25 },
+                GemmLayer { m: 49, k: 4608, n: 512, weight: 0.15 },
+                GemmLayer { m: 1, k: 2048, n: 1000, weight: 0.05 },
+            ],
+        },
+        Workload {
+            name: "efficientdet",
+            domain: "Lightweight object detection",
+            dataset: "COCO 2017",
+            gflops_per_task: 410.0,
+            non_gemm_frac: 0.08,
+            layers: vec![
+                // depthwise-separable stages: thin-K GEMMs (hard to map)
+                GemmLayer { m: 65536, k: 9, n: 1, weight: 0.15 },
+                GemmLayer { m: 65536, k: 32, n: 96, weight: 0.25 },
+                GemmLayer { m: 16384, k: 144, n: 192, weight: 0.25 },
+                GemmLayer { m: 4096, k: 288, n: 384, weight: 0.2 },
+                GemmLayer { m: 1024, k: 1152, n: 320, weight: 0.15 },
+            ],
+        },
+        Workload {
+            name: "mask-rcnn",
+            domain: "Heavyweight object detection",
+            dataset: "COCO 2014",
+            gflops_per_task: 447.0,
+            non_gemm_frac: 0.12,
+            layers: vec![
+                GemmLayer { m: 200704, k: 147, n: 64, weight: 0.1 },
+                GemmLayer { m: 50176, k: 576, n: 256, weight: 0.3 },
+                GemmLayer { m: 12544, k: 1152, n: 512, weight: 0.3 },
+                GemmLayer { m: 1024, k: 12544, n: 1024, weight: 0.2 },
+                GemmLayer { m: 1000, k: 1024, n: 91, weight: 0.1 },
+            ],
+        },
+        Workload {
+            name: "3d-unet",
+            domain: "Biomedical image segmentation",
+            dataset: "KiTS19",
+            gflops_per_task: 947.0,
+            non_gemm_frac: 0.05,
+            layers: vec![
+                // 3D convs im2col: huge M, moderate K
+                GemmLayer { m: 2097152, k: 864, n: 32, weight: 0.3 },
+                GemmLayer { m: 262144, k: 1728, n: 64, weight: 0.3 },
+                GemmLayer { m: 32768, k: 3456, n: 128, weight: 0.25 },
+                GemmLayer { m: 4096, k: 6912, n: 256, weight: 0.15 },
+            ],
+        },
+        Workload {
+            name: "bert",
+            domain: "Natural Language Processing",
+            dataset: "Wikipedia 2020",
+            gflops_per_task: 32.0,
+            non_gemm_frac: 0.1,
+            layers: vec![
+                // seq 384, hidden 1024 (BERT-large): QKV, attn, FFN
+                GemmLayer { m: 384, k: 1024, n: 1024, weight: 0.25 },
+                GemmLayer { m: 384, k: 384, n: 64, weight: 0.1 },
+                GemmLayer { m: 384, k: 1024, n: 4096, weight: 0.33 },
+                GemmLayer { m: 384, k: 4096, n: 1024, weight: 0.32 },
+            ],
+        },
+    ]
+}
+
+/// Names only, in Table 7 order.
+pub const MLPERF: [&str; 5] = ["resnet50", "efficientdet", "mask-rcnn", "3d-unet", "bert"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_matches_table7() {
+        let suite = mlperf_suite();
+        assert_eq!(suite.len(), 5);
+        let by_name = |n: &str| suite.iter().find(|w| w.name == n).unwrap();
+        assert_eq!(by_name("resnet50").gflops_per_task, 4.0);
+        assert_eq!(by_name("efficientdet").gflops_per_task, 410.0);
+        assert_eq!(by_name("mask-rcnn").gflops_per_task, 447.0);
+        assert_eq!(by_name("3d-unet").gflops_per_task, 947.0);
+        assert_eq!(by_name("bert").gflops_per_task, 32.0);
+    }
+
+    #[test]
+    fn layer_weights_normalized() {
+        for w in mlperf_suite() {
+            let total: f64 = w.layers.iter().map(|l| l.weight).sum();
+            assert!((total - 1.0).abs() < 1e-9, "{}: {total}", w.name);
+        }
+    }
+
+    #[test]
+    fn gmac_is_half_gflops() {
+        for w in mlperf_suite() {
+            assert!((w.gmac_per_task() - w.gflops_per_task / 2.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn non_gemm_fraction_bounded() {
+        for w in mlperf_suite() {
+            assert!(w.non_gemm_frac > 0.0 && w.non_gemm_frac < 0.2, "{}", w.name);
+        }
+    }
+}

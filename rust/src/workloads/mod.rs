@@ -1,0 +1,9 @@
+//! Workload models: the MLPerf benchmarks of Table 7, the Fig. 5 spatial
+//! mapping model, and the monolithic-GPU baseline of Fig. 12.
+
+pub mod mapping;
+pub mod mlperf;
+pub mod monolithic;
+
+pub use mlperf::{Workload, MLPERF};
+pub use monolithic::Monolithic;

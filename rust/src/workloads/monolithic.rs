@@ -1,0 +1,107 @@
+//! Monolithic-GPU baseline — the Fig. 12 comparator.
+//!
+//! An 826 mm² die at 7 nm (A100-class) modeled with the *same* analytical
+//! machinery as the chiplet system: same MAC density, same area split,
+//! same frequency, no package hops (on-die NoC), no TSV overhead.
+//! Energy uses `cost::energy::mono_e_op_pj` (iso-throughput cluster with
+//! off-board links); die cost uses the same KGD law at 826 mm².
+
+use crate::cost::constants::Calib;
+use crate::cost::{die_cost, energy, package_cost, yield_model};
+
+use super::mapping;
+use super::mlperf::Workload;
+
+/// Evaluated monolithic baseline.
+#[derive(Clone, Copy, Debug)]
+pub struct Monolithic {
+    pub die_mm2: f64,
+    pub pe_total: f64,
+    pub peak_tops: f64,
+    pub die_yield: f64,
+    pub die_cost: f64,
+    pub pkg_cost: f64,
+    pub e_op_pj: f64,
+}
+
+impl Monolithic {
+    /// Build the baseline from the calibration constants.
+    pub fn new(c: &Calib) -> Monolithic {
+        let compute_area = c.mono_die_mm2 * c.compute_frac;
+        let pe = compute_area * c.mac_per_mm2;
+        let peak = pe * c.freq_ghz * 1e9 / 1e12;
+        Monolithic {
+            die_mm2: c.mono_die_mm2,
+            pe_total: pe,
+            peak_tops: peak,
+            die_yield: yield_model::die_yield(c.mono_die_mm2, c.defect_per_mm2, c.cluster_alpha),
+            die_cost: die_cost::system_die_cost(c, c.mono_die_mm2, 1),
+            pkg_cost: package_cost::monolithic_package_cost(c),
+            e_op_pj: energy::mono_e_op_pj(c),
+        }
+    }
+
+    /// Effective throughput on a workload, TMAC/s (eq. 2/3 with the
+    /// workload's mapping efficiency; U_sys = 1 on-die).
+    pub fn throughput_tops(&self, c: &Calib, w: &Workload) -> f64 {
+        let u = mapping::u_chip(self.pe_total, 1, w) * (c.mono_u_chip / c.default_u_chip);
+        self.peak_tops * u
+    }
+
+    /// Tasks (inferences) per second on a workload (eq. 1/2).
+    pub fn tasks_per_sec(&self, c: &Calib, w: &Workload) -> f64 {
+        self.throughput_tops(c, w) * 1e12 / (w.gmac_per_task() * 1e9)
+    }
+
+    /// Tasks per joule on a workload (eq. 6).
+    pub fn tasks_per_joule(&self, w: &Workload) -> f64 {
+        1.0 / (energy::energy_per_task_mj(self.e_op_pj, w.gmac_per_task()) * 1e-3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::mlperf::mlperf_suite;
+
+    #[test]
+    fn peak_near_a100_class() {
+        // 826 mm² × 0.4 × 600 MAC/mm² ≈ 198 TMAC/s ≈ 396 TOPS bf16 —
+        // A100-class dense tensor throughput (312 TFLOPs) at our
+        // calibration.
+        let m = Monolithic::new(&Calib::default());
+        assert!((150.0..250.0).contains(&m.peak_tops), "{}", m.peak_tops);
+    }
+
+    #[test]
+    fn yield_is_48_percent() {
+        let m = Monolithic::new(&Calib::default());
+        assert!((m.die_yield - 0.48).abs() < 0.01, "{}", m.die_yield);
+    }
+
+    #[test]
+    fn tasks_per_sec_ordering_follows_ops() {
+        // Heavier models → fewer inferences/sec.
+        let c = Calib::default();
+        let m = Monolithic::new(&c);
+        let suite = mlperf_suite();
+        let f = |n: &str| {
+            m.tasks_per_sec(&c, suite.iter().find(|w| w.name == n).unwrap())
+        };
+        assert!(f("resnet50") > f("bert"));
+        assert!(f("bert") > f("efficientdet"));
+        assert!(f("mask-rcnn") > f("3d-unet"));
+    }
+
+    #[test]
+    fn resnet_inference_rate_plausible() {
+        // A100 MLPerf offline ResNet-50 is ~30-40K inf/s; our analytical
+        // baseline should be the same order of magnitude.
+        let c = Calib::default();
+        let m = Monolithic::new(&c);
+        let suite = mlperf_suite();
+        let resnet = suite.iter().find(|w| w.name == "resnet50").unwrap();
+        let rate = m.tasks_per_sec(&c, resnet);
+        assert!((1e4..3e5).contains(&rate), "rate {rate}");
+    }
+}

@@ -1,0 +1,216 @@
+//! Coordinator invariants, checked with the proptest-lite framework
+//! (random generation + shrinking — see util::proptest).
+
+use chiplet_gym::cost::{evaluate, Calib};
+use chiplet_gym::gym::ChipletGymEnv;
+use chiplet_gym::mesh::grid::MeshGrid;
+use chiplet_gym::model::space::{DesignSpace, ACTION_DIMS, N_HEADS};
+use chiplet_gym::util::proptest::{assert_prop, Gen, IntGen, VecGen};
+use chiplet_gym::util::Rng;
+
+/// Generator over raw MultiDiscrete actions.
+struct ActionGen;
+
+impl Gen for ActionGen {
+    type Value = Vec<i64>;
+
+    fn generate(&self, rng: &mut Rng) -> Vec<i64> {
+        ACTION_DIMS
+            .iter()
+            .map(|&d| rng.below(d as u64) as i64)
+            .collect()
+    }
+
+    fn shrink(&self, v: &Vec<i64>) -> Vec<Vec<i64>> {
+        // shrink each head toward 0 (the simplest design)
+        let mut out = Vec::new();
+        for i in 0..v.len() {
+            if v[i] > 0 {
+                let mut c = v.clone();
+                c[i] = 0;
+                out.push(c);
+                let mut h = v.clone();
+                h[i] /= 2;
+                out.push(h);
+            }
+        }
+        out.truncate(32);
+        out
+    }
+}
+
+fn to_action(v: &[i64]) -> [usize; N_HEADS] {
+    let mut a = [0usize; N_HEADS];
+    for (i, &x) in v.iter().enumerate() {
+        a[i] = x as usize;
+    }
+    a
+}
+
+#[test]
+fn prop_decode_never_panics_and_is_in_bounds() {
+    for space in [DesignSpace::case_i(), DesignSpace::case_ii()] {
+        assert_prop(1, &ActionGen, |v| {
+            let p = space.decode(&to_action(v));
+            if p.n_chiplets < 1 || p.n_chiplets > space.chiplet_cap {
+                return Err(format!("n_chiplets {} out of cap", p.n_chiplets));
+            }
+            if p.hbm_mask == 0 {
+                return Err("empty hbm mask".into());
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn prop_encode_decode_roundtrip() {
+    let space = DesignSpace::case_ii();
+    assert_prop(2, &ActionGen, |v| {
+        let p = space.decode(&to_action(v));
+        let p2 = space.decode(&space.encode(&p));
+        if p == p2 {
+            Ok(())
+        } else {
+            Err(format!("{p:?} != {p2:?}"))
+        }
+    });
+}
+
+#[test]
+fn prop_evaluation_is_finite_and_consistent() {
+    let space = DesignSpace::case_ii();
+    let calib = Calib::default();
+    assert_prop(3, &ActionGen, |v| {
+        let e = evaluate(&calib, &space.decode(&to_action(v)));
+        if !e.reward.is_finite() {
+            return Err("non-finite reward".into());
+        }
+        if e.feasible {
+            if e.throughput_tops > e.peak_tops + 1e-9 {
+                return Err(format!("tput {} > peak {}", e.throughput_tops, e.peak_tops));
+            }
+            if !(0.0..=1.0).contains(&e.u_sys) {
+                return Err(format!("u_sys {}", e.u_sys));
+            }
+            if !(0.0..=1.0).contains(&e.die_yield) {
+                return Err(format!("yield {}", e.die_yield));
+            }
+            if e.pkg_cost <= 0.0 || e.die_cost <= 0.0 {
+                return Err("non-positive cost".into());
+            }
+            let want = calib.alpha * e.throughput_tops
+                - calib.beta * e.pkg_cost
+                - calib.gamma * e.energy_mj_per_ref_task;
+            if (e.reward - want).abs() > 1e-9 {
+                return Err("reward != eq.17 decomposition".into());
+            }
+        } else if e.reward > -99.0 {
+            return Err("infeasible design without penalty".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_evaluation_is_deterministic() {
+    let space = DesignSpace::case_i();
+    let calib = Calib::default();
+    assert_prop(4, &ActionGen, |v| {
+        let p = space.decode(&to_action(v));
+        let a = evaluate(&calib, &p);
+        let b = evaluate(&calib, &p);
+        if a.reward == b.reward && a.throughput_tops == b.throughput_tops {
+            Ok(())
+        } else {
+            Err("evaluate() not deterministic".into())
+        }
+    });
+}
+
+#[test]
+fn prop_yield_and_kgd_cost_monotone_in_area() {
+    use chiplet_gym::cost::die_cost::kgd_cost;
+    use chiplet_gym::cost::yield_model::die_yield;
+    let calib = Calib::default();
+    assert_prop(5, &IntGen { lo: 1, hi: 799 }, |&a| {
+        let a = a as f64;
+        let y1 = die_yield(a, calib.defect_per_mm2, calib.cluster_alpha);
+        let y2 = die_yield(a + 1.0, calib.defect_per_mm2, calib.cluster_alpha);
+        if y2 > y1 {
+            return Err(format!("yield increased {a} -> {}", a + 1.0));
+        }
+        if kgd_cost(&calib, a + 1.0) < kgd_cost(&calib, a) {
+            return Err("KGD cost decreased with area".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mesh_hops_bounds() {
+    // max hops <= m + n; mean <= max; a superset of HBM locations never
+    // increases the worst-case supply distance.
+    use chiplet_gym::model::space::HBM_LOCS;
+    let gen = VecGen { inner: IntGen { lo: 1, hi: 128 }, len: 2 };
+    assert_prop(6, &gen, |v| {
+        let n_fp = v[0] as usize;
+        let mask = (v[1] as u8 % 63) + 1;
+        let locs: Vec<_> = HBM_LOCS
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| mask & (1 << i) != 0)
+            .map(|(_, &l)| l)
+            .collect();
+        let g = MeshGrid::new(n_fp, &locs);
+        if g.max_hbm_hops() > g.m + g.n {
+            return Err(format!("hbm hops {} exceed bound", g.max_hbm_hops()));
+        }
+        if g.mean_hbm_hops() > g.max_hbm_hops() as f64 + 1e-9 {
+            return Err("mean > max".into());
+        }
+        let all = MeshGrid::new(n_fp, &HBM_LOCS);
+        if all.max_hbm_hops() > g.max_hbm_hops() {
+            return Err("adding HBMs worsened supply distance".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_env_step_reward_equals_eval() {
+    let calib = Calib::default();
+    let space = DesignSpace::case_i();
+    assert_prop(7, &ActionGen, |v| {
+        let mut env = ChipletGymEnv::new(space, calib.clone(), 2);
+        let a = to_action(v);
+        let step = env.step(&a);
+        let direct = evaluate(&calib, &space.decode(&a));
+        if step.reward == direct.reward {
+            Ok(())
+        } else {
+            Err(format!("env reward {} != eval {}", step.reward, direct.reward))
+        }
+    });
+}
+
+#[test]
+fn prop_sa_best_is_max_of_its_history() {
+    use chiplet_gym::opt::sa::{simulated_annealing, SaConfig};
+    let space = DesignSpace::case_i();
+    let calib = Calib::default();
+    assert_prop(8, &IntGen { lo: 0, hi: 50 }, |&seed| {
+        let cfg = SaConfig { iterations: 500, trace_every: 50, ..SaConfig::default() };
+        let t = simulated_annealing(&space, &calib, &cfg, seed as u64);
+        for &(_, obj) in &t.history {
+            if obj > t.best_eval.reward + 1e-9 {
+                return Err(format!("history {obj} > best {}", t.best_eval.reward));
+            }
+        }
+        let re = evaluate(&calib, &space.decode(&t.best_action));
+        if (re.reward - t.best_eval.reward).abs() > 1e-9 {
+            return Err("best action does not reproduce best reward".into());
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,191 @@
+//! Cross-layer numerics: replay the jax-produced golden vectors through
+//! the PJRT engine and assert agreement.
+//!
+//! This is the contract test for the whole AOT chain:
+//!   Pallas (interpret) → StableHLO → XlaComputation → HLO text →
+//!   xla_extension 0.5.1 parser → PJRT CPU execution.
+//!
+//! Requires `make artifacts` (skips, loudly, if missing).
+
+use chiplet_gym::runtime::{Engine, Golden};
+
+fn engine() -> Option<Engine> {
+    match Engine::discover() {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("SKIP runtime_golden: {err:#}");
+            None
+        }
+    }
+}
+
+fn close(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+#[test]
+fn forward_matches_jax_golden() {
+    let Some(engine) = engine() else { return };
+    let golden = Golden::load(engine.artifact_dir()).unwrap();
+    let params = engine.golden_params().unwrap();
+
+    let out = engine.policy_forward(&params, &golden.forward_obs).unwrap();
+    assert_eq!(out.logp_all.len(), engine.manifest.act_total);
+    assert_eq!(out.value.len(), 1);
+
+    // head-0 log-probs elementwise
+    for (i, (&got, &want)) in out
+        .logp_all
+        .iter()
+        .zip(golden.forward_logp_head0.iter())
+        .enumerate()
+    {
+        assert!(
+            close(got, want, 1e-4),
+            "logp[{i}] pjrt={got} jax={want}"
+        );
+    }
+    // whole-vector checksum
+    let sum: f64 = out.logp_all.iter().map(|&x| x as f64).sum();
+    assert!(
+        (sum - golden.forward_logp_sum).abs() < 1e-2 * (1.0 + golden.forward_logp_sum.abs()),
+        "logp sum pjrt={sum} jax={}",
+        golden.forward_logp_sum
+    );
+    assert!(
+        close(out.value[0], golden.forward_value as f32, 1e-4),
+        "value pjrt={} jax={}",
+        out.value[0],
+        golden.forward_value
+    );
+}
+
+#[test]
+fn forward_logp_is_normalized_per_head() {
+    let Some(engine) = engine() else { return };
+    let params = engine.golden_params().unwrap();
+    let obs: Vec<f32> = (0..engine.manifest.obs_dim)
+        .map(|i| (i as f32 * 0.37).sin())
+        .collect();
+    let out = engine.policy_forward(&params, &obs).unwrap();
+    for (h, (start, end)) in engine.manifest.head_slices().into_iter().enumerate() {
+        let p_sum: f64 = out.logp_all[start..end]
+            .iter()
+            .map(|&lp| (lp as f64).exp())
+            .sum();
+        assert!(
+            (p_sum - 1.0).abs() < 1e-4,
+            "head {h} probability mass {p_sum}"
+        );
+    }
+}
+
+#[test]
+fn batched_forward_matches_single() {
+    let Some(engine) = engine() else { return };
+    let params = engine.golden_params().unwrap();
+    let m = &engine.manifest;
+    let batch = m.eval_batch;
+    let mut obs = vec![0f32; batch * m.obs_dim];
+    for (i, o) in obs.iter_mut().enumerate() {
+        *o = ((i as f32) * 0.11).cos();
+    }
+    let batched = engine.policy_forward_batch(&params, &obs).unwrap();
+    // spot-check rows 0 and batch-1 against the single-obs path
+    for row in [0, batch - 1] {
+        let single = engine
+            .policy_forward(&params, &obs[row * m.obs_dim..(row + 1) * m.obs_dim])
+            .unwrap();
+        for k in 0..m.act_total {
+            let got = batched.logp_all[row * m.act_total + k];
+            let want = single.logp_all[k];
+            assert!(close(got, want, 1e-4), "row {row} logp[{k}] {got} vs {want}");
+        }
+        assert!(close(batched.value[row], single.value[0], 1e-4));
+    }
+}
+
+#[test]
+fn update_matches_jax_golden() {
+    let Some(engine) = engine() else { return };
+    let golden = Golden::load(engine.artifact_dir()).unwrap();
+    let params = engine.golden_params().unwrap();
+    let zeros = vec![0f32; params.len()];
+
+    let out = engine
+        .ppo_update(
+            &params,
+            &zeros,
+            &zeros,
+            1.0,
+            &golden.update_obs,
+            &golden.update_actions,
+            &golden.update_old_logp,
+            &golden.update_advantages,
+            &golden.update_returns,
+            golden.update_hyper,
+        )
+        .unwrap();
+
+    let s = out.stats;
+    let got = [
+        s.loss, s.pi_loss, s.vf_loss, s.entropy, s.approx_kl, s.clip_frac,
+        s.grad_norm, s.update_norm,
+    ];
+    for (i, (&g, &w)) in got.iter().zip(golden.update_stats.iter()).enumerate() {
+        assert!(close(g, w, 1e-3), "stats[{i}] pjrt={g} jax={w}");
+    }
+    for (i, (&g, &w)) in out
+        .params
+        .iter()
+        .zip(golden.update_new_params_head.iter())
+        .enumerate()
+    {
+        assert!(close(g, w, 1e-4), "new_params[{i}] pjrt={g} jax={w}");
+    }
+    let l2: f64 = out
+        .params
+        .iter()
+        .map(|&x| (x as f64) * (x as f64))
+        .sum::<f64>()
+        .sqrt();
+    assert!(
+        (l2 - golden.update_new_params_l2).abs() < 1e-3 * golden.update_new_params_l2,
+        "l2 pjrt={l2} jax={}",
+        golden.update_new_params_l2
+    );
+}
+
+#[test]
+fn update_is_deterministic() {
+    let Some(engine) = engine() else { return };
+    let golden = Golden::load(engine.artifact_dir()).unwrap();
+    let params = engine.golden_params().unwrap();
+    let zeros = vec![0f32; params.len()];
+    let run = || {
+        engine
+            .ppo_update(
+                &params, &zeros, &zeros, 1.0,
+                &golden.update_obs, &golden.update_actions,
+                &golden.update_old_logp, &golden.update_advantages,
+                &golden.update_returns, golden.update_hyper,
+            )
+            .unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.params, b.params);
+    assert_eq!(a.stats.loss, b.stats.loss);
+}
+
+#[test]
+fn shape_mismatches_are_rejected() {
+    let Some(engine) = engine() else { return };
+    let params = engine.golden_params().unwrap();
+    // wrong obs length
+    assert!(engine.policy_forward(&params, &[0.0; 3]).is_err());
+    // wrong params length
+    assert!(engine
+        .policy_forward(&params[..10], &vec![0.0; engine.manifest.obs_dim])
+        .is_err());
+}
