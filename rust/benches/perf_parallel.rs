@@ -1,0 +1,67 @@
+//! Parallel Algorithm-1 wall-clock: 1-thread vs N-thread SA fan-out.
+//!
+//! The paper runs "20 SAs and 20 trained RL agents ... around 10 mins"
+//! sequentially; `opt::parallel` shards the SA seeds across
+//! `available_parallelism` workers with bit-identical output. This bench
+//! times the same 8-seed SA-only Alg. 1 at `--jobs 1` and `--jobs 0`
+//! (all cores), prints the speedup, and re-checks output equality.
+
+use chiplet_gym::cost::Calib;
+use chiplet_gym::model::space::DesignSpace;
+use chiplet_gym::opt::parallel::{sa_only_optimize_par, worker_count};
+use chiplet_gym::opt::sa::SaConfig;
+use chiplet_gym::report;
+use chiplet_gym::util::bench::{fmt_ns, Runner};
+
+fn main() {
+    let space = DesignSpace::case_i();
+    let calib = Calib::default();
+    let sa = SaConfig {
+        iterations: 20_000,
+        trace_every: 0,
+        ..SaConfig::default()
+    };
+    let seeds: Vec<u64> = (0..8).collect();
+    let jobs = worker_count(0, seeds.len());
+
+    let mut runner = Runner::quick();
+    runner.bench("Alg.1 SA-only, 8 seeds, --jobs 1", || {
+        std::hint::black_box(sa_only_optimize_par(space, &calib, &sa, &seeds, 1));
+    });
+    let par_name = format!("Alg.1 SA-only, 8 seeds, --jobs {jobs}");
+    runner.bench(&par_name, || {
+        std::hint::black_box(sa_only_optimize_par(space, &calib, &sa, &seeds, 0));
+    });
+    println!("{}", runner.report());
+
+    let seq_ns = runner.results()[0].ns_per_iter.mean;
+    let par_ns = runner.results()[1].ns_per_iter.mean;
+    let speedup = seq_ns / par_ns;
+    println!(
+        "sequential {} vs {jobs}-thread {} => speedup {speedup:.2}x",
+        fmt_ns(seq_ns),
+        fmt_ns(par_ns)
+    );
+
+    // The speedup must never come at the cost of determinism.
+    let sequential = sa_only_optimize_par(space, &calib, &sa, &seeds, 1);
+    let parallel = sa_only_optimize_par(space, &calib, &sa, &seeds, 0);
+    assert_eq!(sequential.best.action, parallel.best.action);
+    assert_eq!(sequential.best.seed, parallel.best.seed);
+    assert_eq!(
+        sequential.best.eval.reward.to_bits(),
+        parallel.best.eval.reward.to_bits()
+    );
+    println!(
+        "determinism check OK: best = {} seed {} @ {:.2}",
+        parallel.best.source, parallel.best.seed, parallel.best.eval.reward
+    );
+
+    report::write_text(
+        "perf_parallel.txt",
+        &format!(
+            "{}\njobs={jobs}\nspeedup={speedup:.3}\n",
+            runner.report()
+        ),
+    );
+}

@@ -25,9 +25,15 @@ pub struct RunConfig {
     pub ppo_total_timesteps: usize,
     pub ppo_episode_len: usize,
     pub ppo_ent_coef: f64,
+    /// Rollout environments per PPO agent (`gym::VecEnv` width); must
+    /// divide the manifest's n_steps. 1 = classic single-env rollout.
+    pub ppo_n_envs: usize,
     pub sa_seeds: Vec<u64>,
     pub rl_seeds: Vec<u64>,
     pub out_dir: String,
+    /// Worker threads for the parallel Alg. 1 driver (`opt::parallel`):
+    /// 0 = all available cores; results are bit-identical at any value.
+    pub jobs: usize,
 }
 
 impl Default for RunConfig {
@@ -39,9 +45,11 @@ impl Default for RunConfig {
             ppo_total_timesteps: 250_000,
             ppo_episode_len: 2,
             ppo_ent_coef: 0.1,
+            ppo_n_envs: 1,
             sa_seeds: (0..20).collect(),
             rl_seeds: (0..20).collect(),
             out_dir: "bench_results".into(),
+            jobs: 0,
         }
     }
 }
@@ -84,6 +92,9 @@ impl RunConfig {
         if let Some(x) = num("ppo_ent_coef") {
             self.ppo_ent_coef = x;
         }
+        if let Some(x) = num("ppo_n_envs") {
+            self.ppo_n_envs = x as usize;
+        }
         if let Some(x) = num("alpha") {
             self.calib.alpha = x;
         }
@@ -102,6 +113,9 @@ impl RunConfig {
         if let Some(s) = v.get("out_dir").and_then(Json::as_str) {
             self.out_dir = s.to_string();
         }
+        if let Some(x) = num("jobs") {
+            self.jobs = x as usize;
+        }
     }
 
     /// Apply CLI overrides on top (CLI wins over config file).
@@ -119,6 +133,7 @@ impl RunConfig {
         self.ppo_total_timesteps = args.get_parse("timesteps", self.ppo_total_timesteps);
         self.ppo_episode_len = args.get_parse("episode-len", self.ppo_episode_len);
         self.ppo_ent_coef = args.get_parse("ent-coef", self.ppo_ent_coef);
+        self.ppo_n_envs = args.get_parse("n-envs", self.ppo_n_envs);
         self.calib.alpha = args.get_parse("alpha", self.calib.alpha);
         self.calib.beta = args.get_parse("beta", self.calib.beta);
         self.calib.gamma = args.get_parse("gamma", self.calib.gamma);
@@ -130,6 +145,7 @@ impl RunConfig {
         if let Some(out) = args.get("out-dir") {
             self.out_dir = out.to_string();
         }
+        self.jobs = args.jobs(self.jobs);
     }
 }
 
@@ -179,5 +195,29 @@ mod tests {
         assert_eq!(cfg.chiplet_cap, 128);
         assert_eq!(cfg.sa.iterations, 5000);
         assert_eq!(cfg.rl_seeds, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn n_envs_defaults_to_one_and_overrides() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.ppo_n_envs, 1);
+        let v = Json::parse(r#"{"ppo_n_envs": 8}"#).unwrap();
+        cfg.apply_json(&v);
+        assert_eq!(cfg.ppo_n_envs, 8);
+        let args = Args::parse("ppo --n-envs 4".split_whitespace().map(String::from));
+        cfg.apply_args(&args);
+        assert_eq!(cfg.ppo_n_envs, 4);
+    }
+
+    #[test]
+    fn jobs_defaults_to_auto_and_overrides() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.jobs, 0); // 0 = all available cores
+        let v = Json::parse(r#"{"jobs": 4}"#).unwrap();
+        cfg.apply_json(&v);
+        assert_eq!(cfg.jobs, 4);
+        let args = Args::parse("sa --jobs 2".split_whitespace().map(String::from));
+        cfg.apply_args(&args);
+        assert_eq!(cfg.jobs, 2);
     }
 }

@@ -121,6 +121,34 @@ impl ChipletGymEnv {
         self.total_steps
     }
 
+    /// A fresh environment sharing this one's space, calibration and
+    /// episode length, with zeroed episode/best/step state. Rollout
+    /// workers fork rather than clone so that merging their statistics
+    /// back ([`ChipletGymEnv::merge_best`]) never re-counts the
+    /// prototype's own history.
+    pub fn fork(&self) -> ChipletGymEnv {
+        ChipletGymEnv::new(self.space, self.calib.clone(), self.episode_len)
+    }
+
+    /// Merge another environment's best-so-far (and step count) into this
+    /// one. Used when rollouts run on [`crate::gym::VecEnv`] forks of
+    /// this env: the forks' discoveries flow back to the prototype. NaN
+    /// rewards never displace a real best (total-order comparison).
+    /// `other`'s step count is added in full — pass forks (zeroed
+    /// counters), not clones, or steps double-count.
+    pub fn merge_best(&mut self, other: &ChipletGymEnv) {
+        self.total_steps += other.total_steps;
+        if let Some(ref point) = other.best_point {
+            let takes = self.best_point.is_none()
+                || crate::util::stats::nan_least_cmp(other.best_reward, self.best_reward)
+                    .is_gt();
+            if takes && !other.best_reward.is_nan() {
+                self.best_reward = other.best_reward;
+                self.best_point = Some(point.clone());
+            }
+        }
+    }
+
     /// Evaluate a raw action without advancing the episode (used by SA
     /// and the exhaustive combiner, which are not episodic).
     pub fn peek(&self, action: &[usize]) -> Evaluation {
@@ -187,6 +215,54 @@ mod tests {
                 assert!(x.abs() < 100.0, "obs[{i}] = {x} unnormalized");
             }
         }
+    }
+
+    #[test]
+    fn merge_best_takes_argmax_and_sums_steps() {
+        let mut a = ChipletGymEnv::case_i();
+        let mut b = ChipletGymEnv::case_i();
+        let mut rng = Rng::new(5);
+        for _ in 0..20 {
+            let act = a.space.random_action(&mut rng);
+            a.step(&act);
+        }
+        for _ in 0..20 {
+            let act = b.space.random_action(&mut rng);
+            b.step(&act);
+        }
+        let best_a = a.best().map(|(r, _)| r).unwrap();
+        let best_b = b.best().map(|(r, _)| r).unwrap();
+        let steps = a.total_steps() + b.total_steps();
+        a.merge_best(&b);
+        let (merged, _) = a.best().unwrap();
+        assert_eq!(merged, best_a.max(best_b));
+        assert_eq!(a.total_steps(), steps);
+    }
+
+    #[test]
+    fn fork_zeroes_state_so_merge_does_not_double_count() {
+        let mut env = ChipletGymEnv::case_i();
+        let mut rng = Rng::new(7);
+        let act = env.space.random_action(&mut rng);
+        env.step(&act); // env has 1 step of its own history
+        let mut worker = env.fork();
+        assert_eq!(worker.total_steps(), 0);
+        assert!(worker.best().is_none());
+        worker.step(&act);
+        worker.step(&act);
+        env.merge_best(&worker);
+        assert_eq!(env.total_steps(), 3); // 1 own + 2 from the fork
+    }
+
+    #[test]
+    fn merge_best_into_fresh_env() {
+        let mut fresh = ChipletGymEnv::case_i();
+        let mut b = ChipletGymEnv::case_i();
+        let mut rng = Rng::new(6);
+        let act = b.space.random_action(&mut rng);
+        b.step(&act);
+        fresh.merge_best(&b);
+        assert_eq!(fresh.best().map(|(r, _)| r), b.best().map(|(r, _)| r));
     }
 
     #[test]

@@ -6,5 +6,7 @@
 //! (Section 5.2.1) and the reward r = αT − βC − γE (eq. 17).
 
 pub mod env;
+pub mod vec_env;
 
 pub use env::{ChipletGymEnv, Step, OBS_DIM};
+pub use vec_env::VecEnv;

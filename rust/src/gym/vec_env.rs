@@ -1,0 +1,212 @@
+//! Batched environment layer: K independent [`ChipletGymEnv`] instances
+//! stepped with one call.
+//!
+//! The PPO rollout previously advanced a single environment one action at
+//! a time; [`VecEnv`] owns K envs and exposes [`VecEnv::step_batch`] plus
+//! batched observation assembly ([`VecEnv::write_obs_flat`]) so a rollout
+//! fills K transitions per call (SB3's `VecEnv` shape). Semantics are
+//! deliberately exactly "K sequential `env.step` calls, env 0 first":
+//! no auto-reset, no reordering — the equivalence is property-tested in
+//! `tests/invariants.rs`, which is what lets `opt::parallel` and the
+//! batched rollout stay bit-identical to the sequential seed paths.
+
+use crate::cost::Calib;
+use crate::model::space::{DesignPoint, DesignSpace, N_HEADS};
+
+use super::env::{ChipletGymEnv, Step, OBS_DIM};
+
+/// K independent Chiplet-Gym environments stepped in lock-step.
+#[derive(Clone, Debug)]
+pub struct VecEnv {
+    envs: Vec<ChipletGymEnv>,
+}
+
+impl VecEnv {
+    /// Wrap pre-built environments (they need not share a space/calib,
+    /// though every current caller replicates one prototype).
+    pub fn new(envs: Vec<ChipletGymEnv>) -> VecEnv {
+        assert!(!envs.is_empty(), "VecEnv needs at least one env");
+        VecEnv { envs }
+    }
+
+    /// K clones of a prototype environment (each keeps the prototype's
+    /// space, calibration and episode length; best-so-far state is
+    /// cloned too, so replicate *before* stepping the prototype).
+    pub fn replicate(proto: &ChipletGymEnv, k: usize) -> VecEnv {
+        assert!(k >= 1, "VecEnv::replicate needs k >= 1");
+        VecEnv { envs: vec![proto.clone(); k] }
+    }
+
+    /// K fresh environments over one space/calibration.
+    pub fn from_space(space: DesignSpace, calib: Calib, episode_len: usize, k: usize) -> VecEnv {
+        assert!(k >= 1, "VecEnv::from_space needs k >= 1");
+        let envs = (0..k)
+            .map(|_| ChipletGymEnv::new(space, calib.clone(), episode_len))
+            .collect();
+        VecEnv { envs }
+    }
+
+    pub fn len(&self) -> usize {
+        self.envs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.envs.is_empty()
+    }
+
+    pub fn envs(&self) -> &[ChipletGymEnv] {
+        &self.envs
+    }
+
+    /// Reset every environment; returns the K start-of-episode observations.
+    pub fn reset_all(&mut self) -> Vec<[f32; OBS_DIM]> {
+        self.envs.iter_mut().map(|e| e.reset()).collect()
+    }
+
+    /// Reset one environment (the rollout resets envs individually as
+    /// their episodes terminate — no auto-reset inside `step_batch`).
+    pub fn reset(&mut self, i: usize) -> [f32; OBS_DIM] {
+        self.envs[i].reset()
+    }
+
+    /// Step every environment with its own action. Equivalent to K
+    /// sequential `env.step` calls in env order; returns one [`Step`]
+    /// per env.
+    pub fn step_batch(&mut self, actions: &[[usize; N_HEADS]]) -> Vec<Step> {
+        assert_eq!(
+            actions.len(),
+            self.envs.len(),
+            "step_batch needs one action per env"
+        );
+        self.envs
+            .iter_mut()
+            .zip(actions.iter())
+            .map(|(env, action)| env.step(action))
+            .collect()
+    }
+
+    /// Batched observation assembly: write the K current observations
+    /// contiguously (row-major, K x OBS_DIM) into `out`.
+    pub fn write_obs_flat(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.envs.len() * OBS_DIM);
+        for (row, env) in self.envs.iter().enumerate() {
+            out[row * OBS_DIM..(row + 1) * OBS_DIM].copy_from_slice(&env.observation());
+        }
+    }
+
+    /// Convenience allocation form of [`VecEnv::write_obs_flat`].
+    pub fn obs_flat(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.envs.len() * OBS_DIM];
+        self.write_obs_flat(&mut out);
+        out
+    }
+
+    /// Best (reward, design point) across all environments. NaN rewards
+    /// can never win (total-order comparison, NaN sorts lowest).
+    pub fn best(&self) -> Option<(f64, &DesignPoint)> {
+        let mut best: Option<(f64, &DesignPoint)> = None;
+        for env in &self.envs {
+            if let Some((r, p)) = env.best() {
+                let replace = match best {
+                    None => !r.is_nan(),
+                    Some((cur, _)) => crate::util::stats::nan_least_cmp(r, cur).is_gt(),
+                };
+                if replace {
+                    best = Some((r, p));
+                }
+            }
+        }
+        best
+    }
+
+    /// Total environment transitions across all envs.
+    pub fn total_steps(&self) -> u64 {
+        self.envs.iter().map(|e| e.total_steps()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_actions(space: &DesignSpace, rng: &mut Rng, k: usize) -> Vec<[usize; N_HEADS]> {
+        (0..k).map(|_| space.random_action(rng)).collect()
+    }
+
+    #[test]
+    fn step_batch_equals_sequential_steps() {
+        let proto = ChipletGymEnv::case_i();
+        let k = 4;
+        let mut vec_env = VecEnv::replicate(&proto, k);
+        let mut solos: Vec<ChipletGymEnv> = (0..k).map(|_| proto.clone()).collect();
+        vec_env.reset_all();
+        for env in &mut solos {
+            env.reset();
+        }
+
+        let mut rng = Rng::new(0);
+        for _ in 0..10 {
+            let actions = random_actions(&proto.space, &mut rng, k);
+            let batch = vec_env.step_batch(&actions);
+            for (e, step) in batch.iter().enumerate() {
+                let solo = solos[e].step(&actions[e]);
+                assert_eq!(step.reward, solo.reward);
+                assert_eq!(step.done, solo.done);
+                assert_eq!(step.obs, solo.obs);
+                if step.done {
+                    vec_env.reset(e);
+                    solos[e].reset();
+                }
+            }
+        }
+        assert_eq!(vec_env.total_steps(), solos.iter().map(|e| e.total_steps()).sum());
+    }
+
+    #[test]
+    fn obs_flat_matches_per_env_observation() {
+        let mut vec_env = VecEnv::replicate(&ChipletGymEnv::case_i(), 3);
+        vec_env.reset_all();
+        let mut rng = Rng::new(1);
+        let space = DesignSpace::case_i();
+        let actions = random_actions(&space, &mut rng, 3);
+        vec_env.step_batch(&actions);
+        let flat = vec_env.obs_flat();
+        assert_eq!(flat.len(), 3 * OBS_DIM);
+        for (e, env) in vec_env.envs().iter().enumerate() {
+            assert_eq!(&flat[e * OBS_DIM..(e + 1) * OBS_DIM], &env.observation());
+        }
+    }
+
+    #[test]
+    fn best_is_argmax_over_envs() {
+        let mut vec_env = VecEnv::replicate(&ChipletGymEnv::case_i(), 4);
+        vec_env.reset_all();
+        let mut rng = Rng::new(2);
+        let space = DesignSpace::case_i();
+        let mut best = f64::NEG_INFINITY;
+        for _ in 0..50 {
+            let actions = random_actions(&space, &mut rng, 4);
+            for step in vec_env.step_batch(&actions) {
+                best = best.max(step.reward);
+            }
+        }
+        let (tracked, _) = vec_env.best().unwrap();
+        assert_eq!(tracked, best);
+    }
+
+    #[test]
+    fn fresh_vec_env_has_no_best() {
+        let vec_env = VecEnv::from_space(DesignSpace::case_i(), Calib::default(), 2, 2);
+        assert!(vec_env.best().is_none());
+        assert_eq!(vec_env.len(), 2);
+        assert!(!vec_env.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "one action per env")]
+    fn wrong_batch_width_panics() {
+        let mut vec_env = VecEnv::replicate(&ChipletGymEnv::case_i(), 2);
+        vec_env.step_batch(&[[0usize; N_HEADS]]);
+    }
+}

@@ -27,13 +27,19 @@
 //! * [`workloads`] — MLPerf workload models (Table 7), mapping (Fig. 5)
 //!   and the monolithic-GPU baseline used by Fig. 12.
 //! * [`gym`] — the Chiplet-Gym environment: MultiDiscrete action space,
-//!   10-dim observation, reward `r = αT − βC − γE` (eq. 17).
-//! * [`opt`] — simulated annealing (Alg. 2), random search, and the
-//!   combined Alg. 1 driver.
+//!   10-dim observation, reward `r = αT − βC − γE` (eq. 17); plus
+//!   [`gym::vec_env`], the batched K-env layer (`VecEnv::step_batch`)
+//!   feeding the PPO rollout buffer K transitions per call.
+//! * [`opt`] — simulated annealing (Alg. 2), random search, the combined
+//!   Alg. 1 driver, and [`opt::parallel`] — the multi-threaded Alg. 1
+//!   fan-out (`--jobs N`, bit-identical to sequential at any thread
+//!   count).
 //! * [`rl`] — PPO (Table 5 hyper-parameters): rollouts, GAE, MultiDiscrete
 //!   sampling and the Adam-step loop over the AOT'd HLO update.
 //! * [`runtime`] — PJRT client wrapper: loads `artifacts/*.hlo.txt`,
-//!   compiles once, executes on the hot path.
+//!   compiles once, executes on the hot path. The `xla` dependency sits
+//!   behind the off-by-default `pjrt` cargo feature; without it a stub
+//!   engine with the same API compiles and RL paths skip loudly.
 //! * [`report`] — CSV/series emitters used by the per-figure benches.
 
 pub mod config;

@@ -9,15 +9,18 @@
 //!   info       Show artifact manifest + PJRT platform.
 //!
 //! Common flags: --case i|ii, --seeds 0,1,2, --sa-iters N,
-//! --timesteps N, --alpha/--beta/--gamma, --config path.json.
+//! --jobs N (parallel Alg. 1 workers; 0 = all cores, results are
+//! bit-identical at any value), --timesteps N,
+//! --alpha/--beta/--gamma, --config path.json.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use chiplet_gym::config::RunConfig;
 use chiplet_gym::cost::{evaluate, Calib};
 use chiplet_gym::gym::ChipletGymEnv;
 use chiplet_gym::model::space::{DesignSpace, N_HEADS};
-use chiplet_gym::opt::combined::{combined_optimize, sa_only_optimize, CombinedConfig};
+use chiplet_gym::opt::combined::CombinedConfig;
+use chiplet_gym::opt::parallel::{combined_optimize_par, sa_only_optimize_par, worker_count};
 use chiplet_gym::opt::sa::simulated_annealing;
 use chiplet_gym::rl::{train_ppo, PpoConfig};
 use chiplet_gym::runtime::Engine;
@@ -131,7 +134,13 @@ fn cmd_sa(cfg: &RunConfig) {
         println!("best objective: {:.2}", trace.best_eval.reward);
         print_design(&space, &cfg.calib, &trace.best_action);
     } else {
-        let out = sa_only_optimize(space, &cfg.calib, &cfg.sa, &cfg.sa_seeds);
+        println!(
+            "{} seeds across {} worker threads (--jobs {})",
+            cfg.sa_seeds.len(),
+            worker_count(cfg.jobs, cfg.sa_seeds.len()),
+            cfg.jobs
+        );
+        let out = sa_only_optimize_par(space, &cfg.calib, &cfg.sa, &cfg.sa_seeds, cfg.jobs);
         for c in &out.candidates {
             println!("  SA seed {:3}: {:.2}", c.seed, c.eval.reward);
         }
@@ -140,12 +149,27 @@ fn cmd_sa(cfg: &RunConfig) {
     }
 }
 
+/// Surface a bad `--n-envs` as a CLI error (train_ppo asserts the same
+/// invariant, but a user typo should not abort with a backtrace).
+fn check_n_envs(ppo: &PpoConfig) -> Result<()> {
+    if ppo.n_envs == 0 || ppo.n_steps % ppo.n_envs != 0 {
+        bail!(
+            "--n-envs {} must be >= 1 and divide n_steps {}",
+            ppo.n_envs,
+            ppo.n_steps
+        );
+    }
+    Ok(())
+}
+
 fn cmd_ppo(cfg: &RunConfig) -> Result<()> {
     let engine = Engine::discover()?;
     let mut ppo = PpoConfig::from_manifest(&engine);
     ppo.total_timesteps = cfg.ppo_total_timesteps;
     ppo.episode_len = cfg.ppo_episode_len;
     ppo.ent_coef = cfg.ppo_ent_coef;
+    ppo.n_envs = cfg.ppo_n_envs;
+    check_n_envs(&ppo)?;
     let seed = *cfg.rl_seeds.first().unwrap_or(&0);
     let mut env = ChipletGymEnv::new(cfg.space(), cfg.calib.clone(), ppo.episode_len);
     println!(
@@ -175,14 +199,21 @@ fn cmd_optimize(cfg: &RunConfig) -> Result<()> {
     ppo.total_timesteps = cfg.ppo_total_timesteps;
     ppo.episode_len = cfg.ppo_episode_len;
     ppo.ent_coef = cfg.ppo_ent_coef;
+    ppo.n_envs = cfg.ppo_n_envs;
+    check_n_envs(&ppo)?;
     let combined = CombinedConfig {
         sa: cfg.sa,
         ppo,
         sa_seeds: cfg.sa_seeds.clone(),
         rl_seeds: cfg.rl_seeds.clone(),
     };
+    println!(
+        "SA fan-out: {} worker threads (--jobs {})",
+        worker_count(cfg.jobs, combined.sa_seeds.len()),
+        cfg.jobs
+    );
     let t0 = std::time::Instant::now();
-    let out = combined_optimize(&engine, cfg.space(), &cfg.calib, &combined)?;
+    let out = combined_optimize_par(&engine, cfg.space(), &cfg.calib, &combined, cfg.jobs)?;
     for c in &out.candidates {
         println!("  {:>6} seed {:3}: {:.2}", c.source, c.seed, c.eval.reward);
     }
@@ -281,7 +312,9 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: chiplet-gym <optimize|sa|ppo|eval|mlperf|info> \
                  [--case i|ii] [--seeds 0,1,..] [--sa-iters N] \
+                 [--jobs N (0 = all cores)] \
                  [--timesteps N] [--episode-len N] [--ent-coef X] \
+                 [--n-envs K (VecEnv rollout width)] \
                  [--alpha X --beta X --gamma X] [--config file.json]"
             );
             std::process::exit(2);

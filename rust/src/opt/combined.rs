@@ -41,6 +41,24 @@ pub struct OptOutcome {
     pub candidates: Vec<Candidate>,
 }
 
+/// Total-order reward comparison: NaN sorts below every real value, so a
+/// NaN-reward candidate can never win an argmax (the previous
+/// `partial_cmp(..).unwrap()` panicked on NaN instead). The comparator
+/// itself lives in `util::stats` so the gym layer can use it without
+/// depending on the optimizer.
+pub use crate::util::stats::nan_least_cmp as reward_cmp;
+
+/// Line 13 of Algorithm 1: exhaustive argmax over candidate rewards.
+/// Deterministic given candidate order (the last of equal-reward
+/// candidates wins, matching `Iterator::max_by`); both the sequential
+/// and the `opt::parallel` drivers call this on identically-ordered
+/// candidate lists, which is what makes `--jobs N` bit-identical.
+pub fn select_best(candidates: &[Candidate]) -> Option<&Candidate> {
+    candidates
+        .iter()
+        .max_by(|a, b| reward_cmp(a.eval.reward, b.eval.reward))
+}
+
 /// Run Algorithm 1: SA instances, PPO agents, exhaustive argmax.
 pub fn combined_optimize(
     engine: &Engine,
@@ -84,9 +102,7 @@ pub fn combined_optimize(
     }
 
     // line 13: exhaustive search over the outcomes
-    let best = candidates
-        .iter()
-        .max_by(|a, b| a.eval.reward.partial_cmp(&b.eval.reward).unwrap())
+    let best = select_best(&candidates)
         .expect("at least one optimizer instance")
         .clone();
 
@@ -111,9 +127,7 @@ pub fn sa_only_optimize(
             eval: trace.best_eval,
         });
     }
-    let best = candidates
-        .iter()
-        .max_by(|a, b| a.eval.reward.partial_cmp(&b.eval.reward).unwrap())
+    let best = select_best(&candidates)
         .expect("at least one SA instance")
         .clone();
     OptOutcome { best, candidates }
@@ -122,6 +136,44 @@ pub fn sa_only_optimize(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn candidate(seed: u64, reward: f64) -> Candidate {
+        let space = DesignSpace::case_i();
+        let action = [0usize; N_HEADS];
+        let mut eval = evaluate(&Calib::default(), &space.decode(&action));
+        eval.reward = reward;
+        Candidate { source: "SA".into(), seed, action, eval }
+    }
+
+    #[test]
+    fn reward_cmp_is_total_and_nan_loses() {
+        use std::cmp::Ordering;
+        assert_eq!(reward_cmp(1.0, 2.0), Ordering::Less);
+        assert_eq!(reward_cmp(2.0, 1.0), Ordering::Greater);
+        assert_eq!(reward_cmp(1.0, 1.0), Ordering::Equal);
+        assert_eq!(reward_cmp(f64::NAN, f64::NEG_INFINITY), Ordering::Less);
+        assert_eq!(reward_cmp(f64::NEG_INFINITY, f64::NAN), Ordering::Greater);
+        assert_eq!(reward_cmp(f64::NAN, f64::NAN), Ordering::Equal);
+    }
+
+    #[test]
+    fn nan_reward_candidate_never_wins_argmax() {
+        // Regression: the old partial_cmp(..).unwrap() argmax panicked on
+        // NaN; the total-order comparison must instead rank NaN last.
+        for order in [[0usize, 1, 2], [2, 1, 0], [1, 0, 2]] {
+            let pool = [candidate(0, f64::NAN), candidate(1, 150.0), candidate(2, 100.0)];
+            let cands: Vec<Candidate> = order.iter().map(|&i| pool[i].clone()).collect();
+            let best = select_best(&cands).expect("non-empty");
+            assert_eq!(best.seed, 1, "order {order:?} picked seed {}", best.seed);
+        }
+    }
+
+    #[test]
+    fn all_nan_candidates_still_select_without_panic() {
+        let cands = vec![candidate(0, f64::NAN), candidate(1, f64::NAN)];
+        assert!(select_best(&cands).is_some());
+        assert!(select_best(&[]).is_none());
+    }
 
     #[test]
     fn sa_only_picks_argmax_across_seeds() {

@@ -1,11 +1,17 @@
-//! Non-RL optimizers and the combined Alg. 1 driver.
+//! Non-RL optimizers, the combined Alg. 1 driver, and its parallel
+//! fan-out ([`parallel`]).
 
 pub mod combined;
 pub mod exhaustive;
+pub mod parallel;
 pub mod random_search;
 pub mod sa;
 
-pub use combined::{combined_optimize, CombinedConfig, OptOutcome};
+pub use combined::{
+    combined_optimize, reward_cmp, sa_only_optimize, select_best, Candidate, CombinedConfig,
+    OptOutcome,
+};
 pub use exhaustive::{exhaustive_projected, ExhaustiveOutcome, PinRule};
+pub use parallel::{combined_optimize_par, effective_jobs, sa_only_optimize_par, worker_count};
 pub use random_search::random_search;
 pub use sa::{simulated_annealing, SaConfig, SaTrace};

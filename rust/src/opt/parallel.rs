@@ -1,0 +1,209 @@
+//! Parallel Algorithm-1 driver: fan optimizer instances out across
+//! threads with bit-identical results.
+//!
+//! The paper's combined optimizer runs "20 SAs and 20 trained RL agents";
+//! the sequential driver in [`super::combined`] leaves every core but one
+//! idle. Each SA instance is a pure function of `(space, calib, cfg,
+//! seed)`, so this module shards the seed list across
+//! `std::thread::scope` workers (capped at `available_parallelism`),
+//! writes each seed's [`Candidate`] into its pre-assigned slot, and runs
+//! the same [`select_best`] argmax over the same candidate order as the
+//! sequential path — the output is therefore bit-identical at any thread
+//! count, which `tests/parallel_determinism.rs` proves for `--jobs`
+//! 1/2/8.
+//!
+//! PPO agents stay on the caller's thread: the PJRT client is not `Sync`,
+//! and each HLO call is already internally parallel. The SA fan-out is
+//! where the wall-clock lives for the headless paths (see
+//! `benches/perf_parallel.rs`).
+
+use anyhow::Result;
+
+use crate::cost::{evaluate, Calib};
+use crate::gym::ChipletGymEnv;
+use crate::model::space::DesignSpace;
+use crate::rl::train_ppo;
+use crate::runtime::Engine;
+
+use super::combined::{select_best, Candidate, CombinedConfig, OptOutcome};
+use super::sa::{simulated_annealing, SaConfig};
+
+/// Resolve a requested `--jobs` value into a worker count: `0` means
+/// "all available cores"; explicit requests are capped at
+/// `available_parallelism` and at the number of work items, and the
+/// result is always at least 1.
+pub fn effective_jobs(requested: usize, work_items: usize) -> usize {
+    let hw = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let want = if requested == 0 { hw } else { requested.min(hw) };
+    want.min(work_items.max(1)).max(1)
+}
+
+/// Seeds per worker: the one place the sharding arithmetic lives, so
+/// the spawn loop and the user-facing [`worker_count`] cannot drift.
+fn chunk_size(jobs: usize, work_items: usize) -> usize {
+    work_items.div_ceil(jobs)
+}
+
+/// Number of worker threads [`sa_only_optimize_par`] /
+/// [`combined_optimize_par`] will actually spawn for `work_items`
+/// seeds: the seeds are split into [`chunk_size`] pieces, so the
+/// spawned count can be below `effective_jobs` (e.g. 6 seeds at jobs 4
+/// → chunks of 2 → 3 workers). Use this for user-facing "N worker
+/// threads" messages.
+pub fn worker_count(requested: usize, work_items: usize) -> usize {
+    let jobs = effective_jobs(requested, work_items);
+    if jobs <= 1 || work_items <= 1 {
+        return 1;
+    }
+    work_items.div_ceil(chunk_size(jobs, work_items))
+}
+
+fn sa_candidate(space: &DesignSpace, calib: &Calib, sa: &SaConfig, seed: u64) -> Candidate {
+    let trace = simulated_annealing(space, calib, sa, seed);
+    Candidate {
+        source: "SA".into(),
+        seed,
+        action: trace.best_action,
+        eval: trace.best_eval,
+    }
+}
+
+/// Run one SA instance per seed across up to `jobs` worker threads.
+/// Results come back in seed-list order (each worker writes disjoint,
+/// pre-assigned slots), so the candidate list is identical to the
+/// sequential loop's regardless of scheduling.
+fn sa_candidates_par(
+    space: DesignSpace,
+    calib: &Calib,
+    sa: &SaConfig,
+    seeds: &[u64],
+    jobs: usize,
+) -> Vec<Candidate> {
+    let jobs = effective_jobs(jobs, seeds.len());
+    if jobs <= 1 || seeds.len() <= 1 {
+        return seeds
+            .iter()
+            .map(|&seed| sa_candidate(&space, calib, sa, seed))
+            .collect();
+    }
+    let mut slots: Vec<Option<Candidate>> = vec![None; seeds.len()];
+    let chunk = chunk_size(jobs, seeds.len());
+    std::thread::scope(|scope| {
+        for (seed_chunk, slot_chunk) in seeds.chunks(chunk).zip(slots.chunks_mut(chunk)) {
+            scope.spawn(move || {
+                for (slot, &seed) in slot_chunk.iter_mut().zip(seed_chunk.iter()) {
+                    *slot = Some(sa_candidate(&space, calib, sa, seed));
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|c| c.expect("every SA worker fills its slots"))
+        .collect()
+}
+
+/// Parallel SA-only Algorithm 1 (no artifacts/engine needed). Bit-identical
+/// to [`super::combined::sa_only_optimize`] at any `jobs` value.
+pub fn sa_only_optimize_par(
+    space: DesignSpace,
+    calib: &Calib,
+    sa: &SaConfig,
+    seeds: &[u64],
+    jobs: usize,
+) -> OptOutcome {
+    let candidates = sa_candidates_par(space, calib, sa, seeds, jobs);
+    let best = select_best(&candidates)
+        .expect("at least one SA instance")
+        .clone();
+    OptOutcome { best, candidates }
+}
+
+/// Parallel Algorithm 1: SA seeds fan out across `jobs` threads, PPO
+/// agents run on the calling thread (the engine is not `Sync`), and the
+/// exhaustive argmax runs over the candidates in the same order as
+/// [`super::combined::combined_optimize`] — so the outcome is
+/// bit-identical to the sequential driver.
+pub fn combined_optimize_par(
+    engine: &Engine,
+    space: DesignSpace,
+    calib: &Calib,
+    cfg: &CombinedConfig,
+    jobs: usize,
+) -> Result<OptOutcome> {
+    // lines 4-7: SA trials, sharded across workers
+    let mut candidates = sa_candidates_par(space, calib, &cfg.sa, &cfg.sa_seeds, jobs);
+
+    // lines 8-11: RL trials (sequential; each HLO call is itself parallel)
+    for &seed in &cfg.rl_seeds {
+        let mut env = ChipletGymEnv::new(space, calib.clone(), cfg.ppo.episode_len);
+        let trace = train_ppo(engine, &mut env, &cfg.ppo, seed)?;
+        let eval = evaluate(calib, &space.decode(&trace.best_action));
+        candidates.push(Candidate {
+            source: "RL".into(),
+            seed,
+            action: trace.best_action,
+            eval,
+        });
+        let det_eval = evaluate(calib, &space.decode(&trace.final_policy_action));
+        candidates.push(Candidate {
+            source: "RL-det".into(),
+            seed,
+            action: trace.final_policy_action,
+            eval: det_eval,
+        });
+    }
+
+    // line 13: exhaustive search over the outcomes
+    let best = select_best(&candidates)
+        .expect("at least one optimizer instance")
+        .clone();
+    Ok(OptOutcome { best, candidates })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_jobs_caps_and_floors() {
+        assert_eq!(effective_jobs(1, 100), 1);
+        assert!(effective_jobs(0, 100) >= 1);
+        // never more workers than work items
+        assert_eq!(effective_jobs(0, 1), 1);
+        assert!(effective_jobs(64, 2) <= 2);
+        // degenerate inputs still yield a valid worker count
+        assert_eq!(effective_jobs(0, 0), 1);
+    }
+
+    #[test]
+    fn worker_count_matches_chunked_spawns() {
+        assert_eq!(worker_count(1, 10), 1);
+        assert_eq!(worker_count(0, 1), 1);
+        assert_eq!(worker_count(0, 0), 1);
+        // chunking can spawn fewer threads than requested, never more
+        let w = worker_count(4, 6);
+        assert!(w >= 1 && w <= 4);
+        // and never more threads than seed chunks exist
+        assert!(worker_count(64, 3) <= 3);
+    }
+
+    #[test]
+    fn parallel_sa_matches_sequential_small() {
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let cfg = SaConfig {
+            iterations: 1_000,
+            trace_every: 0,
+            ..SaConfig::default()
+        };
+        let seeds = [0u64, 1, 2];
+        let seq = super::super::combined::sa_only_optimize(space, &calib, &cfg, &seeds);
+        let par = sa_only_optimize_par(space, &calib, &cfg, &seeds, 3);
+        assert_eq!(seq.best.action, par.best.action);
+        assert_eq!(seq.best.seed, par.best.seed);
+        assert_eq!(seq.candidates.len(), par.candidates.len());
+    }
+}

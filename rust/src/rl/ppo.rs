@@ -6,7 +6,7 @@
 
 use anyhow::Result;
 
-use crate::gym::{ChipletGymEnv, OBS_DIM};
+use crate::gym::{ChipletGymEnv, VecEnv, OBS_DIM};
 use crate::model::space::N_HEADS;
 use crate::runtime::Engine;
 use crate::util::Rng;
@@ -32,6 +32,12 @@ pub struct PpoConfig {
     /// Raw env rewards are divided by this before GAE (VecNormalize-lite;
     /// reported statistics stay in raw units).
     pub reward_scale: f64,
+    /// Rollout environments stepped in lock-step through
+    /// [`crate::gym::VecEnv`]. Must divide `n_steps`. With 1 (the
+    /// default) training is bit-identical to the classic single-env
+    /// loop; larger values fill the rollout K transitions per
+    /// `step_batch` call.
+    pub n_envs: usize,
 }
 
 impl PpoConfig {
@@ -50,6 +56,7 @@ impl PpoConfig {
             gae_lambda: h.gae_lambda,
             episode_len: h.episode_length,
             reward_scale: 100.0,
+            n_envs: 1,
         }
     }
 
@@ -114,12 +121,31 @@ pub fn train_ppo(
     let mut adam_v = vec![0f32; params.len()];
     let mut adam_t: u64 = 0;
 
+    // Rollouts run through a VecEnv of K forks of `env` (best-so-far
+    // and step counts merge back into `env` after training). With K = 1
+    // the RNG stream and transitions are bit-identical to the classic
+    // single-env loop.
+    let n_envs = cfg.n_envs.max(1);
+    assert!(
+        cfg.n_steps % n_envs == 0,
+        "n_steps {} must be divisible by n_envs {n_envs}",
+        cfg.n_steps
+    );
+    let t_len = cfg.n_steps / n_envs;
+    // Fork (not clone): workers start with zeroed counters so merging
+    // their stats back never re-counts the caller env's own history.
+    let mut vec_env = VecEnv::replicate(&env.fork(), n_envs);
+
     let mut buffer = RolloutBuffer::new(cfg.n_steps);
-    let mut obs = env.reset();
-    let mut action = [0usize; N_HEADS];
+    let mut obs_batch = vec_env.reset_all();
+    let mut actions = vec![[0usize; N_HEADS]; n_envs];
+    let mut log_probs = vec![0f64; n_envs];
+    let mut values = vec![0f32; n_envs];
+    let mut obs_flat = vec![0f32; n_envs * OBS_DIM];
+    let mut last_values = vec![0f32; n_envs];
 
     // episodic reward tracking (SB3's ep_info_buffer, window 100)
-    let mut ep_acc = 0.0f64;
+    let mut ep_acc = vec![0.0f64; n_envs];
     let mut recent_eps: Vec<f64> = Vec::new();
 
     // minibatch scratch
@@ -146,32 +172,44 @@ pub fn train_ppo(
         // ---- rollout (device-resident params via ForwardSession) ----
         buffer.clear();
         let session = engine.forward_session(&params)?;
-        while !buffer.is_full() {
-            let fwd = session.forward(&obs)?;
-            let logp = categorical::sample_action(
-                &fwd.logp_all,
-                &head_slices,
-                &mut rng,
-                &mut action,
-            );
-            let step = env.step(&action);
-            buffer.push(&obs, &action, logp, step.reward, fwd.value[0], step.done);
-            ep_acc += step.reward;
-            if step.done {
-                recent_eps.push(ep_acc);
-                if recent_eps.len() > 100 {
-                    recent_eps.remove(0);
-                }
-                ep_acc = 0.0;
-                obs = env.reset();
-            } else {
-                obs = step.obs;
+        for t in 0..t_len {
+            for e in 0..n_envs {
+                let fwd = session.forward(&obs_batch[e])?;
+                log_probs[e] = categorical::sample_action(
+                    &fwd.logp_all,
+                    &head_slices,
+                    &mut rng,
+                    &mut actions[e],
+                );
+                values[e] = fwd.value[0];
+                // record exactly the observation the policy consumed
+                // (bitwise equal to VecEnv::write_obs_flat's output, but
+                // taken from the forward's input, not re-derived)
+                obs_flat[e * OBS_DIM..(e + 1) * OBS_DIM].copy_from_slice(&obs_batch[e]);
             }
-            steps += 1;
+            // one step_batch call fills the K transitions of rollout row t
+            let batch = vec_env.step_batch(&actions);
+            buffer.push_step_batch(t, &obs_flat, &actions, &log_probs, &values, &batch);
+            for (e, step) in batch.iter().enumerate() {
+                ep_acc[e] += step.reward;
+                if step.done {
+                    recent_eps.push(ep_acc[e]);
+                    if recent_eps.len() > 100 {
+                        recent_eps.remove(0);
+                    }
+                    ep_acc[e] = 0.0;
+                    obs_batch[e] = vec_env.reset(e);
+                } else {
+                    obs_batch[e] = step.obs;
+                }
+                steps += 1;
+            }
         }
-        let last_value = session.forward(&obs)?.value[0];
+        for e in 0..n_envs {
+            last_values[e] = session.forward(&obs_batch[e])?.value[0];
+        }
         drop(session);
-        buffer.compute_gae(last_value, cfg.gamma, cfg.gae_lambda, cfg.reward_scale);
+        buffer.compute_gae_batched(&last_values, cfg.gamma, cfg.gae_lambda, cfg.reward_scale);
 
         // ---- optimize: n_epoch passes of shuffled minibatches ----
         let mut last_stats = None;
@@ -244,6 +282,12 @@ pub fn train_ppo(
             entropy: s.entropy as f64,
             approx_kl: s.approx_kl as f64,
         });
+    }
+
+    // The VecEnv clones discovered the designs; flow their argmax (and
+    // step counts) back into the caller's env.
+    for clone in vec_env.envs() {
+        env.merge_best(clone);
     }
 
     // Deterministic action of the final policy.

@@ -5,7 +5,7 @@
 //! `delta = r + γ·V(s') ·(1−done) − V(s)`,
 //! `adv = delta + γλ·(1−done)·adv'`, `ret = adv + V(s)`.
 
-use crate::gym::OBS_DIM;
+use crate::gym::{Step, OBS_DIM};
 use crate::model::space::N_HEADS;
 
 /// One on-policy rollout batch.
@@ -21,6 +21,10 @@ pub struct RolloutBuffer {
     pub advantages: Vec<f32>, // n_steps
     pub returns: Vec<f32>,    // n_steps
     pos: usize,
+    /// Env count of the in-progress batched fill (0 = none / plain
+    /// `push`); pins K across one rollout so a mixed-K call sequence
+    /// panics instead of corrupting the env-major layout.
+    batch_k: usize,
 }
 
 impl RolloutBuffer {
@@ -36,11 +40,13 @@ impl RolloutBuffer {
             advantages: vec![0.0; n_steps],
             returns: vec![0.0; n_steps],
             pos: 0,
+            batch_k: 0,
         }
     }
 
     pub fn clear(&mut self) {
         self.pos = 0;
+        self.batch_k = 0;
     }
 
     pub fn is_full(&self) -> bool {
@@ -65,6 +71,7 @@ impl RolloutBuffer {
         value: f32,
         done: bool,
     ) {
+        assert_eq!(self.batch_k, 0, "do not mix push with push_step_batch");
         assert!(self.pos < self.n_steps, "rollout buffer overflow");
         let o = self.pos * OBS_DIM;
         self.obs[o..o + OBS_DIM].copy_from_slice(obs);
@@ -79,24 +86,112 @@ impl RolloutBuffer {
         self.pos += 1;
     }
 
+    /// Record the `t`-th transition of every environment from one
+    /// [`crate::gym::VecEnv::step_batch`] call. The buffer is laid out
+    /// **env-major**: env `e`'s trajectory occupies the contiguous rows
+    /// `[e*T, (e+1)*T)` with `T = n_steps / K`, so the GAE recursion in
+    /// [`RolloutBuffer::compute_gae_batched`] never crosses an env
+    /// boundary. `obs` holds the K pre-step observations (K x OBS_DIM,
+    /// the layout [`crate::gym::VecEnv::write_obs_flat`] produces).
+    ///
+    /// Must be called with `t = 0, 1, 2, ...` in order and a fixed K;
+    /// do not mix with [`RolloutBuffer::push`].
+    pub fn push_step_batch(
+        &mut self,
+        t: usize,
+        obs: &[f32],
+        actions: &[[usize; N_HEADS]],
+        log_probs: &[f64],
+        values: &[f32],
+        steps: &[Step],
+    ) {
+        let k = steps.len();
+        assert!(k >= 1, "push_step_batch with zero envs");
+        assert_eq!(
+            self.n_steps % k,
+            0,
+            "n_steps {} not divisible by {k} envs",
+            self.n_steps
+        );
+        if self.pos == 0 {
+            self.batch_k = k;
+        } else {
+            assert_eq!(self.batch_k, k, "push_step_batch K changed mid-rollout");
+        }
+        assert_eq!(obs.len(), k * OBS_DIM);
+        assert_eq!(actions.len(), k);
+        assert_eq!(log_probs.len(), k);
+        assert_eq!(values.len(), k);
+        assert_eq!(t * k, self.pos, "push_step_batch calls must be in order");
+        assert!(self.pos + k <= self.n_steps, "rollout buffer overflow");
+        let t_len = self.n_steps / k;
+        for e in 0..k {
+            let row = e * t_len + t;
+            let o = row * OBS_DIM;
+            self.obs[o..o + OBS_DIM].copy_from_slice(&obs[e * OBS_DIM..(e + 1) * OBS_DIM]);
+            let a = row * N_HEADS;
+            for (i, &x) in actions[e].iter().enumerate() {
+                self.actions[a + i] = x as i32;
+            }
+            self.log_probs[row] = log_probs[e] as f32;
+            self.rewards[row] = steps[e].reward;
+            self.values[row] = values[e];
+            self.dones[row] = steps[e].done;
+        }
+        self.pos += k;
+    }
+
     /// Compute GAE advantages and returns. `last_value` bootstraps the
     /// final state; `reward_scale` maps raw env rewards into the network's
     /// value range (SB3 users typically wrap the env — we divide here).
     pub fn compute_gae(&mut self, last_value: f32, gamma: f64, lam: f64, reward_scale: f64) {
+        self.compute_gae_batched(&[last_value], gamma, lam, reward_scale);
+    }
+
+    /// GAE over a K-env, env-major buffer (the layout
+    /// [`RolloutBuffer::push_step_batch`] writes): the recursion runs
+    /// independently over each env's contiguous `n_steps / K` rows,
+    /// bootstrapped by that env's entry in `last_values`. With K = 1 this
+    /// is exactly the classic single-env scan.
+    pub fn compute_gae_batched(
+        &mut self,
+        last_values: &[f32],
+        gamma: f64,
+        lam: f64,
+        reward_scale: f64,
+    ) {
         assert!(self.is_full(), "compute_gae on partial rollout");
-        let mut adv = 0.0f64;
-        for t in (0..self.n_steps).rev() {
-            let non_terminal = if self.dones[t] { 0.0 } else { 1.0 };
-            let next_value = if t + 1 < self.n_steps {
-                if self.dones[t] { 0.0 } else { self.values[t + 1] as f64 }
-            } else {
-                non_terminal * last_value as f64
-            };
-            let r = self.rewards[t] / reward_scale;
-            let delta = r + gamma * next_value - self.values[t] as f64;
-            adv = delta + gamma * lam * non_terminal * adv;
-            self.advantages[t] = adv as f32;
-            self.returns[t] = (adv + self.values[t] as f64) as f32;
+        let k = last_values.len();
+        assert!(k >= 1, "compute_gae_batched with zero envs");
+        assert!(
+            (self.batch_k == 0 && k == 1) || self.batch_k == k,
+            "GAE env count {k} does not match the buffer's fill layout ({})",
+            self.batch_k
+        );
+        assert_eq!(
+            self.n_steps % k,
+            0,
+            "n_steps {} not divisible by {k} envs",
+            self.n_steps
+        );
+        let t_len = self.n_steps / k;
+        for (e, &last_value) in last_values.iter().enumerate() {
+            let base = e * t_len;
+            let mut adv = 0.0f64;
+            for i in (0..t_len).rev() {
+                let t = base + i;
+                let non_terminal = if self.dones[t] { 0.0 } else { 1.0 };
+                let next_value = if i + 1 < t_len {
+                    if self.dones[t] { 0.0 } else { self.values[t + 1] as f64 }
+                } else {
+                    non_terminal * last_value as f64
+                };
+                let r = self.rewards[t] / reward_scale;
+                let delta = r + gamma * next_value - self.values[t] as f64;
+                adv = delta + gamma * lam * non_terminal * adv;
+                self.advantages[t] = adv as f32;
+                self.returns[t] = (adv + self.values[t] as f64) as f32;
+            }
         }
     }
 
@@ -202,6 +297,122 @@ mod tests {
         assert_eq!(obs[OBS_DIM], 0.0);
         assert_eq!(actions[0], 2);
         assert_eq!(lp[0], -2.0);
+    }
+
+    fn dummy_step(reward: f64, done: bool, obs0: f32) -> Step {
+        use crate::cost::{evaluate, Calib};
+        use crate::model::space::DesignSpace;
+        let space = DesignSpace::case_i();
+        let eval = evaluate(&Calib::default(), &space.decode(&[0usize; N_HEADS]));
+        let mut obs = [0f32; OBS_DIM];
+        obs[0] = obs0;
+        Step { obs, reward, done, eval }
+    }
+
+    #[test]
+    fn batched_fill_and_gae_match_per_env_buffers() {
+        // 2 envs x 3 steps: the env-major batched buffer must reproduce
+        // two independently-filled single-env buffers exactly.
+        let k = 2usize;
+        let t_len = 3usize;
+        let rewards = [[1.0f64, 2.0, 3.0], [4.0, 5.0, 6.0]];
+        let values = [[0.1f32, 0.2, 0.3], [0.4, 0.5, 0.6]];
+        let dones = [[false, true, false], [false, false, true]];
+        let last_values = [0.7f32, 0.8];
+
+        let mut batched = RolloutBuffer::new(k * t_len);
+        for t in 0..t_len {
+            let mut obs_flat = vec![0f32; k * OBS_DIM];
+            let mut actions = vec![[0usize; N_HEADS]; k];
+            let mut lps = vec![0f64; k];
+            let mut vals = vec![0f32; k];
+            let mut steps = Vec::new();
+            for e in 0..k {
+                obs_flat[e * OBS_DIM] = (10 * e + t) as f32;
+                actions[e][0] = e + t;
+                lps[e] = -((e + t) as f64);
+                vals[e] = values[e][t];
+                steps.push(dummy_step(rewards[e][t], dones[e][t], 0.0));
+            }
+            batched.push_step_batch(t, &obs_flat, &actions, &lps, &vals, &steps);
+        }
+        assert!(batched.is_full());
+        batched.compute_gae_batched(&last_values, 0.99, 0.95, 1.0);
+
+        for e in 0..k {
+            let mut solo = RolloutBuffer::new(t_len);
+            for t in 0..t_len {
+                let mut obs = [0f32; OBS_DIM];
+                obs[0] = (10 * e + t) as f32;
+                let mut act = [0usize; N_HEADS];
+                act[0] = e + t;
+                solo.push(&obs, &act, -((e + t) as f64), rewards[e][t], values[e][t], dones[e][t]);
+            }
+            solo.compute_gae(last_values[e], 0.99, 0.95, 1.0);
+            for t in 0..t_len {
+                let row = e * t_len + t;
+                assert_eq!(
+                    batched.obs[row * OBS_DIM..(row + 1) * OBS_DIM],
+                    solo.obs[t * OBS_DIM..(t + 1) * OBS_DIM]
+                );
+                assert_eq!(
+                    batched.actions[row * N_HEADS..(row + 1) * N_HEADS],
+                    solo.actions[t * N_HEADS..(t + 1) * N_HEADS]
+                );
+                assert_eq!(batched.log_probs[row], solo.log_probs[t]);
+                assert_eq!(batched.rewards[row], solo.rewards[t]);
+                assert_eq!(batched.dones[row], solo.dones[t]);
+                assert_eq!(batched.advantages[row], solo.advantages[t]);
+                assert_eq!(batched.returns[row], solo.returns[t]);
+            }
+        }
+    }
+
+    #[test]
+    fn single_env_batched_gae_equals_classic() {
+        let mut a = filled(3, &[1.0, 2.0, 3.0], &[0.5, 0.4, 0.3], &[false, true, false]);
+        let mut b = filled(3, &[1.0, 2.0, 3.0], &[0.5, 0.4, 0.3], &[false, true, false]);
+        a.compute_gae(0.9, 0.99, 0.95, 100.0);
+        b.compute_gae_batched(&[0.9], 0.99, 0.95, 100.0);
+        assert_eq!(a.advantages, b.advantages);
+        assert_eq!(a.returns, b.returns);
+    }
+
+    #[test]
+    #[should_panic(expected = "K changed mid-rollout")]
+    fn mixed_k_batched_push_panics() {
+        // n_steps=12: k=4 then k=2 would silently scramble the env-major
+        // layout without the batch_k pin (t*k == pos alone passes).
+        let mut b = RolloutBuffer::new(12);
+        let push = |b: &mut RolloutBuffer, t: usize, k: usize| {
+            let obs = vec![0f32; k * OBS_DIM];
+            let actions = vec![[0usize; N_HEADS]; k];
+            let steps: Vec<Step> = (0..k).map(|_| dummy_step(0.0, false, 0.0)).collect();
+            b.push_step_batch(t, &obs, &actions, &vec![0.0; k], &vec![0f32; k], &steps);
+        };
+        push(&mut b, 0, 4);
+        push(&mut b, 2, 2); // t*k == pos, but K changed
+    }
+
+    #[test]
+    #[should_panic(expected = "do not mix push")]
+    fn mixing_push_and_batched_push_panics() {
+        let mut b = RolloutBuffer::new(4);
+        let obs = vec![0f32; 2 * OBS_DIM];
+        let actions = vec![[0usize; N_HEADS]; 2];
+        let steps = vec![dummy_step(0.0, false, 0.0), dummy_step(0.0, false, 0.0)];
+        b.push_step_batch(0, &obs, &actions, &[0.0, 0.0], &[0.0, 0.0], &steps);
+        b.push(&[0.0; OBS_DIM], &[0usize; N_HEADS], 0.0, 0.0, 0.0, false);
+    }
+
+    #[test]
+    #[should_panic(expected = "in order")]
+    fn out_of_order_batched_push_panics() {
+        let mut b = RolloutBuffer::new(4);
+        let obs = vec![0f32; 2 * OBS_DIM];
+        let actions = vec![[0usize; N_HEADS]; 2];
+        let steps = vec![dummy_step(0.0, false, 0.0), dummy_step(0.0, false, 0.0)];
+        b.push_step_batch(1, &obs, &actions, &[0.0, 0.0], &[0.0, 0.0], &steps);
     }
 
     #[test]

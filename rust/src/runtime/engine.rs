@@ -8,52 +8,7 @@ use xla::{
 };
 
 use super::manifest::Manifest;
-
-/// Output of one policy forward: per-head log-probs and the value estimate.
-#[derive(Clone, Debug)]
-pub struct ForwardOut {
-    /// Concatenated per-head log-softmax, length `act_total * batch`.
-    pub logp_all: Vec<f32>,
-    /// Value estimates, length `batch`.
-    pub value: Vec<f32>,
-}
-
-/// PPO update statistics (mirrors model.py's stats vector).
-#[derive(Clone, Copy, Debug, Default)]
-pub struct UpdateStats {
-    pub loss: f32,
-    pub pi_loss: f32,
-    pub vf_loss: f32,
-    pub entropy: f32,
-    pub approx_kl: f32,
-    pub clip_frac: f32,
-    pub grad_norm: f32,
-    pub update_norm: f32,
-}
-
-impl UpdateStats {
-    fn from_slice(s: &[f32]) -> UpdateStats {
-        UpdateStats {
-            loss: s[0],
-            pi_loss: s[1],
-            vf_loss: s[2],
-            entropy: s[3],
-            approx_kl: s[4],
-            clip_frac: s[5],
-            grad_norm: s[6],
-            update_norm: s[7],
-        }
-    }
-}
-
-/// Output of one PPO minibatch step.
-#[derive(Clone, Debug)]
-pub struct UpdateOut {
-    pub params: Vec<f32>,
-    pub adam_m: Vec<f32>,
-    pub adam_v: Vec<f32>,
-    pub stats: UpdateStats,
-}
+use super::types::{ForwardOut, UpdateOut, UpdateStats};
 
 /// Compiled artifacts bound to a PJRT client.
 ///

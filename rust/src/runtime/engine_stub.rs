@@ -1,0 +1,135 @@
+//! Stub execution engine — compiled when the `pjrt` feature is OFF.
+//!
+//! The offline tier-1 harness (`cargo build --release && cargo test -q`)
+//! must work without the `xla` crate. This stub exposes the exact public
+//! API of the real [`Engine`], but construction always fails with a clear
+//! message: every engine-dependent test, bench and CLI path already
+//! handles `Engine::discover()` errors by skipping loudly, so the SA /
+//! analytical-model surface stays fully testable while the RL hot path
+//! is inert. Build with `--features pjrt` (and a real xla crate at
+//! `rust/vendor/xla`) to execute the AOT'd HLO artifacts.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use super::manifest::Manifest;
+use super::types::{ForwardOut, UpdateOut};
+
+const STUB_MSG: &str = "chiplet_gym was built without the `pjrt` feature: \
+    the PJRT engine is a stub and cannot execute HLO artifacts. Rebuild \
+    with `cargo build --features pjrt` (requires a real xla crate at \
+    rust/vendor/xla).";
+
+/// Stub engine: same shape as the PJRT-backed engine, never constructible.
+pub struct Engine {
+    pub manifest: Manifest,
+    dir: PathBuf,
+}
+
+impl Engine {
+    /// Always fails: HLO execution requires the `pjrt` feature.
+    pub fn load(_dir: &Path) -> Result<Engine> {
+        bail!(STUB_MSG)
+    }
+
+    /// Always fails: HLO execution requires the `pjrt` feature.
+    pub fn discover() -> Result<Engine> {
+        bail!(STUB_MSG)
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (pjrt feature disabled)".to_string()
+    }
+
+    /// Single-observation policy forward (the rollout hot path).
+    pub fn policy_forward(&self, _params: &[f32], _obs: &[f32]) -> Result<ForwardOut> {
+        bail!(STUB_MSG)
+    }
+
+    /// Batched policy forward (`manifest.eval_batch` rows) for sweeps.
+    pub fn policy_forward_batch(&self, _params: &[f32], _obs: &[f32]) -> Result<ForwardOut> {
+        bail!(STUB_MSG)
+    }
+
+    /// One PPO minibatch Adam step.
+    #[allow(clippy::too_many_arguments)]
+    pub fn ppo_update(
+        &self,
+        _params: &[f32],
+        _adam_m: &[f32],
+        _adam_v: &[f32],
+        _step: f32,
+        _obs: &[f32],
+        _actions: &[i32],
+        _old_logp: &[f32],
+        _advantages: &[f32],
+        _returns: &[f32],
+        _hyper: [f32; 3],
+    ) -> Result<UpdateOut> {
+        bail!(STUB_MSG)
+    }
+
+    /// Whether the epoch-fused update artifact is available (never, here).
+    pub fn has_epochs(&self) -> bool {
+        false
+    }
+
+    /// One full PPO optimize phase in a single HLO call.
+    #[allow(clippy::too_many_arguments)]
+    pub fn ppo_epochs(
+        &self,
+        _params: &[f32],
+        _adam_m: &[f32],
+        _adam_v: &[f32],
+        _step0: f32,
+        _obs: &[f32],
+        _actions: &[i32],
+        _old_logp: &[f32],
+        _advantages: &[f32],
+        _returns: &[f32],
+        _perm: &[i32],
+        _hyper: [f32; 3],
+    ) -> Result<UpdateOut> {
+        bail!(STUB_MSG)
+    }
+
+    /// Create a rollout session with device-resident parameters.
+    pub fn forward_session(&self, _params: &[f32]) -> Result<ForwardSession<'_>> {
+        bail!(STUB_MSG)
+    }
+
+    /// Load the golden parameter vector written by aot.py.
+    pub fn golden_params(&self) -> Result<Vec<f32>> {
+        bail!(STUB_MSG)
+    }
+}
+
+/// Stub rollout session (never constructible, like the stub [`Engine`]).
+pub struct ForwardSession<'a> {
+    _engine: &'a Engine,
+}
+
+impl ForwardSession<'_> {
+    /// Single-observation forward against the cached parameters.
+    pub fn forward(&self, _obs: &[f32]) -> Result<ForwardOut> {
+        bail!(STUB_MSG)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_engine_fails_loudly() {
+        let err = Engine::discover().unwrap_err();
+        assert!(err.to_string().contains("pjrt"));
+        let err = Engine::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("pjrt"));
+    }
+}

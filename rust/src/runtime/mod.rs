@@ -5,14 +5,25 @@
 //! HLO text; [`Engine`] compiles them on a `PjRtClient` at startup and the
 //! optimizer then calls [`Engine::policy_forward`] / [`Engine::ppo_update`]
 //! on the hot path with plain `f32` slices — no Python anywhere.
+//!
+//! The `xla` dependency sits behind the off-by-default `pjrt` feature;
+//! without it a stub [`Engine`] with the identical API compiles instead
+//! (construction fails loudly, RL paths skip) so the tier-1 harness runs
+//! fully offline.
 
+#[cfg(feature = "pjrt")]
+mod engine;
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
 mod engine;
 mod golden;
 mod manifest;
+mod types;
 
-pub use engine::{Engine, ForwardOut, UpdateOut, UpdateStats};
+pub use engine::{Engine, ForwardSession};
 pub use golden::Golden;
 pub use manifest::{Manifest, ParamEntry};
+pub use types::{ForwardOut, UpdateOut, UpdateStats};
 
 /// Default artifact directory relative to the repo root.
 pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

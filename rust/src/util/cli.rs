@@ -72,6 +72,12 @@ impl Args {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
 
+    /// `--jobs N` worker-count flag shared by every parallel launcher
+    /// path (`opt::parallel`): 0 means "all available cores".
+    pub fn jobs(&self, default: usize) -> usize {
+        self.get_parse("jobs", default)
+    }
+
     /// Comma-separated list of u64 (e.g. `--seeds 0,1,2`).
     pub fn get_u64_list(&self, key: &str, default: &[u64]) -> Vec<u64> {
         match self.get(key) {
@@ -115,6 +121,14 @@ mod tests {
         let a = parse("x");
         assert_eq!(a.get_parse("alpha", 1.5f64), 1.5);
         assert_eq!(a.get_or("mode", "fast"), "fast");
+    }
+
+    #[test]
+    fn jobs_flag() {
+        assert_eq!(parse("optimize --jobs 8").jobs(0), 8);
+        assert_eq!(parse("optimize --jobs=2").jobs(0), 2);
+        assert_eq!(parse("optimize").jobs(0), 0);
+        assert_eq!(parse("optimize").jobs(1), 1);
     }
 
     #[test]

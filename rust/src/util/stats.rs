@@ -1,4 +1,19 @@
-//! Descriptive statistics for experiment reporting and benches.
+//! Descriptive statistics for experiment reporting and benches, plus
+//! NaN-safe float ordering helpers.
+
+/// Total-order f64 comparison with NaN below every real value, so an
+/// argmax over possibly-NaN data can never select NaN (and never
+/// panics, unlike `partial_cmp(..).unwrap()`). `opt::combined`
+/// re-exports this as `reward_cmp` for the optimizer argmax.
+pub fn nan_least_cmp(a: f64, b: f64) -> std::cmp::Ordering {
+    use std::cmp::Ordering;
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Less,
+        (false, true) => Ordering::Greater,
+        (false, false) => a.partial_cmp(&b).expect("non-NaN values compare"),
+    }
+}
 
 /// Summary of a sample: n, mean, std (population), min, max, percentiles.
 #[derive(Clone, Debug, PartialEq)]
@@ -18,8 +33,10 @@ impl Summary {
         let n = xs.len();
         let mean = xs.iter().sum::<f64>() / n as f64;
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        // total_cmp: NaN-safe (the old partial_cmp(..).unwrap() panicked
+        // on NaN samples).
         let mut sorted = xs.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         Summary {
             n,
             mean,

@@ -195,6 +195,89 @@ fn prop_env_step_reward_equals_eval() {
 }
 
 #[test]
+fn prop_decode_is_total_over_all_valid_actions() {
+    // space.decode(a) must be total (never panic) over every valid
+    // MultiDiscrete action, including every per-head boundary value —
+    // ActionGen shrinks toward 0, so we also sweep each head pinned at
+    // its maximum while the rest are random.
+    for space in [DesignSpace::case_i(), DesignSpace::case_ii()] {
+        assert_prop(10, &ActionGen, |v| {
+            let p = space.decode(&to_action(v));
+            let e = evaluate(&Calib::default(), &p);
+            if e.reward.is_nan() {
+                return Err("decode+evaluate produced NaN reward".into());
+            }
+            Ok(())
+        });
+        let mut rng = Rng::new(10);
+        for (h, &dim) in ACTION_DIMS.iter().enumerate() {
+            for extreme in [0usize, dim - 1] {
+                let mut a = space.random_action(&mut rng);
+                a[h] = extreme;
+                let p = space.decode(&a);
+                // representable points round-trip through encode
+                let p2 = space.decode(&space.encode(&p));
+                assert_eq!(p, p2, "head {h} at {extreme} broke the round-trip");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_vec_env_step_batch_equals_k_sequential_steps() {
+    // VecEnv::step_batch over K envs must be indistinguishable from K
+    // independent env.step calls — rewards, dones and observations
+    // bitwise equal, for random K and random action batches.
+    use chiplet_gym::gym::VecEnv;
+    let space = DesignSpace::case_i();
+    let calib = Calib::default();
+    let gen = VecGen {
+        inner: IntGen { lo: 1, hi: 6 },
+        len: 2,
+    };
+    assert_prop(11, &gen, |v| {
+        let k = v[0] as usize;
+        let rounds = v[1] as usize;
+        let proto = ChipletGymEnv::new(space, calib.clone(), 2);
+        let mut vec_env = VecEnv::replicate(&proto, k);
+        let mut solos: Vec<ChipletGymEnv> = (0..k).map(|_| proto.clone()).collect();
+        vec_env.reset_all();
+        for env in &mut solos {
+            env.reset();
+        }
+        let mut rng = Rng::new((k * 1000 + rounds) as u64);
+        for _ in 0..rounds {
+            let actions: Vec<[usize; N_HEADS]> =
+                (0..k).map(|_| space.random_action(&mut rng)).collect();
+            let batch = vec_env.step_batch(&actions);
+            for e in 0..k {
+                let solo = solos[e].step(&actions[e]);
+                if batch[e].reward.to_bits() != solo.reward.to_bits() {
+                    return Err(format!(
+                        "env {e}: batch reward {} != solo {}",
+                        batch[e].reward, solo.reward
+                    ));
+                }
+                if batch[e].done != solo.done {
+                    return Err(format!("env {e}: done mismatch"));
+                }
+                if batch[e].obs != solo.obs {
+                    return Err(format!("env {e}: observation mismatch"));
+                }
+                if batch[e].done {
+                    vec_env.reset(e);
+                    solos[e].reset();
+                }
+            }
+        }
+        if vec_env.total_steps() != solos.iter().map(|s| s.total_steps()).sum::<u64>() {
+            return Err("total_steps diverged".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_sa_best_is_max_of_its_history() {
     use chiplet_gym::opt::sa::{simulated_annealing, SaConfig};
     let space = DesignSpace::case_i();

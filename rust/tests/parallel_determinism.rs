@@ -1,0 +1,130 @@
+//! `opt::parallel` determinism contract: the multi-threaded Alg. 1
+//! driver must be bit-identical to the sequential seed path at any
+//! `--jobs` value — plus the NaN-argmax regression tests.
+
+use chiplet_gym::cost::{evaluate, Calib};
+use chiplet_gym::model::space::{DesignSpace, N_HEADS};
+use chiplet_gym::opt::combined::{reward_cmp, sa_only_optimize, select_best, Candidate};
+use chiplet_gym::opt::parallel::{effective_jobs, sa_only_optimize_par};
+use chiplet_gym::opt::sa::SaConfig;
+
+fn quick_sa() -> SaConfig {
+    SaConfig {
+        iterations: 3_000,
+        trace_every: 0,
+        ..SaConfig::default()
+    }
+}
+
+fn assert_outcomes_identical(
+    a: &chiplet_gym::opt::combined::OptOutcome,
+    b: &chiplet_gym::opt::combined::OptOutcome,
+    label: &str,
+) {
+    assert_eq!(a.best.source, b.best.source, "{label}: best source");
+    assert_eq!(a.best.seed, b.best.seed, "{label}: best seed");
+    assert_eq!(a.best.action, b.best.action, "{label}: best action");
+    assert_eq!(
+        a.best.eval.reward.to_bits(),
+        b.best.eval.reward.to_bits(),
+        "{label}: best reward bits"
+    );
+    assert_eq!(a.candidates.len(), b.candidates.len(), "{label}: candidate count");
+    for (i, (ca, cb)) in a.candidates.iter().zip(b.candidates.iter()).enumerate() {
+        assert_eq!(ca.source, cb.source, "{label}: candidate {i} source");
+        assert_eq!(ca.seed, cb.seed, "{label}: candidate {i} seed");
+        assert_eq!(ca.action, cb.action, "{label}: candidate {i} action");
+        assert_eq!(
+            ca.eval.reward.to_bits(),
+            cb.eval.reward.to_bits(),
+            "{label}: candidate {i} reward bits"
+        );
+    }
+}
+
+#[test]
+fn jobs_1_2_8_are_bit_identical_to_sequential() {
+    let space = DesignSpace::case_i();
+    let calib = Calib::default();
+    let seeds: Vec<u64> = (0..6).collect();
+    let sequential = sa_only_optimize(space, &calib, &quick_sa(), &seeds);
+    for jobs in [1usize, 2, 8] {
+        let parallel = sa_only_optimize_par(space, &calib, &quick_sa(), &seeds, jobs);
+        assert_outcomes_identical(&sequential, &parallel, &format!("--jobs {jobs}"));
+    }
+}
+
+#[test]
+fn jobs_auto_matches_sequential_case_ii() {
+    let space = DesignSpace::case_ii();
+    let calib = Calib::default();
+    let seeds: Vec<u64> = vec![3, 1, 4, 1, 5]; // duplicate seeds allowed
+    let sequential = sa_only_optimize(space, &calib, &quick_sa(), &seeds);
+    let parallel = sa_only_optimize_par(space, &calib, &quick_sa(), &seeds, 0);
+    assert_outcomes_identical(&sequential, &parallel, "--jobs 0 (auto)");
+}
+
+#[test]
+fn more_jobs_than_seeds_is_fine() {
+    let space = DesignSpace::case_i();
+    let calib = Calib::default();
+    let seeds = [7u64, 11];
+    let sequential = sa_only_optimize(space, &calib, &quick_sa(), &seeds);
+    let parallel = sa_only_optimize_par(space, &calib, &quick_sa(), &seeds, 64);
+    assert_outcomes_identical(&sequential, &parallel, "--jobs 64, 2 seeds");
+}
+
+#[test]
+fn effective_jobs_never_exceeds_work_or_zero() {
+    assert_eq!(effective_jobs(1, 20), 1);
+    assert!(effective_jobs(0, 20) >= 1);
+    assert!(effective_jobs(0, 20) <= 20);
+    assert!(effective_jobs(8, 3) <= 3);
+    assert_eq!(effective_jobs(5, 0), 1);
+}
+
+// ---- NaN regression: a NaN-reward candidate must never win the argmax
+// (and must never panic the comparison, as partial_cmp().unwrap() did) ----
+
+fn candidate_with_reward(seed: u64, reward: f64) -> Candidate {
+    let space = DesignSpace::case_i();
+    let calib = Calib::default();
+    let action = [0usize; N_HEADS];
+    let mut eval = evaluate(&calib, &space.decode(&action));
+    eval.reward = reward;
+    Candidate {
+        source: "SA".into(),
+        seed,
+        action,
+        eval,
+    }
+}
+
+#[test]
+fn nan_reward_candidate_loses_regardless_of_position() {
+    for (nan_pos, finite_seed) in [(0usize, 1u64), (1, 0), (2, 0)] {
+        let mut candidates = vec![
+            candidate_with_reward(0, 120.0),
+            candidate_with_reward(1, 80.0),
+            candidate_with_reward(2, -500.0),
+        ];
+        candidates[nan_pos].eval.reward = f64::NAN;
+        let best = select_best(&candidates).expect("non-empty candidate list");
+        assert!(!best.eval.reward.is_nan(), "NaN candidate won at position {nan_pos}");
+        if nan_pos != 0 {
+            assert_eq!(best.seed, 0, "expected seed 0 to win (reward 120)");
+        } else {
+            assert_eq!(best.seed, finite_seed, "expected seed {finite_seed} to win");
+        }
+    }
+}
+
+#[test]
+fn reward_cmp_total_order_on_specials() {
+    use std::cmp::Ordering;
+    assert_eq!(reward_cmp(f64::NAN, 0.0), Ordering::Less);
+    assert_eq!(reward_cmp(0.0, f64::NAN), Ordering::Greater);
+    assert_eq!(reward_cmp(f64::NAN, f64::NAN), Ordering::Equal);
+    assert_eq!(reward_cmp(f64::NEG_INFINITY, f64::NAN), Ordering::Greater);
+    assert_eq!(reward_cmp(f64::INFINITY, f64::NEG_INFINITY), Ordering::Greater);
+}

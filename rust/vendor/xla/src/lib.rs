@@ -1,0 +1,119 @@
+//! Placeholder for the xla-rs PJRT bindings.
+//!
+//! The offline build environment does not ship the real `xla` crate, but
+//! Cargo must still be able to *resolve* the optional dependency behind
+//! the `pjrt` feature. This crate mirrors exactly the API surface that
+//! `runtime::engine` consumes, with every method panicking at runtime.
+//! To actually execute AOT'd HLO artifacts, replace this directory with a
+//! real xla-rs checkout (the `xla_extension` 0.5.x lineage) providing the
+//! same types, then build with `--features pjrt`.
+
+use std::fmt;
+
+const PLACEHOLDER_MSG: &str =
+    "vendored xla placeholder: replace rust/vendor/xla with a real xla-rs checkout";
+
+/// Error type mirroring xla-rs (`?`-compatible with anyhow).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla error: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Host-side literal (typed multi-dimensional array).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        unimplemented!("{PLACEHOLDER_MSG}")
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unimplemented!("{PLACEHOLDER_MSG}")
+    }
+
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal)> {
+        unimplemented!("{PLACEHOLDER_MSG}")
+    }
+
+    pub fn to_tuple4(&self) -> Result<(Literal, Literal, Literal, Literal)> {
+        unimplemented!("{PLACEHOLDER_MSG}")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unimplemented!("{PLACEHOLDER_MSG}")
+    }
+}
+
+/// Parsed HLO module proto.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unimplemented!("{PLACEHOLDER_MSG}")
+    }
+}
+
+/// An XLA computation ready for compilation.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        unimplemented!("{PLACEHOLDER_MSG}")
+    }
+}
+
+/// Device-resident buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unimplemented!("{PLACEHOLDER_MSG}")
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unimplemented!("{PLACEHOLDER_MSG}")
+    }
+
+    pub fn execute_b(&self, _inputs: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unimplemented!("{PLACEHOLDER_MSG}")
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error(PLACEHOLDER_MSG.to_string()))
+    }
+
+    pub fn platform_name(&self) -> String {
+        unimplemented!("{PLACEHOLDER_MSG}")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unimplemented!("{PLACEHOLDER_MSG}")
+    }
+
+    pub fn buffer_from_host_buffer<T>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unimplemented!("{PLACEHOLDER_MSG}")
+    }
+}
