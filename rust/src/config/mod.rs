@@ -10,8 +10,9 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use crate::cost::Calib;
-use crate::model::space::DesignSpace;
+use crate::model::space::{ArchType, DesignSpace};
 use crate::opt::sa::SaConfig;
+use crate::scenario::Scenario;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
@@ -34,6 +35,13 @@ pub struct RunConfig {
     /// Worker threads for the parallel Alg. 1 driver (`opt::parallel`):
     /// 0 = all available cores; results are bit-identical at any value.
     pub jobs: usize,
+    /// Named scenario this run was configured from (config key
+    /// `scenario` / CLI `--scenario`); applied via
+    /// [`RunConfig::apply_scenario`] before CLI overrides.
+    pub scenario: Option<String>,
+    /// Architecture restriction inherited from the scenario's packaging
+    /// (e.g. organic-substrate locks the space to 2.5D).
+    pub arch_lock: Option<ArchType>,
 }
 
 impl Default for RunConfig {
@@ -50,13 +58,28 @@ impl Default for RunConfig {
             rl_seeds: (0..20).collect(),
             out_dir: "bench_results".into(),
             jobs: 0,
+            scenario: None,
+            arch_lock: None,
         }
     }
 }
 
 impl RunConfig {
     pub fn space(&self) -> DesignSpace {
-        DesignSpace { chiplet_cap: self.chiplet_cap }
+        DesignSpace { chiplet_cap: self.chiplet_cap, arch_lock: self.arch_lock }
+    }
+
+    /// Reconfigure this run from a [`Scenario`]: design space (cap +
+    /// packaging lock), calibration, and SA budget. CLI overrides still
+    /// apply on top (call before [`RunConfig::apply_args`]).
+    pub fn apply_scenario(&mut self, s: &Scenario) -> Result<()> {
+        self.chiplet_cap = s.chiplet_cap;
+        self.arch_lock = s.space().arch_lock;
+        self.calib = s.calib()?;
+        self.sa.iterations = s.budget.sa_iterations;
+        self.sa_seeds = s.budget.sa_seeds.clone();
+        self.scenario = Some(s.name.clone());
+        Ok(())
     }
 
     /// Load from a JSON file (all keys optional).
@@ -69,7 +92,9 @@ impl RunConfig {
         Ok(cfg)
     }
 
-    fn apply_json(&mut self, v: &Json) {
+    /// Apply config-file keys (all optional). Public so the launcher can
+    /// layer them between scenario application and CLI overrides.
+    pub fn apply_json(&mut self, v: &Json) {
         let num = |key: &str| v.get(key).and_then(Json::as_f64);
         if let Some(x) = num("chiplet_cap") {
             self.chiplet_cap = x as usize;
@@ -116,6 +141,9 @@ impl RunConfig {
         if let Some(x) = num("jobs") {
             self.jobs = x as usize;
         }
+        if let Some(s) = v.get("scenario").and_then(Json::as_str) {
+            self.scenario = Some(s.to_string());
+        }
     }
 
     /// Apply CLI overrides on top (CLI wins over config file).
@@ -146,6 +174,9 @@ impl RunConfig {
             self.out_dir = out.to_string();
         }
         self.jobs = args.jobs(self.jobs);
+        if let Some(s) = args.get("scenario") {
+            self.scenario = Some(s.to_string());
+        }
     }
 }
 
@@ -207,6 +238,21 @@ mod tests {
         let args = Args::parse("ppo --n-envs 4".split_whitespace().map(String::from));
         cfg.apply_args(&args);
         assert_eq!(cfg.ppo_n_envs, 4);
+    }
+
+    #[test]
+    fn apply_scenario_reconfigures_space_calib_and_budget() {
+        let mut cfg = RunConfig::default();
+        let s = crate::scenario::registry::find("organic-substrate").unwrap();
+        cfg.apply_scenario(&s).unwrap();
+        assert_eq!(cfg.scenario.as_deref(), Some("organic-substrate"));
+        assert!(cfg.space().arch_lock.is_some());
+        assert_eq!(cfg.calib.pkg_mu0_per_mm2, 0.006);
+        assert_eq!(cfg.sa.iterations, s.budget.sa_iterations);
+        // CLI still wins on top of the scenario
+        let args = Args::parse("sa --sa-iters 777".split_whitespace().map(String::from));
+        cfg.apply_args(&args);
+        assert_eq!(cfg.sa.iterations, 777);
     }
 
     #[test]

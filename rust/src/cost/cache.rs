@@ -1,0 +1,134 @@
+//! Design-point-keyed memoization of [`evaluate`] for scenario sweeps.
+//!
+//! A sweep evaluates the same design point repeatedly across *stages*:
+//! the SA walk scores it, the per-seed winner is re-scored for the
+//! candidate table, and reporting/Pareto assembly reads it again — and
+//! per-head rounding plus boundary clamping occasionally collapse
+//! distinct proposals onto one index vector inside the walk itself.
+//! [`EvalCache`] gives one scenario's stages a shared memo table behind
+//! the point's canonical action encoding (every decoded field is a pure
+//! function of the 14 action indices and the space, so the action array
+//! *is* the design-point key).
+//!
+//! The cache is transparent: a hit returns the exact [`Evaluation`] the
+//! miss path computed, so optimizer results are bit-identical with and
+//! without it (`tests/scenario_sweep.rs` asserts this). Insertion stops
+//! at a capacity cap to bound memory on long sweeps; lookups (and hit
+//! accounting) continue against the retained set.
+
+use std::collections::HashMap;
+
+use crate::model::space::{DesignSpace, N_HEADS};
+
+use super::constants::Calib;
+use super::ppac::{evaluate, Evaluation};
+
+/// Default insertion cap (64Ki entries). An [`Evaluation`] plus its key
+/// is a few hundred bytes, so a full cache stays around ~25 MB — small
+/// enough that a sweep can keep one live per concurrent scenario worker.
+/// Walks longer than the cap keep evaluating correctly; later points
+/// just stop being retained (no eviction).
+pub const DEFAULT_CACHE_CAP: usize = 1 << 16;
+
+/// A memoizing wrapper around [`evaluate`] for one `(space, calib)` pair.
+///
+/// The caller owns the pairing: one cache must only ever see one space
+/// and one calibration (the sweep engine creates one per scenario).
+pub struct EvalCache {
+    map: HashMap<[usize; N_HEADS], Evaluation>,
+    cap: usize,
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that fell through to [`evaluate`].
+    pub misses: u64,
+}
+
+impl EvalCache {
+    pub fn new(cap: usize) -> EvalCache {
+        EvalCache { map: HashMap::new(), cap, hits: 0, misses: 0 }
+    }
+
+    /// Evaluate `action` under `calib`, memoized.
+    pub fn evaluate(
+        &mut self,
+        calib: &Calib,
+        space: &DesignSpace,
+        action: &[usize; N_HEADS],
+    ) -> Evaluation {
+        if let Some(e) = self.map.get(action) {
+            self.hits += 1;
+            return *e;
+        }
+        self.misses += 1;
+        let e = evaluate(calib, &space.decode(action));
+        if self.map.len() < self.cap {
+            self.map.insert(*action, e);
+        }
+        e
+    }
+
+    /// Number of distinct design points retained.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Fraction of lookups answered from the cache (0 when unused).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn cached_equals_direct_and_counts_hits() {
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let mut cache = EvalCache::new(DEFAULT_CACHE_CAP);
+        let mut rng = Rng::new(5);
+        let actions: Vec<_> = (0..50).map(|_| space.random_action(&mut rng)).collect();
+        for a in &actions {
+            let cached = cache.evaluate(&calib, &space, a);
+            let direct = evaluate(&calib, &space.decode(a));
+            assert_eq!(cached.reward, direct.reward);
+            assert_eq!(cached.throughput_tops, direct.throughput_tops);
+            assert_eq!(cached.pkg_cost, direct.pkg_cost);
+        }
+        assert_eq!(cache.hits, 0);
+        assert_eq!(cache.misses, 50);
+        // second pass: all hits, same values
+        for a in &actions {
+            let cached = cache.evaluate(&calib, &space, a);
+            let direct = evaluate(&calib, &space.decode(a));
+            assert_eq!(cached.reward, direct.reward);
+        }
+        assert_eq!(cache.hits, 50);
+        assert!((cache.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn capacity_cap_stops_insertion_not_correctness() {
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let mut cache = EvalCache::new(2);
+        let mut rng = Rng::new(9);
+        for _ in 0..10 {
+            let a = space.random_action(&mut rng);
+            let cached = cache.evaluate(&calib, &space, &a);
+            assert_eq!(cached.reward, evaluate(&calib, &space.decode(&a)).reward);
+        }
+        assert!(cache.len() <= 2);
+    }
+}

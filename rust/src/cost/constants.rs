@@ -7,10 +7,69 @@
 //! yields, 1.52× logic density, 3.7× energy efficiency, 76×/143× die-cost
 //! penalty, 1.62×/2.46× packaging-cost penalty).
 
+/// Silicon technology node of the AI chiplets — the scenario knob that
+/// scales the density/energy/defect constants of [`Calib`].
+///
+/// The paper evaluates a single 7 nm design point; the 14 nm and 5 nm
+/// entries are extensions for scenario sweeps, scaled with standard
+/// node-to-node factors (logic density ≈ 2.8×/1.8× per step, SRAM
+/// scaling much flatter, defect density rising on leading-edge nodes —
+/// see docs/PAPER_MAP.md "Known deviations").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TechNode {
+    N14,
+    N7,
+    N5,
+}
+
+impl TechNode {
+    pub fn name(self) -> &'static str {
+        match self {
+            TechNode::N14 => "14nm",
+            TechNode::N7 => "7nm",
+            TechNode::N5 => "5nm",
+        }
+    }
+
+    /// Parse the scenario-file spelling ("14nm" | "7nm" | "5nm").
+    pub fn parse(s: &str) -> Option<TechNode> {
+        match s {
+            "14nm" => Some(TechNode::N14),
+            "7nm" => Some(TechNode::N7),
+            "5nm" => Some(TechNode::N5),
+            _ => None,
+        }
+    }
+
+    /// Rescale a calibration to this node. N7 is the paper's calibrated
+    /// operating point and applies no changes at all, so scenarios that
+    /// keep the default node stay bit-identical to [`Calib::default`].
+    pub fn apply(self, c: &mut Calib) {
+        match self {
+            TechNode::N7 => {}
+            TechNode::N14 => {
+                c.mac_per_mm2 = 200.0;
+                c.sram_mb_per_mm2 = 1.3;
+                c.e_mac_pj = 1.9;
+                c.defect_per_mm2 = 0.0005;
+                c.wafer_cost = 3984.0;
+            }
+            TechNode::N5 => {
+                c.mac_per_mm2 = 1008.0;
+                c.sram_mb_per_mm2 = 4.4;
+                c.e_mac_pj = 0.55;
+                c.defect_per_mm2 = 0.0015;
+                c.wafer_cost = 16988.0;
+            }
+        }
+    }
+}
+
 /// All model constants, grouped. `Calib::default()` is the calibrated
 /// configuration used throughout the benches; experiments can perturb
-/// individual fields (ablations in `benches/`).
-#[derive(Clone, Debug)]
+/// individual fields (ablations in `benches/`, scenario overrides via
+/// [`Calib::set_key`]).
+#[derive(Clone, Debug, PartialEq)]
 pub struct Calib {
     // ---- geometry (Section 5.1) ----
     /// Package area dedicated to AI + HBM chiplets, mm².
@@ -87,6 +146,10 @@ pub struct Calib {
     /// iso-throughput monolithic *cluster* baseline. Calibrated to
     /// reproduce the paper's 3.7× energy-efficiency ratio.
     pub mono_cross_traffic_frac: f64,
+    /// Multiplier on the 2.5D package-link energy per bit (Table 4
+    /// values assume a silicon interposer/bridge; organic-substrate
+    /// scenarios drive longer, lossier traces). 1.0 = paper baseline.
+    pub e_link_scale: f64,
 
     // ---- yield & die cost (eqs. 8–9) ----
     /// Defect density at 7 nm, defects per mm² (0.1/cm² ⇒ Y(826 mm²) =
@@ -171,6 +234,7 @@ impl Default for Calib {
             e_ondie_pj_bit: 0.1,
             e_offboard_pj_bit: 10.0,
             mono_cross_traffic_frac: 0.27,
+            e_link_scale: 1.0,
 
             defect_per_mm2: 0.001,
             cluster_alpha: 4.0,
@@ -197,6 +261,60 @@ impl Default for Calib {
     }
 }
 
+/// Every key accepted by [`Calib::set_key`], in declaration order. The
+/// scenario layer uses this for validation/error messages; a unit test
+/// keeps it in sync with the setter.
+pub const CALIB_KEYS: &[&str] = &[
+    "pkg_area_mm2",
+    "max_chiplet_area_mm2",
+    "hbm_area_mm2",
+    "hbm_capacity_gb",
+    "compute_frac",
+    "sram_frac",
+    "tsv_area_mm2",
+    "tsv_keepout_frac",
+    "mac_per_mm2",
+    "freq_ghz",
+    "sram_mb_per_mm2",
+    "default_u_chip",
+    "operands_per_mac",
+    "operand_bits",
+    "operand_reuse",
+    "hbm_fanout",
+    "hbm_deliverable_tbps",
+    "latency_hiding_ops",
+    "e_mac_pj",
+    "e_dram_pj_bit",
+    "dram_bits_per_op",
+    "link_bits_per_op",
+    "ai2ai_traffic_frac",
+    "e_ondie_pj_bit",
+    "e_offboard_pj_bit",
+    "mono_cross_traffic_frac",
+    "e_link_scale",
+    "defect_per_mm2",
+    "cluster_alpha",
+    "kgd_exponent",
+    "kgd_unit_cost",
+    "wafer_cost",
+    "wafer_diameter_mm",
+    "pkg_mu0_per_mm2",
+    "pkg_mu1_per_link",
+    "pkg_mu2_low",
+    "pkg_mu2_medium",
+    "pkg_mu2_high",
+    "pkg_mu2_highest",
+    "bond_yield",
+    "perfect_bonding",
+    "mono_die_mm2",
+    "mono_u_chip",
+    "mono_n_hbm",
+    "ref_task_gmac",
+    "alpha",
+    "beta",
+    "gamma",
+];
+
 impl Calib {
     /// Paper's [α, β, γ] = [1, 1, 0.1] (Table 6 caption).
     pub fn with_weights(mut self, alpha: f64, beta: f64, gamma: f64) -> Calib {
@@ -204,6 +322,68 @@ impl Calib {
         self.beta = beta;
         self.gamma = gamma;
         self
+    }
+
+    /// Set one calibration constant by key — the override surface that
+    /// scenario files and experiment configs share ([`CALIB_KEYS`] lists
+    /// every key). Non-f64 fields take numeric spellings: the four
+    /// `pkg_mu2_tier` entries are `pkg_mu2_{low,medium,high,highest}`,
+    /// `mono_n_hbm` is truncated to usize and `perfect_bonding` is
+    /// "non-zero = true". Returns false (and changes nothing) for
+    /// unknown keys.
+    pub fn set_key(&mut self, key: &str, v: f64) -> bool {
+        match key {
+            "pkg_area_mm2" => self.pkg_area_mm2 = v,
+            "max_chiplet_area_mm2" => self.max_chiplet_area_mm2 = v,
+            "hbm_area_mm2" => self.hbm_area_mm2 = v,
+            "hbm_capacity_gb" => self.hbm_capacity_gb = v,
+            "compute_frac" => self.compute_frac = v,
+            "sram_frac" => self.sram_frac = v,
+            "tsv_area_mm2" => self.tsv_area_mm2 = v,
+            "tsv_keepout_frac" => self.tsv_keepout_frac = v,
+            "mac_per_mm2" => self.mac_per_mm2 = v,
+            "freq_ghz" => self.freq_ghz = v,
+            "sram_mb_per_mm2" => self.sram_mb_per_mm2 = v,
+            "default_u_chip" => self.default_u_chip = v,
+            "operands_per_mac" => self.operands_per_mac = v,
+            "operand_bits" => self.operand_bits = v,
+            "operand_reuse" => self.operand_reuse = v,
+            "hbm_fanout" => self.hbm_fanout = v,
+            "hbm_deliverable_tbps" => self.hbm_deliverable_tbps = v,
+            "latency_hiding_ops" => self.latency_hiding_ops = v,
+            "e_mac_pj" => self.e_mac_pj = v,
+            "e_dram_pj_bit" => self.e_dram_pj_bit = v,
+            "dram_bits_per_op" => self.dram_bits_per_op = v,
+            "link_bits_per_op" => self.link_bits_per_op = v,
+            "ai2ai_traffic_frac" => self.ai2ai_traffic_frac = v,
+            "e_ondie_pj_bit" => self.e_ondie_pj_bit = v,
+            "e_offboard_pj_bit" => self.e_offboard_pj_bit = v,
+            "mono_cross_traffic_frac" => self.mono_cross_traffic_frac = v,
+            "e_link_scale" => self.e_link_scale = v,
+            "defect_per_mm2" => self.defect_per_mm2 = v,
+            "cluster_alpha" => self.cluster_alpha = v,
+            "kgd_exponent" => self.kgd_exponent = v,
+            "kgd_unit_cost" => self.kgd_unit_cost = v,
+            "wafer_cost" => self.wafer_cost = v,
+            "wafer_diameter_mm" => self.wafer_diameter_mm = v,
+            "pkg_mu0_per_mm2" => self.pkg_mu0_per_mm2 = v,
+            "pkg_mu1_per_link" => self.pkg_mu1_per_link = v,
+            "pkg_mu2_low" => self.pkg_mu2_tier[0] = v,
+            "pkg_mu2_medium" => self.pkg_mu2_tier[1] = v,
+            "pkg_mu2_high" => self.pkg_mu2_tier[2] = v,
+            "pkg_mu2_highest" => self.pkg_mu2_tier[3] = v,
+            "bond_yield" => self.bond_yield = v,
+            "perfect_bonding" => self.perfect_bonding = v != 0.0,
+            "mono_die_mm2" => self.mono_die_mm2 = v,
+            "mono_u_chip" => self.mono_u_chip = v,
+            "mono_n_hbm" => self.mono_n_hbm = v as usize,
+            "ref_task_gmac" => self.ref_task_gmac = v,
+            "alpha" => self.alpha = v,
+            "beta" => self.beta = v,
+            "gamma" => self.gamma = v,
+            _ => return false,
+        }
+        true
     }
 }
 
@@ -221,5 +401,64 @@ mod tests {
     fn with_weights_overrides() {
         let c = Calib::default().with_weights(2.0, 0.5, 0.0);
         assert_eq!((c.alpha, c.beta, c.gamma), (2.0, 0.5, 0.0));
+    }
+
+    #[test]
+    fn set_key_accepts_every_listed_key_and_rejects_unknown() {
+        for &key in CALIB_KEYS {
+            let mut c = Calib::default();
+            assert!(c.set_key(key, 1.0), "listed key {key:?} rejected");
+        }
+        let mut c = Calib::default();
+        let before = c.clone();
+        assert!(!c.set_key("no_such_constant", 1.0));
+        assert_eq!(c, before, "unknown key must not mutate");
+    }
+
+    #[test]
+    fn set_key_reaches_non_f64_fields() {
+        let mut c = Calib::default();
+        assert!(c.set_key("pkg_mu2_highest", 9.0));
+        assert_eq!(c.pkg_mu2_tier[3], 9.0);
+        assert!(c.set_key("mono_n_hbm", 6.0));
+        assert_eq!(c.mono_n_hbm, 6);
+        assert!(c.set_key("perfect_bonding", 1.0));
+        assert!(c.perfect_bonding);
+        assert!(c.set_key("perfect_bonding", 0.0));
+        assert!(!c.perfect_bonding);
+    }
+
+    #[test]
+    fn n7_apply_is_identity() {
+        let mut c = Calib::default();
+        TechNode::N7.apply(&mut c);
+        assert_eq!(c, Calib::default());
+    }
+
+    #[test]
+    fn node_scaling_is_monotone_in_density_and_energy() {
+        let calib_for = |n: TechNode| {
+            let mut c = Calib::default();
+            n.apply(&mut c);
+            c
+        };
+        let (n14, n7, n5) = (
+            calib_for(TechNode::N14),
+            calib_for(TechNode::N7),
+            calib_for(TechNode::N5),
+        );
+        assert!(n14.mac_per_mm2 < n7.mac_per_mm2 && n7.mac_per_mm2 < n5.mac_per_mm2);
+        assert!(n14.e_mac_pj > n7.e_mac_pj && n7.e_mac_pj > n5.e_mac_pj);
+        // leading edge yields worse, mature node better
+        assert!(n5.defect_per_mm2 > n7.defect_per_mm2);
+        assert!(n14.defect_per_mm2 < n7.defect_per_mm2);
+    }
+
+    #[test]
+    fn tech_node_parse_roundtrip() {
+        for n in [TechNode::N14, TechNode::N7, TechNode::N5] {
+            assert_eq!(TechNode::parse(n.name()), Some(n));
+        }
+        assert_eq!(TechNode::parse("3nm"), None);
     }
 }

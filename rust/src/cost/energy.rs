@@ -24,13 +24,19 @@ pub fn e_comm_per_op_pj(c: &Calib, p: &DesignPoint, grid: &MeshGrid) -> f64 {
 pub fn e_comm_per_op_pj_from_stats(c: &Calib, p: &DesignPoint, stats: &HopStats) -> f64 {
     // HBM→AI share: operands fetched over the AI↔HBM link, re-driven at
     // every mesh hop on the way (mean supply distance).
+    // `e_link_scale` rescales the 2.5D link energies for scenarios whose
+    // substrate differs from Table 4's silicon-interposer assumption
+    // (organic laminate ≈ 1.6×); 3D bond energy is substrate-independent.
     let hbm_bits = c.link_bits_per_op * (1.0 - c.ai2ai_traffic_frac);
-    let e_hbm = p.ai2hbm.e_bit_pj(p.ai2hbm_trace_mm) * hbm_bits * stats.mean_hbm_hops.max(1.0);
+    let e_hbm = p.ai2hbm.e_bit_pj(p.ai2hbm_trace_mm)
+        * c.e_link_scale
+        * hbm_bits
+        * stats.mean_hbm_hops.max(1.0);
 
     // AI→AI share: neighbor exchanges, 1 hop by construction (Fig. 5
     // mapping has no partial-sum traffic; neighbor streaming only).
     let ai_bits = c.link_bits_per_op * c.ai2ai_traffic_frac;
-    let e_ai = p.ai2ai_25d.e_bit_pj(p.ai2ai_25d_trace_mm) * ai_bits;
+    let e_ai = p.ai2ai_25d.e_bit_pj(p.ai2ai_25d_trace_mm) * c.e_link_scale * ai_bits;
 
     // 3D bond share: the upper tier of a stacked pair receives its
     // operands through the bond (half the dies are upper tiers).

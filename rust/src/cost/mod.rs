@@ -3,9 +3,11 @@
 //! Everything is a pure function of a [`crate::model::DesignPoint`] and
 //! the calibration constants in [`constants::Calib`]; evaluating a design
 //! point allocates nothing and is the inner loop of both optimizers
-//! (500K+ evaluations per SA run).
+//! (500K+ evaluations per SA run). Scenario sweeps additionally memoize
+//! repeated evaluations behind [`cache::EvalCache`].
 
 pub mod bandwidth;
+pub mod cache;
 pub mod constants;
 pub mod die_cost;
 pub mod energy;
@@ -14,5 +16,6 @@ pub mod ppac;
 pub mod throughput;
 pub mod yield_model;
 
-pub use constants::Calib;
+pub use cache::EvalCache;
+pub use constants::{Calib, TechNode, CALIB_KEYS};
 pub use ppac::{evaluate, Evaluation};

@@ -59,6 +59,17 @@ impl ChipletGymEnv {
         Self::new(DesignSpace::case_i(), Calib::default(), 2)
     }
 
+    /// Build the environment a [`crate::scenario::Scenario`] describes:
+    /// its design space (chiplet cap + packaging arch lock) and its
+    /// calibration (tech node, workload task size, overrides). Fails if
+    /// the scenario's calibration does not validate.
+    pub fn from_scenario(
+        s: &crate::scenario::Scenario,
+        episode_len: usize,
+    ) -> anyhow::Result<ChipletGymEnv> {
+        Ok(Self::new(s.space(), s.calib()?, episode_len))
+    }
+
     pub fn case_ii() -> ChipletGymEnv {
         Self::new(DesignSpace::case_ii(), Calib::default(), 2)
     }
@@ -174,6 +185,26 @@ mod tests {
         env.reset();
         let s3 = env.step(&a);
         assert!(!s3.done);
+    }
+
+    #[test]
+    fn from_scenario_builds_the_scenario_space_and_calib() {
+        use crate::model::space::ArchType;
+        let base = crate::scenario::Scenario::baseline();
+        let env = ChipletGymEnv::from_scenario(&base, 2).unwrap();
+        assert_eq!(env.space, DesignSpace::case_i());
+        assert_eq!(env.calib, Calib::default());
+
+        let organic = crate::scenario::registry::find("organic-substrate").unwrap();
+        let env = ChipletGymEnv::from_scenario(&organic, 2).unwrap();
+        assert_eq!(env.space.arch_lock, Some(ArchType::TwoPointFiveD));
+        let mut rng = Rng::new(4);
+        let p = env.space.decode(&env.space.random_action(&mut rng));
+        assert_eq!(p.arch, ArchType::TwoPointFiveD);
+
+        let mut bad = base;
+        bad.workload = Some("not-a-workload".into());
+        assert!(ChipletGymEnv::from_scenario(&bad, 2).is_err());
     }
 
     #[test]

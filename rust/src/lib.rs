@@ -34,6 +34,11 @@
 //!   Alg. 1 driver, and [`opt::parallel`] — the multi-threaded Alg. 1
 //!   fan-out (`--jobs N`, bit-identical to sequential at any thread
 //!   count).
+//! * [`scenario`] — declarative design-space scenarios (workload, tech
+//!   node, packaging, `Calib` overrides, optimizer budget; TOML/JSON
+//!   loadable), a registry of named built-ins, and the `sweep` engine
+//!   that fans them across the worker pool and emits per-scenario bests
+//!   plus a cross-scenario Pareto frontier.
 //! * [`rl`] — PPO (Table 5 hyper-parameters): rollouts, GAE, MultiDiscrete
 //!   sampling and the Adam-step loop over the AOT'd HLO update.
 //! * [`runtime`] — PJRT client wrapper: loads `artifacts/*.hlo.txt`,
@@ -51,5 +56,6 @@ pub mod opt;
 pub mod report;
 pub mod rl;
 pub mod runtime;
+pub mod scenario;
 pub mod util;
 pub mod workloads;

@@ -3,15 +3,20 @@
 //! Subcommands:
 //!   optimize   Algorithm 1: N SA instances + N PPO agents, argmax.
 //!   sa         Simulated annealing only (no artifacts needed).
+//!   sweep      Scenario sweep: optimize each scenario, emit per-scenario
+//!              CSVs + a cross-scenario Pareto frontier (offline).
 //!   ppo        Train one PPO agent, print the convergence trace.
 //!   eval       Evaluate one design point (defaults to Table 6 case i).
 //!   mlperf     Fig. 12 comparison: chiplet systems vs monolithic GPU.
 //!   info       Show artifact manifest + PJRT platform.
 //!
 //! Common flags: --case i|ii, --seeds 0,1,2, --sa-iters N,
-//! --jobs N (parallel Alg. 1 workers; 0 = all cores, results are
+//! --jobs N (parallel workers; 0 = all cores, results are
 //! bit-identical at any value), --timesteps N,
-//! --alpha/--beta/--gamma, --config path.json.
+//! --alpha/--beta/--gamma, --config path.json,
+//! --scenario NAME (reconfigure any subcommand from a named scenario).
+//! Sweep flags: --scenarios all|name,name|list, --scenario-file x.toml,
+//! --out-dir DIR.
 
 use anyhow::{bail, Result};
 
@@ -24,7 +29,10 @@ use chiplet_gym::opt::parallel::{combined_optimize_par, sa_only_optimize_par, wo
 use chiplet_gym::opt::sa::simulated_annealing;
 use chiplet_gym::rl::{train_ppo, PpoConfig};
 use chiplet_gym::runtime::Engine;
+use chiplet_gym::scenario::sweep::{run_sweep, BudgetOverride, SweepConfig};
+use chiplet_gym::scenario::{registry, Scenario};
 use chiplet_gym::util::cli::Args;
+use chiplet_gym::util::json::Json;
 use chiplet_gym::util::table::{fnum, Table};
 use chiplet_gym::workloads::{mapping, mlperf::mlperf_suite, Monolithic};
 
@@ -268,6 +276,75 @@ fn cmd_mlperf(cfg: &RunConfig) {
     );
 }
 
+fn cmd_sweep(cfg: &RunConfig, args: &Args) -> Result<()> {
+    let spec = args.get_or("scenarios", "all");
+    if spec == "list" {
+        let mut t = Table::new(["scenario", "description"]);
+        for s in registry::builtin() {
+            t.row([s.name, s.description]);
+        }
+        t.print();
+        return Ok(());
+    }
+    let mut scenarios = registry::resolve(spec)?;
+    if let Some(path) = args.get("scenario-file") {
+        scenarios.push(Scenario::load(std::path::Path::new(path))?);
+    }
+    // --sa-iters / --seeds override that budget knob in every scenario;
+    // knobs not given keep each scenario's own value.
+    let budget = BudgetOverride {
+        sa_iterations: args.get("sa-iters").map(|_| cfg.sa.iterations),
+        sa_seeds: args.get("seeds").map(|_| cfg.sa_seeds.clone()),
+    };
+    let budget = if budget.sa_iterations.is_some() || budget.sa_seeds.is_some() {
+        Some(budget)
+    } else {
+        None
+    };
+    let sweep_cfg = SweepConfig {
+        jobs: cfg.jobs,
+        out_dir: std::path::PathBuf::from(&cfg.out_dir),
+        budget,
+    };
+    println!(
+        "sweeping {} scenario(s) across --jobs {} workers into {}/",
+        scenarios.len(),
+        cfg.jobs,
+        cfg.out_dir
+    );
+    let t0 = std::time::Instant::now();
+    let out = run_sweep(&scenarios, &sweep_cfg)?;
+
+    let mut t = Table::new([
+        "scenario", "best seed", "reward", "TMAC/s", "mJ/task", "cost", "cache hit",
+    ]);
+    for r in &out.results {
+        let b = &r.outcome.best;
+        t.row([
+            r.scenario.name.clone(),
+            b.seed.to_string(),
+            fnum(b.eval.reward),
+            fnum(b.eval.throughput_tops),
+            fnum(b.eval.energy_mj_per_ref_task),
+            fnum(b.eval.die_cost + b.eval.pkg_cost),
+            format!("{:.0}%", 100.0 * r.cache_hit_rate()),
+        ]);
+    }
+    t.print();
+    println!(
+        "Pareto frontier: {} non-dominated point(s) across {} scenario(s); \
+         finished in {:.1}s",
+        out.frontier.len(),
+        out.results.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    println!(
+        "wrote {}/scenario_<name>.csv, sweep_best.csv, pareto_frontier.csv",
+        cfg.out_dir
+    );
+    Ok(())
+}
+
 fn cmd_info() -> Result<()> {
     let engine = Engine::discover()?;
     let m = &engine.manifest;
@@ -290,17 +367,49 @@ fn cmd_info() -> Result<()> {
     Ok(())
 }
 
+fn lookup_scenario(name: &str) -> Result<Scenario> {
+    registry::find(name).ok_or_else(|| {
+        anyhow::anyhow!("unknown scenario {name:?}; `sweep --scenarios list` shows the registry")
+    })
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env();
-    let mut cfg = match args.get("config") {
-        Some(path) => RunConfig::load(std::path::Path::new(path))?,
-        None => RunConfig::default(),
+    let file_json = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+            Some(Json::parse(&text).map_err(|e| anyhow::anyhow!("config parse: {e}"))?)
+        }
+        None => None,
     };
+    let file_scenario = file_json
+        .as_ref()
+        .and_then(|v| v.get("scenario").and_then(Json::as_str).map(str::to_string));
+    let cli_scenario = args.get("scenario").map(str::to_string);
+
+    // Precedence, lowest to highest: defaults, scenario named in the
+    // config file, explicit config-file keys, scenario named on the
+    // CLI, per-flag CLI overrides. A scenario never silently clobbers
+    // keys from a layer above the one that named it.
+    let mut cfg = RunConfig::default();
+    if cli_scenario.is_none() {
+        if let Some(name) = &file_scenario {
+            cfg.apply_scenario(&lookup_scenario(name)?)?;
+        }
+    }
+    if let Some(v) = &file_json {
+        cfg.apply_json(v);
+    }
+    if let Some(name) = &cli_scenario {
+        cfg.apply_scenario(&lookup_scenario(name)?)?;
+    }
     cfg.apply_args(&args);
 
     match args.command.as_deref() {
         Some("optimize") => cmd_optimize(&cfg)?,
         Some("sa") => cmd_sa(&cfg),
+        Some("sweep") => cmd_sweep(&cfg, &args)?,
         Some("ppo") => cmd_ppo(&cfg)?,
         Some("eval") => cmd_eval(&cfg, &args),
         Some("mlperf") => cmd_mlperf(&cfg),
@@ -310,12 +419,15 @@ fn main() -> Result<()> {
                 eprintln!("unknown command {cmd:?}\n");
             }
             eprintln!(
-                "usage: chiplet-gym <optimize|sa|ppo|eval|mlperf|info> \
+                "usage: chiplet-gym <optimize|sa|sweep|ppo|eval|mlperf|info> \
                  [--case i|ii] [--seeds 0,1,..] [--sa-iters N] \
                  [--jobs N (0 = all cores)] \
                  [--timesteps N] [--episode-len N] [--ent-coef X] \
                  [--n-envs K (VecEnv rollout width)] \
-                 [--alpha X --beta X --gamma X] [--config file.json]"
+                 [--alpha X --beta X --gamma X] [--config file.json] \
+                 [--scenario NAME] \
+                 [sweep: --scenarios all|list|a,b --scenario-file f.toml \
+                 --out-dir DIR]"
             );
             std::process::exit(2);
         }

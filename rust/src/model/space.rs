@@ -154,23 +154,42 @@ impl DesignPoint {
 /// case (i) (64) from case (ii) (128); the action head always has 128
 /// values and is folded modulo the cap so both cases share one policy
 /// artifact.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct DesignSpace {
     pub chiplet_cap: usize,
+    /// When set, the architecture head of every action is ignored and
+    /// [`DesignSpace::decode`] always yields this architecture. Scenario
+    /// packaging constraints use this (e.g. organic-substrate packages
+    /// cannot stack dies, so the space is locked to 2.5D). `None` = the
+    /// full Table 1 space; every pre-scenario entry point leaves it
+    /// unlocked, so existing behavior is unchanged.
+    pub arch_lock: Option<ArchType>,
 }
 
 impl DesignSpace {
     pub fn case_i() -> DesignSpace {
-        DesignSpace { chiplet_cap: 64 }
+        DesignSpace { chiplet_cap: 64, arch_lock: None }
     }
 
     pub fn case_ii() -> DesignSpace {
-        DesignSpace { chiplet_cap: 128 }
+        DesignSpace { chiplet_cap: 128, arch_lock: None }
     }
 
-    /// Total number of design points (for reporting; ≈ 2.1 × 10^17).
+    /// This space with the architecture head pinned to `arch`.
+    pub fn locked(mut self, arch: ArchType) -> DesignSpace {
+        self.arch_lock = Some(arch);
+        self
+    }
+
+    /// Total number of *distinct* design points (for reporting;
+    /// ≈ 2.1 × 10^17 unlocked — an arch lock collapses the first head).
     pub fn cardinality(&self) -> f64 {
-        ACTION_DIMS.iter().map(|&d| d as f64).product()
+        let base: f64 = ACTION_DIMS.iter().map(|&d| d as f64).product();
+        if self.arch_lock.is_some() {
+            base / ACTION_DIMS[0] as f64
+        } else {
+            base
+        }
     }
 
     /// Decode a raw MultiDiscrete action into a design point.
@@ -183,10 +202,13 @@ impl DesignSpace {
         for (h, (&a, &d)) in action.iter().zip(ACTION_DIMS.iter()).enumerate() {
             assert!(a < d, "head {h}: action {a} out of range {d}");
         }
-        let arch = match action[0] {
-            0 => ArchType::TwoPointFiveD,
-            1 => ArchType::MemOnLogic,
-            _ => ArchType::LogicOnLogic,
+        let arch = match self.arch_lock {
+            Some(locked) => locked,
+            None => match action[0] {
+                0 => ArchType::TwoPointFiveD,
+                1 => ArchType::MemOnLogic,
+                _ => ArchType::LogicOnLogic,
+            },
         };
         let n_chiplets = 1 + (action[1] % self.chiplet_cap);
         let mut hbm_mask = (action[2] + 1) as u8; // 1..=63
@@ -214,7 +236,7 @@ impl DesignSpace {
     }
 
     /// Encode a design point back into action indices (inverse of
-    /// [`decode`] for points representable under this cap).
+    /// [`DesignSpace::decode`] for points representable under this cap).
     pub fn encode(&self, p: &DesignPoint) -> [usize; N_HEADS] {
         [
             match p.arch {
@@ -357,6 +379,24 @@ mod tests {
             let p2 = space.decode(&space.encode(&p));
             assert_eq!(p, p2);
         }
+    }
+
+    #[test]
+    fn arch_lock_pins_decode_and_roundtrips() {
+        let space = DesignSpace::case_i().locked(ArchType::TwoPointFiveD);
+        let mut rng = Rng::new(21);
+        for _ in 0..500 {
+            let a = space.random_action(&mut rng);
+            let p = space.decode(&a);
+            assert_eq!(p.arch, ArchType::TwoPointFiveD);
+            // stacked-only HBM placement still folds away under the lock
+            assert_ne!(p.hbm_mask, 1 << 5);
+            // encode/decode closes on the locked space
+            assert_eq!(space.decode(&space.encode(&p)), p);
+        }
+        // locking collapses head 0: 3x fewer distinct points
+        let full = DesignSpace::case_i().cardinality();
+        assert!((space.cardinality() - full / 3.0).abs() / full < 1e-12);
     }
 
     #[test]

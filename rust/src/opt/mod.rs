@@ -12,6 +12,8 @@ pub use combined::{
     OptOutcome,
 };
 pub use exhaustive::{exhaustive_projected, ExhaustiveOutcome, PinRule};
-pub use parallel::{combined_optimize_par, effective_jobs, sa_only_optimize_par, worker_count};
+pub use parallel::{
+    combined_optimize_par, effective_jobs, parallel_map, sa_only_optimize_par, worker_count,
+};
 pub use random_search::random_search;
-pub use sa::{simulated_annealing, SaConfig, SaTrace};
+pub use sa::{simulated_annealing, simulated_annealing_with, SaConfig, SaTrace};

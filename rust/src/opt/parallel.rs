@@ -1,5 +1,5 @@
-//! Parallel Algorithm-1 driver: fan optimizer instances out across
-//! threads with bit-identical results.
+//! Parallel driver: fan pure work items out across threads with
+//! bit-identical results.
 //!
 //! The paper's combined optimizer runs "20 SAs and 20 trained RL agents";
 //! the sequential driver in [`super::combined`] leaves every core but one
@@ -11,6 +11,11 @@
 //! sequential path — the output is therefore bit-identical at any thread
 //! count, which `tests/parallel_determinism.rs` proves for `--jobs`
 //! 1/2/8.
+//!
+//! The sharding itself is generic ([`parallel_map`]): the SA fan-out
+//! maps over seeds, and the scenario sweep engine
+//! (`scenario::sweep::run_sweep`) maps over whole scenarios through the
+//! same pool.
 //!
 //! PPO agents stay on the caller's thread: the PJRT client is not `Sync`,
 //! and each HLO call is already internally parallel. The SA fan-out is
@@ -48,7 +53,7 @@ fn chunk_size(jobs: usize, work_items: usize) -> usize {
 
 /// Number of worker threads [`sa_only_optimize_par`] /
 /// [`combined_optimize_par`] will actually spawn for `work_items`
-/// seeds: the seeds are split into [`chunk_size`] pieces, so the
+/// seeds: the seeds are split into `chunk_size` pieces, so the
 /// spawned count can be below `effective_jobs` (e.g. 6 seeds at jobs 4
 /// → chunks of 2 → 3 workers). Use this for user-facing "N worker
 /// threads" messages.
@@ -58,6 +63,43 @@ pub fn worker_count(requested: usize, work_items: usize) -> usize {
         return 1;
     }
     work_items.div_ceil(chunk_size(jobs, work_items))
+}
+
+/// Map `f` over `items` across up to `jobs` worker threads, returning
+/// results in item order.
+///
+/// Each worker owns a pre-assigned contiguous slot range, so the output
+/// is positionally identical to `items.iter().map(f).collect()`
+/// regardless of scheduling — the order-determinism the SA fan-out and
+/// the scenario sweep both build their bit-for-bit guarantees on. With
+/// `jobs <= 1` (or a single item) no threads are spawned at all.
+pub fn parallel_map<T, R, F>(items: &[T], jobs: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let jobs = effective_jobs(jobs, items.len());
+    if jobs <= 1 || items.len() <= 1 {
+        return items.iter().map(f).collect();
+    }
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(items.len());
+    slots.resize_with(items.len(), || None);
+    let chunk = chunk_size(jobs, items.len());
+    let f = &f;
+    std::thread::scope(|scope| {
+        for (item_chunk, slot_chunk) in items.chunks(chunk).zip(slots.chunks_mut(chunk)) {
+            scope.spawn(move || {
+                for (slot, item) in slot_chunk.iter_mut().zip(item_chunk.iter()) {
+                    *slot = Some(f(item));
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|r| r.expect("every worker fills its slots"))
+        .collect()
 }
 
 fn sa_candidate(space: &DesignSpace, calib: &Calib, sa: &SaConfig, seed: u64) -> Candidate {
@@ -71,9 +113,9 @@ fn sa_candidate(space: &DesignSpace, calib: &Calib, sa: &SaConfig, seed: u64) ->
 }
 
 /// Run one SA instance per seed across up to `jobs` worker threads.
-/// Results come back in seed-list order (each worker writes disjoint,
-/// pre-assigned slots), so the candidate list is identical to the
-/// sequential loop's regardless of scheduling.
+/// Results come back in seed-list order ([`parallel_map`]), so the
+/// candidate list is identical to the sequential loop's regardless of
+/// scheduling.
 fn sa_candidates_par(
     space: DesignSpace,
     calib: &Calib,
@@ -81,28 +123,7 @@ fn sa_candidates_par(
     seeds: &[u64],
     jobs: usize,
 ) -> Vec<Candidate> {
-    let jobs = effective_jobs(jobs, seeds.len());
-    if jobs <= 1 || seeds.len() <= 1 {
-        return seeds
-            .iter()
-            .map(|&seed| sa_candidate(&space, calib, sa, seed))
-            .collect();
-    }
-    let mut slots: Vec<Option<Candidate>> = vec![None; seeds.len()];
-    let chunk = chunk_size(jobs, seeds.len());
-    std::thread::scope(|scope| {
-        for (seed_chunk, slot_chunk) in seeds.chunks(chunk).zip(slots.chunks_mut(chunk)) {
-            scope.spawn(move || {
-                for (slot, &seed) in slot_chunk.iter_mut().zip(seed_chunk.iter()) {
-                    *slot = Some(sa_candidate(&space, calib, sa, seed));
-                }
-            });
-        }
-    });
-    slots
-        .into_iter()
-        .map(|c| c.expect("every SA worker fills its slots"))
-        .collect()
+    parallel_map(seeds, jobs, |&seed| sa_candidate(&space, calib, sa, seed))
 }
 
 /// Parallel SA-only Algorithm 1 (no artifacts/engine needed). Bit-identical
@@ -188,6 +209,19 @@ mod tests {
         assert!(w >= 1 && w <= 4);
         // and never more threads than seed chunks exist
         assert!(worker_count(64, 3) <= 3);
+    }
+
+    #[test]
+    fn parallel_map_preserves_item_order() {
+        let items: Vec<u64> = (0..37).collect();
+        let expect: Vec<u64> = items.iter().map(|&x| x * x + 1).collect();
+        for jobs in [0, 1, 2, 5, 64] {
+            let got = parallel_map(&items, jobs, |&x| x * x + 1);
+            assert_eq!(got, expect, "jobs {jobs}");
+        }
+        // degenerate inputs
+        assert_eq!(parallel_map(&[] as &[u64], 4, |&x| x), Vec::<u64>::new());
+        assert_eq!(parallel_map(&[9u64], 4, |&x| x), vec![9]);
     }
 
     #[test]

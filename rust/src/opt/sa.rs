@@ -43,21 +43,43 @@ pub struct SaTrace {
     pub evaluations: usize,
 }
 
-/// Run Algorithm 2.
+/// Run Algorithm 2 against the analytical evaluator.
 pub fn simulated_annealing(
     space: &DesignSpace,
     calib: &Calib,
     cfg: &SaConfig,
     seed: u64,
 ) -> SaTrace {
+    let mut eval_fn = |a: &[usize; N_HEADS]| evaluate(calib, &space.decode(a));
+    simulated_annealing_with(space, cfg, seed, &mut eval_fn)
+}
+
+/// Run Algorithm 2 over a caller-supplied evaluator.
+///
+/// `eval_fn` maps a raw 14-head action to its [`Evaluation`]; the walk,
+/// the RNG stream and every comparison are unchanged, so as long as
+/// `eval_fn` is pure the result is bit-identical to
+/// [`simulated_annealing`] — which is exactly what lets scenario sweeps
+/// interpose a memoizing cache (`cost::cache::EvalCache`) without
+/// perturbing optimizer output.
+pub fn simulated_annealing_with<F>(
+    space: &DesignSpace,
+    cfg: &SaConfig,
+    seed: u64,
+    eval_fn: &mut F,
+) -> SaTrace
+where
+    F: FnMut(&[usize; N_HEADS]) -> Evaluation,
+{
     let mut rng = Rng::new(seed);
 
     // line 4-5: random initial solution
     let mut current = space.random_action(&mut rng);
-    let mut o_curr = evaluate(calib, &space.decode(&current)).reward;
+    let init_eval = eval_fn(&current);
+    let mut o_curr = init_eval.reward;
     let mut best = current;
     let mut o_best = o_curr;
-    let mut best_eval = evaluate(calib, &space.decode(&best));
+    let mut best_eval = init_eval;
 
     let mut history = Vec::new();
     let mut cand = [0usize; N_HEADS];
@@ -71,7 +93,7 @@ pub fn simulated_annealing(
             cand[h] = moved.round().clamp(0.0, hi) as usize;
         }
         // line 9: evaluate
-        let eval = evaluate(calib, &space.decode(&cand));
+        let eval = eval_fn(&cand);
         let o_cand = eval.reward;
         // lines 10-12: track the best
         if o_cand > o_best {
@@ -171,6 +193,24 @@ mod tests {
             hot >= cold - 3.0,
             "hot {hot} should not be materially worse than cold {cold}"
         );
+    }
+
+    #[test]
+    fn with_variant_is_bit_identical_and_counts_calls() {
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let cfg = quick_cfg(2_000);
+        let direct = simulated_annealing(&space, &calib, &cfg, 17);
+        let mut calls = 0usize;
+        let mut eval_fn = |a: &[usize; N_HEADS]| {
+            calls += 1;
+            evaluate(&calib, &space.decode(a))
+        };
+        let via = simulated_annealing_with(&space, &cfg, 17, &mut eval_fn);
+        assert_eq!(direct.best_action, via.best_action);
+        assert_eq!(direct.best_eval.reward, via.best_eval.reward);
+        assert_eq!(direct.history, via.history);
+        assert_eq!(calls, cfg.iterations + 1); // one init + one per iteration
     }
 
     #[test]

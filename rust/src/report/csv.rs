@@ -1,10 +1,33 @@
-//! Minimal CSV writer for figure/table series.
+//! Minimal CSV writer (RFC-4180 quoting) for figure/table series.
 
+use std::borrow::Cow;
 use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::path::Path;
 
 use anyhow::Result;
+
+/// RFC-4180-quote one cell: cells containing a comma, double quote, CR
+/// or LF are wrapped in double quotes with embedded quotes doubled;
+/// everything else passes through unallocated.
+pub fn quote(cell: &str) -> Cow<'_, str> {
+    if cell.chars().any(|c| matches!(c, ',' | '"' | '\n' | '\r')) {
+        Cow::Owned(format!("\"{}\"", cell.replace('"', "\"\"")))
+    } else {
+        Cow::Borrowed(cell)
+    }
+}
+
+fn write_record<S: AsRef<str>>(out: &mut BufWriter<File>, cells: &[S]) -> Result<()> {
+    for (i, cell) in cells.iter().enumerate() {
+        if i > 0 {
+            write!(out, ",")?;
+        }
+        write!(out, "{}", quote(cell.as_ref()))?;
+    }
+    writeln!(out)?;
+    Ok(())
+}
 
 /// Streaming CSV writer with a fixed header.
 pub struct CsvWriter {
@@ -16,21 +39,14 @@ impl CsvWriter {
     pub fn create(path: &Path, header: &[&str]) -> Result<CsvWriter> {
         let file = File::create(path)?;
         let mut out = BufWriter::new(file);
-        writeln!(out, "{}", header.join(","))?;
+        write_record(&mut out, header)?;
         Ok(CsvWriter { out, ncol: header.len() })
     }
 
-    /// Write one row of already-formatted cells.
+    /// Write one row of cells, quoting whatever needs it.
     pub fn row_str(&mut self, cells: &[String]) -> Result<()> {
         assert_eq!(cells.len(), self.ncol, "csv row width mismatch");
-        for cell in cells {
-            assert!(
-                !cell.contains(',') && !cell.contains('\n'),
-                "csv cell needs quoting: {cell:?}"
-            );
-        }
-        writeln!(self.out, "{}", cells.join(","))?;
-        Ok(())
+        write_record(&mut self.out, cells)
     }
 
     /// Write one row of numbers.
@@ -78,5 +94,33 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let mut w = CsvWriter::create(&dir.join("t.csv"), &["a", "b"]).unwrap();
         w.row(&[1.0]).unwrap();
+    }
+
+    #[test]
+    fn quote_is_rfc4180() {
+        assert_eq!(quote("plain"), "plain");
+        assert_eq!(quote(""), "");
+        assert_eq!(quote("a,b"), "\"a,b\"");
+        assert_eq!(quote("he said \"hi\""), "\"he said \"\"hi\"\"\"");
+        assert_eq!(quote("two\nlines"), "\"two\nlines\"");
+        assert_eq!(quote("cr\rcell"), "\"cr\rcell\"");
+    }
+
+    #[test]
+    fn special_cells_roundtrip_quoted_instead_of_panicking() {
+        // Regression: row_str used to assert!() on commas/newlines.
+        let dir = std::env::temp_dir().join("chiplet_gym_csv_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["name", "action,list"]).unwrap();
+            w.row_str(&["0,59,29".to_string(), "say \"go\"\nnow".to_string()]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            text,
+            "name,\"action,list\"\n\"0,59,29\",\"say \"\"go\"\"\nnow\"\n"
+        );
     }
 }

@@ -1,0 +1,456 @@
+//! Declarative design-space scenarios and the Pareto sweep engine.
+//!
+//! The paper evaluates one design-space instance (900 mm² package, 7 nm,
+//! the full 2.5D/5.5D packaging menu, a BERT-sized reference task). A
+//! [`Scenario`] makes every one of those assumptions a declared knob —
+//! workload (Table 7 selection), technology node, packaging architecture,
+//! reticle/package-area limits via [`Calib`] overrides, and the optimizer
+//! budget — so "a new scenario" is a data change, not a code change.
+//!
+//! Scenarios come from three places, all producing the same type:
+//! * [`registry`] — named built-ins: the paper baseline plus variants
+//!   (per-MLPerf-workload, packaging, reticle, tech-node).
+//! * TOML/JSON files ([`Scenario::load`]) in the schema below.
+//! * Code ([`Scenario::baseline`] + field edits) for tests/benches.
+//!
+//! [`sweep`] fans a scenario list across the `opt::parallel` worker pool
+//! and emits per-scenario bests plus a cross-scenario Pareto frontier
+//! ([`pareto`]) over throughput / energy / total silicon+package cost.
+//!
+//! File schema (TOML shown; JSON is the same tree):
+//!
+//! ```toml
+//! name = "my-scenario"          # required
+//! description = "..."
+//! workload = "bert"             # optional: a Table 7 name
+//! tech_node = "7nm"             # "14nm" | "7nm" | "5nm"
+//! chiplet_cap = 64              # 64 (case i) | 128 (case ii)
+//! packaging = "full-3d"         # | "interposer-2.5d" | "organic-substrate"
+//! sa_iterations = 200000
+//! sa_seeds = [0, 1, 2, 3]
+//!
+//! [calib]                       # any cost::CALIB_KEYS entry
+//! max_chiplet_area_mm2 = 200.0
+//! ```
+
+pub mod pareto;
+pub mod registry;
+pub mod sweep;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::cost::{Calib, TechNode};
+use crate::model::space::{ArchType, DesignSpace};
+use crate::opt::sa::SaConfig;
+use crate::util::json::{obj, Json};
+use crate::util::toml;
+use crate::workloads::mlperf;
+
+/// Packaging-architecture constraint of a scenario.
+///
+/// `Full3D` is the paper's setting: the optimizer chooses among 2.5D and
+/// both 5.5D stackings (Fig. 2). The restricted variants model package
+/// families where stacking is unavailable, by locking the design space's
+/// architecture head to 2.5D — and, for organic laminate, re-costing the
+/// substrate (cheap area, no silicon interposer) while paying more
+/// energy per bit on the longer, lossier traces.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Packaging {
+    /// Full Table 1 menu: 2.5D + both 5.5D stackings.
+    Full3D,
+    /// Silicon interposer/bridge, side-by-side dies only (no 3D bonds).
+    Interposer25D,
+    /// Organic laminate substrate: 2.5D only, cheaper per mm², lossier
+    /// links (`e_link_scale` 1.6, µ0 0.006, halved µ2 tiers).
+    OrganicSubstrate,
+}
+
+impl Packaging {
+    pub fn name(self) -> &'static str {
+        match self {
+            Packaging::Full3D => "full-3d",
+            Packaging::Interposer25D => "interposer-2.5d",
+            Packaging::OrganicSubstrate => "organic-substrate",
+        }
+    }
+
+    /// Parse the scenario-file spelling.
+    pub fn parse(s: &str) -> Option<Packaging> {
+        match s {
+            "full-3d" => Some(Packaging::Full3D),
+            "interposer-2.5d" => Some(Packaging::Interposer25D),
+            "organic-substrate" => Some(Packaging::OrganicSubstrate),
+            _ => None,
+        }
+    }
+
+    /// Architecture restriction this packaging imposes on the space.
+    pub fn arch_lock(self) -> Option<ArchType> {
+        match self {
+            Packaging::Full3D => None,
+            Packaging::Interposer25D | Packaging::OrganicSubstrate => {
+                Some(ArchType::TwoPointFiveD)
+            }
+        }
+    }
+
+    /// Cost/energy consequences on the calibration (`Full3D` and
+    /// `Interposer25D` keep the paper's constants).
+    pub fn apply(self, c: &mut Calib) {
+        if self == Packaging::OrganicSubstrate {
+            c.pkg_mu0_per_mm2 = 0.006;
+            c.pkg_mu2_tier = [0.5, 1.0, 2.0, 3.0];
+            c.e_link_scale = 1.6;
+        }
+    }
+}
+
+/// Optimizer budget of one scenario: how hard the sweep works on it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OptBudget {
+    /// SA iterations per seed (Algorithm 2 budget).
+    pub sa_iterations: usize,
+    /// SA seeds — one optimizer instance each (Algorithm 1 line 4).
+    pub sa_seeds: Vec<u64>,
+}
+
+impl Default for OptBudget {
+    /// The sweep default: enough budget per scenario that the per-seed
+    /// bests agree to a few percent, small enough that `sweep
+    /// --scenarios all` stays interactive. The paper-scale budget
+    /// (500K × 20 seeds) is a CLI override away (`--sa-iters --seeds`).
+    fn default() -> OptBudget {
+        OptBudget { sa_iterations: 200_000, sa_seeds: (0..12).collect() }
+    }
+}
+
+/// One declarative design-space instance — see the module docs for the
+/// file schema and [`registry`] for the built-ins.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    pub description: String,
+    /// Table 7 workload whose task size calibrates the reward's energy
+    /// term (`ref_task_gmac`); `None` keeps the paper's BERT reference.
+    pub workload: Option<String>,
+    pub tech_node: TechNode,
+    /// 64 (paper case i) or 128 (case ii).
+    pub chiplet_cap: usize,
+    pub packaging: Packaging,
+    /// Keyed [`Calib`] overrides (`cost::CALIB_KEYS`), applied last —
+    /// this is where reticle (`max_chiplet_area_mm2`) and package-area
+    /// (`pkg_area_mm2`) limits live.
+    pub calib_overrides: BTreeMap<String, f64>,
+    pub budget: OptBudget,
+}
+
+impl Scenario {
+    /// The paper's design-space instance: case (i), 7 nm, full packaging
+    /// menu, no overrides. Its [`Scenario::calib`] is exactly
+    /// `Calib::default()` and its space exactly `DesignSpace::case_i()`,
+    /// which is what makes the sweep's baseline bit-identical to the
+    /// pre-scenario SA path.
+    pub fn baseline() -> Scenario {
+        Scenario {
+            name: "paper-baseline".into(),
+            description: "Paper case (i): 64-chiplet cap, 7 nm, full 2.5D/5.5D menu".into(),
+            workload: None,
+            tech_node: TechNode::N7,
+            chiplet_cap: 64,
+            packaging: Packaging::Full3D,
+            calib_overrides: BTreeMap::new(),
+            budget: OptBudget::default(),
+        }
+    }
+
+    /// The design space this scenario optimizes over.
+    pub fn space(&self) -> DesignSpace {
+        DesignSpace {
+            chiplet_cap: self.chiplet_cap,
+            arch_lock: self.packaging.arch_lock(),
+        }
+    }
+
+    /// Build the calibration: defaults → tech node → packaging →
+    /// workload task size → keyed overrides (last wins). Fails on an
+    /// unknown workload or override key.
+    pub fn calib(&self) -> Result<Calib> {
+        let mut c = Calib::default();
+        self.tech_node.apply(&mut c);
+        self.packaging.apply(&mut c);
+        if let Some(name) = &self.workload {
+            let w = mlperf::find(name).ok_or_else(|| {
+                anyhow!(
+                    "scenario {:?}: unknown workload {name:?} (expected one of {:?})",
+                    self.name,
+                    mlperf::MLPERF
+                )
+            })?;
+            c.ref_task_gmac = w.gmac_per_task();
+        }
+        for (key, &v) in &self.calib_overrides {
+            if !v.is_finite() {
+                bail!(
+                    "scenario {:?}: calib.{key} = {v} must be finite \
+                     (a NaN/inf constant poisons every evaluation)",
+                    self.name
+                );
+            }
+            if !c.set_key(key, v) {
+                bail!(
+                    "scenario {:?}: unknown calib key {key:?} (see cost::CALIB_KEYS)",
+                    self.name
+                );
+            }
+        }
+        Ok(c)
+    }
+
+    /// SA configuration for this scenario's budget (tracing off — the
+    /// sweep keeps only per-seed bests).
+    pub fn sa_config(&self) -> SaConfig {
+        SaConfig {
+            iterations: self.budget.sa_iterations,
+            trace_every: 0,
+            ..SaConfig::default()
+        }
+    }
+
+    // -- serialization -----------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("description", Json::Str(self.description.clone())),
+            ("tech_node", Json::Str(self.tech_node.name().into())),
+            ("chiplet_cap", Json::Num(self.chiplet_cap as f64)),
+            ("packaging", Json::Str(self.packaging.name().into())),
+            ("sa_iterations", Json::Num(self.budget.sa_iterations as f64)),
+            (
+                "sa_seeds",
+                Json::Arr(self.budget.sa_seeds.iter().map(|&s| Json::Num(s as f64)).collect()),
+            ),
+        ];
+        if let Some(w) = &self.workload {
+            pairs.push(("workload", Json::Str(w.clone())));
+        }
+        if !self.calib_overrides.is_empty() {
+            pairs.push((
+                "calib",
+                Json::Obj(
+                    self.calib_overrides
+                        .iter()
+                        .map(|(k, &v)| (k.clone(), Json::Num(v)))
+                        .collect(),
+                ),
+            ));
+        }
+        obj(pairs)
+    }
+
+    /// Decode from the JSON tree (which the TOML path also produces).
+    /// Every key except `name` is optional and defaults to the paper
+    /// baseline; the result is validated (workload + calib keys) before
+    /// it is returned.
+    pub fn from_json(v: &Json) -> Result<Scenario> {
+        let mut s = Scenario::baseline();
+        s.name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("scenario: missing required key \"name\""))?
+            .to_string();
+        s.description = v
+            .get("description")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string();
+        s.workload = v.get("workload").and_then(Json::as_str).map(str::to_string);
+        if let Some(t) = v.get("tech_node").and_then(Json::as_str) {
+            s.tech_node = TechNode::parse(t)
+                .ok_or_else(|| anyhow!("scenario {:?}: unknown tech_node {t:?}", s.name))?;
+        }
+        if let Some(x) = v.get("chiplet_cap").and_then(Json::as_f64) {
+            s.chiplet_cap = x as usize;
+        }
+        if let Some(p) = v.get("packaging").and_then(Json::as_str) {
+            s.packaging = Packaging::parse(p)
+                .ok_or_else(|| anyhow!("scenario {:?}: unknown packaging {p:?}", s.name))?;
+        }
+        if let Some(x) = v.get("sa_iterations").and_then(Json::as_f64) {
+            s.budget.sa_iterations = x as usize;
+        }
+        if let Some(seeds) = v.get("sa_seeds").and_then(Json::as_usize_vec) {
+            s.budget.sa_seeds = seeds.into_iter().map(|x| x as u64).collect();
+        }
+        if let Some(c) = v.get("calib").and_then(Json::as_obj) {
+            for (k, val) in c {
+                let x = val
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("scenario {:?}: calib.{k} must be a number", s.name))?;
+                s.calib_overrides.insert(k.clone(), x);
+            }
+        }
+        if s.chiplet_cap == 0 {
+            bail!("scenario {:?}: chiplet_cap must be >= 1", s.name);
+        }
+        if s.budget.sa_seeds.is_empty() {
+            bail!("scenario {:?}: sa_seeds must not be empty", s.name);
+        }
+        s.calib()
+            .with_context(|| format!("validating scenario {:?}", s.name))?;
+        Ok(s)
+    }
+
+    /// Parse a TOML scenario file (the subset `util::toml` supports).
+    pub fn from_toml_str(text: &str) -> Result<Scenario> {
+        let v = toml::parse(text).map_err(|e| anyhow!("scenario TOML: {e}"))?;
+        Scenario::from_json(&v)
+    }
+
+    /// Emit the TOML form (inverse of [`Scenario::from_toml_str`]).
+    pub fn to_toml_string(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("name = {}\n", toml_str(&self.name)));
+        out.push_str(&format!("description = {}\n", toml_str(&self.description)));
+        if let Some(w) = &self.workload {
+            out.push_str(&format!("workload = {}\n", toml_str(w)));
+        }
+        out.push_str(&format!("tech_node = {}\n", toml_str(self.tech_node.name())));
+        out.push_str(&format!("chiplet_cap = {}\n", self.chiplet_cap));
+        out.push_str(&format!("packaging = {}\n", toml_str(self.packaging.name())));
+        out.push_str(&format!("sa_iterations = {}\n", self.budget.sa_iterations));
+        let seeds: Vec<String> = self.budget.sa_seeds.iter().map(|s| s.to_string()).collect();
+        out.push_str(&format!("sa_seeds = [{}]\n", seeds.join(", ")));
+        if !self.calib_overrides.is_empty() {
+            out.push_str("\n[calib]\n");
+            for (k, v) in &self.calib_overrides {
+                out.push_str(&format!("{k} = {}\n", Json::Num(*v)));
+            }
+        }
+        out
+    }
+
+    /// Load a scenario file, dispatching on extension (`.toml` vs JSON).
+    pub fn load(path: &Path) -> Result<Scenario> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let is_toml = path
+            .extension()
+            .map(|e| e.eq_ignore_ascii_case("toml"))
+            .unwrap_or(false);
+        if is_toml {
+            Scenario::from_toml_str(&text)
+        } else {
+            let v = Json::parse(&text).map_err(|e| anyhow!("scenario JSON: {e}"))?;
+            Scenario::from_json(&v)
+        }
+    }
+}
+
+/// Quote a string as a TOML basic string.
+fn toml_str(s: &str) -> String {
+    let mut out = String::from("\"");
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_matches_pre_scenario_defaults() {
+        let s = Scenario::baseline();
+        assert_eq!(s.calib().unwrap(), Calib::default());
+        assert_eq!(s.space(), DesignSpace::case_i());
+        let sa = s.sa_config();
+        assert_eq!(sa.temperature, SaConfig::default().temperature);
+        assert_eq!(sa.step_size, SaConfig::default().step_size);
+    }
+
+    #[test]
+    fn organic_substrate_locks_arch_and_recosts() {
+        let mut s = Scenario::baseline();
+        s.packaging = Packaging::OrganicSubstrate;
+        assert_eq!(s.space().arch_lock, Some(ArchType::TwoPointFiveD));
+        let c = s.calib().unwrap();
+        assert_eq!(c.pkg_mu0_per_mm2, 0.006);
+        assert_eq!(c.e_link_scale, 1.6);
+    }
+
+    #[test]
+    fn workload_selection_sets_task_size() {
+        let mut s = Scenario::baseline();
+        s.workload = Some("bert".into());
+        assert_eq!(s.calib().unwrap().ref_task_gmac, 16.0); // 32 GFLOPs / 2
+        s.workload = Some("nope".into());
+        assert!(s.calib().is_err());
+    }
+
+    #[test]
+    fn overrides_apply_and_unknown_keys_fail() {
+        let mut s = Scenario::baseline();
+        s.calib_overrides.insert("max_chiplet_area_mm2".into(), 123.0);
+        assert_eq!(s.calib().unwrap().max_chiplet_area_mm2, 123.0);
+        s.calib_overrides.insert("not_a_key".into(), 1.0);
+        assert!(s.calib().is_err());
+    }
+
+    #[test]
+    fn from_json_requires_name_and_validates() {
+        assert!(Scenario::from_json(&Json::parse("{}").unwrap()).is_err());
+        let bad = Json::parse(r#"{"name": "x", "tech_node": "3nm"}"#).unwrap();
+        assert!(Scenario::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"name": "x", "calib": {"bogus": 1}}"#).unwrap();
+        assert!(Scenario::from_json(&bad).is_err());
+        let ok = Json::parse(r#"{"name": "x"}"#).unwrap();
+        let s = Scenario::from_json(&ok).unwrap();
+        assert_eq!(s.name, "x");
+        assert_eq!(s.chiplet_cap, 64);
+    }
+
+    #[test]
+    fn from_json_rejects_degenerate_budgets_and_nonfinite_overrides() {
+        let bad = Json::parse(r#"{"name": "x", "chiplet_cap": 0}"#).unwrap();
+        assert!(Scenario::from_json(&bad).is_err(), "cap 0 would panic decode");
+        let bad = Json::parse(r#"{"name": "x", "sa_seeds": []}"#).unwrap();
+        assert!(Scenario::from_json(&bad).is_err(), "empty seeds can't optimize");
+        let mut s = Scenario::baseline();
+        s.calib_overrides.insert("alpha".into(), f64::NAN);
+        assert!(s.calib().is_err(), "NaN override must not pass validation");
+        s.calib_overrides.insert("alpha".into(), f64::INFINITY);
+        assert!(s.calib().is_err());
+    }
+
+    #[test]
+    fn toml_file_form_parses() {
+        let s = Scenario::from_toml_str(
+            "name = \"custom\"\nworkload = \"resnet50\"\ntech_node = \"5nm\"\n\
+             chiplet_cap = 128\npackaging = \"interposer-2.5d\"\n\
+             sa_iterations = 1_000\nsa_seeds = [3, 4]\n\n\
+             [calib]\npkg_area_mm2 = 1200.0\n",
+        )
+        .unwrap();
+        assert_eq!(s.name, "custom");
+        assert_eq!(s.workload.as_deref(), Some("resnet50"));
+        assert_eq!(s.tech_node, TechNode::N5);
+        assert_eq!(s.chiplet_cap, 128);
+        assert_eq!(s.packaging, Packaging::Interposer25D);
+        assert_eq!(s.budget.sa_iterations, 1000);
+        assert_eq!(s.budget.sa_seeds, vec![3, 4]);
+        assert_eq!(s.calib().unwrap().pkg_area_mm2, 1200.0);
+    }
+}

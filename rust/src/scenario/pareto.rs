@@ -1,0 +1,132 @@
+//! Cross-scenario Pareto frontier over throughput / energy / total cost.
+//!
+//! The sweep's single-scalar reward (eq. 17) already trades the three
+//! objectives off at fixed weights; the frontier keeps the whole
+//! trade-off surface instead, so "which scenario wins" can be answered
+//! for *any* weighting after the fact. Dominance is the standard strict
+//! Pareto relation: maximize throughput, minimize energy per reference
+//! task, minimize total (die + package) cost.
+
+use crate::model::space::N_HEADS;
+
+/// One candidate design point projected onto the three sweep objectives.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParetoPoint {
+    /// Scenario the point was optimized under.
+    pub scenario: String,
+    /// Optimizer instance that produced it (e.g. "SA").
+    pub source: String,
+    pub seed: u64,
+    pub action: [usize; N_HEADS],
+    /// Effective throughput, TMAC/s (maximize).
+    pub throughput_tops: f64,
+    /// Energy per reference task, mJ (minimize).
+    pub energy_mj: f64,
+    /// Die + package cost, eq. 9/16 units (minimize).
+    pub total_cost: f64,
+}
+
+/// Strict Pareto dominance: `a` is no worse than `b` on every objective
+/// and strictly better on at least one.
+pub fn dominates(a: &ParetoPoint, b: &ParetoPoint) -> bool {
+    let no_worse = a.throughput_tops >= b.throughput_tops
+        && a.energy_mj <= b.energy_mj
+        && a.total_cost <= b.total_cost;
+    let strictly_better = a.throughput_tops > b.throughput_tops
+        || a.energy_mj < b.energy_mj
+        || a.total_cost < b.total_cost;
+    no_worse && strictly_better
+}
+
+fn finite(p: &ParetoPoint) -> bool {
+    p.throughput_tops.is_finite() && p.energy_mj.is_finite() && p.total_cost.is_finite()
+}
+
+/// The non-dominated subset of `points`, input order preserved.
+///
+/// Non-finite points are dropped first (a NaN objective satisfies no
+/// comparison, which would otherwise let a broken point masquerade as
+/// non-dominated). Exact-duplicate objective triples all survive —
+/// callers that care dedupe upstream (`sweep` does).
+pub fn pareto_frontier(points: &[ParetoPoint]) -> Vec<ParetoPoint> {
+    let finite_pts: Vec<&ParetoPoint> = points.iter().filter(|p| finite(p)).collect();
+    let mut out = Vec::new();
+    for (i, &p) in finite_pts.iter().enumerate() {
+        let dominated = finite_pts
+            .iter()
+            .enumerate()
+            .any(|(j, &q)| j != i && dominates(q, p));
+        if !dominated {
+            out.push(p.clone());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(t: f64, e: f64, c: f64) -> ParetoPoint {
+        ParetoPoint {
+            scenario: "s".into(),
+            source: "SA".into(),
+            seed: 0,
+            action: [0; N_HEADS],
+            throughput_tops: t,
+            energy_mj: e,
+            total_cost: c,
+        }
+    }
+
+    #[test]
+    fn dominance_is_strict_and_irreflexive() {
+        let a = pt(10.0, 1.0, 5.0);
+        let b = pt(8.0, 1.0, 5.0);
+        assert!(dominates(&a, &b));
+        assert!(!dominates(&b, &a));
+        assert!(!dominates(&a, &a), "a point never dominates itself");
+        // incomparable: each better on a different axis
+        let c = pt(12.0, 2.0, 5.0);
+        assert!(!dominates(&a, &c) && !dominates(&c, &a));
+    }
+
+    #[test]
+    fn frontier_keeps_exactly_the_non_dominated() {
+        let pts = vec![
+            pt(10.0, 1.0, 5.0), // frontier
+            pt(8.0, 1.0, 5.0),  // dominated by [0]
+            pt(12.0, 2.0, 5.0), // frontier (fastest)
+            pt(9.0, 0.5, 6.0),  // frontier (coolest)
+            pt(7.0, 2.5, 7.0),  // dominated by everything above
+        ];
+        let f = pareto_frontier(&pts);
+        assert_eq!(f.len(), 3);
+        // invariant: no frontier point dominated by another
+        for a in &f {
+            for b in &f {
+                assert!(!dominates(a, b), "{a:?} dominates {b:?}");
+            }
+        }
+        // invariant: every dropped point dominated by some frontier point
+        for p in &pts {
+            if !f.contains(p) {
+                assert!(f.iter().any(|q| dominates(q, p)), "{p:?} dropped undominated");
+            }
+        }
+    }
+
+    #[test]
+    fn non_finite_points_never_reach_the_frontier() {
+        let pts = vec![pt(f64::NAN, 1.0, 1.0), pt(f64::INFINITY, 1.0, 1.0), pt(5.0, 1.0, 1.0)];
+        let f = pareto_frontier(&pts);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].throughput_tops, 5.0);
+    }
+
+    #[test]
+    fn duplicate_triples_all_survive() {
+        let pts = vec![pt(5.0, 1.0, 1.0), pt(5.0, 1.0, 1.0)];
+        assert_eq!(pareto_frontier(&pts).len(), 2);
+    }
+}

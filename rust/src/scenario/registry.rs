@@ -1,0 +1,149 @@
+//! Named built-in scenarios: the paper's baseline plus sweep variants.
+//!
+//! Every entry is a small perturbation of [`Scenario::baseline`], so the
+//! registry doubles as executable documentation of which knob each
+//! variant turns. `sweep --scenarios list` prints this table; `sweep
+//! --scenarios all` runs it.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{Packaging, Scenario};
+use crate::cost::TechNode;
+use crate::workloads::mlperf;
+
+fn variant(name: &str, description: &str, edit: impl FnOnce(&mut Scenario)) -> Scenario {
+    let mut s = Scenario::baseline();
+    s.name = name.into();
+    s.description = description.into();
+    edit(&mut s);
+    s
+}
+
+/// All built-in scenarios, baseline first.
+pub fn builtin() -> Vec<Scenario> {
+    let mut v = vec![
+        Scenario::baseline(),
+        variant("paper-case-ii", "Paper case (ii): 128-chiplet cap", |s| {
+            s.chiplet_cap = 128;
+        }),
+    ];
+    for w in mlperf::mlperf_suite() {
+        v.push(variant(
+            &format!("mlperf-{}", w.name),
+            &format!("Reward energy term sized to {} ({})", w.name, w.domain),
+            |s| s.workload = Some(w.name.to_string()),
+        ));
+    }
+    v.push(variant(
+        "interposer-2.5d",
+        "Silicon interposer only: no 3D stacking in the menu",
+        |s| s.packaging = Packaging::Interposer25D,
+    ));
+    v.push(variant(
+        "organic-substrate",
+        "Organic laminate: 2.5D only, cheap area, lossier links",
+        |s| s.packaging = Packaging::OrganicSubstrate,
+    ));
+    v.push(variant(
+        "reticle-relaxed",
+        "Relaxed per-die limit: 800 mm2 max chiplet area",
+        |s| {
+            s.calib_overrides.insert("max_chiplet_area_mm2".into(), 800.0);
+        },
+    ));
+    v.push(variant(
+        "reticle-tight",
+        "Tight per-die limit: 100 mm2 max chiplet area",
+        |s| {
+            s.calib_overrides.insert("max_chiplet_area_mm2".into(), 100.0);
+        },
+    ));
+    v.push(variant(
+        "package-1800mm2",
+        "Double package area budget (1800 mm2)",
+        |s| {
+            s.calib_overrides.insert("pkg_area_mm2".into(), 1800.0);
+        },
+    ));
+    v.push(variant(
+        "node-5nm",
+        "Leading-edge node: denser/cooler logic, worse yield, dearer wafers",
+        |s| s.tech_node = TechNode::N5,
+    ));
+    v
+}
+
+/// Built-in scenario names, registry order.
+pub fn names() -> Vec<String> {
+    builtin().into_iter().map(|s| s.name).collect()
+}
+
+/// Look up one built-in scenario by name.
+pub fn find(name: &str) -> Option<Scenario> {
+    builtin().into_iter().find(|s| s.name == name)
+}
+
+/// Resolve a `--scenarios` spec: `all` or a comma-separated name list.
+pub fn resolve(spec: &str) -> Result<Vec<Scenario>> {
+    if spec == "all" {
+        return Ok(builtin());
+    }
+    let mut out = Vec::new();
+    for name in spec.split(',').map(str::trim).filter(|n| !n.is_empty()) {
+        out.push(find(name).ok_or_else(|| {
+            anyhow!("unknown scenario {name:?}; available: {}", names().join(", "))
+        })?);
+    }
+    if out.is_empty() {
+        bail!("--scenarios spec {spec:?} selects nothing");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_are_valid_unique_and_baseline_first() {
+        let all = builtin();
+        assert!(all.len() >= 6, "baseline + at least 5 variants");
+        assert_eq!(all[0].name, "paper-baseline");
+        let mut seen = std::collections::BTreeSet::new();
+        for s in &all {
+            assert!(seen.insert(s.name.clone()), "duplicate name {}", s.name);
+            s.calib().expect("built-in scenario must validate");
+        }
+    }
+
+    #[test]
+    fn find_and_resolve() {
+        for name in names() {
+            assert_eq!(find(&name).unwrap().name, name);
+        }
+        assert!(find("nope").is_none());
+        assert_eq!(resolve("all").unwrap().len(), builtin().len());
+        let two = resolve("paper-baseline, organic-substrate").unwrap();
+        assert_eq!(two.len(), 2);
+        assert_eq!(two[1].name, "organic-substrate");
+        assert!(resolve("nope").is_err());
+        assert!(resolve(",").is_err());
+    }
+
+    #[test]
+    fn one_variant_per_axis_differs_from_baseline() {
+        let base = Scenario::baseline();
+        let base_calib = base.calib().unwrap();
+        let organic = find("organic-substrate").unwrap();
+        assert_ne!(organic.space(), base.space());
+        let tight = find("reticle-tight").unwrap();
+        assert_ne!(
+            tight.calib().unwrap().max_chiplet_area_mm2,
+            base_calib.max_chiplet_area_mm2
+        );
+        let n5 = find("node-5nm").unwrap();
+        assert_ne!(n5.calib().unwrap().mac_per_mm2, base_calib.mac_per_mm2);
+        let bert = find("mlperf-bert").unwrap();
+        assert_ne!(bert.calib().unwrap().ref_task_gmac, base_calib.ref_task_gmac);
+    }
+}

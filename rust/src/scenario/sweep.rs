@@ -1,0 +1,345 @@
+//! The sweep engine: optimize every scenario, emit bests + frontier.
+//!
+//! [`run_sweep`] fans the scenario list across the `opt::parallel`
+//! worker pool ([`parallel_map`]): with several scenarios each worker
+//! owns whole scenarios (seeds inside run sequentially through a
+//! per-scenario [`EvalCache`], so repeated `cost::evaluate` calls —
+//! winner re-scoring, colliding proposals — are memoized); with a
+//! single scenario the pool is spent on its seeds instead
+//! (`sa_only_optimize_par`). Both arrangements are
+//! bit-identical — SA is a pure function of `(space, calib, cfg, seed)`
+//! and the cache is transparent — so the paper-baseline scenario
+//! reproduces the pre-scenario SA-only path exactly
+//! (`tests/scenario_sweep.rs`).
+//!
+//! Outputs, via `report::csv` under the sweep's output directory:
+//! * `scenario_<name>.csv` — every per-seed candidate with its metrics;
+//! * `sweep_best.csv` — one row per scenario: the argmax candidate;
+//! * `pareto_frontier.csv` — the cross-scenario non-dominated set over
+//!   throughput / energy / total cost ([`super::pareto`]).
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::cost::cache::{EvalCache, DEFAULT_CACHE_CAP};
+use crate::model::space::N_HEADS;
+use crate::opt::combined::{select_best, Candidate, OptOutcome};
+use crate::opt::parallel::{parallel_map, sa_only_optimize_par};
+use crate::opt::sa::simulated_annealing_with;
+use crate::report::CsvWriter;
+
+use super::pareto::{pareto_frontier, ParetoPoint};
+use super::{OptBudget, Scenario};
+
+/// Per-field budget override: only the fields actually set replace the
+/// scenario's own budget, so `--sa-iters` alone does not clobber a
+/// scenario's seed list (and vice versa).
+#[derive(Clone, Debug, Default)]
+pub struct BudgetOverride {
+    pub sa_iterations: Option<usize>,
+    pub sa_seeds: Option<Vec<u64>>,
+}
+
+impl BudgetOverride {
+    /// A scenario's effective budget under this override.
+    pub fn merged_into(&self, base: &OptBudget) -> OptBudget {
+        OptBudget {
+            sa_iterations: self.sa_iterations.unwrap_or(base.sa_iterations),
+            sa_seeds: self.sa_seeds.clone().unwrap_or_else(|| base.sa_seeds.clone()),
+        }
+    }
+
+    /// Replace both fields (tests and callers with a complete budget).
+    pub fn full(budget: OptBudget) -> BudgetOverride {
+        BudgetOverride {
+            sa_iterations: Some(budget.sa_iterations),
+            sa_seeds: Some(budget.sa_seeds),
+        }
+    }
+}
+
+/// Sweep-wide settings (per-scenario knobs live on the [`Scenario`]).
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    /// Worker threads (0 = all cores), shared with `--jobs` everywhere.
+    pub jobs: usize,
+    /// Directory the CSVs are written into (created if missing).
+    pub out_dir: PathBuf,
+    /// Field-wise budget override applied to every scenario (the CLI
+    /// maps `--sa-iters`/`--seeds` here).
+    pub budget: Option<BudgetOverride>,
+}
+
+/// One scenario's optimization result.
+#[derive(Clone, Debug)]
+pub struct ScenarioResult {
+    pub scenario: Scenario,
+    pub outcome: OptOutcome,
+    /// Evaluator-cache statistics (both 0 on the parallel-seed path,
+    /// which runs uncached).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub wall_secs: f64,
+}
+
+impl ScenarioResult {
+    /// Fraction of evaluator calls answered from the memoization cache.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+}
+
+/// Everything a sweep produced, in scenario order.
+#[derive(Clone, Debug)]
+pub struct SweepOutcome {
+    pub results: Vec<ScenarioResult>,
+    pub frontier: Vec<ParetoPoint>,
+}
+
+/// Optimize one scenario.
+///
+/// `jobs <= 1`: seeds run sequentially through a shared per-scenario
+/// [`EvalCache`] (design-point-keyed memoization of `cost::evaluate`).
+/// `jobs > 1`: seeds fan out uncached via [`sa_only_optimize_par`].
+/// Results are bit-identical either way.
+pub fn run_scenario(
+    s: &Scenario,
+    budget_override: Option<&BudgetOverride>,
+    jobs: usize,
+) -> Result<ScenarioResult> {
+    let calib = s.calib().with_context(|| format!("scenario {:?}", s.name))?;
+    let space = s.space();
+    let budget = match budget_override {
+        Some(o) => o.merged_into(&s.budget),
+        None => s.budget.clone(),
+    };
+    if budget.sa_seeds.is_empty() {
+        anyhow::bail!("scenario {:?}: empty seed list", s.name);
+    }
+    let mut sa_cfg = s.sa_config();
+    sa_cfg.iterations = budget.sa_iterations;
+    let t0 = Instant::now();
+    if jobs != 1 && budget.sa_seeds.len() > 1 {
+        let outcome = sa_only_optimize_par(space, &calib, &sa_cfg, &budget.sa_seeds, jobs);
+        return Ok(ScenarioResult {
+            scenario: s.clone(),
+            outcome,
+            cache_hits: 0,
+            cache_misses: 0,
+            wall_secs: t0.elapsed().as_secs_f64(),
+        });
+    }
+    let mut cache = EvalCache::new(DEFAULT_CACHE_CAP);
+    let mut candidates = Vec::new();
+    for &seed in &budget.sa_seeds {
+        let mut eval_fn = |a: &[usize; N_HEADS]| cache.evaluate(&calib, &space, a);
+        let trace = simulated_annealing_with(&space, &sa_cfg, seed, &mut eval_fn);
+        // Re-score the winner through the same cache: whenever the walk
+        // stayed under the cache cap the search already inserted it, so
+        // this hits and returns the exact Evaluation the walk saw —
+        // search, re-scoring and reporting share one memo table. Past
+        // the cap it recomputes, which is identical by purity.
+        let eval = cache.evaluate(&calib, &space, &trace.best_action);
+        debug_assert!(eval.reward == trace.best_eval.reward);
+        candidates.push(Candidate {
+            source: "SA".into(),
+            seed,
+            action: trace.best_action,
+            eval,
+        });
+    }
+    let best = select_best(&candidates)
+        .expect("scenario budget has at least one seed")
+        .clone();
+    Ok(ScenarioResult {
+        scenario: s.clone(),
+        outcome: OptOutcome { best, candidates },
+        cache_hits: cache.hits,
+        cache_misses: cache.misses,
+        wall_secs: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Run every scenario, write the CSVs, return results + frontier.
+pub fn run_sweep(scenarios: &[Scenario], cfg: &SweepConfig) -> Result<SweepOutcome> {
+    std::fs::create_dir_all(&cfg.out_dir)
+        .with_context(|| format!("creating {}", cfg.out_dir.display()))?;
+    // One scenario: spend the pool on its seeds. Several: one worker per
+    // scenario (cached seeds inside), scenarios sharded across the pool.
+    let inner_jobs = if scenarios.len() == 1 { cfg.jobs } else { 1 };
+    let results = parallel_map(scenarios, cfg.jobs, |s| {
+        run_scenario(s, cfg.budget.as_ref(), inner_jobs)
+    });
+    let mut ok = Vec::with_capacity(results.len());
+    for r in results {
+        ok.push(r?);
+    }
+
+    for r in &ok {
+        write_scenario_csv(&cfg.out_dir, r)?;
+    }
+    write_best_csv(&cfg.out_dir, &ok)?;
+
+    let pool = dedup_points(&ok);
+    let frontier = pareto_frontier(&pool);
+    write_frontier_csv(&cfg.out_dir, &frontier)?;
+
+    Ok(SweepOutcome { results: ok, frontier })
+}
+
+/// All feasible candidates across scenarios, exact-duplicate objective
+/// triples collapsed (20 seeds often converge to the same optimum).
+fn dedup_points(results: &[ScenarioResult]) -> Vec<ParetoPoint> {
+    let mut pool: Vec<ParetoPoint> = Vec::new();
+    for r in results {
+        for c in &r.outcome.candidates {
+            if !c.eval.feasible {
+                continue;
+            }
+            let p = pareto_point(&r.scenario.name, c);
+            let dup = pool.iter().any(|q| {
+                q.throughput_tops == p.throughput_tops
+                    && q.energy_mj == p.energy_mj
+                    && q.total_cost == p.total_cost
+            });
+            if !dup {
+                pool.push(p);
+            }
+        }
+    }
+    pool
+}
+
+fn pareto_point(scenario: &str, c: &Candidate) -> ParetoPoint {
+    ParetoPoint {
+        scenario: scenario.to_string(),
+        source: c.source.clone(),
+        seed: c.seed,
+        action: c.action,
+        throughput_tops: c.eval.throughput_tops,
+        energy_mj: c.eval.energy_mj_per_ref_task,
+        total_cost: c.eval.die_cost + c.eval.pkg_cost,
+    }
+}
+
+fn action_str(a: &[usize]) -> String {
+    a.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+}
+
+/// Scenario name as a safe file-name component: anything outside
+/// `[A-Za-z0-9._-]` becomes `-`, so a user scenario named `exp/v1`
+/// cannot escape (or fail to hit) the output directory.
+fn safe_name(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-') { c } else { '-' })
+        .collect()
+}
+
+fn write_scenario_csv(dir: &std::path::Path, r: &ScenarioResult) -> Result<()> {
+    let path = dir.join(format!("scenario_{}.csv", safe_name(&r.scenario.name)));
+    let mut w = CsvWriter::create(
+        &path,
+        &[
+            "source",
+            "seed",
+            "reward",
+            "feasible",
+            "throughput_tops",
+            "energy_mj_per_task",
+            "e_op_pj",
+            "die_cost",
+            "pkg_cost",
+            "total_cost",
+            "n_chiplets_decoded",
+            "action",
+        ],
+    )?;
+    let space = r.scenario.space();
+    for c in &r.outcome.candidates {
+        let p = space.decode(&c.action);
+        w.row_str(&[
+            c.source.clone(),
+            c.seed.to_string(),
+            format!("{}", c.eval.reward),
+            c.eval.feasible.to_string(),
+            format!("{}", c.eval.throughput_tops),
+            format!("{}", c.eval.energy_mj_per_ref_task),
+            format!("{}", c.eval.e_op_pj),
+            format!("{}", c.eval.die_cost),
+            format!("{}", c.eval.pkg_cost),
+            format!("{}", c.eval.die_cost + c.eval.pkg_cost),
+            p.n_chiplets.to_string(),
+            action_str(&c.action),
+        ])?;
+    }
+    w.flush()
+}
+
+fn write_best_csv(dir: &std::path::Path, results: &[ScenarioResult]) -> Result<()> {
+    let mut w = CsvWriter::create(
+        &dir.join("sweep_best.csv"),
+        &[
+            "scenario",
+            "description",
+            "workload",
+            "tech_node",
+            "packaging",
+            "chiplet_cap",
+            "seed",
+            "reward",
+            "throughput_tops",
+            "energy_mj_per_task",
+            "total_cost",
+            "cache_hit_rate",
+            "wall_secs",
+            "action",
+        ],
+    )?;
+    for r in results {
+        let s = &r.scenario;
+        let b = &r.outcome.best;
+        w.row_str(&[
+            s.name.clone(),
+            s.description.clone(),
+            s.workload.clone().unwrap_or_else(|| "-".into()),
+            s.tech_node.name().to_string(),
+            s.packaging.name().to_string(),
+            s.chiplet_cap.to_string(),
+            b.seed.to_string(),
+            format!("{}", b.eval.reward),
+            format!("{}", b.eval.throughput_tops),
+            format!("{}", b.eval.energy_mj_per_ref_task),
+            format!("{}", b.eval.die_cost + b.eval.pkg_cost),
+            format!("{:.4}", r.cache_hit_rate()),
+            format!("{:.2}", r.wall_secs),
+            action_str(&b.action),
+        ])?;
+    }
+    w.flush()
+}
+
+fn write_frontier_csv(dir: &std::path::Path, frontier: &[ParetoPoint]) -> Result<()> {
+    let mut w = CsvWriter::create(
+        &dir.join("pareto_frontier.csv"),
+        &["scenario", "source", "seed", "throughput_tops", "energy_mj_per_task", "total_cost", "action"],
+    )?;
+    for p in frontier {
+        w.row_str(&[
+            p.scenario.clone(),
+            p.source.clone(),
+            p.seed.to_string(),
+            format!("{}", p.throughput_tops),
+            format!("{}", p.energy_mj),
+            format!("{}", p.total_cost),
+            action_str(&p.action),
+        ])?;
+    }
+    w.flush()
+}

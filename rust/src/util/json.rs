@@ -29,7 +29,7 @@ impl Json {
         }
     }
 
-    /// Like [`get`] but panics with a useful message (manifest fields are
+    /// Like [`Json::get`] but panics with a useful message (manifest fields are
     /// a hard contract: a missing key is a build error, not a runtime
     /// condition to recover from).
     pub fn req(&self, key: &str) -> &Json {

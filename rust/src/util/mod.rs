@@ -5,9 +5,10 @@
 //! implemented here from scratch: a PCG-family RNG ([`rng`]), a JSON
 //! parser/writer ([`json`]), descriptive statistics ([`stats`]), a CLI
 //! argument parser ([`cli`]), ASCII table rendering ([`table`]), a
-//! criterion-style micro-benchmark harness ([`bench`]) and a
+//! criterion-style micro-benchmark harness ([`bench`]), a
 //! proptest-style property-testing framework with shrinking
-//! ([`proptest`]).
+//! ([`proptest`]) and a TOML-subset parser for scenario files
+//! ([`toml`]).
 
 pub mod bench;
 pub mod cli;
@@ -16,5 +17,6 @@ pub mod proptest;
 pub mod rng;
 pub mod stats;
 pub mod table;
+pub mod toml;
 
 pub use rng::Rng;

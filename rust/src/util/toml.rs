@@ -1,0 +1,294 @@
+//! Minimal TOML-subset parser for scenario files.
+//!
+//! Parses the flat-table subset of TOML that scenario files use into the
+//! same [`Json`] value type the JSON config path produces, so both
+//! formats share one decode surface (`scenario::Scenario::from_json`).
+//!
+//! Supported: `key = value` pairs with bare or quoted keys; basic
+//! strings with `\" \\ \n \r \t` escapes; integers and floats (with `_`
+//! separators); booleans; single-line arrays; `#` comments; `[section]`
+//! and dotted `[a.b]` table headers (nested objects). Not supported:
+//! multi-line strings/arrays, dates, inline tables and arrays-of-tables
+//! — none of which the scenario schema uses.
+
+use std::collections::BTreeMap;
+
+use super::json::Json;
+
+/// Parse TOML text into a [`Json::Obj`] tree.
+pub fn parse(text: &str) -> Result<Json, String> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    let mut section: Vec<String> = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let inner = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated table header", lineno + 1))?;
+            if inner.is_empty() || inner.starts_with('[') {
+                return Err(format!("line {}: unsupported table header", lineno + 1));
+            }
+            section = inner.split('.').map(|p| unquote_key(p.trim())).collect();
+            continue;
+        }
+        let eq = find_eq(&line)
+            .ok_or_else(|| format!("line {}: expected `key = value`", lineno + 1))?;
+        let key = unquote_key(line[..eq].trim());
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", lineno + 1));
+        }
+        let value = parse_value(line[eq + 1..].trim())
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        insert(&mut root, &section, key, value)
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+    }
+    Ok(Json::Obj(root))
+}
+
+/// Remove a trailing `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '\\' if in_str && !escaped => {
+                escaped = true;
+                continue;
+            }
+            '"' if !escaped => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+        escaped = false;
+    }
+    line
+}
+
+/// Index of the first `=` outside a quoted string.
+fn find_eq(line: &str) -> Option<usize> {
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '\\' if in_str && !escaped => {
+                escaped = true;
+                continue;
+            }
+            '"' if !escaped => in_str = !in_str,
+            '=' if !in_str => return Some(i),
+            _ => {}
+        }
+        escaped = false;
+    }
+    None
+}
+
+fn unquote_key(k: &str) -> String {
+    k.trim_matches('"').to_string()
+}
+
+/// Parse one TOML value (the full remainder of a line after `=`).
+fn parse_value(src: &str) -> Result<Json, String> {
+    let mut p = Cursor { bytes: src.as_bytes(), pos: 0 };
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(format!("trailing data after value: {:?}", &src[p.pos..]));
+    }
+    Ok(v)
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t')) {
+            self.pos += 1;
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        self.skip_ws();
+        match self.peek().ok_or("missing value")? {
+            b'"' => self.string(),
+            b'[' => self.array(),
+            _ => self.scalar(),
+        }
+    }
+
+    fn string(&mut self) -> Result<Json, String> {
+        self.pos += 1; // opening quote
+        let mut out = String::new();
+        loop {
+            let b = *self
+                .bytes
+                .get(self.pos)
+                .ok_or("unterminated string")?;
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(Json::Str(out)),
+                b'\\' => {
+                    let e = *self.bytes.get(self.pos).ok_or("bad escape")?;
+                    self.pos += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        c => return Err(format!("unsupported escape \\{}", c as char)),
+                    }
+                }
+                b if b < 0x80 => out.push(b as char),
+                b => {
+                    // multi-byte UTF-8: re-decode in place
+                    let start = self.pos - 1;
+                    let width = match b {
+                        0xC0..=0xDF => 2,
+                        0xE0..=0xEF => 3,
+                        _ => 4,
+                    };
+                    self.pos = start + width;
+                    let s = std::str::from_utf8(
+                        self.bytes.get(start..self.pos).ok_or("bad utf-8")?,
+                    )
+                    .map_err(|e| e.to_string())?;
+                    out.push_str(s);
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.pos += 1; // '['
+        let mut xs = Vec::new();
+        loop {
+            self.skip_ws();
+            match self.peek().ok_or("unterminated array")? {
+                b']' => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(xs));
+                }
+                b',' => {
+                    self.pos += 1;
+                }
+                _ => xs.push(self.value()?),
+            }
+        }
+    }
+
+    fn scalar(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        while let Some(b) = self.peek() {
+            if matches!(b, b',' | b']' | b' ' | b'\t') {
+                break;
+            }
+            self.pos += 1;
+        }
+        let tok = std::str::from_utf8(&self.bytes[start..self.pos]).map_err(|e| e.to_string())?;
+        match tok {
+            "" => Err("missing value".into()),
+            "true" => Ok(Json::Bool(true)),
+            "false" => Ok(Json::Bool(false)),
+            _ => {
+                let cleaned = tok.replace('_', "");
+                cleaned
+                    .parse::<f64>()
+                    .map(Json::Num)
+                    .map_err(|_| format!("invalid value {tok:?}"))
+            }
+        }
+    }
+}
+
+/// Insert `key = value` under the (possibly nested) `section` path.
+fn insert(
+    root: &mut BTreeMap<String, Json>,
+    section: &[String],
+    key: String,
+    value: Json,
+) -> Result<(), String> {
+    let mut map = root;
+    for part in section {
+        let entry = map
+            .entry(part.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        map = match entry {
+            Json::Obj(m) => m,
+            _ => return Err(format!("table {part:?} collides with a value")),
+        };
+    }
+    if map.insert(key.clone(), value).is_some() {
+        return Err(format!("duplicate key {key:?}"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_keys() {
+        let v = parse(
+            "name = \"x\"\ncount = 64\nratio = 0.5\nflag = true\nbig = 120_000\n",
+        )
+        .unwrap();
+        assert_eq!(v.req("name").as_str(), Some("x"));
+        assert_eq!(v.req("count").as_f64(), Some(64.0));
+        assert_eq!(v.req("ratio").as_f64(), Some(0.5));
+        assert_eq!(v.req("flag"), &Json::Bool(true));
+        assert_eq!(v.req("big").as_f64(), Some(120000.0));
+    }
+
+    #[test]
+    fn parses_arrays_and_sections() {
+        let v = parse(
+            "seeds = [0, 1, 2]\n[calib]\nalpha = 1.5\n[calib.deep]\nx = 2\n",
+        )
+        .unwrap();
+        assert_eq!(v.req("seeds").as_usize_vec(), Some(vec![0, 1, 2]));
+        assert_eq!(v.req("calib").req("alpha").as_f64(), Some(1.5));
+        assert_eq!(v.req("calib").req("deep").req("x").as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let v = parse("# header\n\na = 1   # trailing\nb = \"has # inside\"\n").unwrap();
+        assert_eq!(v.req("a").as_f64(), Some(1.0));
+        assert_eq!(v.req("b").as_str(), Some("has # inside"));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = parse("s = \"a\\nb\\\"c\\\\d\"\n").unwrap();
+        assert_eq!(v.req("s").as_str(), Some("a\nb\"c\\d"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("just words\n").is_err());
+        assert!(parse("a = \n").is_err());
+        assert!(parse("a = 1 2\n").is_err());
+        assert!(parse("[unclosed\n").is_err());
+        assert!(parse("a = 1\na = 2\n").is_err());
+        assert!(parse("a = [1, 2\n").is_err());
+    }
+
+    #[test]
+    fn negative_and_exponent_numbers() {
+        let v = parse("a = -1.5\nb = 2e3\n").unwrap();
+        assert_eq!(v.req("a").as_f64(), Some(-1.5));
+        assert_eq!(v.req("b").as_f64(), Some(2000.0));
+    }
+}

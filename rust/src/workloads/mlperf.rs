@@ -1,9 +1,10 @@
 //! MLPerf benchmark workload models — Table 7 of the paper.
 //!
-//! Each workload carries its per-task (forward-pass) MAC count and a small
-//! set of representative GEMM layers. The layers are used by [`super::
-//! mapping`] to estimate the PE-array mapping efficiency U_chip (eq. 4)
-//! and the fraction of non-GEMM work (eq. 2's (ops/task)_nG term).
+//! Each workload carries its per-task (forward-pass) MAC count and a
+//! small set of representative GEMM layers. The layers are used by
+//! [`super::mapping`] to estimate the PE-array mapping efficiency U_chip
+//! (eq. 4) and the fraction of non-GEMM work (eq. 2's (ops/task)_nG
+//! term).
 
 /// A GEMM layer: (M, K, N) — activations (M×K) times weights (K×N).
 /// Conv layers are given in their im2col GEMM form.
@@ -127,6 +128,14 @@ pub fn mlperf_suite() -> Vec<Workload> {
 /// Names only, in Table 7 order.
 pub const MLPERF: [&str; 5] = ["resnet50", "efficientdet", "mask-rcnn", "3d-unet", "bert"];
 
+/// Look up a Table 7 workload by name (case-insensitive). The scenario
+/// layer resolves `workload = "bert"`-style selections through this.
+pub fn find(name: &str) -> Option<Workload> {
+    mlperf_suite()
+        .into_iter()
+        .find(|w| w.name.eq_ignore_ascii_case(name))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -156,6 +165,15 @@ mod tests {
         for w in mlperf_suite() {
             assert!((w.gmac_per_task() - w.gflops_per_task / 2.0).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn find_resolves_every_table7_name() {
+        for name in MLPERF {
+            assert!(find(name).is_some(), "{name}");
+        }
+        assert!(find("BERT").is_some(), "lookup is case-insensitive");
+        assert!(find("gpt4").is_none());
     }
 
     #[test]

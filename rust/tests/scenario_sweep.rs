@@ -1,0 +1,184 @@
+//! Scenario subsystem integration tests: serialization round-trips,
+//! registry coverage, Pareto invariants on real optimizer output, and
+//! the acceptance-critical guarantee that the sweep's paper-baseline
+//! path reproduces the pre-scenario SA-only optimizer bit for bit.
+
+use std::collections::BTreeSet;
+
+use chiplet_gym::cost::{evaluate, Calib};
+use chiplet_gym::model::space::DesignSpace;
+use chiplet_gym::opt::combined::sa_only_optimize;
+use chiplet_gym::opt::sa::SaConfig;
+use chiplet_gym::scenario::pareto::{dominates, pareto_frontier};
+use chiplet_gym::scenario::sweep::{run_scenario, run_sweep, BudgetOverride, SweepConfig};
+use chiplet_gym::scenario::{registry, OptBudget, Scenario};
+use chiplet_gym::util::json::Json;
+
+fn tiny_budget() -> OptBudget {
+    OptBudget { sa_iterations: 2_000, sa_seeds: vec![0, 1, 2] }
+}
+
+fn tiny_override() -> BudgetOverride {
+    BudgetOverride::full(tiny_budget())
+}
+
+#[test]
+fn every_builtin_scenario_roundtrips_through_json() {
+    for s in registry::builtin() {
+        let back = Scenario::from_json(&s.to_json())
+            .unwrap_or_else(|e| panic!("{}: {e}", s.name));
+        assert_eq!(back, s, "JSON round-trip changed {}", s.name);
+        // and the JSON text itself survives a parse cycle
+        let text = s.to_json().to_string();
+        let back2 = Scenario::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back2, s);
+    }
+}
+
+#[test]
+fn every_builtin_scenario_roundtrips_through_toml() {
+    for s in registry::builtin() {
+        let toml = s.to_toml_string();
+        let back = Scenario::from_toml_str(&toml)
+            .unwrap_or_else(|e| panic!("{}: {e}\n{toml}", s.name));
+        assert_eq!(back, s, "TOML round-trip changed {}", s.name);
+    }
+}
+
+#[test]
+fn registry_lookup_finds_every_builtin_exactly() {
+    let all = registry::builtin();
+    let names: BTreeSet<String> = all.iter().map(|s| s.name.clone()).collect();
+    assert_eq!(names.len(), all.len(), "names must be unique");
+    for s in &all {
+        assert_eq!(registry::find(&s.name).as_ref(), Some(s));
+    }
+    assert!(registry::find("missing-scenario").is_none());
+    // the paper's baseline plus the issue-mandated variant axes
+    for required in [
+        "paper-baseline",
+        "mlperf-bert",
+        "mlperf-resnet50",
+        "interposer-2.5d",
+        "organic-substrate",
+        "reticle-relaxed",
+        "reticle-tight",
+    ] {
+        assert!(names.contains(required), "registry lost {required}");
+    }
+}
+
+#[test]
+fn paper_baseline_sweep_is_bit_identical_to_sa_only_path() {
+    // Acceptance criterion: the sweep's paper-baseline scenario must
+    // reproduce the pre-scenario SA-only optimizer bit for bit.
+    let budget = tiny_budget();
+    let baseline = Scenario::baseline();
+    let sa_cfg = SaConfig {
+        iterations: budget.sa_iterations,
+        trace_every: 0,
+        ..SaConfig::default()
+    };
+    let reference = sa_only_optimize(
+        DesignSpace::case_i(),
+        &Calib::default(),
+        &sa_cfg,
+        &budget.sa_seeds,
+    );
+    // cached sequential path (jobs = 1) and parallel path (jobs = 2)
+    let override_ = BudgetOverride::full(budget.clone());
+    for jobs in [1usize, 2] {
+        let swept = run_scenario(&baseline, Some(&override_), jobs).unwrap();
+        assert_eq!(swept.outcome.best.action, reference.best.action, "jobs {jobs}");
+        assert_eq!(swept.outcome.best.seed, reference.best.seed, "jobs {jobs}");
+        assert!(
+            swept.outcome.best.eval.reward == reference.best.eval.reward,
+            "jobs {jobs}: {} != {}",
+            swept.outcome.best.eval.reward,
+            reference.best.eval.reward
+        );
+        assert_eq!(swept.outcome.candidates.len(), reference.candidates.len());
+        for (a, b) in swept.outcome.candidates.iter().zip(reference.candidates.iter()) {
+            assert_eq!(a.action, b.action);
+            assert!(a.eval.reward == b.eval.reward);
+        }
+    }
+    // the sequential path actually exercised the memoization cache: the
+    // per-seed winner re-scoring is a guaranteed hit per seed
+    let cached = run_scenario(&baseline, Some(&override_), 1).unwrap();
+    assert!(cached.cache_misses > 0);
+    assert!(
+        cached.cache_hits >= budget.sa_seeds.len() as u64,
+        "winner re-scoring must hit the cache once per seed"
+    );
+}
+
+#[test]
+fn scenario_calibs_change_optimizer_input_not_mechanics() {
+    // A locked scenario's best decodes to the locked architecture.
+    let organic = registry::find("organic-substrate").unwrap();
+    let r = run_scenario(&organic, Some(&tiny_override()), 1).unwrap();
+    let p = organic.space().decode(&r.outcome.best.action);
+    assert_eq!(p.arch, chiplet_gym::model::space::ArchType::TwoPointFiveD);
+    // And its eval matches a direct evaluation under the scenario calib.
+    let direct = evaluate(&organic.calib().unwrap(), &p);
+    assert!(r.outcome.best.eval.reward == direct.reward);
+}
+
+#[test]
+fn budget_override_is_per_field() {
+    let base = OptBudget { sa_iterations: 200_000, sa_seeds: vec![0, 1, 2] };
+    let iters_only = BudgetOverride { sa_iterations: Some(5_000), sa_seeds: None };
+    let merged = iters_only.merged_into(&base);
+    assert_eq!(merged.sa_iterations, 5_000);
+    assert_eq!(merged.sa_seeds, base.sa_seeds, "--sa-iters must not clobber seeds");
+    let seeds_only = BudgetOverride { sa_iterations: None, sa_seeds: Some(vec![7]) };
+    let merged = seeds_only.merged_into(&base);
+    assert_eq!(merged.sa_iterations, base.sa_iterations);
+    assert_eq!(merged.sa_seeds, vec![7]);
+}
+
+#[test]
+fn sweep_writes_csvs_and_frontier_invariants_hold() {
+    let dir = std::env::temp_dir().join("chiplet_gym_sweep_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    let scenarios = vec![
+        Scenario::baseline(),
+        registry::find("reticle-tight").unwrap(),
+        registry::find("organic-substrate").unwrap(),
+    ];
+    let cfg = SweepConfig {
+        jobs: 2,
+        out_dir: dir.clone(),
+        budget: Some(BudgetOverride::full(OptBudget {
+            sa_iterations: 1_000,
+            sa_seeds: vec![0, 1],
+        })),
+    };
+    let out = run_sweep(&scenarios, &cfg).unwrap();
+    assert_eq!(out.results.len(), 3);
+
+    // files exist and the per-scenario CSV carries header + one row per seed
+    for s in &scenarios {
+        let path = dir.join(format!("scenario_{}.csv", s.name));
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        assert_eq!(text.lines().count(), 1 + 2, "{}", s.name);
+        assert!(text.starts_with("source,seed,reward"), "{text}");
+    }
+    let best = std::fs::read_to_string(dir.join("sweep_best.csv")).unwrap();
+    assert_eq!(best.lines().count(), 1 + 3);
+    let frontier_csv = std::fs::read_to_string(dir.join("pareto_frontier.csv")).unwrap();
+    assert_eq!(frontier_csv.lines().count(), 1 + out.frontier.len());
+
+    // frontier invariants: non-empty, mutually non-dominated, and no
+    // feasible candidate dominates a frontier point
+    assert!(!out.frontier.is_empty());
+    for a in &out.frontier {
+        for b in &out.frontier {
+            assert!(!dominates(a, b), "frontier point dominated: {b:?}");
+        }
+    }
+    let again = pareto_frontier(&out.frontier);
+    assert_eq!(again.len(), out.frontier.len(), "frontier must be a fixed point");
+}
