@@ -1,0 +1,74 @@
+//! Search-core throughput: evaluations/sec per portfolio optimizer.
+//!
+//! Runs each non-RL driver (SA, random, GA, greedy) through one
+//! fixed-budget case-(i) search, times the run with the criterion-lite
+//! harness, and reports objective evaluations per second — the metric
+//! that tells you how much of the wall-clock is driver overhead vs the
+//! PPAC evaluator itself. Writes `BENCH_search.json` (plus a CSV of the
+//! per-driver rows) under `bench_results/` to seed the perf trajectory
+//! across PRs.
+
+use chiplet_gym::cost::Calib;
+use chiplet_gym::model::space::DesignSpace;
+use chiplet_gym::opt::sa::SaConfig;
+use chiplet_gym::opt::search::{CostObjective, DriverConfig, GaConfig};
+use chiplet_gym::report;
+use chiplet_gym::util::bench::{fmt_ns, Runner};
+
+fn main() {
+    let space = DesignSpace::case_i();
+    let calib = Calib::default();
+    let budget = 20_000usize;
+
+    let sa = SaConfig { iterations: budget, trace_every: 0, ..SaConfig::default() };
+    let cases: Vec<(&str, DriverConfig)> = vec![
+        ("SA", DriverConfig::Sa(sa)),
+        ("random", DriverConfig::random_with_budget(budget)),
+        ("GA", DriverConfig::Ga(GaConfig::with_budget(budget))),
+        ("greedy", DriverConfig::greedy_with_budget(budget)),
+    ];
+
+    let mut runner = Runner::quick();
+    // (name, evals per run, evals/sec, best reward at seed 0)
+    let mut rows: Vec<(String, usize, f64, f64)> = Vec::new();
+    for (name, driver) in &cases {
+        let mut evals = 0usize;
+        let mut best = f64::NEG_INFINITY;
+        runner.bench(&format!("{name}: one {budget}-eval run"), || {
+            let mut obj = CostObjective::new(&space, &calib);
+            let t = driver.run(&space, &mut obj, 0);
+            evals = t.evaluations;
+            best = t.best_eval.reward;
+            std::hint::black_box(t.best_action);
+        });
+        let ns = runner.results().last().unwrap().ns_per_iter.mean;
+        let evals_per_sec = evals as f64 * 1e9 / ns;
+        println!(
+            "{name:>7}: {evals} evals in {} => {evals_per_sec:.0} evals/s, best {best:.2}",
+            fmt_ns(ns)
+        );
+        rows.push((name.to_string(), evals, evals_per_sec, best));
+    }
+    println!("{}", runner.report());
+
+    let mut csv = report::csv("perf_search.csv", &["driver", "evals", "evals_per_sec", "best"]);
+    for (name, evals, eps, best) in &rows {
+        csv.labeled_row(name, &[*evals as f64, *eps, *best]).expect("csv row");
+    }
+    csv.flush().expect("csv flush");
+
+    // BENCH_search.json: the machine-readable perf-trajectory seed.
+    let mut json = String::from("{\n  \"budget\": ");
+    json.push_str(&budget.to_string());
+    json.push_str(",\n  \"optimizers\": {\n");
+    for (i, (name, evals, eps, best)) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    \"{name}\": {{\"evals\": {evals}, \"evals_per_sec\": {eps:.1}, \
+             \"best_reward\": {best:.4}}}{}\n",
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  }\n}\n");
+    let path = report::write_text("BENCH_search.json", &json);
+    println!("wrote {}", path.display());
+}

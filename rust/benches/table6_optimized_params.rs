@@ -61,6 +61,7 @@ fn main() {
                 ppo,
                 sa_seeds: if full { (0..20).collect() } else { (0..6).collect() },
                 rl_seeds: if full { (0..20).collect() } else { (0..2).collect() },
+                extra: Vec::new(),
             };
             combined_optimize(engine, space, &calib, &cfg).expect("alg1")
         } else {

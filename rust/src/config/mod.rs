@@ -29,6 +29,10 @@ pub struct RunConfig {
     /// Rollout environments per PPO agent (`gym::VecEnv` width); must
     /// divide the manifest's n_steps. 1 = classic single-env rollout.
     pub ppo_n_envs: usize,
+    /// GA population for the `ga`/`portfolio` subcommands (the GA's
+    /// generation count is always refitted to the `--sa-iters`
+    /// evaluation budget, so this trades depth against breadth).
+    pub ga_population: usize,
     pub sa_seeds: Vec<u64>,
     pub rl_seeds: Vec<u64>,
     pub out_dir: String,
@@ -54,6 +58,7 @@ impl Default for RunConfig {
             ppo_episode_len: 2,
             ppo_ent_coef: 0.1,
             ppo_n_envs: 1,
+            ga_population: 64,
             sa_seeds: (0..20).collect(),
             rl_seeds: (0..20).collect(),
             out_dir: "bench_results".into(),
@@ -120,6 +125,9 @@ impl RunConfig {
         if let Some(x) = num("ppo_n_envs") {
             self.ppo_n_envs = x as usize;
         }
+        if let Some(x) = num("ga_population") {
+            self.ga_population = x as usize;
+        }
         if let Some(x) = num("alpha") {
             self.calib.alpha = x;
         }
@@ -162,6 +170,7 @@ impl RunConfig {
         self.ppo_episode_len = args.get_parse("episode-len", self.ppo_episode_len);
         self.ppo_ent_coef = args.get_parse("ent-coef", self.ppo_ent_coef);
         self.ppo_n_envs = args.get_parse("n-envs", self.ppo_n_envs);
+        self.ga_population = args.get_parse("ga-pop", self.ga_population);
         self.calib.alpha = args.get_parse("alpha", self.calib.alpha);
         self.calib.beta = args.get_parse("beta", self.calib.beta);
         self.calib.gamma = args.get_parse("gamma", self.calib.gamma);
@@ -226,6 +235,18 @@ mod tests {
         assert_eq!(cfg.chiplet_cap, 128);
         assert_eq!(cfg.sa.iterations, 5000);
         assert_eq!(cfg.rl_seeds, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn ga_population_defaults_and_overrides() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.ga_population, 64);
+        let v = Json::parse(r#"{"ga_population": 128}"#).unwrap();
+        cfg.apply_json(&v);
+        assert_eq!(cfg.ga_population, 128);
+        let args = Args::parse("ga --ga-pop 32".split_whitespace().map(String::from));
+        cfg.apply_args(&args);
+        assert_eq!(cfg.ga_population, 32);
     }
 
     #[test]

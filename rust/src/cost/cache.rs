@@ -15,6 +15,11 @@
 //! without it (`tests/scenario_sweep.rs` asserts this). Insertion stops
 //! at a capacity cap to bound memory on long sweeps; lookups (and hit
 //! accounting) continue against the retained set.
+//!
+//! Search drivers never talk to the cache directly: the sweep engine
+//! wraps it in `opt::search::CachedObjective` and hands drivers a
+//! `&mut dyn Objective`, so any portfolio member (SA, GA, greedy,
+//! random) is memoized the same way without knowing the cache exists.
 
 use std::collections::HashMap;
 

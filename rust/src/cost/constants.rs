@@ -199,6 +199,12 @@ pub struct Calib {
     pub alpha: f64,
     pub beta: f64,
     pub gamma: f64,
+    /// Reward assigned to infeasible layouts (area-budget violations):
+    /// a large negative value steers every optimizer away without NaN
+    /// poisoning. The paper leaves the penalty unspecified; scenarios
+    /// can tune it (key `infeasible_reward`, e.g. harsher for spaces
+    /// whose feasible region is thin).
+    pub infeasible_reward: f64,
 }
 
 impl Default for Calib {
@@ -257,6 +263,7 @@ impl Default for Calib {
             alpha: 1.0,
             beta: 1.0,
             gamma: 0.1,
+            infeasible_reward: -100.0,
         }
     }
 }
@@ -313,6 +320,7 @@ pub const CALIB_KEYS: &[&str] = &[
     "alpha",
     "beta",
     "gamma",
+    "infeasible_reward",
 ];
 
 impl Calib {
@@ -381,6 +389,7 @@ impl Calib {
             "alpha" => self.alpha = v,
             "beta" => self.beta = v,
             "gamma" => self.gamma = v,
+            "infeasible_reward" => self.infeasible_reward = v,
             _ => return false,
         }
         true

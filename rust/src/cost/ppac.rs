@@ -50,7 +50,7 @@ pub struct Evaluation {
 }
 
 impl Evaluation {
-    fn infeasible(geo: &Geometry) -> Evaluation {
+    fn infeasible(c: &Calib, geo: &Geometry) -> Evaluation {
         Evaluation {
             feasible: false,
             mesh_m: geo.m,
@@ -74,9 +74,10 @@ impl Evaluation {
             die_yield: 0.0,
             die_cost: 0.0,
             pkg_cost: 0.0,
-            // A large negative reward steers both optimizers away from
-            // infeasible layouts without NaN poisoning.
-            reward: -100.0,
+            // A large negative reward steers every optimizer away from
+            // infeasible layouts without NaN poisoning; tunable per
+            // scenario via the `infeasible_reward` calibration key.
+            reward: c.infeasible_reward,
         }
     }
 }
@@ -85,7 +86,7 @@ impl Evaluation {
 pub fn evaluate(c: &Calib, p: &DesignPoint) -> Evaluation {
     let geo = throughput::geometry(c, p);
     if !geo.feasible {
-        return Evaluation::infeasible(&geo);
+        return Evaluation::infeasible(c, &geo);
     }
     // §Perf: hop statistics are memoized over (footprints, HBM mask) —
     // this function is the SA inner loop (millions of calls per run).
@@ -242,6 +243,30 @@ mod tests {
         assert_eq!(e1.throughput_tops, e2.throughput_tops);
         assert_eq!(e1.pkg_cost, e2.pkg_cost);
         assert!(e2.reward > e1.reward);
+    }
+
+    #[test]
+    fn infeasible_reward_is_calibrated_not_hardcoded() {
+        // Find an infeasible point: blow the package-area budget by
+        // shrinking it until the Table 6 design no longer fits.
+        let mut c = Calib::default();
+        assert!(c.set_key("pkg_area_mm2", 10.0));
+        let space = DesignSpace::case_i();
+        let p = space.decode(&paper_case_i_action());
+        let e = evaluate(&c, &p);
+        assert!(!e.feasible, "10 mm2 package cannot fit 60 chiplets");
+        // default value keeps the historical -100.0 (bit-identical)
+        assert_eq!(e.reward, -100.0);
+        // ... and the scenario override surface reaches it
+        assert!(c.set_key("infeasible_reward", -1e6));
+        let harsh = evaluate(&c, &p);
+        assert_eq!(harsh.reward, -1e6);
+        // feasible evaluations ignore the knob entirely
+        let mut c2 = Calib::default();
+        assert!(c2.set_key("infeasible_reward", -1e6));
+        let ok = evaluate(&c2, &p);
+        assert!(ok.feasible);
+        assert_eq!(ok.reward, evaluate(&Calib::default(), &p).reward);
     }
 
     #[test]

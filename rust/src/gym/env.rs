@@ -2,6 +2,7 @@
 
 use crate::cost::{evaluate, Calib, Evaluation};
 use crate::model::space::{DesignPoint, DesignSpace, N_HEADS};
+use crate::util::stats::BestTracker;
 
 /// Observation dimensionality (paper Section 5.2.1: max package area,
 /// max area per chiplet, current area per chiplet, ai2ai latency, ai2hbm
@@ -33,8 +34,10 @@ pub struct ChipletGymEnv {
     pub episode_len: usize,
     steps_in_episode: usize,
     last_eval: Option<Evaluation>,
-    best_reward: f64,
-    best_point: Option<DesignPoint>,
+    /// Best design ever evaluated, through the shared NaN-safe tracker
+    /// (`util::stats::BestTracker` — the same code path the optimizer
+    /// portfolio uses, so best/merge semantics exist exactly once).
+    best: BestTracker<DesignPoint>,
     total_steps: u64,
 }
 
@@ -47,8 +50,7 @@ impl ChipletGymEnv {
             episode_len,
             steps_in_episode: 0,
             last_eval: None,
-            best_reward: f64::NEG_INFINITY,
-            best_point: None,
+            best: BestTracker::new(),
             total_steps: 0,
         }
     }
@@ -83,23 +85,18 @@ impl ChipletGymEnv {
     }
 
     /// Evaluate `action` (a 14-head MultiDiscrete sample), update state.
+    /// The caller sees the terminal observation first (gym semantics);
+    /// auto-reset bookkeeping happens in [`ChipletGymEnv::reset`].
     pub fn step(&mut self, action: &[usize]) -> Step {
         assert_eq!(action.len(), N_HEADS);
         let point = self.space.decode(action);
         let eval = evaluate(&self.calib, &point);
-        if eval.reward > self.best_reward {
-            self.best_reward = eval.reward;
-            self.best_point = Some(point);
-        }
+        self.best.offer(eval.reward, || point);
         self.last_eval = Some(eval);
         self.steps_in_episode += 1;
         self.total_steps += 1;
         let done = self.steps_in_episode >= self.episode_len;
         let obs = self.observation();
-        if done {
-            // auto-reset bookkeeping happens in reset(); the caller sees
-            // the terminal observation first (gym semantics).
-        }
         Step { obs, reward: eval.reward, done, eval }
     }
 
@@ -125,7 +122,7 @@ impl ChipletGymEnv {
 
     /// Best (reward, design point) discovered so far.
     pub fn best(&self) -> Option<(f64, &DesignPoint)> {
-        self.best_point.as_ref().map(|p| (self.best_reward, p))
+        self.best.best()
     }
 
     pub fn total_steps(&self) -> u64 {
@@ -144,20 +141,13 @@ impl ChipletGymEnv {
     /// Merge another environment's best-so-far (and step count) into this
     /// one. Used when rollouts run on [`crate::gym::VecEnv`] forks of
     /// this env: the forks' discoveries flow back to the prototype. NaN
-    /// rewards never displace a real best (total-order comparison).
+    /// rewards never displace a real best ([`BestTracker::merge`] — the
+    /// optimizer portfolio's argmax semantics, one tested code path).
     /// `other`'s step count is added in full — pass forks (zeroed
     /// counters), not clones, or steps double-count.
     pub fn merge_best(&mut self, other: &ChipletGymEnv) {
         self.total_steps += other.total_steps;
-        if let Some(ref point) = other.best_point {
-            let takes = self.best_point.is_none()
-                || crate::util::stats::nan_least_cmp(other.best_reward, self.best_reward)
-                    .is_gt();
-            if takes && !other.best_reward.is_nan() {
-                self.best_reward = other.best_reward;
-                self.best_point = Some(point.clone());
-            }
-        }
+        self.best.merge(&other.best);
     }
 
     /// Evaluate a raw action without advancing the episode (used by SA

@@ -101,22 +101,17 @@ impl VecEnv {
         out
     }
 
-    /// Best (reward, design point) across all environments. NaN rewards
-    /// can never win (total-order comparison, NaN sorts lowest).
+    /// Best (reward, design point) across all environments, folded
+    /// through the shared NaN-safe tracker (NaN rewards can never win).
     pub fn best(&self) -> Option<(f64, &DesignPoint)> {
-        let mut best: Option<(f64, &DesignPoint)> = None;
+        let mut tracker: crate::util::stats::BestTracker<&DesignPoint> =
+            crate::util::stats::BestTracker::new();
         for env in &self.envs {
             if let Some((r, p)) = env.best() {
-                let replace = match best {
-                    None => !r.is_nan(),
-                    Some((cur, _)) => crate::util::stats::nan_least_cmp(r, cur).is_gt(),
-                };
-                if replace {
-                    best = Some((r, p));
-                }
+                tracker.offer(r, || p);
             }
         }
-        best
+        tracker.into_best()
     }
 
     /// Total environment transitions across all envs.

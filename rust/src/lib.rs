@@ -30,10 +30,13 @@
 //!   10-dim observation, reward `r = αT − βC − γE` (eq. 17); plus
 //!   [`gym::vec_env`], the batched K-env layer (`VecEnv::step_batch`)
 //!   feeding the PPO rollout buffer K transitions per call.
-//! * [`opt`] — simulated annealing (Alg. 2), random search, the combined
-//!   Alg. 1 driver, and [`opt::parallel`] — the multi-threaded Alg. 1
-//!   fan-out (`--jobs N`, bit-identical to sequential at any thread
-//!   count).
+//! * [`opt`] — the optimizer portfolio over the unified search core
+//!   ([`opt::search`]: `Objective`/`SearchDriver` abstractions, shared
+//!   `BestTracker`/`SearchBudget`/trace recording): simulated annealing
+//!   (Alg. 2), random search, a genetic algorithm, greedy hill-climbing
+//!   with restarts, the combined Alg. 1 driver, and [`opt::parallel`] —
+//!   the multi-threaded portfolio fan-out (`--jobs N`, bit-identical to
+//!   sequential at any thread count).
 //! * [`scenario`] — declarative design-space scenarios (workload, tech
 //!   node, packaging, `Calib` overrides, optimizer budget; TOML/JSON
 //!   loadable), a registry of named built-ins, and the `sweep` engine

@@ -3,6 +3,10 @@
 //! Subcommands:
 //!   optimize   Algorithm 1: N SA instances + N PPO agents, argmax.
 //!   sa         Simulated annealing only (no artifacts needed).
+//!   ga         Genetic algorithm only (no artifacts needed).
+//!   greedy     Greedy hill-climbing with random restarts (no artifacts).
+//!   portfolio  SA + GA + greedy per seed, exhaustive argmax (offline
+//!              Alg. 1 over the non-RL portfolio).
 //!   sweep      Scenario sweep: optimize each scenario, emit per-scenario
 //!              CSVs + a cross-scenario Pareto frontier (offline).
 //!   ppo        Train one PPO agent, print the convergence trace.
@@ -10,7 +14,8 @@
 //!   mlperf     Fig. 12 comparison: chiplet systems vs monolithic GPU.
 //!   info       Show artifact manifest + PJRT platform.
 //!
-//! Common flags: --case i|ii, --seeds 0,1,2, --sa-iters N,
+//! Common flags: --case i|ii, --seeds 0,1,2, --sa-iters N (also the
+//! evaluation budget GA/greedy are matched to), --ga-pop N,
 //! --jobs N (parallel workers; 0 = all cores, results are
 //! bit-identical at any value), --timesteps N,
 //! --alpha/--beta/--gamma, --config path.json,
@@ -25,8 +30,12 @@ use chiplet_gym::cost::{evaluate, Calib};
 use chiplet_gym::gym::ChipletGymEnv;
 use chiplet_gym::model::space::{DesignSpace, N_HEADS};
 use chiplet_gym::opt::combined::CombinedConfig;
-use chiplet_gym::opt::parallel::{combined_optimize_par, sa_only_optimize_par, worker_count};
-use chiplet_gym::opt::sa::simulated_annealing;
+use chiplet_gym::opt::parallel::{
+    combined_optimize_par, portfolio_optimize_par, sa_only_optimize_par, worker_count,
+};
+use chiplet_gym::opt::sa::{simulated_annealing, SaConfig};
+use chiplet_gym::opt::search::{DriverConfig, PortfolioMember};
+use chiplet_gym::report;
 use chiplet_gym::rl::{train_ppo, PpoConfig};
 use chiplet_gym::runtime::Engine;
 use chiplet_gym::scenario::sweep::{run_sweep, BudgetOverride, SweepConfig};
@@ -157,6 +166,77 @@ fn cmd_sa(cfg: &RunConfig) {
     }
 }
 
+/// The non-RL portfolio member list a `ga` / `greedy` / `portfolio`
+/// subcommand runs: every driver evaluation-budget-matched to
+/// `--sa-iters`, every member fanned over `--seeds`.
+fn portfolio_members(cfg: &RunConfig, which: &str) -> Vec<PortfolioMember> {
+    let evals = cfg.sa.iterations;
+    // SA honors the CLI's --sa-temp/--sa-step; GA/greedy come from the
+    // same budget-matched constructors the scenario layer uses.
+    let sa = DriverConfig::Sa(SaConfig { trace_every: 0, ..cfg.sa });
+    let ga = DriverConfig::ga_with_budget(evals, cfg.ga_population);
+    let greedy = DriverConfig::greedy_with_budget(evals);
+    let drivers = match which {
+        "ga" => vec![ga],
+        "greedy" => vec![greedy],
+        // `optimize --with-portfolio` extras: the combined driver already
+        // runs its own SA seeds, so only GA + greedy join
+        "extras" => vec![ga, greedy],
+        _ => vec![sa, ga, greedy],
+    };
+    drivers
+        .into_iter()
+        .map(|driver| PortfolioMember::new(driver, cfg.sa_seeds.clone()))
+        .collect()
+}
+
+/// Surface a bad `--ga-pop` as a CLI error instead of a degenerate GA
+/// (fit_budget clamps, but a typo deserves a message, not silence).
+fn check_ga_pop(cfg: &RunConfig) -> Result<()> {
+    if cfg.ga_population < 4 {
+        bail!(
+            "--ga-pop {} is too small: the GA needs a population of at least 4",
+            cfg.ga_population
+        );
+    }
+    Ok(())
+}
+
+fn cmd_portfolio(cfg: &RunConfig, which: &str) -> Result<()> {
+    if which != "greedy" {
+        check_ga_pop(cfg)?;
+    }
+    let space = cfg.space();
+    let members = portfolio_members(cfg, which);
+    let work_items: usize = members.iter().map(|m| m.seeds.len()).sum();
+    println!(
+        "{which}: {} optimizer instance(s), {:.0e}-eval budget each, \
+         {} worker threads (--jobs {})",
+        work_items,
+        cfg.sa.iterations as f64,
+        worker_count(cfg.jobs, work_items),
+        cfg.jobs
+    );
+    let t0 = std::time::Instant::now();
+    let out = portfolio_optimize_par(space, &cfg.calib, &members, cfg.jobs);
+    for c in &out.candidates {
+        println!("  {:>7} seed {:3}: {:.2}", c.source, c.seed, c.eval.reward);
+    }
+    println!(
+        "winner: {} seed {} @ {:.2} ({:.1}s)",
+        out.best.source,
+        out.best.seed,
+        out.best.eval.reward,
+        t0.elapsed().as_secs_f64()
+    );
+    std::fs::create_dir_all(&cfg.out_dir)?;
+    let path = std::path::Path::new(&cfg.out_dir).join(format!("portfolio_{which}.csv"));
+    report::csv::write_candidates_csv(&path, &space, &out.candidates)?;
+    println!("wrote {}", path.display());
+    print_design(&space, &cfg.calib, &out.best.action);
+    Ok(())
+}
+
 /// Surface a bad `--n-envs` as a CLI error (train_ppo asserts the same
 /// invariant, but a user typo should not abort with a backtrace).
 fn check_n_envs(ppo: &PpoConfig) -> Result<()> {
@@ -201,7 +281,7 @@ fn cmd_ppo(cfg: &RunConfig) -> Result<()> {
     Ok(())
 }
 
-fn cmd_optimize(cfg: &RunConfig) -> Result<()> {
+fn cmd_optimize(cfg: &RunConfig, args: &Args) -> Result<()> {
     let engine = Engine::discover()?;
     let mut ppo = PpoConfig::from_manifest(&engine);
     ppo.total_timesteps = cfg.ppo_total_timesteps;
@@ -209,15 +289,25 @@ fn cmd_optimize(cfg: &RunConfig) -> Result<()> {
     ppo.ent_coef = cfg.ppo_ent_coef;
     ppo.n_envs = cfg.ppo_n_envs;
     check_n_envs(&ppo)?;
+    let extra = if args.flag("with-portfolio") {
+        check_ga_pop(cfg)?;
+        portfolio_members(cfg, "extras")
+    } else {
+        Vec::new()
+    };
     let combined = CombinedConfig {
         sa: cfg.sa,
         ppo,
         sa_seeds: cfg.sa_seeds.clone(),
         rl_seeds: cfg.rl_seeds.clone(),
+        extra,
     };
+    let non_rl = combined.sa_seeds.len()
+        + combined.extra.iter().map(|m| m.seeds.len()).sum::<usize>();
     println!(
-        "SA fan-out: {} worker threads (--jobs {})",
-        worker_count(cfg.jobs, combined.sa_seeds.len()),
+        "non-RL fan-out: {} instance(s) across {} worker threads (--jobs {})",
+        non_rl,
+        worker_count(cfg.jobs, non_rl),
         cfg.jobs
     );
     let t0 = std::time::Instant::now();
@@ -290,13 +380,20 @@ fn cmd_sweep(cfg: &RunConfig, args: &Args) -> Result<()> {
     if let Some(path) = args.get("scenario-file") {
         scenarios.push(Scenario::load(std::path::Path::new(path))?);
     }
-    // --sa-iters / --seeds override that budget knob in every scenario;
-    // knobs not given keep each scenario's own value.
+    // --sa-iters / --seeds / --ga-pop override that budget knob in every
+    // scenario; knobs not given keep each scenario's own value.
+    if args.get("ga-pop").is_some() {
+        check_ga_pop(cfg)?;
+    }
     let budget = BudgetOverride {
         sa_iterations: args.get("sa-iters").map(|_| cfg.sa.iterations),
         sa_seeds: args.get("seeds").map(|_| cfg.sa_seeds.clone()),
+        ga_population: args.get("ga-pop").map(|_| cfg.ga_population),
     };
-    let budget = if budget.sa_iterations.is_some() || budget.sa_seeds.is_some() {
+    let budget = if budget.sa_iterations.is_some()
+        || budget.sa_seeds.is_some()
+        || budget.ga_population.is_some()
+    {
         Some(budget)
     } else {
         None
@@ -407,8 +504,11 @@ fn main() -> Result<()> {
     cfg.apply_args(&args);
 
     match args.command.as_deref() {
-        Some("optimize") => cmd_optimize(&cfg)?,
+        Some("optimize") => cmd_optimize(&cfg, &args)?,
         Some("sa") => cmd_sa(&cfg),
+        Some("ga") => cmd_portfolio(&cfg, "ga")?,
+        Some("greedy") => cmd_portfolio(&cfg, "greedy")?,
+        Some("portfolio") => cmd_portfolio(&cfg, "portfolio")?,
         Some("sweep") => cmd_sweep(&cfg, &args)?,
         Some("ppo") => cmd_ppo(&cfg)?,
         Some("eval") => cmd_eval(&cfg, &args),
@@ -419,9 +519,10 @@ fn main() -> Result<()> {
                 eprintln!("unknown command {cmd:?}\n");
             }
             eprintln!(
-                "usage: chiplet-gym <optimize|sa|sweep|ppo|eval|mlperf|info> \
-                 [--case i|ii] [--seeds 0,1,..] [--sa-iters N] \
-                 [--jobs N (0 = all cores)] \
+                "usage: chiplet-gym <optimize|sa|ga|greedy|portfolio|sweep|ppo|eval|mlperf|info> \
+                 [--case i|ii] [--seeds 0,1,..] [--sa-iters N (= eval budget)] \
+                 [--ga-pop N] [--jobs N (0 = all cores)] \
+                 [optimize: --with-portfolio (add GA+greedy members)] \
                  [--timesteps N] [--episode-len N] [--ent-coef X] \
                  [--n-envs K (VecEnv rollout width)] \
                  [--alpha X --beta X --gamma X] [--config file.json] \

@@ -1,19 +1,26 @@
-//! Algorithm 1 — the combined optimizer.
+//! Algorithm 1 — the combined optimizer, generalized to a portfolio.
 //!
-//! Runs N_SA simulated-annealing instances and N_RL PPO agents with
-//! different seeds, then performs the exhaustive search over all their
-//! outputs (the paper's final optimizer: "20 SAs and 20 trained RL
-//! agents ... around 10 mins").
+//! The paper runs N_SA simulated-annealing instances and N_RL PPO agents
+//! with different seeds, then performs the exhaustive search over all
+//! their outputs (lines 4–13: "20 SAs and 20 trained RL agents ...
+//! around 10 mins"). Since the `opt::search` refactor the non-RL side is
+//! an arbitrary list of [`PortfolioMember`]s — SA by default, plus GA /
+//! greedy-restart / random via [`CombinedConfig::extra`] — and every
+//! instance flows through the same [`Candidate`] pipeline into the same
+//! [`select_best`] argmax the CSV reports and the parallel fan-out
+//! consume.
 
 use anyhow::Result;
 
-use crate::cost::{evaluate, Calib, Evaluation};
-use crate::gym::ChipletGymEnv;
+use crate::cost::{Calib, Evaluation};
 use crate::model::space::{DesignSpace, N_HEADS};
-use crate::rl::{train_ppo, PpoConfig};
+use crate::rl::PpoConfig;
 use crate::runtime::Engine;
 
-use super::sa::{simulated_annealing, SaConfig};
+use super::sa::SaConfig;
+use super::search::{
+    CostObjective, DriverConfig, Objective, PortfolioMember, PpoDriver, SearchDriver,
+};
 
 /// Configuration of Algorithm 1.
 #[derive(Clone, Debug)]
@@ -22,6 +29,10 @@ pub struct CombinedConfig {
     pub ppo: PpoConfig,
     pub sa_seeds: Vec<u64>,
     pub rl_seeds: Vec<u64>,
+    /// Additional non-RL portfolio members (GA, greedy, random), each
+    /// fanned out per seed exactly like the SA instances. Empty by
+    /// default, which keeps the classic Alg. 1 output bit-identical.
+    pub extra: Vec<PortfolioMember>,
 }
 
 /// One candidate produced by an optimizer instance.
@@ -59,47 +70,99 @@ pub fn select_best(candidates: &[Candidate]) -> Option<&Candidate> {
         .max_by(|a, b| reward_cmp(a.eval.reward, b.eval.reward))
 }
 
-/// Run Algorithm 1: SA instances, PPO agents, exhaustive argmax.
+/// Run every `(driver, seed)` instance of `members` sequentially,
+/// returning candidates in member-then-seed order — the canonical order
+/// the parallel fan-out reproduces slot for slot.
+pub fn portfolio_candidates(
+    space: &DesignSpace,
+    calib: &Calib,
+    members: &[PortfolioMember],
+) -> Vec<Candidate> {
+    let mut out = Vec::new();
+    for m in members {
+        for &seed in &m.seeds {
+            let mut obj = CostObjective::new(space, calib);
+            let trace = m.driver.run(space, &mut obj, seed);
+            out.push(Candidate {
+                source: m.driver.name().into(),
+                seed,
+                action: trace.best_action,
+                eval: trace.best_eval,
+            });
+        }
+    }
+    out
+}
+
+/// Non-RL portfolio optimization: every member's instances plus the
+/// exhaustive argmax (no artifacts/engine needed). The parallel
+/// counterpart is `opt::parallel::portfolio_optimize_par`.
+pub fn portfolio_optimize(
+    space: DesignSpace,
+    calib: &Calib,
+    members: &[PortfolioMember],
+) -> OptOutcome {
+    let candidates = portfolio_candidates(&space, calib, members);
+    let best = select_best(&candidates)
+        .expect("at least one portfolio instance")
+        .clone();
+    OptOutcome { best, candidates }
+}
+
+/// Lines 8–11 of Algorithm 1: the RL trials, via the [`PpoDriver`]
+/// portfolio wrapper. Each seed contributes two candidates: the trained
+/// agent's env-argmax (`RL`) and the deterministic final policy
+/// (`RL-det`) — the exhaustive search is over everything the agents
+/// produce. Shared by the sequential and parallel combined drivers.
+pub fn rl_candidates(
+    engine: &Engine,
+    space: &DesignSpace,
+    calib: &Calib,
+    cfg: &CombinedConfig,
+) -> Result<Vec<Candidate>> {
+    let driver = PpoDriver { engine, ppo: cfg.ppo, calib: calib.clone() };
+    let mut out = Vec::new();
+    for &seed in &cfg.rl_seeds {
+        let mut obj = CostObjective::new(space, calib);
+        let trace = driver.search(space, &mut obj, seed)?;
+        out.push(Candidate {
+            source: "RL".into(),
+            seed,
+            action: trace.best_action,
+            eval: trace.best_eval,
+        });
+        if let Some(det) = trace.final_policy_action {
+            let det_eval = obj.evaluate(&det);
+            out.push(Candidate { source: "RL-det".into(), seed, action: det, eval: det_eval });
+        }
+    }
+    Ok(out)
+}
+
+/// The non-RL member list of a combined run: the SA instances first
+/// (tracing off is the caller's choice via `cfg.sa`), then the extras.
+pub fn combined_members(cfg: &CombinedConfig) -> Vec<PortfolioMember> {
+    let mut members = vec![PortfolioMember::new(
+        DriverConfig::Sa(cfg.sa),
+        cfg.sa_seeds.clone(),
+    )];
+    members.extend(cfg.extra.iter().cloned());
+    members
+}
+
+/// Run Algorithm 1: SA instances (+ any extra portfolio members), PPO
+/// agents, exhaustive argmax.
 pub fn combined_optimize(
     engine: &Engine,
     space: DesignSpace,
     calib: &Calib,
     cfg: &CombinedConfig,
 ) -> Result<OptOutcome> {
-    let mut candidates = Vec::new();
-
-    // lines 4–7: SA trials
-    for &seed in &cfg.sa_seeds {
-        let trace = simulated_annealing(&space, calib, &cfg.sa, seed);
-        candidates.push(Candidate {
-            source: "SA".into(),
-            seed,
-            action: trace.best_action,
-            eval: trace.best_eval,
-        });
-    }
+    // lines 4–7: the non-RL trials
+    let mut candidates = portfolio_candidates(&space, calib, &combined_members(cfg));
 
     // lines 8–11: RL trials
-    for &seed in &cfg.rl_seeds {
-        let mut env = ChipletGymEnv::new(space, calib.clone(), cfg.ppo.episode_len);
-        let trace = train_ppo(engine, &mut env, &cfg.ppo, seed)?;
-        let eval = evaluate(calib, &space.decode(&trace.best_action));
-        candidates.push(Candidate {
-            source: "RL".into(),
-            seed,
-            action: trace.best_action,
-            eval,
-        });
-        // The final deterministic policy is a second candidate (the
-        // exhaustive search is over everything the agents produce).
-        let det_eval = evaluate(calib, &space.decode(&trace.final_policy_action));
-        candidates.push(Candidate {
-            source: "RL-det".into(),
-            seed,
-            action: trace.final_policy_action,
-            eval: det_eval,
-        });
-    }
+    candidates.extend(rl_candidates(engine, &space, calib, cfg)?);
 
     // line 13: exhaustive search over the outcomes
     let best = select_best(&candidates)
@@ -117,25 +180,15 @@ pub fn sa_only_optimize(
     sa: &SaConfig,
     seeds: &[u64],
 ) -> OptOutcome {
-    let mut candidates = Vec::new();
-    for &seed in seeds {
-        let trace = simulated_annealing(&space, calib, sa, seed);
-        candidates.push(Candidate {
-            source: "SA".into(),
-            seed,
-            action: trace.best_action,
-            eval: trace.best_eval,
-        });
-    }
-    let best = select_best(&candidates)
-        .expect("at least one SA instance")
-        .clone();
-    OptOutcome { best, candidates }
+    let members = [PortfolioMember::new(DriverConfig::Sa(*sa), seeds.to_vec())];
+    portfolio_optimize(space, calib, &members)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cost::evaluate;
+    use crate::opt::search::{GaConfig, GreedyConfig};
 
     fn candidate(seed: u64, reward: f64) -> Candidate {
         let space = DesignSpace::case_i();
@@ -206,5 +259,59 @@ mod tests {
         let few = sa_only_optimize(space, &calib, &cfg, &[0, 1]);
         let many = sa_only_optimize(space, &calib, &cfg, &[0, 1, 2, 3, 4, 5]);
         assert!(many.best.eval.reward >= few.best.eval.reward);
+    }
+
+    #[test]
+    fn sa_only_is_bit_identical_to_direct_sa_runs() {
+        // The portfolio pipeline must not perturb the classic SA-only
+        // path: same candidates, same order, same bits.
+        use crate::opt::sa::simulated_annealing;
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let cfg = SaConfig { iterations: 1_500, trace_every: 0, ..SaConfig::default() };
+        let seeds = [3u64, 1, 4];
+        let out = sa_only_optimize(space, &calib, &cfg, &seeds);
+        assert_eq!(out.candidates.len(), seeds.len());
+        for (c, &seed) in out.candidates.iter().zip(seeds.iter()) {
+            let t = simulated_annealing(&space, &calib, &cfg, seed);
+            assert_eq!(c.source, "SA");
+            assert_eq!(c.seed, seed);
+            assert_eq!(c.action, t.best_action);
+            assert_eq!(c.eval.reward.to_bits(), t.best_eval.reward.to_bits());
+        }
+    }
+
+    #[test]
+    fn portfolio_candidates_preserve_member_then_seed_order() {
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let sa = SaConfig { iterations: 400, trace_every: 0, ..SaConfig::default() };
+        let members = [
+            PortfolioMember::new(DriverConfig::Sa(sa), vec![0, 1]),
+            PortfolioMember::new(DriverConfig::Ga(GaConfig::with_budget(400)), vec![5]),
+            PortfolioMember::new(
+                DriverConfig::Greedy(GreedyConfig { evaluations: 400, trace_every: 0 }),
+                vec![7, 8],
+            ),
+        ];
+        let out = portfolio_optimize(space, &calib, &members);
+        let tags: Vec<(String, u64)> =
+            out.candidates.iter().map(|c| (c.source.clone(), c.seed)).collect();
+        assert_eq!(
+            tags,
+            vec![
+                ("SA".into(), 0),
+                ("SA".into(), 1),
+                ("GA".into(), 5),
+                ("greedy".into(), 7),
+                ("greedy".into(), 8),
+            ]
+        );
+        let max = out
+            .candidates
+            .iter()
+            .map(|c| c.eval.reward)
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(out.best.eval.reward, max);
     }
 }

@@ -1,19 +1,26 @@
-//! Non-RL optimizers, the combined Alg. 1 driver, and its parallel
-//! fan-out ([`parallel`]).
+//! The optimizer layer: the unified search core ([`search`]), the
+//! portfolio of non-RL drivers (SA, random, GA, greedy), the combined
+//! Alg. 1 driver, and its parallel fan-out ([`parallel`]).
 
 pub mod combined;
 pub mod exhaustive;
 pub mod parallel;
 pub mod random_search;
 pub mod sa;
+pub mod search;
 
 pub use combined::{
-    combined_optimize, reward_cmp, sa_only_optimize, select_best, Candidate, CombinedConfig,
-    OptOutcome,
+    combined_optimize, portfolio_candidates, portfolio_optimize, reward_cmp, sa_only_optimize,
+    select_best, Candidate, CombinedConfig, OptOutcome,
 };
 pub use exhaustive::{exhaustive_projected, ExhaustiveOutcome, PinRule};
 pub use parallel::{
-    combined_optimize_par, effective_jobs, parallel_map, sa_only_optimize_par, worker_count,
+    combined_optimize_par, effective_jobs, parallel_map, portfolio_candidates_par,
+    portfolio_optimize_par, sa_only_optimize_par, worker_count,
 };
-pub use random_search::random_search;
+pub use random_search::{random_search, RandomConfig};
 pub use sa::{simulated_annealing, simulated_annealing_with, SaConfig, SaTrace};
+pub use search::{
+    BestTracker, CachedObjective, CostObjective, DriverConfig, FnObjective, GaConfig, GreedyConfig,
+    Objective, PortfolioMember, PpoDriver, SearchBudget, SearchDriver, SearchTrace, TraceRecorder,
+};

@@ -3,35 +3,37 @@
 //!
 //! The paper's combined optimizer runs "20 SAs and 20 trained RL agents";
 //! the sequential driver in [`super::combined`] leaves every core but one
-//! idle. Each SA instance is a pure function of `(space, calib, cfg,
-//! seed)`, so this module shards the seed list across
+//! idle. Each non-RL optimizer instance is a pure function of `(space,
+//! calib, driver, seed)`, so this module flattens the portfolio into
+//! `(DriverConfig, seed)` work items, shards them across
 //! `std::thread::scope` workers (capped at `available_parallelism`),
-//! writes each seed's [`Candidate`] into its pre-assigned slot, and runs
+//! writes each item's [`Candidate`] into its pre-assigned slot, and runs
 //! the same [`select_best`] argmax over the same candidate order as the
 //! sequential path — the output is therefore bit-identical at any thread
 //! count, which `tests/parallel_determinism.rs` proves for `--jobs`
-//! 1/2/8.
+//! 1/2/8 across SA, GA and greedy.
 //!
-//! The sharding itself is generic ([`parallel_map`]): the SA fan-out
-//! maps over seeds, and the scenario sweep engine
+//! The sharding itself is generic ([`parallel_map`]): the portfolio
+//! fan-out maps over (driver, seed) items, and the scenario sweep engine
 //! (`scenario::sweep::run_sweep`) maps over whole scenarios through the
 //! same pool.
 //!
 //! PPO agents stay on the caller's thread: the PJRT client is not `Sync`,
-//! and each HLO call is already internally parallel. The SA fan-out is
-//! where the wall-clock lives for the headless paths (see
-//! `benches/perf_parallel.rs`).
+//! and each HLO call is already internally parallel. The non-RL fan-out
+//! is where the wall-clock lives for the headless paths (see
+//! `benches/perf_parallel.rs` and `benches/perf_search.rs`).
 
 use anyhow::Result;
 
-use crate::cost::{evaluate, Calib};
-use crate::gym::ChipletGymEnv;
+use crate::cost::Calib;
 use crate::model::space::DesignSpace;
-use crate::rl::train_ppo;
 use crate::runtime::Engine;
 
-use super::combined::{select_best, Candidate, CombinedConfig, OptOutcome};
-use super::sa::{simulated_annealing, SaConfig};
+use super::combined::{
+    combined_members, rl_candidates, select_best, Candidate, CombinedConfig, OptOutcome,
+};
+use super::sa::SaConfig;
+use super::search::{CostObjective, DriverConfig, PortfolioMember};
 
 /// Resolve a requested `--jobs` value into a worker count: `0` means
 /// "all available cores"; explicit requests are capped at
@@ -51,10 +53,10 @@ fn chunk_size(jobs: usize, work_items: usize) -> usize {
     work_items.div_ceil(jobs)
 }
 
-/// Number of worker threads [`sa_only_optimize_par`] /
+/// Number of worker threads [`portfolio_optimize_par`] /
 /// [`combined_optimize_par`] will actually spawn for `work_items`
-/// seeds: the seeds are split into `chunk_size` pieces, so the
-/// spawned count can be below `effective_jobs` (e.g. 6 seeds at jobs 4
+/// instances: the items are split into `chunk_size` pieces, so the
+/// spawned count can be below `effective_jobs` (e.g. 6 items at jobs 4
 /// → chunks of 2 → 3 workers). Use this for user-facing "N worker
 /// threads" messages.
 pub fn worker_count(requested: usize, work_items: usize) -> usize {
@@ -70,9 +72,10 @@ pub fn worker_count(requested: usize, work_items: usize) -> usize {
 ///
 /// Each worker owns a pre-assigned contiguous slot range, so the output
 /// is positionally identical to `items.iter().map(f).collect()`
-/// regardless of scheduling — the order-determinism the SA fan-out and
-/// the scenario sweep both build their bit-for-bit guarantees on. With
-/// `jobs <= 1` (or a single item) no threads are spawned at all.
+/// regardless of scheduling — the order-determinism the portfolio
+/// fan-out and the scenario sweep both build their bit-for-bit
+/// guarantees on. With `jobs <= 1` (or a single item) no threads are
+/// spawned at all.
 pub fn parallel_map<T, R, F>(items: &[T], jobs: usize, f: F) -> Vec<R>
 where
     T: Sync,
@@ -102,28 +105,47 @@ where
         .collect()
 }
 
-fn sa_candidate(space: &DesignSpace, calib: &Calib, sa: &SaConfig, seed: u64) -> Candidate {
-    let trace = simulated_annealing(space, calib, sa, seed);
-    Candidate {
-        source: "SA".into(),
-        seed,
-        action: trace.best_action,
-        eval: trace.best_eval,
-    }
-}
-
-/// Run one SA instance per seed across up to `jobs` worker threads.
-/// Results come back in seed-list order ([`parallel_map`]), so the
-/// candidate list is identical to the sequential loop's regardless of
-/// scheduling.
-fn sa_candidates_par(
-    space: DesignSpace,
+/// Run every `(driver, seed)` instance of `members` across up to `jobs`
+/// worker threads. Work items flatten in member-then-seed order and
+/// results come back in that order ([`parallel_map`]), so the candidate
+/// list is bit-identical to `opt::combined::portfolio_candidates`
+/// regardless of scheduling.
+pub fn portfolio_candidates_par(
+    space: &DesignSpace,
     calib: &Calib,
-    sa: &SaConfig,
-    seeds: &[u64],
+    members: &[PortfolioMember],
     jobs: usize,
 ) -> Vec<Candidate> {
-    parallel_map(seeds, jobs, |&seed| sa_candidate(&space, calib, sa, seed))
+    let work: Vec<(DriverConfig, u64)> = members
+        .iter()
+        .flat_map(|m| m.seeds.iter().map(move |&seed| (m.driver, seed)))
+        .collect();
+    parallel_map(&work, jobs, |(driver, seed)| {
+        let mut obj = CostObjective::new(space, calib);
+        let trace = driver.run(space, &mut obj, *seed);
+        Candidate {
+            source: driver.name().into(),
+            seed: *seed,
+            action: trace.best_action,
+            eval: trace.best_eval,
+        }
+    })
+}
+
+/// Parallel non-RL portfolio optimization (no artifacts/engine needed).
+/// Bit-identical to [`super::combined::portfolio_optimize`] at any
+/// `jobs` value.
+pub fn portfolio_optimize_par(
+    space: DesignSpace,
+    calib: &Calib,
+    members: &[PortfolioMember],
+    jobs: usize,
+) -> OptOutcome {
+    let candidates = portfolio_candidates_par(&space, calib, members, jobs);
+    let best = select_best(&candidates)
+        .expect("at least one portfolio instance")
+        .clone();
+    OptOutcome { best, candidates }
 }
 
 /// Parallel SA-only Algorithm 1 (no artifacts/engine needed). Bit-identical
@@ -135,16 +157,14 @@ pub fn sa_only_optimize_par(
     seeds: &[u64],
     jobs: usize,
 ) -> OptOutcome {
-    let candidates = sa_candidates_par(space, calib, sa, seeds, jobs);
-    let best = select_best(&candidates)
-        .expect("at least one SA instance")
-        .clone();
-    OptOutcome { best, candidates }
+    let members = [PortfolioMember::new(DriverConfig::Sa(*sa), seeds.to_vec())];
+    portfolio_optimize_par(space, calib, &members, jobs)
 }
 
-/// Parallel Algorithm 1: SA seeds fan out across `jobs` threads, PPO
-/// agents run on the calling thread (the engine is not `Sync`), and the
-/// exhaustive argmax runs over the candidates in the same order as
+/// Parallel Algorithm 1: the non-RL portfolio (SA seeds + any extras)
+/// fans out across `jobs` threads, PPO agents run on the calling thread
+/// (the engine is not `Sync`), and the exhaustive argmax runs over the
+/// candidates in the same order as
 /// [`super::combined::combined_optimize`] — so the outcome is
 /// bit-identical to the sequential driver.
 pub fn combined_optimize_par(
@@ -154,28 +174,11 @@ pub fn combined_optimize_par(
     cfg: &CombinedConfig,
     jobs: usize,
 ) -> Result<OptOutcome> {
-    // lines 4-7: SA trials, sharded across workers
-    let mut candidates = sa_candidates_par(space, calib, &cfg.sa, &cfg.sa_seeds, jobs);
+    // lines 4-7: non-RL trials, sharded across workers
+    let mut candidates = portfolio_candidates_par(&space, calib, &combined_members(cfg), jobs);
 
     // lines 8-11: RL trials (sequential; each HLO call is itself parallel)
-    for &seed in &cfg.rl_seeds {
-        let mut env = ChipletGymEnv::new(space, calib.clone(), cfg.ppo.episode_len);
-        let trace = train_ppo(engine, &mut env, &cfg.ppo, seed)?;
-        let eval = evaluate(calib, &space.decode(&trace.best_action));
-        candidates.push(Candidate {
-            source: "RL".into(),
-            seed,
-            action: trace.best_action,
-            eval,
-        });
-        let det_eval = evaluate(calib, &space.decode(&trace.final_policy_action));
-        candidates.push(Candidate {
-            source: "RL-det".into(),
-            seed,
-            action: trace.final_policy_action,
-            eval: det_eval,
-        });
-    }
+    candidates.extend(rl_candidates(engine, &space, calib, cfg)?);
 
     // line 13: exhaustive search over the outcomes
     let best = select_best(&candidates)
@@ -187,6 +190,7 @@ pub fn combined_optimize_par(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::opt::search::{GaConfig, GreedyConfig};
 
     #[test]
     fn effective_jobs_caps_and_floors() {
@@ -239,5 +243,29 @@ mod tests {
         assert_eq!(seq.best.action, par.best.action);
         assert_eq!(seq.best.seed, par.best.seed);
         assert_eq!(seq.candidates.len(), par.candidates.len());
+    }
+
+    #[test]
+    fn parallel_mixed_portfolio_matches_sequential_small() {
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let sa = SaConfig { iterations: 500, trace_every: 0, ..SaConfig::default() };
+        let members = [
+            PortfolioMember::new(DriverConfig::Sa(sa), vec![0, 1]),
+            PortfolioMember::new(DriverConfig::Ga(GaConfig::with_budget(500)), vec![0, 1]),
+            PortfolioMember::new(
+                DriverConfig::Greedy(GreedyConfig { evaluations: 500, trace_every: 0 }),
+                vec![0],
+            ),
+        ];
+        let seq = super::super::combined::portfolio_optimize(space, &calib, &members);
+        let par = portfolio_optimize_par(space, &calib, &members, 4);
+        assert_eq!(seq.candidates.len(), par.candidates.len());
+        for (a, b) in seq.candidates.iter().zip(par.candidates.iter()) {
+            assert_eq!(a.source, b.source);
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(a.action, b.action);
+            assert_eq!(a.eval.reward.to_bits(), b.eval.reward.to_bits());
+        }
     }
 }

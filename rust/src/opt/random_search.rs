@@ -1,13 +1,86 @@
 //! Uniform random search — the ablation baseline the paper contrasts
 //! against ("random search might not result in the optimum point",
-//! Section 1).
+//! Section 1). Since the `opt::search` refactor it is a first-class
+//! [`SearchDriver`], so the portfolio, the parallel fan-out and the
+//! budget-matched GA/greedy comparison tests all drive it through the
+//! same [`Objective`] path as every other optimizer.
 
-use crate::cost::{evaluate, Calib, Evaluation};
+use anyhow::Result;
+
+use crate::cost::{Calib, Evaluation};
 use crate::model::space::{DesignSpace, N_HEADS};
 use crate::util::Rng;
 
+use super::search::{
+    BestTracker, CostObjective, Objective, SearchDriver, SearchTrace, TraceRecorder,
+};
+
+/// Random-search budget: `samples` uniform draws, best-so-far traced
+/// every `trace_every` draws (0 disables tracing).
+#[derive(Clone, Copy, Debug)]
+pub struct RandomConfig {
+    pub samples: usize,
+    pub trace_every: usize,
+}
+
+impl Default for RandomConfig {
+    fn default() -> RandomConfig {
+        RandomConfig { samples: 50_000, trace_every: 1_000 }
+    }
+}
+
+impl RandomConfig {
+    /// Sample `samples` uniform design points against an arbitrary
+    /// objective (at least one draw happens even at `samples == 0`,
+    /// matching the pre-refactor behavior).
+    pub fn run(&self, space: &DesignSpace, obj: &mut dyn Objective, seed: u64) -> SearchTrace {
+        let mut rng = Rng::new(seed);
+        let mut tracker: BestTracker<([usize; N_HEADS], Evaluation)> = BestTracker::new();
+        let mut recorder = TraceRecorder::new(self.trace_every);
+
+        let first_action = space.random_action(&mut rng);
+        let first_eval = obj.evaluate(&first_action);
+        tracker.offer(first_eval.reward, || (first_action, first_eval));
+        for i in 2..=self.samples {
+            let a = space.random_action(&mut rng);
+            let e = obj.evaluate(&a);
+            tracker.offer(e.reward, || (a, e));
+            recorder.record(i, tracker.reward());
+        }
+
+        let (best_action, best_eval) = tracker
+            .into_best()
+            .map(|(_, t)| t)
+            .unwrap_or((first_action, first_eval));
+        SearchTrace {
+            best_action,
+            best_eval,
+            history: recorder.into_history(),
+            evaluations: self.samples.max(1),
+            final_policy_action: None,
+        }
+    }
+}
+
+impl SearchDriver for RandomConfig {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn search(
+        &self,
+        space: &DesignSpace,
+        obj: &mut dyn Objective,
+        seed: u64,
+    ) -> Result<SearchTrace> {
+        Ok(self.run(space, obj, seed))
+    }
+}
+
 /// Sample `samples` uniform design points; return the best (action, eval)
 /// and a best-so-far history sampled every `trace_every` draws.
+/// (Pre-refactor signature, kept for the benches and ablation tests;
+/// identical to [`RandomConfig::run`] over a [`CostObjective`].)
 pub fn random_search(
     space: &DesignSpace,
     calib: &Calib,
@@ -15,27 +88,16 @@ pub fn random_search(
     trace_every: usize,
     seed: u64,
 ) -> (([usize; N_HEADS], Evaluation), Vec<(usize, f64)>) {
-    let mut rng = Rng::new(seed);
-    let mut best_action = space.random_action(&mut rng);
-    let mut best_eval = evaluate(calib, &space.decode(&best_action));
-    let mut history = Vec::new();
-    for i in 2..=samples {
-        let a = space.random_action(&mut rng);
-        let e = evaluate(calib, &space.decode(&a));
-        if e.reward > best_eval.reward {
-            best_eval = e;
-            best_action = a;
-        }
-        if trace_every > 0 && i % trace_every == 0 {
-            history.push((i, best_eval.reward));
-        }
-    }
-    ((best_action, best_eval), history)
+    let cfg = RandomConfig { samples, trace_every };
+    let mut obj = CostObjective::new(space, calib);
+    let t = cfg.run(space, &mut obj, seed);
+    ((t.best_action, t.best_eval), t.history)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cost::evaluate;
 
     #[test]
     fn improves_with_more_samples() {
@@ -54,5 +116,42 @@ mod tests {
         let ((a2, e2), _) = random_search(&space, &calib, 1_000, 0, 9);
         assert_eq!(a1, a2);
         assert_eq!(e1.reward, e2.reward);
+    }
+
+    #[test]
+    fn driver_path_matches_frozen_pre_refactor_loop() {
+        // Bit-identity oracle: the pre-refactor random_search body.
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let (samples, trace_every, seed) = (2_000usize, 100usize, 4u64);
+        let mut rng = Rng::new(seed);
+        let mut best_action = space.random_action(&mut rng);
+        let mut best_eval = evaluate(&calib, &space.decode(&best_action));
+        let mut history = Vec::new();
+        for i in 2..=samples {
+            let a = space.random_action(&mut rng);
+            let e = evaluate(&calib, &space.decode(&a));
+            if e.reward > best_eval.reward {
+                best_eval = e;
+                best_action = a;
+            }
+            if trace_every > 0 && i % trace_every == 0 {
+                history.push((i, best_eval.reward));
+            }
+        }
+        let ((a, e), h) = random_search(&space, &calib, samples, trace_every, seed);
+        assert_eq!(a, best_action);
+        assert_eq!(e.reward.to_bits(), best_eval.reward.to_bits());
+        assert_eq!(h, history);
+    }
+
+    #[test]
+    fn zero_samples_still_draws_once() {
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let ((a, e), h) = random_search(&space, &calib, 0, 10, 1);
+        assert!(e.reward.is_finite());
+        assert!(h.is_empty());
+        assert_eq!(e.reward, evaluate(&calib, &space.decode(&a)).reward);
     }
 }

@@ -6,10 +6,22 @@
 //! modification: the standard Metropolis exponential is replaced by
 //! `rand() < temp / iteration` (Section 5.2.2 explains why — the reward
 //! spans a huge range and the Metropolis exponent over/underflows).
+//!
+//! Since the `opt::search` refactor the walk runs on the shared
+//! [`SearchDriver`]/[`Objective`] path ([`SaConfig::run`]); the RNG
+//! stream, every comparison and the trace sampling are unchanged, so
+//! the output is bit-identical to the pre-refactor implementation
+//! (regression-tested below against a frozen copy of the old loop).
+
+use anyhow::Result;
 
 use crate::cost::{evaluate, Calib, Evaluation};
 use crate::model::space::{DesignSpace, ACTION_DIMS, N_HEADS};
 use crate::util::Rng;
+
+use super::search::{
+    BestTracker, FnObjective, Objective, SearchDriver, SearchTrace, TraceRecorder,
+};
 
 /// SA hyper-parameters (paper: temp 200, step 10, 500K iterations).
 #[derive(Clone, Copy, Debug)]
@@ -33,14 +45,77 @@ impl Default for SaConfig {
     }
 }
 
-/// Result of one SA run.
-#[derive(Clone, Debug)]
-pub struct SaTrace {
-    pub best_action: [usize; N_HEADS],
-    pub best_eval: Evaluation,
-    /// (iteration, best-so-far objective) samples.
-    pub history: Vec<(usize, f64)>,
-    pub evaluations: usize,
+/// Result of one SA run (the shared trace type since the `opt::search`
+/// refactor; `final_policy_action` is always `None` for SA).
+pub type SaTrace = SearchTrace;
+
+impl SaConfig {
+    /// Run Algorithm 2 against an arbitrary [`Objective`].
+    ///
+    /// This is the pre-refactor loop verbatim — same RNG draws in the
+    /// same order (note the short-circuit `||` before the acceptance
+    /// draw), same comparisons, same trace grid — with the bookkeeping
+    /// routed through the shared [`BestTracker`]/[`TraceRecorder`].
+    pub fn run(&self, space: &DesignSpace, obj: &mut dyn Objective, seed: u64) -> SearchTrace {
+        let mut rng = Rng::new(seed);
+
+        // line 4-5: random initial solution
+        let mut current = space.random_action(&mut rng);
+        let init_eval = obj.evaluate(&current);
+        let mut o_curr = init_eval.reward;
+        let fallback = (current, init_eval);
+        let mut tracker: BestTracker<([usize; N_HEADS], Evaluation)> = BestTracker::new();
+        tracker.offer(init_eval.reward, || (current, init_eval));
+        let mut recorder = TraceRecorder::new(self.trace_every);
+        let mut cand = [0usize; N_HEADS];
+
+        for iter in 1..=self.iterations {
+            // line 8: candidate = current + U(-1,1) * step_size, per head
+            for h in 0..N_HEADS {
+                let delta = rng.range_f64(-1.0, 1.0) * self.step_size;
+                let moved = current[h] as f64 + delta;
+                let hi = (ACTION_DIMS[h] - 1) as f64;
+                cand[h] = moved.round().clamp(0.0, hi) as usize;
+            }
+            // line 9: evaluate
+            let eval = obj.evaluate(&cand);
+            let o_cand = eval.reward;
+            // lines 10-12: track the best
+            tracker.offer(o_cand, || (cand, eval));
+            // lines 14-16: modified acceptance — t = temp / iteration
+            let t = self.temperature / iter as f64;
+            if o_cand > o_curr || rng.f64() < t {
+                current = cand;
+                o_curr = o_cand;
+            }
+            recorder.record(iter, tracker.reward());
+        }
+
+        let (best_action, best_eval) =
+            tracker.into_best().map(|(_, t)| t).unwrap_or(fallback);
+        SearchTrace {
+            best_action,
+            best_eval,
+            history: recorder.into_history(),
+            evaluations: self.iterations,
+            final_policy_action: None,
+        }
+    }
+}
+
+impl SearchDriver for SaConfig {
+    fn name(&self) -> &'static str {
+        "SA"
+    }
+
+    fn search(
+        &self,
+        space: &DesignSpace,
+        obj: &mut dyn Objective,
+        seed: u64,
+    ) -> Result<SearchTrace> {
+        Ok(self.run(space, obj, seed))
+    }
 }
 
 /// Run Algorithm 2 against the analytical evaluator.
@@ -71,53 +146,8 @@ pub fn simulated_annealing_with<F>(
 where
     F: FnMut(&[usize; N_HEADS]) -> Evaluation,
 {
-    let mut rng = Rng::new(seed);
-
-    // line 4-5: random initial solution
-    let mut current = space.random_action(&mut rng);
-    let init_eval = eval_fn(&current);
-    let mut o_curr = init_eval.reward;
-    let mut best = current;
-    let mut o_best = o_curr;
-    let mut best_eval = init_eval;
-
-    let mut history = Vec::new();
-    let mut cand = [0usize; N_HEADS];
-
-    for iter in 1..=cfg.iterations {
-        // line 8: candidate = current + U(-1,1) * step_size, per head
-        for h in 0..N_HEADS {
-            let delta = rng.range_f64(-1.0, 1.0) * cfg.step_size;
-            let moved = current[h] as f64 + delta;
-            let hi = (ACTION_DIMS[h] - 1) as f64;
-            cand[h] = moved.round().clamp(0.0, hi) as usize;
-        }
-        // line 9: evaluate
-        let eval = eval_fn(&cand);
-        let o_cand = eval.reward;
-        // lines 10-12: track the best
-        if o_cand > o_best {
-            o_best = o_cand;
-            best = cand;
-            best_eval = eval;
-        }
-        // lines 14-16: modified acceptance — t = temp / iteration
-        let t = cfg.temperature / iter as f64;
-        if o_cand > o_curr || rng.f64() < t {
-            current = cand;
-            o_curr = o_cand;
-        }
-        if cfg.trace_every > 0 && iter % cfg.trace_every == 0 {
-            history.push((iter, o_best));
-        }
-    }
-
-    SaTrace {
-        best_action: best,
-        best_eval,
-        history,
-        evaluations: cfg.iterations,
-    }
+    let mut obj = FnObjective(eval_fn);
+    cfg.run(space, &mut obj, seed)
 }
 
 #[cfg(test)]
@@ -130,6 +160,73 @@ mod tests {
             temperature: 200.0,
             step_size: 10.0,
             trace_every: iters / 10,
+        }
+    }
+
+    /// The pre-refactor Algorithm 2 loop, frozen verbatim as the
+    /// bit-identity oracle for the [`SearchDriver`]/[`Objective`] path.
+    fn reference_sa(
+        space: &DesignSpace,
+        calib: &Calib,
+        cfg: &SaConfig,
+        seed: u64,
+    ) -> ([usize; N_HEADS], f64, Vec<(usize, f64)>) {
+        let mut eval_fn = |a: &[usize; N_HEADS]| evaluate(calib, &space.decode(a));
+        let mut rng = Rng::new(seed);
+        let mut current = space.random_action(&mut rng);
+        let init_eval = eval_fn(&current);
+        let mut o_curr = init_eval.reward;
+        let mut best = current;
+        let mut o_best = o_curr;
+        let mut history = Vec::new();
+        let mut cand = [0usize; N_HEADS];
+        for iter in 1..=cfg.iterations {
+            for h in 0..N_HEADS {
+                let delta = rng.range_f64(-1.0, 1.0) * cfg.step_size;
+                let moved = current[h] as f64 + delta;
+                let hi = (ACTION_DIMS[h] - 1) as f64;
+                cand[h] = moved.round().clamp(0.0, hi) as usize;
+            }
+            let eval = eval_fn(&cand);
+            let o_cand = eval.reward;
+            if o_cand > o_best {
+                o_best = o_cand;
+                best = cand;
+            }
+            let t = cfg.temperature / iter as f64;
+            if o_cand > o_curr || rng.f64() < t {
+                current = cand;
+                o_curr = o_cand;
+            }
+            if cfg.trace_every > 0 && iter % cfg.trace_every == 0 {
+                history.push((iter, o_best));
+            }
+        }
+        (best, o_best, history)
+    }
+
+    #[test]
+    fn trait_path_is_bit_identical_to_pre_refactor_sa() {
+        // Acceptance criterion: SA refactored onto the
+        // SearchDriver/Objective path must reproduce the pre-refactor
+        // best_action, best reward and history bit for bit.
+        let calib = Calib::default();
+        for (space, seed) in [
+            (DesignSpace::case_i(), 0u64),
+            (DesignSpace::case_i(), 17),
+            (DesignSpace::case_ii(), 42),
+        ] {
+            let cfg = quick_cfg(3_000);
+            let (ref_action, ref_reward, ref_history) =
+                reference_sa(&space, &calib, &cfg, seed);
+            let via = simulated_annealing(&space, &calib, &cfg, seed);
+            assert_eq!(via.best_action, ref_action, "seed {seed}");
+            assert_eq!(
+                via.best_eval.reward.to_bits(),
+                ref_reward.to_bits(),
+                "seed {seed}: reward bits"
+            );
+            assert_eq!(via.history, ref_history, "seed {seed}: history");
         }
     }
 

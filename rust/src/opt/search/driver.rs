@@ -1,0 +1,156 @@
+//! The driver abstraction: one trait for every optimizer in the
+//! portfolio, one data enum for dispatching them across threads.
+//!
+//! [`SearchDriver`] is the behavioral interface (SA, random search, GA,
+//! greedy and the PPO wrapper all implement it); [`DriverConfig`] is the
+//! plain-data form the parallel fan-out and scenario files need — it is
+//! `Copy`, `Sync` and dispatches to the same code the trait impls call,
+//! so a `(DriverConfig, seed)` work item can be sharded across
+//! `opt::parallel` workers with bit-identical results at any `--jobs`
+//! value.
+
+use anyhow::Result;
+
+use crate::cost::Evaluation;
+use crate::model::space::{DesignSpace, N_HEADS};
+
+use super::super::random_search::RandomConfig;
+use super::super::sa::SaConfig;
+use super::ga::GaConfig;
+use super::greedy::GreedyConfig;
+use super::objective::Objective;
+
+/// What one driver instance produced: the argmax it found, its
+/// convergence history, and how many objective calls it spent.
+#[derive(Clone, Debug)]
+pub struct SearchTrace {
+    pub best_action: [usize; N_HEADS],
+    pub best_eval: Evaluation,
+    /// `(tick, best-so-far objective)` samples. Tick units are
+    /// driver-specific: SA iterations, random draws, GA generations,
+    /// greedy evaluations, PPO timesteps.
+    pub history: Vec<(usize, f64)>,
+    /// Objective evaluations consumed (SA reports its iteration count,
+    /// matching the pre-refactor `SaTrace`).
+    pub evaluations: usize,
+    /// Deterministic final-policy action — PPO only; the combined
+    /// pipeline scores it as the extra `RL-det` candidate.
+    pub final_policy_action: Option<[usize; N_HEADS]>,
+}
+
+/// One optimizer in the portfolio: seeded, objective-agnostic search.
+///
+/// Every implementation must be a pure function of `(space, objective,
+/// seed)` — all stochasticity through `util::Rng::new(seed)` — so runs
+/// are reproducible and the parallel fan-out is order-deterministic.
+pub trait SearchDriver {
+    /// Candidate source label (`"SA"`, `"GA"`, `"greedy"`, `"random"`,
+    /// `"RL"`), as reported in CSVs and `select_best` provenance.
+    fn name(&self) -> &'static str;
+
+    /// Run one instance. Only engine-backed drivers (the PPO wrapper)
+    /// can fail; the analytical drivers always return `Ok`.
+    fn search(
+        &self,
+        space: &DesignSpace,
+        obj: &mut dyn Objective,
+        seed: u64,
+    ) -> Result<SearchTrace>;
+}
+
+/// Plain-data form of the non-RL drivers, for thread fan-out and
+/// scenario/CLI selection. (The PPO wrapper stays trait-only: it drags
+/// an `Engine` handle that is neither `Copy` nor `Sync`.)
+#[derive(Clone, Copy, Debug)]
+pub enum DriverConfig {
+    Sa(SaConfig),
+    Random(RandomConfig),
+    Ga(GaConfig),
+    Greedy(GreedyConfig),
+}
+
+impl DriverConfig {
+    /// Budget-matched constructors: the one place the "evaluation
+    /// budget ⇒ driver configuration" mapping lives, shared by the CLI
+    /// subcommands (`ga`/`greedy`/`portfolio`) and the scenario layer
+    /// (`Scenario::members`) so the two surfaces cannot drift. Tracing
+    /// is off (portfolio runs keep only per-instance bests).
+    pub fn sa_with_budget(evals: usize) -> DriverConfig {
+        DriverConfig::Sa(SaConfig { iterations: evals, trace_every: 0, ..SaConfig::default() })
+    }
+
+    /// GA at `population`, generations refitted to `evals`
+    /// ([`GaConfig::fit_budget`] clamps degenerate populations).
+    pub fn ga_with_budget(evals: usize, population: usize) -> DriverConfig {
+        DriverConfig::Ga(GaConfig { population, ..GaConfig::default() }.fit_budget(evals))
+    }
+
+    pub fn greedy_with_budget(evals: usize) -> DriverConfig {
+        DriverConfig::Greedy(GreedyConfig { evaluations: evals, trace_every: 0 })
+    }
+
+    pub fn random_with_budget(evals: usize) -> DriverConfig {
+        DriverConfig::Random(RandomConfig { samples: evals, trace_every: 0 })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DriverConfig::Sa(_) => "SA",
+            DriverConfig::Random(_) => "random",
+            DriverConfig::Ga(_) => "GA",
+            DriverConfig::Greedy(_) => "greedy",
+        }
+    }
+
+    /// Infallible dispatch to the underlying driver (none of the
+    /// analytical drivers can fail).
+    pub fn run(&self, space: &DesignSpace, obj: &mut dyn Objective, seed: u64) -> SearchTrace {
+        match self {
+            DriverConfig::Sa(c) => c.run(space, obj, seed),
+            DriverConfig::Random(c) => c.run(space, obj, seed),
+            DriverConfig::Ga(c) => c.run(space, obj, seed),
+            DriverConfig::Greedy(c) => c.run(space, obj, seed),
+        }
+    }
+}
+
+/// One portfolio entry: a driver plus the seeds to fan it out over
+/// (Algorithm 1 lines 4–7 generalized beyond SA).
+#[derive(Clone, Debug)]
+pub struct PortfolioMember {
+    pub driver: DriverConfig,
+    pub seeds: Vec<u64>,
+}
+
+impl PortfolioMember {
+    pub fn new(driver: DriverConfig, seeds: Vec<u64>) -> PortfolioMember {
+        PortfolioMember { driver, seeds }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::Calib;
+    use crate::opt::search::objective::CostObjective;
+
+    #[test]
+    fn driver_config_names_are_stable_candidate_sources() {
+        assert_eq!(DriverConfig::Sa(SaConfig::default()).name(), "SA");
+        assert_eq!(DriverConfig::Random(RandomConfig::default()).name(), "random");
+        assert_eq!(DriverConfig::Ga(GaConfig::default()).name(), "GA");
+        assert_eq!(DriverConfig::Greedy(GreedyConfig::default()).name(), "greedy");
+    }
+
+    #[test]
+    fn enum_dispatch_matches_trait_dispatch() {
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let sa = SaConfig { iterations: 500, trace_every: 0, ..SaConfig::default() };
+        let mut obj = CostObjective::new(&space, &calib);
+        let via_enum = DriverConfig::Sa(sa).run(&space, &mut obj, 9);
+        let via_trait = sa.search(&space, &mut obj, 9).unwrap();
+        assert_eq!(via_enum.best_action, via_trait.best_action);
+        assert_eq!(via_enum.best_eval.reward, via_trait.best_eval.reward);
+    }
+}

@@ -1,0 +1,308 @@
+//! Genetic algorithm over the 14-head action space.
+//!
+//! A portfolio member in the spirit of the evolutionary design-space
+//! search used by related chiplet co-design work (Monad's evolutionary
+//! explorer, Gemini's layered meta-heuristics): generational GA with
+//! tournament selection, per-head uniform crossover and the same
+//! clamped-step mutation move SA uses (`idx + U(−1,1) · step`, rounded
+//! and clamped to the head's cardinality). Elitism keeps the best
+//! individuals alive, so the per-generation evaluation cost is
+//! `population − elitism` and the total budget is exact
+//! ([`GaConfig::eval_budget`]) — which is what makes "GA vs random at a
+//! matched budget" comparisons fair.
+
+use anyhow::Result;
+
+use crate::cost::Evaluation;
+use crate::model::space::{DesignSpace, ACTION_DIMS, N_HEADS};
+use crate::util::stats::nan_least_cmp;
+use crate::util::Rng;
+
+use super::driver::{SearchDriver, SearchTrace};
+use super::objective::Objective;
+use super::tracker::{BestTracker, SearchBudget, TraceRecorder};
+
+/// GA hyper-parameters. Defaults target the same ~50K-evaluation budget
+/// as a short SA run; [`GaConfig::with_budget`] refits `generations` to
+/// any evaluation budget.
+#[derive(Clone, Copy, Debug)]
+pub struct GaConfig {
+    /// Individuals per generation (≥ 2).
+    pub population: usize,
+    /// Generations after the random initial population.
+    pub generations: usize,
+    /// Tournament size for parent selection (≥ 1; larger = greedier).
+    pub tournament: usize,
+    /// Probability a child is a per-head uniform crossover of both
+    /// parents (otherwise it clones the first parent).
+    pub crossover_prob: f64,
+    /// Per-head mutation probability.
+    pub mutation_prob: f64,
+    /// Mutation move scale, in action-index units (SA's step size).
+    pub mutation_step: f64,
+    /// Individuals carried over unchanged (and un-re-evaluated) per
+    /// generation (< population).
+    pub elitism: usize,
+    /// Record the best-so-far objective every `trace_every` generations
+    /// (0 disables tracing).
+    pub trace_every: usize,
+}
+
+impl Default for GaConfig {
+    fn default() -> GaConfig {
+        GaConfig {
+            population: 64,
+            generations: 800, // 64 + 800·62 ≈ 49.7K evaluations
+            tournament: 3,
+            crossover_prob: 0.9,
+            mutation_prob: 0.15,
+            mutation_step: 10.0,
+            elitism: 2,
+            trace_every: 50,
+        }
+    }
+}
+
+impl GaConfig {
+    /// Default GA refitted to consume at most `evals` objective calls
+    /// (floor: one minimal initial population — see
+    /// [`GaConfig::fit_budget`]).
+    pub fn with_budget(evals: usize) -> GaConfig {
+        GaConfig::default().fit_budget(evals)
+    }
+
+    /// This configuration with `generations` — and, for budgets smaller
+    /// than the population, the population itself — refitted so
+    /// [`GaConfig::eval_budget`] never exceeds `evals`. The only
+    /// exception is the floor of one 4-individual initial population,
+    /// the least that still evolves. Elitism is additionally capped at
+    /// half the (possibly shrunk) population, so every generation
+    /// evaluates at least one child and degenerate inputs
+    /// (`population <= elitism`) cannot divide by zero or trip
+    /// [`GaConfig::run`]'s assertions.
+    pub fn fit_budget(mut self, evals: usize) -> GaConfig {
+        if evals < self.population {
+            self.population = evals.max(4).min(self.population);
+        }
+        self.population = self.population.max(2);
+        self.elitism = self.elitism.min(self.population / 2);
+        let per_gen = self.population.saturating_sub(self.elitism).max(1);
+        self.generations = evals.saturating_sub(self.population) / per_gen;
+        self
+    }
+
+    /// Exact number of objective evaluations one run consumes.
+    pub fn eval_budget(&self) -> usize {
+        self.population + self.generations * (self.population - self.elitism)
+    }
+
+    /// Run the GA against an arbitrary objective.
+    pub fn run(&self, space: &DesignSpace, obj: &mut dyn Objective, seed: u64) -> SearchTrace {
+        assert!(self.population >= 2, "GA needs a population of at least 2");
+        assert!(self.elitism < self.population, "elitism must leave room for children");
+        assert!(self.tournament >= 1, "tournament size must be at least 1");
+
+        let mut rng = Rng::new(seed);
+        let mut budget = SearchBudget::new(self.eval_budget());
+        let mut tracker: BestTracker<([usize; N_HEADS], Evaluation)> = BestTracker::new();
+        let mut recorder = TraceRecorder::new(self.trace_every);
+        let mut first: Option<([usize; N_HEADS], Evaluation)> = None;
+
+        // generation 0: uniform random population
+        let mut pop: Vec<([usize; N_HEADS], f64)> = Vec::with_capacity(self.population);
+        for _ in 0..self.population {
+            let a = space.random_action(&mut rng);
+            budget.take();
+            let e = obj.evaluate(&a);
+            if first.is_none() {
+                first = Some((a, e));
+            }
+            tracker.offer(e.reward, || (a, e));
+            pop.push((a, e.reward));
+        }
+
+        for gen in 1..=self.generations {
+            // elites: stable descending rank, ties resolved by index
+            let mut order: Vec<usize> = (0..pop.len()).collect();
+            order.sort_by(|&i, &j| nan_least_cmp(pop[j].1, pop[i].1));
+            let mut next: Vec<([usize; N_HEADS], f64)> =
+                order.iter().take(self.elitism).map(|&i| pop[i]).collect();
+
+            while next.len() < self.population {
+                let pa = tournament(&mut rng, &pop, self.tournament);
+                let pb = tournament(&mut rng, &pop, self.tournament);
+                let mut child = if rng.f64() < self.crossover_prob {
+                    let mut c = [0usize; N_HEADS];
+                    for (h, slot) in c.iter_mut().enumerate() {
+                        *slot = if rng.f64() < 0.5 { pop[pa].0[h] } else { pop[pb].0[h] };
+                    }
+                    c
+                } else {
+                    pop[pa].0
+                };
+                for h in 0..N_HEADS {
+                    if rng.f64() < self.mutation_prob {
+                        let moved =
+                            child[h] as f64 + rng.range_f64(-1.0, 1.0) * self.mutation_step;
+                        let hi = (ACTION_DIMS[h] - 1) as f64;
+                        child[h] = moved.round().clamp(0.0, hi) as usize;
+                    }
+                }
+                budget.take();
+                let e = obj.evaluate(&child);
+                tracker.offer(e.reward, || (child, e));
+                next.push((child, e.reward));
+            }
+            pop = next;
+            recorder.record(gen, tracker.reward());
+        }
+
+        let (best_action, best_eval) = tracker
+            .into_best()
+            .map(|(_, t)| t)
+            .unwrap_or_else(|| first.expect("population is non-empty"));
+        SearchTrace {
+            best_action,
+            best_eval,
+            history: recorder.into_history(),
+            evaluations: budget.used(),
+            final_policy_action: None,
+        }
+    }
+}
+
+/// Tournament selection: best of `k` uniform draws (NaN-safe; the first
+/// drawn index wins ties, keeping selection deterministic per seed).
+fn tournament(rng: &mut Rng, pop: &[([usize; N_HEADS], f64)], k: usize) -> usize {
+    let mut best = rng.below(pop.len() as u64) as usize;
+    for _ in 1..k {
+        let c = rng.below(pop.len() as u64) as usize;
+        if nan_least_cmp(pop[c].1, pop[best].1).is_gt() {
+            best = c;
+        }
+    }
+    best
+}
+
+impl SearchDriver for GaConfig {
+    fn name(&self) -> &'static str {
+        "GA"
+    }
+
+    fn search(
+        &self,
+        space: &DesignSpace,
+        obj: &mut dyn Objective,
+        seed: u64,
+    ) -> Result<SearchTrace> {
+        Ok(self.run(space, obj, seed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::Calib;
+    use crate::opt::search::objective::{CostObjective, FnObjective};
+
+    fn quick() -> GaConfig {
+        GaConfig::with_budget(2_000)
+    }
+
+    #[test]
+    fn budget_fit_is_exact_and_counted() {
+        let cfg = quick();
+        assert!(cfg.eval_budget() <= 2_000, "{}", cfg.eval_budget());
+        assert!(cfg.generations >= 1);
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let mut calls = 0usize;
+        let mut obj = FnObjective(|a: &[usize; N_HEADS]| {
+            calls += 1;
+            crate::cost::evaluate(&calib, &space.decode(a))
+        });
+        let t = cfg.run(&space, &mut obj, 0);
+        assert_eq!(calls, cfg.eval_budget());
+        assert_eq!(t.evaluations, cfg.eval_budget());
+    }
+
+    #[test]
+    fn budget_fit_honors_small_budgets_and_degenerate_configs() {
+        // below the default population, the population shrinks so the
+        // budget is honored (down to the 4-individual floor)
+        let small = GaConfig::with_budget(100);
+        assert!(small.eval_budget() <= 100, "{}", small.eval_budget());
+        let tiny = GaConfig::with_budget(30);
+        assert_eq!(tiny.population, 30);
+        assert!(tiny.eval_budget() <= 30, "{}", tiny.eval_budget());
+        let floor = GaConfig::with_budget(0);
+        assert_eq!(floor.population, 4);
+        assert_eq!(floor.generations, 0);
+        assert_eq!(floor.eval_budget(), 4);
+        // population <= elitism must not divide by zero or trip run()'s
+        // assertions (a --ga-pop typo reaches this path)
+        let degenerate =
+            GaConfig { population: 2, elitism: 2, ..GaConfig::default() }.fit_budget(50);
+        assert_eq!(degenerate.elitism, 1);
+        assert_eq!(degenerate.eval_budget(), 50);
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let mut obj = CostObjective::new(&space, &calib);
+        let t = degenerate.run(&space, &mut obj, 0);
+        assert_eq!(t.evaluations, 50);
+    }
+
+    #[test]
+    fn deterministic_per_seed_and_seeds_differ() {
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let run = |seed| {
+            let mut obj = CostObjective::new(&space, &calib);
+            quick().run(&space, &mut obj, seed)
+        };
+        let a = run(5);
+        let b = run(5);
+        assert_eq!(a.best_action, b.best_action);
+        assert_eq!(a.best_eval.reward.to_bits(), b.best_eval.reward.to_bits());
+        assert_eq!(a.history, b.history);
+        let c = run(6);
+        assert!(
+            c.best_action != a.best_action || c.best_eval.reward != a.best_eval.reward,
+            "different seeds should explore differently"
+        );
+    }
+
+    #[test]
+    fn best_action_in_bounds_and_history_monotone() {
+        let space = DesignSpace::case_ii();
+        let calib = Calib::default();
+        let mut obj = CostObjective::new(&space, &calib);
+        let cfg = GaConfig { trace_every: 5, ..quick() };
+        let t = cfg.run(&space, &mut obj, 11);
+        for (h, &a) in t.best_action.iter().enumerate() {
+            assert!(a < ACTION_DIMS[h], "head {h}");
+        }
+        for w in t.history.windows(2) {
+            assert!(w[1].1 >= w[0].1, "best-so-far must be monotone");
+        }
+        let direct = crate::cost::evaluate(&calib, &space.decode(&t.best_action));
+        assert_eq!(direct.reward, t.best_eval.reward);
+    }
+
+    #[test]
+    fn nan_rewards_never_become_best() {
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let mut n = 0usize;
+        let mut obj = FnObjective(|a: &[usize; N_HEADS]| {
+            n += 1;
+            let mut e = crate::cost::evaluate(&calib, &space.decode(a));
+            if n % 2 == 0 {
+                e.reward = f64::NAN;
+            }
+            e
+        });
+        let t = GaConfig::with_budget(500).run(&space, &mut obj, 1);
+        assert!(!t.best_eval.reward.is_nan());
+    }
+}

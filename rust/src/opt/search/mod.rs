@@ -1,0 +1,42 @@
+//! The unified search core: one objective abstraction, one driver
+//! abstraction, shared bookkeeping — the machinery the paper's
+//! optimizer portfolio (Alg. 1's "SAs + trained RL agents + exhaustive
+//! argmax") is assembled from.
+//!
+//! Before this module existed, best-tracking, budget accounting and
+//! trace history were re-implemented in five places (`opt::sa`,
+//! `opt::combined`, `opt::parallel`, `opt::random_search` and
+//! `gym::env`). Now:
+//!
+//! * [`Objective`] is the evaluation surface — eq. 17 via
+//!   `cost::evaluate` by default ([`CostObjective`]), memoized for
+//!   sweeps ([`CachedObjective`] over `cost::cache::EvalCache`), or any
+//!   closure ([`FnObjective`]).
+//! * [`BestTracker`] / [`SearchBudget`] / [`TraceRecorder`] are the
+//!   shared bookkeeping (the tracker also backs the gym's best/merge
+//!   logic — one NaN policy everywhere).
+//! * [`SearchDriver`] is the optimizer interface; SA (Alg. 2), random
+//!   search, the GA ([`ga`]), the greedy restarter ([`greedy`]) and the
+//!   PPO wrapper ([`rl::PpoDriver`]) all implement it. [`DriverConfig`]
+//!   is its plain-data (`Copy + Sync`) form for thread fan-out and
+//!   scenario files, and [`PortfolioMember`] pairs a driver with its
+//!   seed list.
+//!
+//! The refactor is bit-exact where it matters: SA on this path
+//! reproduces the pre-refactor walk RNG-draw for RNG-draw (regression
+//! test in `opt::sa`), and `opt::parallel`'s `--jobs N` fan-out stays
+//! bit-identical to sequential for every driver.
+
+pub mod driver;
+pub mod ga;
+pub mod greedy;
+pub mod objective;
+pub mod rl;
+pub mod tracker;
+
+pub use driver::{DriverConfig, PortfolioMember, SearchDriver, SearchTrace};
+pub use ga::GaConfig;
+pub use greedy::GreedyConfig;
+pub use objective::{CachedObjective, CostObjective, FnObjective, Objective};
+pub use rl::PpoDriver;
+pub use tracker::{BestTracker, SearchBudget, TraceRecorder};

@@ -1,0 +1,107 @@
+//! The objective function abstraction every search driver optimizes.
+//!
+//! The paper's optimizers all maximize one scalar — the eq. 17 reward
+//! `r = αT − βC − γE` as computed by `cost::evaluate` — but different
+//! call sites want different plumbing around that evaluation: the plain
+//! function ([`CostObjective`]), a memoizing cache for scenario sweeps
+//! ([`CachedObjective`] over `cost::cache::EvalCache`), or an arbitrary
+//! instrumented closure ([`FnObjective`], used by tests to count calls
+//! and by `simulated_annealing_with` callers). Drivers only ever see
+//! `&mut dyn Objective`, so swapping the plumbing can never perturb a
+//! walk — the guarantee the bit-identical sweep/cache tests build on.
+
+use crate::cost::cache::EvalCache;
+use crate::cost::{evaluate, Calib, Evaluation};
+use crate::model::space::{DesignSpace, N_HEADS};
+
+/// A scalarized design objective: raw 14-head action in, full
+/// [`Evaluation`] out (drivers compare `Evaluation::reward`).
+///
+/// Implementations must be pure in the action (same action ⇒ same
+/// evaluation) for the portfolio's bit-identical parallel fan-out to
+/// hold; stateful wrappers (caches, call counters) are fine as long as
+/// the returned values stay action-deterministic.
+pub trait Objective {
+    fn evaluate(&mut self, action: &[usize; N_HEADS]) -> Evaluation;
+}
+
+/// The default objective: eq. 17 via [`cost::evaluate`] over a
+/// space-decoded action.
+///
+/// [`cost::evaluate`]: crate::cost::evaluate
+pub struct CostObjective<'a> {
+    pub space: &'a DesignSpace,
+    pub calib: &'a Calib,
+}
+
+impl<'a> CostObjective<'a> {
+    pub fn new(space: &'a DesignSpace, calib: &'a Calib) -> CostObjective<'a> {
+        CostObjective { space, calib }
+    }
+}
+
+impl Objective for CostObjective<'_> {
+    fn evaluate(&mut self, action: &[usize; N_HEADS]) -> Evaluation {
+        evaluate(self.calib, &self.space.decode(action))
+    }
+}
+
+/// Memoizing objective over a scenario's [`EvalCache`]: hits return the
+/// exact `Evaluation` the miss path computed, so drivers behave
+/// bit-identically with and without the cache.
+pub struct CachedObjective<'a> {
+    pub cache: &'a mut EvalCache,
+    pub space: &'a DesignSpace,
+    pub calib: &'a Calib,
+}
+
+impl Objective for CachedObjective<'_> {
+    fn evaluate(&mut self, action: &[usize; N_HEADS]) -> Evaluation {
+        self.cache.evaluate(self.calib, self.space, action)
+    }
+}
+
+/// Closure adapter, so ad-hoc evaluators (instrumented, fault-injecting,
+/// test doubles) plug into the same driver path without a named type.
+pub struct FnObjective<F>(pub F);
+
+impl<F: FnMut(&[usize; N_HEADS]) -> Evaluation> Objective for FnObjective<F> {
+    fn evaluate(&mut self, action: &[usize; N_HEADS]) -> Evaluation {
+        (self.0)(action)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::cache::DEFAULT_CACHE_CAP;
+    use crate::util::Rng;
+
+    #[test]
+    fn cost_cached_and_fn_objectives_agree() {
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let mut cache = EvalCache::new(DEFAULT_CACHE_CAP);
+        let mut rng = Rng::new(3);
+        let mut calls = 0usize;
+        {
+            let mut direct = CostObjective::new(&space, &calib);
+            let mut cached = CachedObjective { cache: &mut cache, space: &space, calib: &calib };
+            let mut counted = FnObjective(|a: &[usize; N_HEADS]| {
+                calls += 1;
+                evaluate(&calib, &space.decode(a))
+            });
+            for _ in 0..20 {
+                let a = space.random_action(&mut rng);
+                let d = direct.evaluate(&a);
+                assert_eq!(d.reward, cached.evaluate(&a).reward);
+                assert_eq!(d.reward, counted.evaluate(&a).reward);
+                // cache hit path returns the identical evaluation
+                assert_eq!(d.reward, cached.evaluate(&a).reward);
+            }
+        }
+        assert_eq!(calls, 20);
+        assert_eq!(cache.hits, 20);
+        assert_eq!(cache.misses, 20);
+    }
+}

@@ -1,0 +1,59 @@
+//! The PPO agent as a [`SearchDriver`] portfolio member.
+//!
+//! Training still runs through `rl::train_ppo` over a `ChipletGymEnv`
+//! (the env evaluates eq. 17 internally on every step); the wrapper's
+//! job is to express one trained agent in the portfolio's vocabulary:
+//! its env-argmax best action re-scored through the caller's
+//! [`Objective`] (so a cached objective memoizes the re-score exactly
+//! like the non-RL drivers), plus the deterministic final-policy action
+//! the combined pipeline turns into the extra `RL-det` candidate.
+
+use anyhow::Result;
+
+use crate::cost::Calib;
+use crate::gym::ChipletGymEnv;
+use crate::model::space::DesignSpace;
+use crate::rl::{train_ppo, PpoConfig};
+use crate::runtime::Engine;
+
+use super::driver::{SearchDriver, SearchTrace};
+use super::objective::Objective;
+
+/// One PPO agent in the portfolio. Not `Copy`/`Sync` (the PJRT engine
+/// handle isn't), so RL members run on the caller's thread while the
+/// analytical drivers fan out — same arrangement as before the
+/// refactor.
+pub struct PpoDriver<'e> {
+    pub engine: &'e Engine,
+    pub ppo: PpoConfig,
+    /// Calibration of the training environment (the objective the env
+    /// optimizes; the `obj` argument is only used to re-score outputs).
+    pub calib: Calib,
+}
+
+impl SearchDriver for PpoDriver<'_> {
+    fn name(&self) -> &'static str {
+        "RL"
+    }
+
+    fn search(
+        &self,
+        space: &DesignSpace,
+        obj: &mut dyn Objective,
+        seed: u64,
+    ) -> Result<SearchTrace> {
+        let mut env = ChipletGymEnv::new(*space, self.calib.clone(), self.ppo.episode_len);
+        let trace = train_ppo(self.engine, &mut env, &self.ppo, seed)?;
+        let best_eval = obj.evaluate(&trace.best_action);
+        // PPO's convergence signal is the per-design cost value, not a
+        // best-so-far curve; ticks are timesteps.
+        let history = trace.history.iter().map(|s| (s.timesteps, s.cost_value)).collect();
+        Ok(SearchTrace {
+            best_action: trace.best_action,
+            best_eval,
+            history,
+            evaluations: trace.timesteps,
+            final_policy_action: Some(trace.final_policy_action),
+        })
+    }
+}

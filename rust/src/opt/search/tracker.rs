@@ -1,0 +1,108 @@
+//! Best-so-far tracking, budget accounting and trace recording — the
+//! bookkeeping every search driver used to re-implement privately.
+//!
+//! [`BestTracker`] itself is defined in `util::stats` (next to
+//! `nan_least_cmp`) so the gym layer can share the exact same NaN-safe
+//! argmax without depending on the optimizer; this module re-exports it
+//! as part of the search core's surface and adds the two pieces only
+//! drivers need: [`SearchBudget`] (evaluation permits) and
+//! [`TraceRecorder`] (best-so-far convergence samples).
+
+pub use crate::util::stats::BestTracker;
+
+/// Evaluation-count budget: one permit per objective call. Drivers with
+/// irregular inner loops (greedy's neighborhood sweeps, GA's generation
+/// batches) consume permits instead of hand-rolling counters, so
+/// "budget-matched" comparisons across optimizers are exact.
+#[derive(Clone, Copy, Debug)]
+pub struct SearchBudget {
+    limit: usize,
+    used: usize,
+}
+
+impl SearchBudget {
+    pub fn new(limit: usize) -> SearchBudget {
+        SearchBudget { limit, used: 0 }
+    }
+
+    /// Consume one evaluation permit; false once the budget is spent.
+    pub fn take(&mut self) -> bool {
+        if self.used < self.limit {
+            self.used += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn used(&self) -> usize {
+        self.used
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.limit - self.used
+    }
+
+    pub fn exhausted(&self) -> bool {
+        self.used >= self.limit
+    }
+}
+
+/// Best-so-far history sampling for the Fig. 8(b)/9/10-style convergence
+/// curves: `(tick, best objective)` every `every` ticks, disabled at 0.
+/// Tick units are driver-specific (SA iterations, random draws, GA
+/// generations, greedy evaluations) and documented per driver.
+#[derive(Clone, Debug)]
+pub struct TraceRecorder {
+    every: usize,
+    history: Vec<(usize, f64)>,
+}
+
+impl TraceRecorder {
+    pub fn new(every: usize) -> TraceRecorder {
+        TraceRecorder { every, history: Vec::new() }
+    }
+
+    /// Record `(tick, best)` when `tick` lands on the sampling grid.
+    /// Callers start ticks at 1, preserving the pre-refactor SA/random
+    /// convention of never sampling tick 0.
+    pub fn record(&mut self, tick: usize, best: f64) {
+        if self.every > 0 && tick % self.every == 0 {
+            self.history.push((tick, best));
+        }
+    }
+
+    pub fn into_history(self) -> Vec<(usize, f64)> {
+        self.history
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_hands_out_exactly_limit_permits() {
+        let mut b = SearchBudget::new(3);
+        assert_eq!(b.remaining(), 3);
+        assert!(b.take() && b.take() && b.take());
+        assert!(!b.take(), "fourth permit must be refused");
+        assert!(b.exhausted());
+        assert_eq!(b.used(), 3);
+        assert_eq!(b.remaining(), 0);
+        let mut z = SearchBudget::new(0);
+        assert!(!z.take());
+    }
+
+    #[test]
+    fn recorder_samples_on_grid_only() {
+        let mut r = TraceRecorder::new(10);
+        for tick in 1..=25 {
+            r.record(tick, tick as f64);
+        }
+        assert_eq!(r.into_history(), vec![(10, 10.0), (20, 20.0)]);
+        let mut off = TraceRecorder::new(0);
+        off.record(1, 1.0);
+        assert!(off.into_history().is_empty(), "0 disables tracing");
+    }
+}

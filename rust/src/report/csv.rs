@@ -1,4 +1,7 @@
-//! Minimal CSV writer (RFC-4180 quoting) for figure/table series.
+//! Minimal CSV writer (RFC-4180 quoting) for figure/table series, plus
+//! the shared candidate-table emitter every portfolio surface (the
+//! `ga`/`greedy`/`portfolio` subcommands, `benches/perf_search.rs`)
+//! writes its results through.
 
 use std::borrow::Cow;
 use std::fs::File;
@@ -6,6 +9,9 @@ use std::io::{BufWriter, Write};
 use std::path::Path;
 
 use anyhow::Result;
+
+use crate::model::space::DesignSpace;
+use crate::opt::combined::Candidate;
 
 /// RFC-4180-quote one cell: cells containing a comma, double quote, CR
 /// or LF are wrapped in double quotes with embedded quotes doubled;
@@ -68,6 +74,53 @@ impl CsvWriter {
     }
 }
 
+/// One row per optimizer candidate (source, seed, reward, key PPAC
+/// metrics, decoded chiplet count, raw action) — the common tabular form
+/// of `opt::combined::OptOutcome::candidates`.
+pub fn write_candidates_csv(
+    path: &Path,
+    space: &DesignSpace,
+    candidates: &[Candidate],
+) -> Result<()> {
+    let mut w = CsvWriter::create(
+        path,
+        &[
+            "source",
+            "seed",
+            "reward",
+            "feasible",
+            "throughput_tops",
+            "energy_mj_per_task",
+            "die_cost",
+            "pkg_cost",
+            "n_chiplets",
+            "action",
+        ],
+    )?;
+    for c in candidates {
+        let p = space.decode(&c.action);
+        let action = c
+            .action
+            .iter()
+            .map(|x| x.to_string())
+            .collect::<Vec<_>>()
+            .join(",");
+        w.row_str(&[
+            c.source.clone(),
+            c.seed.to_string(),
+            format!("{}", c.eval.reward),
+            c.eval.feasible.to_string(),
+            format!("{}", c.eval.throughput_tops),
+            format!("{}", c.eval.energy_mj_per_ref_task),
+            format!("{}", c.eval.die_cost),
+            format!("{}", c.eval.pkg_cost),
+            p.n_chiplets.to_string(),
+            action,
+        ])?;
+    }
+    w.flush()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -104,6 +157,30 @@ mod tests {
         assert_eq!(quote("he said \"hi\""), "\"he said \"\"hi\"\"\"");
         assert_eq!(quote("two\nlines"), "\"two\nlines\"");
         assert_eq!(quote("cr\rcell"), "\"cr\rcell\"");
+    }
+
+    #[test]
+    fn candidates_csv_has_one_row_per_candidate_and_quotes_actions() {
+        use crate::cost::{evaluate, Calib};
+        use crate::model::space::N_HEADS;
+        let dir = std::env::temp_dir().join("chiplet_gym_csv_test4");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cands.csv");
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let action = [0usize; N_HEADS];
+        let eval = evaluate(&calib, &space.decode(&action));
+        let cands = vec![
+            Candidate { source: "SA".into(), seed: 0, action, eval },
+            Candidate { source: "GA".into(), seed: 1, action, eval },
+        ];
+        write_candidates_csv(&path, &space, &cands).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("source,seed,reward"));
+        assert!(text.contains("GA,1,"));
+        // the 14-head action list lands in one RFC-4180-quoted cell
+        assert!(text.contains("\"0,0,0"));
     }
 
     #[test]

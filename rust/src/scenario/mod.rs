@@ -26,7 +26,8 @@
 //! tech_node = "7nm"             # "14nm" | "7nm" | "5nm"
 //! chiplet_cap = 64              # 64 (case i) | 128 (case ii)
 //! packaging = "full-3d"         # | "interposer-2.5d" | "organic-substrate"
-//! sa_iterations = 200000
+//! optimizer = "sa"              # | "ga" | "greedy" | "random" | "portfolio"
+//! sa_iterations = 200000        # SA iterations = the evaluation budget
 //! sa_seeds = [0, 1, 2, 3]
 //!
 //! [calib]                       # any cost::CALIB_KEYS entry
@@ -45,6 +46,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::cost::{Calib, TechNode};
 use crate::model::space::{ArchType, DesignSpace};
 use crate::opt::sa::SaConfig;
+use crate::opt::search::{DriverConfig, GaConfig, PortfolioMember};
 use crate::util::json::{obj, Json};
 use crate::util::toml;
 use crate::workloads::mlperf;
@@ -108,6 +110,49 @@ impl Packaging {
     }
 }
 
+/// Which portfolio member(s) drive a scenario's optimization — the
+/// per-scenario optimizer selection knob (`optimizer = "ga"` in scenario
+/// files). Every non-SA choice is evaluation-budget-matched to the
+/// scenario's `sa_iterations`, so cross-optimizer comparisons under one
+/// budget are fair by construction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimizerChoice {
+    /// Algorithm 2 (the paper's non-RL default).
+    Sa,
+    /// Genetic algorithm (`opt::search::ga`).
+    Ga,
+    /// Greedy hill-climbing with random restarts (`opt::search::greedy`).
+    Greedy,
+    /// Uniform random search (the ablation baseline).
+    Random,
+    /// SA + GA + greedy together, each over the full seed list.
+    Portfolio,
+}
+
+impl OptimizerChoice {
+    pub fn name(self) -> &'static str {
+        match self {
+            OptimizerChoice::Sa => "sa",
+            OptimizerChoice::Ga => "ga",
+            OptimizerChoice::Greedy => "greedy",
+            OptimizerChoice::Random => "random",
+            OptimizerChoice::Portfolio => "portfolio",
+        }
+    }
+
+    /// Parse the scenario-file spelling.
+    pub fn parse(s: &str) -> Option<OptimizerChoice> {
+        match s {
+            "sa" => Some(OptimizerChoice::Sa),
+            "ga" => Some(OptimizerChoice::Ga),
+            "greedy" => Some(OptimizerChoice::Greedy),
+            "random" => Some(OptimizerChoice::Random),
+            "portfolio" => Some(OptimizerChoice::Portfolio),
+            _ => None,
+        }
+    }
+}
+
 /// Optimizer budget of one scenario: how hard the sweep works on it.
 #[derive(Clone, Debug, PartialEq)]
 pub struct OptBudget {
@@ -144,6 +189,10 @@ pub struct Scenario {
     /// this is where reticle (`max_chiplet_area_mm2`) and package-area
     /// (`pkg_area_mm2`) limits live.
     pub calib_overrides: BTreeMap<String, f64>,
+    /// Which optimizer(s) the sweep runs on this scenario (file key
+    /// `optimizer`, default `"sa"` — bit-identical to pre-portfolio
+    /// sweeps).
+    pub optimizer: OptimizerChoice,
     pub budget: OptBudget,
 }
 
@@ -162,6 +211,7 @@ impl Scenario {
             chiplet_cap: 64,
             packaging: Packaging::Full3D,
             calib_overrides: BTreeMap::new(),
+            optimizer: OptimizerChoice::Sa,
             budget: OptBudget::default(),
         }
     }
@@ -219,6 +269,38 @@ impl Scenario {
         }
     }
 
+    /// The portfolio members this scenario's [`OptimizerChoice`] expands
+    /// to under `budget` (usually the scenario's own budget, possibly
+    /// merged with a CLI override). Every non-SA driver is
+    /// evaluation-budget-matched to `sa_iterations` through the shared
+    /// `DriverConfig::*_with_budget` constructors the CLI subcommands
+    /// use too.
+    pub fn members(&self, budget: &OptBudget) -> Vec<PortfolioMember> {
+        self.members_with(budget, GaConfig::default().population)
+    }
+
+    /// [`Scenario::members`] with an explicit GA population (the
+    /// sweep's `--ga-pop` override; GA generations refit to the same
+    /// budget).
+    pub fn members_with(&self, budget: &OptBudget, ga_population: usize) -> Vec<PortfolioMember> {
+        let evals = budget.sa_iterations;
+        let sa = DriverConfig::sa_with_budget(evals);
+        let ga = DriverConfig::ga_with_budget(evals, ga_population);
+        let greedy = DriverConfig::greedy_with_budget(evals);
+        let random = DriverConfig::random_with_budget(evals);
+        let drivers = match self.optimizer {
+            OptimizerChoice::Sa => vec![sa],
+            OptimizerChoice::Ga => vec![ga],
+            OptimizerChoice::Greedy => vec![greedy],
+            OptimizerChoice::Random => vec![random],
+            OptimizerChoice::Portfolio => vec![sa, ga, greedy],
+        };
+        drivers
+            .into_iter()
+            .map(|driver| PortfolioMember::new(driver, budget.sa_seeds.clone()))
+            .collect()
+    }
+
     // -- serialization -----------------------------------------------------
 
     pub fn to_json(&self) -> Json {
@@ -228,6 +310,7 @@ impl Scenario {
             ("tech_node", Json::Str(self.tech_node.name().into())),
             ("chiplet_cap", Json::Num(self.chiplet_cap as f64)),
             ("packaging", Json::Str(self.packaging.name().into())),
+            ("optimizer", Json::Str(self.optimizer.name().into())),
             ("sa_iterations", Json::Num(self.budget.sa_iterations as f64)),
             (
                 "sa_seeds",
@@ -279,6 +362,15 @@ impl Scenario {
             s.packaging = Packaging::parse(p)
                 .ok_or_else(|| anyhow!("scenario {:?}: unknown packaging {p:?}", s.name))?;
         }
+        if let Some(o) = v.get("optimizer").and_then(Json::as_str) {
+            s.optimizer = OptimizerChoice::parse(o).ok_or_else(|| {
+                anyhow!(
+                    "scenario {:?}: unknown optimizer {o:?} \
+                     (expected sa|ga|greedy|random|portfolio)",
+                    s.name
+                )
+            })?;
+        }
         if let Some(x) = v.get("sa_iterations").and_then(Json::as_f64) {
             s.budget.sa_iterations = x as usize;
         }
@@ -321,6 +413,7 @@ impl Scenario {
         out.push_str(&format!("tech_node = {}\n", toml_str(self.tech_node.name())));
         out.push_str(&format!("chiplet_cap = {}\n", self.chiplet_cap));
         out.push_str(&format!("packaging = {}\n", toml_str(self.packaging.name())));
+        out.push_str(&format!("optimizer = {}\n", toml_str(self.optimizer.name())));
         out.push_str(&format!("sa_iterations = {}\n", self.budget.sa_iterations));
         let seeds: Vec<String> = self.budget.sa_seeds.iter().map(|s| s.to_string()).collect();
         out.push_str(&format!("sa_seeds = [{}]\n", seeds.join(", ")));
@@ -433,6 +526,43 @@ mod tests {
         assert!(s.calib().is_err(), "NaN override must not pass validation");
         s.calib_overrides.insert("alpha".into(), f64::INFINITY);
         assert!(s.calib().is_err());
+    }
+
+    #[test]
+    fn optimizer_choice_parses_and_expands_to_members() {
+        for c in [
+            OptimizerChoice::Sa,
+            OptimizerChoice::Ga,
+            OptimizerChoice::Greedy,
+            OptimizerChoice::Random,
+            OptimizerChoice::Portfolio,
+        ] {
+            assert_eq!(OptimizerChoice::parse(c.name()), Some(c));
+        }
+        assert_eq!(OptimizerChoice::parse("gradient-descent"), None);
+
+        let mut s = Scenario::baseline();
+        let budget = OptBudget { sa_iterations: 5_000, sa_seeds: vec![0, 1] };
+        assert_eq!(s.members(&budget).len(), 1, "sa = one member");
+        s.optimizer = OptimizerChoice::Portfolio;
+        let members = s.members(&budget);
+        assert_eq!(members.len(), 3, "portfolio = SA + GA + greedy");
+        let names: Vec<&str> = members.iter().map(|m| m.driver.name()).collect();
+        assert_eq!(names, vec!["SA", "GA", "greedy"]);
+        for m in &members {
+            assert_eq!(m.seeds, budget.sa_seeds, "every member fans the full seed list");
+        }
+        // budget matching: GA never exceeds the SA iteration budget
+        if let crate::opt::search::DriverConfig::Ga(ga) = members[1].driver {
+            assert!(ga.eval_budget() <= 5_000, "{}", ga.eval_budget());
+        } else {
+            panic!("second member should be GA");
+        }
+
+        let bad = Json::parse(r#"{"name": "x", "optimizer": "nope"}"#).unwrap();
+        assert!(Scenario::from_json(&bad).is_err());
+        let ok = Json::parse(r#"{"name": "x", "optimizer": "ga"}"#).unwrap();
+        assert_eq!(Scenario::from_json(&ok).unwrap().optimizer, OptimizerChoice::Ga);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use super::{Packaging, Scenario};
+use super::{OptimizerChoice, Packaging, Scenario};
 use crate::cost::TechNode;
 use crate::workloads::mlperf;
 
@@ -69,6 +69,17 @@ pub fn builtin() -> Vec<Scenario> {
         "node-5nm",
         "Leading-edge node: denser/cooler logic, worse yield, dearer wafers",
         |s| s.tech_node = TechNode::N5,
+    ));
+    v.push(variant(
+        "portfolio-case-i",
+        "Paper case (i) driven by the SA+GA+greedy optimizer portfolio",
+        |s| {
+            s.optimizer = OptimizerChoice::Portfolio;
+            // three drivers x seeds: trim the per-driver budget so the
+            // scenario stays in the same wall-clock class as the others
+            s.budget.sa_iterations = 100_000;
+            s.budget.sa_seeds = (0..6).collect();
+        },
     ));
     v
 }

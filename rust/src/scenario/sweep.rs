@@ -2,15 +2,18 @@
 //!
 //! [`run_sweep`] fans the scenario list across the `opt::parallel`
 //! worker pool ([`parallel_map`]): with several scenarios each worker
-//! owns whole scenarios (seeds inside run sequentially through a
-//! per-scenario [`EvalCache`], so repeated `cost::evaluate` calls —
+//! owns whole scenarios (every optimizer instance inside runs
+//! sequentially through a per-scenario [`EvalCache`] behind
+//! `opt::search::CachedObjective`, so repeated `cost::evaluate` calls —
 //! winner re-scoring, colliding proposals — are memoized); with a
-//! single scenario the pool is spent on its seeds instead
-//! (`sa_only_optimize_par`). Both arrangements are
-//! bit-identical — SA is a pure function of `(space, calib, cfg, seed)`
-//! and the cache is transparent — so the paper-baseline scenario
-//! reproduces the pre-scenario SA-only path exactly
-//! (`tests/scenario_sweep.rs`).
+//! single scenario the pool is spent on its `(driver, seed)` instances
+//! instead (`portfolio_optimize_par`). Both arrangements are
+//! bit-identical — every driver is a pure function of `(space, calib,
+//! driver-config, seed)` and the cache is transparent — so the
+//! paper-baseline scenario reproduces the pre-scenario SA-only path
+//! exactly (`tests/scenario_sweep.rs`). A scenario's `optimizer` knob
+//! picks its portfolio member(s): SA by default, or GA / greedy /
+//! random / the full portfolio, all budget-matched to `sa_iterations`.
 //!
 //! Outputs, via `report::csv` under the sweep's output directory:
 //! * `scenario_<name>.csv` — every per-seed candidate with its metrics;
@@ -24,10 +27,9 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::cost::cache::{EvalCache, DEFAULT_CACHE_CAP};
-use crate::model::space::N_HEADS;
 use crate::opt::combined::{select_best, Candidate, OptOutcome};
-use crate::opt::parallel::{parallel_map, sa_only_optimize_par};
-use crate::opt::sa::simulated_annealing_with;
+use crate::opt::parallel::{parallel_map, portfolio_optimize_par};
+use crate::opt::search::CachedObjective;
 use crate::report::CsvWriter;
 
 use super::pareto::{pareto_frontier, ParetoPoint};
@@ -40,6 +42,9 @@ use super::{OptBudget, Scenario};
 pub struct BudgetOverride {
     pub sa_iterations: Option<usize>,
     pub sa_seeds: Option<Vec<u64>>,
+    /// GA population for GA/portfolio scenarios (the CLI maps
+    /// `--ga-pop` here); GA generations refit to the same budget.
+    pub ga_population: Option<usize>,
 }
 
 impl BudgetOverride {
@@ -51,11 +56,13 @@ impl BudgetOverride {
         }
     }
 
-    /// Replace both fields (tests and callers with a complete budget).
+    /// Replace the budget fields (tests and callers with a complete
+    /// budget); the GA population keeps its default.
     pub fn full(budget: OptBudget) -> BudgetOverride {
         BudgetOverride {
             sa_iterations: Some(budget.sa_iterations),
             sa_seeds: Some(budget.sa_seeds),
+            ga_population: None,
         }
     }
 }
@@ -103,11 +110,13 @@ pub struct SweepOutcome {
     pub frontier: Vec<ParetoPoint>,
 }
 
-/// Optimize one scenario.
+/// Optimize one scenario with the portfolio member(s) its `optimizer`
+/// knob selects.
 ///
-/// `jobs <= 1`: seeds run sequentially through a shared per-scenario
-/// [`EvalCache`] (design-point-keyed memoization of `cost::evaluate`).
-/// `jobs > 1`: seeds fan out uncached via [`sa_only_optimize_par`].
+/// `jobs <= 1`: every `(driver, seed)` instance runs sequentially
+/// through a shared per-scenario [`EvalCache`] (design-point-keyed
+/// memoization of `cost::evaluate`, via `opt::search::CachedObjective`).
+/// `jobs > 1`: instances fan out uncached via [`portfolio_optimize_par`].
 /// Results are bit-identical either way.
 pub fn run_scenario(
     s: &Scenario,
@@ -123,11 +132,14 @@ pub fn run_scenario(
     if budget.sa_seeds.is_empty() {
         anyhow::bail!("scenario {:?}: empty seed list", s.name);
     }
-    let mut sa_cfg = s.sa_config();
-    sa_cfg.iterations = budget.sa_iterations;
+    let members = match budget_override.and_then(|o| o.ga_population) {
+        Some(p) => s.members_with(&budget, p),
+        None => s.members(&budget),
+    };
+    let work_items: usize = members.iter().map(|m| m.seeds.len()).sum();
     let t0 = Instant::now();
-    if jobs != 1 && budget.sa_seeds.len() > 1 {
-        let outcome = sa_only_optimize_par(space, &calib, &sa_cfg, &budget.sa_seeds, jobs);
+    if jobs != 1 && work_items > 1 {
+        let outcome = portfolio_optimize_par(space, &calib, &members, jobs);
         return Ok(ScenarioResult {
             scenario: s.clone(),
             outcome,
@@ -138,22 +150,28 @@ pub fn run_scenario(
     }
     let mut cache = EvalCache::new(DEFAULT_CACHE_CAP);
     let mut candidates = Vec::new();
-    for &seed in &budget.sa_seeds {
-        let mut eval_fn = |a: &[usize; N_HEADS]| cache.evaluate(&calib, &space, a);
-        let trace = simulated_annealing_with(&space, &sa_cfg, seed, &mut eval_fn);
-        // Re-score the winner through the same cache: whenever the walk
-        // stayed under the cache cap the search already inserted it, so
-        // this hits and returns the exact Evaluation the walk saw —
-        // search, re-scoring and reporting share one memo table. Past
-        // the cap it recomputes, which is identical by purity.
-        let eval = cache.evaluate(&calib, &space, &trace.best_action);
-        debug_assert!(eval.reward == trace.best_eval.reward);
-        candidates.push(Candidate {
-            source: "SA".into(),
-            seed,
-            action: trace.best_action,
-            eval,
-        });
+    for m in &members {
+        for &seed in &m.seeds {
+            let trace = {
+                let mut obj =
+                    CachedObjective { cache: &mut cache, space: &space, calib: &calib };
+                m.driver.run(&space, &mut obj, seed)
+            };
+            // Re-score the winner through the same cache: whenever the
+            // walk stayed under the cache cap the search already
+            // inserted it, so this hits and returns the exact
+            // Evaluation the walk saw — search, re-scoring and
+            // reporting share one memo table. Past the cap it
+            // recomputes, which is identical by purity.
+            let eval = cache.evaluate(&calib, &space, &trace.best_action);
+            debug_assert!(eval.reward == trace.best_eval.reward);
+            candidates.push(Candidate {
+                source: m.driver.name().into(),
+                seed,
+                action: trace.best_action,
+                eval,
+            });
+        }
     }
     let best = select_best(&candidates)
         .expect("scenario budget has at least one seed")
@@ -292,6 +310,8 @@ fn write_best_csv(dir: &std::path::Path, results: &[ScenarioResult]) -> Result<(
             "tech_node",
             "packaging",
             "chiplet_cap",
+            "optimizer",
+            "source",
             "seed",
             "reward",
             "throughput_tops",
@@ -312,6 +332,8 @@ fn write_best_csv(dir: &std::path::Path, results: &[ScenarioResult]) -> Result<(
             s.tech_node.name().to_string(),
             s.packaging.name().to_string(),
             s.chiplet_cap.to_string(),
+            s.optimizer.name().to_string(),
+            b.source.clone(),
             b.seed.to_string(),
             format!("{}", b.eval.reward),
             format!("{}", b.eval.throughput_tops),
@@ -328,7 +350,15 @@ fn write_best_csv(dir: &std::path::Path, results: &[ScenarioResult]) -> Result<(
 fn write_frontier_csv(dir: &std::path::Path, frontier: &[ParetoPoint]) -> Result<()> {
     let mut w = CsvWriter::create(
         &dir.join("pareto_frontier.csv"),
-        &["scenario", "source", "seed", "throughput_tops", "energy_mj_per_task", "total_cost", "action"],
+        &[
+            "scenario",
+            "source",
+            "seed",
+            "throughput_tops",
+            "energy_mj_per_task",
+            "total_cost",
+            "action",
+        ],
     )?;
     for p in frontier {
         w.row_str(&[

@@ -2,7 +2,8 @@
 //!
 //! Supports `--key value`, `--key=value`, boolean `--flag`, and one
 //! positional subcommand, which covers the whole launcher surface of the
-//! `chiplet-gym` binary and the examples.
+//! `chiplet-gym` binary (including the `ga`/`greedy`/`portfolio`
+//! optimizer subcommands) and the examples.
 
 use std::collections::BTreeMap;
 

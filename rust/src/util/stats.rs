@@ -15,6 +15,69 @@ pub fn nan_least_cmp(a: f64, b: f64) -> std::cmp::Ordering {
     }
 }
 
+/// Shared best-so-far argmax over a reward stream, with the crate's one
+/// NaN policy: a NaN reward is never accepted as best, and a real reward
+/// always displaces a lesser (or absent) one. `opt::search` re-exports
+/// this for every search driver; `gym::ChipletGymEnv` and `gym::VecEnv`
+/// track and merge their bests through it too, so the NaN semantics that
+/// used to be duplicated across the optimizer and the environment are a
+/// single tested code path. It lives here (like [`nan_least_cmp`]) so
+/// the gym layer can use it without depending on the optimizer.
+#[derive(Clone, Debug, Default)]
+pub struct BestTracker<T> {
+    best: Option<(f64, T)>,
+}
+
+impl<T> BestTracker<T> {
+    pub fn new() -> BestTracker<T> {
+        BestTracker { best: None }
+    }
+
+    /// Offer a `(reward, payload)` pair; returns true when it becomes
+    /// the new best. The payload closure only runs on acceptance, so
+    /// offering a loser never pays for a clone/decode.
+    pub fn offer(&mut self, reward: f64, payload: impl FnOnce() -> T) -> bool {
+        if reward.is_nan() {
+            return false;
+        }
+        let takes = match &self.best {
+            None => true,
+            Some((cur, _)) => nan_least_cmp(reward, *cur).is_gt(),
+        };
+        if takes {
+            self.best = Some((reward, payload()));
+        }
+        takes
+    }
+
+    /// Fold another tracker's best into this one (same NaN policy).
+    pub fn merge(&mut self, other: &BestTracker<T>)
+    where
+        T: Clone,
+    {
+        if let Some((r, t)) = &other.best {
+            self.offer(*r, || t.clone());
+        }
+    }
+
+    pub fn best(&self) -> Option<(f64, &T)> {
+        self.best.as_ref().map(|(r, t)| (*r, t))
+    }
+
+    pub fn into_best(self) -> Option<(f64, T)> {
+        self.best
+    }
+
+    /// Best reward so far; `NEG_INFINITY` while empty (trace recording).
+    pub fn reward(&self) -> f64 {
+        self.best.as_ref().map(|(r, _)| *r).unwrap_or(f64::NEG_INFINITY)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.best.is_none()
+    }
+}
+
 /// Summary of a sample: n, mean, std (population), min, max, percentiles.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Summary {
@@ -159,5 +222,52 @@ mod tests {
     fn ema_smooths() {
         let out = ema(&[0.0, 10.0], 0.5);
         assert_eq!(out, vec![0.0, 5.0]);
+    }
+
+    #[test]
+    fn best_tracker_takes_argmax_and_rejects_nan() {
+        let mut t: BestTracker<u32> = BestTracker::new();
+        assert!(t.is_empty());
+        assert_eq!(t.reward(), f64::NEG_INFINITY);
+        assert!(!t.offer(f64::NAN, || 0), "NaN must never seed the best");
+        assert!(t.is_empty());
+        assert!(t.offer(1.0, || 1));
+        assert!(!t.offer(0.5, || 2));
+        assert!(!t.offer(1.0, || 3), "equal reward keeps the earlier best");
+        assert!(t.offer(2.0, || 4));
+        assert!(!t.offer(f64::NAN, || 5), "NaN must never displace a best");
+        assert_eq!(t.best(), Some((2.0, &4)));
+        assert_eq!(t.reward(), 2.0);
+        assert_eq!(t.into_best(), Some((2.0, 4)));
+    }
+
+    #[test]
+    fn best_tracker_payload_only_built_on_acceptance() {
+        let mut t: BestTracker<u32> = BestTracker::new();
+        t.offer(2.0, || 1);
+        let mut built = false;
+        t.offer(1.0, || {
+            built = true;
+            2
+        });
+        assert!(!built, "losing payloads must not be constructed");
+    }
+
+    #[test]
+    fn best_tracker_merge_is_nan_safe_argmax() {
+        let mut a: BestTracker<u32> = BestTracker::new();
+        let mut b: BestTracker<u32> = BestTracker::new();
+        a.merge(&b); // empty-into-empty is a no-op
+        assert!(a.is_empty());
+        b.offer(3.0, || 7);
+        a.merge(&b); // into-empty takes
+        assert_eq!(a.best(), Some((3.0, &7)));
+        let mut c: BestTracker<u32> = BestTracker::new();
+        c.offer(1.0, || 9);
+        a.merge(&c); // lesser best does not displace
+        assert_eq!(a.best(), Some((3.0, &7)));
+        c.offer(5.0, || 11);
+        a.merge(&c);
+        assert_eq!(a.best(), Some((5.0, &11)));
     }
 }

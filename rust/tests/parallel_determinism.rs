@@ -1,12 +1,16 @@
-//! `opt::parallel` determinism contract: the multi-threaded Alg. 1
-//! driver must be bit-identical to the sequential seed path at any
-//! `--jobs` value — plus the NaN-argmax regression tests.
+//! `opt::parallel` determinism contract: the multi-threaded portfolio
+//! driver must be bit-identical to the sequential path at any `--jobs`
+//! value — for SA, GA, greedy and mixed portfolios — plus the
+//! NaN-argmax regression tests.
 
 use chiplet_gym::cost::{evaluate, Calib};
 use chiplet_gym::model::space::{DesignSpace, N_HEADS};
-use chiplet_gym::opt::combined::{reward_cmp, sa_only_optimize, select_best, Candidate};
-use chiplet_gym::opt::parallel::{effective_jobs, sa_only_optimize_par};
+use chiplet_gym::opt::combined::{
+    portfolio_optimize, reward_cmp, sa_only_optimize, select_best, Candidate,
+};
+use chiplet_gym::opt::parallel::{effective_jobs, portfolio_optimize_par, sa_only_optimize_par};
 use chiplet_gym::opt::sa::SaConfig;
+use chiplet_gym::opt::search::{DriverConfig, GaConfig, GreedyConfig, PortfolioMember};
 
 fn quick_sa() -> SaConfig {
     SaConfig {
@@ -62,6 +66,61 @@ fn jobs_auto_matches_sequential_case_ii() {
     let sequential = sa_only_optimize(space, &calib, &quick_sa(), &seeds);
     let parallel = sa_only_optimize_par(space, &calib, &quick_sa(), &seeds, 0);
     assert_outcomes_identical(&sequential, &parallel, "--jobs 0 (auto)");
+}
+
+fn one_member(driver: DriverConfig, n_seeds: u64) -> Vec<PortfolioMember> {
+    vec![PortfolioMember::new(driver, (0..n_seeds).collect())]
+}
+
+#[test]
+fn ga_fanout_is_bit_identical_at_jobs_1_2_8() {
+    let space = DesignSpace::case_i();
+    let calib = Calib::default();
+    let members = one_member(DriverConfig::Ga(GaConfig::with_budget(1_500)), 5);
+    let sequential = portfolio_optimize(space, &calib, &members);
+    for jobs in [1usize, 2, 8] {
+        let parallel = portfolio_optimize_par(space, &calib, &members, jobs);
+        assert_outcomes_identical(&sequential, &parallel, &format!("GA --jobs {jobs}"));
+    }
+}
+
+#[test]
+fn greedy_fanout_is_bit_identical_at_jobs_1_2_8() {
+    let space = DesignSpace::case_i();
+    let calib = Calib::default();
+    let members = one_member(
+        DriverConfig::Greedy(GreedyConfig { evaluations: 1_500, trace_every: 0 }),
+        5,
+    );
+    let sequential = portfolio_optimize(space, &calib, &members);
+    for jobs in [1usize, 2, 8] {
+        let parallel = portfolio_optimize_par(space, &calib, &members, jobs);
+        assert_outcomes_identical(&sequential, &parallel, &format!("greedy --jobs {jobs}"));
+    }
+}
+
+#[test]
+fn mixed_portfolio_fanout_is_bit_identical_and_ordered() {
+    let space = DesignSpace::case_ii();
+    let calib = Calib::default();
+    let members = vec![
+        PortfolioMember::new(
+            DriverConfig::Sa(SaConfig { iterations: 1_000, trace_every: 0, ..SaConfig::default() }),
+            vec![0, 1],
+        ),
+        PortfolioMember::new(DriverConfig::Ga(GaConfig::with_budget(1_000)), vec![0, 1]),
+        PortfolioMember::new(
+            DriverConfig::Greedy(GreedyConfig { evaluations: 1_000, trace_every: 0 }),
+            vec![0, 1],
+        ),
+    ];
+    let sequential = portfolio_optimize(space, &calib, &members);
+    let sources: Vec<&str> = sequential.candidates.iter().map(|c| c.source.as_str()).collect();
+    assert_eq!(sources, vec!["SA", "SA", "GA", "GA", "greedy", "greedy"]);
+    for jobs in [1usize, 2, 8, 0] {
+        let parallel = portfolio_optimize_par(space, &calib, &members, jobs);
+        assert_outcomes_identical(&sequential, &parallel, &format!("mixed --jobs {jobs}"));
+    }
 }
 
 #[test]

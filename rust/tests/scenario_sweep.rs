@@ -128,11 +128,13 @@ fn scenario_calibs_change_optimizer_input_not_mechanics() {
 #[test]
 fn budget_override_is_per_field() {
     let base = OptBudget { sa_iterations: 200_000, sa_seeds: vec![0, 1, 2] };
-    let iters_only = BudgetOverride { sa_iterations: Some(5_000), sa_seeds: None };
+    let iters_only =
+        BudgetOverride { sa_iterations: Some(5_000), ..BudgetOverride::default() };
     let merged = iters_only.merged_into(&base);
     assert_eq!(merged.sa_iterations, 5_000);
     assert_eq!(merged.sa_seeds, base.sa_seeds, "--sa-iters must not clobber seeds");
-    let seeds_only = BudgetOverride { sa_iterations: None, sa_seeds: Some(vec![7]) };
+    let seeds_only =
+        BudgetOverride { sa_seeds: Some(vec![7]), ..BudgetOverride::default() };
     let merged = seeds_only.merged_into(&base);
     assert_eq!(merged.sa_iterations, base.sa_iterations);
     assert_eq!(merged.sa_seeds, vec![7]);
