@@ -1,0 +1,99 @@
+//! Placement-engine throughput: layout evaluations/sec and end-to-end
+//! placement-search wall time.
+//!
+//! Times (a) one `Placement::hop_stats` evaluation of the Table 6
+//! case (i) layout — the placement search's inner loop, an O(tiles²)
+//! scan instead of the full PPAC model — and (b) one complete
+//! `optimize_placement` run at the default greedy budget, for both
+//! paper cases. Writes `BENCH_place.json` (plus a CSV of the rows)
+//! under `bench_results/` to seed the placement perf trajectory across
+//! PRs.
+
+use chiplet_gym::cost::Calib;
+use chiplet_gym::model::space::{paper_points, DesignSpace};
+use chiplet_gym::opt::search::DriverConfig;
+use chiplet_gym::place::{optimize_placement, PlaceConfig, Placement};
+use chiplet_gym::report;
+use chiplet_gym::util::bench::{fmt_ns, Runner};
+
+fn main() {
+    let calib = Calib::default();
+    let budget = 2_000usize;
+    let cases = [
+        ("case-i", DesignSpace::case_i(), paper_points::table6_case_i()),
+        ("case-ii", DesignSpace::case_ii(), paper_points::table6_case_ii()),
+    ];
+
+    // (label, tiles, hop_stats evals/sec, search wall secs, canonical ns,
+    //  optimized ns)
+    let mut rows: Vec<(String, usize, f64, f64, f64, f64)> = Vec::new();
+    for (name, space, action) in &cases {
+        let p = space.decode(action);
+        let layout = Placement::canonical(p.n_footprints(), &p.hbm_locs());
+
+        let mut runner = Runner::new();
+        runner.bench(&format!("{name}: hop_stats ({} tiles)", p.n_footprints()), || {
+            std::hint::black_box(layout.hop_stats());
+        });
+        let stats_ns = runner.results().last().unwrap().ns_per_iter.mean;
+        let evals_per_sec = 1e9 / stats_ns;
+
+        let cfg = PlaceConfig { driver: DriverConfig::greedy_with_budget(budget), seed: 0 };
+        let mut canonical_ns = 0.0;
+        let mut optimized_ns = 0.0;
+        let mut quick = Runner::quick();
+        quick.bench(&format!("{name}: optimize_placement ({budget}-eval greedy)"), || {
+            let out = optimize_placement(space, &calib, &p, &cfg);
+            canonical_ns = out.canonical_ns;
+            optimized_ns = out.optimized_ns;
+            std::hint::black_box(out.placement.hbm.len());
+        });
+        let search_secs = quick.results().last().unwrap().ns_per_iter.mean / 1e9;
+
+        println!(
+            "{name:>8}: hop_stats {} ({evals_per_sec:.0} evals/s), \
+             search {search_secs:.3}s, comm {canonical_ns:.2} -> {optimized_ns:.2} ns",
+            fmt_ns(stats_ns)
+        );
+        rows.push((
+            name.to_string(),
+            p.n_footprints(),
+            evals_per_sec,
+            search_secs,
+            canonical_ns,
+            optimized_ns,
+        ));
+    }
+
+    let mut csv = report::csv(
+        "perf_place.csv",
+        &[
+            "case",
+            "tiles",
+            "hop_stats_evals_per_sec",
+            "search_secs",
+            "canonical_comm_ns",
+            "optimized_comm_ns",
+        ],
+    );
+    for (name, tiles, eps, secs, can, opt) in &rows {
+        csv.labeled_row(name, &[*tiles as f64, *eps, *secs, *can, *opt]).expect("csv row");
+    }
+    csv.flush().expect("csv flush");
+
+    // BENCH_place.json: the machine-readable perf-trajectory seed.
+    let mut json = String::from("{\n  \"budget\": ");
+    json.push_str(&budget.to_string());
+    json.push_str(",\n  \"cases\": {\n");
+    for (i, (name, tiles, eps, secs, can, opt)) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    \"{name}\": {{\"tiles\": {tiles}, \"hop_stats_evals_per_sec\": {eps:.1}, \
+             \"search_secs\": {secs:.4}, \"canonical_comm_ns\": {can:.4}, \
+             \"optimized_comm_ns\": {opt:.4}}}{}\n",
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  }\n}\n");
+    let path = report::write_text("BENCH_place.json", &json);
+    println!("wrote {}", path.display());
+}

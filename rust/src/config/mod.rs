@@ -12,6 +12,7 @@ use anyhow::{Context, Result};
 use crate::cost::Calib;
 use crate::model::space::{ArchType, DesignSpace};
 use crate::opt::sa::SaConfig;
+use crate::place::PlacementMode;
 use crate::scenario::Scenario;
 use crate::util::cli::Args;
 use crate::util::json::Json;
@@ -46,6 +47,13 @@ pub struct RunConfig {
     /// Architecture restriction inherited from the scenario's packaging
     /// (e.g. organic-substrate locks the space to 2.5D).
     pub arch_lock: Option<ArchType>,
+    /// Placement treatment (config key `placement` / CLI `--placement`
+    /// / scenario `placement`): `canonical` (default, the closed-form
+    /// paper layout), `optimized` (attach-point search: the `place`
+    /// subcommand, sweeps, and a reward-guarded re-score pass on the
+    /// `sa`/`ga`/`greedy`/`portfolio`/`optimize` outcomes), or
+    /// `learned` (gym placement action head).
+    pub placement: PlacementMode,
 }
 
 impl Default for RunConfig {
@@ -65,18 +73,24 @@ impl Default for RunConfig {
             jobs: 0,
             scenario: None,
             arch_lock: None,
+            placement: PlacementMode::Canonical,
         }
     }
 }
 
 impl RunConfig {
     pub fn space(&self) -> DesignSpace {
-        DesignSpace { chiplet_cap: self.chiplet_cap, arch_lock: self.arch_lock }
+        DesignSpace {
+            chiplet_cap: self.chiplet_cap,
+            arch_lock: self.arch_lock,
+            placement_head: self.placement == PlacementMode::Learned,
+        }
     }
 
     /// Reconfigure this run from a [`Scenario`]: design space (cap +
-    /// packaging lock), calibration, and SA budget. CLI overrides still
-    /// apply on top (call before [`RunConfig::apply_args`]).
+    /// packaging lock), calibration, placement mode, and SA budget. CLI
+    /// overrides still apply on top (call before
+    /// [`RunConfig::apply_args`]).
     pub fn apply_scenario(&mut self, s: &Scenario) -> Result<()> {
         self.chiplet_cap = s.chiplet_cap;
         self.arch_lock = s.space().arch_lock;
@@ -84,6 +98,7 @@ impl RunConfig {
         self.sa.iterations = s.budget.sa_iterations;
         self.sa_seeds = s.budget.sa_seeds.clone();
         self.scenario = Some(s.name.clone());
+        self.placement = s.placement;
         Ok(())
     }
 
@@ -152,6 +167,10 @@ impl RunConfig {
         if let Some(s) = v.get("scenario").and_then(Json::as_str) {
             self.scenario = Some(s.to_string());
         }
+        if let Some(pm) = v.get("placement").and_then(Json::as_str) {
+            self.placement = PlacementMode::parse(pm)
+                .unwrap_or_else(|| panic!("config placement: unknown mode {pm:?}"));
+        }
     }
 
     /// Apply CLI overrides on top (CLI wins over config file).
@@ -185,6 +204,10 @@ impl RunConfig {
         self.jobs = args.jobs(self.jobs);
         if let Some(s) = args.get("scenario") {
             self.scenario = Some(s.to_string());
+        }
+        if let Some(pm) = args.get("placement") {
+            self.placement = PlacementMode::parse(pm)
+                .unwrap_or_else(|| panic!("--placement: unknown mode {pm:?}"));
         }
     }
 }
@@ -274,6 +297,26 @@ mod tests {
         let args = Args::parse("sa --sa-iters 777".split_whitespace().map(String::from));
         cfg.apply_args(&args);
         assert_eq!(cfg.sa.iterations, 777);
+    }
+
+    #[test]
+    fn placement_defaults_canonical_and_overrides() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.placement, PlacementMode::Canonical);
+        assert!(!cfg.space().placement_head);
+        let v = Json::parse(r#"{"placement": "optimized"}"#).unwrap();
+        cfg.apply_json(&v);
+        assert_eq!(cfg.placement, PlacementMode::Optimized);
+        assert!(!cfg.space().placement_head, "only learned grows the head");
+        let args = Args::parse("eval --placement learned".split_whitespace().map(String::from));
+        cfg.apply_args(&args);
+        assert_eq!(cfg.placement, PlacementMode::Learned);
+        assert!(cfg.space().placement_head);
+        // scenario application carries the mode too
+        let mut cfg = RunConfig::default();
+        let s = crate::scenario::registry::find("placement-case-i").unwrap();
+        cfg.apply_scenario(&s).unwrap();
+        assert_eq!(cfg.placement, PlacementMode::Optimized);
     }
 
     #[test]

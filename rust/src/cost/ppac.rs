@@ -4,8 +4,9 @@
 //! it is allocation-free after the `MeshGrid` attach vector (≤ 6 entries)
 //! and fast enough for millions of calls.
 
-use crate::mesh::grid::hop_stats;
+use crate::mesh::grid::{hop_stats, HopStats};
 use crate::model::space::DesignPoint;
+use crate::place::Placement;
 
 use super::bandwidth;
 use super::constants::Calib;
@@ -91,7 +92,42 @@ pub fn evaluate(c: &Calib, p: &DesignPoint) -> Evaluation {
     // §Perf: hop statistics are memoized over (footprints, HBM mask) —
     // this function is the SA inner loop (millions of calls per run).
     let stats = hop_stats(p.n_footprints(), p.hbm_mask);
-    let lat: Latencies = throughput::latencies_from_stats(p, &stats);
+    evaluate_from_stats(c, p, &geo, &stats)
+}
+
+/// [`evaluate`] under an explicit placement: the hop statistics come
+/// from the placement's true per-tile evaluation instead of the
+/// memoized closed-form layout. `None` delegates to [`evaluate`]
+/// unchanged (the `placement = canonical` path — bit-identical to the
+/// pre-placement pipeline by construction, since both run the same
+/// float operations in the same order).
+pub fn evaluate_with_placement(
+    c: &Calib,
+    p: &DesignPoint,
+    placement: Option<&Placement>,
+) -> Evaluation {
+    match placement {
+        None => evaluate(c, p),
+        Some(pl) => {
+            let geo = throughput::geometry(c, p);
+            if !geo.feasible {
+                return Evaluation::infeasible(c, &geo);
+            }
+            evaluate_from_stats(c, p, &geo, &pl.hop_stats())
+        }
+    }
+}
+
+/// Shared tail of [`evaluate`] / [`evaluate_with_placement`]: the full
+/// Section 3 model from pre-computed geometry and hop statistics.
+fn evaluate_from_stats(
+    c: &Calib,
+    p: &DesignPoint,
+    geo: &Geometry,
+    stats: &HopStats,
+) -> Evaluation {
+    let geo = *geo;
+    let lat: Latencies = throughput::latencies_from_stats(p, stats);
 
     let peak_chip = throughput::chip_peak_ops(c, &geo);
     let peak_tops = peak_chip * p.n_chiplets as f64 / 1e12;
@@ -102,7 +138,7 @@ pub fn evaluate(c: &Calib, p: &DesignPoint) -> Evaluation {
         * u_sys
         / 1e12;
 
-    let e_comm = energy::e_comm_per_op_pj_from_stats(c, p, &stats);
+    let e_comm = energy::e_comm_per_op_pj_from_stats(c, p, stats);
     let e_op = c.e_mac_pj + c.e_dram_pj_bit * c.dram_bits_per_op + e_comm;
     let e_task = energy::energy_per_task_mj(e_op, c.ref_task_gmac);
 
@@ -112,7 +148,7 @@ pub fn evaluate(c: &Calib, p: &DesignPoint) -> Evaluation {
         c.cluster_alpha,
     );
     let die_cost = die_cost::system_die_cost(c, geo.area_per_chiplet, p.n_chiplets);
-    let pkg_cost = package_cost::package_cost_from_stats(c, p, &stats);
+    let pkg_cost = package_cost::package_cost_from_stats(c, p, stats);
 
     // eq. 17: r = αT − βC − γE. T in effective TMAC/s, C the packaging
     // cost (eq. 16 units), E the communication+compute energy per
@@ -267,6 +303,58 @@ mod tests {
         let ok = evaluate(&c2, &p);
         assert!(ok.feasible);
         assert_eq!(ok.reward, evaluate(&Calib::default(), &p).reward);
+    }
+
+    #[test]
+    fn placement_none_is_bitwise_identical_to_evaluate() {
+        let c = Calib::default();
+        let space = DesignSpace::case_ii();
+        let mut rng = Rng::new(31);
+        for _ in 0..500 {
+            let p = space.decode(&space.random_action(&mut rng));
+            let a = evaluate(&c, &p);
+            let b = evaluate_with_placement(&c, &p, None);
+            assert_eq!(a.reward.to_bits(), b.reward.to_bits());
+            assert_eq!(a.throughput_tops.to_bits(), b.throughput_tops.to_bits());
+            assert_eq!(a.pkg_cost.to_bits(), b.pkg_cost.to_bits());
+            assert_eq!(a.l_hbm2ai_ns.to_bits(), b.l_hbm2ai_ns.to_bits());
+        }
+    }
+
+    #[test]
+    fn canonical_placement_matches_closed_form_closely() {
+        // The explicit canonical placement runs the same model over the
+        // same integer hop counts; only the mean-hop summation order
+        // differs, so every metric agrees to float-roundoff.
+        let c = Calib::default();
+        let space = DesignSpace::case_i();
+        let p = space.decode(&paper_case_i_action());
+        let closed = evaluate(&c, &p);
+        let pl = crate::place::Placement::canonical(p.n_footprints(), &p.hbm_locs());
+        let placed = evaluate_with_placement(&c, &p, Some(&pl));
+        assert_eq!(closed.l_ai2ai_ns.to_bits(), placed.l_ai2ai_ns.to_bits());
+        assert_eq!(closed.l_hbm2ai_ns.to_bits(), placed.l_hbm2ai_ns.to_bits());
+        assert!((closed.reward - placed.reward).abs() < 1e-6);
+        assert!((closed.e_comm_pj - placed.e_comm_pj).abs() < 1e-9);
+    }
+
+    #[test]
+    fn better_placement_raises_throughput_and_reward() {
+        // A single left-edge HBM leaves half the mesh far from memory;
+        // centering the attach lowers supply latency (and mean hops), so
+        // throughput, energy and reward all move the right way.
+        let c = Calib::default();
+        let space = DesignSpace::case_i();
+        let mut a = paper_case_i_action();
+        a[2] = 0b000001 - 1; // HBM @ left only
+        let p = space.decode(&a);
+        let canonical = evaluate(&c, &p);
+        let spread = crate::place::Placement::spread(p.n_footprints(), &p.hbm_locs());
+        let placed = evaluate_with_placement(&c, &p, Some(&spread));
+        assert!(placed.l_hbm2ai_ns < canonical.l_hbm2ai_ns);
+        assert!(placed.throughput_tops > canonical.throughput_tops);
+        assert!(placed.e_comm_pj < canonical.e_comm_pj);
+        assert!(placed.reward > canonical.reward);
     }
 
     #[test]

@@ -109,6 +109,13 @@ pub fn latencies(p: &DesignPoint, grid: &MeshGrid) -> Latencies {
     latencies_from_stats(p, &HopStats::of(grid))
 }
 
+/// Evaluate eq. (11) under an explicit placement: the hop counts come
+/// from the placement's true per-tile evaluation instead of the
+/// closed-form grid.
+pub fn latencies_placed(p: &DesignPoint, placement: &crate::place::Placement) -> Latencies {
+    latencies_from_stats(p, &placement.hop_stats())
+}
+
 /// Evaluate eq. (11) from precomputed hop statistics (§Perf fast path).
 pub fn latencies_from_stats(p: &DesignPoint, stats: &HopStats) -> Latencies {
     let d25 = LatencyParams::d25();

@@ -1,7 +1,8 @@
 //! The Chiplet-Gym environment implementation.
 
-use crate::cost::{evaluate, Calib, Evaluation};
+use crate::cost::{evaluate, evaluate_with_placement, Calib, Evaluation};
 use crate::model::space::{DesignPoint, DesignSpace, N_HEADS};
+use crate::place::Placement;
 use crate::util::stats::BestTracker;
 
 /// Observation dimensionality (paper Section 5.2.1: max package area,
@@ -84,13 +85,28 @@ impl ChipletGymEnv {
         self.observation()
     }
 
-    /// Evaluate `action` (a 14-head MultiDiscrete sample), update state.
+    /// Evaluate `action` (a 14-head MultiDiscrete sample, plus the
+    /// placement head when `space.placement_head` is set), update state.
     /// The caller sees the terminal observation first (gym semantics);
     /// auto-reset bookkeeping happens in [`ChipletGymEnv::reset`].
+    ///
+    /// With the placement head on, `action[N_HEADS]` selects a layout
+    /// from the `place::templates` catalog (index 0 = canonical, so a
+    /// policy can always fall back to the closed-form placement) and the
+    /// design is evaluated under it; the head folds modulo the catalog
+    /// size, keeping every action decodable.
     pub fn step(&mut self, action: &[usize]) -> Step {
-        assert_eq!(action.len(), N_HEADS);
-        let point = self.space.decode(action);
-        let eval = evaluate(&self.calib, &point);
+        assert_eq!(action.len(), self.space.action_len());
+        let point = self.space.decode(&action[..N_HEADS]);
+        let eval = if self.space.placement_head {
+            // Build only the selected layout (the head folds modulo the
+            // catalog inside `template`).
+            let layout =
+                Placement::template(point.n_footprints(), &point.hbm_locs(), action[N_HEADS]);
+            evaluate_with_placement(&self.calib, &point, Some(&layout))
+        } else {
+            evaluate(&self.calib, &point)
+        };
         self.best.offer(eval.reward, || point);
         self.last_eval = Some(eval);
         self.steps_in_episode += 1;
@@ -284,6 +300,56 @@ mod tests {
         b.step(&act);
         fresh.merge_best(&b);
         assert_eq!(fresh.best().map(|(r, _)| r), b.best().map(|(r, _)| r));
+    }
+
+    #[test]
+    fn placement_head_template_zero_matches_canonical() {
+        // Head value 0 selects the canonical layout: same integer hop
+        // counts, so the reward agrees to float-roundoff (only the
+        // mean-hop summation order differs from the closed form).
+        let space = DesignSpace::case_i().with_placement_head();
+        let mut env = ChipletGymEnv::new(space, Calib::default(), 2);
+        let mut plain = ChipletGymEnv::case_i();
+        let mut rng = Rng::new(8);
+        for _ in 0..50 {
+            let a14 = plain.space.random_action(&mut rng);
+            let mut a15 = a14.to_vec();
+            a15.push(0);
+            let placed = env.step(&a15);
+            let base = plain.step(&a14);
+            assert!(
+                (placed.reward - base.reward).abs() < 1e-6,
+                "template 0 diverged: {} vs {}",
+                placed.reward,
+                base.reward
+            );
+        }
+    }
+
+    #[test]
+    fn placement_head_spread_improves_single_left_hbm() {
+        use crate::model::space::paper_points;
+        let space = DesignSpace::case_i().with_placement_head();
+        let mut env = ChipletGymEnv::new(space, Calib::default(), 8);
+        let mut a = paper_points::table6_case_i().to_vec();
+        a[2] = 0; // HBM @ left only
+        a.push(0); // canonical layout
+        let canonical = env.step(&a).reward;
+        a[N_HEADS] = 1; // spread layout
+        let spread = env.step(&a).reward;
+        assert!(spread > canonical, "spread {spread} !> canonical {canonical}");
+        // the head folds modulo the catalog, so any index is steppable
+        a[N_HEADS] = 4 + 1;
+        assert!((env.step(&a).reward - spread).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn placement_head_env_rejects_14_head_actions() {
+        let space = DesignSpace::case_i().with_placement_head();
+        let mut env = ChipletGymEnv::new(space, Calib::default(), 2);
+        let a = [0usize; N_HEADS];
+        env.step(&a);
     }
 
     #[test]

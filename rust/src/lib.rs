@@ -21,6 +21,11 @@
 //! * [`model`] — the design space of Table 1 and the packaging-technology
 //!   tables (Tables 3–4).
 //! * [`mesh`] — 2D-mesh Network-on-Package hop/latency model (Fig. 4).
+//! * [`place`] — the placement engine: explicit chiplet/HBM placement
+//!   ([`place::Placement`]: occupied tiles + HBM attach points, true
+//!   per-tile hop evaluation) and the attach-point optimizer built on
+//!   the `opt::search` drivers; `canonical` mode preserves the
+//!   closed-form paper path bit-identically.
 //! * [`cost`] — analytical PPAC model: yield (eq. 8–9), die cost, package
 //!   cost (eq. 16), throughput (eq. 1–5), bandwidth (eq. 12–14), energy
 //!   (eq. 6–7, 15).
@@ -56,6 +61,7 @@ pub mod gym;
 pub mod mesh;
 pub mod model;
 pub mod opt;
+pub mod place;
 pub mod report;
 pub mod rl;
 pub mod runtime;

@@ -9,6 +9,8 @@
 //!              Alg. 1 over the non-RL portfolio).
 //!   sweep      Scenario sweep: optimize each scenario, emit per-scenario
 //!              CSVs + a cross-scenario Pareto frontier (offline).
+//!   place      Optimize the HBM attach placement of one design point;
+//!              print canonical vs optimized layouts and metrics.
 //!   ppo        Train one PPO agent, print the convergence trace.
 //!   eval       Evaluate one design point (defaults to Table 6 case i).
 //!   mlperf     Fig. 12 comparison: chiplet systems vs monolithic GPU.
@@ -33,8 +35,13 @@ use chiplet_gym::opt::combined::CombinedConfig;
 use chiplet_gym::opt::parallel::{
     combined_optimize_par, portfolio_optimize_par, sa_only_optimize_par, worker_count,
 };
+use chiplet_gym::cost::evaluate_with_placement;
+use chiplet_gym::opt::combined::{Candidate, OptOutcome};
 use chiplet_gym::opt::sa::{simulated_annealing, SaConfig};
 use chiplet_gym::opt::search::{DriverConfig, PortfolioMember};
+use chiplet_gym::place::{
+    optimize_placement, refine_outcome, PlaceConfig, Placement, PlacementMode,
+};
 use chiplet_gym::report;
 use chiplet_gym::rl::{train_ppo, PpoConfig};
 use chiplet_gym::runtime::Engine;
@@ -120,21 +127,124 @@ fn print_design(space: &DesignSpace, calib: &Calib, action: &[usize]) {
     m.print();
 }
 
+/// `--action a,b,...` (14 comma-separated head indices) or the Table 6
+/// case (i) reference point — shared by `eval` and `place`.
+fn parse_action(args: &Args) -> [usize; N_HEADS] {
+    match args.get("action") {
+        Some(spec) => {
+            let parts: Vec<usize> = spec
+                .split(',')
+                .map(|p| p.trim().parse().expect("--action must be 14 ints"))
+                .collect();
+            assert_eq!(parts.len(), N_HEADS, "--action needs 14 comma-separated heads");
+            let mut a = [0usize; N_HEADS];
+            a.copy_from_slice(&parts);
+            a
+        }
+        None => table6_case_i_action(),
+    }
+}
+
 fn cmd_eval(cfg: &RunConfig, args: &Args) {
     let space = cfg.space();
-    let action = if let Some(spec) = args.get("action") {
-        let parts: Vec<usize> = spec
-            .split(',')
-            .map(|p| p.trim().parse().expect("--action must be 14 ints"))
-            .collect();
-        assert_eq!(parts.len(), N_HEADS, "--action needs 14 comma-separated heads");
-        let mut a = [0usize; N_HEADS];
-        a.copy_from_slice(&parts);
-        a
-    } else {
-        table6_case_i_action()
+    print_design(&space, &cfg.calib, &parse_action(args));
+}
+
+fn cmd_place(cfg: &RunConfig, args: &Args) -> Result<()> {
+    // The place subcommand never needs the learned action head; strip it
+    // so --scenario placement-learned still evaluates 14-head actions.
+    let mut space = cfg.space();
+    space.placement_head = false;
+    let action = parse_action(args);
+    let p = space.decode(&action);
+
+    let budget: usize = args.get_parse("place-budget", 2_000);
+    let driver = match args.get_or("place-method", "greedy") {
+        "greedy" => DriverConfig::greedy_with_budget(budget),
+        "sa" => DriverConfig::Sa(SaConfig {
+            iterations: budget,
+            trace_every: 0,
+            ..SaConfig::default()
+        }),
+        "random" => DriverConfig::random_with_budget(budget),
+        other => bail!("--place-method {other:?}: expected greedy|sa|random"),
     };
-    print_design(&space, &cfg.calib, &action);
+    let place_cfg = PlaceConfig { driver, seed: *cfg.sa_seeds.first().unwrap_or(&0) };
+
+    println!(
+        "placement search: {} footprints ({} HBM attach site(s)), {} driver, {budget}-eval budget",
+        p.n_footprints(),
+        p.n_hbm(),
+        place_cfg.driver.name(),
+    );
+    let t0 = std::time::Instant::now();
+    let out = optimize_placement(&space, &cfg.calib, &p, &place_cfg);
+    let canonical = Placement::canonical(p.n_footprints(), &p.hbm_locs());
+
+    let mut t = Table::new(["metric", "canonical", "optimized"]);
+    let (cs, os) = (canonical.hop_stats(), out.placement.hop_stats());
+    t.row([
+        "worst-case HBM->AI hops".to_string(),
+        cs.max_hbm_hops.to_string(),
+        os.max_hbm_hops.to_string(),
+    ]);
+    t.row([
+        "mean HBM->AI hops".to_string(),
+        format!("{:.3}", cs.mean_hbm_hops),
+        format!("{:.3}", os.mean_hbm_hops),
+    ]);
+    t.row([
+        "worst-case comm latency (ns)".to_string(),
+        format!("{:.2}", out.canonical_ns),
+        format!("{:.2}", out.optimized_ns),
+    ]);
+    let e_can = evaluate(&cfg.calib, &p);
+    let e_opt = evaluate_with_placement(&cfg.calib, &p, Some(&out.placement));
+    t.row([
+        "throughput (TMAC/s)".to_string(),
+        format!("{:.1}", e_can.throughput_tops),
+        format!("{:.1}", e_opt.throughput_tops),
+    ]);
+    t.row([
+        "reward (eq. 17)".to_string(),
+        format!("{:.2}", e_can.reward),
+        format!("{:.2}", e_opt.reward),
+    ]);
+    t.print();
+    println!(
+        "searched {} layouts in {:.2}s; attach tiles: {}",
+        out.evaluations,
+        t0.elapsed().as_secs_f64(),
+        out.placement.attach_string()
+    );
+    println!("\noptimized layout ({}x{} mesh; H = 2.5D attach, S = stacked):", os.m, os.n);
+    println!("{}", out.placement.render());
+    Ok(())
+}
+
+/// Apply the `--placement optimized|learned` refinement to an optimizer
+/// outcome — the same reward-guarded post-pass the sweep engine runs —
+/// so the standalone subcommands agree with `sweep` on placement
+/// scenarios instead of silently ignoring the mode. No-op (and no
+/// output) for canonical.
+fn refine_placement(cfg: &RunConfig, space: &DesignSpace, out: &mut OptOutcome) {
+    if cfg.placement == PlacementMode::Canonical {
+        return;
+    }
+    // Strip the learned head: the non-RL drivers emit 14-head actions.
+    let mut space = *space;
+    space.placement_head = false;
+    let summaries = refine_outcome(&space, &cfg.calib, out, &PlaceConfig::default());
+    let improved = summaries
+        .iter()
+        .filter(|s| s.comm_ns < s.canonical_comm_ns)
+        .count();
+    println!(
+        "placement ({}): re-scored {} candidate(s); {} improved worst-case comm latency",
+        cfg.placement.name(),
+        summaries.len(),
+        improved
+    );
 }
 
 fn cmd_sa(cfg: &RunConfig) {
@@ -148,8 +258,16 @@ fn cmd_sa(cfg: &RunConfig) {
     );
     if cfg.sa_seeds.len() == 1 {
         let trace = simulated_annealing(&space, &cfg.calib, &cfg.sa, cfg.sa_seeds[0]);
-        println!("best objective: {:.2}", trace.best_eval.reward);
-        print_design(&space, &cfg.calib, &trace.best_action);
+        let cand = Candidate {
+            source: "SA".into(),
+            seed: cfg.sa_seeds[0],
+            action: trace.best_action,
+            eval: trace.best_eval,
+        };
+        let mut out = OptOutcome { best: cand.clone(), candidates: vec![cand] };
+        refine_placement(cfg, &space, &mut out);
+        println!("best objective: {:.2}", out.best.eval.reward);
+        print_design(&space, &cfg.calib, &out.best.action);
     } else {
         println!(
             "{} seeds across {} worker threads (--jobs {})",
@@ -157,7 +275,8 @@ fn cmd_sa(cfg: &RunConfig) {
             worker_count(cfg.jobs, cfg.sa_seeds.len()),
             cfg.jobs
         );
-        let out = sa_only_optimize_par(space, &cfg.calib, &cfg.sa, &cfg.sa_seeds, cfg.jobs);
+        let mut out = sa_only_optimize_par(space, &cfg.calib, &cfg.sa, &cfg.sa_seeds, cfg.jobs);
+        refine_placement(cfg, &space, &mut out);
         for c in &out.candidates {
             println!("  SA seed {:3}: {:.2}", c.seed, c.eval.reward);
         }
@@ -218,7 +337,8 @@ fn cmd_portfolio(cfg: &RunConfig, which: &str) -> Result<()> {
         cfg.jobs
     );
     let t0 = std::time::Instant::now();
-    let out = portfolio_optimize_par(space, &cfg.calib, &members, cfg.jobs);
+    let mut out = portfolio_optimize_par(space, &cfg.calib, &members, cfg.jobs);
+    refine_placement(cfg, &space, &mut out);
     for c in &out.candidates {
         println!("  {:>7} seed {:3}: {:.2}", c.source, c.seed, c.eval.reward);
     }
@@ -311,7 +431,8 @@ fn cmd_optimize(cfg: &RunConfig, args: &Args) -> Result<()> {
         cfg.jobs
     );
     let t0 = std::time::Instant::now();
-    let out = combined_optimize_par(&engine, cfg.space(), &cfg.calib, &combined, cfg.jobs)?;
+    let mut out = combined_optimize_par(&engine, cfg.space(), &cfg.calib, &combined, cfg.jobs)?;
+    refine_placement(cfg, &cfg.space(), &mut out);
     for c in &out.candidates {
         println!("  {:>6} seed {:3}: {:.2}", c.source, c.seed, c.eval.reward);
     }
@@ -510,6 +631,7 @@ fn main() -> Result<()> {
         Some("greedy") => cmd_portfolio(&cfg, "greedy")?,
         Some("portfolio") => cmd_portfolio(&cfg, "portfolio")?,
         Some("sweep") => cmd_sweep(&cfg, &args)?,
+        Some("place") => cmd_place(&cfg, &args)?,
         Some("ppo") => cmd_ppo(&cfg)?,
         Some("eval") => cmd_eval(&cfg, &args),
         Some("mlperf") => cmd_mlperf(&cfg),
@@ -519,16 +641,19 @@ fn main() -> Result<()> {
                 eprintln!("unknown command {cmd:?}\n");
             }
             eprintln!(
-                "usage: chiplet-gym <optimize|sa|ga|greedy|portfolio|sweep|ppo|eval|mlperf|info> \
+                "usage: chiplet-gym \
+                 <optimize|sa|ga|greedy|portfolio|sweep|place|ppo|eval|mlperf|info> \
                  [--case i|ii] [--seeds 0,1,..] [--sa-iters N (= eval budget)] \
                  [--ga-pop N] [--jobs N (0 = all cores)] \
                  [optimize: --with-portfolio (add GA+greedy members)] \
                  [--timesteps N] [--episode-len N] [--ent-coef X] \
                  [--n-envs K (VecEnv rollout width)] \
                  [--alpha X --beta X --gamma X] [--config file.json] \
-                 [--scenario NAME] \
+                 [--scenario NAME] [--placement canonical|optimized|learned] \
                  [sweep: --scenarios all|list|a,b --scenario-file f.toml \
-                 --out-dir DIR]"
+                 --out-dir DIR] \
+                 [place: --action a,b,.. --place-budget N \
+                 --place-method greedy|sa|random]"
             );
             std::process::exit(2);
         }

@@ -6,8 +6,14 @@ use crate::model::space::HbmLoc;
 /// (m ≤ n, m·n = n_footprints). The paper keeps the aspect ratio "as
 /// close as possible to 1" (Section 3.3.2); 30 → 5×6, 56 → 7×8 exactly
 /// as Table 6 reports.
+///
+/// Edge cases (pinned by tests): `n = 0` panics (no mesh exists — a
+/// `DesignPoint` always has ≥ 1 footprint); `n = 1` is the degenerate
+/// 1×1 mesh; primes factor to a 1×n line, the closed-form model's
+/// worst aspect ratio — `place::Placement` can lay such counts out as
+/// compact blobs on a larger bounding grid instead.
 pub fn mesh_dims(n_footprints: usize) -> (usize, usize) {
-    assert!(n_footprints >= 1);
+    assert!(n_footprints >= 1, "mesh_dims: a mesh needs at least one footprint");
     let mut m = (n_footprints as f64).sqrt() as usize;
     while m >= 1 {
         if n_footprints % m == 0 {
@@ -148,13 +154,7 @@ pub fn hop_stats(n_footprints: usize, hbm_mask: u8) -> HopStats {
 }
 
 fn compute_stats(n_footprints: usize, hbm_mask: u8) -> HopStats {
-    use crate::model::space::HBM_LOCS;
-    let locs: Vec<_> = HBM_LOCS
-        .iter()
-        .enumerate()
-        .filter(|(i, _)| hbm_mask & (1 << i) != 0)
-        .map(|(_, &l)| l)
-        .collect();
+    let locs = crate::model::space::locs_of_mask(hbm_mask);
     HopStats::of(&MeshGrid::new(n_footprints, &locs))
 }
 
@@ -271,6 +271,68 @@ mod tests {
             assert!((stats.mean_hbm_hops - direct.mean_hbm_hops).abs() < 1e-12);
             assert_eq!(stats.n_edges, direct.n_edges);
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one footprint")]
+    fn mesh_dims_rejects_zero_footprints() {
+        mesh_dims(0);
+    }
+
+    #[test]
+    fn mesh_dims_edge_cases_pinned() {
+        // n = 1: the degenerate 1x1 mesh.
+        assert_eq!(mesh_dims(1), (1, 1));
+        assert_eq!(mesh_dims(2), (1, 2));
+        // primes always degrade to a 1xN line (m <= n, exact factors).
+        for p in [2usize, 3, 5, 13, 31, 127] {
+            assert_eq!(mesh_dims(p), (1, p), "prime {p}");
+        }
+        // near-square composites pick the most-square factor pair, and
+        // the factorization is always exact: m * n == n_footprints.
+        for fp in 1..=128usize {
+            let (m, n) = mesh_dims(fp);
+            assert!(m >= 1 && m <= n, "fp {fp}: ({m}, {n})");
+            assert_eq!(m * n, fp, "fp {fp}: mesh must hold exactly fp tiles");
+            // most-square: no factor pair with a larger small side
+            for cand in (m + 1)..=((fp as f64).sqrt() as usize) {
+                assert_ne!(fp % cand, 0, "fp {fp}: ({cand}, {}) squarer", fp / cand);
+            }
+        }
+    }
+
+    #[test]
+    fn single_footprint_stats_pinned() {
+        // n_fp = 1: one tile, zero AI hops, supply distance = the
+        // attach's extra hop only.
+        let s = hop_stats(1, 0b000001); // left HBM
+        assert_eq!((s.m, s.n), (1, 1));
+        assert_eq!(s.max_ai_hops, 0);
+        assert_eq!(s.mean_ai_hops, 0.0);
+        assert_eq!(s.max_hbm_hops, 1, "edge HBM is one package hop away");
+        assert_eq!(s.n_edges, 0);
+        let stacked = hop_stats(1, 0b100000);
+        assert_eq!(stacked.max_hbm_hops, 0, "stacked HBM sits on its host");
+    }
+
+    #[test]
+    #[should_panic]
+    fn hop_stats_rejects_empty_hbm_mask() {
+        // mask 0 has no attach points: debug builds trip the
+        // debug_assert, release builds the no-attach-point expect —
+        // either way the contract (mask in 1..=63) is enforced loudly.
+        hop_stats(4, 0);
+    }
+
+    #[test]
+    fn prime_counts_degrade_to_lines_with_long_diameters() {
+        // The closed-form model's non-rectangular wart, pinned: 31
+        // footprints form a 1x31 line with a 30-hop diameter (the
+        // placement engine's bounding-grid layouts are the remedy).
+        let s = hop_stats(31, 1);
+        assert_eq!((s.m, s.n), (1, 31));
+        assert_eq!(s.max_ai_hops, 30);
+        assert_eq!(s.n_edges, 30);
     }
 
     #[test]

@@ -13,6 +13,14 @@ pub const ACTION_DIMS: [usize; 14] = [3, 128, 63, 2, 20, 100, 10, 2, 31, 100, 2,
 /// Number of design parameters (categorical heads).
 pub const N_HEADS: usize = 14;
 
+/// Cardinality of the optional *placement* action head
+/// ([`DesignSpace::placement_head`]): the learned-placement catalog size
+/// of `place::templates` (canonical, spread, center-line, perimeter).
+/// The head is appended after the 14 Table 1 heads and selects how the
+/// design's HBM attach points are laid out on the mesh; it never changes
+/// the decoded [`DesignPoint`].
+pub const PLACEMENT_HEAD_DIM: usize = 4;
+
 /// Top-level architecture (Fig. 2 of the paper).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ArchType {
@@ -61,6 +69,18 @@ pub const HBM_LOCS: [HbmLoc; 6] = [
     HbmLoc::Stacked3D,
 ];
 
+/// The HBM locations a placement bitmask over [`HBM_LOCS`] selects —
+/// the one mask→locations conversion every layer (decode, mesh stats,
+/// placement, tests) shares.
+pub fn locs_of_mask(mask: u8) -> Vec<HbmLoc> {
+    HBM_LOCS
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| mask & (1 << i) != 0)
+        .map(|(_, &loc)| loc)
+        .collect()
+}
+
 /// A fully decoded design point (one element of the 2.1e17-point space).
 #[derive(Clone, Debug, PartialEq)]
 pub struct DesignPoint {
@@ -88,12 +108,7 @@ pub struct DesignPoint {
 impl DesignPoint {
     /// HBM locations selected by the mask.
     pub fn hbm_locs(&self) -> Vec<HbmLoc> {
-        HBM_LOCS
-            .iter()
-            .enumerate()
-            .filter(|(i, _)| self.hbm_mask & (1 << i) != 0)
-            .map(|(_, &loc)| loc)
-            .collect()
+        locs_of_mask(self.hbm_mask)
     }
 
     /// Number of HBM stacks.
@@ -164,15 +179,24 @@ pub struct DesignSpace {
     /// full Table 1 space; every pre-scenario entry point leaves it
     /// unlocked, so existing behavior is unchanged.
     pub arch_lock: Option<ArchType>,
+    /// When true, actions grow a 15th *placement* head of cardinality
+    /// [`PLACEMENT_HEAD_DIM`] that selects an HBM attach-point layout
+    /// from the `place::templates` catalog (the gym environment
+    /// evaluates the design under that layout). The head is appended
+    /// after the Table 1 heads, never enters [`DesignSpace::decode`],
+    /// and defaults to off — every pre-placement entry point keeps the
+    /// 14-head behavior bit-identical. Scenario `placement = "learned"`
+    /// turns it on.
+    pub placement_head: bool,
 }
 
 impl DesignSpace {
     pub fn case_i() -> DesignSpace {
-        DesignSpace { chiplet_cap: 64, arch_lock: None }
+        DesignSpace { chiplet_cap: 64, arch_lock: None, placement_head: false }
     }
 
     pub fn case_ii() -> DesignSpace {
-        DesignSpace { chiplet_cap: 128, arch_lock: None }
+        DesignSpace { chiplet_cap: 128, arch_lock: None, placement_head: false }
     }
 
     /// This space with the architecture head pinned to `arch`.
@@ -181,15 +205,30 @@ impl DesignSpace {
         self
     }
 
+    /// This space with the learned-placement action head enabled.
+    pub fn with_placement_head(mut self) -> DesignSpace {
+        self.placement_head = true;
+        self
+    }
+
+    /// Action length the environment expects: the 14 Table 1 heads plus
+    /// the optional placement head.
+    pub fn action_len(&self) -> usize {
+        N_HEADS + usize::from(self.placement_head)
+    }
+
     /// Total number of *distinct* design points (for reporting;
-    /// ≈ 2.1 × 10^17 unlocked — an arch lock collapses the first head).
+    /// ≈ 2.1 × 10^17 unlocked — an arch lock collapses the first head,
+    /// the placement head multiplies by its catalog size).
     pub fn cardinality(&self) -> f64 {
-        let base: f64 = ACTION_DIMS.iter().map(|&d| d as f64).product();
+        let mut base: f64 = ACTION_DIMS.iter().map(|&d| d as f64).product();
         if self.arch_lock.is_some() {
-            base / ACTION_DIMS[0] as f64
-        } else {
-            base
+            base /= ACTION_DIMS[0] as f64;
         }
+        if self.placement_head {
+            base *= PLACEMENT_HEAD_DIM as f64;
+        }
+        base
     }
 
     /// Decode a raw MultiDiscrete action into a design point.
@@ -408,6 +447,23 @@ mod tests {
         let p = space.decode(&a);
         assert_eq!(p.hbm_mask, 1 << 4);
         assert_eq!(p.hbm_locs(), vec![HbmLoc::Middle]);
+    }
+
+    #[test]
+    fn placement_head_extends_action_len_and_cardinality() {
+        let space = DesignSpace::case_i();
+        assert!(!space.placement_head);
+        assert_eq!(space.action_len(), N_HEADS);
+        let placed = space.with_placement_head();
+        assert_eq!(placed.action_len(), N_HEADS + 1);
+        let ratio = placed.cardinality() / space.cardinality();
+        assert!((ratio - PLACEMENT_HEAD_DIM as f64).abs() < 1e-9, "ratio {ratio}");
+        // the decode surface is untouched by the flag
+        let mut rng = Rng::new(11);
+        for _ in 0..200 {
+            let a = space.random_action(&mut rng);
+            assert_eq!(space.decode(&a), placed.decode(&a));
+        }
     }
 
     #[test]

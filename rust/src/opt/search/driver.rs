@@ -43,6 +43,27 @@ pub struct SearchTrace {
 /// Every implementation must be a pure function of `(space, objective,
 /// seed)` — all stochasticity through `util::Rng::new(seed)` — so runs
 /// are reproducible and the parallel fan-out is order-deterministic.
+///
+/// # Examples
+///
+/// Run simulated annealing (Alg. 2) through the trait against the
+/// default eq. 17 objective:
+///
+/// ```
+/// use chiplet_gym::cost::Calib;
+/// use chiplet_gym::model::space::DesignSpace;
+/// use chiplet_gym::opt::sa::SaConfig;
+/// use chiplet_gym::opt::search::{CostObjective, SearchDriver};
+///
+/// let space = DesignSpace::case_i();
+/// let calib = Calib::default();
+/// let sa = SaConfig { iterations: 300, trace_every: 100, ..SaConfig::default() };
+/// let mut obj = CostObjective::new(&space, &calib);
+/// let trace = sa.search(&space, &mut obj, 7).unwrap();
+/// assert_eq!(sa.name(), "SA");
+/// assert_eq!(trace.evaluations, 300);
+/// assert!(!trace.history.is_empty());
+/// ```
 pub trait SearchDriver {
     /// Candidate source label (`"SA"`, `"GA"`, `"greedy"`, `"random"`,
     /// `"RL"`), as reported in CSVs and `select_best` provenance.
@@ -61,6 +82,27 @@ pub trait SearchDriver {
 /// Plain-data form of the non-RL drivers, for thread fan-out and
 /// scenario/CLI selection. (The PPO wrapper stays trait-only: it drags
 /// an `Engine` handle that is neither `Copy` nor `Sync`.)
+///
+/// # Examples
+///
+/// Budget-matched construction and infallible dispatch — the surface
+/// the CLI subcommands, scenario files and the placement optimizer
+/// share:
+///
+/// ```
+/// use chiplet_gym::cost::Calib;
+/// use chiplet_gym::model::space::DesignSpace;
+/// use chiplet_gym::opt::search::{CostObjective, DriverConfig};
+///
+/// let space = DesignSpace::case_i();
+/// let calib = Calib::default();
+/// let driver = DriverConfig::greedy_with_budget(200);
+/// assert_eq!(driver.name(), "greedy");
+/// let mut obj = CostObjective::new(&space, &calib);
+/// let trace = driver.run(&space, &mut obj, 0);
+/// assert_eq!(trace.evaluations, 200);
+/// assert!(trace.best_eval.reward.is_finite());
+/// ```
 #[derive(Clone, Copy, Debug)]
 pub enum DriverConfig {
     Sa(SaConfig),

@@ -21,6 +21,28 @@ use crate::model::space::{DesignSpace, N_HEADS};
 /// evaluation) for the portfolio's bit-identical parallel fan-out to
 /// hold; stateful wrappers (caches, call counters) are fine as long as
 /// the returned values stay action-deterministic.
+///
+/// # Examples
+///
+/// Instrument the default eq. 17 objective with a call counter via
+/// [`FnObjective`] — the pattern tests and ad-hoc evaluators use:
+///
+/// ```
+/// use chiplet_gym::cost::{evaluate, Calib};
+/// use chiplet_gym::model::space::{DesignSpace, N_HEADS};
+/// use chiplet_gym::opt::search::{FnObjective, Objective};
+///
+/// let space = DesignSpace::case_i();
+/// let calib = Calib::default();
+/// let mut calls = 0usize;
+/// let mut obj = FnObjective(|a: &[usize; N_HEADS]| {
+///     calls += 1;
+///     evaluate(&calib, &space.decode(a))
+/// });
+/// let eval = obj.evaluate(&[0; N_HEADS]);
+/// assert!(eval.reward.is_finite());
+/// assert_eq!(calls, 1);
+/// ```
 pub trait Objective {
     fn evaluate(&mut self, action: &[usize; N_HEADS]) -> Evaluation;
 }

@@ -14,6 +14,18 @@ pub use crate::util::stats::BestTracker;
 /// irregular inner loops (greedy's neighborhood sweeps, GA's generation
 /// batches) consume permits instead of hand-rolling counters, so
 /// "budget-matched" comparisons across optimizers are exact.
+///
+/// # Examples
+///
+/// ```
+/// use chiplet_gym::opt::search::SearchBudget;
+///
+/// let mut budget = SearchBudget::new(2);
+/// assert!(budget.take() && budget.take());
+/// assert!(!budget.take(), "third permit refused");
+/// assert!(budget.exhausted());
+/// assert_eq!((budget.used(), budget.remaining()), (2, 0));
+/// ```
 #[derive(Clone, Copy, Debug)]
 pub struct SearchBudget {
     limit: usize,
@@ -52,6 +64,18 @@ impl SearchBudget {
 /// curves: `(tick, best objective)` every `every` ticks, disabled at 0.
 /// Tick units are driver-specific (SA iterations, random draws, GA
 /// generations, greedy evaluations) and documented per driver.
+///
+/// # Examples
+///
+/// ```
+/// use chiplet_gym::opt::search::TraceRecorder;
+///
+/// let mut recorder = TraceRecorder::new(10);
+/// for tick in 1..=25 {
+///     recorder.record(tick, tick as f64); // best-so-far at this tick
+/// }
+/// assert_eq!(recorder.into_history(), vec![(10, 10.0), (20, 20.0)]);
+/// ```
 #[derive(Clone, Debug)]
 pub struct TraceRecorder {
     every: usize,

@@ -1,0 +1,568 @@
+//! The explicit placement representation: AI-footprint tiles on the
+//! m×n mesh plus HBM attach points.
+//!
+//! The closed-form mesh model (`mesh::grid`) fixes both halves of the
+//! placement: footprints fill the most-square m×n rectangle row-major,
+//! and each HBM site of Section 3.3.2 attaches at the midpoint of its
+//! named edge (or the center tile). A [`Placement`] makes both explicit
+//! data instead: an occupied-tile set (which mesh sites hold AI
+//! footprints) and one attach tile per selected HBM site. Its
+//! [`Placement::hop_stats`] evaluator computes the *true* per-tile
+//! worst-case and average hop counts over that layout, producing the
+//! same [`HopStats`] record the closed-form path produces — so the
+//! entire downstream model (eq. 11 latency, eq. 15 energy, eq. 16
+//! package cost) is placement-aware for free.
+//!
+//! [`Placement::canonical`] reproduces the closed-form layout exactly
+//! (integer hop fields identical, mean fields equal up to float
+//! summation order); the canonical *mode* in scenarios never routes
+//! through this type at all, which is what keeps the default pipeline
+//! bit-identical to the pre-placement code.
+
+use anyhow::{bail, Result};
+
+use crate::mesh::grid::{mesh_dims, HopStats};
+use crate::model::space::{HbmLoc, PLACEMENT_HEAD_DIM};
+
+/// How a scenario (or the gym) treats placement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementMode {
+    /// The paper's closed-form layout (default): H = m + n − 2 and the
+    /// fixed edge-midpoint HBM attaches. Bit-identical to pre-placement
+    /// behavior everywhere.
+    Canonical,
+    /// Post-optimization attach-point search: every candidate design is
+    /// re-scored under the best placement `place::optimize_placement`
+    /// finds (canonical and spread layouts are always candidates, so
+    /// optimized never evaluates worse than canonical on the
+    /// worst-case comm-latency objective).
+    Optimized,
+    /// The gym environment grows a placement action head
+    /// (`DesignSpace::placement_head`) selecting a layout from the
+    /// [`Placement::templates`] catalog; non-RL sweeps treat this like
+    /// [`PlacementMode::Optimized`].
+    Learned,
+}
+
+impl PlacementMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            PlacementMode::Canonical => "canonical",
+            PlacementMode::Optimized => "optimized",
+            PlacementMode::Learned => "learned",
+        }
+    }
+
+    /// Parse the scenario-file spelling.
+    pub fn parse(s: &str) -> Option<PlacementMode> {
+        match s {
+            "canonical" => Some(PlacementMode::Canonical),
+            "optimized" => Some(PlacementMode::Optimized),
+            "learned" => Some(PlacementMode::Learned),
+            _ => None,
+        }
+    }
+}
+
+/// One HBM stack's attach point: the mesh tile it connects through and
+/// the extra lateral hops from that tile to the stack itself (1 for a
+/// package-neighbor 2.5D site, 0 for a 3D-stacked site).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HbmAttach {
+    pub tile: (usize, usize),
+    pub extra_hops: usize,
+}
+
+/// An explicit chiplet/HBM placement on an m×n mesh.
+///
+/// `tiles` lists the mesh sites occupied by AI footprints (row, col);
+/// `hbm` holds one attach per selected HBM site, in `hbm_locs()` order.
+/// The canonical layout occupies the full rectangle; sparse tile sets
+/// (holes, non-rectangular blobs) are legal and evaluated exactly —
+/// routing distance stays Manhattan, modeling the fixed package trace
+/// mesh underneath the sites.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Placement {
+    pub m: usize,
+    pub n: usize,
+    pub tiles: Vec<(usize, usize)>,
+    pub hbm: Vec<HbmAttach>,
+}
+
+fn full_grid(m: usize, n: usize) -> Vec<(usize, usize)> {
+    let mut tiles = Vec::with_capacity(m * n);
+    for r in 0..m {
+        for c in 0..n {
+            tiles.push((r, c));
+        }
+    }
+    tiles
+}
+
+fn extra_of(loc: HbmLoc) -> usize {
+    if loc == HbmLoc::Stacked3D {
+        0
+    } else {
+        1
+    }
+}
+
+impl Placement {
+    /// The closed-form layout `mesh::grid::MeshGrid::new` builds: a full
+    /// most-square rectangle of footprints with each HBM at its named
+    /// edge-midpoint / center attach tile.
+    pub fn canonical(n_footprints: usize, locs: &[HbmLoc]) -> Placement {
+        let (m, n) = mesh_dims(n_footprints);
+        let hbm = locs
+            .iter()
+            .map(|&loc| {
+                let tile = match loc {
+                    HbmLoc::Left => (m / 2, 0),
+                    HbmLoc::Right => (m / 2, n - 1),
+                    HbmLoc::Top => (0, n / 2),
+                    HbmLoc::Bottom => (m - 1, n / 2),
+                    HbmLoc::Middle => (m / 2, n / 2),
+                    HbmLoc::Stacked3D => (m / 2, n / 2),
+                };
+                HbmAttach { tile, extra_hops: extra_of(loc) }
+            })
+            .collect();
+        Placement { m, n, tiles: full_grid(m, n), hbm }
+    }
+
+    /// A balanced spread layout: the k 2.5D HBM attaches sit at the
+    /// centroids of a kr×kc partition of the mesh (kr·kc = k,
+    /// most-square), which is the Fig. 4 "partition the memory around
+    /// the mesh" idea taken to its geometric conclusion. Stacked HBMs
+    /// stay on the center tile.
+    pub fn spread(n_footprints: usize, locs: &[HbmLoc]) -> Placement {
+        let (m, n) = mesh_dims(n_footprints);
+        let k25 = locs.iter().filter(|&&l| l != HbmLoc::Stacked3D).count();
+        let (kr, kc) = if k25 > 0 { mesh_dims(k25) } else { (1, 1) };
+        let mut slot = 0usize;
+        let hbm = locs
+            .iter()
+            .map(|&loc| {
+                if loc == HbmLoc::Stacked3D {
+                    return HbmAttach { tile: (m / 2, n / 2), extra_hops: 0 };
+                }
+                let (jr, jc) = (slot / kc, slot % kc);
+                slot += 1;
+                let tile = ((2 * jr + 1) * m / (2 * kr), (2 * jc + 1) * n / (2 * kc));
+                HbmAttach { tile, extra_hops: 1 }
+            })
+            .collect();
+        Placement { m, n, tiles: full_grid(m, n), hbm }
+    }
+
+    /// All 2.5D attaches on the center row, spread across columns;
+    /// stacked HBMs on the center tile.
+    fn center_line(n_footprints: usize, locs: &[HbmLoc]) -> Placement {
+        let (m, n) = mesh_dims(n_footprints);
+        let k25 = locs.iter().filter(|&&l| l != HbmLoc::Stacked3D).count().max(1);
+        let mut slot = 0usize;
+        let hbm = locs
+            .iter()
+            .map(|&loc| {
+                if loc == HbmLoc::Stacked3D {
+                    return HbmAttach { tile: (m / 2, n / 2), extra_hops: 0 };
+                }
+                let tile = (m / 2, (2 * slot + 1) * n / (2 * k25));
+                slot += 1;
+                HbmAttach { tile, extra_hops: 1 }
+            })
+            .collect();
+        Placement { m, n, tiles: full_grid(m, n), hbm }
+    }
+
+    /// 2.5D attaches evenly spaced around the mesh perimeter; stacked
+    /// HBMs on the center tile.
+    fn perimeter(n_footprints: usize, locs: &[HbmLoc]) -> Placement {
+        let (m, n) = mesh_dims(n_footprints);
+        let k25 = locs.iter().filter(|&&l| l != HbmLoc::Stacked3D).count().max(1);
+        let count = if m <= 1 || n <= 1 { m * n } else { 2 * (m + n) - 4 };
+        let mut slot = 0usize;
+        let hbm = locs
+            .iter()
+            .map(|&loc| {
+                if loc == HbmLoc::Stacked3D {
+                    return HbmAttach { tile: (m / 2, n / 2), extra_hops: 0 };
+                }
+                let tile = perimeter_cell(m, n, slot * count / k25);
+                slot += 1;
+                HbmAttach { tile, extra_hops: 1 }
+            })
+            .collect();
+        Placement { m, n, tiles: full_grid(m, n), hbm }
+    }
+
+    /// The `index`-th layout of the learned-placement catalog (folded
+    /// modulo [`PLACEMENT_HEAD_DIM`]), built on demand: canonical first,
+    /// so head value 0 is bit-identical to the flag being off. The gym's
+    /// step path uses this to construct only the selected layout.
+    pub fn template(n_footprints: usize, locs: &[HbmLoc], index: usize) -> Placement {
+        match index % PLACEMENT_HEAD_DIM {
+            0 => Placement::canonical(n_footprints, locs),
+            1 => Placement::spread(n_footprints, locs),
+            2 => Placement::center_line(n_footprints, locs),
+            _ => Placement::perimeter(n_footprints, locs),
+        }
+    }
+
+    /// The full learned-placement catalog the placement action head
+    /// ranges over: always exactly [`PLACEMENT_HEAD_DIM`] layouts.
+    pub fn templates(n_footprints: usize, locs: &[HbmLoc]) -> Vec<Placement> {
+        (0..PLACEMENT_HEAD_DIM)
+            .map(|i| Placement::template(n_footprints, locs, i))
+            .collect()
+    }
+
+    /// Structural validity: non-degenerate grid, at least one in-bounds
+    /// footprint tile with no duplicates, at least one in-bounds attach.
+    pub fn validate(&self) -> Result<()> {
+        if self.m == 0 || self.n == 0 {
+            bail!("placement: degenerate {}x{} grid", self.m, self.n);
+        }
+        if self.tiles.is_empty() {
+            bail!("placement: no occupied footprint tiles");
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for &(r, c) in &self.tiles {
+            if r >= self.m || c >= self.n {
+                bail!("placement: tile ({r}, {c}) outside {}x{} grid", self.m, self.n);
+            }
+            if !seen.insert((r, c)) {
+                bail!("placement: duplicate tile ({r}, {c})");
+            }
+        }
+        if self.hbm.is_empty() {
+            bail!("placement: no HBM attach points");
+        }
+        for a in &self.hbm {
+            let (r, c) = a.tile;
+            if r >= self.m || c >= self.n {
+                bail!("placement: HBM attach ({r}, {c}) outside {}x{} grid", self.m, self.n);
+            }
+        }
+        Ok(())
+    }
+
+    /// True per-tile hop statistics of this layout, in the same
+    /// [`HopStats`] record the closed-form path produces (so every
+    /// `*_from_stats` cost function accepts it unchanged).
+    ///
+    /// * worst/mean AI→AI: Manhattan distance over occupied tile pairs
+    ///   (ordered pairs including self-pairs for the mean, matching the
+    ///   closed form on a full rectangle);
+    /// * worst/mean HBM→AI: per occupied tile, distance to the nearest
+    ///   attach plus its extra hop;
+    /// * edges: adjacent occupied pairs (the 2.5D link count).
+    pub fn hop_stats(&self) -> HopStats {
+        assert!(!self.tiles.is_empty(), "placement has no occupied tiles");
+        assert!(!self.hbm.is_empty(), "placement has no HBM attach points");
+        let t = self.tiles.len();
+        let mut max_ai = 0usize;
+        let mut sum_ai = 0usize;
+        let mut edges = 0usize;
+        for (i, &(r1, c1)) in self.tiles.iter().enumerate() {
+            for &(r2, c2) in &self.tiles[i + 1..] {
+                let d = r1.abs_diff(r2) + c1.abs_diff(c2);
+                max_ai = max_ai.max(d);
+                sum_ai += d;
+                if d == 1 {
+                    edges += 1;
+                }
+            }
+        }
+        let ai = HopStats {
+            m: self.m,
+            n: self.n,
+            max_ai_hops: max_ai,
+            // unordered-pair sum doubled over the t^2 ordered pairs
+            // (self-pairs contribute 0), matching the closed form
+            mean_ai_hops: (2 * sum_ai) as f64 / (t * t) as f64,
+            max_hbm_hops: 0,
+            mean_hbm_hops: 0.0,
+            n_edges: edges,
+        };
+        // one HBM nearest-attach scan, shared with the search fast path
+        self.hop_stats_with_ai(&ai)
+    }
+
+    /// [`Placement::hop_stats`] with the AI-side fields (diameter, mean
+    /// pair distance, edge count — invariant while only HBM attaches
+    /// change) copied from a precomputed `ai` record and only the
+    /// O(tiles·attaches) HBM scan redone. This is the placement
+    /// search's inner loop: attach-point moves never touch the tile
+    /// set, so redoing the O(tiles²) pair scan per evaluation would be
+    /// pure waste.
+    pub fn hop_stats_with_ai(&self, ai: &HopStats) -> HopStats {
+        assert!(!self.tiles.is_empty(), "placement has no occupied tiles");
+        assert!(!self.hbm.is_empty(), "placement has no HBM attach points");
+        debug_assert_eq!((ai.m, ai.n), (self.m, self.n), "ai stats from another grid");
+        let mut max_hbm = 0usize;
+        let mut sum_hbm = 0usize;
+        for &(r, c) in &self.tiles {
+            let d = self
+                .hbm
+                .iter()
+                .map(|a| a.tile.0.abs_diff(r) + a.tile.1.abs_diff(c) + a.extra_hops)
+                .min()
+                .expect("at least one HBM attach point");
+            max_hbm = max_hbm.max(d);
+            sum_hbm += d;
+        }
+        HopStats {
+            max_hbm_hops: max_hbm,
+            mean_hbm_hops: sum_hbm as f64 / self.tiles.len() as f64,
+            ..*ai
+        }
+    }
+
+    /// ASCII render of the attach layout: `H` = 2.5D attach tile, `S` =
+    /// stacked attach tile, `.` = plain footprint (CLI `place` output).
+    pub fn render(&self) -> String {
+        let mut rows = Vec::with_capacity(self.m);
+        for r in 0..self.m {
+            let mut line = String::new();
+            for c in 0..self.n {
+                let ch = match self.hbm.iter().find(|a| a.tile == (r, c)) {
+                    Some(a) if a.extra_hops == 0 => 'S',
+                    Some(_) => 'H',
+                    None => {
+                        if self.tiles.contains(&(r, c)) {
+                            '.'
+                        } else {
+                            ' '
+                        }
+                    }
+                };
+                line.push(ch);
+                line.push(' ');
+            }
+            rows.push(line.trim_end().to_string());
+        }
+        rows.join("\n")
+    }
+
+    /// Compact attach list for CSV cells: `r.c` pairs joined by `;`
+    /// (stacked attaches suffixed `s`).
+    pub fn attach_string(&self) -> String {
+        self.hbm
+            .iter()
+            .map(|a| {
+                let (r, c) = a.tile;
+                if a.extra_hops == 0 {
+                    format!("{r}.{c}s")
+                } else {
+                    format!("{r}.{c}")
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(";")
+    }
+}
+
+/// The `idx`-th cell of a clockwise perimeter walk (top row left→right,
+/// right column, bottom row right→left, left column), wrapping modulo
+/// the perimeter length. Degenerate 1×n / m×1 grids walk the line.
+fn perimeter_cell(m: usize, n: usize, idx: usize) -> (usize, usize) {
+    if m == 1 {
+        return (0, idx % n);
+    }
+    if n == 1 {
+        return (idx % m, 0);
+    }
+    let count = 2 * (m + n) - 4;
+    let i = idx % count;
+    if i < n {
+        return (0, i);
+    }
+    let i = i - n;
+    if i < m - 1 {
+        return (1 + i, n - 1);
+    }
+    let i = i - (m - 1);
+    if i < n - 1 {
+        return (m - 1, n - 2 - i);
+    }
+    let i = i - (n - 1);
+    (m - 2 - i, 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::grid::hop_stats;
+    use crate::model::space::locs_of_mask as locs_of;
+    use crate::model::space::HbmLoc::*;
+
+    #[test]
+    fn canonical_matches_closed_form_hop_stats() {
+        for &(fp, mask) in &[(1usize, 1u8), (7, 9), (30, 0b011110), (56, 0b011011), (128, 63)] {
+            let locs = locs_of(mask);
+            let pl = Placement::canonical(fp, &locs);
+            pl.validate().unwrap();
+            let got = pl.hop_stats();
+            let want = hop_stats(fp, mask);
+            assert_eq!((got.m, got.n), (want.m, want.n), "fp {fp} mask {mask}");
+            assert_eq!(got.max_ai_hops, want.max_ai_hops, "fp {fp} mask {mask}");
+            assert_eq!(got.max_hbm_hops, want.max_hbm_hops, "fp {fp} mask {mask}");
+            assert_eq!(got.n_edges, want.n_edges, "fp {fp} mask {mask}");
+            assert!((got.mean_ai_hops - want.mean_ai_hops).abs() < 1e-9);
+            assert!((got.mean_hbm_hops - want.mean_hbm_hops).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn spread_reproduces_fig4_three_hop_supply() {
+        // Table 6 case (i): 30 footprints (5x6), 4 HBMs. Canonical edge
+        // midpoints leave 4-hop corners; the balanced spread reaches
+        // every tile in <= 3 hops — the Fig. 4 6->3 improvement, found
+        // by construction instead of hand-placement.
+        let locs = locs_of(0b011110);
+        let canonical = Placement::canonical(30, &locs);
+        let spread = Placement::spread(30, &locs);
+        spread.validate().unwrap();
+        assert_eq!(canonical.hop_stats().max_hbm_hops, 4);
+        assert_eq!(spread.hop_stats().max_hbm_hops, 3);
+    }
+
+    #[test]
+    fn single_hbm_spread_centers_the_attach() {
+        let locs = vec![Left];
+        let canonical = Placement::canonical(30, &locs);
+        let spread = Placement::spread(30, &locs);
+        assert!(spread.hop_stats().max_hbm_hops < canonical.hop_stats().max_hbm_hops);
+        assert!(spread.hop_stats().mean_hbm_hops < canonical.hop_stats().mean_hbm_hops);
+    }
+
+    #[test]
+    fn templates_catalog_is_fixed_size_and_valid() {
+        for fp in [1usize, 2, 5, 7, 16, 30, 31, 56, 127, 128] {
+            for mask in [1u8, 0b100000, 0b011110, 63] {
+                let locs = locs_of(mask);
+                let ts = Placement::templates(fp, &locs);
+                assert_eq!(ts.len(), PLACEMENT_HEAD_DIM);
+                for (i, t) in ts.iter().enumerate() {
+                    t.validate().unwrap_or_else(|e| panic!("fp {fp} mask {mask} t{i}: {e}"));
+                    assert_eq!(t.hbm.len(), locs.len());
+                }
+                assert_eq!(ts[0], Placement::canonical(fp, &locs));
+            }
+        }
+    }
+
+    #[test]
+    fn hbm_only_stats_match_the_full_scan() {
+        // The search fast path (AI fields hoisted, HBM scan redone) must
+        // agree with the full evaluator bit for bit.
+        let locs = locs_of(0b011110);
+        let canonical = Placement::canonical(30, &locs);
+        let ai = canonical.hop_stats();
+        let mut moved = canonical.clone();
+        moved.hbm[0].tile = (4, 5);
+        moved.hbm[2].tile = (0, 0);
+        let fast = moved.hop_stats_with_ai(&ai);
+        let full = moved.hop_stats();
+        assert_eq!(fast.max_hbm_hops, full.max_hbm_hops);
+        assert_eq!(fast.mean_hbm_hops.to_bits(), full.mean_hbm_hops.to_bits());
+        assert_eq!(fast.max_ai_hops, full.max_ai_hops);
+        assert_eq!(fast.mean_ai_hops.to_bits(), full.mean_ai_hops.to_bits());
+        assert_eq!(fast.n_edges, full.n_edges);
+    }
+
+    #[test]
+    fn template_by_index_matches_the_catalog() {
+        let locs = locs_of(0b100011);
+        let ts = Placement::templates(30, &locs);
+        for i in 0..2 * PLACEMENT_HEAD_DIM {
+            assert_eq!(Placement::template(30, &locs, i), ts[i % PLACEMENT_HEAD_DIM]);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_broken_layouts() {
+        let locs = vec![Middle];
+        let good = Placement::canonical(6, &locs);
+        good.validate().unwrap();
+
+        let mut dup = good.clone();
+        dup.tiles.push(dup.tiles[0]);
+        assert!(dup.validate().is_err(), "duplicate tile");
+
+        let mut oob = good.clone();
+        oob.tiles[0] = (99, 0);
+        assert!(oob.validate().is_err(), "tile out of bounds");
+
+        let mut no_hbm = good.clone();
+        no_hbm.hbm.clear();
+        assert!(no_hbm.validate().is_err(), "no attach points");
+
+        let mut bad_attach = good;
+        bad_attach.hbm[0].tile = (0, 99);
+        assert!(bad_attach.validate().is_err(), "attach out of bounds");
+    }
+
+    #[test]
+    fn sparse_blob_beats_line_for_prime_counts() {
+        // 7 footprints: canonical degrades to a 1x7 line (6 max hops); an
+        // explicit compact blob on a 3x3 grid cuts the diameter in half.
+        let locs = vec![Middle];
+        let line = Placement::canonical(7, &locs);
+        assert_eq!(line.hop_stats().max_ai_hops, 6);
+        let blob = Placement {
+            m: 3,
+            n: 3,
+            tiles: vec![(0, 0), (0, 1), (0, 2), (1, 0), (1, 1), (1, 2), (2, 1)],
+            hbm: vec![HbmAttach { tile: (1, 1), extra_hops: 1 }],
+        };
+        blob.validate().unwrap();
+        let s = blob.hop_stats();
+        assert_eq!(s.max_ai_hops, 3);
+        assert!(s.max_hbm_hops <= 3);
+        assert_eq!(s.n_edges, 8, "6 horizontal + 2 vertical adjacencies");
+    }
+
+    #[test]
+    fn perimeter_walk_covers_distinct_cells() {
+        for (m, n) in [(5usize, 6usize), (2, 2), (1, 7), (4, 1), (3, 3)] {
+            let count = if m <= 1 || n <= 1 { m * n } else { 2 * (m + n) - 4 };
+            let mut seen = std::collections::BTreeSet::new();
+            for i in 0..count {
+                let (r, c) = perimeter_cell(m, n, i);
+                assert!(r < m && c < n, "({r},{c}) outside {m}x{n}");
+                assert!(seen.insert((r, c)), "walk revisited ({r},{c})");
+                if m > 1 && n > 1 {
+                    assert!(
+                        r == 0 || r == m - 1 || c == 0 || c == n - 1,
+                        "({r},{c}) not on the perimeter"
+                    );
+                }
+            }
+            assert_eq!(seen.len(), count);
+        }
+    }
+
+    #[test]
+    fn render_and_attach_string_show_the_layout() {
+        let locs = vec![Left, Stacked3D];
+        let pl = Placement::canonical(6, &locs); // 2x3 mesh
+        let text = pl.render();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.contains('H') && text.contains('S'));
+        assert_eq!(pl.attach_string(), "1.0;1.1s");
+    }
+
+    #[test]
+    fn mode_names_roundtrip() {
+        for mode in [
+            PlacementMode::Canonical,
+            PlacementMode::Optimized,
+            PlacementMode::Learned,
+        ] {
+            assert_eq!(PlacementMode::parse(mode.name()), Some(mode));
+        }
+        assert_eq!(PlacementMode::parse("simulated"), None);
+    }
+}

@@ -1,0 +1,35 @@
+//! The placement engine: chiplet/HBM placement as a first-class,
+//! optimizable design axis.
+//!
+//! The paper's design space is "resource allocation, placement, and
+//! packaging architecture", but the closed-form mesh model reduces the
+//! placement axis to H = m + n − 2 and fixed edge-midpoint HBM attach
+//! heuristics — the Fig. 4 six-hop → three-hop improvement is hard-coded
+//! rather than searched. This module makes placement explicit, in the
+//! spirit of RL chip placement (Mirhoseini et al.) and Gemini-style
+//! mapping/architecture co-exploration:
+//!
+//! * [`layout`] — the representation: [`Placement`] (occupied footprint
+//!   tiles + per-HBM attach points) with a true per-tile hop evaluator
+//!   ([`Placement::hop_stats`]) that feeds the existing `*_from_stats`
+//!   cost functions, plus the canonical / spread / template layouts and
+//!   [`PlacementMode`] (`canonical` | `optimized` | `learned`).
+//! * [`optimize`] — the search: attach tiles encoded into designated
+//!   action heads ([`PLACE_HEADS`]), scored by worst-case comm latency
+//!   through an `opt::search::FnObjective`, walked by any reused
+//!   `DriverConfig` (greedy by default; no new search loops).
+//!
+//! The canonical mode never routes through this module, so the default
+//! pipeline stays bit-identical to the closed-form path; `optimized`
+//! re-scores optimizer candidates under the best placement found, and
+//! `learned` adds a placement action head to the gym environment
+//! (`DesignSpace::placement_head`).
+
+pub mod layout;
+pub mod optimize;
+
+pub use layout::{HbmAttach, Placement, PlacementMode};
+pub use optimize::{
+    canonical_summary, comm_latency_ns_of, decode_placement, optimize_placement, refine_outcome,
+    PlaceConfig, PlacementOutcome, PlacementSummary, PLACE_HEADS,
+};

@@ -106,6 +106,12 @@ pub fn train_ppo(
         crate::model::space::ACTION_DIMS.to_vec(),
         "artifact action space != Rust design space — rebuild artifacts"
     );
+    anyhow::ensure!(
+        !env.space.placement_head,
+        "the AOT'd policy network has no placement head: train with \
+         placement = canonical/optimized, or rebuild artifacts with the \
+         extra head"
+    );
     env.episode_len = cfg.episode_len;
 
     let head_slices = manifest.head_slices();

@@ -27,6 +27,7 @@
 //! chiplet_cap = 64              # 64 (case i) | 128 (case ii)
 //! packaging = "full-3d"         # | "interposer-2.5d" | "organic-substrate"
 //! optimizer = "sa"              # | "ga" | "greedy" | "random" | "portfolio"
+//! placement = "canonical"       # | "optimized" | "learned"
 //! sa_iterations = 200000        # SA iterations = the evaluation budget
 //! sa_seeds = [0, 1, 2, 3]
 //!
@@ -47,6 +48,7 @@ use crate::cost::{Calib, TechNode};
 use crate::model::space::{ArchType, DesignSpace};
 use crate::opt::sa::SaConfig;
 use crate::opt::search::{DriverConfig, GaConfig, PortfolioMember};
+use crate::place::{PlaceConfig, PlacementMode};
 use crate::util::json::{obj, Json};
 use crate::util::toml;
 use crate::workloads::mlperf;
@@ -193,6 +195,12 @@ pub struct Scenario {
     /// `optimizer`, default `"sa"` — bit-identical to pre-portfolio
     /// sweeps).
     pub optimizer: OptimizerChoice,
+    /// How placement is treated (file key `placement`, default
+    /// `"canonical"` — the closed-form paper layout, bit-identical to
+    /// pre-placement sweeps). `optimized` re-scores every candidate
+    /// under the best attach layout `place::optimize_placement` finds;
+    /// `learned` additionally grows the gym's placement action head.
+    pub placement: PlacementMode,
     pub budget: OptBudget,
 }
 
@@ -212,6 +220,7 @@ impl Scenario {
             packaging: Packaging::Full3D,
             calib_overrides: BTreeMap::new(),
             optimizer: OptimizerChoice::Sa,
+            placement: PlacementMode::Canonical,
             budget: OptBudget::default(),
         }
     }
@@ -221,6 +230,20 @@ impl Scenario {
         DesignSpace {
             chiplet_cap: self.chiplet_cap,
             arch_lock: self.packaging.arch_lock(),
+            placement_head: self.placement == PlacementMode::Learned,
+        }
+    }
+
+    /// The placement-search configuration this scenario's sweep applies
+    /// to every candidate: `None` for canonical (the post-pass is
+    /// skipped entirely, keeping the pipeline bit-identical), the
+    /// default greedy search otherwise. `learned` sweeps the same way —
+    /// the extra action head is a gym-side surface the non-RL drivers
+    /// cannot emit.
+    pub fn placement_search(&self) -> Option<PlaceConfig> {
+        match self.placement {
+            PlacementMode::Canonical => None,
+            PlacementMode::Optimized | PlacementMode::Learned => Some(PlaceConfig::default()),
         }
     }
 
@@ -311,6 +334,7 @@ impl Scenario {
             ("chiplet_cap", Json::Num(self.chiplet_cap as f64)),
             ("packaging", Json::Str(self.packaging.name().into())),
             ("optimizer", Json::Str(self.optimizer.name().into())),
+            ("placement", Json::Str(self.placement.name().into())),
             ("sa_iterations", Json::Num(self.budget.sa_iterations as f64)),
             (
                 "sa_seeds",
@@ -371,6 +395,15 @@ impl Scenario {
                 )
             })?;
         }
+        if let Some(pm) = v.get("placement").and_then(Json::as_str) {
+            s.placement = PlacementMode::parse(pm).ok_or_else(|| {
+                anyhow!(
+                    "scenario {:?}: unknown placement {pm:?} \
+                     (expected canonical|optimized|learned)",
+                    s.name
+                )
+            })?;
+        }
         if let Some(x) = v.get("sa_iterations").and_then(Json::as_f64) {
             s.budget.sa_iterations = x as usize;
         }
@@ -414,6 +447,7 @@ impl Scenario {
         out.push_str(&format!("chiplet_cap = {}\n", self.chiplet_cap));
         out.push_str(&format!("packaging = {}\n", toml_str(self.packaging.name())));
         out.push_str(&format!("optimizer = {}\n", toml_str(self.optimizer.name())));
+        out.push_str(&format!("placement = {}\n", toml_str(self.placement.name())));
         out.push_str(&format!("sa_iterations = {}\n", self.budget.sa_iterations));
         let seeds: Vec<String> = self.budget.sa_seeds.iter().map(|s| s.to_string()).collect();
         out.push_str(&format!("sa_seeds = [{}]\n", seeds.join(", ")));
@@ -563,6 +597,34 @@ mod tests {
         assert!(Scenario::from_json(&bad).is_err());
         let ok = Json::parse(r#"{"name": "x", "optimizer": "ga"}"#).unwrap();
         assert_eq!(Scenario::from_json(&ok).unwrap().optimizer, OptimizerChoice::Ga);
+    }
+
+    #[test]
+    fn placement_key_parses_and_shapes_the_space() {
+        let base = Scenario::baseline();
+        assert_eq!(base.placement, PlacementMode::Canonical);
+        assert!(base.placement_search().is_none());
+        assert!(!base.space().placement_head);
+
+        let ok = Json::parse(r#"{"name": "x", "placement": "optimized"}"#).unwrap();
+        let s = Scenario::from_json(&ok).unwrap();
+        assert_eq!(s.placement, PlacementMode::Optimized);
+        assert!(s.placement_search().is_some());
+        assert!(!s.space().placement_head, "only learned grows the head");
+
+        let learned = Json::parse(r#"{"name": "x", "placement": "learned"}"#).unwrap();
+        let s = Scenario::from_json(&learned).unwrap();
+        assert!(s.space().placement_head);
+        assert!(s.placement_search().is_some());
+
+        let bad = Json::parse(r#"{"name": "x", "placement": "annealed"}"#).unwrap();
+        assert!(Scenario::from_json(&bad).is_err());
+
+        // TOML spelling round-trips through the emitted form
+        let mut t = Scenario::baseline();
+        t.placement = PlacementMode::Optimized;
+        let back = Scenario::from_toml_str(&t.to_toml_string()).unwrap();
+        assert_eq!(back, t);
     }
 
     #[test]

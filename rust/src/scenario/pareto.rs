@@ -16,6 +16,9 @@ pub struct ParetoPoint {
     pub scenario: String,
     /// Optimizer instance that produced it (e.g. "SA").
     pub source: String,
+    /// Placement mode the point was scored under ("canonical" unless
+    /// the scenario optimized placement).
+    pub placement: String,
     pub seed: u64,
     pub action: [usize; N_HEADS],
     /// Effective throughput, TMAC/s (maximize).
@@ -71,6 +74,7 @@ mod tests {
         ParetoPoint {
             scenario: "s".into(),
             source: "SA".into(),
+            placement: "canonical".into(),
             seed: 0,
             action: [0; N_HEADS],
             throughput_tops: t,

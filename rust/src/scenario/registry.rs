@@ -9,6 +9,7 @@ use anyhow::{anyhow, bail, Result};
 
 use super::{OptimizerChoice, Packaging, Scenario};
 use crate::cost::TechNode;
+use crate::place::PlacementMode;
 use crate::workloads::mlperf;
 
 fn variant(name: &str, description: &str, edit: impl FnOnce(&mut Scenario)) -> Scenario {
@@ -69,6 +70,27 @@ pub fn builtin() -> Vec<Scenario> {
         "node-5nm",
         "Leading-edge node: denser/cooler logic, worse yield, dearer wafers",
         |s| s.tech_node = TechNode::N5,
+    ));
+    v.push(variant(
+        "placement-case-i",
+        "Paper case (i) with optimized HBM attach placement",
+        |s| s.placement = PlacementMode::Optimized,
+    ));
+    v.push(variant(
+        "placement-case-ii",
+        "Case (ii): 128-chiplet cap with optimized HBM attach placement",
+        |s| {
+            s.chiplet_cap = 128;
+            s.placement = PlacementMode::Optimized;
+        },
+    ));
+    v.push(variant(
+        "placement-5nm",
+        "5 nm node with optimized HBM attach placement",
+        |s| {
+            s.tech_node = TechNode::N5;
+            s.placement = PlacementMode::Optimized;
+        },
     ));
     v.push(variant(
         "portfolio-case-i",
@@ -156,5 +178,8 @@ mod tests {
         assert_ne!(n5.calib().unwrap().mac_per_mm2, base_calib.mac_per_mm2);
         let bert = find("mlperf-bert").unwrap();
         assert_ne!(bert.calib().unwrap().ref_task_gmac, base_calib.ref_task_gmac);
+        let placed = find("placement-case-i").unwrap();
+        assert_ne!(placed.placement, base.placement);
+        assert!(placed.placement_search().is_some());
     }
 }

@@ -27,9 +27,13 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::cost::cache::{EvalCache, DEFAULT_CACHE_CAP};
+use crate::cost::Calib;
+use crate::mesh::grid::hop_stats;
+use crate::model::space::DesignSpace;
 use crate::opt::combined::{select_best, Candidate, OptOutcome};
 use crate::opt::parallel::{parallel_map, portfolio_optimize_par};
 use crate::opt::search::CachedObjective;
+use crate::place::{refine_outcome, PlacementSummary};
 use crate::report::CsvWriter;
 
 use super::pareto::{pareto_frontier, ParetoPoint};
@@ -84,6 +88,10 @@ pub struct SweepConfig {
 pub struct ScenarioResult {
     pub scenario: Scenario,
     pub outcome: OptOutcome,
+    /// Per-candidate placement summaries, aligned with
+    /// `outcome.candidates`: all `None` under `placement = canonical`
+    /// (the post-pass is skipped), one summary per candidate otherwise.
+    pub placements: Vec<Option<PlacementSummary>>,
     /// Evaluator-cache statistics (both 0 on the parallel-seed path,
     /// which runs uncached).
     pub cache_hits: u64,
@@ -138,51 +146,71 @@ pub fn run_scenario(
     };
     let work_items: usize = members.iter().map(|m| m.seeds.len()).sum();
     let t0 = Instant::now();
-    if jobs != 1 && work_items > 1 {
-        let outcome = portfolio_optimize_par(space, &calib, &members, jobs);
-        return Ok(ScenarioResult {
-            scenario: s.clone(),
-            outcome,
-            cache_hits: 0,
-            cache_misses: 0,
-            wall_secs: t0.elapsed().as_secs_f64(),
-        });
-    }
-    let mut cache = EvalCache::new(DEFAULT_CACHE_CAP);
-    let mut candidates = Vec::new();
-    for m in &members {
-        for &seed in &m.seeds {
-            let trace = {
-                let mut obj =
-                    CachedObjective { cache: &mut cache, space: &space, calib: &calib };
-                m.driver.run(&space, &mut obj, seed)
-            };
-            // Re-score the winner through the same cache: whenever the
-            // walk stayed under the cache cap the search already
-            // inserted it, so this hits and returns the exact
-            // Evaluation the walk saw — search, re-scoring and
-            // reporting share one memo table. Past the cap it
-            // recomputes, which is identical by purity.
-            let eval = cache.evaluate(&calib, &space, &trace.best_action);
-            debug_assert!(eval.reward == trace.best_eval.reward);
-            candidates.push(Candidate {
-                source: m.driver.name().into(),
-                seed,
-                action: trace.best_action,
-                eval,
-            });
+    let (mut outcome, cache_hits, cache_misses) = if jobs != 1 && work_items > 1 {
+        (portfolio_optimize_par(space, &calib, &members, jobs), 0, 0)
+    } else {
+        let mut cache = EvalCache::new(DEFAULT_CACHE_CAP);
+        let mut candidates = Vec::new();
+        for m in &members {
+            for &seed in &m.seeds {
+                let trace = {
+                    let mut obj =
+                        CachedObjective { cache: &mut cache, space: &space, calib: &calib };
+                    m.driver.run(&space, &mut obj, seed)
+                };
+                // Re-score the winner through the same cache: whenever
+                // the walk stayed under the cache cap the search already
+                // inserted it, so this hits and returns the exact
+                // Evaluation the walk saw — search, re-scoring and
+                // reporting share one memo table. Past the cap it
+                // recomputes, which is identical by purity.
+                let eval = cache.evaluate(&calib, &space, &trace.best_action);
+                debug_assert!(eval.reward == trace.best_eval.reward);
+                candidates.push(Candidate {
+                    source: m.driver.name().into(),
+                    seed,
+                    action: trace.best_action,
+                    eval,
+                });
+            }
         }
-    }
-    let best = select_best(&candidates)
-        .expect("scenario budget has at least one seed")
-        .clone();
+        let best = select_best(&candidates)
+            .expect("scenario budget has at least one seed")
+            .clone();
+        (OptOutcome { best, candidates }, cache.hits, cache.misses)
+    };
+    let placements = apply_placement_pass(s, &space, &calib, &mut outcome);
     Ok(ScenarioResult {
         scenario: s.clone(),
-        outcome: OptOutcome { best, candidates },
-        cache_hits: cache.hits,
-        cache_misses: cache.misses,
+        outcome,
+        placements,
+        cache_hits,
+        cache_misses,
         wall_secs: t0.elapsed().as_secs_f64(),
     })
+}
+
+/// The placement post-pass (scenario `placement = optimized|learned`):
+/// [`refine_outcome`] re-scores every candidate under the best attach
+/// layout found for its design (reward-guarded — canonical stays when
+/// it wins eq. 17) and re-takes the argmax. Deterministic per candidate
+/// list (fixed search config, seed 0), so the `--jobs N` bit-identity
+/// of the candidate production carries over to the re-scored outcome.
+/// Canonical scenarios skip it entirely — the outcome is returned
+/// untouched, bit-identical to pre-placement sweeps.
+fn apply_placement_pass(
+    s: &Scenario,
+    space: &DesignSpace,
+    calib: &Calib,
+    outcome: &mut OptOutcome,
+) -> Vec<Option<PlacementSummary>> {
+    let Some(cfg) = s.placement_search() else {
+        return vec![None; outcome.candidates.len()];
+    };
+    refine_outcome(space, calib, outcome, &cfg)
+        .into_iter()
+        .map(Some)
+        .collect()
 }
 
 /// Run every scenario, write the CSVs, return results + frontier.
@@ -221,7 +249,7 @@ fn dedup_points(results: &[ScenarioResult]) -> Vec<ParetoPoint> {
             if !c.eval.feasible {
                 continue;
             }
-            let p = pareto_point(&r.scenario.name, c);
+            let p = pareto_point(&r.scenario, c);
             let dup = pool.iter().any(|q| {
                 q.throughput_tops == p.throughput_tops
                     && q.energy_mj == p.energy_mj
@@ -235,10 +263,11 @@ fn dedup_points(results: &[ScenarioResult]) -> Vec<ParetoPoint> {
     pool
 }
 
-fn pareto_point(scenario: &str, c: &Candidate) -> ParetoPoint {
+fn pareto_point(scenario: &Scenario, c: &Candidate) -> ParetoPoint {
     ParetoPoint {
-        scenario: scenario.to_string(),
+        scenario: scenario.name.clone(),
         source: c.source.clone(),
+        placement: scenario.placement.name().to_string(),
         seed: c.seed,
         action: c.action,
         throughput_tops: c.eval.throughput_tops,
@@ -277,11 +306,20 @@ fn write_scenario_csv(dir: &std::path::Path, r: &ScenarioResult) -> Result<()> {
             "total_cost",
             "n_chiplets_decoded",
             "action",
+            "placement",
+            "max_hbm_hops",
+            "hbm_attach",
         ],
     )?;
     let space = r.scenario.space();
-    for c in &r.outcome.candidates {
+    for (c, pl) in r.outcome.candidates.iter().zip(r.placements.iter()) {
         let p = space.decode(&c.action);
+        // Canonical rows report the closed-form worst-case supply hops;
+        // optimized rows report the searched layout's.
+        let (max_hbm, attach) = match pl {
+            Some(s) => (s.max_hbm_hops, s.attach.clone()),
+            None => (hop_stats(p.n_footprints(), p.hbm_mask).max_hbm_hops, "-".into()),
+        };
         w.row_str(&[
             c.source.clone(),
             c.seed.to_string(),
@@ -295,6 +333,9 @@ fn write_scenario_csv(dir: &std::path::Path, r: &ScenarioResult) -> Result<()> {
             format!("{}", c.eval.die_cost + c.eval.pkg_cost),
             p.n_chiplets.to_string(),
             action_str(&c.action),
+            r.scenario.placement.name().to_string(),
+            max_hbm.to_string(),
+            attach,
         ])?;
     }
     w.flush()
@@ -311,6 +352,7 @@ fn write_best_csv(dir: &std::path::Path, results: &[ScenarioResult]) -> Result<(
             "packaging",
             "chiplet_cap",
             "optimizer",
+            "placement",
             "source",
             "seed",
             "reward",
@@ -333,6 +375,7 @@ fn write_best_csv(dir: &std::path::Path, results: &[ScenarioResult]) -> Result<(
             s.packaging.name().to_string(),
             s.chiplet_cap.to_string(),
             s.optimizer.name().to_string(),
+            s.placement.name().to_string(),
             b.source.clone(),
             b.seed.to_string(),
             format!("{}", b.eval.reward),
@@ -353,6 +396,7 @@ fn write_frontier_csv(dir: &std::path::Path, frontier: &[ParetoPoint]) -> Result
         &[
             "scenario",
             "source",
+            "placement",
             "seed",
             "throughput_tops",
             "energy_mj_per_task",
@@ -364,6 +408,7 @@ fn write_frontier_csv(dir: &std::path::Path, frontier: &[ParetoPoint]) -> Result
         w.row_str(&[
             p.scenario.clone(),
             p.source.clone(),
+            p.placement.clone(),
             p.seed.to_string(),
             format!("{}", p.throughput_tops),
             format!("{}", p.energy_mj),

@@ -23,6 +23,19 @@ pub fn nan_least_cmp(a: f64, b: f64) -> std::cmp::Ordering {
 /// used to be duplicated across the optimizer and the environment are a
 /// single tested code path. It lives here (like [`nan_least_cmp`]) so
 /// the gym layer can use it without depending on the optimizer.
+///
+/// # Examples
+///
+/// ```
+/// use chiplet_gym::opt::search::BestTracker; // re-export of util::stats
+///
+/// let mut best: BestTracker<&str> = BestTracker::new();
+/// assert!(best.offer(1.0, || "first"));
+/// assert!(!best.offer(f64::NAN, || "poison"), "NaN never wins");
+/// assert!(best.offer(2.0, || "better"));
+/// assert!(!best.offer(2.0, || "tie"), "equal reward keeps the earlier best");
+/// assert_eq!(best.best(), Some((2.0, &"better")));
+/// ```
 #[derive(Clone, Debug, Default)]
 pub struct BestTracker<T> {
     best: Option<(f64, T)>,

@@ -1,9 +1,13 @@
 //! `opt::parallel` determinism contract: the multi-threaded portfolio
 //! driver must be bit-identical to the sequential path at any `--jobs`
-//! value — for SA, GA, greedy and mixed portfolios — plus the
-//! NaN-argmax regression tests.
+//! value — for SA, GA, greedy and mixed portfolios, and for
+//! placement-optimized scenario sweeps — plus the NaN-argmax
+//! regression tests.
 
 use chiplet_gym::cost::{evaluate, Calib};
+use chiplet_gym::scenario::registry;
+use chiplet_gym::scenario::sweep::{run_scenario, BudgetOverride};
+use chiplet_gym::scenario::OptBudget;
 use chiplet_gym::model::space::{DesignSpace, N_HEADS};
 use chiplet_gym::opt::combined::{
     portfolio_optimize, reward_cmp, sa_only_optimize, select_best, Candidate,
@@ -120,6 +124,36 @@ fn mixed_portfolio_fanout_is_bit_identical_and_ordered() {
     for jobs in [1usize, 2, 8, 0] {
         let parallel = portfolio_optimize_par(space, &calib, &members, jobs);
         assert_outcomes_identical(&sequential, &parallel, &format!("mixed --jobs {jobs}"));
+    }
+}
+
+#[test]
+fn placement_scenario_is_bit_identical_across_jobs() {
+    // The placement post-pass (scenario placement = optimized) runs
+    // after the candidate fan-out and is deterministic, so the --jobs N
+    // bit-identity contract extends to placement-aware sweeps.
+    let s = registry::find("placement-case-i").expect("built-in placement scenario");
+    let budget = BudgetOverride::full(OptBudget { sa_iterations: 2_000, sa_seeds: vec![0, 1, 2] });
+    let sequential = run_scenario(&s, Some(&budget), 1).unwrap();
+    for jobs in [2usize, 8] {
+        let parallel = run_scenario(&s, Some(&budget), jobs).unwrap();
+        assert_outcomes_identical(
+            &sequential.outcome,
+            &parallel.outcome,
+            &format!("placement --jobs {jobs}"),
+        );
+        assert_eq!(sequential.placements.len(), parallel.placements.len());
+        for (i, (a, b)) in sequential
+            .placements
+            .iter()
+            .zip(parallel.placements.iter())
+            .enumerate()
+        {
+            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+            assert_eq!(a.attach, b.attach, "candidate {i} attach layout");
+            assert_eq!(a.comm_ns.to_bits(), b.comm_ns.to_bits(), "candidate {i} objective");
+            assert_eq!(a.max_hbm_hops, b.max_hbm_hops, "candidate {i} worst-case hops");
+        }
     }
 }
 
