@@ -1,0 +1,93 @@
+//! Native-PPO throughput: environment steps/sec of the dynamic
+//! action-space training loop.
+//!
+//! Times `train_ppo_native` (rollout + GAE + minibatch Adam updates,
+//! all pure Rust — no artifacts needed) across the four cells of the
+//! {14-head canonical, 15-head learned-placement} × {sequential n_envs
+//! 1, batched n_envs 4} grid, so the cost of the placement head and the
+//! benefit of batched rollouts are both on the record. Writes
+//! `BENCH_ppo.json` (plus a CSV of the rows) under `bench_results/`,
+//! seeding the RL perf trajectory across PRs.
+
+use chiplet_gym::cost::Calib;
+use chiplet_gym::gym::ChipletGymEnv;
+use chiplet_gym::model::space::DesignSpace;
+use chiplet_gym::report;
+use chiplet_gym::rl::{train_ppo_native, PpoConfig};
+
+fn bench_cfg() -> PpoConfig {
+    let mut cfg = PpoConfig::paper();
+    cfg.total_timesteps = 1_024;
+    cfg.n_steps = 512;
+    cfg.batch_size = 64;
+    cfg.n_epoch = 4;
+    cfg
+}
+
+fn main() {
+    let full = std::env::var("CHIPLET_GYM_FULL").is_ok();
+    let mut cfg = bench_cfg();
+    if full {
+        cfg.total_timesteps = 16_384;
+        cfg.n_steps = 2_048;
+    }
+    let calib = Calib::default();
+
+    let cases = [
+        ("14-head", DesignSpace::case_i()),
+        ("15-head", DesignSpace::case_i().with_placement_head()),
+    ];
+    let widths = [("sequential", 1usize), ("batched", 4usize)];
+
+    // (label, heads, n_envs, steps/sec, best reward)
+    let mut rows: Vec<(String, usize, usize, f64, f64)> = Vec::new();
+    for (case, space) in &cases {
+        for (mode, n_envs) in &widths {
+            let mut run_cfg = cfg;
+            run_cfg.n_envs = *n_envs;
+            assert_eq!(run_cfg.n_steps % n_envs, 0);
+            let mut env = ChipletGymEnv::new(*space, calib.clone(), run_cfg.episode_len);
+            let t0 = std::time::Instant::now();
+            let trace = train_ppo_native(&mut env, &run_cfg, 0).expect("native ppo");
+            let secs = t0.elapsed().as_secs_f64();
+            let sps = trace.timesteps as f64 / secs;
+            println!(
+                "{case:>8} {mode:>10} (n_envs {n_envs}): {} steps in {secs:.2}s \
+                 = {sps:.0} steps/s, best {:.2}",
+                trace.timesteps, trace.best_reward
+            );
+            rows.push((
+                format!("{case}/{mode}"),
+                space.layout().n_heads(),
+                *n_envs,
+                sps,
+                trace.best_reward,
+            ));
+        }
+    }
+
+    let mut csv = report::csv(
+        "perf_ppo.csv",
+        &["config", "heads", "n_envs", "steps_per_sec", "best_reward"],
+    );
+    for (label, heads, n_envs, sps, best) in &rows {
+        csv.labeled_row(label, &[*heads as f64, *n_envs as f64, *sps, *best])
+            .expect("csv row");
+    }
+    csv.flush().expect("csv flush");
+
+    // BENCH_ppo.json: the machine-readable RL perf-trajectory seed.
+    let mut json = String::from("{\n  \"timesteps\": ");
+    json.push_str(&cfg.total_timesteps.to_string());
+    json.push_str(",\n  \"configs\": {\n");
+    for (i, (label, heads, n_envs, sps, best)) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    \"{label}\": {{\"heads\": {heads}, \"n_envs\": {n_envs}, \
+             \"steps_per_sec\": {sps:.1}, \"best_reward\": {best:.4}}}{}\n",
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  }\n}\n");
+    let path = report::write_text("BENCH_ppo.json", &json);
+    println!("wrote {}", path.display());
+}

@@ -63,7 +63,7 @@ fn main() {
                 rl_seeds: if full { (0..20).collect() } else { (0..2).collect() },
                 extra: Vec::new(),
             };
-            combined_optimize(engine, space, &calib, &cfg).expect("alg1")
+            combined_optimize(Some(engine), space, &calib, &cfg).expect("alg1")
         } else {
             sa_only_optimize(space, &calib, &sa, &(0..6).collect::<Vec<_>>())
         };

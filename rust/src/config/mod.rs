@@ -97,6 +97,13 @@ impl RunConfig {
         self.calib = s.calib()?;
         self.sa.iterations = s.budget.sa_iterations;
         self.sa_seeds = s.budget.sa_seeds.clone();
+        if s.optimizer == crate::scenario::OptimizerChoice::Ppo {
+            // A PPO scenario's one budget knob is the RL budget: map it
+            // onto the timestep/seed knobs so `optimize`/`ppo` train at
+            // the scenario's scale (CLI --timesteps/--seeds still win).
+            self.ppo_total_timesteps = s.budget.sa_iterations;
+            self.rl_seeds = s.budget.sa_seeds.clone();
+        }
         self.scenario = Some(s.name.clone());
         self.placement = s.placement;
         Ok(())
@@ -317,6 +324,22 @@ mod tests {
         let s = crate::scenario::registry::find("placement-case-i").unwrap();
         cfg.apply_scenario(&s).unwrap();
         assert_eq!(cfg.placement, PlacementMode::Optimized);
+    }
+
+    #[test]
+    fn ppo_scenario_budget_maps_onto_the_rl_knobs() {
+        let mut cfg = RunConfig::default();
+        let s = crate::scenario::registry::find("placement-learned").unwrap();
+        cfg.apply_scenario(&s).unwrap();
+        assert_eq!(cfg.placement, PlacementMode::Learned);
+        assert!(cfg.space().placement_head);
+        assert_eq!(cfg.ppo_total_timesteps, s.budget.sa_iterations);
+        assert_eq!(cfg.rl_seeds, s.budget.sa_seeds);
+        // CLI still wins on top
+        let args =
+            Args::parse("optimize --timesteps 99".split_whitespace().map(String::from));
+        cfg.apply_args(&args);
+        assert_eq!(cfg.ppo_total_timesteps, 99);
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Design-point-keyed memoization of [`evaluate`] for scenario sweeps.
+//! Action-keyed memoization of [`evaluate_action`] for scenario sweeps.
 //!
 //! A sweep evaluates the same design point repeatedly across *stages*:
 //! the SA walk scores it, the per-seed winner is re-scored for the
@@ -23,10 +23,10 @@
 
 use std::collections::HashMap;
 
-use crate::model::space::{DesignSpace, N_HEADS};
+use crate::model::space::{Action, DesignSpace};
 
 use super::constants::Calib;
-use super::ppac::{evaluate, Evaluation};
+use super::ppac::{evaluate_action, Evaluation};
 
 /// Default insertion cap (64Ki entries). An [`Evaluation`] plus its key
 /// is a few hundred bytes, so a full cache stays around ~25 MB — small
@@ -35,16 +35,22 @@ use super::ppac::{evaluate, Evaluation};
 /// just stop being retained (no eviction).
 pub const DEFAULT_CACHE_CAP: usize = 1 << 16;
 
-/// A memoizing wrapper around [`evaluate`] for one `(space, calib)` pair.
+/// A memoizing wrapper around [`evaluate_action`] for one `(space,
+/// calib)` pair.
 ///
 /// The caller owns the pairing: one cache must only ever see one space
 /// and one calibration (the sweep engine creates one per scenario).
 pub struct EvalCache {
-    map: HashMap<[usize; N_HEADS], Evaluation>,
+    /// Keyed by the raw action of whatever arity the caller evaluates:
+    /// 14-head keys for the analytical walks, 15-head keys when a
+    /// learned-placement candidate (design + template choice) is
+    /// re-scored — distinct templates of one design are distinct
+    /// entries, matching `cost::evaluate_action` semantics.
+    map: HashMap<Action, Evaluation>,
     cap: usize,
     /// Lookups answered from the cache.
     pub hits: u64,
-    /// Lookups that fell through to [`evaluate`].
+    /// Lookups that fell through to [`evaluate_action`].
     pub misses: u64,
 }
 
@@ -58,16 +64,16 @@ impl EvalCache {
         &mut self,
         calib: &Calib,
         space: &DesignSpace,
-        action: &[usize; N_HEADS],
+        action: &[usize],
     ) -> Evaluation {
         if let Some(e) = self.map.get(action) {
             self.hits += 1;
             return *e;
         }
         self.misses += 1;
-        let e = evaluate(calib, &space.decode(action));
+        let e = evaluate_action(calib, space, action);
         if self.map.len() < self.cap {
-            self.map.insert(*action, e);
+            self.map.insert(action.to_vec(), e);
         }
         e
     }
@@ -95,6 +101,7 @@ impl EvalCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cost::evaluate;
     use crate::util::Rng;
 
     #[test]
@@ -121,6 +128,28 @@ mod tests {
         }
         assert_eq!(cache.hits, 50);
         assert!((cache.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn placement_head_actions_key_per_template() {
+        use crate::cost::evaluate_action;
+        use crate::model::space::paper_points;
+        let space = DesignSpace::case_i().with_placement_head();
+        let calib = Calib::default();
+        let mut cache = EvalCache::new(DEFAULT_CACHE_CAP);
+        let mut a = paper_points::table6_case_i().to_vec();
+        a[2] = 0; // HBM @ left only: spread (template 1) beats canonical
+        a.push(0);
+        let canonical = cache.evaluate(&calib, &space, &a);
+        a[14] = 1;
+        let spread = cache.evaluate(&calib, &space, &a);
+        assert_eq!(cache.misses, 2, "templates are distinct cache keys");
+        assert_ne!(canonical.reward, spread.reward);
+        assert_eq!(spread.reward, evaluate_action(&calib, &space, &a).reward);
+        // both templates hit on re-lookup
+        a[14] = 0;
+        assert_eq!(cache.evaluate(&calib, &space, &a).reward, canonical.reward);
+        assert_eq!(cache.hits, 1);
     }
 
     #[test]

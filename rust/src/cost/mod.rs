@@ -18,4 +18,4 @@ pub mod yield_model;
 
 pub use cache::EvalCache;
 pub use constants::{Calib, TechNode, CALIB_KEYS};
-pub use ppac::{evaluate, evaluate_with_placement, Evaluation};
+pub use ppac::{evaluate, evaluate_action, evaluate_with_placement, Evaluation};

@@ -118,6 +118,32 @@ pub fn evaluate_with_placement(
     }
 }
 
+/// Evaluate a raw action under a design space — the one place the
+/// "extra placement head selects a template layout" rule lives, shared
+/// by the gym environment, the memoizing [`super::cache::EvalCache`] and
+/// the search objectives so the RL and non-RL surfaces can never
+/// disagree on what a 15-head action is worth.
+///
+/// * 14-head actions (or spaces without the placement head) evaluate
+///   through the closed-form path — bit-identical to [`evaluate`].
+/// * 15-head actions on a `placement_head` space evaluate under the
+///   `place::Placement::template` layout their last head selects
+///   (folded modulo the catalog, so every sampled index is scoreable).
+pub fn evaluate_action(
+    c: &Calib,
+    space: &crate::model::space::DesignSpace,
+    action: &[usize],
+) -> Evaluation {
+    use crate::model::space::N_HEADS;
+    let p = space.decode(action);
+    if space.placement_head && action.len() > N_HEADS {
+        let layout = Placement::template(p.n_footprints(), &p.hbm_locs(), action[N_HEADS]);
+        evaluate_with_placement(c, &p, Some(&layout))
+    } else {
+        evaluate(c, &p)
+    }
+}
+
 /// Shared tail of [`evaluate`] / [`evaluate_with_placement`]: the full
 /// Section 3 model from pre-computed geometry and hop statistics.
 fn evaluate_from_stats(

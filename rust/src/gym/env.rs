@@ -1,8 +1,11 @@
 //! The Chiplet-Gym environment implementation.
 
-use crate::cost::{evaluate, evaluate_with_placement, Calib, Evaluation};
-use crate::model::space::{DesignPoint, DesignSpace, N_HEADS};
-use crate::place::Placement;
+use anyhow::{Context, Result};
+
+use crate::cost::{evaluate_action, Calib, Evaluation};
+use crate::model::space::{
+    Action, ActionError, DesignPoint, DesignSpace, N_HEADS, PLACEMENT_HEAD_DIM,
+};
 use crate::util::stats::BestTracker;
 
 /// Observation dimensionality (paper Section 5.2.1: max package area,
@@ -38,7 +41,11 @@ pub struct ChipletGymEnv {
     /// Best design ever evaluated, through the shared NaN-safe tracker
     /// (`util::stats::BestTracker` — the same code path the optimizer
     /// portfolio uses, so best/merge semantics exist exactly once).
-    best: BestTracker<DesignPoint>,
+    /// Alongside the decoded point, the tracker remembers which
+    /// learned-placement template scored it (folded modulo the catalog;
+    /// `None` on 14-head spaces), so [`ChipletGymEnv::best_action`] can
+    /// reconstruct the full action that earned the reward.
+    best: BestTracker<(DesignPoint, Option<usize>)>,
     total_steps: u64,
 }
 
@@ -97,23 +104,42 @@ impl ChipletGymEnv {
     /// size, keeping every action decodable.
     pub fn step(&mut self, action: &[usize]) -> Step {
         assert_eq!(action.len(), self.space.action_len());
-        let point = self.space.decode(&action[..N_HEADS]);
-        let eval = if self.space.placement_head {
-            // Build only the selected layout (the head folds modulo the
-            // catalog inside `template`).
-            let layout =
-                Placement::template(point.n_footprints(), &point.hbm_locs(), action[N_HEADS]);
-            evaluate_with_placement(&self.calib, &point, Some(&layout))
+        self.try_step(action).expect("in-range action")
+    }
+
+    /// Fallible form of [`ChipletGymEnv::step`]: malformed actions (bad
+    /// arity for this space's layout, out-of-range head index) come back
+    /// as typed `anyhow` errors instead of panics — the surface a bad
+    /// scenario or hand-written action spec fails through with a
+    /// message.
+    pub fn try_step(&mut self, action: &[usize]) -> Result<Step> {
+        // Strict arity (the RL surface must match the space's layout);
+        // the placement head itself is never range-checked — it folds
+        // modulo the template catalog, keeping every sample steppable.
+        if action.len() != self.space.action_len() {
+            return Err(ActionError::WrongArity {
+                got: action.len(),
+                want: self.space.action_len(),
+            })
+            .context("gym step rejected the action");
+        }
+        let point = self
+            .space
+            .try_decode(action)
+            .context("gym step rejected the action")?;
+        let eval = evaluate_action(&self.calib, &self.space, action);
+        let template = if self.space.placement_head && action.len() > N_HEADS {
+            Some(action[N_HEADS] % PLACEMENT_HEAD_DIM)
         } else {
-            evaluate(&self.calib, &point)
+            None
         };
-        self.best.offer(eval.reward, || point);
+        self.best.offer(eval.reward, || (point, template));
         self.last_eval = Some(eval);
         self.steps_in_episode += 1;
         self.total_steps += 1;
         let done = self.steps_in_episode >= self.episode_len;
         let obs = self.observation();
-        Step { obs, reward: eval.reward, done, eval }
+        Ok(Step { obs, reward: eval.reward, done, eval })
     }
 
     /// Build the 10-dim observation from the last evaluation, normalized
@@ -138,7 +164,21 @@ impl ChipletGymEnv {
 
     /// Best (reward, design point) discovered so far.
     pub fn best(&self) -> Option<(f64, &DesignPoint)> {
-        self.best.best()
+        self.best.best().map(|(r, (p, _))| (r, p))
+    }
+
+    /// Best (reward, raw action) discovered so far: the canonical
+    /// encoding of the best design point, with the learned-placement
+    /// template appended on `placement_head` spaces — the action form
+    /// `rl::PpoTrace` and the candidate pipeline report.
+    pub fn best_action(&self) -> Option<(f64, Action)> {
+        self.best.best().map(|(r, (p, template))| {
+            let mut action = self.space.encode(p).to_vec();
+            if let Some(t) = *template {
+                action.push(t);
+            }
+            (r, action)
+        })
     }
 
     pub fn total_steps(&self) -> u64 {
@@ -167,9 +207,10 @@ impl ChipletGymEnv {
     }
 
     /// Evaluate a raw action without advancing the episode (used by SA
-    /// and the exhaustive combiner, which are not episodic).
+    /// and the exhaustive combiner, which are not episodic). Placement-
+    /// head-aware through `cost::evaluate_action`, like `step`.
     pub fn peek(&self, action: &[usize]) -> Evaluation {
-        evaluate(&self.calib, &self.space.decode(action))
+        evaluate_action(&self.calib, &self.space, action)
     }
 }
 
@@ -350,6 +391,57 @@ mod tests {
         let mut env = ChipletGymEnv::new(space, Calib::default(), 2);
         let a = [0usize; N_HEADS];
         env.step(&a);
+    }
+
+    #[test]
+    fn try_step_surfaces_typed_errors_instead_of_panicking() {
+        let mut env = ChipletGymEnv::case_i();
+        // wrong arity
+        let err = env.try_step(&[0usize; 3]).unwrap_err();
+        assert!(err.to_string().contains("gym step rejected"), "{err:#}");
+        assert!(format!("{err:#}").contains("3 heads"), "{err:#}");
+        // out-of-range head
+        let mut a = [0usize; N_HEADS];
+        a[4] = 99; // cardinality 20
+        let err = env.try_step(&a).unwrap_err();
+        assert!(format!("{err:#}").contains("head 4"), "{err:#}");
+        // neither failure advanced the episode
+        assert_eq!(env.total_steps(), 0);
+        // a valid action still steps
+        a[4] = 0;
+        let step = env.try_step(&a).unwrap();
+        assert!(step.reward.is_finite());
+        assert_eq!(env.total_steps(), 1);
+    }
+
+    #[test]
+    fn best_action_reconstructs_the_scoring_action() {
+        // 14-head space: best_action is the canonical encode of the
+        // best point (no placement suffix).
+        let mut env = ChipletGymEnv::case_i();
+        let mut rng = Rng::new(9);
+        for _ in 0..40 {
+            let a = env.space.random_action(&mut rng);
+            env.step(&a);
+        }
+        let (r, action) = env.best_action().unwrap();
+        assert_eq!(action.len(), N_HEADS);
+        assert_eq!(env.peek(&action).reward, r, "best action must reproduce its reward");
+
+        // learned space: the winning template index rides along and the
+        // re-scored action reproduces the tracked reward exactly.
+        let space = DesignSpace::case_i().with_placement_head();
+        let mut env = ChipletGymEnv::new(space, Calib::default(), 4);
+        let plain = DesignSpace::case_i();
+        for t in 0..40 {
+            let mut a = plain.random_action(&mut rng).to_vec();
+            a.push(t % 7); // exercise the modulo fold too
+            env.step(&a);
+        }
+        let (r, action) = env.best_action().unwrap();
+        assert_eq!(action.len(), N_HEADS + 1);
+        assert!(action[N_HEADS] < crate::model::space::PLACEMENT_HEAD_DIM);
+        assert_eq!(env.peek(&action).reward, r, "best action must reproduce its reward");
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! batched rollout stay bit-identical to the sequential seed paths.
 
 use crate::cost::Calib;
-use crate::model::space::{DesignPoint, DesignSpace, N_HEADS};
+use crate::model::space::{DesignPoint, DesignSpace};
 
 use super::env::{ChipletGymEnv, Step, OBS_DIM};
 
@@ -69,10 +69,12 @@ impl VecEnv {
         self.envs[i].reset()
     }
 
-    /// Step every environment with its own action. Equivalent to K
-    /// sequential `env.step` calls in env order; returns one [`Step`]
-    /// per env.
-    pub fn step_batch(&mut self, actions: &[[usize; N_HEADS]]) -> Vec<Step> {
+    /// Step every environment with its own action (any arity the envs'
+    /// spaces accept — the batch is generic over `AsRef<[usize]>`, so
+    /// 14-head arrays and runtime-sized `Action` vectors both work).
+    /// Equivalent to K sequential `env.step` calls in env order; returns
+    /// one [`Step`] per env.
+    pub fn step_batch<A: AsRef<[usize]>>(&mut self, actions: &[A]) -> Vec<Step> {
         assert_eq!(
             actions.len(),
             self.envs.len(),
@@ -81,7 +83,7 @@ impl VecEnv {
         self.envs
             .iter_mut()
             .zip(actions.iter())
-            .map(|(env, action)| env.step(action))
+            .map(|(env, action)| env.step(action.as_ref()))
             .collect()
     }
 
@@ -123,10 +125,30 @@ impl VecEnv {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::space::N_HEADS;
     use crate::util::Rng;
 
     fn random_actions(space: &DesignSpace, rng: &mut Rng, k: usize) -> Vec<[usize; N_HEADS]> {
         (0..k).map(|_| space.random_action(rng)).collect()
+    }
+
+    #[test]
+    fn step_batch_accepts_runtime_sized_actions() {
+        // A learned-placement VecEnv steps 15-head Action vectors; the
+        // batch is generic, so Vec<Vec<usize>> flows straight through.
+        let space = DesignSpace::case_i().with_placement_head();
+        let proto = ChipletGymEnv::new(space, Calib::default(), 2);
+        let mut vec_env = VecEnv::replicate(&proto, 3);
+        vec_env.reset_all();
+        let mut rng = Rng::new(17);
+        let layout = space.layout();
+        let actions: Vec<Vec<usize>> = (0..3).map(|_| layout.random_action(&mut rng)).collect();
+        let steps = vec_env.step_batch(&actions);
+        assert_eq!(steps.len(), 3);
+        for (e, step) in steps.iter().enumerate() {
+            // each env scored its own action, placement template included
+            assert_eq!(step.reward, proto.clone().step(&actions[e]).reward);
+        }
     }
 
     #[test]

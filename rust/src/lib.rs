@@ -47,8 +47,12 @@
 //!   loadable), a registry of named built-ins, and the `sweep` engine
 //!   that fans them across the worker pool and emits per-scenario bests
 //!   plus a cross-scenario Pareto frontier.
-//! * [`rl`] — PPO (Table 5 hyper-parameters): rollouts, GAE, MultiDiscrete
-//!   sampling and the Adam-step loop over the AOT'd HLO update.
+//! * [`rl`] — PPO (Table 5 hyper-parameters) over a runtime-sized action
+//!   space (`model::space::ActionLayout`): rollouts, GAE, MultiDiscrete
+//!   sampling, and the Adam-step loop over either the AOT'd HLO update
+//!   (validated fast path) or the pure-Rust [`rl::net`] network — the
+//!   backend that trains `placement = learned`'s 15th head with no
+//!   artifacts.
 //! * [`runtime`] — PJRT client wrapper: loads `artifacts/*.hlo.txt`,
 //!   compiles once, executes on the hot path. The `xla` dependency sits
 //!   behind the off-by-default `pjrt` cargo feature; without it a stub

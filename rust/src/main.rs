@@ -43,7 +43,7 @@ use chiplet_gym::place::{
     optimize_placement, refine_outcome, PlaceConfig, Placement, PlacementMode,
 };
 use chiplet_gym::report;
-use chiplet_gym::rl::{train_ppo, PpoConfig};
+use chiplet_gym::rl::{train_ppo_auto, PpoConfig};
 use chiplet_gym::runtime::Engine;
 use chiplet_gym::scenario::sweep::{run_sweep, BudgetOverride, SweepConfig};
 use chiplet_gym::scenario::{registry, Scenario};
@@ -55,8 +55,13 @@ use chiplet_gym::workloads::{mapping, mlperf::mlperf_suite, Monolithic};
 use chiplet_gym::model::space::paper_points::table6_case_i as table6_case_i_action;
 
 fn print_design(space: &DesignSpace, calib: &Calib, action: &[usize]) {
+    // Candidate actions are valid by construction; decode's panic path
+    // is unreachable here (user-typed actions go through try_decode in
+    // parse_action's callers first). evaluate_action scores a learned
+    // candidate under its 15th-head template, so the printed reward
+    // matches what the optimizer reported.
     let p = space.decode(action);
-    let e = evaluate(calib, &p);
+    let e = chiplet_gym::cost::evaluate_action(calib, space, action);
     let mut t = Table::new(["parameter", "value"]);
     t.row(["Architecture type", p.arch.name()]);
     t.row([
@@ -128,26 +133,35 @@ fn print_design(space: &DesignSpace, calib: &Calib, action: &[usize]) {
 }
 
 /// `--action a,b,...` (14 comma-separated head indices) or the Table 6
-/// case (i) reference point — shared by `eval` and `place`.
-fn parse_action(args: &Args) -> [usize; N_HEADS] {
-    match args.get("action") {
+/// case (i) reference point — shared by `eval` and `place`. The indices
+/// are validated against the space via `try_decode`, so a malformed
+/// spec fails with the typed `ActionError` message instead of a panic.
+fn parse_action(space: &DesignSpace, args: &Args) -> Result<[usize; N_HEADS]> {
+    let action = match args.get("action") {
         Some(spec) => {
-            let parts: Vec<usize> = spec
-                .split(',')
-                .map(|p| p.trim().parse().expect("--action must be 14 ints"))
-                .collect();
-            assert_eq!(parts.len(), N_HEADS, "--action needs 14 comma-separated heads");
+            let mut parts = Vec::new();
+            for p in spec.split(',') {
+                parts.push(p.trim().parse::<usize>().map_err(|e| {
+                    anyhow::anyhow!("--action: {:?} is not an index ({e})", p.trim())
+                })?);
+            }
+            if parts.len() != N_HEADS {
+                bail!("--action needs {N_HEADS} comma-separated heads, got {}", parts.len());
+            }
             let mut a = [0usize; N_HEADS];
             a.copy_from_slice(&parts);
             a
         }
         None => table6_case_i_action(),
-    }
+    };
+    space.try_decode(&action).map_err(|e| anyhow::anyhow!("--action: {e}"))?;
+    Ok(action)
 }
 
-fn cmd_eval(cfg: &RunConfig, args: &Args) {
+fn cmd_eval(cfg: &RunConfig, args: &Args) -> Result<()> {
     let space = cfg.space();
-    print_design(&space, &cfg.calib, &parse_action(args));
+    print_design(&space, &cfg.calib, &parse_action(&space, args)?);
+    Ok(())
 }
 
 fn cmd_place(cfg: &RunConfig, args: &Args) -> Result<()> {
@@ -155,7 +169,7 @@ fn cmd_place(cfg: &RunConfig, args: &Args) -> Result<()> {
     // so --scenario placement-learned still evaluates 14-head actions.
     let mut space = cfg.space();
     space.placement_head = false;
-    let action = parse_action(args);
+    let action = parse_action(&space, args)?;
     let p = space.decode(&action);
 
     let budget: usize = args.get_parse("place-budget", 2_000);
@@ -231,10 +245,9 @@ fn refine_placement(cfg: &RunConfig, space: &DesignSpace, out: &mut OptOutcome) 
     if cfg.placement == PlacementMode::Canonical {
         return;
     }
-    // Strip the learned head: the non-RL drivers emit 14-head actions.
-    let mut space = *space;
-    space.placement_head = false;
-    let summaries = refine_outcome(&space, &cfg.calib, out, &PlaceConfig::default());
+    // refine_outcome understands both arities: 14-head candidates from
+    // the non-RL drivers and 15-head learned-placement RL candidates.
+    let summaries = refine_outcome(space, &cfg.calib, out, &PlaceConfig::default());
     let improved = summaries
         .iter()
         .filter(|s| s.comm_ns < s.canonical_comm_ns)
@@ -370,22 +383,69 @@ fn check_n_envs(ppo: &PpoConfig) -> Result<()> {
     Ok(())
 }
 
-fn cmd_ppo(cfg: &RunConfig) -> Result<()> {
-    let engine = Engine::discover()?;
-    let mut ppo = PpoConfig::from_manifest(&engine);
-    ppo.total_timesteps = cfg.ppo_total_timesteps;
+/// Discover the AOT engine if artifacts exist and describe which PPO
+/// backend a space will train on — shared by `ppo` and `optimize`.
+/// Discovery failures are surfaced in the label (a corrupt manifest or
+/// an HLO compile error must not masquerade as "no artifacts found").
+fn discover_backend(space: &DesignSpace) -> (Option<Engine>, String) {
+    // The label comes from the same predicate train_ppo_auto selects
+    // with (rl::aot_backend), so the printed choice cannot drift from
+    // the trained one.
+    match Engine::discover() {
+        Ok(e) => {
+            let label = if chiplet_gym::rl::aot_backend(&e, &space.layout()) {
+                "AOT artifacts (PJRT)".to_string()
+            } else {
+                "native Rust network (artifact shapes do not match this space's layout)"
+                    .to_string()
+            };
+            (Some(e), label)
+        }
+        Err(err) => (None, format!("native Rust network (no usable AOT engine: {err:#})")),
+    }
+}
+
+/// The PPO configuration a CLI run trains with: Table 5 defaults (from
+/// the manifest when an engine loads, the paper constants otherwise),
+/// the --timesteps budget applied via quick() and rounded up to a
+/// multiple of --n-envs (so previously-valid timesteps/n-envs
+/// combinations keep working), plus the episode/entropy/env-count
+/// overrides. One definition shared by `ppo` and `optimize`, so the
+/// two subcommands cannot train with different effective
+/// hyper-parameters for the same flags.
+fn rl_run_setup(
+    cfg: &RunConfig,
+    space: &DesignSpace,
+) -> Result<(Option<Engine>, String, PpoConfig)> {
+    let (engine, backend) = discover_backend(space);
+    let mut ppo = match &engine {
+        Some(e) => PpoConfig::from_manifest(e),
+        None => PpoConfig::paper(),
+    };
+    ppo = ppo.quick(cfg.ppo_total_timesteps);
     ppo.episode_len = cfg.ppo_episode_len;
     ppo.ent_coef = cfg.ppo_ent_coef;
     ppo.n_envs = cfg.ppo_n_envs;
+    if ppo.n_envs >= 1 {
+        ppo.n_steps = ppo.n_steps.div_ceil(ppo.n_envs) * ppo.n_envs;
+    }
     check_n_envs(&ppo)?;
+    Ok((engine, backend, ppo))
+}
+
+fn cmd_ppo(cfg: &RunConfig) -> Result<()> {
+    let space = cfg.space();
+    let (engine, backend, ppo) = rl_run_setup(cfg, &space)?;
     let seed = *cfg.rl_seeds.first().unwrap_or(&0);
-    let mut env = ChipletGymEnv::new(cfg.space(), cfg.calib.clone(), ppo.episode_len);
+    let mut env = ChipletGymEnv::new(space, cfg.calib.clone(), ppo.episode_len);
     println!(
-        "PPO: {} timesteps, n_steps {}, minibatch {}, {} epochs, ent {}",
+        "PPO ({} heads, backend: {backend}): {} timesteps, n_steps {}, minibatch {}, \
+         {} epochs, ent {}",
+        space.layout().n_heads(),
         ppo.total_timesteps, ppo.n_steps, ppo.batch_size, ppo.n_epoch, ppo.ent_coef
     );
     let t0 = std::time::Instant::now();
-    let trace = train_ppo(&engine, &mut env, &ppo, seed)?;
+    let trace = train_ppo_auto(engine.as_ref(), &mut env, &ppo, seed)?;
     for s in &trace.history {
         println!(
             "  steps {:>7}  ep_rew_mean {:>9.2}  cost_value {:>8.2}  kl {:.4}",
@@ -402,13 +462,9 @@ fn cmd_ppo(cfg: &RunConfig) -> Result<()> {
 }
 
 fn cmd_optimize(cfg: &RunConfig, args: &Args) -> Result<()> {
-    let engine = Engine::discover()?;
-    let mut ppo = PpoConfig::from_manifest(&engine);
-    ppo.total_timesteps = cfg.ppo_total_timesteps;
-    ppo.episode_len = cfg.ppo_episode_len;
-    ppo.ent_coef = cfg.ppo_ent_coef;
-    ppo.n_envs = cfg.ppo_n_envs;
-    check_n_envs(&ppo)?;
+    let space = cfg.space();
+    let (engine, backend, ppo) = rl_run_setup(cfg, &space)?;
+    println!("RL backend: {backend}");
     let extra = if args.flag("with-portfolio") {
         check_ga_pop(cfg)?;
         portfolio_members(cfg, "extras")
@@ -431,7 +487,8 @@ fn cmd_optimize(cfg: &RunConfig, args: &Args) -> Result<()> {
         cfg.jobs
     );
     let t0 = std::time::Instant::now();
-    let mut out = combined_optimize_par(&engine, cfg.space(), &cfg.calib, &combined, cfg.jobs)?;
+    let mut out =
+        combined_optimize_par(engine.as_ref(), cfg.space(), &cfg.calib, &combined, cfg.jobs)?;
     refine_placement(cfg, &cfg.space(), &mut out);
     for c in &out.candidates {
         println!("  {:>6} seed {:3}: {:.2}", c.source, c.seed, c.eval.reward);
@@ -633,7 +690,7 @@ fn main() -> Result<()> {
         Some("sweep") => cmd_sweep(&cfg, &args)?,
         Some("place") => cmd_place(&cfg, &args)?,
         Some("ppo") => cmd_ppo(&cfg)?,
-        Some("eval") => cmd_eval(&cfg, &args),
+        Some("eval") => cmd_eval(&cfg, &args)?,
         Some("mlperf") => cmd_mlperf(&cfg),
         Some("info") => cmd_info()?,
         other => {

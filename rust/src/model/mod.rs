@@ -5,4 +5,7 @@ pub mod packaging;
 pub mod space;
 
 pub use packaging::{ArchClass, Interconnect, INTERCONNECTS};
-pub use space::{ArchType, DesignPoint, DesignSpace, HbmLoc, ACTION_DIMS, N_HEADS};
+pub use space::{
+    Action, ActionError, ActionLayout, ArchType, DesignPoint, DesignSpace, HbmLoc, ACTION_DIMS,
+    N_HEADS,
+};

@@ -5,6 +5,8 @@
 //! `artifacts/manifest.json` at engine startup (the Python compile path
 //! mirrors them in `compile/model.py::ACTION_DIMS`).
 
+use std::fmt;
+
 use super::packaging::Interconnect;
 
 /// Per-head cardinalities, in Table 1 order. Σ = 591 policy logits.
@@ -12,6 +14,107 @@ pub const ACTION_DIMS: [usize; 14] = [3, 128, 63, 2, 20, 100, 10, 2, 31, 100, 2,
 
 /// Number of design parameters (categorical heads).
 pub const N_HEADS: usize = 14;
+
+/// A raw MultiDiscrete action of runtime arity: the 14 Table 1 heads,
+/// plus any extra heads the space grows (currently the learned-placement
+/// head). The RL stack, the candidate pipeline and the reports all carry
+/// this type; the analytical drivers keep walking fixed 14-head arrays
+/// internally and convert at the [`crate::opt::search::SearchTrace`]
+/// boundary.
+pub type Action = Vec<usize>;
+
+/// A malformed raw action — the typed form of what used to be
+/// `assert!` panics inside [`DesignSpace::decode`]. Surfaced through
+/// [`DesignSpace::try_decode`] / `gym::ChipletGymEnv::try_step` as
+/// `anyhow` errors, so a bad scenario or `--action` spec fails with a
+/// message instead of aborting.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ActionError {
+    /// The action has the wrong number of heads for this space.
+    WrongArity { got: usize, want: usize },
+    /// One head's index exceeds its cardinality.
+    HeadOutOfRange { head: usize, value: usize, cardinality: usize },
+}
+
+impl fmt::Display for ActionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ActionError::WrongArity { got, want } => {
+                write!(f, "action has {got} heads, this design space expects {want}")
+            }
+            ActionError::HeadOutOfRange { head, value, cardinality } => {
+                write!(f, "head {head}: action index {value} out of range 0..{cardinality}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ActionError {}
+
+/// Runtime-sized description of a MultiDiscrete action space: one
+/// cardinality per head, in head order. Owned by [`DesignSpace`]
+/// ([`DesignSpace::layout`]); the RL stack sizes its sampling buffers,
+/// rollout storage and policy network from this instead of the
+/// compile-time `[usize; N_HEADS]` the pre-refactor code assumed, which
+/// is what lets the optional 15th (placement) head flow end-to-end.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ActionLayout {
+    dims: Vec<usize>,
+}
+
+impl ActionLayout {
+    pub fn new(dims: Vec<usize>) -> ActionLayout {
+        assert!(!dims.is_empty(), "an action layout needs at least one head");
+        assert!(dims.iter().all(|&d| d >= 1), "every head needs cardinality >= 1");
+        ActionLayout { dims }
+    }
+
+    /// Per-head cardinalities, in head order.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Total policy logits: Σ cardinalities (591 for the Table 1 space,
+    /// 595 with the placement head).
+    pub fn total_logits(&self) -> usize {
+        self.dims.iter().sum()
+    }
+
+    /// `(start, end)` logit ranges of each categorical head — the same
+    /// shape `runtime::Manifest::head_slices` produces, so the two are
+    /// directly comparable on the manifest fast path.
+    pub fn head_slices(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.dims.len());
+        let mut off = 0;
+        for &d in &self.dims {
+            out.push((off, off + d));
+            off += d;
+        }
+        out
+    }
+
+    /// Sample a uniformly random action of this layout's arity.
+    pub fn random_action(&self, rng: &mut crate::util::Rng) -> Action {
+        self.dims.iter().map(|&d| rng.below(d as u64) as usize).collect()
+    }
+
+    /// Check arity and per-head ranges.
+    pub fn validate(&self, action: &[usize]) -> Result<(), ActionError> {
+        if action.len() != self.dims.len() {
+            return Err(ActionError::WrongArity { got: action.len(), want: self.dims.len() });
+        }
+        for (head, (&a, &d)) in action.iter().zip(self.dims.iter()).enumerate() {
+            if a >= d {
+                return Err(ActionError::HeadOutOfRange { head, value: a, cardinality: d });
+            }
+        }
+        Ok(())
+    }
+}
 
 /// Cardinality of the optional *placement* action head
 /// ([`DesignSpace::placement_head`]): the learned-placement catalog size
@@ -217,6 +320,20 @@ impl DesignSpace {
         N_HEADS + usize::from(self.placement_head)
     }
 
+    /// The runtime-sized action layout of this space: the Table 1
+    /// cardinalities, plus a [`PLACEMENT_HEAD_DIM`]-way head when the
+    /// placement head is on. This is the single source the RL stack
+    /// sizes its sampling, rollout storage and policy network from; on
+    /// the AOT fast path `rl::train_ppo` checks the artifact manifest's
+    /// dims against it instead of the frozen `ACTION_DIMS` constant.
+    pub fn layout(&self) -> ActionLayout {
+        let mut dims = ACTION_DIMS.to_vec();
+        if self.placement_head {
+            dims.push(PLACEMENT_HEAD_DIM);
+        }
+        ActionLayout::new(dims)
+    }
+
     /// Total number of *distinct* design points (for reporting;
     /// ≈ 2.1 × 10^17 unlocked — an arch lock collapses the first head,
     /// the placement head multiplies by its catalog size).
@@ -231,15 +348,36 @@ impl DesignSpace {
         base
     }
 
+    /// Decode a raw MultiDiscrete action into a design point, panicking
+    /// on malformed input — the infallible surface for callers whose
+    /// actions are valid by construction (the optimizer walks, the RL
+    /// sampler). Fallible callers (scenario files, `--action` specs, the
+    /// gym's `try_step`) use [`DesignSpace::try_decode`] and get a typed
+    /// error instead.
+    pub fn decode(&self, action: &[usize]) -> DesignPoint {
+        self.try_decode(action).unwrap_or_else(|e| panic!("invalid action: {e}"))
+    }
+
     /// Decode a raw MultiDiscrete action into a design point.
     ///
-    /// Every action decodes successfully (the RL agent must never be able
-    /// to emit an invalid action); semantic constraints (area budget) are
-    /// enforced later by the evaluator as reward penalties.
-    pub fn decode(&self, action: &[usize]) -> DesignPoint {
-        assert_eq!(action.len(), N_HEADS, "action must have 14 heads");
-        for (h, (&a, &d)) in action.iter().zip(ACTION_DIMS.iter()).enumerate() {
-            assert!(a < d, "head {h}: action {a} out of range {d}");
+    /// Accepts either the bare 14 Table 1 heads or this space's full
+    /// [`DesignSpace::action_len`] (the learned-placement head, when
+    /// present, never enters the decode — the gym evaluates it
+    /// separately, folding it modulo the template catalog so every
+    /// index is steppable). Range errors come back as typed
+    /// [`ActionError`]s; semantic constraints (area budget) are enforced
+    /// later by the evaluator as reward penalties.
+    pub fn try_decode(&self, action: &[usize]) -> Result<DesignPoint, ActionError> {
+        if action.len() != N_HEADS && action.len() != self.action_len() {
+            return Err(ActionError::WrongArity {
+                got: action.len(),
+                want: self.action_len(),
+            });
+        }
+        for (head, (&a, &d)) in action.iter().zip(ACTION_DIMS.iter()).enumerate() {
+            if a >= d {
+                return Err(ActionError::HeadOutOfRange { head, value: a, cardinality: d });
+            }
         }
         let arch = match self.arch_lock {
             Some(locked) => locked,
@@ -256,7 +394,7 @@ impl DesignSpace {
             // fold it to the Middle location.
             hbm_mask = 1 << 4;
         }
-        DesignPoint {
+        Ok(DesignPoint {
             arch,
             n_chiplets,
             hbm_mask,
@@ -271,7 +409,7 @@ impl DesignSpace {
             ai2hbm_gbps: (action[11] + 1) as f64,
             ai2hbm_links: 50 * (action[12] + 1),
             ai2hbm_trace_mm: (action[13] + 1) as f64,
-        }
+        })
     }
 
     /// Encode a design point back into action indices (inverse of
@@ -447,6 +585,81 @@ mod tests {
         let p = space.decode(&a);
         assert_eq!(p.hbm_mask, 1 << 4);
         assert_eq!(p.hbm_locs(), vec![HbmLoc::Middle]);
+    }
+
+    #[test]
+    fn layout_matches_action_dims_and_grows_with_placement() {
+        let plain = DesignSpace::case_i().layout();
+        assert_eq!(plain.dims(), &ACTION_DIMS);
+        assert_eq!(plain.n_heads(), N_HEADS);
+        assert_eq!(plain.total_logits(), 591);
+        assert_eq!(plain.head_slices()[0], (0, 3));
+        assert_eq!(plain.head_slices()[1], (3, 131));
+        assert_eq!(plain.head_slices()[13].1, 591);
+
+        let placed = DesignSpace::case_i().with_placement_head().layout();
+        assert_eq!(placed.n_heads(), N_HEADS + 1);
+        assert_eq!(placed.dims()[N_HEADS], PLACEMENT_HEAD_DIM);
+        assert_eq!(placed.total_logits(), 591 + PLACEMENT_HEAD_DIM);
+        assert_eq!(*placed.head_slices().last().unwrap(), (591, 595));
+    }
+
+    #[test]
+    fn layout_random_actions_validate() {
+        let layout = DesignSpace::case_ii().with_placement_head().layout();
+        let mut rng = Rng::new(13);
+        for _ in 0..500 {
+            let a = layout.random_action(&mut rng);
+            assert_eq!(a.len(), layout.n_heads());
+            layout.validate(&a).unwrap();
+        }
+        assert_eq!(
+            layout.validate(&[0usize; 3]),
+            Err(ActionError::WrongArity { got: 3, want: 15 })
+        );
+        let mut bad = vec![0usize; 15];
+        bad[4] = 20; // cardinality 20 -> max index 19
+        assert_eq!(
+            layout.validate(&bad),
+            Err(ActionError::HeadOutOfRange { head: 4, value: 20, cardinality: 20 })
+        );
+    }
+
+    #[test]
+    fn try_decode_returns_typed_errors_instead_of_panicking() {
+        let space = DesignSpace::case_i();
+        // wrong arity
+        let err = space.try_decode(&[0usize; 3]).unwrap_err();
+        assert_eq!(err, ActionError::WrongArity { got: 3, want: 14 });
+        assert!(err.to_string().contains("3 heads"));
+        // out-of-range head
+        let mut a = [0usize; N_HEADS];
+        a[0] = 3;
+        let err = space.try_decode(&a).unwrap_err();
+        assert_eq!(err, ActionError::HeadOutOfRange { head: 0, value: 3, cardinality: 3 });
+        assert!(err.to_string().contains("head 0"));
+        // valid actions agree with the panicking surface
+        a[0] = 2;
+        assert_eq!(space.try_decode(&a).unwrap(), space.decode(&a));
+    }
+
+    #[test]
+    fn try_decode_accepts_both_arities_of_a_learned_space() {
+        let space = DesignSpace::case_i().with_placement_head();
+        let a14 = [0usize; N_HEADS];
+        let mut a15 = a14.to_vec();
+        a15.push(7); // the placement head is never range-checked (it folds)
+        let p14 = space.try_decode(&a14).unwrap();
+        assert_eq!(space.try_decode(&a15).unwrap(), p14);
+        // a plain space still rejects 15-head actions
+        let plain = DesignSpace::case_i();
+        assert!(plain.try_decode(&a15).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid action")]
+    fn decode_panics_on_malformed_input() {
+        DesignSpace::case_i().decode(&[0usize; 2]);
     }
 
     #[test]

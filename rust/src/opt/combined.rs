@@ -13,7 +13,7 @@
 use anyhow::Result;
 
 use crate::cost::{Calib, Evaluation};
-use crate::model::space::{DesignSpace, N_HEADS};
+use crate::model::space::{Action, DesignSpace};
 use crate::rl::PpoConfig;
 use crate::runtime::Engine;
 
@@ -35,12 +35,15 @@ pub struct CombinedConfig {
     pub extra: Vec<PortfolioMember>,
 }
 
-/// One candidate produced by an optimizer instance.
+/// One candidate produced by an optimizer instance. The action is
+/// runtime-sized ([`Action`]): 14 heads from the analytical drivers,
+/// the space's full `action_len` (learned-placement head included) from
+/// an RL agent on a learned space.
 #[derive(Clone, Debug)]
 pub struct Candidate {
     pub source: String,
     pub seed: u64,
-    pub action: [usize; N_HEADS],
+    pub action: Action,
     pub eval: Evaluation,
 }
 
@@ -114,8 +117,12 @@ pub fn portfolio_optimize(
 /// agent's env-argmax (`RL`) and the deterministic final policy
 /// (`RL-det`) — the exhaustive search is over everything the agents
 /// produce. Shared by the sequential and parallel combined drivers.
+///
+/// `engine` is optional since the dynamic action-space refactor: `None`
+/// (or an artifact/layout shape mismatch — e.g. a learned-placement
+/// space) trains through the native `rl::net` backend instead.
 pub fn rl_candidates(
-    engine: &Engine,
+    engine: Option<&Engine>,
     space: &DesignSpace,
     calib: &Calib,
     cfg: &CombinedConfig,
@@ -123,18 +130,33 @@ pub fn rl_candidates(
     let driver = PpoDriver { engine, ppo: cfg.ppo, calib: calib.clone() };
     let mut out = Vec::new();
     for &seed in &cfg.rl_seeds {
-        let mut obj = CostObjective::new(space, calib);
-        let trace = driver.search(space, &mut obj, seed)?;
-        out.push(Candidate {
-            source: "RL".into(),
-            seed,
-            action: trace.best_action,
-            eval: trace.best_eval,
-        });
-        if let Some(det) = trace.final_policy_action {
-            let det_eval = obj.evaluate(&det);
-            out.push(Candidate { source: "RL-det".into(), seed, action: det, eval: det_eval });
-        }
+        out.extend(rl_seed_candidates(&driver, space, calib, seed)?);
+    }
+    Ok(out)
+}
+
+/// One RL seed's contribution to the exhaustive search — the single
+/// definition of what an `RL` / `RL-det` candidate is (source strings,
+/// re-score rule, ordering), shared by [`rl_candidates`] and the
+/// scenario sweep's per-seed PPO stage so the two surfaces cannot
+/// drift.
+pub fn rl_seed_candidates(
+    driver: &PpoDriver<'_>,
+    space: &DesignSpace,
+    calib: &Calib,
+    seed: u64,
+) -> Result<Vec<Candidate>> {
+    let mut obj = CostObjective::new(space, calib);
+    let trace = driver.search(space, &mut obj, seed)?;
+    let mut out = vec![Candidate {
+        source: "RL".into(),
+        seed,
+        action: trace.best_action,
+        eval: trace.best_eval,
+    }];
+    if let Some(det) = trace.final_policy_action {
+        let det_eval = obj.evaluate(&det);
+        out.push(Candidate { source: "RL-det".into(), seed, action: det, eval: det_eval });
     }
     Ok(out)
 }
@@ -153,7 +175,7 @@ pub fn combined_members(cfg: &CombinedConfig) -> Vec<PortfolioMember> {
 /// Run Algorithm 1: SA instances (+ any extra portfolio members), PPO
 /// agents, exhaustive argmax.
 pub fn combined_optimize(
-    engine: &Engine,
+    engine: Option<&Engine>,
     space: DesignSpace,
     calib: &Calib,
     cfg: &CombinedConfig,
@@ -191,8 +213,9 @@ mod tests {
     use crate::opt::search::{GaConfig, GreedyConfig};
 
     fn candidate(seed: u64, reward: f64) -> Candidate {
+        use crate::model::space::N_HEADS;
         let space = DesignSpace::case_i();
-        let action = [0usize; N_HEADS];
+        let action = vec![0usize; N_HEADS];
         let mut eval = evaluate(&Calib::default(), &space.decode(&action));
         eval.reward = reward;
         Candidate { source: "SA".into(), seed, action, eval }

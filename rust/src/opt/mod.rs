@@ -10,8 +10,8 @@ pub mod sa;
 pub mod search;
 
 pub use combined::{
-    combined_optimize, portfolio_candidates, portfolio_optimize, reward_cmp, sa_only_optimize,
-    select_best, Candidate, CombinedConfig, OptOutcome,
+    combined_optimize, portfolio_candidates, portfolio_optimize, reward_cmp, rl_seed_candidates,
+    sa_only_optimize, select_best, Candidate, CombinedConfig, OptOutcome,
 };
 pub use exhaustive::{exhaustive_projected, ExhaustiveOutcome, PinRule};
 pub use parallel::{

@@ -168,7 +168,7 @@ pub fn sa_only_optimize_par(
 /// [`super::combined::combined_optimize`] — so the outcome is
 /// bit-identical to the sequential driver.
 pub fn combined_optimize_par(
-    engine: &Engine,
+    engine: Option<&Engine>,
     space: DesignSpace,
     calib: &Calib,
     cfg: &CombinedConfig,

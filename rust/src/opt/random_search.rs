@@ -53,7 +53,7 @@ impl RandomConfig {
             .map(|(_, t)| t)
             .unwrap_or((first_action, first_eval));
         SearchTrace {
-            best_action,
+            best_action: best_action.to_vec(),
             best_eval,
             history: recorder.into_history(),
             evaluations: self.samples.max(1),
@@ -91,7 +91,9 @@ pub fn random_search(
     let cfg = RandomConfig { samples, trace_every };
     let mut obj = CostObjective::new(space, calib);
     let t = cfg.run(space, &mut obj, seed);
-    ((t.best_action, t.best_eval), t.history)
+    let action: [usize; N_HEADS] =
+        t.best_action.as_slice().try_into().expect("random search emits 14-head actions");
+    ((action, t.best_eval), t.history)
 }
 
 #[cfg(test)]

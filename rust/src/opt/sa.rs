@@ -94,7 +94,7 @@ impl SaConfig {
         let (best_action, best_eval) =
             tracker.into_best().map(|(_, t)| t).unwrap_or(fallback);
         SearchTrace {
-            best_action,
+            best_action: best_action.to_vec(),
             best_eval,
             history: recorder.into_history(),
             evaluations: self.iterations,
@@ -125,7 +125,7 @@ pub fn simulated_annealing(
     cfg: &SaConfig,
     seed: u64,
 ) -> SaTrace {
-    let mut eval_fn = |a: &[usize; N_HEADS]| evaluate(calib, &space.decode(a));
+    let mut eval_fn = |a: &[usize]| evaluate(calib, &space.decode(a));
     simulated_annealing_with(space, cfg, seed, &mut eval_fn)
 }
 
@@ -144,7 +144,7 @@ pub fn simulated_annealing_with<F>(
     eval_fn: &mut F,
 ) -> SaTrace
 where
-    F: FnMut(&[usize; N_HEADS]) -> Evaluation,
+    F: FnMut(&[usize]) -> Evaluation,
 {
     let mut obj = FnObjective(eval_fn);
     cfg.run(space, &mut obj, seed)
@@ -299,7 +299,7 @@ mod tests {
         let cfg = quick_cfg(2_000);
         let direct = simulated_annealing(&space, &calib, &cfg, 17);
         let mut calls = 0usize;
-        let mut eval_fn = |a: &[usize; N_HEADS]| {
+        let mut eval_fn = |a: &[usize]| {
             calls += 1;
             evaluate(&calib, &space.decode(a))
         };

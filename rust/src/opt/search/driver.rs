@@ -12,7 +12,7 @@
 use anyhow::Result;
 
 use crate::cost::Evaluation;
-use crate::model::space::{DesignSpace, N_HEADS};
+use crate::model::space::{Action, DesignSpace};
 
 use super::super::random_search::RandomConfig;
 use super::super::sa::SaConfig;
@@ -24,7 +24,10 @@ use super::objective::Objective;
 /// convergence history, and how many objective calls it spent.
 #[derive(Clone, Debug)]
 pub struct SearchTrace {
-    pub best_action: [usize; N_HEADS],
+    /// Runtime-sized raw action (14 heads from the analytical walkers;
+    /// the space's full `action_len` — e.g. the learned-placement head —
+    /// when an RL driver produced it).
+    pub best_action: Action,
     pub best_eval: Evaluation,
     /// `(tick, best-so-far objective)` samples. Tick units are
     /// driver-specific: SA iterations, random draws, GA generations,
@@ -35,7 +38,7 @@ pub struct SearchTrace {
     pub evaluations: usize,
     /// Deterministic final-policy action — PPO only; the combined
     /// pipeline scores it as the extra `RL-det` candidate.
-    pub final_policy_action: Option<[usize; N_HEADS]>,
+    pub final_policy_action: Option<Action>,
 }
 
 /// One optimizer in the portfolio: seeded, objective-agnostic search.

@@ -162,7 +162,7 @@ impl GaConfig {
             .map(|(_, t)| t)
             .unwrap_or_else(|| first.expect("population is non-empty"));
         SearchTrace {
-            best_action,
+            best_action: best_action.to_vec(),
             best_eval,
             history: recorder.into_history(),
             evaluations: budget.used(),
@@ -217,7 +217,7 @@ mod tests {
         let space = DesignSpace::case_i();
         let calib = Calib::default();
         let mut calls = 0usize;
-        let mut obj = FnObjective(|a: &[usize; N_HEADS]| {
+        let mut obj = FnObjective(|a: &[usize]| {
             calls += 1;
             crate::cost::evaluate(&calib, &space.decode(a))
         });
@@ -294,7 +294,7 @@ mod tests {
         let space = DesignSpace::case_i();
         let calib = Calib::default();
         let mut n = 0usize;
-        let mut obj = FnObjective(|a: &[usize; N_HEADS]| {
+        let mut obj = FnObjective(|a: &[usize]| {
             n += 1;
             let mut e = crate::cost::evaluate(&calib, &space.decode(a));
             if n % 2 == 0 {

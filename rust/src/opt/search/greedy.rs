@@ -98,7 +98,7 @@ impl GreedyConfig {
             .map(|(_, t)| t)
             .unwrap_or_else(|| first.expect("budget admits at least one evaluation"));
         SearchTrace {
-            best_action,
+            best_action: best_action.to_vec(),
             best_eval,
             history: recorder.into_history(),
             evaluations: budget.used(),
@@ -137,7 +137,7 @@ mod tests {
         let space = DesignSpace::case_i();
         let calib = Calib::default();
         let mut calls = 0usize;
-        let mut obj = FnObjective(|a: &[usize; N_HEADS]| {
+        let mut obj = FnObjective(|a: &[usize]| {
             calls += 1;
             crate::cost::evaluate(&calib, &space.decode(a))
         });
@@ -170,7 +170,7 @@ mod tests {
         let space = DesignSpace::case_i();
         let calib = Calib::default();
         let mut first_reward = None;
-        let mut obj = FnObjective(|a: &[usize; N_HEADS]| {
+        let mut obj = FnObjective(|a: &[usize]| {
             let e = crate::cost::evaluate(&calib, &space.decode(a));
             if first_reward.is_none() {
                 first_reward = Some(e.reward);

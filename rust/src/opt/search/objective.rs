@@ -11,11 +11,14 @@
 //! walk — the guarantee the bit-identical sweep/cache tests build on.
 
 use crate::cost::cache::EvalCache;
-use crate::cost::{evaluate, Calib, Evaluation};
-use crate::model::space::{DesignSpace, N_HEADS};
+use crate::cost::{evaluate_action, Calib, Evaluation};
+use crate::model::space::DesignSpace;
 
-/// A scalarized design objective: raw 14-head action in, full
-/// [`Evaluation`] out (drivers compare `Evaluation::reward`).
+/// A scalarized design objective: raw action in (any arity the space
+/// accepts — the bare 14 Table 1 heads from the analytical walkers, or
+/// the space's full `action_len` when an RL candidate carries the
+/// learned-placement head), full [`Evaluation`] out (drivers compare
+/// `Evaluation::reward`).
 ///
 /// Implementations must be pure in the action (same action ⇒ same
 /// evaluation) for the portfolio's bit-identical parallel fan-out to
@@ -35,7 +38,7 @@ use crate::model::space::{DesignSpace, N_HEADS};
 /// let space = DesignSpace::case_i();
 /// let calib = Calib::default();
 /// let mut calls = 0usize;
-/// let mut obj = FnObjective(|a: &[usize; N_HEADS]| {
+/// let mut obj = FnObjective(|a: &[usize]| {
 ///     calls += 1;
 ///     evaluate(&calib, &space.decode(a))
 /// });
@@ -44,13 +47,15 @@ use crate::model::space::{DesignSpace, N_HEADS};
 /// assert_eq!(calls, 1);
 /// ```
 pub trait Objective {
-    fn evaluate(&mut self, action: &[usize; N_HEADS]) -> Evaluation;
+    fn evaluate(&mut self, action: &[usize]) -> Evaluation;
 }
 
-/// The default objective: eq. 17 via [`cost::evaluate`] over a
-/// space-decoded action.
+/// The default objective: eq. 17 via [`cost::evaluate_action`] over a
+/// space-decoded action (placement-head-aware: a 15-head action on a
+/// learned space scores under its selected template layout, so RL
+/// candidates re-score exactly as their environment scored them).
 ///
-/// [`cost::evaluate`]: crate::cost::evaluate
+/// [`cost::evaluate_action`]: crate::cost::evaluate_action
 pub struct CostObjective<'a> {
     pub space: &'a DesignSpace,
     pub calib: &'a Calib,
@@ -63,8 +68,8 @@ impl<'a> CostObjective<'a> {
 }
 
 impl Objective for CostObjective<'_> {
-    fn evaluate(&mut self, action: &[usize; N_HEADS]) -> Evaluation {
-        evaluate(self.calib, &self.space.decode(action))
+    fn evaluate(&mut self, action: &[usize]) -> Evaluation {
+        evaluate_action(self.calib, self.space, action)
     }
 }
 
@@ -78,7 +83,7 @@ pub struct CachedObjective<'a> {
 }
 
 impl Objective for CachedObjective<'_> {
-    fn evaluate(&mut self, action: &[usize; N_HEADS]) -> Evaluation {
+    fn evaluate(&mut self, action: &[usize]) -> Evaluation {
         self.cache.evaluate(self.calib, self.space, action)
     }
 }
@@ -87,8 +92,8 @@ impl Objective for CachedObjective<'_> {
 /// test doubles) plug into the same driver path without a named type.
 pub struct FnObjective<F>(pub F);
 
-impl<F: FnMut(&[usize; N_HEADS]) -> Evaluation> Objective for FnObjective<F> {
-    fn evaluate(&mut self, action: &[usize; N_HEADS]) -> Evaluation {
+impl<F: FnMut(&[usize]) -> Evaluation> Objective for FnObjective<F> {
+    fn evaluate(&mut self, action: &[usize]) -> Evaluation {
         (self.0)(action)
     }
 }
@@ -97,6 +102,7 @@ impl<F: FnMut(&[usize; N_HEADS]) -> Evaluation> Objective for FnObjective<F> {
 mod tests {
     use super::*;
     use crate::cost::cache::DEFAULT_CACHE_CAP;
+    use crate::cost::evaluate;
     use crate::util::Rng;
 
     #[test]
@@ -109,7 +115,7 @@ mod tests {
         {
             let mut direct = CostObjective::new(&space, &calib);
             let mut cached = CachedObjective { cache: &mut cache, space: &space, calib: &calib };
-            let mut counted = FnObjective(|a: &[usize; N_HEADS]| {
+            let mut counted = FnObjective(|a: &[usize]| {
                 calls += 1;
                 evaluate(&calib, &space.decode(a))
             });
@@ -125,5 +131,23 @@ mod tests {
         assert_eq!(calls, 20);
         assert_eq!(cache.hits, 20);
         assert_eq!(cache.misses, 20);
+    }
+
+    #[test]
+    fn cost_objective_scores_the_learned_placement_head() {
+        // A 15-head action on a learned space must re-score exactly as
+        // the gym environment scored it (same template layout).
+        let space = DesignSpace::case_i().with_placement_head();
+        let calib = Calib::default();
+        let mut env = crate::gym::ChipletGymEnv::new(space, calib.clone(), 4);
+        let mut obj = CostObjective::new(&space, &calib);
+        let mut rng = Rng::new(21);
+        let plain = DesignSpace::case_i();
+        for t in 0..12 {
+            let mut a = plain.random_action(&mut rng).to_vec();
+            a.push(t % 4);
+            let stepped = env.step(&a);
+            assert_eq!(obj.evaluate(&a).reward, stepped.reward, "action {a:?}");
+        }
     }
 }

@@ -1,30 +1,42 @@
 //! The PPO agent as a [`SearchDriver`] portfolio member.
 //!
-//! Training still runs through `rl::train_ppo` over a `ChipletGymEnv`
-//! (the env evaluates eq. 17 internally on every step); the wrapper's
-//! job is to express one trained agent in the portfolio's vocabulary:
-//! its env-argmax best action re-scored through the caller's
+//! Training still runs through `rl::train_ppo_auto` over a
+//! `ChipletGymEnv` (the env evaluates eq. 17 internally on every step);
+//! the wrapper's job is to express one trained agent in the portfolio's
+//! vocabulary: its env-argmax best action re-scored through the caller's
 //! [`Objective`] (so a cached objective memoizes the re-score exactly
-//! like the non-RL drivers), plus the deterministic final-policy action
-//! the combined pipeline turns into the extra `RL-det` candidate.
+//! like the non-RL drivers — and, on learned-placement spaces, the
+//! objective scores the 15th head's template, so the re-score equals the
+//! env's own reward), plus the deterministic final-policy action the
+//! combined pipeline turns into the extra `RL-det` candidate.
+//!
+//! Since the dynamic action-space refactor the engine is optional: with
+//! artifacts whose shapes match the space's layout the AOT fast path
+//! runs; otherwise — no artifacts at all, or a 15-head learned-placement
+//! space the frozen artifacts cannot express — the native `rl::net`
+//! backend trains instead, which is what lets `PpoDriver` join the
+//! portfolio on 15-head spaces.
 
 use anyhow::Result;
 
 use crate::cost::Calib;
 use crate::gym::ChipletGymEnv;
 use crate::model::space::DesignSpace;
-use crate::rl::{train_ppo, PpoConfig};
+use crate::rl::{train_ppo_auto, PpoConfig};
 use crate::runtime::Engine;
 
 use super::driver::{SearchDriver, SearchTrace};
 use super::objective::Objective;
 
 /// One PPO agent in the portfolio. Not `Copy`/`Sync` (the PJRT engine
-/// handle isn't), so RL members run on the caller's thread while the
-/// analytical drivers fan out — same arrangement as before the
-/// refactor.
+/// handle isn't), so engine-backed RL members run on the caller's
+/// thread while the analytical drivers fan out — same arrangement as
+/// before the refactor. (The scenario sweep fans *native* PPO across
+/// threads separately: the native path is plain data + pure math.)
 pub struct PpoDriver<'e> {
-    pub engine: &'e Engine,
+    /// `Some` = try the AOT fast path (used only when the manifest's
+    /// shapes match the space's layout); `None` = always native.
+    pub engine: Option<&'e Engine>,
     pub ppo: PpoConfig,
     /// Calibration of the training environment (the objective the env
     /// optimizes; the `obj` argument is only used to re-score outputs).
@@ -43,7 +55,7 @@ impl SearchDriver for PpoDriver<'_> {
         seed: u64,
     ) -> Result<SearchTrace> {
         let mut env = ChipletGymEnv::new(*space, self.calib.clone(), self.ppo.episode_len);
-        let trace = train_ppo(self.engine, &mut env, &self.ppo, seed)?;
+        let trace = train_ppo_auto(self.engine, &mut env, &self.ppo, seed)?;
         let best_eval = obj.evaluate(&trace.best_action);
         // PPO's convergence signal is the per-design cost value, not a
         // best-so-far curve; ticks are timesteps.

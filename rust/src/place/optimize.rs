@@ -31,12 +31,7 @@ pub const PLACE_HEADS: [usize; 6] = [1, 5, 9, 12, 2, 8];
 
 /// The attach list an action encodes on an m×n grid: attach tile `j`
 /// read from `action[PLACE_HEADS[j]]` modulo the tile count.
-fn attaches_for(
-    locs: &[HbmLoc],
-    action: &[usize; N_HEADS],
-    m: usize,
-    n: usize,
-) -> Vec<HbmAttach> {
+fn attaches_for(locs: &[HbmLoc], action: &[usize], m: usize, n: usize) -> Vec<HbmAttach> {
     let n_tiles = m * n;
     locs.iter()
         .enumerate()
@@ -53,7 +48,7 @@ fn attaches_for(
 /// Decode an action vector into a placement for `n_fp` footprints and
 /// the design's HBM sites: full canonical tile rectangle, attach tiles
 /// from [`PLACE_HEADS`].
-pub fn decode_placement(n_fp: usize, locs: &[HbmLoc], action: &[usize; N_HEADS]) -> Placement {
+pub fn decode_placement(n_fp: usize, locs: &[HbmLoc], action: &[usize]) -> Placement {
     let (m, n) = mesh_dims(n_fp);
     let mut pl = Placement::canonical(n_fp, locs);
     pl.hbm = attaches_for(locs, action, m, n);
@@ -110,17 +105,24 @@ pub struct PlacementSummary {
     pub attach: String,
 }
 
+/// The one place a `PlacementSummary` is assembled from a layout plus
+/// the two comm-latency figures — shared by every summary producer so a
+/// new field cannot silently diverge between them.
+fn summarize(pl: &Placement, comm_ns: f64, canonical_comm_ns: f64) -> PlacementSummary {
+    let s = pl.hop_stats();
+    PlacementSummary {
+        max_ai_hops: s.max_ai_hops,
+        max_hbm_hops: s.max_hbm_hops,
+        mean_hbm_hops: s.mean_hbm_hops,
+        comm_ns,
+        canonical_comm_ns,
+        attach: pl.attach_string(),
+    }
+}
+
 impl PlacementOutcome {
     pub fn summary(&self) -> PlacementSummary {
-        let s = self.placement.hop_stats();
-        PlacementSummary {
-            max_ai_hops: s.max_ai_hops,
-            max_hbm_hops: s.max_hbm_hops,
-            mean_hbm_hops: s.mean_hbm_hops,
-            comm_ns: self.optimized_ns,
-            canonical_comm_ns: self.canonical_ns,
-            attach: self.placement.attach_string(),
-        }
+        summarize(&self.placement, self.optimized_ns, self.canonical_ns)
     }
 }
 
@@ -130,16 +132,27 @@ impl PlacementOutcome {
 /// mean-hop energy term, in which case canonical stays).
 pub fn canonical_summary(p: &DesignPoint) -> PlacementSummary {
     let pl = Placement::canonical(p.n_footprints(), &p.hbm_locs());
-    let s = pl.hop_stats();
     let ns = comm_latency_ns_of(p, &pl);
-    PlacementSummary {
-        max_ai_hops: s.max_ai_hops,
-        max_hbm_hops: s.max_hbm_hops,
-        mean_hbm_hops: s.mean_hbm_hops,
-        comm_ns: ns,
-        canonical_comm_ns: ns,
-        attach: pl.attach_string(),
+    summarize(&pl, ns, ns)
+}
+
+/// Summary of the layout a candidate's action actually scored under:
+/// the learned-placement template for a 15-head action on a learned
+/// space, canonical otherwise. This is what the sweep records when the
+/// reward guard keeps a candidate's own evaluation instead of the
+/// searched layout.
+fn kept_summary(
+    space: &DesignSpace,
+    p: &DesignPoint,
+    action: &[usize],
+    canonical_ns: f64,
+) -> PlacementSummary {
+    if !(space.placement_head && action.len() > N_HEADS) {
+        let pl = Placement::canonical(p.n_footprints(), &p.hbm_locs());
+        return summarize(&pl, canonical_ns, canonical_ns);
     }
+    let pl = Placement::template(p.n_footprints(), &p.hbm_locs(), action[N_HEADS]);
+    summarize(&pl, comm_latency_ns_of(p, &pl), canonical_ns)
 }
 
 /// The `placement = optimized|learned` post-pass over an optimizer
@@ -167,7 +180,9 @@ pub fn refine_outcome(
             c.eval = placed;
             summaries.push(found.summary());
         } else {
-            summaries.push(canonical_summary(&p));
+            // optimize_placement already evaluated the canonical layout
+            // for this exact design; reuse its figure.
+            summaries.push(kept_summary(space, &p, &c.action, found.canonical_ns));
         }
     }
     let best = select_best(&outcome.candidates).cloned();
@@ -216,7 +231,7 @@ pub fn optimize_placement(
     let (m, n) = mesh_dims(n_fp);
     let mut work = Placement::canonical(n_fp, &locs);
     let ai_stats = work.hop_stats();
-    let mut obj = FnObjective(|a: &[usize; N_HEADS]| {
+    let mut obj = FnObjective(|a: &[usize]| {
         work.hbm = attaches_for(&locs, a, m, n);
         let lat = latencies_from_stats(p, &work.hop_stats_with_ai(&ai_stats));
         let mut e = base;

@@ -168,10 +168,10 @@ mod tests {
         let path = dir.join("cands.csv");
         let space = DesignSpace::case_i();
         let calib = Calib::default();
-        let action = [0usize; N_HEADS];
+        let action = vec![0usize; N_HEADS];
         let eval = evaluate(&calib, &space.decode(&action));
         let cands = vec![
-            Candidate { source: "SA".into(), seed: 0, action, eval },
+            Candidate { source: "SA".into(), seed: 0, action: action.clone(), eval },
             Candidate { source: "GA".into(), seed: 1, action, eval },
         ];
         write_candidates_csv(&path, &space, &cands).unwrap();

@@ -54,6 +54,32 @@ pub fn argmax_action(logp_all: &[f32], head_slices: &[(usize, usize)], out: &mut
     }
 }
 
+/// Joint log-probability of a given action under per-head log-softmax —
+/// the same Σ-of-chosen-entries formula [`sample_action`] accumulates
+/// while sampling and `model.py::action_log_prob` computes inside the
+/// update artifact (the native PPO update uses this one).
+pub fn action_log_prob(logp_all: &[f32], head_slices: &[(usize, usize)], action: &[usize]) -> f64 {
+    debug_assert_eq!(action.len(), head_slices.len());
+    head_slices
+        .iter()
+        .zip(action.iter())
+        .map(|(&(start, _end), &a)| logp_all[start + a] as f64)
+        .sum()
+}
+
+/// Sum of per-head categorical entropies, H = Σ_h −Σ_i p_i·log p_i —
+/// the MultiDiscrete entropy of `model.py::entropy_heads`.
+pub fn entropy(logp_all: &[f32], head_slices: &[(usize, usize)]) -> f64 {
+    let mut ent = 0.0f64;
+    for &(start, end) in head_slices {
+        for &lp in &logp_all[start..end] {
+            let lp = lp as f64;
+            ent -= lp.exp() * lp;
+        }
+    }
+    ent
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -105,5 +131,84 @@ mod tests {
         let mut action = [0usize; 2];
         argmax_action(&logp_all, &slices, &mut action);
         assert_eq!(action, [1, 1]);
+    }
+
+    #[test]
+    fn two_head_logprob_and_entropy_match_hand_computation() {
+        // heads [0.7, 0.3] and [0.2, 0.5, 0.3]:
+        //   log p([1, 1]) = ln 0.3 + ln 0.5
+        //   H = −(0.7 ln 0.7 + 0.3 ln 0.3) − (0.2 ln 0.2 + 0.5 ln 0.5 + 0.3 ln 0.3)
+        let logp_all = logp_of(&[0.7, 0.3, 0.2, 0.5, 0.3]);
+        let slices = [(0, 2), (2, 5)];
+        let lp = action_log_prob(&logp_all, &slices, &[1, 1]);
+        let want_lp = 0.3f64.ln() + 0.5f64.ln();
+        assert!((lp - want_lp).abs() < 1e-6, "{lp} vs {want_lp}");
+        let h = entropy(&logp_all, &slices);
+        let h1 = -(0.7 * 0.7f64.ln() + 0.3 * 0.3f64.ln());
+        let h2 = -(0.2 * 0.2f64.ln() + 0.5 * 0.5f64.ln() + 0.3 * 0.3f64.ln());
+        assert!((h - (h1 + h2)).abs() < 1e-6, "{h} vs {}", h1 + h2);
+    }
+
+    /// Uniform per-head log-softmax for a layout: logp_i = −ln d per head.
+    fn uniform_logp(layout: &crate::model::space::ActionLayout) -> Vec<f32> {
+        let mut out = Vec::with_capacity(layout.total_logits());
+        for &d in layout.dims() {
+            out.extend(std::iter::repeat(-(d as f32).ln()).take(d));
+        }
+        out
+    }
+
+    #[test]
+    fn fourteen_head_uniform_fixture() {
+        use crate::model::space::{DesignSpace, ACTION_DIMS, N_HEADS};
+        let layout = DesignSpace::case_i().layout();
+        let slices = layout.head_slices();
+        let logp = uniform_logp(&layout);
+        // entropy of 14 independent uniform heads: Σ ln d = ln Π d
+        let want_h: f64 = ACTION_DIMS.iter().map(|&d| (d as f64).ln()).sum();
+        assert!((entropy(&logp, &slices) - want_h).abs() < 1e-4);
+        // every action has joint log-prob −ln Π d under uniform heads
+        let action = vec![0usize; N_HEADS];
+        let lp = action_log_prob(&logp, &slices, &action);
+        assert!((lp + want_h).abs() < 1e-4, "{lp} vs {}", -want_h);
+        // sampling stays in range and agrees with action_log_prob
+        let mut rng = Rng::new(3);
+        let mut out = vec![0usize; N_HEADS];
+        for _ in 0..50 {
+            let joint = sample_action(&logp, &slices, &mut rng, &mut out);
+            layout.validate(&out).unwrap();
+            assert!((joint - action_log_prob(&logp, &slices, &out)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fifteen_head_layout_samples_the_placement_head() {
+        use crate::model::space::{DesignSpace, PLACEMENT_HEAD_DIM};
+        let layout = DesignSpace::case_i().with_placement_head().layout();
+        let slices = layout.head_slices();
+        assert_eq!(slices.len(), 15);
+        // placement head sharply peaked on template 2, everything else
+        // uniform: argmax picks 2, entropy gains only the peaked head's
+        // (near-zero) term over the 14-head figure.
+        let mut logp = uniform_logp(&layout);
+        let (s, e) = slices[14];
+        assert_eq!(e - s, PLACEMENT_HEAD_DIM);
+        for (i, slot) in logp[s..e].iter_mut().enumerate() {
+            *slot = if i == 2 { (1.0f32 - 3e-7).ln() } else { 1e-7f32.ln() };
+        }
+        let mut out = vec![0usize; 15];
+        argmax_action(&logp, &slices, &mut out);
+        assert_eq!(out[14], 2);
+        let mut rng = Rng::new(4);
+        for _ in 0..100 {
+            let joint = sample_action(&logp, &slices, &mut rng, &mut out);
+            layout.validate(&out).unwrap();
+            assert_eq!(out[14], 2, "peaked placement head must dominate");
+            assert!((joint - action_log_prob(&logp, &slices, &out)).abs() < 1e-12);
+        }
+        let h15 = entropy(&logp, &slices);
+        let h14 = entropy(&logp[..s], &slices[..14]);
+        assert!(h15 - h14 >= 0.0, "entropy is additive across heads");
+        assert!(h15 - h14 < 1e-4, "a near-deterministic head adds ~0 entropy");
     }
 }

@@ -6,7 +6,7 @@
 //! vectors; Gaussian-with-matched-scale is statistically equivalent for
 //! these layer sizes and keeps seeds cheap on the Rust side (no QR).
 
-use crate::runtime::Manifest;
+use crate::runtime::{Manifest, ParamEntry};
 use crate::util::Rng;
 
 /// Gain for a parameter tensor by name (matches model.py's schedule).
@@ -18,11 +18,16 @@ fn gain(name: &str) -> f64 {
     }
 }
 
-/// Initialize a flat parameter vector per the manifest layout.
-pub fn init_params(manifest: &Manifest, seed: u64) -> Vec<f32> {
+/// Initialize a flat parameter vector over an explicit tensor layout —
+/// the shared core of the manifest path ([`init_params`]) and the
+/// layout-sized native path (`rl::net::NetShape::param_entries`). Both
+/// feed the same `(name, shape, offset)` entries through the same RNG
+/// stream, so whenever the shapes agree the two paths produce
+/// bit-identical vectors (pinned in the tests below).
+pub fn init_param_entries(entries: &[ParamEntry], param_count: usize, seed: u64) -> Vec<f32> {
     let mut rng = Rng::new(seed ^ 0x9e37_79b9);
-    let mut flat = vec![0f32; manifest.param_count];
-    for entry in &manifest.params {
+    let mut flat = vec![0f32; param_count];
+    for entry in entries {
         if entry.shape.len() == 1 {
             continue; // biases stay zero
         }
@@ -33,6 +38,11 @@ pub fn init_params(manifest: &Manifest, seed: u64) -> Vec<f32> {
         }
     }
     flat
+}
+
+/// Initialize a flat parameter vector per the manifest layout.
+pub fn init_params(manifest: &Manifest, seed: u64) -> Vec<f32> {
+    init_param_entries(&manifest.params, manifest.param_count, seed)
 }
 
 #[cfg(test)]
@@ -79,6 +89,72 @@ mod tests {
         let head_max = p[40..56].iter().fold(0f32, |a, &x| a.max(x.abs()));
         let body_max = p[0..32].iter().fold(0f32, |a, &x| a.max(x.abs()));
         assert!(head_max < body_max / 5.0, "head {head_max} body {body_max}");
+    }
+
+    /// Manifest JSON describing exactly the network `shape` induces.
+    fn manifest_json_for(shape: &crate::rl::net::NetShape) -> String {
+        let entries = shape.param_entries();
+        let params: Vec<String> = entries
+            .iter()
+            .map(|e| {
+                format!(
+                    r#"{{"name": "{}", "shape": {:?}, "offset": {}, "size": {}}}"#,
+                    e.name, e.shape, e.offset, e.size
+                )
+            })
+            .collect();
+        format!(
+            r#"{{
+              "obs_dim": {}, "hidden": {}, "action_dims": {:?},
+              "act_total": {}, "n_heads": {}, "param_count": {},
+              "eval_batch": 8,
+              "params": [{}],
+              "hyperparams": {{"n_steps": 8, "batch_size": 4, "n_epoch": 2,
+                "learning_rate": 0.001, "clip_range": 0.2, "ent_coef": 0.1,
+                "vf_coef": 0.5, "gamma": 0.99, "gae_lambda": 0.95,
+                "max_grad_norm": 0.5, "total_timesteps": 100,
+                "episode_length": 2}},
+              "artifacts": {{"policy_forward": "f", "policy_forward_b64": "fb",
+                "ppo_update": "u"}}
+            }}"#,
+            shape.obs_dim,
+            shape.hidden,
+            shape.dims,
+            shape.act_total(),
+            shape.n_heads(),
+            shape.param_count(),
+            params.join(",")
+        )
+    }
+
+    #[test]
+    fn manifest_and_layout_paths_are_bit_identical_on_matching_shapes() {
+        // The AOT fast path must hand the engine the same initial
+        // parameter vector the native path would build for the same
+        // network: build a real Manifest from the native layout, check
+        // it passes the fast-path guard, and compare the two
+        // initializer entry points bit for bit.
+        use crate::model::space::DesignSpace;
+        use crate::rl::init::init_param_entries;
+        use crate::rl::net::NetShape;
+        let shape = NetShape::for_layout(&DesignSpace::case_i().layout());
+        let json = Json::parse(&manifest_json_for(&shape)).unwrap();
+        let m = Manifest::from_json(&json).unwrap();
+        assert!(shape.matches_manifest(&m), "guard must accept its own layout");
+        let entries = shape.param_entries();
+        for seed in [0u64, 1, 42] {
+            let aot = init_params(&m, seed);
+            let native = init_param_entries(&entries, shape.param_count(), seed);
+            assert_eq!(aot, native, "seed {seed}");
+            assert!(aot.iter().any(|&x| x != 0.0));
+        }
+        // a manifest whose tensor *names* differ (same sizes/offsets)
+        // would initialize differently (the gain schedule is by name) —
+        // the entry-level guard must reject it.
+        let renamed = manifest_json_for(&shape).replace("\"pi_wh\"", "\"pi_w9\"");
+        let m2 = Manifest::from_json(&Json::parse(&renamed).unwrap()).unwrap();
+        assert!(!shape.matches_manifest(&m2), "renamed tensor must fail the guard");
+        assert_ne!(init_params(&m2, 0), init_params(&m, 0));
     }
 
     #[test]

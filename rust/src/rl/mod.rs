@@ -1,15 +1,24 @@
-//! PPO over the AOT'd JAX/Pallas network — Section 4.1 of the paper.
+//! PPO over a runtime-sized MultiDiscrete action space — Section 4.1.
 //!
 //! The Rust side owns everything stochastic and sequential: parameter
 //! initialization, rollouts through the Chiplet-Gym environment,
 //! MultiDiscrete sampling, GAE, minibatch shuffling and the Adam step
 //! counter. The two numerical kernels — policy forward and the clipped
-//! PPO gradient step — execute as compiled HLO through
-//! [`crate::runtime::Engine`].
+//! PPO gradient step — execute through one of two [`ppo::PpoBackend`]s:
+//! the AOT'd HLO artifacts via [`crate::runtime::Engine`] (the validated
+//! fast path, when the manifest's shapes match the space's
+//! `ActionLayout`) or the pure-Rust [`net::NativeNet`] sized from the
+//! layout (any head count, no artifacts — the path `placement =
+//! learned` trains through).
 
 pub mod categorical;
 pub mod init;
+pub mod net;
 pub mod ppo;
 pub mod rollout;
 
-pub use ppo::{train_ppo, PpoConfig, PpoTrace};
+pub use net::{NativeNet, NetShape};
+pub use ppo::{
+    aot_backend, manifest_matches, train_ppo, train_ppo_auto, train_ppo_native, train_ppo_with,
+    PpoBackend, PpoConfig, PpoTrace,
+};

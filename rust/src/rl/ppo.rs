@@ -1,22 +1,38 @@
 //! The PPO training loop (SB3-faithful, Table 5 hyper-parameters).
 //!
-//! Rust drives everything; the network forward and the clipped-surrogate
-//! Adam step run as AOT-compiled HLO through [`Engine`]. One call to
-//! [`train_ppo`] trains one agent from one seed — Alg. 1 launches many.
+//! Rust drives everything; the numerical kernels run through one of two
+//! backends behind [`PpoBackend`]:
+//!
+//! * **AOT** — the compiled HLO artifacts via [`Engine`]. This is the
+//!   validated fast path: before training, the artifact manifest's
+//!   network shape is checked against the design space's
+//!   [`ActionLayout`] (`NetShape::matches_manifest`), and a mismatch is
+//!   a typed error, not a panic. On matching shapes the loop is
+//!   bit-identical to the pre-refactor fixed-14-head implementation —
+//!   same RNG stream, same buffers, same engine calls.
+//! * **Native** — the pure-Rust [`NativeNet`] sized at runtime from the
+//!   layout. Any layout trains, including the 15-head learned-placement
+//!   space no frozen artifact knows about, and no artifacts are needed
+//!   at all.
+//!
+//! One call to [`train_ppo_with`] trains one agent from one seed —
+//! Alg. 1 launches many.
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::gym::{ChipletGymEnv, VecEnv, OBS_DIM};
-use crate::model::space::N_HEADS;
-use crate::runtime::Engine;
+use crate::model::space::{Action, ActionLayout};
+use crate::runtime::{Engine, ForwardOut, UpdateOut};
 use crate::util::Rng;
 
 use super::categorical;
-use super::init::init_params;
+use super::init::{init_param_entries, init_params};
+use super::net::{NativeNet, NetShape};
 use super::rollout::RolloutBuffer;
 
-/// PPO hyper-parameters. Defaults mirror the artifact manifest (Table 5);
-/// the Fig. 7/8 benches override `episode_len` / `ent_coef`.
+/// PPO hyper-parameters. Defaults mirror Table 5 ([`PpoConfig::paper`],
+/// also what the artifact manifest carries); the Fig. 7/8 benches
+/// override `episode_len` / `ent_coef`.
 #[derive(Clone, Copy, Debug)]
 pub struct PpoConfig {
     pub total_timesteps: usize,
@@ -41,6 +57,26 @@ pub struct PpoConfig {
 }
 
 impl PpoConfig {
+    /// Table 5 of the paper (SB3 defaults + ent_coef 0.1) — the same
+    /// numbers `model.py::HYPERPARAMS` bakes into the artifacts, usable
+    /// without any artifacts present (the native-backend entry point).
+    pub fn paper() -> PpoConfig {
+        PpoConfig {
+            total_timesteps: 250_000,
+            n_steps: 2048,
+            batch_size: 64,
+            n_epoch: 10,
+            learning_rate: 3e-4,
+            clip_range: 0.2,
+            ent_coef: 0.1,
+            gamma: 0.99,
+            gae_lambda: 0.95,
+            episode_len: 2,
+            reward_scale: 100.0,
+            n_envs: 1,
+        }
+    }
+
     /// Pull Table 5 defaults from the artifact manifest.
     pub fn from_manifest(engine: &Engine) -> PpoConfig {
         let h = &engine.manifest.hyper;
@@ -82,39 +118,216 @@ pub struct IterStat {
     pub approx_kl: f64,
 }
 
-/// Output of one PPO training run.
+/// Output of one PPO training run. Actions are runtime-sized
+/// ([`Action`]): 14 entries on the Table 1 space, 15 with the
+/// learned-placement head.
 #[derive(Clone, Debug)]
 pub struct PpoTrace {
     pub history: Vec<IterStat>,
-    pub best_action: [usize; N_HEADS],
+    pub best_action: Action,
     pub best_reward: f64,
     /// Deterministic (argmax) action of the final policy.
-    pub final_policy_action: [usize; N_HEADS],
+    pub final_policy_action: Action,
     pub timesteps: usize,
 }
 
-/// Train one PPO agent on the Chiplet-Gym environment.
+/// Which numerical backend executes the policy network.
+pub enum PpoBackend<'e> {
+    /// AOT'd HLO artifacts through the PJRT engine — the validated fast
+    /// path; shapes must match the space's layout.
+    Aot(&'e Engine),
+    /// Pure-Rust network sized from the layout (`rl::net`) — any layout,
+    /// no artifacts required.
+    Native,
+}
+
+/// Does `engine`'s artifact network match a space layout? (The
+/// condition under which [`train_ppo_auto`] picks the AOT fast path.)
+pub fn manifest_matches(engine: &Engine, layout: &ActionLayout) -> bool {
+    NetShape::for_layout(layout).matches_manifest(&engine.manifest)
+}
+
+/// The single backend-selection predicate behind [`train_ppo_auto`] —
+/// also what the CLI uses for its "RL backend" label, so the printed
+/// choice can never drift from the trained one. `true` = the AOT path
+/// (either the validated fast path, or — for a standard 14-head space
+/// with mismatched artifacts — its typed stale-artifact error);
+/// `false` = the native network.
+pub fn aot_backend(engine: &Engine, layout: &ActionLayout) -> bool {
+    manifest_matches(engine, layout) || layout.dims() == crate::model::space::ACTION_DIMS
+}
+
+/// Train one PPO agent on the AOT fast path (shapes validated against
+/// the manifest; errors, not panics, on mismatch).
 pub fn train_ppo(
     engine: &Engine,
     env: &mut ChipletGymEnv,
     cfg: &PpoConfig,
     seed: u64,
 ) -> Result<PpoTrace> {
-    let manifest = &engine.manifest;
-    assert_eq!(
-        manifest.action_dims,
-        crate::model::space::ACTION_DIMS.to_vec(),
-        "artifact action space != Rust design space — rebuild artifacts"
-    );
-    anyhow::ensure!(
-        !env.space.placement_head,
-        "the AOT'd policy network has no placement head: train with \
-         placement = canonical/optimized, or rebuild artifacts with the \
-         extra head"
-    );
-    env.episode_len = cfg.episode_len;
+    train_ppo_with(&PpoBackend::Aot(engine), env, cfg, seed)
+}
 
-    let head_slices = manifest.head_slices();
+/// Train one PPO agent on the native backend (no artifacts needed; the
+/// network is sized from `env.space.layout()`).
+pub fn train_ppo_native(env: &mut ChipletGymEnv, cfg: &PpoConfig, seed: u64) -> Result<PpoTrace> {
+    train_ppo_with(&PpoBackend::Native, env, cfg, seed)
+}
+
+/// Backend auto-selection: the AOT fast path when an engine is present
+/// *and* its artifact shapes match the space's layout; the native
+/// network when there is no engine or the layout has grown beyond the
+/// Table 1 heads the artifacts were traced for (learned placement).
+///
+/// A supplied engine whose artifacts fail to match a *standard* 14-head
+/// space is a stale-artifact condition, not a fallback case: that
+/// combination returns `train_ppo`'s typed shape-mismatch error instead
+/// of silently training on the non-bit-compatible native backend.
+pub fn train_ppo_auto(
+    engine: Option<&Engine>,
+    env: &mut ChipletGymEnv,
+    cfg: &PpoConfig,
+    seed: u64,
+) -> Result<PpoTrace> {
+    let layout = env.space.layout();
+    match engine {
+        Some(e) if aot_backend(e, &layout) => train_ppo_with(&PpoBackend::Aot(e), env, cfg, seed),
+        _ => train_ppo_with(&PpoBackend::Native, env, cfg, seed),
+    }
+}
+
+/// Executor over a chosen backend: one internal call surface for the
+/// rollout forward, the per-minibatch update and the fused-epoch path.
+enum Exec<'e> {
+    Aot(&'e Engine),
+    Native(NativeNet),
+}
+
+/// A rollout session: device-resident parameters on the AOT path, a
+/// plain borrow on the native path.
+enum Session<'a> {
+    Aot(crate::runtime::ForwardSession<'a>),
+    Native { net: &'a NativeNet, params: &'a [f32] },
+}
+
+impl Session<'_> {
+    fn forward(&self, obs: &[f32]) -> Result<ForwardOut> {
+        match self {
+            Session::Aot(s) => s.forward(obs),
+            Session::Native { net, params } => net.forward(params, obs),
+        }
+    }
+}
+
+impl Exec<'_> {
+    fn forward_session<'a>(&'a self, params: &'a [f32]) -> Result<Session<'a>> {
+        match self {
+            Exec::Aot(e) => Ok(Session::Aot(e.forward_session(params)?)),
+            Exec::Native(n) => Ok(Session::Native { net: n, params }),
+        }
+    }
+
+    fn policy_forward(&self, params: &[f32], obs: &[f32]) -> Result<ForwardOut> {
+        match self {
+            Exec::Aot(e) => e.policy_forward(params, obs),
+            Exec::Native(n) => n.forward(params, obs),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn ppo_epochs(
+        &self,
+        params: &[f32],
+        adam_m: &[f32],
+        adam_v: &[f32],
+        step0: f32,
+        obs: &[f32],
+        actions: &[i32],
+        old_logp: &[f32],
+        advantages: &[f32],
+        returns: &[f32],
+        perm: &[i32],
+        hyper: [f32; 3],
+    ) -> Result<UpdateOut> {
+        match self {
+            Exec::Aot(e) => e.ppo_epochs(
+                params, adam_m, adam_v, step0, obs, actions, old_logp, advantages, returns,
+                perm, hyper,
+            ),
+            Exec::Native(_) => unreachable!("native backend has no fused-epoch path"),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn ppo_update(
+        &self,
+        params: &[f32],
+        adam_m: &[f32],
+        adam_v: &[f32],
+        step: f32,
+        obs: &[f32],
+        actions: &[i32],
+        old_logp: &[f32],
+        advantages: &[f32],
+        returns: &[f32],
+        hyper: [f32; 3],
+    ) -> Result<UpdateOut> {
+        match self {
+            Exec::Aot(e) => e.ppo_update(
+                params, adam_m, adam_v, step, obs, actions, old_logp, advantages, returns, hyper,
+            ),
+            Exec::Native(n) => n.ppo_update(
+                params, adam_m, adam_v, step, obs, actions, old_logp, advantages, returns, hyper,
+            ),
+        }
+    }
+}
+
+/// Train one PPO agent on the Chiplet-Gym environment over an explicit
+/// backend. The loop is sized entirely from `env.space.layout()` — the
+/// sampler, the rollout buffer and the network dimensions all follow the
+/// runtime head count, so 14- and 15-head spaces run through one code
+/// path.
+pub fn train_ppo_with(
+    backend: &PpoBackend<'_>,
+    env: &mut ChipletGymEnv,
+    cfg: &PpoConfig,
+    seed: u64,
+) -> Result<PpoTrace> {
+    let layout = env.space.layout();
+    let n_heads = layout.n_heads();
+    let head_slices = layout.head_slices();
+
+    // Backend setup: validate the AOT manifest against the layout (a
+    // typed error, not a panic, when a scenario's space outgrows the
+    // frozen artifacts), or size the native network from the layout.
+    let (exec, params) = match backend {
+        PpoBackend::Aot(engine) => {
+            let m = &engine.manifest;
+            ensure!(
+                m.action_dims.as_slice() == layout.dims(),
+                "artifact action space {:?} does not match this design space's layout {:?} — \
+                 a `placement = learned` scenario (15th head) needs the native PPO backend or \
+                 rebuilt artifacts",
+                m.action_dims,
+                layout.dims()
+            );
+            ensure!(
+                m.obs_dim == OBS_DIM,
+                "artifact obs_dim {} != environment OBS_DIM {OBS_DIM} — rebuild artifacts",
+                m.obs_dim
+            );
+            let params = init_params(m, seed);
+            (Exec::Aot(*engine), params)
+        }
+        PpoBackend::Native => {
+            let shape = NetShape::for_layout(&layout);
+            let params = init_param_entries(&shape.param_entries(), shape.param_count(), seed);
+            (Exec::Native(NativeNet::new(shape)), params)
+        }
+    };
+
+    env.episode_len = cfg.episode_len;
     let hyper = [
         cfg.learning_rate as f32,
         cfg.clip_range as f32,
@@ -122,7 +335,7 @@ pub fn train_ppo(
     ];
 
     let mut rng = Rng::new(seed);
-    let mut params = init_params(manifest, seed);
+    let mut params = params;
     let mut adam_m = vec![0f32; params.len()];
     let mut adam_v = vec![0f32; params.len()];
     let mut adam_t: u64 = 0;
@@ -132,7 +345,7 @@ pub fn train_ppo(
     // the RNG stream and transitions are bit-identical to the classic
     // single-env loop.
     let n_envs = cfg.n_envs.max(1);
-    assert!(
+    ensure!(
         cfg.n_steps % n_envs == 0,
         "n_steps {} must be divisible by n_envs {n_envs}",
         cfg.n_steps
@@ -142,9 +355,9 @@ pub fn train_ppo(
     // their stats back never re-counts the caller env's own history.
     let mut vec_env = VecEnv::replicate(&env.fork(), n_envs);
 
-    let mut buffer = RolloutBuffer::new(cfg.n_steps);
+    let mut buffer = RolloutBuffer::new(cfg.n_steps, n_heads);
     let mut obs_batch = vec_env.reset_all();
-    let mut actions = vec![[0usize; N_HEADS]; n_envs];
+    let mut actions: Vec<Action> = vec![vec![0usize; n_heads]; n_envs];
     let mut log_probs = vec![0f64; n_envs];
     let mut values = vec![0f32; n_envs];
     let mut obs_flat = vec![0f32; n_envs * OBS_DIM];
@@ -154,30 +367,51 @@ pub fn train_ppo(
     let mut ep_acc = vec![0.0f64; n_envs];
     let mut recent_eps: Vec<f64> = Vec::new();
 
-    // minibatch scratch
+    // minibatch scratch (rows sized from the runtime head count)
     let mb = cfg.batch_size;
     let mut mb_obs = vec![0f32; mb * OBS_DIM];
-    let mut mb_act = vec![0i32; mb * N_HEADS];
+    let mut mb_act = vec![0i32; mb * n_heads];
     let mut mb_lp = vec![0f32; mb];
     let mut mb_adv = vec![0f32; mb];
     let mut mb_ret = vec![0f32; mb];
+    // scratch for the native path's remainder minibatch (empty when the
+    // batch size tiles the rollout)
+    let rem_len = cfg.n_steps % mb;
+    let mut rem_obs = vec![0f32; rem_len * OBS_DIM];
+    let mut rem_act = vec![0i32; rem_len * n_heads];
+    let mut rem_lp = vec![0f32; rem_len];
+    let mut rem_adv = vec![0f32; rem_len];
+    let mut rem_ret = vec![0f32; rem_len];
 
     let mut history = Vec::new();
     let mut steps = 0usize;
 
     // §Perf: the epoch-fused artifact turns the 320 per-minibatch HLO
     // calls of one iteration into a single call (EXPERIMENTS.md §Perf).
-    // Only usable when the rollout is exactly n_steps and minibatches
-    // tile it — always true here; the per-minibatch path remains for
-    // tests and partial batches.
-    let use_fused = engine.has_epochs() && cfg.n_steps % mb == 0;
+    // Only usable when the run's rollout/minibatch/epoch shape is
+    // exactly what the artifact was traced with — a quick()-clamped
+    // n_steps must fall back to the per-minibatch path, or ppo_epochs
+    // rejects the buffers mid-run. The per-minibatch path also serves
+    // the native backend (which additionally trains the remainder rows
+    // of a non-tiling batch size — see below).
+    let use_fused = match &exec {
+        Exec::Aot(e) => {
+            let h = &e.manifest.hyper;
+            e.has_epochs()
+                && cfg.n_steps == h.n_steps
+                && cfg.batch_size == h.batch_size
+                && cfg.n_epoch == h.n_epoch
+                && cfg.n_steps % mb == 0
+        }
+        Exec::Native(_) => false,
+    };
     let minibatches_per_iter = cfg.n_epoch * (cfg.n_steps / mb);
     let mut perm_flat = vec![0i32; minibatches_per_iter * mb];
 
     while steps < cfg.total_timesteps {
         // ---- rollout (device-resident params via ForwardSession) ----
         buffer.clear();
-        let session = engine.forward_session(&params)?;
+        let session = exec.forward_session(&params)?;
         for t in 0..t_len {
             for e in 0..n_envs {
                 let fwd = session.forward(&obs_batch[e])?;
@@ -227,7 +461,7 @@ pub fn train_ppo(
                     perm_flat[base + i] = p as i32;
                 }
             }
-            let out = engine.ppo_epochs(
+            let out = exec.ppo_epochs(
                 &params,
                 &adam_m,
                 &adam_v,
@@ -248,13 +482,14 @@ pub fn train_ppo(
         } else {
             for _ in 0..cfg.n_epoch {
                 let perm = rng.permutation(cfg.n_steps);
-                for chunk in perm.chunks_exact(mb) {
+                let mut chunks = perm.chunks_exact(mb);
+                for chunk in &mut chunks {
                     buffer.gather(
                         chunk, &mut mb_obs, &mut mb_act, &mut mb_lp, &mut mb_adv,
                         &mut mb_ret,
                     );
                     adam_t += 1;
-                    let out = engine.ppo_update(
+                    let out = exec.ppo_update(
                         &params,
                         &adam_m,
                         &adam_v,
@@ -264,6 +499,38 @@ pub fn train_ppo(
                         &mb_lp,
                         &mb_adv,
                         &mb_ret,
+                        hyper,
+                    )?;
+                    params = out.params;
+                    adam_m = out.adam_m;
+                    adam_v = out.adam_v;
+                    last_stats = Some(out.stats);
+                }
+                // When batch_size does not tile n_steps (a scenario
+                // budget below 2048 can do this), the native backend
+                // trains the leftover rows as one short minibatch — no
+                // rollout data is silently dropped. The AOT update
+                // artifact is traced at a fixed minibatch shape, so on
+                // that path the remainder is skipped, exactly as the
+                // pre-refactor loop did (bit-identity preserved).
+                let rem = chunks.remainder();
+                if !rem.is_empty() && matches!(exec, Exec::Native(_)) {
+                    debug_assert_eq!(rem.len(), rem_len);
+                    buffer.gather(
+                        rem, &mut rem_obs, &mut rem_act, &mut rem_lp, &mut rem_adv,
+                        &mut rem_ret,
+                    );
+                    adam_t += 1;
+                    let out = exec.ppo_update(
+                        &params,
+                        &adam_m,
+                        &adam_v,
+                        adam_t as f32,
+                        &rem_obs,
+                        &rem_act,
+                        &rem_lp,
+                        &rem_adv,
+                        &rem_ret,
                         hyper,
                     )?;
                     params = out.params;
@@ -298,18 +565,17 @@ pub fn train_ppo(
 
     // Deterministic action of the final policy.
     let final_obs = env.reset();
-    let fwd = engine.policy_forward(&params, &final_obs)?;
-    let mut final_action = [0usize; N_HEADS];
+    let fwd = exec.policy_forward(&params, &final_obs)?;
+    let mut final_action = vec![0usize; n_heads];
     categorical::argmax_action(&fwd.logp_all, &head_slices, &mut final_action);
 
-    let (best_reward, best_point) = env
-        .best()
-        .map(|(r, p)| (r, env.space.encode(p)))
-        .unwrap_or((f64::NEG_INFINITY, [0; N_HEADS]));
+    let (best_reward, best_action) = env
+        .best_action()
+        .unwrap_or((f64::NEG_INFINITY, vec![0; n_heads]));
 
     Ok(PpoTrace {
         history,
-        best_action: best_point,
+        best_action,
         best_reward,
         final_policy_action: final_action,
         timesteps: steps,

@@ -6,14 +6,17 @@
 //! `adv = delta + γλ·(1−done)·adv'`, `ret = adv + V(s)`.
 
 use crate::gym::{Step, OBS_DIM};
-use crate::model::space::N_HEADS;
 
-/// One on-policy rollout batch.
+/// One on-policy rollout batch, sized at runtime from the action
+/// layout's head count (`DesignSpace::layout().n_heads()`) — 14 for the
+/// Table 1 space, 15 with the learned-placement head.
 #[derive(Clone, Debug)]
 pub struct RolloutBuffer {
     pub n_steps: usize,
+    /// Heads per action (row width of `actions`).
+    pub n_heads: usize,
     pub obs: Vec<f32>,        // n_steps × OBS_DIM
-    pub actions: Vec<i32>,    // n_steps × N_HEADS
+    pub actions: Vec<i32>,    // n_steps × n_heads
     pub log_probs: Vec<f32>,  // n_steps
     pub rewards: Vec<f64>,    // n_steps (raw env scale)
     pub values: Vec<f32>,     // n_steps
@@ -28,11 +31,13 @@ pub struct RolloutBuffer {
 }
 
 impl RolloutBuffer {
-    pub fn new(n_steps: usize) -> RolloutBuffer {
+    pub fn new(n_steps: usize, n_heads: usize) -> RolloutBuffer {
+        assert!(n_heads >= 1, "rollout rows need at least one action head");
         RolloutBuffer {
             n_steps,
+            n_heads,
             obs: vec![0.0; n_steps * OBS_DIM],
-            actions: vec![0; n_steps * N_HEADS],
+            actions: vec![0; n_steps * n_heads],
             log_probs: vec![0.0; n_steps],
             rewards: vec![0.0; n_steps],
             values: vec![0.0; n_steps],
@@ -65,7 +70,7 @@ impl RolloutBuffer {
     pub fn push(
         &mut self,
         obs: &[f32; OBS_DIM],
-        action: &[usize; N_HEADS],
+        action: &[usize],
         log_prob: f64,
         reward: f64,
         value: f32,
@@ -73,9 +78,10 @@ impl RolloutBuffer {
     ) {
         assert_eq!(self.batch_k, 0, "do not mix push with push_step_batch");
         assert!(self.pos < self.n_steps, "rollout buffer overflow");
+        assert_eq!(action.len(), self.n_heads, "action arity != buffer row width");
         let o = self.pos * OBS_DIM;
         self.obs[o..o + OBS_DIM].copy_from_slice(obs);
-        let a = self.pos * N_HEADS;
+        let a = self.pos * self.n_heads;
         for (i, &x) in action.iter().enumerate() {
             self.actions[a + i] = x as i32;
         }
@@ -96,11 +102,11 @@ impl RolloutBuffer {
     ///
     /// Must be called with `t = 0, 1, 2, ...` in order and a fixed K;
     /// do not mix with [`RolloutBuffer::push`].
-    pub fn push_step_batch(
+    pub fn push_step_batch<A: AsRef<[usize]>>(
         &mut self,
         t: usize,
         obs: &[f32],
-        actions: &[[usize; N_HEADS]],
+        actions: &[A],
         log_probs: &[f64],
         values: &[f32],
         steps: &[Step],
@@ -129,8 +135,10 @@ impl RolloutBuffer {
             let row = e * t_len + t;
             let o = row * OBS_DIM;
             self.obs[o..o + OBS_DIM].copy_from_slice(&obs[e * OBS_DIM..(e + 1) * OBS_DIM]);
-            let a = row * N_HEADS;
-            for (i, &x) in actions[e].iter().enumerate() {
+            let action = actions[e].as_ref();
+            assert_eq!(action.len(), self.n_heads, "action arity != buffer row width");
+            let a = row * self.n_heads;
+            for (i, &x) in action.iter().enumerate() {
                 self.actions[a + i] = x as i32;
             }
             self.log_probs[row] = log_probs[e] as f32;
@@ -206,11 +214,12 @@ impl RolloutBuffer {
         advantages: &mut [f32],
         returns: &mut [f32],
     ) {
+        let nh = self.n_heads;
         for (row, &i) in idx.iter().enumerate() {
             obs[row * OBS_DIM..(row + 1) * OBS_DIM]
                 .copy_from_slice(&self.obs[i * OBS_DIM..(i + 1) * OBS_DIM]);
-            actions[row * N_HEADS..(row + 1) * N_HEADS]
-                .copy_from_slice(&self.actions[i * N_HEADS..(i + 1) * N_HEADS]);
+            actions[row * nh..(row + 1) * nh]
+                .copy_from_slice(&self.actions[i * nh..(i + 1) * nh]);
             log_probs[row] = self.log_probs[i];
             advantages[row] = self.advantages[i];
             returns[row] = self.returns[i];
@@ -221,9 +230,10 @@ impl RolloutBuffer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::space::N_HEADS;
 
     fn filled(n: usize, rewards: &[f64], values: &[f32], dones: &[bool]) -> RolloutBuffer {
-        let mut b = RolloutBuffer::new(n);
+        let mut b = RolloutBuffer::new(n, N_HEADS);
         for t in 0..n {
             b.push(
                 &[0.0; OBS_DIM],
@@ -277,7 +287,7 @@ mod tests {
 
     #[test]
     fn gather_permutes_rows() {
-        let mut b = RolloutBuffer::new(3);
+        let mut b = RolloutBuffer::new(3, N_HEADS);
         for t in 0..3 {
             let mut obs = [0f32; OBS_DIM];
             obs[0] = t as f32;
@@ -320,7 +330,7 @@ mod tests {
         let dones = [[false, true, false], [false, false, true]];
         let last_values = [0.7f32, 0.8];
 
-        let mut batched = RolloutBuffer::new(k * t_len);
+        let mut batched = RolloutBuffer::new(k * t_len, N_HEADS);
         for t in 0..t_len {
             let mut obs_flat = vec![0f32; k * OBS_DIM];
             let mut actions = vec![[0usize; N_HEADS]; k];
@@ -340,7 +350,7 @@ mod tests {
         batched.compute_gae_batched(&last_values, 0.99, 0.95, 1.0);
 
         for e in 0..k {
-            let mut solo = RolloutBuffer::new(t_len);
+            let mut solo = RolloutBuffer::new(t_len, N_HEADS);
             for t in 0..t_len {
                 let mut obs = [0f32; OBS_DIM];
                 obs[0] = (10 * e + t) as f32;
@@ -383,7 +393,7 @@ mod tests {
     fn mixed_k_batched_push_panics() {
         // n_steps=12: k=4 then k=2 would silently scramble the env-major
         // layout without the batch_k pin (t*k == pos alone passes).
-        let mut b = RolloutBuffer::new(12);
+        let mut b = RolloutBuffer::new(12, N_HEADS);
         let push = |b: &mut RolloutBuffer, t: usize, k: usize| {
             let obs = vec![0f32; k * OBS_DIM];
             let actions = vec![[0usize; N_HEADS]; k];
@@ -397,7 +407,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "do not mix push")]
     fn mixing_push_and_batched_push_panics() {
-        let mut b = RolloutBuffer::new(4);
+        let mut b = RolloutBuffer::new(4, N_HEADS);
         let obs = vec![0f32; 2 * OBS_DIM];
         let actions = vec![[0usize; N_HEADS]; 2];
         let steps = vec![dummy_step(0.0, false, 0.0), dummy_step(0.0, false, 0.0)];
@@ -408,7 +418,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "in order")]
     fn out_of_order_batched_push_panics() {
-        let mut b = RolloutBuffer::new(4);
+        let mut b = RolloutBuffer::new(4, N_HEADS);
         let obs = vec![0f32; 2 * OBS_DIM];
         let actions = vec![[0usize; N_HEADS]; 2];
         let steps = vec![dummy_step(0.0, false, 0.0), dummy_step(0.0, false, 0.0)];
@@ -416,9 +426,34 @@ mod tests {
     }
 
     #[test]
+    fn buffer_sizes_from_runtime_head_count() {
+        // 15-head (learned placement) rows store and gather intact.
+        let mut b = RolloutBuffer::new(2, 15);
+        assert_eq!(b.actions.len(), 30);
+        let mut a = vec![0usize; 15];
+        a[14] = 3;
+        b.push(&[0.0; OBS_DIM], &a, -1.0, 1.0, 0.5, false);
+        b.push(&[0.0; OBS_DIM], &a, -1.0, 1.0, 0.5, true);
+        assert_eq!(b.actions[14], 3);
+        b.compute_gae(0.0, 0.99, 0.95, 1.0);
+        let mut obs = vec![0f32; OBS_DIM];
+        let mut actions = vec![0i32; 15];
+        let (mut lp, mut adv, mut ret) = (vec![0f32; 1], vec![0f32; 1], vec![0f32; 1]);
+        b.gather(&[1], &mut obs, &mut actions, &mut lp, &mut adv, &mut ret);
+        assert_eq!(actions[14], 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn wrong_arity_push_panics() {
+        let mut b = RolloutBuffer::new(2, 15);
+        b.push(&[0.0; OBS_DIM], &[0usize; N_HEADS], 0.0, 0.0, 0.0, false);
+    }
+
+    #[test]
     #[should_panic(expected = "overflow")]
     fn overflow_panics() {
-        let mut b = RolloutBuffer::new(1);
+        let mut b = RolloutBuffer::new(1, N_HEADS);
         let obs = [0f32; OBS_DIM];
         let act = [0usize; N_HEADS];
         b.push(&obs, &act, 0.0, 0.0, 0.0, false);

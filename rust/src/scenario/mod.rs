@@ -26,7 +26,7 @@
 //! tech_node = "7nm"             # "14nm" | "7nm" | "5nm"
 //! chiplet_cap = 64              # 64 (case i) | 128 (case ii)
 //! packaging = "full-3d"         # | "interposer-2.5d" | "organic-substrate"
-//! optimizer = "sa"              # | "ga" | "greedy" | "random" | "portfolio"
+//! optimizer = "sa"              # | "ga" | "greedy" | "random" | "portfolio" | "ppo"
 //! placement = "canonical"       # | "optimized" | "learned"
 //! sa_iterations = 200000        # SA iterations = the evaluation budget
 //! sa_seeds = [0, 1, 2, 3]
@@ -48,6 +48,7 @@ use crate::cost::{Calib, TechNode};
 use crate::model::space::{ArchType, DesignSpace};
 use crate::opt::sa::SaConfig;
 use crate::opt::search::{DriverConfig, GaConfig, PortfolioMember};
+use crate::rl::PpoConfig;
 use crate::place::{PlaceConfig, PlacementMode};
 use crate::util::json::{obj, Json};
 use crate::util::toml;
@@ -129,6 +130,11 @@ pub enum OptimizerChoice {
     Random,
     /// SA + GA + greedy together, each over the full seed list.
     Portfolio,
+    /// Native-backend PPO (`rl::train_ppo_native`), one agent per seed —
+    /// the only choice that can emit the learned-placement action head.
+    /// The scenario's `sa_iterations` is reinterpreted as the PPO
+    /// total-timestep budget so every optimizer shares one budget knob.
+    Ppo,
 }
 
 impl OptimizerChoice {
@@ -139,6 +145,7 @@ impl OptimizerChoice {
             OptimizerChoice::Greedy => "greedy",
             OptimizerChoice::Random => "random",
             OptimizerChoice::Portfolio => "portfolio",
+            OptimizerChoice::Ppo => "ppo",
         }
     }
 
@@ -150,6 +157,7 @@ impl OptimizerChoice {
             "greedy" => Some(OptimizerChoice::Greedy),
             "random" => Some(OptimizerChoice::Random),
             "portfolio" => Some(OptimizerChoice::Portfolio),
+            "ppo" => Some(OptimizerChoice::Ppo),
             _ => None,
         }
     }
@@ -317,11 +325,34 @@ impl Scenario {
             OptimizerChoice::Greedy => vec![greedy],
             OptimizerChoice::Random => vec![random],
             OptimizerChoice::Portfolio => vec![sa, ga, greedy],
+            // PPO is not a plain-data DriverConfig (it owns a training
+            // loop, not an objective walk); the sweep engine runs it as
+            // a separate per-seed stage — see `Scenario::rl_seeds`.
+            OptimizerChoice::Ppo => vec![],
         };
         drivers
             .into_iter()
             .map(|driver| PortfolioMember::new(driver, budget.sa_seeds.clone()))
             .collect()
+    }
+
+    /// The RL seed list of this scenario: the shared seed list when the
+    /// optimizer is [`OptimizerChoice::Ppo`], empty otherwise. The sweep
+    /// engine appends one `RL` + one `RL-det` candidate per seed, after
+    /// the non-RL members, in seed order — an ordering both the cached
+    /// sequential path and the `--jobs N` fan-out reproduce exactly.
+    pub fn rl_seeds(&self, budget: &OptBudget) -> Vec<u64> {
+        match self.optimizer {
+            OptimizerChoice::Ppo => budget.sa_seeds.clone(),
+            _ => Vec::new(),
+        }
+    }
+
+    /// The native-PPO configuration an `optimizer = "ppo"` scenario
+    /// trains with: Table 5 hyper-parameters shrunk to a total-timestep
+    /// budget of `sa_iterations` (one budget knob across drivers).
+    pub fn ppo_config(&self, budget: &OptBudget) -> PpoConfig {
+        PpoConfig::paper().quick(budget.sa_iterations)
     }
 
     // -- serialization -----------------------------------------------------
@@ -570,6 +601,7 @@ mod tests {
             OptimizerChoice::Greedy,
             OptimizerChoice::Random,
             OptimizerChoice::Portfolio,
+            OptimizerChoice::Ppo,
         ] {
             assert_eq!(OptimizerChoice::parse(c.name()), Some(c));
         }
@@ -597,6 +629,24 @@ mod tests {
         assert!(Scenario::from_json(&bad).is_err());
         let ok = Json::parse(r#"{"name": "x", "optimizer": "ga"}"#).unwrap();
         assert_eq!(Scenario::from_json(&ok).unwrap().optimizer, OptimizerChoice::Ga);
+    }
+
+    #[test]
+    fn ppo_choice_runs_as_an_rl_stage_not_a_driver_member() {
+        let mut s = Scenario::baseline();
+        let budget = OptBudget { sa_iterations: 512, sa_seeds: vec![3, 4] };
+        assert!(s.rl_seeds(&budget).is_empty(), "non-ppo scenarios have no RL stage");
+        s.optimizer = OptimizerChoice::Ppo;
+        assert!(s.members(&budget).is_empty(), "ppo is not a plain-data driver");
+        assert_eq!(s.rl_seeds(&budget), vec![3, 4]);
+        let ppo = s.ppo_config(&budget);
+        assert_eq!(ppo.total_timesteps, 512);
+        assert!(ppo.n_steps <= 512, "budget must bound the rollout too");
+        // round-trips through the file forms
+        let back = Scenario::from_toml_str(&s.to_toml_string()).unwrap();
+        assert_eq!(back.optimizer, OptimizerChoice::Ppo);
+        let ok = Json::parse(r#"{"name": "x", "optimizer": "ppo"}"#).unwrap();
+        assert_eq!(Scenario::from_json(&ok).unwrap().optimizer, OptimizerChoice::Ppo);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! Pareto relation: maximize throughput, minimize energy per reference
 //! task, minimize total (die + package) cost.
 
-use crate::model::space::N_HEADS;
+use crate::model::space::Action;
 
 /// One candidate design point projected onto the three sweep objectives.
 #[derive(Clone, Debug, PartialEq)]
@@ -20,7 +20,9 @@ pub struct ParetoPoint {
     /// the scenario optimized placement).
     pub placement: String,
     pub seed: u64,
-    pub action: [usize; N_HEADS],
+    /// Raw action (runtime-sized: a learned-placement candidate carries
+    /// its 15th head).
+    pub action: Action,
     /// Effective throughput, TMAC/s (maximize).
     pub throughput_tops: f64,
     /// Energy per reference task, mJ (minimize).
@@ -76,7 +78,7 @@ mod tests {
             source: "SA".into(),
             placement: "canonical".into(),
             seed: 0,
-            action: [0; N_HEADS],
+            action: vec![0; 14],
             throughput_tops: t,
             energy_mj: e,
             total_cost: c,

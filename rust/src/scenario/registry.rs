@@ -93,6 +93,20 @@ pub fn builtin() -> Vec<Scenario> {
         },
     ));
     v.push(variant(
+        "placement-learned",
+        "Case (i) with the learned HBM-placement head, trained by native PPO",
+        |s| {
+            s.placement = PlacementMode::Learned;
+            s.optimizer = OptimizerChoice::Ppo;
+            // sa_iterations doubles as the PPO total-timestep budget;
+            // the native backend runs on the CPU, so the built-in stays
+            // small enough for an interactive `sweep --scenarios all`
+            // (paper-scale budgets are a --sa-iters/--seeds away).
+            s.budget.sa_iterations = 4_096;
+            s.budget.sa_seeds = vec![0, 1];
+        },
+    ));
+    v.push(variant(
         "portfolio-case-i",
         "Paper case (i) driven by the SA+GA+greedy optimizer portfolio",
         |s| {
@@ -181,5 +195,10 @@ mod tests {
         let placed = find("placement-case-i").unwrap();
         assert_ne!(placed.placement, base.placement);
         assert!(placed.placement_search().is_some());
+        let learned = find("placement-learned").unwrap();
+        assert_eq!(learned.placement, PlacementMode::Learned);
+        assert_eq!(learned.optimizer, OptimizerChoice::Ppo);
+        assert!(learned.space().placement_head);
+        assert!(!learned.rl_seeds(&learned.budget).is_empty());
     }
 }

@@ -13,7 +13,10 @@
 //! paper-baseline scenario reproduces the pre-scenario SA-only path
 //! exactly (`tests/scenario_sweep.rs`). A scenario's `optimizer` knob
 //! picks its portfolio member(s): SA by default, or GA / greedy /
-//! random / the full portfolio, all budget-matched to `sa_iterations`.
+//! random / the full portfolio, all budget-matched to `sa_iterations` —
+//! or `"ppo"`, which trains one native-backend PPO agent per seed
+//! (`sa_iterations` reinterpreted as the total-timestep budget; the
+//! only driver that can emit the learned-placement action head).
 //!
 //! Outputs, via `report::csv` under the sweep's output directory:
 //! * `scenario_<name>.csv` — every per-seed candidate with its metrics;
@@ -30,9 +33,9 @@ use crate::cost::cache::{EvalCache, DEFAULT_CACHE_CAP};
 use crate::cost::Calib;
 use crate::mesh::grid::hop_stats;
 use crate::model::space::DesignSpace;
-use crate::opt::combined::{select_best, Candidate, OptOutcome};
-use crate::opt::parallel::{parallel_map, portfolio_optimize_par};
-use crate::opt::search::CachedObjective;
+use crate::opt::combined::{rl_seed_candidates, select_best, Candidate, OptOutcome};
+use crate::opt::parallel::{parallel_map, portfolio_candidates_par};
+use crate::opt::search::{CachedObjective, PpoDriver};
 use crate::place::{refine_outcome, PlacementSummary};
 use crate::report::CsvWriter;
 
@@ -122,10 +125,13 @@ pub struct SweepOutcome {
 /// knob selects.
 ///
 /// `jobs <= 1`: every `(driver, seed)` instance runs sequentially
-/// through a shared per-scenario [`EvalCache`] (design-point-keyed
-/// memoization of `cost::evaluate`, via `opt::search::CachedObjective`).
-/// `jobs > 1`: instances fan out uncached via [`portfolio_optimize_par`].
-/// Results are bit-identical either way.
+/// through a shared per-scenario [`EvalCache`] (action-keyed
+/// memoization of `cost::evaluate_action`, via
+/// `opt::search::CachedObjective`). `jobs > 1`: instances fan out
+/// uncached via `portfolio_candidates_par`. An `optimizer = "ppo"`
+/// scenario appends its RL stage after the non-RL members (native PPO
+/// per seed, fanned through the same pool). Results are bit-identical
+/// either way.
 pub fn run_scenario(
     s: &Scenario,
     budget_override: Option<&BudgetOverride>,
@@ -146,8 +152,8 @@ pub fn run_scenario(
     };
     let work_items: usize = members.iter().map(|m| m.seeds.len()).sum();
     let t0 = Instant::now();
-    let (mut outcome, cache_hits, cache_misses) = if jobs != 1 && work_items > 1 {
-        (portfolio_optimize_par(space, &calib, &members, jobs), 0, 0)
+    let (mut candidates, cache_hits, cache_misses) = if jobs != 1 && work_items > 1 {
+        (portfolio_candidates_par(&space, &calib, &members, jobs), 0, 0)
     } else {
         let mut cache = EvalCache::new(DEFAULT_CACHE_CAP);
         let mut candidates = Vec::new();
@@ -174,11 +180,33 @@ pub fn run_scenario(
                 });
             }
         }
-        let best = select_best(&candidates)
-            .expect("scenario budget has at least one seed")
-            .clone();
-        (OptOutcome { best, candidates }, cache.hits, cache.misses)
+        (candidates, cache.hits, cache.misses)
     };
+    // The RL stage (`optimizer = "ppo"`): native-backend PPO, one agent
+    // per seed, fanned across the same pool through `parallel_map` —
+    // training is a pure function of `(space, calib, ppo, seed)` and the
+    // candidates land in fixed seed order, so `--jobs N` stays
+    // bit-identical. Each seed contributes the env-argmax (`RL`) and the
+    // deterministic final policy (`RL-det`), mirroring Alg. 1's combined
+    // driver.
+    let rl_seeds = s.rl_seeds(&budget);
+    if !rl_seeds.is_empty() {
+        let ppo = s.ppo_config(&budget);
+        let per_seed = parallel_map(&rl_seeds, jobs, |&seed| {
+            // engine: None pins the native backend — pure in
+            // (space, calib, ppo, seed), so the fan-out stays
+            // bit-identical at any --jobs value.
+            let driver = PpoDriver { engine: None, ppo, calib: calib.clone() };
+            rl_seed_candidates(&driver, &space, &calib, seed)
+        });
+        for seed_cands in per_seed {
+            candidates.extend(seed_cands?);
+        }
+    }
+    let best = select_best(&candidates)
+        .with_context(|| format!("scenario {:?} produced no candidates", s.name))?
+        .clone();
+    let mut outcome = OptOutcome { best, candidates };
     let placements = apply_placement_pass(s, &space, &calib, &mut outcome);
     Ok(ScenarioResult {
         scenario: s.clone(),
@@ -269,7 +297,7 @@ fn pareto_point(scenario: &Scenario, c: &Candidate) -> ParetoPoint {
         source: c.source.clone(),
         placement: scenario.placement.name().to_string(),
         seed: c.seed,
-        action: c.action,
+        action: c.action.clone(),
         throughput_tops: c.eval.throughput_tops,
         energy_mj: c.eval.energy_mj_per_ref_task,
         total_cost: c.eval.die_cost + c.eval.pkg_cost,

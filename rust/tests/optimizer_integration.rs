@@ -185,7 +185,7 @@ fn combined_algorithm1_runs_end_to_end() {
         rl_seeds: vec![0],
         extra: Vec::new(),
     };
-    let out = combined_optimize(&engine, space, &calib, &cfg).expect("alg1");
+    let out = combined_optimize(Some(&engine), space, &calib, &cfg).expect("alg1");
     // 2 SA + 1 RL best + 1 RL deterministic = 4 candidates
     assert_eq!(out.candidates.len(), 4);
     let max = out

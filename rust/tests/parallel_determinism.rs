@@ -182,7 +182,7 @@ fn effective_jobs_never_exceeds_work_or_zero() {
 fn candidate_with_reward(seed: u64, reward: f64) -> Candidate {
     let space = DesignSpace::case_i();
     let calib = Calib::default();
-    let action = [0usize; N_HEADS];
+    let action = vec![0usize; N_HEADS];
     let mut eval = evaluate(&calib, &space.decode(&action));
     eval.reward = reward;
     Candidate {

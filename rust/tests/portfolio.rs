@@ -70,7 +70,7 @@ fn greedy_beats_size_matched_random_search_on_case_i() {
 /// A candidate with a forced reward, for argmax-provenance checks.
 fn synthetic(source: &str, seed: u64, reward: f64) -> Candidate {
     let space = DesignSpace::case_i();
-    let action = [0usize; N_HEADS];
+    let action = vec![0usize; N_HEADS];
     let mut eval = evaluate(&Calib::default(), &space.decode(&action));
     eval.reward = reward;
     Candidate { source: source.into(), seed, action, eval }

@@ -1,0 +1,303 @@
+//! Native-backend PPO integration tests: the dynamic action-space RL
+//! core end to end, without any AOT artifacts.
+//!
+//! The heart of the file is a frozen-oracle regression: a verbatim copy
+//! of the pre-refactor fixed-14-head training loop (single env, classic
+//! `push`, fixed `[usize; 14]` buffers) run against the same native
+//! network must reproduce `train_ppo_native`'s dynamic-layout loop bit
+//! for bit — the same guarantee the PR-3 search refactor pinned for SA.
+//! On top of that: learned-placement (15-head) training end to end, the
+//! deterministic "a learned space can always express the canonical
+//! placement" dominance property, and the portfolio wrapper without an
+//! engine.
+
+use chiplet_gym::cost::{evaluate_action, Calib};
+use chiplet_gym::gym::{ChipletGymEnv, OBS_DIM};
+use chiplet_gym::model::space::{DesignSpace, N_HEADS, PLACEMENT_HEAD_DIM};
+use chiplet_gym::opt::combined::{rl_candidates, CombinedConfig};
+use chiplet_gym::opt::sa::SaConfig;
+use chiplet_gym::opt::search::CostObjective;
+use chiplet_gym::rl::{
+    categorical, init::init_param_entries, rollout::RolloutBuffer, train_ppo_native, NativeNet,
+    NetShape, PpoConfig,
+};
+use chiplet_gym::util::Rng;
+
+/// A micro training budget: two 128-step rollouts, 32-row minibatches.
+fn micro_cfg() -> PpoConfig {
+    let mut cfg = PpoConfig::paper();
+    cfg.total_timesteps = 256;
+    cfg.n_steps = 128;
+    cfg.batch_size = 32;
+    cfg.n_epoch = 4;
+    cfg
+}
+
+/// The pre-refactor training loop, frozen verbatim: fixed 14-head
+/// arrays, one sequential environment, classic single-row `push`.
+/// Returns (best_action, best_reward, final_policy_action, timesteps,
+/// per-iteration (ep_rew_mean, loss) history).
+#[allow(clippy::type_complexity)]
+fn reference_train_14(
+    proto: &ChipletGymEnv,
+    cfg: &PpoConfig,
+    seed: u64,
+) -> (Vec<usize>, f64, Vec<usize>, usize, Vec<(f64, f32)>) {
+    let shape = NetShape::for_layout(&proto.space.layout());
+    assert_eq!(shape.n_heads(), N_HEADS, "the oracle is the 14-head loop");
+    let net = NativeNet::new(shape.clone());
+    let head_slices = shape.head_slices();
+    let hyper = [
+        cfg.learning_rate as f32,
+        cfg.clip_range as f32,
+        cfg.ent_coef as f32,
+    ];
+
+    let mut rng = Rng::new(seed);
+    let mut params = init_param_entries(&shape.param_entries(), shape.param_count(), seed);
+    let mut adam_m = vec![0f32; params.len()];
+    let mut adam_v = vec![0f32; params.len()];
+    let mut adam_t: u64 = 0;
+
+    let mut env = proto.fork();
+    env.episode_len = cfg.episode_len;
+    let mut buffer = RolloutBuffer::new(cfg.n_steps, N_HEADS);
+    let mut obs = env.reset();
+    let mut action = [0usize; N_HEADS];
+
+    let mut ep_acc = 0.0f64;
+    let mut recent_eps: Vec<f64> = Vec::new();
+
+    let mb = cfg.batch_size;
+    let mut mb_obs = vec![0f32; mb * OBS_DIM];
+    let mut mb_act = vec![0i32; mb * N_HEADS];
+    let mut mb_lp = vec![0f32; mb];
+    let mut mb_adv = vec![0f32; mb];
+    let mut mb_ret = vec![0f32; mb];
+
+    let mut history = Vec::new();
+    let mut steps = 0usize;
+    while steps < cfg.total_timesteps {
+        buffer.clear();
+        for _t in 0..cfg.n_steps {
+            let fwd = net.forward(&params, &obs).unwrap();
+            let lp = categorical::sample_action(&fwd.logp_all, &head_slices, &mut rng, &mut action);
+            let step = env.step(&action);
+            buffer.push(&obs, &action, lp, step.reward, fwd.value[0], step.done);
+            ep_acc += step.reward;
+            if step.done {
+                recent_eps.push(ep_acc);
+                if recent_eps.len() > 100 {
+                    recent_eps.remove(0);
+                }
+                ep_acc = 0.0;
+                obs = env.reset();
+            } else {
+                obs = step.obs;
+            }
+            steps += 1;
+        }
+        let last_value = net.forward(&params, &obs).unwrap().value[0];
+        buffer.compute_gae(last_value, cfg.gamma, cfg.gae_lambda, cfg.reward_scale);
+
+        let mut last_loss = 0f32;
+        for _ in 0..cfg.n_epoch {
+            let perm = rng.permutation(cfg.n_steps);
+            for chunk in perm.chunks_exact(mb) {
+                buffer.gather(chunk, &mut mb_obs, &mut mb_act, &mut mb_lp, &mut mb_adv, &mut mb_ret);
+                adam_t += 1;
+                let out = net
+                    .ppo_update(
+                        &params, &adam_m, &adam_v, adam_t as f32, &mb_obs, &mb_act, &mb_lp,
+                        &mb_adv, &mb_ret, hyper,
+                    )
+                    .unwrap();
+                params = out.params;
+                adam_m = out.adam_m;
+                adam_v = out.adam_v;
+                last_loss = out.stats.loss;
+            }
+        }
+        let ep_rew_mean = if recent_eps.is_empty() {
+            0.0
+        } else {
+            recent_eps.iter().sum::<f64>() / recent_eps.len() as f64
+        };
+        history.push((ep_rew_mean, last_loss));
+    }
+
+    let final_obs = env.reset();
+    let fwd = net.forward(&params, &final_obs).unwrap();
+    let mut final_action = vec![0usize; N_HEADS];
+    categorical::argmax_action(&fwd.logp_all, &head_slices, &mut final_action);
+    let (best_reward, best_action) = env.best_action().unwrap();
+    (best_action, best_reward, final_action, steps, history)
+}
+
+#[test]
+fn dynamic_loop_is_bit_identical_to_the_frozen_14_head_oracle() {
+    // Acceptance criterion: the layout-driven refactor must leave the
+    // 14-head training loop bit-identical — same RNG stream, same
+    // rollout rows, same updates, same argmax.
+    let cfg = micro_cfg();
+    for seed in [0u64, 7] {
+        let proto = ChipletGymEnv::case_i();
+        let (ref_best, ref_reward, ref_final, ref_steps, ref_hist) =
+            reference_train_14(&proto, &cfg, seed);
+        let mut env = ChipletGymEnv::case_i();
+        let trace = train_ppo_native(&mut env, &cfg, seed).expect("native ppo");
+        assert_eq!(trace.best_action, ref_best, "seed {seed}");
+        assert_eq!(trace.best_reward.to_bits(), ref_reward.to_bits(), "seed {seed}");
+        assert_eq!(trace.final_policy_action, ref_final, "seed {seed}");
+        assert_eq!(trace.timesteps, ref_steps, "seed {seed}");
+        assert_eq!(trace.history.len(), ref_hist.len(), "seed {seed}");
+        for (it, (ep, loss)) in trace.history.iter().zip(ref_hist.iter()) {
+            assert_eq!(it.ep_rew_mean.to_bits(), ep.to_bits(), "seed {seed}");
+            assert_eq!((it.loss as f32).to_bits(), loss.to_bits(), "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn native_ppo_is_deterministic_per_seed_and_seeds_differ() {
+    let cfg = micro_cfg();
+    let run = |seed| {
+        let mut env = ChipletGymEnv::case_i();
+        train_ppo_native(&mut env, &cfg, seed).expect("native ppo")
+    };
+    let a = run(3);
+    let b = run(3);
+    assert_eq!(a.best_action, b.best_action);
+    assert_eq!(a.best_reward.to_bits(), b.best_reward.to_bits());
+    assert_eq!(a.final_policy_action, b.final_policy_action);
+    let c = run(4);
+    assert!(c.best_reward != a.best_reward || c.best_action != a.best_action);
+}
+
+#[test]
+fn native_ppo_trains_the_learned_placement_head_end_to_end() {
+    // The structural payoff of the refactor: a 15-head space trains,
+    // its actions carry the placement head, and everything stays
+    // finite and in range.
+    let cfg = micro_cfg();
+    let space = DesignSpace::case_i().with_placement_head();
+    let mut env = ChipletGymEnv::new(space, Calib::default(), cfg.episode_len);
+    let trace = train_ppo_native(&mut env, &cfg, 0).expect("15-head ppo");
+    assert_eq!(trace.timesteps, cfg.total_timesteps);
+    assert_eq!(trace.best_action.len(), N_HEADS + 1);
+    assert!(trace.best_action[N_HEADS] < PLACEMENT_HEAD_DIM);
+    assert_eq!(trace.final_policy_action.len(), N_HEADS + 1);
+    assert!(trace.final_policy_action[N_HEADS] < PLACEMENT_HEAD_DIM);
+    assert!(trace.best_reward.is_finite());
+    // the reported best re-scores to exactly the tracked reward
+    // (evaluate_action understands the 15th head)
+    let re = evaluate_action(&Calib::default(), &space, &trace.best_action);
+    assert_eq!(re.reward.to_bits(), trace.best_reward.to_bits());
+    for it in &trace.history {
+        assert!(it.loss.is_finite());
+        assert!(it.entropy.is_finite());
+    }
+}
+
+#[test]
+fn learned_space_dominates_canonical_on_every_design() {
+    // The mathematical content of "learned placement can never be worse
+    // than canonical": template 0 IS the canonical layout, so for every
+    // design the learned space exposes an action whose reward matches
+    // the canonical-space reward to float round-off — and the best
+    // template can only improve on it.
+    let plain = DesignSpace::case_i();
+    let learned = plain.with_placement_head();
+    let calib = Calib::default();
+    let mut rng = Rng::new(5);
+    for _ in 0..200 {
+        let a14 = plain.random_action(&mut rng);
+        let canonical = evaluate_action(&calib, &plain, &a14).reward;
+        let mut a15 = a14.to_vec();
+        a15.push(0);
+        let template0 = evaluate_action(&calib, &learned, &a15).reward;
+        assert!(
+            (template0 - canonical).abs() <= 1e-6 * canonical.abs().max(1.0),
+            "template 0 must match canonical: {template0} vs {canonical}"
+        );
+        let best_template = (0..PLACEMENT_HEAD_DIM)
+            .map(|t| {
+                a15[N_HEADS] = t;
+                evaluate_action(&calib, &learned, &a15).reward
+            })
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!(
+            best_template >= canonical - 1e-6 * canonical.abs().max(1.0),
+            "best template {best_template} fell below canonical {canonical}"
+        );
+    }
+}
+
+#[test]
+fn learned_placement_training_keeps_pace_with_the_canonical_baseline() {
+    // Sanity form of the acceptance criterion at a test-sized budget:
+    // learned-placement PPO over the same seeds must land in the same
+    // reward ballpark as the canonical baseline (the learned space
+    // contains every canonical behavior via template 0, so only
+    // sampling noise separates the two at micro budgets — at paper
+    // budgets learned ≥ canonical outright). Deterministic per seed,
+    // so this can never flake.
+    let mut cfg = micro_cfg();
+    cfg.total_timesteps = 512;
+    cfg.n_steps = 256;
+    let seeds = [0u64, 1, 2];
+    let best_of = |space: DesignSpace| -> f64 {
+        seeds
+            .iter()
+            .map(|&seed| {
+                let mut env = ChipletGymEnv::new(space, Calib::default(), cfg.episode_len);
+                train_ppo_native(&mut env, &cfg, seed).expect("ppo").best_reward
+            })
+            .fold(f64::NEG_INFINITY, f64::max)
+    };
+    let canonical = best_of(DesignSpace::case_i());
+    let learned = best_of(DesignSpace::case_i().with_placement_head());
+    assert!(canonical.is_finite() && learned.is_finite());
+    let margin = 0.15 * canonical.abs() + 10.0;
+    assert!(
+        learned >= canonical - margin,
+        "learned-placement PPO collapsed: best {learned} vs canonical {canonical}"
+    );
+}
+
+#[test]
+fn rl_candidates_run_without_an_engine_and_respect_the_objective() {
+    // PpoDriver joins the portfolio with `engine: None` (the native
+    // backend) on both 14- and 15-head spaces; the re-scored candidate
+    // eval agrees with the env's own tracking.
+    let calib = Calib::default();
+    let cfg = CombinedConfig {
+        sa: SaConfig { iterations: 10, trace_every: 0, ..SaConfig::default() },
+        ppo: micro_cfg(),
+        sa_seeds: vec![],
+        rl_seeds: vec![0, 1],
+        extra: Vec::new(),
+    };
+    for space in [DesignSpace::case_i(), DesignSpace::case_i().with_placement_head()] {
+        let cands = rl_candidates(None, &space, &calib, &cfg).expect("rl candidates");
+        assert_eq!(cands.len(), 4, "RL + RL-det per seed");
+        let tags: Vec<&str> = cands.iter().map(|c| c.source.as_str()).collect();
+        assert_eq!(tags, ["RL", "RL-det", "RL", "RL-det"]);
+        for c in &cands {
+            assert_eq!(c.action.len(), space.action_len());
+            let mut obj = CostObjective::new(&space, &calib);
+            use chiplet_gym::opt::search::Objective;
+            assert_eq!(obj.evaluate(&c.action).reward.to_bits(), c.eval.reward.to_bits());
+        }
+    }
+}
+
+#[test]
+fn native_ppo_surfaces_config_errors_instead_of_panicking() {
+    // n_envs must divide n_steps: a typed error, not an assert.
+    let mut cfg = micro_cfg();
+    cfg.n_envs = 3; // 128 % 3 != 0
+    let mut env = ChipletGymEnv::case_i();
+    let err = train_ppo_native(&mut env, &cfg, 0).unwrap_err();
+    assert!(err.to_string().contains("divisible"), "{err}");
+}

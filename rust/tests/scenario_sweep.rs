@@ -114,6 +114,47 @@ fn paper_baseline_sweep_is_bit_identical_to_sa_only_path() {
 }
 
 #[test]
+fn placement_learned_scenario_trains_ppo_and_is_jobs_bit_identical() {
+    // Acceptance criterion: the `placement-learned` built-in runs the
+    // sweep through the native PPO path — the 15th (placement) head is
+    // trained and reported — and `--jobs N` stays bit-identical.
+    let mut s = registry::find("placement-learned").unwrap();
+    assert!(s.space().placement_head);
+    // micro budget: one 192-step rollout per seed keeps this test quick
+    s.budget = OptBudget { sa_iterations: 192, sa_seeds: vec![0, 1] };
+    let a = run_scenario(&s, None, 1).unwrap();
+    let b = run_scenario(&s, None, 2).unwrap();
+    // (RL + RL-det) × 2 seeds, in fixed seed order on both paths
+    let tags: Vec<(String, u64)> =
+        a.outcome.candidates.iter().map(|c| (c.source.clone(), c.seed)).collect();
+    assert_eq!(
+        tags,
+        vec![
+            ("RL".to_string(), 0),
+            ("RL-det".to_string(), 0),
+            ("RL".to_string(), 1),
+            ("RL-det".to_string(), 1),
+        ]
+    );
+    assert_eq!(a.outcome.candidates.len(), b.outcome.candidates.len());
+    for (ca, cb) in a.outcome.candidates.iter().zip(b.outcome.candidates.iter()) {
+        assert_eq!(ca.source, cb.source);
+        assert_eq!(ca.seed, cb.seed);
+        assert_eq!(ca.action, cb.action, "jobs must not change RL candidates");
+        assert_eq!(ca.eval.reward.to_bits(), cb.eval.reward.to_bits());
+    }
+    // every candidate carries the learned 15th head, in catalog range
+    for c in &a.outcome.candidates {
+        assert_eq!(c.action.len(), 15, "{}: {:?}", c.source, c.action);
+        assert!(c.action[14] < chiplet_gym::model::space::PLACEMENT_HEAD_DIM);
+        assert!(c.eval.reward.is_finite());
+    }
+    // the learned scenario's placement pass recorded a summary per
+    // candidate (canonical scenarios record None)
+    assert!(a.placements.iter().all(|p| p.is_some()));
+}
+
+#[test]
 fn scenario_calibs_change_optimizer_input_not_mechanics() {
     // A locked scenario's best decodes to the locked architecture.
     let organic = registry::find("organic-substrate").unwrap();
