@@ -1,0 +1,152 @@
+//! Cost-model evaluation throughput: full path vs the delta fast path.
+//!
+//! Replays the optimizers' characteristic move — a long single-head
+//! mutation walk around a Table 6 design point — once through
+//! `cost::evaluate_action` and once through `cost::delta::DeltaEvaluator`,
+//! on the case (i), case (ii) and learned-placement spaces. Reports
+//! ns/eval for both paths plus the speedup (the acceptance bar is ≥ 2×
+//! for single-head mutations), sanity-checks bitwise equality before
+//! timing, and writes `BENCH_cost.json` (plus a CSV) under
+//! `bench_results/` for the committed perf trajectory.
+
+use chiplet_gym::cost::{evaluate_action, Calib, DeltaEvaluator};
+use chiplet_gym::model::space::{paper_points, DesignSpace, ACTION_DIMS, N_HEADS};
+use chiplet_gym::report;
+use chiplet_gym::util::bench::{fmt_ns, Runner};
+use chiplet_gym::util::Rng;
+
+const WALK_STEPS: usize = 20_000;
+
+/// The walk: `WALK_STEPS` actions, each differing from its predecessor
+/// in exactly one link-parameter head (3..14) — the SA/greedy inner
+/// move. Geometry and placement heads stay fixed so the walk measures
+/// the delta path itself, not its fallback.
+fn single_head_walk(start: Vec<usize>, seed: u64) -> Vec<Vec<usize>> {
+    let mut rng = Rng::new(seed);
+    let mut walk = Vec::with_capacity(WALK_STEPS);
+    let mut a = start;
+    for _ in 0..WALK_STEPS {
+        let h = 3 + rng.below((N_HEADS - 3) as u64) as usize;
+        let dim = ACTION_DIMS[h];
+        a[h] = (a[h] + 1 + rng.below(dim as u64 - 1) as usize) % dim;
+        walk.push(a.clone());
+    }
+    walk
+}
+
+struct CaseResult {
+    name: &'static str,
+    full_ns: f64,
+    delta_ns: f64,
+    fast_rate: f64,
+}
+
+impl CaseResult {
+    fn speedup(&self) -> f64 {
+        self.full_ns / self.delta_ns
+    }
+}
+
+fn run_case(
+    runner: &mut Runner,
+    name: &'static str,
+    space: &DesignSpace,
+    start: Vec<usize>,
+) -> CaseResult {
+    let calib = Calib::default();
+    let walk = single_head_walk(start, 0xC0);
+
+    // Bitwise-equality sanity pass before timing anything.
+    let mut check = DeltaEvaluator::default();
+    for a in &walk {
+        let fast = check.evaluate(&calib, space, a);
+        let full = evaluate_action(&calib, space, a);
+        assert_eq!(fast.reward.to_bits(), full.reward.to_bits(), "{name}: delta != full");
+    }
+
+    runner.bench(&format!("{name}: full x{WALK_STEPS}"), || {
+        let mut acc = 0.0f64;
+        for a in &walk {
+            acc += evaluate_action(&calib, space, a).reward;
+        }
+        std::hint::black_box(acc);
+    });
+    let full_ns = runner.results().last().unwrap().ns_per_iter.mean / WALK_STEPS as f64;
+
+    let mut fast_rate = 0.0;
+    runner.bench(&format!("{name}: delta x{WALK_STEPS}"), || {
+        let mut delta = DeltaEvaluator::default();
+        let mut acc = 0.0f64;
+        for a in &walk {
+            acc += delta.evaluate(&calib, space, a).reward;
+        }
+        fast_rate = delta.fast_rate();
+        std::hint::black_box(acc);
+    });
+    let delta_ns = runner.results().last().unwrap().ns_per_iter.mean / WALK_STEPS as f64;
+
+    let r = CaseResult { name, full_ns, delta_ns, fast_rate };
+    println!(
+        "{name:>12}: full {} / delta {} per eval => {:.2}x (fast rate {:.3})",
+        fmt_ns(full_ns),
+        fmt_ns(delta_ns),
+        r.speedup(),
+        fast_rate
+    );
+    r
+}
+
+fn main() {
+    let mut runner = Runner::quick();
+    let mut results = Vec::new();
+
+    results.push(run_case(
+        &mut runner,
+        "case_i",
+        &DesignSpace::case_i(),
+        paper_points::table6_case_i().to_vec(),
+    ));
+    results.push(run_case(
+        &mut runner,
+        "case_ii",
+        &DesignSpace::case_ii(),
+        paper_points::table6_case_ii().to_vec(),
+    ));
+    // Placement space: 15-head actions with a fixed template head — the
+    // walk still mutates only link heads, so the delta path applies.
+    let placed_space = DesignSpace::case_i().with_placement_head();
+    let mut placed_start = paper_points::table6_case_i().to_vec();
+    placed_start.push(1);
+    results.push(run_case(&mut runner, "placement", &placed_space, placed_start));
+
+    println!("{}", runner.report());
+
+    let mut csv = report::csv(
+        "perf_cost.csv",
+        &["case", "full_ns_per_eval", "delta_ns_per_eval", "speedup", "delta_fast_rate"],
+    );
+    for r in &results {
+        csv.labeled_row(r.name, &[r.full_ns, r.delta_ns, r.speedup(), r.fast_rate])
+            .expect("csv row");
+    }
+    csv.flush().expect("csv flush");
+
+    let mut json = String::from("{\n  \"walk_steps\": ");
+    json.push_str(&WALK_STEPS.to_string());
+    json.push_str(",\n  \"cases\": {\n");
+    for (i, r) in results.iter().enumerate() {
+        json.push_str(&format!(
+            "    \"{}\": {{\"full_ns_per_eval\": {:.1}, \"delta_ns_per_eval\": {:.1}, \
+             \"speedup\": {:.2}, \"delta_fast_rate\": {:.3}}}{}\n",
+            r.name,
+            r.full_ns,
+            r.delta_ns,
+            r.speedup(),
+            r.fast_rate,
+            if i + 1 < results.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  }\n}\n");
+    let path = report::write_text("BENCH_cost.json", &json);
+    println!("wrote {}", path.display());
+}

@@ -21,11 +21,13 @@
 //! `&mut dyn Objective`, so any portfolio member (SA, GA, greedy,
 //! random) is memoized the same way without knowing the cache exists.
 
+use std::borrow::Cow;
 use std::collections::HashMap;
 
-use crate::model::space::{Action, DesignSpace};
+use crate::model::space::{Action, DesignSpace, N_HEADS, PLACEMENT_HEAD_DIM};
 
 use super::constants::Calib;
+use super::delta::DeltaEvaluator;
 use super::ppac::{evaluate_action, Evaluation};
 
 /// Default insertion cap (64Ki entries). An [`Evaluation`] plus its key
@@ -41,11 +43,15 @@ pub const DEFAULT_CACHE_CAP: usize = 1 << 16;
 /// The caller owns the pairing: one cache must only ever see one space
 /// and one calibration (the sweep engine creates one per scenario).
 pub struct EvalCache {
-    /// Keyed by the raw action of whatever arity the caller evaluates:
-    /// 14-head keys for the analytical walks, 15-head keys when a
-    /// learned-placement candidate (design + template choice) is
+    /// Keyed by the *canonical* action of whatever arity the caller
+    /// evaluates: 14-head keys for the analytical walks, 15-head keys
+    /// when a learned-placement candidate (design + template choice) is
     /// re-scored — distinct templates of one design are distinct
-    /// entries, matching `cost::evaluate_action` semantics.
+    /// entries, matching `cost::evaluate_action` semantics. The one
+    /// normalization: a placement head ≥ the template-catalog size is
+    /// folded modulo the catalog before keying, exactly as
+    /// `place::Placement::template` folds it before scoring, so aliased
+    /// indices share one entry instead of missing twice.
     map: HashMap<Action, Evaluation>,
     cap: usize,
     /// Lookups answered from the cache.
@@ -66,14 +72,42 @@ impl EvalCache {
         space: &DesignSpace,
         action: &[usize],
     ) -> Evaluation {
-        if let Some(e) = self.map.get(action) {
+        self.evaluate_impl(space, action, |a| evaluate_action(calib, space, a))
+    }
+
+    /// [`EvalCache::evaluate`] with misses routed through a
+    /// [`DeltaEvaluator`] instead of the full model — the sweep engine's
+    /// stacked fast path (memo table in front, incremental evaluation
+    /// behind it). Bitwise-identical to [`EvalCache::evaluate`] because
+    /// the delta path is bitwise-identical to `evaluate_action`.
+    pub fn evaluate_via(
+        &mut self,
+        delta: &mut DeltaEvaluator,
+        calib: &Calib,
+        space: &DesignSpace,
+        action: &[usize],
+    ) -> Evaluation {
+        self.evaluate_impl(space, action, |a| delta.evaluate(calib, space, a))
+    }
+
+    fn evaluate_impl(
+        &mut self,
+        space: &DesignSpace,
+        action: &[usize],
+        eval: impl FnOnce(&[usize]) -> Evaluation,
+    ) -> Evaluation {
+        let key = canonical_key(space, action);
+        if let Some(e) = self.map.get(key.as_ref()) {
             self.hits += 1;
             return *e;
         }
         self.misses += 1;
-        let e = evaluate_action(calib, space, action);
+        // The miss path sees the caller's original action: the canonical
+        // key changes what the point is *stored under*, never what
+        // `evaluate_action` is handed.
+        let e = eval(action);
         if self.map.len() < self.cap {
-            self.map.insert(action.to_vec(), e);
+            self.map.insert(key.into_owned(), e);
         }
         e
     }
@@ -95,6 +129,26 @@ impl EvalCache {
         } else {
             self.hits as f64 / total as f64
         }
+    }
+}
+
+/// The key an action is memoized under: the action itself, except that
+/// an out-of-catalog placement head is folded modulo
+/// [`PLACEMENT_HEAD_DIM`] — `place::Placement::template` applies the
+/// same fold before scoring, so template indices `t` and
+/// `t + PLACEMENT_HEAD_DIM` evaluate identically and must share one
+/// cache entry (previously they occupied two and both missed).
+/// Allocates only when a fold is actually needed.
+fn canonical_key<'a>(space: &DesignSpace, action: &'a [usize]) -> Cow<'a, [usize]> {
+    if space.placement_head
+        && action.len() > N_HEADS
+        && action[N_HEADS] >= PLACEMENT_HEAD_DIM
+    {
+        let mut key = action.to_vec();
+        key[N_HEADS] %= PLACEMENT_HEAD_DIM;
+        Cow::Owned(key)
+    } else {
+        Cow::Borrowed(action)
     }
 }
 
@@ -150,6 +204,58 @@ mod tests {
         a[14] = 0;
         assert_eq!(cache.evaluate(&calib, &space, &a).reward, canonical.reward);
         assert_eq!(cache.hits, 1);
+    }
+
+    #[test]
+    fn out_of_catalog_placement_indices_share_one_entry() {
+        // Regression: template index t and t + PLACEMENT_HEAD_DIM score
+        // identically (Placement::template folds modulo the catalog) but
+        // used to occupy two cache entries and miss twice.
+        use crate::model::space::paper_points;
+        let space = DesignSpace::case_i().with_placement_head();
+        let calib = Calib::default();
+        let mut cache = EvalCache::new(DEFAULT_CACHE_CAP);
+        let mut a = paper_points::table6_case_i().to_vec();
+        a.push(1);
+        let direct = cache.evaluate(&calib, &space, &a);
+        assert_eq!(cache.misses, 1);
+        a[14] = 1 + PLACEMENT_HEAD_DIM;
+        let folded = cache.evaluate(&calib, &space, &a);
+        assert_eq!(cache.misses, 1, "aliased index must reuse the entry");
+        assert_eq!(cache.hits, 1);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(folded.reward.to_bits(), direct.reward.to_bits());
+        // distinct in-catalog templates stay distinct keys
+        a[14] = 2;
+        cache.evaluate(&calib, &space, &a);
+        assert_eq!(cache.misses, 2);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn evaluate_via_delta_is_bitwise_equal_to_plain_evaluate() {
+        use crate::cost::DeltaEvaluator;
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let mut plain = EvalCache::new(DEFAULT_CACHE_CAP);
+        let mut chained = EvalCache::new(DEFAULT_CACHE_CAP);
+        let mut delta = DeltaEvaluator::default();
+        let mut rng = Rng::new(11);
+        // A mutation walk with repeats: exercises hits, delta fast path
+        // and full fallbacks through the chained surface.
+        let mut a = space.random_action(&mut rng);
+        for step in 0..200 {
+            let via = chained.evaluate_via(&mut delta, &calib, &space, &a);
+            let want = plain.evaluate(&calib, &space, &a);
+            assert_eq!(via.reward.to_bits(), want.reward.to_bits(), "step {step}");
+            assert_eq!(via.throughput_tops.to_bits(), want.throughput_tops.to_bits());
+            let h = rng.below(14) as usize;
+            let dims = crate::model::space::ACTION_DIMS;
+            a[h] = (a[h] + 1 + rng.below(dims[h] as u64 - 1) as usize) % dims[h];
+        }
+        assert_eq!(chained.hits, plain.hits, "cache stats must not diverge");
+        assert_eq!(chained.misses, plain.misses);
+        assert!(delta.full_evals > 0);
     }
 
     #[test]

@@ -1,0 +1,332 @@
+//! Incremental (delta) evaluation of the analytical PPAC model.
+//!
+//! Every portfolio optimizer mutates one or two action heads per step
+//! but historically re-ran the full eq.-11/15/16/17 stack per call.
+//! [`DeltaEvaluator`] caches the per-term intermediates of a handful of
+//! recently evaluated *base* actions (geometry, hop statistics,
+//! latencies, per-chiplet peak) and, when a new action differs from a
+//! base in exactly one link-parameter head, recomputes only the
+//! equation terms reachable from that head. Geometry-head (0–2),
+//! placement-head and multi-head changes fall back to the full path.
+//!
+//! The fast path is **bitwise-identical** to [`super::evaluate_action`]
+//! by construction: both paths assemble every recomputed term through
+//! the same shared helpers (`ppac::tput_term` / `ppac::e_op_term` /
+//! `ppac::reward_term` and the public term functions of `throughput`,
+//! `bandwidth`, `energy`, `package_cost`), so the same float operations
+//! run in the same order. `tests/delta_eval.rs` property-tests that
+//! guarantee over long random mutation walks.
+//!
+//! ## Head → term dependencies (given heads 0–2 and placement fixed)
+//!
+//! | heads                | recomputed terms                              |
+//! |----------------------|-----------------------------------------------|
+//! | 4, 5, 8, 9, 11, 12   | latencies, `u_sys`, cycles/op, throughput     |
+//! | 3, 6, 7, 10, 13      | `e_comm`, `e_op`, energy per task             |
+//! | 3, 5, 7, 9, 10, 12   | package cost (eq. 16 link/bond terms)         |
+//! | 11, 12               | actual HBM bandwidth                          |
+//! | any of the above     | reward (eq. 17 reassembly)                    |
+//!
+//! Geometry, hop statistics, peak TOPS, required HBM bandwidth and die
+//! yield/cost depend only on heads 0–2, so they are carried from the
+//! base unchanged.
+
+use crate::mesh::grid::HopStats;
+use crate::model::space::{DesignSpace, N_HEADS};
+
+use super::bandwidth;
+use super::constants::Calib;
+use super::energy;
+use super::package_cost;
+use super::ppac::{self, evaluate_action_terms, Evaluation};
+use super::throughput::{self, Geometry, Latencies};
+
+/// Default number of base actions kept resident. Sized so a full greedy
+/// ±1 neighborhood sweep (≈ 22 single-head neighbors over the 11 link
+/// heads) never evicts the point it is exploring around.
+pub const DEFAULT_DELTA_BASES: usize = 32;
+
+/// One cached base: an action, its decoded/derived intermediates, and
+/// its finished evaluation. `stats` is `None` for infeasible bases
+/// (the full path short-circuits before hop statistics exist).
+struct Base {
+    action: Vec<usize>,
+    geo: Geometry,
+    stats: Option<HopStats>,
+    lat: Latencies,
+    peak_chip: f64,
+    eval: Evaluation,
+}
+
+/// Incremental evaluator: a ring of recent bases plus hit counters.
+///
+/// Drop-in faster [`super::evaluate_action`]: results are bitwise
+/// identical, so objectives built on it stay pure in the
+/// `opt::search::Objective` sense.
+pub struct DeltaEvaluator {
+    bases: Vec<Base>,
+    cap: usize,
+    next: usize,
+    /// Evaluations answered from an exact action match.
+    pub exact_hits: u64,
+    /// Evaluations answered through the single-head delta path.
+    pub delta_hits: u64,
+    /// Evaluations that ran the full model.
+    pub full_evals: u64,
+}
+
+impl Default for DeltaEvaluator {
+    fn default() -> Self {
+        Self::new(DEFAULT_DELTA_BASES)
+    }
+}
+
+impl DeltaEvaluator {
+    pub fn new(base_capacity: usize) -> DeltaEvaluator {
+        DeltaEvaluator {
+            bases: Vec::with_capacity(base_capacity.max(1)),
+            cap: base_capacity.max(1),
+            next: 0,
+            exact_hits: 0,
+            delta_hits: 0,
+            full_evals: 0,
+        }
+    }
+
+    /// Evaluations that avoided the full model (exact + delta).
+    pub fn fast_hits(&self) -> u64 {
+        self.exact_hits + self.delta_hits
+    }
+
+    /// Fraction of evaluations that avoided the full model.
+    pub fn fast_rate(&self) -> f64 {
+        let total = self.fast_hits() + self.full_evals;
+        if total == 0 {
+            0.0
+        } else {
+            self.fast_hits() as f64 / total as f64
+        }
+    }
+
+    /// Evaluate `action`, reusing cached intermediates where possible.
+    /// Bitwise-identical to `evaluate_action(c, space, action)`.
+    pub fn evaluate(
+        &mut self,
+        c: &Calib,
+        space: &DesignSpace,
+        action: &[usize],
+    ) -> Evaluation {
+        if let Some(b) = self.bases.iter().find(|b| b.action == action) {
+            self.exact_hits += 1;
+            return b.eval;
+        }
+        if let Some((i, h)) = self.delta_base(action) {
+            self.delta_hits += 1;
+            return self.apply_delta(i, h, c, space, action);
+        }
+        self.full_evals += 1;
+        let (eval, terms) = evaluate_action_terms(c, space, action);
+        self.push(Base {
+            action: action.to_vec(),
+            geo: terms.geo,
+            stats: terms.stats,
+            lat: terms.lat,
+            peak_chip: terms.peak_chip,
+            eval,
+        });
+        eval
+    }
+
+    /// Find a base differing from `action` in exactly one delta-eligible
+    /// head; returns `(base index, changed head)`.
+    fn delta_base(&self, action: &[usize]) -> Option<(usize, usize)> {
+        self.bases
+            .iter()
+            .enumerate()
+            .find_map(|(i, b)| eligible_diff(&b.action, action).map(|h| (i, h)))
+    }
+
+    /// Recompute only the terms head `h` reaches, carrying the rest from
+    /// base `i`. The recomputed terms go through the same shared helper
+    /// functions as the full path, so the result is bitwise-identical.
+    fn apply_delta(
+        &mut self,
+        i: usize,
+        h: usize,
+        c: &Calib,
+        space: &DesignSpace,
+        action: &[usize],
+    ) -> Evaluation {
+        // Copy the carried intermediates out so the base borrow ends
+        // before the ring push below.
+        let base = &self.bases[i];
+        let geo = base.geo;
+        let stats_opt = base.stats;
+        let base_lat = base.lat;
+        let peak_chip = base.peak_chip;
+        let mut eval = base.eval;
+
+        // Geometry is a pure function of heads 0–2, which this path
+        // guarantees unchanged — an infeasible base stays infeasible
+        // (and vice versa), and the infeasible Evaluation depends only
+        // on the calibration and that same geometry.
+        if !eval.feasible {
+            self.push(Base {
+                action: action.to_vec(),
+                geo,
+                stats: stats_opt,
+                lat: base_lat,
+                peak_chip,
+                eval,
+            });
+            return eval;
+        }
+        let stats = stats_opt.expect("feasible base always carries hop stats");
+        let p = space.decode(action);
+        let mut lat = base_lat;
+
+        // Latency / throughput terms: any link rate or count feeds
+        // eq. 11 latencies, the system utilization and the cycle count.
+        if matches!(h, 4 | 5 | 8 | 9 | 11 | 12) {
+            lat = throughput::latencies_from_stats(&p, &stats);
+            let u_sys = bandwidth::u_sys(c, &p, peak_chip);
+            let cycles_per_op = throughput::cycles_per_op(c, &lat);
+            eval.l_ai2ai_ns = lat.ai2ai_ns;
+            eval.l_hbm2ai_ns = lat.hbm2ai_ns;
+            eval.cycles_per_op = cycles_per_op;
+            eval.u_sys = u_sys;
+            eval.throughput_tops = ppac::tput_term(c, &p, peak_chip, cycles_per_op, u_sys);
+        }
+        // Energy terms: interconnect choices, trace lengths and rates
+        // feed the per-bit communication energy.
+        if matches!(h, 3 | 6 | 7 | 10 | 13) {
+            let e_comm = energy::e_comm_per_op_pj_from_stats(c, &p, &stats);
+            let e_op = ppac::e_op_term(c, e_comm);
+            eval.e_comm_pj = e_comm;
+            eval.e_op_pj = e_op;
+            eval.energy_mj_per_ref_task = energy::energy_per_task_mj(e_op, c.ref_task_gmac);
+        }
+        // Package-cost terms: interconnect choices and link counts feed
+        // the eq. 16 bonding/link cost.
+        if matches!(h, 3 | 5 | 7 | 9 | 10 | 12) {
+            eval.pkg_cost = package_cost::package_cost_from_stats(c, &p, &stats);
+        }
+        // Actual HBM bandwidth follows the AI↔HBM link rate and count.
+        if matches!(h, 11 | 12) {
+            eval.bw_act_hbm_tbps = bandwidth::bw_act_hbm_tbps(c, &p);
+        }
+        eval.reward =
+            ppac::reward_term(c, eval.throughput_tops, eval.pkg_cost, eval.energy_mj_per_ref_task);
+
+        self.push(Base {
+            action: action.to_vec(),
+            geo,
+            stats: Some(stats),
+            lat,
+            peak_chip,
+            eval,
+        });
+        eval
+    }
+
+    fn push(&mut self, b: Base) {
+        if self.bases.len() < self.cap {
+            self.bases.push(b);
+        } else {
+            self.bases[self.next] = b;
+            self.next = (self.next + 1) % self.cap;
+        }
+    }
+}
+
+/// The single changed head between `base` and `action`, if the pair is
+/// delta-eligible: same arity, exactly one differing head, and that head
+/// is a link-parameter head (3..14). Geometry heads (0–2) change the
+/// mesh/hop statistics wholesale, and a differing placement head (14)
+/// swaps the hop-statistics source — both take the full path.
+fn eligible_diff(base: &[usize], action: &[usize]) -> Option<usize> {
+    if base.len() != action.len() {
+        return None;
+    }
+    let mut changed = None;
+    for (h, (&x, &y)) in base.iter().zip(action).enumerate() {
+        if x != y {
+            if changed.is_some() {
+                return None;
+            }
+            changed = Some(h);
+        }
+    }
+    changed.filter(|h| (3..N_HEADS).contains(h))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::evaluate_action;
+    use crate::model::space::paper_points;
+
+    #[test]
+    fn eligible_diff_classifies_pairs() {
+        let a = paper_points::table6_case_i();
+        assert_eq!(eligible_diff(&a, &a), None, "identical actions");
+        let mut one = a;
+        one[11] += 1;
+        assert_eq!(eligible_diff(&a, &one), Some(11));
+        let mut geo = a;
+        geo[1] += 1;
+        assert_eq!(eligible_diff(&a, &geo), None, "geometry head is ineligible");
+        let mut two = one;
+        two[6] += 1;
+        assert_eq!(eligible_diff(&a, &two), None, "two heads differ");
+        let longer: Vec<usize> = a.iter().copied().chain([0]).collect();
+        assert_eq!(eligible_diff(&a, &longer), None, "arity mismatch");
+        let mut placed = longer.clone();
+        placed[N_HEADS] = 2;
+        assert_eq!(eligible_diff(&longer, &placed), None, "placement head is ineligible");
+    }
+
+    #[test]
+    fn counters_track_the_three_paths() {
+        let c = Calib::default();
+        let space = DesignSpace::case_i();
+        let mut d = DeltaEvaluator::default();
+        let a = paper_points::table6_case_i();
+        d.evaluate(&c, &space, &a);
+        assert_eq!((d.full_evals, d.delta_hits, d.exact_hits), (1, 0, 0));
+        d.evaluate(&c, &space, &a);
+        assert_eq!((d.full_evals, d.delta_hits, d.exact_hits), (1, 0, 1));
+        let mut one = a;
+        one[12] += 1;
+        let got = d.evaluate(&c, &space, &one);
+        assert_eq!((d.full_evals, d.delta_hits, d.exact_hits), (1, 1, 1));
+        let want = evaluate_action(&c, &space, &one);
+        assert_eq!(got.reward.to_bits(), want.reward.to_bits());
+        let mut geo = a;
+        geo[0] = 0;
+        d.evaluate(&c, &space, &geo);
+        assert_eq!(d.full_evals, 2, "geometry change takes the full path");
+        assert!(d.fast_rate() > 0.0);
+    }
+
+    #[test]
+    fn ring_evicts_oldest_base_first() {
+        let c = Calib::default();
+        let space = DesignSpace::case_i();
+        let mut d = DeltaEvaluator::new(2);
+        // Three points that differ pairwise in geometry heads only, so
+        // none is ever a delta of another and every miss is a full eval.
+        let a = paper_points::table6_case_i();
+        let mut b = a;
+        b[1] += 1;
+        let mut e = a;
+        e[2] += 1;
+        d.evaluate(&c, &space, &a); // full 1
+        d.evaluate(&c, &space, &b); // full 2 — ring at capacity [a, b]
+        d.evaluate(&c, &space, &a); // exact hit: a still resident
+        assert_eq!((d.full_evals, d.exact_hits), (2, 1));
+        d.evaluate(&c, &space, &e); // full 3 — evicts a (oldest)
+        d.evaluate(&c, &space, &a); // full 4: a no longer resident
+        assert_eq!((d.full_evals, d.exact_hits), (4, 1));
+    }
+}

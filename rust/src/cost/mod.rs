@@ -9,6 +9,7 @@
 pub mod bandwidth;
 pub mod cache;
 pub mod constants;
+pub mod delta;
 pub mod die_cost;
 pub mod energy;
 pub mod package_cost;
@@ -18,4 +19,5 @@ pub mod yield_model;
 
 pub use cache::EvalCache;
 pub use constants::{Calib, TechNode, CALIB_KEYS};
+pub use delta::DeltaEvaluator;
 pub use ppac::{evaluate, evaluate_action, evaluate_with_placement, Evaluation};

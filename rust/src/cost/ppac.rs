@@ -51,7 +51,7 @@ pub struct Evaluation {
 }
 
 impl Evaluation {
-    fn infeasible(c: &Calib, geo: &Geometry) -> Evaluation {
+    pub(crate) fn infeasible(c: &Calib, geo: &Geometry) -> Evaluation {
         Evaluation {
             feasible: false,
             mesh_m: geo.m,
@@ -134,14 +134,75 @@ pub fn evaluate_action(
     space: &crate::model::space::DesignSpace,
     action: &[usize],
 ) -> Evaluation {
+    evaluate_action_terms(c, space, action).0
+}
+
+/// The per-term intermediates behind one [`Evaluation`] — everything
+/// `cost::delta::DeltaEvaluator` needs to recompute only the terms a
+/// changed action head reaches (the geometry, the hop statistics, the
+/// eq. 11 latencies and the per-chiplet peak). `stats` is `None` for
+/// infeasible points, where the evaluation short-circuits before any
+/// hop statistics exist.
+pub(crate) struct EvalTerms {
+    pub p: DesignPoint,
+    pub geo: Geometry,
+    pub stats: Option<HopStats>,
+    pub lat: Latencies,
+    pub peak_chip: f64,
+}
+
+/// [`evaluate_action`] that also returns the intermediates the delta
+/// evaluator caches. The dispatch (placement head → template layout,
+/// otherwise memoized closed-form stats) is shared with the plain
+/// surface, so the two can never disagree.
+pub(crate) fn evaluate_action_terms(
+    c: &Calib,
+    space: &crate::model::space::DesignSpace,
+    action: &[usize],
+) -> (Evaluation, EvalTerms) {
     use crate::model::space::N_HEADS;
     let p = space.decode(action);
-    if space.placement_head && action.len() > N_HEADS {
-        let layout = Placement::template(p.n_footprints(), &p.hbm_locs(), action[N_HEADS]);
-        evaluate_with_placement(c, &p, Some(&layout))
-    } else {
-        evaluate(c, &p)
+    let geo = throughput::geometry(c, &p);
+    if !geo.feasible {
+        let eval = Evaluation::infeasible(c, &geo);
+        let terms =
+            EvalTerms { p, geo, stats: None, lat: Latencies::default(), peak_chip: 0.0 };
+        return (eval, terms);
     }
+    let stats = if space.placement_head && action.len() > N_HEADS {
+        Placement::template(p.n_footprints(), &p.hbm_locs(), action[N_HEADS]).hop_stats()
+    } else {
+        // §Perf: memoized over (footprints, HBM mask), the SA inner loop.
+        hop_stats(p.n_footprints(), p.hbm_mask)
+    };
+    let (eval, lat, peak_chip) = evaluate_from_stats_terms(c, &p, &geo, &stats);
+    (eval, EvalTerms { p, geo, stats: Some(stats), lat, peak_chip })
+}
+
+/// Effective throughput in TMAC/s (eqs. 3–5 assembled): the one place
+/// the expression lives, shared by the full path and the delta path so
+/// a recomputed term is bitwise-identical by construction.
+pub(crate) fn tput_term(
+    c: &Calib,
+    p: &DesignPoint,
+    peak_chip: f64,
+    cycles_per_op: f64,
+    u_sys: f64,
+) -> f64 {
+    peak_chip / cycles_per_op * c.default_u_chip * p.n_chiplets as f64 * u_sys / 1e12
+}
+
+/// Energy per operation, pJ (eq. 7 + DRAM share), from the
+/// communication term.
+pub(crate) fn e_op_term(c: &Calib, e_comm_pj: f64) -> f64 {
+    c.e_mac_pj + c.e_dram_pj_bit * c.dram_bits_per_op + e_comm_pj
+}
+
+/// eq. 17: r = αT − βC − γE. T in effective TMAC/s, C the packaging
+/// cost (eq. 16 units), E the communication+compute energy per
+/// reference task in mJ — see DESIGN.md §4 for the unit rationale.
+pub(crate) fn reward_term(c: &Calib, tput: f64, pkg_cost: f64, e_task: f64) -> f64 {
+    c.alpha * tput - c.beta * pkg_cost - c.gamma * e_task
 }
 
 /// Shared tail of [`evaluate`] / [`evaluate_with_placement`]: the full
@@ -152,20 +213,31 @@ fn evaluate_from_stats(
     geo: &Geometry,
     stats: &HopStats,
 ) -> Evaluation {
+    evaluate_from_stats_terms(c, p, geo, stats).0
+}
+
+/// [`evaluate_from_stats`] that also returns the latencies and the
+/// per-chiplet peak, the two intermediates the delta evaluator carries
+/// between evaluations.
+fn evaluate_from_stats_terms(
+    c: &Calib,
+    p: &DesignPoint,
+    geo: &Geometry,
+    stats: &HopStats,
+) -> (Evaluation, Latencies, f64) {
     let geo = *geo;
     let lat: Latencies = throughput::latencies_from_stats(p, stats);
 
     let peak_chip = throughput::chip_peak_ops(c, &geo);
     let peak_tops = peak_chip * p.n_chiplets as f64 / 1e12;
     let u_sys = bandwidth::u_sys(c, p, peak_chip);
-    let tput = peak_chip / throughput::cycles_per_op(c, &lat)
-        * c.default_u_chip
-        * p.n_chiplets as f64
-        * u_sys
-        / 1e12;
+    // Computed once, reused for the throughput term and the Evaluation
+    // field (historically evaluated twice).
+    let cycles_per_op = throughput::cycles_per_op(c, &lat);
+    let tput = tput_term(c, p, peak_chip, cycles_per_op, u_sys);
 
     let e_comm = energy::e_comm_per_op_pj_from_stats(c, p, stats);
-    let e_op = c.e_mac_pj + c.e_dram_pj_bit * c.dram_bits_per_op + e_comm;
+    let e_op = e_op_term(c, e_comm);
     let e_task = energy::energy_per_task_mj(e_op, c.ref_task_gmac);
 
     let die_yield = super::yield_model::die_yield(
@@ -176,12 +248,9 @@ fn evaluate_from_stats(
     let die_cost = die_cost::system_die_cost(c, geo.area_per_chiplet, p.n_chiplets);
     let pkg_cost = package_cost::package_cost_from_stats(c, p, stats);
 
-    // eq. 17: r = αT − βC − γE. T in effective TMAC/s, C the packaging
-    // cost (eq. 16 units), E the communication+compute energy per
-    // reference task in mJ — see DESIGN.md §4 for the unit rationale.
-    let reward = c.alpha * tput - c.beta * pkg_cost - c.gamma * e_task;
+    let reward = reward_term(c, tput, pkg_cost, e_task);
 
-    Evaluation {
+    let eval = Evaluation {
         feasible: true,
         mesh_m: geo.m,
         mesh_n: geo.n,
@@ -192,7 +261,7 @@ fn evaluate_from_stats(
         sram_mb: geo.sram_mb,
         l_ai2ai_ns: lat.ai2ai_ns,
         l_hbm2ai_ns: lat.hbm2ai_ns,
-        cycles_per_op: throughput::cycles_per_op(c, &lat),
+        cycles_per_op,
         bw_req_hbm_tbps: bandwidth::bw_req_hbm_tbps(c, peak_chip),
         bw_act_hbm_tbps: bandwidth::bw_act_hbm_tbps(c, p),
         u_sys,
@@ -205,7 +274,8 @@ fn evaluate_from_stats(
         die_cost,
         pkg_cost,
         reward,
-    }
+    };
+    (eval, lat, peak_chip)
 }
 
 #[cfg(test)]

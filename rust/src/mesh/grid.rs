@@ -14,7 +14,7 @@ use crate::model::space::HbmLoc;
 /// compact blobs on a larger bounding grid instead.
 pub fn mesh_dims(n_footprints: usize) -> (usize, usize) {
     assert!(n_footprints >= 1, "mesh_dims: a mesh needs at least one footprint");
-    let mut m = (n_footprints as f64).sqrt() as usize;
+    let mut m = isqrt(n_footprints);
     while m >= 1 {
         if n_footprints % m == 0 {
             return (m, n_footprints / m);
@@ -22,6 +22,28 @@ pub fn mesh_dims(n_footprints: usize) -> (usize, usize) {
         m -= 1;
     }
     (1, n_footprints)
+}
+
+/// Exact integer square root: the largest `r` with `r·r ≤ n`.
+///
+/// `(n as f64).sqrt() as usize` is only a first guess: above 2^53 the
+/// `usize → f64` conversion rounds, and the truncated float sqrt can
+/// land off the true integer root (e.g. `n = 2^54 − 1` converts to
+/// 2^54, whose sqrt truncates to 2^27 — one above the true root
+/// 2^27 − 1, so the `mesh_dims` scan would start past its contract's
+/// `m ≤ n/m` boundary). The guess is corrected in both directions;
+/// `checked_mul` keeps the `r·r` probes overflow-safe near
+/// `usize::MAX`, where the float guess itself (2^32) squares past the
+/// integer range.
+fn isqrt(n: usize) -> usize {
+    let mut r = (n as f64).sqrt() as usize;
+    while r.checked_mul(r).is_none_or(|sq| sq > n) {
+        r -= 1;
+    }
+    while (r + 1).checked_mul(r + 1).is_some_and(|sq| sq <= n) {
+        r += 1;
+    }
+    r
 }
 
 /// An m×n mesh of AI footprints with a set of HBM attach points.
@@ -299,6 +321,42 @@ mod tests {
                 assert_ne!(fp % cand, 0, "fp {fp}: ({cand}, {}) squarer", fp / cand);
             }
         }
+    }
+
+    #[test]
+    #[cfg(target_pointer_width = "64")]
+    fn isqrt_exact_where_the_float_guess_drifts() {
+        // The motivating case: 2^54 − 1 converts to 2^54 in f64, whose
+        // sqrt truncates to 2^27 — one ABOVE the true integer root.
+        assert_eq!(isqrt((1usize << 54) - 1), (1 << 27) - 1);
+        assert_eq!(isqrt(1usize << 54), 1 << 27);
+        // Perfect squares across magnitudes, including above 2^53 where
+        // the conversion rounds, and at the top of the usize range.
+        for k in [1usize, 2, 11, 1 << 16, 94_906_266, 3_037_000_499] {
+            assert_eq!(isqrt(k * k), k, "k = {k}");
+            assert_eq!(isqrt(k * k - 1), k - 1, "k = {k}");
+            assert_eq!(isqrt(k * k + 1), k, "k = {k}");
+        }
+        // usize::MAX: the float guess is 2^32, whose square overflows;
+        // the true root is 2^32 − 1.
+        assert_eq!(isqrt(usize::MAX), (1usize << 32) - 1);
+        assert_eq!(isqrt(0), 0);
+    }
+
+    #[test]
+    #[cfg(target_pointer_width = "64")]
+    fn mesh_dims_large_counts_factor_exactly() {
+        // 2^54 − 1 = (2^27 − 1)(2^27 + 1): the most-square factor pair
+        // starts AT the integer root, which the old float-sqrt guess
+        // overshot by one.
+        let r = (1usize << 27) - 1;
+        assert_eq!(mesh_dims((1 << 54) - 1), (r, r + 2));
+        // A perfect square near the top of the range factors to (k, k).
+        let k = 3_037_000_499usize;
+        assert_eq!(mesh_dims(k * k), (k, k));
+        let (m, n) = mesh_dims(usize::MAX);
+        assert_eq!(m * n, usize::MAX);
+        assert!(m <= n);
     }
 
     #[test]

@@ -12,14 +12,15 @@
 
 use anyhow::Result;
 
-use crate::cost::{Calib, Evaluation};
+use crate::cost::{Calib, DeltaEvaluator, Evaluation};
 use crate::model::space::{Action, DesignSpace};
 use crate::rl::PpoConfig;
 use crate::runtime::Engine;
 
 use super::sa::SaConfig;
 use super::search::{
-    CostObjective, DriverConfig, Objective, PortfolioMember, PpoDriver, SearchDriver,
+    CostObjective, DeltaObjective, DriverConfig, Objective, PortfolioMember, PpoDriver,
+    SearchDriver,
 };
 
 /// Configuration of Algorithm 1.
@@ -84,7 +85,10 @@ pub fn portfolio_candidates(
     let mut out = Vec::new();
     for m in members {
         for &seed in &m.seeds {
-            let mut obj = CostObjective::new(space, calib);
+            // Incremental evaluation, bitwise-identical to the plain
+            // CostObjective — the fan-out equivalence tests depend on it.
+            let mut delta = DeltaEvaluator::default();
+            let mut obj = DeltaObjective { delta: &mut delta, space, calib };
             let trace = m.driver.run(space, &mut obj, seed);
             out.push(Candidate {
                 source: m.driver.name().into(),

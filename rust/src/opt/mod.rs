@@ -21,6 +21,7 @@ pub use parallel::{
 pub use random_search::{random_search, RandomConfig};
 pub use sa::{simulated_annealing, simulated_annealing_with, SaConfig, SaTrace};
 pub use search::{
-    BestTracker, CachedObjective, CostObjective, DriverConfig, FnObjective, GaConfig, GreedyConfig,
-    Objective, PortfolioMember, PpoDriver, SearchBudget, SearchDriver, SearchTrace, TraceRecorder,
+    BestTracker, CachedDeltaObjective, CachedObjective, CostObjective, DeltaObjective,
+    DriverConfig, FnObjective, GaConfig, GreedyConfig, Objective, PortfolioMember, PpoDriver,
+    SearchBudget, SearchDriver, SearchTrace, TraceRecorder,
 };

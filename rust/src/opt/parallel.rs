@@ -33,7 +33,8 @@ use super::combined::{
     combined_members, rl_candidates, select_best, Candidate, CombinedConfig, OptOutcome,
 };
 use super::sa::SaConfig;
-use super::search::{CostObjective, DriverConfig, PortfolioMember};
+use super::search::{DeltaObjective, DriverConfig, PortfolioMember};
+use crate::cost::DeltaEvaluator;
 
 /// Resolve a requested `--jobs` value into a worker count: `0` means
 /// "all available cores"; explicit requests are capped at
@@ -121,7 +122,11 @@ pub fn portfolio_candidates_par(
         .flat_map(|m| m.seeds.iter().map(move |&seed| (m.driver, seed)))
         .collect();
     parallel_map(&work, jobs, |(driver, seed)| {
-        let mut obj = CostObjective::new(space, calib);
+        // Each instance owns a delta evaluator: the incremental path is
+        // bitwise-identical to CostObjective, so the fan-out's
+        // bit-for-bit guarantee vs. the sequential paths is unchanged.
+        let mut delta = DeltaEvaluator::default();
+        let mut obj = DeltaObjective { delta: &mut delta, space, calib };
         let trace = driver.run(space, &mut obj, *seed);
         Candidate {
             source: driver.name().into(),

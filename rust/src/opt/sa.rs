@@ -12,6 +12,11 @@
 //! stream, every comparison and the trace sampling are unchanged, so
 //! the output is bit-identical to the pre-refactor implementation
 //! (regression-tested below against a frozen copy of the old loop).
+//! The portfolio drivers hand SA a `DeltaObjective`
+//! (`cost::delta::DeltaEvaluator`) — transparent here, since the delta
+//! path is bitwise-identical to the full evaluator. SA's all-head
+//! perturbation usually takes the full fallback; the fast path mainly
+//! pays off for greedy's ±1 sweeps and for revisited points.
 
 use anyhow::Result;
 

@@ -9,7 +9,10 @@
 //! individuals alive, so the per-generation evaluation cost is
 //! `population − elitism` and the total budget is exact
 //! ([`GaConfig::eval_budget`]) — which is what makes "GA vs random at a
-//! matched budget" comparisons fair.
+//! matched budget" comparisons fair. Like the other drivers the GA is
+//! objective-agnostic: the portfolio runs it over a `DeltaObjective`
+//! (`cost::delta`), which fast-paths children that mutated a single
+//! link head and is bitwise-identical to the full evaluator otherwise.
 
 use anyhow::Result;
 

@@ -9,6 +9,12 @@
 //! and surprisingly strong on this landscape — exactly the kind of
 //! non-RL baseline the paper's portfolio argmax (Alg. 1 line 13) is
 //! meant to range over.
+//!
+//! The ±1 single-head neighborhood is the prime beneficiary of the
+//! incremental evaluator: behind a `DeltaObjective`
+//! (`cost::delta::DeltaEvaluator`, how the portfolio drivers run this),
+//! every link-head neighbor re-scores through the delta fast path,
+//! bitwise-identical to the full model.
 
 use anyhow::Result;
 

@@ -10,8 +10,10 @@
 //!
 //! * [`Objective`] is the evaluation surface — eq. 17 via
 //!   `cost::evaluate` by default ([`CostObjective`]), memoized for
-//!   sweeps ([`CachedObjective`] over `cost::cache::EvalCache`), or any
-//!   closure ([`FnObjective`]).
+//!   sweeps ([`CachedObjective`] over `cost::cache::EvalCache`),
+//!   incremental for mutation walks ([`DeltaObjective`] /
+//!   [`CachedDeltaObjective`] over `cost::delta::DeltaEvaluator`), or
+//!   any closure ([`FnObjective`]).
 //! * [`BestTracker`] / [`SearchBudget`] / [`TraceRecorder`] are the
 //!   shared bookkeeping (the tracker also backs the gym's best/merge
 //!   logic — one NaN policy everywhere).
@@ -37,6 +39,8 @@ pub mod tracker;
 pub use driver::{DriverConfig, PortfolioMember, SearchDriver, SearchTrace};
 pub use ga::GaConfig;
 pub use greedy::GreedyConfig;
-pub use objective::{CachedObjective, CostObjective, FnObjective, Objective};
+pub use objective::{
+    CachedDeltaObjective, CachedObjective, CostObjective, DeltaObjective, FnObjective, Objective,
+};
 pub use rl::PpoDriver;
 pub use tracker::{BestTracker, SearchBudget, TraceRecorder};

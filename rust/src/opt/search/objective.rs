@@ -4,13 +4,17 @@
 //! `r = αT − βC − γE` as computed by `cost::evaluate` — but different
 //! call sites want different plumbing around that evaluation: the plain
 //! function ([`CostObjective`]), a memoizing cache for scenario sweeps
-//! ([`CachedObjective`] over `cost::cache::EvalCache`), or an arbitrary
-//! instrumented closure ([`FnObjective`], used by tests to count calls
-//! and by `simulated_annealing_with` callers). Drivers only ever see
+//! ([`CachedObjective`] over `cost::cache::EvalCache`), the incremental
+//! fast path for mutation walks ([`DeltaObjective`] over
+//! `cost::delta::DeltaEvaluator`, and [`CachedDeltaObjective`] stacking
+//! both), or an arbitrary instrumented closure ([`FnObjective`], used by
+//! tests to count calls and by `simulated_annealing_with` callers).
+//! Drivers only ever see
 //! `&mut dyn Objective`, so swapping the plumbing can never perturb a
 //! walk — the guarantee the bit-identical sweep/cache tests build on.
 
 use crate::cost::cache::EvalCache;
+use crate::cost::delta::DeltaEvaluator;
 use crate::cost::{evaluate_action, Calib, Evaluation};
 use crate::model::space::DesignSpace;
 
@@ -88,6 +92,40 @@ impl Objective for CachedObjective<'_> {
     }
 }
 
+/// Incremental objective over a [`DeltaEvaluator`]: single-head
+/// mutations (the SA/greedy inner move) re-run only the equation terms
+/// the changed head reaches. Bitwise-identical to [`CostObjective`] —
+/// the delta path shares the full path's term helpers — so it satisfies
+/// the purity contract and drivers can swap it in transparently.
+pub struct DeltaObjective<'a> {
+    pub delta: &'a mut DeltaEvaluator,
+    pub space: &'a DesignSpace,
+    pub calib: &'a Calib,
+}
+
+impl Objective for DeltaObjective<'_> {
+    fn evaluate(&mut self, action: &[usize]) -> Evaluation {
+        self.delta.evaluate(self.calib, self.space, action)
+    }
+}
+
+/// [`CachedObjective`] with misses routed through a [`DeltaEvaluator`]:
+/// the sweep engine's stacked fast path — memo table in front (so
+/// winner re-scoring and cross-stage repeats stay guaranteed hits),
+/// incremental evaluation behind it. Bitwise-identical to both parents.
+pub struct CachedDeltaObjective<'a> {
+    pub cache: &'a mut EvalCache,
+    pub delta: &'a mut DeltaEvaluator,
+    pub space: &'a DesignSpace,
+    pub calib: &'a Calib,
+}
+
+impl Objective for CachedDeltaObjective<'_> {
+    fn evaluate(&mut self, action: &[usize]) -> Evaluation {
+        self.cache.evaluate_via(self.delta, self.calib, self.space, action)
+    }
+}
+
 /// Closure adapter, so ad-hoc evaluators (instrumented, fault-injecting,
 /// test doubles) plug into the same driver path without a named type.
 pub struct FnObjective<F>(pub F);
@@ -131,6 +169,38 @@ mod tests {
         assert_eq!(calls, 20);
         assert_eq!(cache.hits, 20);
         assert_eq!(cache.misses, 20);
+    }
+
+    #[test]
+    fn delta_objectives_are_bitwise_equal_to_cost_objective() {
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let mut cache = EvalCache::new(DEFAULT_CACHE_CAP);
+        let mut delta = DeltaEvaluator::default();
+        let mut delta2 = DeltaEvaluator::default();
+        let mut rng = Rng::new(17);
+        let mut a = space.random_action(&mut rng);
+        {
+            let mut direct = CostObjective::new(&space, &calib);
+            let mut fast = DeltaObjective { delta: &mut delta, space: &space, calib: &calib };
+            let mut stacked = CachedDeltaObjective {
+                cache: &mut cache,
+                delta: &mut delta2,
+                space: &space,
+                calib: &calib,
+            };
+            // a single-head mutation walk — the move every driver makes
+            for step in 0..300 {
+                let d = direct.evaluate(&a);
+                assert_eq!(d.reward.to_bits(), fast.evaluate(&a).reward.to_bits(), "step {step}");
+                assert_eq!(d.reward.to_bits(), stacked.evaluate(&a).reward.to_bits());
+                let h = rng.below(14) as usize;
+                let dim = crate::model::space::ACTION_DIMS[h];
+                a[h] = (a[h] + 1 + rng.below(dim as u64 - 1) as usize) % dim;
+            }
+        }
+        assert!(delta.delta_hits > 0, "walk must exercise the fast path");
+        assert!(delta.full_evals > 0, "geometry heads must fall back");
     }
 
     #[test]

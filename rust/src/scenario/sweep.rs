@@ -3,9 +3,11 @@
 //! [`run_sweep`] fans the scenario list across the `opt::parallel`
 //! worker pool ([`parallel_map`]): with several scenarios each worker
 //! owns whole scenarios (every optimizer instance inside runs
-//! sequentially through a per-scenario [`EvalCache`] behind
-//! `opt::search::CachedObjective`, so repeated `cost::evaluate` calls —
-//! winner re-scoring, colliding proposals — are memoized); with a
+//! sequentially through a per-scenario [`EvalCache`] stacked on a
+//! `cost::delta::DeltaEvaluator` behind
+//! `opt::search::CachedDeltaObjective`, so repeated `cost::evaluate`
+//! calls — winner re-scoring, colliding proposals — are memoized and
+//! cache misses take the incremental fast path); with a
 //! single scenario the pool is spent on its `(driver, seed)` instances
 //! instead (`portfolio_optimize_par`). Both arrangements are
 //! bit-identical — every driver is a pure function of `(space, calib,
@@ -30,12 +32,12 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::cost::cache::{EvalCache, DEFAULT_CACHE_CAP};
-use crate::cost::Calib;
+use crate::cost::{Calib, DeltaEvaluator};
 use crate::mesh::grid::hop_stats;
 use crate::model::space::DesignSpace;
 use crate::opt::combined::{rl_seed_candidates, select_best, Candidate, OptOutcome};
 use crate::opt::parallel::{parallel_map, portfolio_candidates_par};
-use crate::opt::search::{CachedObjective, PpoDriver};
+use crate::opt::search::{CachedDeltaObjective, PpoDriver};
 use crate::place::{refine_outcome, PlacementSummary};
 use crate::report::CsvWriter;
 
@@ -126,9 +128,11 @@ pub struct SweepOutcome {
 ///
 /// `jobs <= 1`: every `(driver, seed)` instance runs sequentially
 /// through a shared per-scenario [`EvalCache`] (action-keyed
-/// memoization of `cost::evaluate_action`, via
-/// `opt::search::CachedObjective`). `jobs > 1`: instances fan out
-/// uncached via `portfolio_candidates_par`. An `optimizer = "ppo"`
+/// memoization of `cost::evaluate_action`) stacked on a shared
+/// `cost::delta::DeltaEvaluator` (incremental single-head re-scoring),
+/// via `opt::search::CachedDeltaObjective`. `jobs > 1`: instances fan
+/// out via `portfolio_candidates_par`, each with its own delta
+/// evaluator. An `optimizer = "ppo"`
 /// scenario appends its RL stage after the non-RL members (native PPO
 /// per seed, fanned through the same pool). Results are bit-identical
 /// either way.
@@ -156,12 +160,20 @@ pub fn run_scenario(
         (portfolio_candidates_par(&space, &calib, &members, jobs), 0, 0)
     } else {
         let mut cache = EvalCache::new(DEFAULT_CACHE_CAP);
+        let mut delta = DeltaEvaluator::default();
         let mut candidates = Vec::new();
         for m in &members {
             for &seed in &m.seeds {
                 let trace = {
-                    let mut obj =
-                        CachedObjective { cache: &mut cache, space: &space, calib: &calib };
+                    // Memo table in front, incremental evaluation behind
+                    // it: cache misses run through the delta fast path,
+                    // which is bitwise-identical to the full model.
+                    let mut obj = CachedDeltaObjective {
+                        cache: &mut cache,
+                        delta: &mut delta,
+                        space: &space,
+                        calib: &calib,
+                    };
                     m.driver.run(&space, &mut obj, seed)
                 };
                 // Re-score the winner through the same cache: whenever

@@ -1,0 +1,267 @@
+//! Property tests for the delta-evaluation fast path (`cost::delta`):
+//! bitwise equality against the full `cost::evaluate_action` over long
+//! random mutation walks, pinned fallback triggers, driver-level
+//! equivalence, and regressions for the hot-path bug sweep
+//! (`cycles_per_op` double-computation, cache key aliasing,
+//! `mesh_dims` float-sqrt truncation — the latter two pinned in their
+//! own modules' unit tests).
+
+use chiplet_gym::cost::{evaluate_action, Calib, DeltaEvaluator, Evaluation};
+use chiplet_gym::model::space::{paper_points, DesignSpace, ACTION_DIMS, N_HEADS, PLACEMENT_HEAD_DIM};
+use chiplet_gym::opt::sa::SaConfig;
+use chiplet_gym::opt::search::{CostObjective, DeltaObjective, DriverConfig, GaConfig};
+use chiplet_gym::util::Rng;
+
+/// Every float field of an [`Evaluation`] that the delta path carries
+/// or recomputes, compared bitwise.
+fn assert_bitwise_equal(fast: &Evaluation, full: &Evaluation, ctx: &str) {
+    assert_eq!(fast.feasible, full.feasible, "{ctx}: feasible");
+    let fields = [
+        ("reward", fast.reward, full.reward),
+        ("throughput_tops", fast.throughput_tops, full.throughput_tops),
+        ("pkg_cost", fast.pkg_cost, full.pkg_cost),
+        ("energy_mj_per_ref_task", fast.energy_mj_per_ref_task, full.energy_mj_per_ref_task),
+        ("e_comm_pj", fast.e_comm_pj, full.e_comm_pj),
+        ("e_op_pj", fast.e_op_pj, full.e_op_pj),
+        ("u_sys", fast.u_sys, full.u_sys),
+        ("cycles_per_op", fast.cycles_per_op, full.cycles_per_op),
+        ("bw_req_hbm_tbps", fast.bw_req_hbm_tbps, full.bw_req_hbm_tbps),
+        ("bw_act_hbm_tbps", fast.bw_act_hbm_tbps, full.bw_act_hbm_tbps),
+        ("l_ai2ai_ns", fast.l_ai2ai_ns, full.l_ai2ai_ns),
+        ("l_hbm2ai_ns", fast.l_hbm2ai_ns, full.l_hbm2ai_ns),
+        ("peak_tops", fast.peak_tops, full.peak_tops),
+        ("die_yield", fast.die_yield, full.die_yield),
+        ("die_cost", fast.die_cost, full.die_cost),
+        ("area_per_chiplet", fast.area_per_chiplet, full.area_per_chiplet),
+        ("sram_mb", fast.sram_mb, full.sram_mb),
+    ];
+    for (name, f, g) in fields {
+        assert_eq!(f.to_bits(), g.to_bits(), "{ctx}: {name} {f} != {g}");
+    }
+    assert_eq!(fast.mesh_m, full.mesh_m, "{ctx}: mesh_m");
+    assert_eq!(fast.mesh_n, full.mesh_n, "{ctx}: mesh_n");
+}
+
+/// Mutate one head of `a` in place, guaranteed to change its value.
+fn mutate_head(a: &mut [usize], h: usize, rng: &mut Rng) {
+    let dim = ACTION_DIMS[h];
+    a[h] = (a[h] + 1 + rng.below(dim as u64 - 1) as usize) % dim;
+}
+
+#[test]
+fn single_head_walks_are_bitwise_identical_to_full_path() {
+    // The tentpole property: 5000-step random single-head mutation
+    // walks on both paper spaces, every Evaluation field bit-equal.
+    for (space, start, seed) in [
+        (DesignSpace::case_i(), paper_points::table6_case_i(), 1u64),
+        (DesignSpace::case_ii(), paper_points::table6_case_ii(), 2u64),
+    ] {
+        let calib = Calib::default();
+        let mut delta = DeltaEvaluator::default();
+        let mut rng = Rng::new(seed);
+        let mut a = start;
+        let steps = 5_000;
+        for step in 0..steps {
+            let fast = delta.evaluate(&calib, &space, &a);
+            let full = evaluate_action(&calib, &space, &a);
+            assert_bitwise_equal(&fast, &full, &format!("seed {seed} step {step}"));
+            let h = 3 + rng.below((N_HEADS - 3) as u64) as usize;
+            mutate_head(&mut a, h, &mut rng);
+        }
+        assert!(
+            delta.delta_hits > steps / 2,
+            "walk must mostly take the fast path: {} of {steps}",
+            delta.delta_hits
+        );
+    }
+}
+
+#[test]
+fn placement_space_walk_is_bitwise_identical_with_fallbacks() {
+    // 15-head actions on the learned-placement space: link-head moves
+    // take the delta path, template-head moves must fall back — both
+    // bit-equal to the full path.
+    let space = DesignSpace::case_i().with_placement_head();
+    let calib = Calib::default();
+    let mut delta = DeltaEvaluator::default();
+    let mut rng = Rng::new(3);
+    let mut a = paper_points::table6_case_i().to_vec();
+    a.push(0);
+    for step in 0..3_000 {
+        let fast = delta.evaluate(&calib, &space, &a);
+        let full = evaluate_action(&calib, &space, &a);
+        assert_bitwise_equal(&fast, &full, &format!("step {step}"));
+        if rng.below(10) == 0 {
+            // placement-head move: swaps the hop-statistics source
+            a[N_HEADS] = (a[N_HEADS] + 1) % PLACEMENT_HEAD_DIM;
+        } else {
+            let h = 3 + rng.below((N_HEADS - 3) as u64) as usize;
+            mutate_head(&mut a, h, &mut rng);
+        }
+    }
+    assert!(delta.delta_hits > 0, "link moves must take the fast path");
+    assert!(delta.full_evals > 1, "template moves must fall back");
+}
+
+#[test]
+fn mixed_walk_with_geometry_and_multi_head_jumps_stays_bitwise() {
+    let space = DesignSpace::case_ii();
+    let calib = Calib::default();
+    let mut delta = DeltaEvaluator::default();
+    let mut rng = Rng::new(7);
+    let mut a = paper_points::table6_case_ii();
+    for step in 0..4_000 {
+        let fast = delta.evaluate(&calib, &space, &a);
+        let full = evaluate_action(&calib, &space, &a);
+        assert_bitwise_equal(&fast, &full, &format!("step {step}"));
+        match rng.below(10) {
+            0 | 1 => {
+                // geometry head: mesh/hop stats change wholesale
+                let h = rng.below(3) as usize;
+                mutate_head(&mut a, h, &mut rng);
+            }
+            2 | 3 => {
+                // multi-head jump, SA-style
+                for _ in 0..2 + rng.below(3) {
+                    let h = rng.below(N_HEADS as u64) as usize;
+                    mutate_head(&mut a, h, &mut rng);
+                }
+            }
+            _ => {
+                let h = 3 + rng.below((N_HEADS - 3) as u64) as usize;
+                mutate_head(&mut a, h, &mut rng);
+            }
+        }
+    }
+    assert!(delta.delta_hits > 0);
+    assert!(delta.full_evals > 0);
+}
+
+#[test]
+fn infeasible_regions_are_bitwise_identical_too() {
+    // A 150 mm² package makes most chiplet counts infeasible, so the
+    // walk crosses the feasibility boundary both ways; the delta path
+    // must reproduce the infeasible Evaluation (penalty reward) exactly.
+    let space = DesignSpace::case_i();
+    let mut calib = Calib::default();
+    assert!(calib.set_key("pkg_area_mm2", 150.0));
+    let mut delta = DeltaEvaluator::default();
+    let mut rng = Rng::new(9);
+    let mut a = paper_points::table6_case_i();
+    let (mut seen_feasible, mut seen_infeasible) = (false, false);
+    for step in 0..3_000 {
+        let fast = delta.evaluate(&calib, &space, &a);
+        let full = evaluate_action(&calib, &space, &a);
+        assert_bitwise_equal(&fast, &full, &format!("step {step}"));
+        seen_feasible |= full.feasible;
+        seen_infeasible |= !full.feasible;
+        // chiplet-count (geometry) moves cross the boundary; link moves
+        // exercise the delta path's infeasible fast-return
+        let h = if rng.below(4) == 0 { 1 } else { 3 + rng.below((N_HEADS - 3) as u64) as usize };
+        mutate_head(&mut a, h, &mut rng);
+    }
+    assert!(seen_feasible, "walk never entered the feasible region");
+    assert!(seen_infeasible, "walk never left the feasible region");
+}
+
+#[test]
+fn fallback_triggers_are_pinned_by_the_counters() {
+    let space = DesignSpace::case_i();
+    let calib = Calib::default();
+    let mut d = DeltaEvaluator::default();
+    let a = paper_points::table6_case_i();
+
+    d.evaluate(&calib, &space, &a);
+    assert_eq!((d.full_evals, d.delta_hits, d.exact_hits), (1, 0, 0), "first eval is full");
+
+    d.evaluate(&calib, &space, &a);
+    assert_eq!(d.exact_hits, 1, "repeat is an exact hit");
+
+    let mut one = a;
+    one[13] += 1;
+    d.evaluate(&calib, &space, &one);
+    assert_eq!(d.delta_hits, 1, "single link-head diff takes the delta path");
+
+    let mut two = a;
+    two[6] += 1;
+    two[13] += 1;
+    d.evaluate(&calib, &space, &two);
+    assert_eq!((d.full_evals, d.delta_hits), (2, 1), "multi-head diff falls back");
+
+    let mut geo = a;
+    geo[2] += 1;
+    d.evaluate(&calib, &space, &geo);
+    assert_eq!(d.full_evals, 3, "geometry-head diff falls back");
+
+    let placed_space = DesignSpace::case_i().with_placement_head();
+    let mut d2 = DeltaEvaluator::default();
+    let mut base = a.to_vec();
+    base.push(0);
+    d2.evaluate(&calib, &placed_space, &base);
+    let mut moved = base.clone();
+    moved[N_HEADS] = 1;
+    d2.evaluate(&calib, &placed_space, &moved);
+    assert_eq!((d2.full_evals, d2.delta_hits), (2, 0), "placement-head diff falls back");
+    let mut link = moved.clone();
+    link[12] += 1;
+    d2.evaluate(&calib, &placed_space, &link);
+    assert_eq!(d2.delta_hits, 1, "15-head link diff still takes the delta path");
+}
+
+#[test]
+fn drivers_behave_identically_on_delta_and_cost_objectives() {
+    // SA, greedy and GA runs through DeltaObjective must reproduce the
+    // CostObjective run exactly: same best action, same reward bits,
+    // same evaluation count.
+    let space = DesignSpace::case_i();
+    let calib = Calib::default();
+    let budget = 4_000usize;
+    let sa = SaConfig { iterations: budget, trace_every: 0, ..SaConfig::default() };
+    let drivers = [
+        DriverConfig::Sa(sa),
+        DriverConfig::greedy_with_budget(budget),
+        DriverConfig::Ga(GaConfig::with_budget(budget)),
+    ];
+    for driver in &drivers {
+        for seed in [0u64, 1] {
+            let reference = {
+                let mut obj = CostObjective::new(&space, &calib);
+                driver.run(&space, &mut obj, seed)
+            };
+            let mut delta = DeltaEvaluator::default();
+            let fast = {
+                let mut obj = DeltaObjective { delta: &mut delta, space: &space, calib: &calib };
+                driver.run(&space, &mut obj, seed)
+            };
+            let name = driver.name();
+            assert_eq!(fast.best_action, reference.best_action, "{name} seed {seed}");
+            assert_eq!(
+                fast.best_eval.reward.to_bits(),
+                reference.best_eval.reward.to_bits(),
+                "{name} seed {seed}"
+            );
+            assert_eq!(fast.evaluations, reference.evaluations, "{name} seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn cycles_per_op_is_computed_once_and_consistent() {
+    // Regression for the duplicated cycles_per_op computation: the
+    // Evaluation field must be exactly the eq. 5 value its throughput
+    // term used, and the reward must decompose bit-exactly (eq. 17).
+    let calib = Calib::default();
+    for (space, start) in [
+        (DesignSpace::case_i(), paper_points::table6_case_i()),
+        (DesignSpace::case_ii(), paper_points::table6_case_ii()),
+    ] {
+        let e = evaluate_action(&calib, &space, &start);
+        assert!(e.feasible);
+        let supply_cycles = e.l_hbm2ai_ns * calib.freq_ghz;
+        let want_cycles = 1.0 + supply_cycles / calib.latency_hiding_ops;
+        assert_eq!(e.cycles_per_op.to_bits(), want_cycles.to_bits());
+        let want_reward = calib.alpha * e.throughput_tops - calib.beta * e.pkg_cost
+            - calib.gamma * e.energy_mj_per_ref_task;
+        assert_eq!(e.reward.to_bits(), want_reward.to_bits());
+    }
+}
