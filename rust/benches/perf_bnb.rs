@@ -1,0 +1,117 @@
+//! Certified-search performance: bound throughput and branch-and-bound
+//! end-to-end cost.
+//!
+//! Times (a) the root bound of the full case (i) space — the one
+//! expensive geometry-enumerating bound a certification run pays once,
+//! (b) a deep-prefix bound — the per-child cost every expansion pays,
+//! (c) a complete certify of a shrunk (~49K-point) space against the
+//! cost of plain exhaustive enumeration of the same space, and (d) one
+//! budgeted warm-started run over the full space. Writes
+//! `BENCH_bnb.json` under `bench_results/` with the timings plus the
+//! certificate counters, to seed the perf trajectory across PRs.
+
+use chiplet_gym::cost::{partial_upper_bound, Calib, HeadDomains};
+use chiplet_gym::model::space::paper_points::table6_case_i;
+use chiplet_gym::model::space::DesignSpace;
+use chiplet_gym::opt::exhaustive::exhaustive_domains;
+use chiplet_gym::opt::search::{BnbConfig, BnbDriver, CostObjective};
+use chiplet_gym::report;
+use chiplet_gym::util::bench::{fmt_ns, Runner};
+
+fn main() {
+    let space = DesignSpace::case_i();
+    let calib = Calib::default();
+    let full = HeadDomains::full(&space);
+    let shrunk = HeadDomains::capped(&space, &[3, 4, 4, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2, 1]);
+
+    let mut runner = Runner::quick();
+
+    // (a) the root bound enumerates all 3 x 128 x 63 geometry combos.
+    runner.bench("root bound (full case i)", || {
+        std::hint::black_box(partial_upper_bound(&calib, &space, &full, &[]));
+    });
+    let root_ns = runner.results().last().unwrap().ns_per_iter.mean;
+
+    // (b) a deep prefix collapses the geometry product to one combo.
+    let deep: Vec<usize> = table6_case_i()[..6].to_vec();
+    runner.bench("deep-prefix bound (6 heads fixed)", || {
+        std::hint::black_box(partial_upper_bound(&calib, &space, &full, &deep));
+    });
+    let deep_ns = runner.results().last().unwrap().ns_per_iter.mean;
+
+    // (c) certified optimum of a ~49K-point space vs brute force.
+    let mut shrunk_cert = None;
+    runner.bench("certify shrunk space (49K points)", || {
+        let driver = BnbDriver::new(calib.clone(), shrunk.clone());
+        let mut obj = CostObjective::new(&space, &calib);
+        let out = driver.certify(&space, &mut obj);
+        shrunk_cert = Some(out.certification());
+        std::hint::black_box(out.best_action);
+    });
+    let certify_ns = runner.results().last().unwrap().ns_per_iter.mean;
+    runner.bench("exhaustive oracle, same space", || {
+        let out = exhaustive_domains(&space, &calib, &shrunk);
+        std::hint::black_box(out.best_action);
+    });
+    let oracle_ns = runner.results().last().unwrap().ns_per_iter.mean;
+
+    // (d) one budgeted full-space run, warm-started from Table 6.
+    let max_nodes = 5_000u64;
+    let mut full_cert = None;
+    runner.bench("budgeted certify (full case i)", || {
+        let mut driver = BnbDriver::new(calib.clone(), full.clone());
+        driver.config = BnbConfig { max_nodes, prune: true };
+        driver.warm_start = Some(table6_case_i().to_vec());
+        let mut obj = CostObjective::new(&space, &calib);
+        let out = driver.certify(&space, &mut obj);
+        full_cert = Some(out.certification());
+        std::hint::black_box(out.best_action);
+    });
+    let full_ns = runner.results().last().unwrap().ns_per_iter.mean;
+    println!("{}", runner.report());
+
+    let sc = shrunk_cert.expect("shrunk certify ran");
+    let fc = full_cert.expect("full certify ran");
+    println!(
+        "shrunk: {} expanded / {} pruned / {} leaf evals (vs {:.0} brute-force), \
+         certify {} vs oracle {}",
+        sc.nodes_expanded,
+        sc.nodes_pruned,
+        sc.leaf_evals,
+        shrunk.cardinality(),
+        fmt_ns(certify_ns),
+        fmt_ns(oracle_ns)
+    );
+    println!(
+        "full:   {} expanded / {} pruned -> gap {:.4} in {}",
+        fc.nodes_expanded,
+        fc.nodes_pruned,
+        fc.optimality_gap,
+        fmt_ns(full_ns)
+    );
+
+    let mut json = String::from("{\n");
+    json.push_str(&format!("  \"root_bound_ns\": {root_ns:.0},\n"));
+    json.push_str(&format!("  \"deep_prefix_bound_ns\": {deep_ns:.0},\n"));
+    json.push_str(&format!(
+        "  \"shrunk\": {{\"points\": {:.0}, \"certify_ns\": {certify_ns:.0}, \
+         \"oracle_ns\": {oracle_ns:.0}, \"nodes_expanded\": {}, \"nodes_pruned\": {}, \
+         \"leaf_evals\": {}, \"optimality_gap\": {}}},\n",
+        shrunk.cardinality(),
+        sc.nodes_expanded,
+        sc.nodes_pruned,
+        sc.leaf_evals,
+        sc.optimality_gap,
+    ));
+    json.push_str(&format!(
+        "  \"full_budgeted\": {{\"max_nodes\": {max_nodes}, \"certify_ns\": {full_ns:.0}, \
+         \"nodes_expanded\": {}, \"nodes_pruned\": {}, \"optimality_gap\": {:.6}, \
+         \"complete\": {}}}\n}}\n",
+        fc.nodes_expanded,
+        fc.nodes_pruned,
+        fc.optimality_gap,
+        fc.complete,
+    ));
+    let path = report::write_text("BENCH_bnb.json", &json);
+    println!("wrote {}", path.display());
+}

@@ -1,0 +1,476 @@
+//! Admissible reward upper bounds for partially-assigned actions — the
+//! pruning rule behind the branch-and-bound driver
+//! ([`crate::opt::search::bnb`]).
+//!
+//! A *partial assignment* fixes the first `k` action heads and leaves
+//! the rest free over a [`HeadDomains`] restriction of the Table 1
+//! space. [`partial_upper_bound`] returns a value `U` with the hard
+//! guarantee
+//!
+//! ```text
+//! U >= reward(a)   for every completion a of the prefix
+//! ```
+//!
+//! at full float precision (not "up to epsilon"), which is what lets
+//! the driver prune subtrees and still certify its answer against an
+//! exhaustive oracle bit-for-bit.
+//!
+//! # How the bound is built
+//!
+//! eq. 17 is `r = αT − βC − γE` with `α, β, γ ≥ 0`, so an upper bound
+//! on the reward follows from an upper bound on the throughput term
+//! and lower bounds on the cost and energy terms, each taken over the
+//! free heads independently:
+//!
+//! * **Geometry heads (0–2) are enumerated, not bounded.** The eq. 1/2
+//!   geometry — and with it feasibility — depends only on the
+//!   architecture, chiplet-count and HBM-mask heads, so the bound is a
+//!   max over the (fixed ∪ free) product of those three domains. A
+//!   combo whose geometry is infeasible contributes exactly
+//!   `Calib::infeasible_reward`, the same constant every completion in
+//!   that subtree evaluates to.
+//! * **Throughput `T` (eqs. 3–5)** is non-decreasing in every
+//!   bandwidth head (link data rates and link counts enter `u_sys` as
+//!   products and the eq. 11 latency through a serialization term that
+//!   shrinks as `gbps·links` grows), so free bandwidth heads take
+//!   their domain maximum.
+//! * **Package cost `C` (eq. 16)** is non-decreasing in the link-count
+//!   heads (they scale `total_links`) and depends on the interconnect
+//!   heads only through the NRE tier term `µ2`, so free link-count
+//!   heads take their domain minimum and free interconnect heads take
+//!   the tier with the smallest `µ2`. Minimizing the two 2.5-D tiers
+//!   independently is sound even though eq. 16 takes their `max`:
+//!   `min_{a,b} max(f(a), g(b)) = max(min f, min g)`, achieved at the
+//!   independent argmins.
+//! * **Energy `E` (eq. 15)** depends on the free heads only through
+//!   the per-bit line energies, which couple an interconnect choice
+//!   with a trace length (the CoWoS and EMIB `e_bit` lines cross), so
+//!   each `(interconnect, trace)` pair is minimized over its joint
+//!   domain by direct enumeration — at most tens of points.
+//! * **The placement head (14, when present)** only moves the hop
+//!   statistics, so a free placement head takes the componentwise
+//!   minimum of its templates' [`HopStats`]: every use of a hop
+//!   statistic in eqs. 11/15/16 prefers smaller values (fewer hops →
+//!   less latency, less energy, fewer mesh edges → fewer links).
+//!
+//! Every extremal term is computed by *decoding a probe action and
+//! calling the same `cost::*` component functions the evaluator calls*
+//! — no re-derived formulas. IEEE arithmetic keeps the guarantee
+//! bitwise: each chain is a composition of correctly-rounded operations
+//! that are weakly monotone in the varied operand (multiplication by a
+//! non-negative constant, addition, division by a positive value,
+//! `min`/`max`), so feeding extremal inputs through the very same code
+//! path yields a true extremum of the outputs. In particular, at a
+//! fully-assigned prefix every domain is a singleton and the bound
+//! equals the exact reward (or exactly `infeasible_reward`), bit for
+//! bit.
+
+use crate::mesh::grid::{hop_stats, HopStats};
+use crate::model::space::{Action, DesignSpace, N_HEADS};
+use crate::place::Placement;
+
+use super::constants::Calib;
+use super::{bandwidth, energy, package_cost, ppac, throughput};
+
+/// Heads whose value feeds the eq. 1/2 geometry (and feasibility).
+const GEOMETRY_HEADS: usize = 3;
+/// Bandwidth heads: 2.5-D gbps/links, 3-D gbps/links, HBM gbps/links.
+const BW_HEADS: [usize; 6] = [4, 5, 8, 9, 11, 12];
+/// Link-count heads (the `total_links` multipliers in eq. 16).
+const LINK_HEADS: [usize; 3] = [5, 9, 12];
+/// Interconnect-choice heads: 2.5-D AI↔AI, 3-D bond, AI↔HBM.
+const IC_HEADS: [usize; 3] = [3, 7, 10];
+
+/// Per-head candidate value lists — the search space a branch-and-bound
+/// run (or a full-enumeration oracle) ranges over.
+///
+/// Each head holds a sorted, deduplicated, non-empty subset of
+/// `0..dim`; [`HeadDomains::full`] starts from the space's
+/// [`crate::model::space::ActionLayout`] (14 heads, or 15 with the
+/// placement head) and the `cap_*`/[`HeadDomains::restrict`] builders
+/// shrink it — the shrunk spaces the exhaustive oracles enumerate are
+/// expressed this way so driver and oracle share one definition.
+#[derive(Clone, Debug)]
+pub struct HeadDomains {
+    dims: Vec<usize>,
+    values: Vec<Vec<usize>>,
+}
+
+impl HeadDomains {
+    /// Every head at its full Table 1 cardinality (plus the placement
+    /// head when the space carries one).
+    pub fn full(space: &DesignSpace) -> HeadDomains {
+        let dims = space.layout().dims().to_vec();
+        let values = dims.iter().map(|&d| (0..d).collect()).collect();
+        HeadDomains { dims, values }
+    }
+
+    /// Keep only the first `cap` values of `head` (`cap >= 1`).
+    pub fn cap_head(mut self, head: usize, cap: usize) -> HeadDomains {
+        assert!(cap >= 1, "head {head}: a domain needs at least one value");
+        self.values[head].truncate(cap);
+        self
+    }
+
+    /// Keep only the first `cap` values of every head — the `certify
+    /// --cap` shrink.
+    pub fn cap_all(self, cap: usize) -> HeadDomains {
+        let n = self.n_heads();
+        (0..n).fold(self, |d, head| d.cap_head(head, cap))
+    }
+
+    /// Per-head caps (one entry per head, in head order).
+    pub fn capped(space: &DesignSpace, caps: &[usize]) -> HeadDomains {
+        let d = HeadDomains::full(space);
+        assert_eq!(
+            caps.len(),
+            d.n_heads(),
+            "one cap per head ({} heads)",
+            d.n_heads()
+        );
+        caps.iter()
+            .enumerate()
+            .fold(d, |d, (head, &cap)| d.cap_head(head, cap.max(1)))
+    }
+
+    /// Replace `head`'s domain with an explicit value set (sorted,
+    /// deduplicated; every value must be in range for the head).
+    pub fn restrict(mut self, head: usize, vals: &[usize]) -> HeadDomains {
+        assert!(!vals.is_empty(), "head {head}: a domain needs at least one value");
+        let mut v = vals.to_vec();
+        v.sort_unstable();
+        v.dedup();
+        let dim = self.dims[head];
+        assert!(
+            v.iter().all(|&x| x < dim),
+            "head {head}: values must be < {dim}"
+        );
+        self.values[head] = v;
+        self
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Candidate values of one head, ascending.
+    pub fn values(&self, head: usize) -> &[usize] {
+        &self.values[head]
+    }
+
+    /// Number of full assignments (`f64`: the unrestricted space is
+    /// ~2 × 10^17).
+    pub fn cardinality(&self) -> f64 {
+        self.values.iter().map(|v| v.len() as f64).product()
+    }
+
+    /// Lexicographically-first full assignment — the fallback incumbent
+    /// when a driver has neither warm start nor budget to reach a leaf.
+    pub fn first_action(&self) -> Action {
+        self.values.iter().map(|v| v[0]).collect()
+    }
+
+    /// Is `action` a completion this domain set can produce?
+    pub fn contains(&self, action: &[usize]) -> bool {
+        action.len() == self.n_heads()
+            && action
+                .iter()
+                .zip(&self.values)
+                .all(|(a, vals)| vals.contains(a))
+    }
+}
+
+/// The effective domain of `head` under a prefix: fixed heads are
+/// singletons (borrowed from the prefix), free heads borrow the domain.
+fn dom<'a>(domains: &'a HeadDomains, prefix: &'a [usize], head: usize) -> &'a [usize] {
+    if head < prefix.len() {
+        std::slice::from_ref(&prefix[head])
+    } else {
+        domains.values(head)
+    }
+}
+
+fn argmin_by_key(candidates: &[usize], mut key: impl FnMut(usize) -> f64) -> usize {
+    debug_assert!(!candidates.is_empty());
+    let mut best = candidates[0];
+    let mut best_key = key(best);
+    for &v in &candidates[1..] {
+        let k = key(v);
+        // Strict `<` keeps the first of equals — deterministic, and NaN
+        // (which the model never produces here) never replaces.
+        if k < best_key {
+            best = v;
+            best_key = k;
+        }
+    }
+    best
+}
+
+/// Minimize a coupled `(interconnect, trace)` pair over its joint
+/// domain. Returns the argmin pair; first-of-equals on ties.
+fn argmin_pair(
+    xs: &[usize],
+    ys: &[usize],
+    mut key: impl FnMut(usize, usize) -> f64,
+) -> (usize, usize) {
+    debug_assert!(!xs.is_empty() && !ys.is_empty());
+    let mut best = (xs[0], ys[0]);
+    let mut best_key = key(xs[0], ys[0]);
+    for &x in xs {
+        for &y in ys {
+            let k = key(x, y);
+            if k < best_key {
+                best = (x, y);
+                best_key = k;
+            }
+        }
+    }
+    best
+}
+
+/// Hop statistics no completion of the prefix can beat: exact for
+/// 14-head layouts (heads 0–2 determine them), componentwise-minimum
+/// over the reachable placement templates when a 15th head is in play.
+/// Every consumer of a [`HopStats`] field in eqs. 11/15/16 prefers
+/// smaller values, so the componentwise min is jointly optimistic.
+fn optimistic_stats(
+    space: &DesignSpace,
+    domains: &HeadDomains,
+    prefix: &[usize],
+    p: &crate::model::space::DesignPoint,
+) -> HopStats {
+    let has_placement_head = space.placement_head && domains.n_heads() > N_HEADS;
+    if !has_placement_head {
+        return hop_stats(p.n_footprints(), p.hbm_mask);
+    }
+    let locs = p.hbm_locs();
+    let mut acc: Option<HopStats> = None;
+    for &idx in dom(domains, prefix, N_HEADS) {
+        let s = Placement::template(p.n_footprints(), &locs, idx).hop_stats();
+        acc = Some(match acc {
+            None => s,
+            Some(m) => HopStats {
+                m: m.m.min(s.m),
+                n: m.n.min(s.n),
+                max_ai_hops: m.max_ai_hops.min(s.max_ai_hops),
+                mean_ai_hops: m.mean_ai_hops.min(s.mean_ai_hops),
+                max_hbm_hops: m.max_hbm_hops.min(s.max_hbm_hops),
+                mean_hbm_hops: m.mean_hbm_hops.min(s.mean_hbm_hops),
+                n_edges: m.n_edges.min(s.n_edges),
+            },
+        });
+    }
+    acc.expect("placement head domain is non-empty")
+}
+
+/// Upper bound for one (arch, chiplet-count, HBM-mask) combo: exact
+/// geometry, then term-wise extremal completions evaluated through the
+/// production component functions.
+fn combo_bound(
+    c: &Calib,
+    space: &DesignSpace,
+    domains: &HeadDomains,
+    prefix: &[usize],
+    h0: usize,
+    h1: usize,
+    h2: usize,
+) -> f64 {
+    let lo = |head: usize| dom(domains, prefix, head)[0];
+    let hi = |head: usize| *dom(domains, prefix, head).last().unwrap();
+
+    let mut base = vec![0usize; N_HEADS];
+    base[0] = h0;
+    base[1] = h1;
+    base[2] = h2;
+    for (head, slot) in base.iter_mut().enumerate().skip(GEOMETRY_HEADS) {
+        *slot = lo(head);
+    }
+
+    // Geometry and feasibility are exact per combo — heads 3+ never
+    // reach eq. 1/2.
+    let geo_point = space.decode(&base);
+    let geo = throughput::geometry(c, &geo_point);
+    if !geo.feasible {
+        return c.infeasible_reward;
+    }
+
+    let stats = optimistic_stats(space, domains, prefix, &geo_point);
+
+    // T upper bound: every bandwidth head at its domain max (fastest
+    // links, most of them) — maximizes u_sys and minimizes the eq. 11
+    // serialization latency simultaneously.
+    let mut at = base.clone();
+    for head in BW_HEADS {
+        at[head] = hi(head);
+    }
+    let pt = space.decode(&at);
+    let lat = throughput::latencies_from_stats(&pt, &stats);
+    let peak_chip = throughput::chip_peak_ops(c, &geo);
+    let u = bandwidth::u_sys(c, &pt, peak_chip);
+    let cycles = throughput::cycles_per_op(c, &lat);
+    let t_ub = ppac::tput_term(c, &pt, peak_chip, cycles, u);
+
+    // C lower bound: fewest links, cheapest NRE tiers.
+    let mut ac = base.clone();
+    for head in LINK_HEADS {
+        ac[head] = lo(head);
+    }
+    for head in IC_HEADS {
+        ac[head] = argmin_by_key(dom(domains, prefix, head), |v| {
+            let mut probe = base.clone();
+            probe[head] = v;
+            let p = space.decode(&probe);
+            let tier = match head {
+                3 => p.ai2ai_25d.props().cost_tier,
+                7 => p.ai2ai_3d.props().cost_tier,
+                _ => p.ai2hbm.props().cost_tier,
+            };
+            package_cost::mu2(c, tier)
+        });
+    }
+    let pc = space.decode(&ac);
+    let c_lb = package_cost::package_cost_from_stats(c, &pc, &stats);
+
+    // E lower bound: per-link (interconnect, trace) pairs minimized
+    // jointly — the CoWoS/EMIB e_bit lines cross, so neither head is
+    // separately monotone.
+    let mut ae = base.clone();
+    let e_bit_25d = |ic_head: usize, trace_head: usize, v_ic: usize, v_trace: usize| {
+        let mut probe = base.clone();
+        probe[ic_head] = v_ic;
+        probe[trace_head] = v_trace;
+        let p = space.decode(&probe);
+        if ic_head == 3 {
+            p.ai2ai_25d.e_bit_pj(p.ai2ai_25d_trace_mm)
+        } else {
+            p.ai2hbm.e_bit_pj(p.ai2hbm_trace_mm)
+        }
+    };
+    let (v3, v6) = argmin_pair(
+        dom(domains, prefix, 3),
+        dom(domains, prefix, 6),
+        |a, b| e_bit_25d(3, 6, a, b),
+    );
+    ae[3] = v3;
+    ae[6] = v6;
+    let (v10, v13) = argmin_pair(
+        dom(domains, prefix, 10),
+        dom(domains, prefix, 13),
+        |a, b| e_bit_25d(10, 13, a, b),
+    );
+    ae[10] = v10;
+    ae[13] = v13;
+    ae[7] = argmin_by_key(dom(domains, prefix, 7), |v| {
+        let mut probe = base.clone();
+        probe[7] = v;
+        // 3-D lines ignore the trace argument (constant e_bit_min);
+        // 0.08 mm matches the bond length `cost::energy` hard-codes.
+        space.decode(&probe).ai2ai_3d.e_bit_pj(0.08)
+    });
+    let pe = space.decode(&ae);
+    let e_comm = energy::e_comm_per_op_pj_from_stats(c, &pe, &stats);
+    let e_lb = energy::energy_per_task_mj(ppac::e_op_term(c, e_comm), c.ref_task_gmac);
+
+    ppac::reward_term(c, t_ub, c_lb, e_lb)
+}
+
+/// Admissible reward upper bound for every completion of `prefix`
+/// (heads `0..prefix.len()` fixed, the rest free over `domains`).
+///
+/// An empty prefix bounds the whole domain set (the root bound); a
+/// full prefix returns the exact reward of that action, bit for bit —
+/// including exactly `Calib::infeasible_reward` on infeasible
+/// geometry. Requires `alpha`, `beta`, `gamma >= 0` (the eq. 17 sign
+/// structure the term-wise bound relies on; the defaults satisfy it).
+pub fn partial_upper_bound(
+    c: &Calib,
+    space: &DesignSpace,
+    domains: &HeadDomains,
+    prefix: &[usize],
+) -> f64 {
+    assert!(prefix.len() <= domains.n_heads());
+    debug_assert!(
+        c.alpha >= 0.0 && c.beta >= 0.0 && c.gamma >= 0.0,
+        "the term-wise bound needs the eq. 17 weights non-negative"
+    );
+    let mut best = f64::NEG_INFINITY;
+    for &h0 in dom(domains, prefix, 0) {
+        for &h1 in dom(domains, prefix, 1) {
+            for &h2 in dom(domains, prefix, 2) {
+                let b = combo_bound(c, space, domains, prefix, h0, h1, h2);
+                if b > best {
+                    best = b;
+                }
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::evaluate_action;
+    use crate::util::Rng;
+
+    #[test]
+    fn full_domains_match_the_layout() {
+        let space = DesignSpace::case_i();
+        let d = HeadDomains::full(&space);
+        assert_eq!(d.n_heads(), N_HEADS);
+        assert_eq!(d.values(1).len(), 128);
+        assert_eq!(d.cardinality(), space.cardinality());
+
+        let with_place = space.with_placement_head();
+        let d15 = HeadDomains::full(&with_place);
+        assert_eq!(d15.n_heads(), N_HEADS + 1);
+    }
+
+    #[test]
+    fn builders_shrink_and_validate() {
+        let space = DesignSpace::case_i();
+        let d = HeadDomains::full(&space)
+            .cap_all(2)
+            .cap_head(0, 1)
+            .restrict(2, &[5, 1, 5]);
+        assert_eq!(d.values(0), &[0]);
+        assert_eq!(d.values(1), &[0, 1]);
+        assert_eq!(d.values(2), &[1, 5]);
+        assert!(d.contains(&d.first_action()));
+        assert!(!d.contains(&[2; N_HEADS]));
+    }
+
+    #[test]
+    fn full_prefix_bound_is_the_exact_reward_bitwise() {
+        let space = DesignSpace::case_i();
+        let c = Calib::default();
+        let domains = HeadDomains::full(&space);
+        let mut rng = Rng::new(7);
+        for _ in 0..64 {
+            let a: Vec<usize> = domains
+                .values
+                .iter()
+                .map(|v| v[rng.below(v.len() as u64) as usize])
+                .collect();
+            let bound = partial_upper_bound(&c, &space, &domains, &a);
+            let reward = evaluate_action(&c, &space, &a).reward;
+            assert_eq!(
+                bound.to_bits(),
+                reward.to_bits(),
+                "leaf bound must equal the exact reward for {a:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn infeasible_combo_bounds_at_the_penalty() {
+        let space = DesignSpace::case_i();
+        let mut c = Calib::default();
+        // Shrink the package until a many-HBM mask cannot fit.
+        c.pkg_area_mm2 = 60.0;
+        let domains = HeadDomains::full(&space);
+        let prefix = [0usize, 63, 62]; // 2.5D, 64 chiplets, six HBMs
+        let bound = partial_upper_bound(&c, &space, &domains, &prefix);
+        assert_eq!(bound.to_bits(), c.infeasible_reward.to_bits());
+    }
+}

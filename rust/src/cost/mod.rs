@@ -7,6 +7,7 @@
 //! repeated evaluations behind [`cache::EvalCache`].
 
 pub mod bandwidth;
+pub mod bounds;
 pub mod cache;
 pub mod constants;
 pub mod delta;
@@ -17,6 +18,7 @@ pub mod ppac;
 pub mod throughput;
 pub mod yield_model;
 
+pub use bounds::{partial_upper_bound, HeadDomains};
 pub use cache::EvalCache;
 pub use constants::{Calib, TechNode, CALIB_KEYS};
 pub use delta::DeltaEvaluator;

@@ -12,7 +12,9 @@ use crate::mesh::grid::{HopStats, MeshGrid};
 
 use super::constants::Calib;
 
-fn mu2(c: &Calib, tier: CostTier) -> f64 {
+/// Tier intercept lookup — `pub(crate)` so `cost::bounds` can argmin
+/// over interconnect tiers without re-deriving the tier → µ2 mapping.
+pub(crate) fn mu2(c: &Calib, tier: CostTier) -> f64 {
     c.pkg_mu2_tier[match tier {
         CostTier::Low => 0,
         CostTier::Medium => 1,

@@ -7,6 +7,8 @@
 //!   greedy     Greedy hill-climbing with random restarts (no artifacts).
 //!   portfolio  SA + GA + greedy per seed, exhaustive argmax (offline
 //!              Alg. 1 over the non-RL portfolio).
+//!   certify    Branch-and-bound with admissible reward bounds: portfolio
+//!              warm start, then a certified optimality gap.
 //!   sweep      Scenario sweep: optimize each scenario, emit per-scenario
 //!              CSVs + a cross-scenario Pareto frontier (offline).
 //!   place      Optimize the HBM attach placement of one design point;
@@ -23,12 +25,15 @@
 //! --alpha/--beta/--gamma, --config path.json,
 //! --scenario NAME (reconfigure any subcommand from a named scenario).
 //! Sweep flags: --scenarios all|name,name|list, --scenario-file x.toml,
-//! --out-dir DIR.
+//! --out-dir DIR. Certify flags: --nodes N (node budget), --cap K
+//! (shrink every head domain to its first K values; 0 = full),
+//! --cold (skip the warm start), --no-prune.
 
 use anyhow::{bail, Result};
 
 use chiplet_gym::config::RunConfig;
-use chiplet_gym::cost::{evaluate, Calib};
+use chiplet_gym::cost::cache::{EvalCache, DEFAULT_CACHE_CAP};
+use chiplet_gym::cost::{evaluate, Calib, DeltaEvaluator, HeadDomains};
 use chiplet_gym::gym::ChipletGymEnv;
 use chiplet_gym::model::space::{DesignSpace, N_HEADS};
 use chiplet_gym::opt::combined::CombinedConfig;
@@ -38,7 +43,9 @@ use chiplet_gym::opt::parallel::{
 use chiplet_gym::cost::evaluate_with_placement;
 use chiplet_gym::opt::combined::{Candidate, OptOutcome};
 use chiplet_gym::opt::sa::{simulated_annealing, SaConfig};
-use chiplet_gym::opt::search::{DriverConfig, PortfolioMember};
+use chiplet_gym::opt::search::{
+    BnbConfig, BnbDriver, CachedDeltaObjective, DriverConfig, PortfolioMember,
+};
 use chiplet_gym::place::{
     optimize_placement, refine_outcome, PlaceConfig, Placement, PlacementMode,
 };
@@ -370,6 +377,112 @@ fn cmd_portfolio(cfg: &RunConfig, which: &str) -> Result<()> {
     Ok(())
 }
 
+/// `certify`: branch-and-bound with the `cost::bounds` admissible
+/// upper bounds — reports an incumbent design *plus* a certificate
+/// (optimality gap, node counters). Warm-starts from the SA+GA+greedy
+/// portfolio unless `--cold`; `--cap K` shrinks every head domain to
+/// its first K values (small enough caps let the search exhaust the
+/// space and certify gap 0), `--nodes N` bounds expanded nodes,
+/// `--no-prune` disables bound pruning (for measuring what pruning
+/// saves — the certified reward is identical either way).
+fn cmd_certify(cfg: &RunConfig, args: &Args) -> Result<()> {
+    let space = cfg.space();
+    let cap: usize = args.get_parse("cap", 0);
+    let max_nodes: u64 = args.get_parse("nodes", 200_000);
+    let prune = !args.flag("no-prune");
+    let domains = if cap == 0 {
+        HeadDomains::full(&space)
+    } else {
+        HeadDomains::full(&space).cap_all(cap)
+    };
+    println!(
+        "certify: {:.3e} of {:.3e} design points, node budget {max_nodes}, pruning {}",
+        domains.cardinality(),
+        space.cardinality(),
+        if prune { "on" } else { "off" },
+    );
+
+    let mut warm_start = None;
+    if !args.flag("cold") {
+        check_ga_pop(cfg)?;
+        let members = portfolio_members(cfg, "portfolio");
+        let work_items: usize = members.iter().map(|m| m.seeds.len()).sum();
+        println!(
+            "warm start: SA+GA+greedy portfolio, {} instance(s), {:.0e}-eval budget each, \
+             {} worker threads (--jobs {})",
+            work_items,
+            cfg.sa.iterations as f64,
+            worker_count(cfg.jobs, work_items),
+            cfg.jobs
+        );
+        let warm = portfolio_optimize_par(space, &cfg.calib, &members, cfg.jobs);
+        if domains.contains(&warm.best.action) {
+            println!(
+                "  incumbent: {} seed {} @ {:.2}",
+                warm.best.source, warm.best.seed, warm.best.eval.reward
+            );
+            warm_start = Some(warm.best.action);
+        } else {
+            // A --cap'd domain set need not contain the portfolio best;
+            // an out-of-domain incumbent would poison the certificate.
+            println!("  portfolio best lies outside the --cap {cap} domains; starting cold");
+        }
+    }
+
+    let driver = BnbDriver {
+        calib: cfg.calib.clone(),
+        config: BnbConfig { max_nodes, prune },
+        domains,
+        warm_start,
+    };
+    let mut cache = EvalCache::new(DEFAULT_CACHE_CAP);
+    let mut delta = DeltaEvaluator::default();
+    let t0 = std::time::Instant::now();
+    let out = {
+        let mut obj = CachedDeltaObjective {
+            cache: &mut cache,
+            delta: &mut delta,
+            space: &space,
+            calib: &cfg.calib,
+        };
+        driver.certify(&space, &mut obj)
+    };
+    println!(
+        "branch-and-bound: {} node(s) expanded, {} pruned, {} leaf eval(s) \
+         ({:.0}% cache hits) in {:.2}s",
+        out.nodes_expanded,
+        out.nodes_pruned,
+        out.leaf_evals,
+        100.0 * cache.hits as f64 / (cache.hits + cache.misses).max(1) as f64,
+        t0.elapsed().as_secs_f64()
+    );
+    println!(
+        "root bound {:.4}, incumbent {:.4} -> certified optimality gap {:.4}{}",
+        out.root_bound,
+        out.best_eval.reward,
+        out.optimality_gap,
+        if out.complete {
+            " (space exhausted: the incumbent IS the optimum)"
+        } else {
+            " (node budget hit; raise --nodes to tighten)"
+        }
+    );
+
+    std::fs::create_dir_all(&cfg.out_dir)?;
+    let path = std::path::Path::new(&cfg.out_dir).join("certified.csv");
+    let cert = out.certification();
+    let cand = Candidate {
+        source: "bnb".into(),
+        seed: 0,
+        action: out.best_action.clone(),
+        eval: out.best_eval,
+    };
+    report::csv::write_certified_candidates_csv(&path, &space, &[cand], Some(&cert))?;
+    println!("wrote {}", path.display());
+    print_design(&space, &cfg.calib, &out.best_action);
+    Ok(())
+}
+
 /// Surface a bad `--n-envs` as a CLI error (train_ppo asserts the same
 /// invariant, but a user typo should not abort with a backtrace).
 fn check_n_envs(ppo: &PpoConfig) -> Result<()> {
@@ -687,6 +800,7 @@ fn main() -> Result<()> {
         Some("ga") => cmd_portfolio(&cfg, "ga")?,
         Some("greedy") => cmd_portfolio(&cfg, "greedy")?,
         Some("portfolio") => cmd_portfolio(&cfg, "portfolio")?,
+        Some("certify") => cmd_certify(&cfg, &args)?,
         Some("sweep") => cmd_sweep(&cfg, &args)?,
         Some("place") => cmd_place(&cfg, &args)?,
         Some("ppo") => cmd_ppo(&cfg)?,
@@ -699,7 +813,7 @@ fn main() -> Result<()> {
             }
             eprintln!(
                 "usage: chiplet-gym \
-                 <optimize|sa|ga|greedy|portfolio|sweep|place|ppo|eval|mlperf|info> \
+                 <optimize|sa|ga|greedy|portfolio|certify|sweep|place|ppo|eval|mlperf|info> \
                  [--case i|ii] [--seeds 0,1,..] [--sa-iters N (= eval budget)] \
                  [--ga-pop N] [--jobs N (0 = all cores)] \
                  [optimize: --with-portfolio (add GA+greedy members)] \
@@ -709,6 +823,7 @@ fn main() -> Result<()> {
                  [--scenario NAME] [--placement canonical|optimized|learned] \
                  [sweep: --scenarios all|list|a,b --scenario-file f.toml \
                  --out-dir DIR] \
+                 [certify: --nodes N --cap K (0 = full) --cold --no-prune] \
                  [place: --action a,b,.. --place-budget N \
                  --place-method greedy|sa|random]"
             );

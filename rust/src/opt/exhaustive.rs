@@ -10,8 +10,10 @@
 //! serves as a ground-truth oracle for the optimizer tests: on the
 //! projected subspace, SA and PPO should match the exhaustive optimum.
 
-use crate::cost::{evaluate, Calib, Evaluation};
-use crate::model::space::{DesignSpace, ACTION_DIMS, N_HEADS};
+use crate::cost::bounds::HeadDomains;
+use crate::cost::{evaluate, evaluate_action, Calib, Evaluation};
+use crate::model::space::{Action, DesignSpace, ACTION_DIMS, N_HEADS};
+use crate::util::stats::BestTracker;
 
 /// Link/data-rate provisioning rule used for the pinned heads.
 ///
@@ -71,8 +73,11 @@ pub fn exhaustive_projected(
     rule: PinRule,
 ) -> ExhaustiveOutcome {
     let base = pinned(rule);
-    let mut best_action = base;
-    let mut best_eval: Option<Evaluation> = None;
+    // Argmax through the shared BestTracker: one NaN policy repo-wide
+    // (a NaN reward can never become the incumbent) and first-of-equals
+    // tie-breaking, identical to the old strict-`>` acceptance on
+    // non-NaN rewards.
+    let mut tracker: BestTracker<[usize; N_HEADS]> = BestTracker::new();
     let mut count = 0usize;
 
     let mut a = base;
@@ -90,14 +95,7 @@ pub fn exhaustive_projected(
                             a[10] = ichbm;
                             let e = evaluate(calib, &space.decode(&a));
                             count += 1;
-                            if best_eval
-                                .as_ref()
-                                .map(|b| e.reward > b.reward)
-                                .unwrap_or(true)
-                            {
-                                best_eval = Some(e);
-                                best_action = a;
-                            }
+                            tracker.offer(e.reward, || (a, e));
                         }
                     }
                 }
@@ -105,11 +103,75 @@ pub fn exhaustive_projected(
         }
     }
 
+    let (_, (best_action, best_eval)) = tracker
+        .into_best()
+        .expect("non-empty sweep with at least one non-NaN reward");
     ExhaustiveOutcome {
         best_action,
-        best_eval: best_eval.expect("non-empty sweep"),
+        best_eval,
         points_evaluated: count,
         full_space_points: space.cardinality(),
+    }
+}
+
+/// Outcome of a [`HeadDomains`]-restricted full enumeration.
+#[derive(Clone, Debug)]
+pub struct ExhaustiveDomainsOutcome {
+    /// Runtime-sized action (14 heads, or 15 on a placement-head
+    /// space).
+    pub best_action: Action,
+    pub best_eval: Evaluation,
+    pub points_evaluated: usize,
+}
+
+/// Enumerate *every* assignment of a [`HeadDomains`] restriction — the
+/// ground-truth oracle the branch-and-bound driver is certified
+/// against (`tests/bnb.rs`). Odometer order with the last head fastest,
+/// i.e. lexicographic over head values; the argmax keeps the first of
+/// equals (shared [`BestTracker`] policy), which is exactly the order
+/// and tie-break a complete cold-start B&B run visits leaves in.
+///
+/// Actions evaluate through [`evaluate_action`], so 15-head domains
+/// score under the placement template their last head selects — same
+/// dispatch as every driver.
+pub fn exhaustive_domains(
+    space: &DesignSpace,
+    calib: &Calib,
+    domains: &HeadDomains,
+) -> ExhaustiveDomainsOutcome {
+    let n = domains.n_heads();
+    debug_assert_eq!(n, space.action_len(), "domains must match the space layout");
+    let mut idx = vec![0usize; n];
+    let mut action = domains.first_action();
+    let mut tracker: BestTracker<(Action, Evaluation)> = BestTracker::new();
+    let mut count = 0usize;
+    'sweep: loop {
+        let e = evaluate_action(calib, space, &action);
+        count += 1;
+        tracker.offer(e.reward, || (action.clone(), e));
+        // Odometer increment, last head fastest.
+        let mut head = n;
+        loop {
+            if head == 0 {
+                break 'sweep;
+            }
+            head -= 1;
+            idx[head] += 1;
+            if idx[head] < domains.values(head).len() {
+                action[head] = domains.values(head)[idx[head]];
+                break;
+            }
+            idx[head] = 0;
+            action[head] = domains.values(head)[0];
+        }
+    }
+    let (_, (best_action, best_eval)) = tracker
+        .into_best()
+        .expect("non-empty enumeration with at least one non-NaN reward");
+    ExhaustiveDomainsOutcome {
+        best_action,
+        best_eval,
+        points_evaluated: count,
     }
 }
 
@@ -138,6 +200,41 @@ mod tests {
         let out = exhaustive_projected(&space, &calib, PinRule::MaxBandwidth);
         let p = space.decode(&out.best_action);
         assert_eq!(p.arch, crate::model::space::ArchType::LogicOnLogic);
+    }
+
+    #[test]
+    fn exhaustive_domains_counts_and_matches_projection_shape() {
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let domains = HeadDomains::capped(&space, &[3, 4, 4, 2, 1, 1, 1, 1, 1, 1, 1, 1, 1, 1]);
+        let out = exhaustive_domains(&space, &calib, &domains);
+        assert_eq!(out.points_evaluated as f64, domains.cardinality());
+        assert_eq!(out.points_evaluated, 3 * 4 * 4 * 2);
+        assert_eq!(out.best_action.len(), N_HEADS);
+        assert!(domains.contains(&out.best_action));
+        assert!(out.best_eval.reward.is_finite());
+    }
+
+    #[test]
+    fn nan_rewards_never_become_the_exhaustive_incumbent() {
+        // Regression for the shared NaN policy: a NaN α poisons every
+        // feasible point's reward (α·T − …), while infeasible points
+        // still earn the finite penalty. The old strict-`>` acceptance
+        // kept the FIRST evaluation unconditionally — a NaN incumbent
+        // that no later finite reward could displace. BestTracker must
+        // reject every NaN and settle on the finite penalty instead.
+        let space = DesignSpace::case_i();
+        let calib = Calib {
+            alpha: f64::NAN,
+            // A 60 mm² package can't fit the six-HBM mask, so a finite
+            // penalty reward exists alongside the NaN-poisoned ones.
+            pkg_area_mm2: 60.0,
+            ..Calib::default()
+        };
+        let domains = HeadDomains::full(&space).cap_all(1).restrict(2, &[0, 62]);
+        let out = exhaustive_domains(&space, &calib, &domains);
+        assert!(!out.best_eval.reward.is_nan(), "NaN reward survived as the incumbent");
+        assert_eq!(out.best_eval.reward.to_bits(), calib.infeasible_reward.to_bits());
     }
 
     #[test]

@@ -13,7 +13,9 @@ pub use combined::{
     combined_optimize, portfolio_candidates, portfolio_optimize, reward_cmp, rl_seed_candidates,
     sa_only_optimize, select_best, Candidate, CombinedConfig, OptOutcome,
 };
-pub use exhaustive::{exhaustive_projected, ExhaustiveOutcome, PinRule};
+pub use exhaustive::{
+    exhaustive_domains, exhaustive_projected, ExhaustiveDomainsOutcome, ExhaustiveOutcome, PinRule,
+};
 pub use parallel::{
     combined_optimize_par, effective_jobs, parallel_map, portfolio_candidates_par,
     portfolio_optimize_par, sa_only_optimize_par, worker_count,
@@ -21,7 +23,8 @@ pub use parallel::{
 pub use random_search::{random_search, RandomConfig};
 pub use sa::{simulated_annealing, simulated_annealing_with, SaConfig, SaTrace};
 pub use search::{
-    BestTracker, CachedDeltaObjective, CachedObjective, CostObjective, DeltaObjective,
-    DriverConfig, FnObjective, GaConfig, GreedyConfig, Objective, PortfolioMember, PpoDriver,
-    SearchBudget, SearchDriver, SearchTrace, TraceRecorder,
+    BestTracker, BnbConfig, BnbDriver, BnbOutcome, CachedDeltaObjective, CachedObjective,
+    Certification, CostObjective, DeltaObjective, DriverConfig, FnObjective, GaConfig,
+    GreedyConfig, Objective, PortfolioMember, PpoDriver, SearchBudget, SearchDriver, SearchTrace,
+    TraceRecorder,
 };

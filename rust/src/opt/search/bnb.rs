@@ -1,0 +1,265 @@
+//! Branch-and-bound over the discrete action heads — the certified
+//! optimizer: instead of "best found", it reports "best, provably
+//! within `optimality_gap` of the true optimum of the searched
+//! domains".
+//!
+//! The driver runs a depth-first search over head assignments in head
+//! order (head 0 outermost), children in ascending value order — the
+//! same lexicographic order the exhaustive oracles enumerate, so a
+//! complete cold-start run returns the *bit-identical* first-of-equals
+//! argmax (`tests/bnb.rs` pins this). Each node carries the
+//! [`cost::bounds`](crate::cost::bounds) admissible upper bound for its
+//! subtree; a subtree whose bound cannot strictly beat the incumbent is
+//! pruned. Incumbent bookkeeping is the shared
+//! [`BestTracker`](crate::util::stats::BestTracker) (one NaN policy
+//! repo-wide), and leaf evaluations go through whatever [`Objective`]
+//! the caller passes — the scenario layer passes the
+//! `EvalCache`/`DeltaEvaluator` fast path.
+//!
+//! # The certificate
+//!
+//! * A run that exhausts the tree (`complete == true`) has proven no
+//!   completion beats the incumbent: `optimality_gap == 0.0` exactly.
+//!   Pruned subtrees need no frontier accounting — each was bounded at
+//!   or below the incumbent of its pruning moment, which the final
+//!   incumbent only improves on.
+//! * A run that hits `max_nodes` stops, folds the bounds of every
+//!   unexpanded subtree into `frontier_bound`, and reports
+//!   `optimality_gap = max(0, frontier_bound − incumbent)` — a true
+//!   bound on how far the incumbent can be from the optimum of the
+//!   searched domains, because every unvisited completion lives under
+//!   some frontier node.
+//!
+//! The bound side of the certificate is only as good as
+//! `partial_upper_bound`'s admissibility, which is what the
+//! property-based oracle tests in `tests/bnb.rs` exist to prove.
+
+use anyhow::Result;
+
+use crate::cost::bounds::{partial_upper_bound, HeadDomains};
+use crate::cost::{Calib, Evaluation};
+use crate::model::space::{Action, DesignSpace};
+use crate::util::stats::BestTracker;
+
+use super::driver::{SearchDriver, SearchTrace};
+use super::objective::Objective;
+
+/// Knobs of one branch-and-bound run.
+#[derive(Clone, Copy, Debug)]
+pub struct BnbConfig {
+    /// Node-visit budget (expanded nodes, leaves included). The full
+    /// Table 1 space is ~2 × 10^17 points, so unbudgeted runs are only
+    /// for shrunk domains; a budgeted run still certifies a gap.
+    pub max_nodes: u64,
+    /// Bound-based pruning. Disabling it turns the driver into plain
+    /// lexicographic enumeration — the pruning-soundness tests diff the
+    /// two incumbents.
+    pub prune: bool,
+}
+
+impl Default for BnbConfig {
+    fn default() -> BnbConfig {
+        BnbConfig {
+            max_nodes: u64::MAX,
+            prune: true,
+        }
+    }
+}
+
+/// Scenario-level summary of a certificate — what sweeps carry per
+/// scenario and CSVs serialize.
+#[derive(Clone, Copy, Debug)]
+pub struct Certification {
+    /// `max(0, frontier_bound − incumbent)`; exactly `0.0` when
+    /// `complete`.
+    pub optimality_gap: f64,
+    /// Admissible bound on the whole searched domain set.
+    pub root_bound: f64,
+    pub nodes_expanded: u64,
+    pub nodes_pruned: u64,
+    /// Leaf evaluations routed through the objective.
+    pub leaf_evals: u64,
+    /// Did the run exhaust the tree (vs hit `max_nodes`)?
+    pub complete: bool,
+}
+
+/// Everything one certified run produced.
+#[derive(Clone, Debug)]
+pub struct BnbOutcome {
+    pub best_action: Action,
+    pub best_eval: Evaluation,
+    pub root_bound: f64,
+    /// Max bound over subtrees left unexpanded at budget exhaustion
+    /// (`-inf` when the run completed).
+    pub frontier_bound: f64,
+    pub optimality_gap: f64,
+    pub nodes_expanded: u64,
+    pub nodes_pruned: u64,
+    pub leaf_evals: u64,
+    pub complete: bool,
+}
+
+impl BnbOutcome {
+    pub fn certification(&self) -> Certification {
+        Certification {
+            optimality_gap: self.optimality_gap,
+            root_bound: self.root_bound,
+            nodes_expanded: self.nodes_expanded,
+            nodes_pruned: self.nodes_pruned,
+            leaf_evals: self.leaf_evals,
+            complete: self.complete,
+        }
+    }
+}
+
+/// The branch-and-bound certifier. Unlike the stochastic drivers it
+/// carries its own [`Calib`]: bounds are computed driver-side, so the
+/// calibration must be the one the passed [`Objective`] evaluates
+/// under — the scenario layer builds both from the same `Scenario`.
+#[derive(Clone, Debug)]
+pub struct BnbDriver {
+    pub calib: Calib,
+    pub config: BnbConfig,
+    pub domains: HeadDomains,
+    /// Incumbent to start from (the portfolio best, typically). `None`
+    /// starts cold. A warm start only tightens pruning — the certified
+    /// reward is unchanged (pinned by `tests/bnb.rs`), though among
+    /// equal-reward optima the warm action wins (the tracker keeps the
+    /// earliest offer).
+    pub warm_start: Option<Action>,
+}
+
+struct Node {
+    prefix: Vec<usize>,
+    bound: f64,
+}
+
+impl BnbDriver {
+    pub fn new(calib: Calib, domains: HeadDomains) -> BnbDriver {
+        BnbDriver {
+            calib,
+            config: BnbConfig::default(),
+            domains,
+            warm_start: None,
+        }
+    }
+
+    /// Run the search to completion or budget exhaustion and certify
+    /// the result.
+    pub fn certify(&self, space: &DesignSpace, obj: &mut dyn Objective) -> BnbOutcome {
+        let n = self.domains.n_heads();
+        debug_assert_eq!(n, space.action_len(), "domains must match the space layout");
+
+        let mut tracker: BestTracker<(Action, Evaluation)> = BestTracker::new();
+        let mut leaf_evals: u64 = 0;
+        if let Some(w) = &self.warm_start {
+            let e = obj.evaluate(w);
+            leaf_evals += 1;
+            tracker.offer(e.reward, || (w.clone(), e));
+        }
+
+        let root_bound = partial_upper_bound(&self.calib, space, &self.domains, &[]);
+        let mut frontier_bound = f64::NEG_INFINITY;
+        let mut nodes_expanded: u64 = 0;
+        let mut nodes_pruned: u64 = 0;
+        let mut complete = true;
+
+        let mut stack = vec![Node {
+            prefix: Vec::new(),
+            bound: root_bound,
+        }];
+        while let Some(node) = stack.pop() {
+            if nodes_expanded >= self.config.max_nodes {
+                // Budget spent: this node and everything still stacked
+                // stay unexplored; their bounds are the certificate's
+                // frontier.
+                complete = false;
+                frontier_bound = frontier_bound.max(node.bound);
+                for rest in &stack {
+                    frontier_bound = frontier_bound.max(rest.bound);
+                }
+                break;
+            }
+            // Strictly-greater incumbents only (BestTracker policy), so
+            // a subtree bounded at exactly the incumbent reward cannot
+            // improve it — prune on `<=`.
+            if self.config.prune && !tracker.is_empty() && node.bound <= tracker.reward() {
+                nodes_pruned += 1;
+                continue;
+            }
+            nodes_expanded += 1;
+            if node.prefix.len() == n {
+                let e = obj.evaluate(&node.prefix);
+                leaf_evals += 1;
+                tracker.offer(e.reward, || (node.prefix.clone(), e));
+                continue;
+            }
+            let head = node.prefix.len();
+            // Push children in reverse so the smallest value pops first
+            // — keeps the visit order lexicographic, hence the oracle's
+            // first-of-equals tie-break.
+            for &v in self.domains.values(head).iter().rev() {
+                let mut prefix = node.prefix.clone();
+                prefix.push(v);
+                let bound = partial_upper_bound(&self.calib, space, &self.domains, &prefix);
+                stack.push(Node { prefix, bound });
+            }
+        }
+
+        if tracker.is_empty() {
+            // No warm start and a budget too small to reach any leaf
+            // (or every reward NaN, which the model never produces):
+            // fall back to the lexicographically-first action so the
+            // outcome always carries a concrete design.
+            let a = self.domains.first_action();
+            let e = obj.evaluate(&a);
+            leaf_evals += 1;
+            tracker.offer(e.reward, || (a.clone(), e));
+            if tracker.is_empty() {
+                frontier_bound = frontier_bound.max(root_bound);
+                tracker = BestTracker::new();
+                tracker.offer(f64::NEG_INFINITY, || (a, e));
+            }
+        }
+        let incumbent = tracker.reward();
+        let (_, (best_action, best_eval)) = tracker.into_best().expect("incumbent installed");
+        let optimality_gap = if complete {
+            0.0
+        } else {
+            (frontier_bound - incumbent).max(0.0)
+        };
+        BnbOutcome {
+            best_action,
+            best_eval,
+            root_bound,
+            frontier_bound,
+            optimality_gap,
+            nodes_expanded,
+            nodes_pruned,
+            leaf_evals,
+            complete,
+        }
+    }
+}
+
+impl SearchDriver for BnbDriver {
+    fn name(&self) -> &'static str {
+        "bnb"
+    }
+
+    fn search(
+        &self,
+        space: &DesignSpace,
+        obj: &mut dyn Objective,
+        _seed: u64,
+    ) -> Result<SearchTrace> {
+        let out = self.certify(space, obj);
+        Ok(SearchTrace {
+            best_action: out.best_action,
+            best_eval: out.best_eval,
+            history: vec![(out.nodes_expanded as usize, out.best_eval.reward)],
+            evaluations: out.leaf_evals as usize,
+            final_policy_action: None,
+        })
+    }
+}

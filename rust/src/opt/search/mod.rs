@@ -29,6 +29,7 @@
 //! test in `opt::sa`), and `opt::parallel`'s `--jobs N` fan-out stays
 //! bit-identical to sequential for every driver.
 
+pub mod bnb;
 pub mod driver;
 pub mod ga;
 pub mod greedy;
@@ -36,6 +37,7 @@ pub mod objective;
 pub mod rl;
 pub mod tracker;
 
+pub use bnb::{BnbConfig, BnbDriver, BnbOutcome, Certification};
 pub use driver::{DriverConfig, PortfolioMember, SearchDriver, SearchTrace};
 pub use ga::GaConfig;
 pub use greedy::GreedyConfig;

@@ -12,6 +12,7 @@ use anyhow::Result;
 
 use crate::model::space::DesignSpace;
 use crate::opt::combined::Candidate;
+use crate::opt::search::Certification;
 
 /// RFC-4180-quote one cell: cells containing a comma, double quote, CR
 /// or LF are wrapped in double quotes with embedded quotes doubled;
@@ -121,6 +122,71 @@ pub fn write_candidates_csv(
     w.flush()
 }
 
+/// [`write_candidates_csv`] plus the certification columns a
+/// branch-and-bound run stamps: certified optimality gap and node
+/// counters. They are run-level facts (one certificate per table), so
+/// the same three cells repeat on every row; without a certificate the
+/// cells are empty — column positions stay pinned either way (golden
+/// test below), so downstream consumers never shift.
+pub fn write_certified_candidates_csv(
+    path: &Path,
+    space: &DesignSpace,
+    candidates: &[Candidate],
+    cert: Option<&Certification>,
+) -> Result<()> {
+    let mut w = CsvWriter::create(
+        path,
+        &[
+            "source",
+            "seed",
+            "reward",
+            "feasible",
+            "throughput_tops",
+            "energy_mj_per_task",
+            "die_cost",
+            "pkg_cost",
+            "n_chiplets",
+            "action",
+            "optimality_gap",
+            "nodes_expanded",
+            "nodes_pruned",
+        ],
+    )?;
+    let (gap, expanded, pruned) = match cert {
+        Some(c) => (
+            format!("{}", c.optimality_gap),
+            c.nodes_expanded.to_string(),
+            c.nodes_pruned.to_string(),
+        ),
+        None => (String::new(), String::new(), String::new()),
+    };
+    for c in candidates {
+        let p = space.decode(&c.action);
+        let action = c
+            .action
+            .iter()
+            .map(|x| x.to_string())
+            .collect::<Vec<_>>()
+            .join(",");
+        w.row_str(&[
+            c.source.clone(),
+            c.seed.to_string(),
+            format!("{}", c.eval.reward),
+            c.eval.feasible.to_string(),
+            format!("{}", c.eval.throughput_tops),
+            format!("{}", c.eval.energy_mj_per_ref_task),
+            format!("{}", c.eval.die_cost),
+            format!("{}", c.eval.pkg_cost),
+            p.n_chiplets.to_string(),
+            action,
+            gap.clone(),
+            expanded.clone(),
+            pruned.clone(),
+        ])?;
+    }
+    w.flush()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -181,6 +247,52 @@ mod tests {
         assert!(text.contains("GA,1,"));
         // the 14-head action list lands in one RFC-4180-quoted cell
         assert!(text.contains("\"0,0,0"));
+    }
+
+    #[test]
+    fn certified_candidates_csv_golden_header_and_cells() {
+        use crate::cost::{evaluate, Calib};
+        use crate::model::space::N_HEADS;
+        let dir = std::env::temp_dir().join("chiplet_gym_csv_test5");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("certified.csv");
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let action = vec![0usize; N_HEADS];
+        let eval = evaluate(&calib, &space.decode(&action));
+        let cand = Candidate { source: "bnb".into(), seed: 0, action: action.clone(), eval };
+        let cands = vec![cand];
+        let cert = Certification {
+            optimality_gap: 1.5,
+            root_bound: 10.0,
+            nodes_expanded: 42,
+            nodes_pruned: 7,
+            leaf_evals: 5,
+            complete: false,
+        };
+
+        // Golden header — pinned so sweep consumers don't silently break.
+        write_certified_candidates_csv(&path, &space, &cands, Some(&cert)).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines = text.lines();
+        assert_eq!(
+            lines.next().unwrap(),
+            "source,seed,reward,feasible,throughput_tops,energy_mj_per_task,\
+             die_cost,pkg_cost,n_chiplets,action,optimality_gap,nodes_expanded,nodes_pruned"
+        );
+        let row = lines.next().unwrap();
+        assert!(row.ends_with(",1.5,42,7"), "{row}");
+        // RFC-4180 round-trip: the action cell is the only quoted one,
+        // and un-quoting it recovers the raw head list.
+        let raw = action.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",");
+        let quoted = format!("\"{raw}\"");
+        assert!(row.contains(&quoted), "{row}");
+
+        // Without a certificate the columns stay, cells go empty.
+        write_certified_candidates_csv(&path, &space, &cands, None).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let row = text.lines().nth(1).unwrap();
+        assert!(row.ends_with(",,,"), "{row}");
     }
 
     #[test]

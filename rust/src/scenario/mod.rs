@@ -26,7 +26,7 @@
 //! tech_node = "7nm"             # "14nm" | "7nm" | "5nm"
 //! chiplet_cap = 64              # 64 (case i) | 128 (case ii)
 //! packaging = "full-3d"         # | "interposer-2.5d" | "organic-substrate"
-//! optimizer = "sa"              # | "ga" | "greedy" | "random" | "portfolio" | "ppo"
+//! optimizer = "sa"              # | "ga" | "greedy" | "random" | "portfolio" | "ppo" | "bnb"
 //! placement = "canonical"       # | "optimized" | "learned"
 //! sa_iterations = 200000        # SA iterations = the evaluation budget
 //! sa_seeds = [0, 1, 2, 3]
@@ -135,6 +135,12 @@ pub enum OptimizerChoice {
     /// The scenario's `sa_iterations` is reinterpreted as the PPO
     /// total-timestep budget so every optimizer shares one budget knob.
     Ppo,
+    /// Certified search: the SA + GA + greedy portfolio runs first,
+    /// then a branch-and-bound stage (`opt::search::bnb`) warm-starts
+    /// from its incumbent and reports a certified optimality gap. The
+    /// scenario's `sa_iterations` is reinterpreted as the B&B
+    /// node-visit budget (same one-budget-knob convention as `ppo`).
+    Bnb,
 }
 
 impl OptimizerChoice {
@@ -146,6 +152,7 @@ impl OptimizerChoice {
             OptimizerChoice::Random => "random",
             OptimizerChoice::Portfolio => "portfolio",
             OptimizerChoice::Ppo => "ppo",
+            OptimizerChoice::Bnb => "bnb",
         }
     }
 
@@ -158,6 +165,7 @@ impl OptimizerChoice {
             "random" => Some(OptimizerChoice::Random),
             "portfolio" => Some(OptimizerChoice::Portfolio),
             "ppo" => Some(OptimizerChoice::Ppo),
+            "bnb" => Some(OptimizerChoice::Bnb),
             _ => None,
         }
     }
@@ -329,6 +337,10 @@ impl Scenario {
             // loop, not an objective walk); the sweep engine runs it as
             // a separate per-seed stage — see `Scenario::rl_seeds`.
             OptimizerChoice::Ppo => vec![],
+            // B&B runs the full portfolio first (its incumbent is the
+            // warm start), then certifies in a separate sweep stage —
+            // see `Scenario::bnb_nodes`.
+            OptimizerChoice::Bnb => vec![sa, ga, greedy],
         };
         drivers
             .into_iter()
@@ -345,6 +357,18 @@ impl Scenario {
         match self.optimizer {
             OptimizerChoice::Ppo => budget.sa_seeds.clone(),
             _ => Vec::new(),
+        }
+    }
+
+    /// The branch-and-bound node budget when this scenario certifies
+    /// (`optimizer = "bnb"`): the shared `sa_iterations` knob,
+    /// reinterpreted as a node-visit budget. `None` for every other
+    /// optimizer — the sweep engine gates its certification stage on
+    /// this.
+    pub fn bnb_nodes(&self, budget: &OptBudget) -> Option<u64> {
+        match self.optimizer {
+            OptimizerChoice::Bnb => Some(budget.sa_iterations as u64),
+            _ => None,
         }
     }
 
@@ -421,7 +445,7 @@ impl Scenario {
             s.optimizer = OptimizerChoice::parse(o).ok_or_else(|| {
                 anyhow!(
                     "scenario {:?}: unknown optimizer {o:?} \
-                     (expected sa|ga|greedy|random|portfolio)",
+                     (expected sa|ga|greedy|random|portfolio|ppo|bnb)",
                     s.name
                 )
             })?;
@@ -602,6 +626,7 @@ mod tests {
             OptimizerChoice::Random,
             OptimizerChoice::Portfolio,
             OptimizerChoice::Ppo,
+            OptimizerChoice::Bnb,
         ] {
             assert_eq!(OptimizerChoice::parse(c.name()), Some(c));
         }
@@ -647,6 +672,24 @@ mod tests {
         assert_eq!(back.optimizer, OptimizerChoice::Ppo);
         let ok = Json::parse(r#"{"name": "x", "optimizer": "ppo"}"#).unwrap();
         assert_eq!(Scenario::from_json(&ok).unwrap().optimizer, OptimizerChoice::Ppo);
+    }
+
+    #[test]
+    fn bnb_choice_expands_to_portfolio_members_plus_certification_stage() {
+        let mut s = Scenario::baseline();
+        let budget = OptBudget { sa_iterations: 4_096, sa_seeds: vec![0, 1] };
+        assert!(s.bnb_nodes(&budget).is_none(), "non-bnb scenarios never certify");
+        s.optimizer = OptimizerChoice::Bnb;
+        let members = s.members(&budget);
+        let names: Vec<&str> = members.iter().map(|m| m.driver.name()).collect();
+        assert_eq!(names, vec!["SA", "GA", "greedy"], "warm start = portfolio incumbent");
+        assert_eq!(s.bnb_nodes(&budget), Some(4_096), "one budget knob across optimizers");
+        assert!(s.rl_seeds(&budget).is_empty(), "bnb has no RL stage");
+        // round-trips through the file forms
+        let back = Scenario::from_toml_str(&s.to_toml_string()).unwrap();
+        assert_eq!(back.optimizer, OptimizerChoice::Bnb);
+        let ok = Json::parse(r#"{"name": "x", "optimizer": "bnb"}"#).unwrap();
+        assert_eq!(Scenario::from_json(&ok).unwrap().optimizer, OptimizerChoice::Bnb);
     }
 
     #[test]

@@ -117,6 +117,20 @@ pub fn builtin() -> Vec<Scenario> {
             s.budget.sa_seeds = (0..6).collect();
         },
     ));
+    v.push(variant(
+        "certify-case-i",
+        "Paper case (i) certified: portfolio warm start, then branch-and-bound",
+        |s| {
+            s.optimizer = OptimizerChoice::Bnb;
+            // sa_iterations doubles as the B&B node budget (and sets the
+            // per-driver warm-start budget); small enough that `sweep
+            // --scenarios all` stays interactive — the full space is not
+            // exhausted, so this reports a finite certified gap rather
+            // than gap 0.
+            s.budget.sa_iterations = 20_000;
+            s.budget.sa_seeds = vec![0, 1];
+        },
+    ));
     v
 }
 
@@ -200,5 +214,9 @@ mod tests {
         assert_eq!(learned.optimizer, OptimizerChoice::Ppo);
         assert!(learned.space().placement_head);
         assert!(!learned.rl_seeds(&learned.budget).is_empty());
+        let certified = find("certify-case-i").unwrap();
+        assert_eq!(certified.optimizer, OptimizerChoice::Bnb);
+        assert_eq!(certified.bnb_nodes(&certified.budget), Some(20_000));
+        assert!(!certified.members(&certified.budget).is_empty(), "portfolio warm start");
     }
 }

@@ -18,7 +18,11 @@
 //! random / the full portfolio, all budget-matched to `sa_iterations` —
 //! or `"ppo"`, which trains one native-backend PPO agent per seed
 //! (`sa_iterations` reinterpreted as the total-timestep budget; the
-//! only driver that can emit the learned-placement action head).
+//! only driver that can emit the learned-placement action head) — or
+//! `"bnb"`, which runs the portfolio and then certifies its incumbent
+//! with a branch-and-bound stage (`sa_iterations` reinterpreted as the
+//! node budget), stamping `optimality_gap`/`nodes_expanded`/
+//! `nodes_pruned` columns on the scenario's CSV rows.
 //!
 //! Outputs, via `report::csv` under the sweep's output directory:
 //! * `scenario_<name>.csv` — every per-seed candidate with its metrics;
@@ -32,12 +36,12 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::cost::cache::{EvalCache, DEFAULT_CACHE_CAP};
-use crate::cost::{Calib, DeltaEvaluator};
+use crate::cost::{Calib, DeltaEvaluator, HeadDomains};
 use crate::mesh::grid::hop_stats;
 use crate::model::space::DesignSpace;
 use crate::opt::combined::{rl_seed_candidates, select_best, Candidate, OptOutcome};
 use crate::opt::parallel::{parallel_map, portfolio_candidates_par};
-use crate::opt::search::{CachedDeltaObjective, PpoDriver};
+use crate::opt::search::{BnbConfig, BnbDriver, CachedDeltaObjective, Certification, PpoDriver};
 use crate::place::{refine_outcome, PlacementSummary};
 use crate::report::CsvWriter;
 
@@ -101,6 +105,10 @@ pub struct ScenarioResult {
     /// which runs uncached).
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// The branch-and-bound certificate: `Some` exactly when the
+    /// scenario's `optimizer = "bnb"` (its certification stage ran),
+    /// `None` for every other optimizer.
+    pub certification: Option<Certification>,
     pub wall_secs: f64,
 }
 
@@ -156,7 +164,7 @@ pub fn run_scenario(
     };
     let work_items: usize = members.iter().map(|m| m.seeds.len()).sum();
     let t0 = Instant::now();
-    let (mut candidates, cache_hits, cache_misses) = if jobs != 1 && work_items > 1 {
+    let (mut candidates, mut cache_hits, mut cache_misses) = if jobs != 1 && work_items > 1 {
         (portfolio_candidates_par(&space, &calib, &members, jobs), 0, 0)
     } else {
         let mut cache = EvalCache::new(DEFAULT_CACHE_CAP);
@@ -215,6 +223,45 @@ pub fn run_scenario(
             candidates.extend(seed_cands?);
         }
     }
+    // The certification stage (`optimizer = "bnb"`): branch-and-bound
+    // over the scenario's full head domains, warm-started from the best
+    // candidate so far (the portfolio incumbent), leaf evaluations
+    // through the same cache/delta fast path the sequential member loop
+    // uses. It runs sequentially after any fan-out and is deterministic
+    // in (space, calib, warm start), so `--jobs N` bit-identity carries
+    // over. The certificate describes the canonical-placement reward
+    // the driver searched; the placement post-pass below (off for the
+    // built-in bnb scenarios) can only re-score candidates upward.
+    let mut certification = None;
+    if let Some(max_nodes) = s.bnb_nodes(&budget) {
+        let warm = select_best(&candidates).map(|c| c.action.clone());
+        let driver = BnbDriver {
+            calib: calib.clone(),
+            config: BnbConfig { max_nodes, prune: true },
+            domains: HeadDomains::full(&space),
+            warm_start: warm,
+        };
+        let mut cache = EvalCache::new(DEFAULT_CACHE_CAP);
+        let mut delta = DeltaEvaluator::default();
+        let out = {
+            let mut obj = CachedDeltaObjective {
+                cache: &mut cache,
+                delta: &mut delta,
+                space: &space,
+                calib: &calib,
+            };
+            driver.certify(&space, &mut obj)
+        };
+        cache_hits += cache.hits;
+        cache_misses += cache.misses;
+        certification = Some(out.certification());
+        candidates.push(Candidate {
+            source: "bnb".into(),
+            seed: 0,
+            action: out.best_action,
+            eval: out.best_eval,
+        });
+    }
     let best = select_best(&candidates)
         .with_context(|| format!("scenario {:?} produced no candidates", s.name))?
         .clone();
@@ -226,6 +273,7 @@ pub fn run_scenario(
         placements,
         cache_hits,
         cache_misses,
+        certification,
         wall_secs: t0.elapsed().as_secs_f64(),
     })
 }
@@ -349,8 +397,14 @@ fn write_scenario_csv(dir: &std::path::Path, r: &ScenarioResult) -> Result<()> {
             "placement",
             "max_hbm_hops",
             "hbm_attach",
+            "optimality_gap",
+            "nodes_expanded",
+            "nodes_pruned",
         ],
     )?;
+    // Certification columns are scenario-level facts (one B&B stage per
+    // scenario), repeated on every row; empty under other optimizers.
+    let (gap, expanded, pruned) = certification_cells(r.certification.as_ref());
     let space = r.scenario.space();
     for (c, pl) in r.outcome.candidates.iter().zip(r.placements.iter()) {
         let p = space.decode(&c.action);
@@ -376,9 +430,25 @@ fn write_scenario_csv(dir: &std::path::Path, r: &ScenarioResult) -> Result<()> {
             r.scenario.placement.name().to_string(),
             max_hbm.to_string(),
             attach,
+            gap.clone(),
+            expanded.clone(),
+            pruned.clone(),
         ])?;
     }
     w.flush()
+}
+
+/// The three certification cells of a result: full-precision gap plus
+/// node counters, or empty cells when no certification stage ran.
+fn certification_cells(cert: Option<&Certification>) -> (String, String, String) {
+    match cert {
+        Some(c) => (
+            format!("{}", c.optimality_gap),
+            c.nodes_expanded.to_string(),
+            c.nodes_pruned.to_string(),
+        ),
+        None => (String::new(), String::new(), String::new()),
+    }
 }
 
 fn write_best_csv(dir: &std::path::Path, results: &[ScenarioResult]) -> Result<()> {
@@ -402,11 +472,15 @@ fn write_best_csv(dir: &std::path::Path, results: &[ScenarioResult]) -> Result<(
             "cache_hit_rate",
             "wall_secs",
             "action",
+            "optimality_gap",
+            "nodes_expanded",
+            "nodes_pruned",
         ],
     )?;
     for r in results {
         let s = &r.scenario;
         let b = &r.outcome.best;
+        let (gap, expanded, pruned) = certification_cells(r.certification.as_ref());
         w.row_str(&[
             s.name.clone(),
             s.description.clone(),
@@ -425,6 +499,9 @@ fn write_best_csv(dir: &std::path::Path, results: &[ScenarioResult]) -> Result<(
             format!("{:.4}", r.cache_hit_rate()),
             format!("{:.2}", r.wall_secs),
             action_str(&b.action),
+            gap,
+            expanded,
+            pruned,
         ])?;
     }
     w.flush()

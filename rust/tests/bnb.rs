@@ -1,0 +1,289 @@
+//! Certified-optimality tests: the branch-and-bound driver proven
+//! against exhaustive oracles, and its admissible bounds proven against
+//! random completions.
+//!
+//! The contract under test (`opt::search::bnb` + `cost::bounds`):
+//!
+//! * on a shrunk space a complete cold run returns the *bit-identical*
+//!   first-of-equals argmax the exhaustive oracle enumerates, with an
+//!   optimality gap of exactly `0.0`;
+//! * `partial_upper_bound` never underestimates any completion's
+//!   reward, including the infeasible-penalty leaves;
+//! * pruning and warm starts change node counts, never the certified
+//!   reward;
+//! * on the full case (i) space a budgeted run still reports a finite
+//!   certified gap, with real pruning;
+//! * the `optimizer = "bnb"` scenario path lands the certificate in
+//!   the sweep CSV columns.
+
+use chiplet_gym::cost::cache::{EvalCache, DEFAULT_CACHE_CAP};
+use chiplet_gym::cost::{evaluate_action, partial_upper_bound, Calib, DeltaEvaluator, HeadDomains};
+use chiplet_gym::model::space::paper_points::table6_case_i;
+use chiplet_gym::model::space::{DesignSpace, N_HEADS};
+use chiplet_gym::opt::exhaustive::exhaustive_domains;
+use chiplet_gym::opt::search::{
+    BnbConfig, BnbDriver, BnbOutcome, CachedDeltaObjective, CostObjective,
+};
+use chiplet_gym::scenario::sweep::{run_sweep, SweepConfig};
+use chiplet_gym::scenario::{OptimizerChoice, Scenario};
+use chiplet_gym::util::Rng;
+
+/// ~49K-point restriction of the 14-head case (i) space: every head
+/// domain shrunk but none collapsed (except the final trace head), so
+/// the oracle enumeration stays well under 50K points while every
+/// bound term still has something to range over.
+fn shrunk_domains_14(space: &DesignSpace) -> HeadDomains {
+    HeadDomains::capped(space, &[3, 4, 4, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2, 1])
+}
+
+fn certify(space: &DesignSpace, calib: &Calib, driver: &BnbDriver) -> BnbOutcome {
+    let mut obj = CostObjective::new(space, calib);
+    driver.certify(space, &mut obj)
+}
+
+#[test]
+fn cold_bnb_is_bit_identical_to_the_exhaustive_oracle() {
+    let space = DesignSpace::case_i();
+    let calib = Calib::default();
+    let domains = shrunk_domains_14(&space);
+    assert!(domains.cardinality() <= 50_000.0, "oracle space must stay enumerable");
+
+    let oracle = exhaustive_domains(&space, &calib, &domains);
+    let driver = BnbDriver::new(calib.clone(), domains.clone());
+    let out = certify(&space, &calib, &driver);
+
+    assert!(out.complete, "an unbudgeted run must exhaust the tree");
+    assert_eq!(out.best_action, oracle.best_action, "argmax must match the oracle exactly");
+    assert_eq!(
+        out.best_eval.reward.to_bits(),
+        oracle.best_eval.reward.to_bits(),
+        "certified reward must be bitwise the oracle's"
+    );
+    assert_eq!(out.optimality_gap.to_bits(), 0.0f64.to_bits(), "complete runs certify gap 0");
+    assert!(
+        out.leaf_evals <= oracle.points_evaluated as u64,
+        "pruning must not evaluate more leaves than enumeration ({} vs {})",
+        out.leaf_evals,
+        oracle.points_evaluated
+    );
+}
+
+#[test]
+fn cold_bnb_matches_the_oracle_on_the_placement_head_space() {
+    let space = DesignSpace::case_i().with_placement_head();
+    let calib = Calib::default();
+    // 24 576 points over 15 heads, with the full 4-template placement
+    // head free — the bound's componentwise-min hop statistics are load
+    // bearing here.
+    let domains = HeadDomains::capped(&space, &[2, 3, 4, 2, 2, 2, 2, 1, 1, 2, 2, 2, 2, 1, 4]);
+    assert!(domains.cardinality() <= 50_000.0);
+
+    let oracle = exhaustive_domains(&space, &calib, &domains);
+    let driver = BnbDriver::new(calib.clone(), domains.clone());
+    let out = certify(&space, &calib, &driver);
+
+    assert!(out.complete);
+    assert_eq!(out.best_action.len(), N_HEADS + 1);
+    assert_eq!(out.best_action, oracle.best_action);
+    assert_eq!(out.best_eval.reward.to_bits(), oracle.best_eval.reward.to_bits());
+    assert_eq!(out.optimality_gap.to_bits(), 0.0f64.to_bits());
+}
+
+#[test]
+fn the_cache_delta_fast_path_changes_nothing() {
+    let space = DesignSpace::case_i();
+    let calib = Calib::default();
+    let domains = HeadDomains::capped(&space, &[3, 4, 4, 2, 1, 2, 2, 1, 1, 2, 2, 2, 1, 1]);
+    let driver = BnbDriver::new(calib.clone(), domains);
+
+    let plain = certify(&space, &calib, &driver);
+    let mut cache = EvalCache::new(DEFAULT_CACHE_CAP);
+    let mut delta = DeltaEvaluator::default();
+    let cached = {
+        let mut obj = CachedDeltaObjective {
+            cache: &mut cache,
+            delta: &mut delta,
+            space: &space,
+            calib: &calib,
+        };
+        driver.certify(&space, &mut obj)
+    };
+    assert_eq!(plain.best_action, cached.best_action);
+    assert_eq!(plain.best_eval.reward.to_bits(), cached.best_eval.reward.to_bits());
+    assert_eq!(plain.nodes_expanded, cached.nodes_expanded);
+    assert_eq!(plain.nodes_pruned, cached.nodes_pruned);
+    assert!(cache.misses > 0, "leaves must route through the cache");
+}
+
+/// Sample one value of `head` from its domain.
+fn pick(rng: &mut Rng, domains: &HeadDomains, head: usize) -> usize {
+    let vals = domains.values(head);
+    vals[rng.below(vals.len() as u64) as usize]
+}
+
+/// Seed-pinned property test: for random prefixes of random lengths,
+/// the bound dominates the reward of many random completions — on a
+/// calibration tightened so infeasible-penalty leaves occur.
+fn assert_bounds_admissible(space: &DesignSpace, domains: &HeadDomains, seed: u64) {
+    // A 60 mm² package makes the 3-HBM masks infeasible while 1-HBM
+    // masks stay feasible, so completions exercise both reward regimes.
+    let calib = Calib { pkg_area_mm2: 60.0, ..Calib::default() };
+    let n = domains.n_heads();
+    let mut rng = Rng::new(seed);
+    let mut infeasible_seen = 0usize;
+    for _ in 0..40 {
+        let prefix_len = rng.below(n as u64 + 1) as usize;
+        let prefix: Vec<usize> = (0..prefix_len).map(|h| pick(&mut rng, domains, h)).collect();
+        let bound = partial_upper_bound(&calib, space, domains, &prefix);
+        for _ in 0..50 {
+            let mut a = prefix.clone();
+            for h in prefix_len..n {
+                a.push(pick(&mut rng, domains, h));
+            }
+            let e = evaluate_action(&calib, space, &a);
+            if !e.feasible {
+                infeasible_seen += 1;
+            }
+            assert!(
+                bound >= e.reward,
+                "inadmissible bound {bound} < reward {} for prefix {prefix:?}, \
+                 completion {a:?}",
+                e.reward
+            );
+        }
+    }
+    assert!(infeasible_seen > 0, "the property must also cover penalty leaves");
+}
+
+#[test]
+fn partial_bounds_dominate_random_completions_14_heads() {
+    let space = DesignSpace::case_i();
+    let domains = HeadDomains::capped(&space, &[3, 8, 8, 2, 3, 3, 2, 2, 3, 3, 2, 3, 3, 2]);
+    assert_bounds_admissible(&space, &domains, 0x5eed);
+}
+
+#[test]
+fn partial_bounds_dominate_random_completions_15_heads() {
+    let space = DesignSpace::case_i().with_placement_head();
+    let domains = HeadDomains::capped(&space, &[3, 6, 8, 2, 3, 3, 2, 2, 2, 2, 2, 2, 2, 2, 4]);
+    assert_bounds_admissible(&space, &domains, 0xb0b);
+}
+
+#[test]
+fn pruning_changes_node_counts_but_never_the_certified_optimum() {
+    let space = DesignSpace::case_i();
+    let calib = Calib::default();
+    let domains = HeadDomains::capped(&space, &[3, 4, 4, 2, 2, 2, 2, 1, 1, 2, 2, 2, 2, 1]);
+
+    let mut driver = BnbDriver::new(calib.clone(), domains);
+    driver.config = BnbConfig { max_nodes: u64::MAX, prune: false };
+    let plain = certify(&space, &calib, &driver);
+    driver.config.prune = true;
+    let pruned = certify(&space, &calib, &driver);
+
+    assert!(plain.complete && pruned.complete);
+    assert_eq!(plain.nodes_pruned, 0);
+    assert!(pruned.nodes_pruned > 0, "the bound must actually cut subtrees");
+    assert!(pruned.nodes_expanded < plain.nodes_expanded);
+    assert_eq!(plain.best_action, pruned.best_action);
+    assert_eq!(plain.best_eval.reward.to_bits(), pruned.best_eval.reward.to_bits());
+    assert_eq!(plain.optimality_gap.to_bits(), 0.0f64.to_bits());
+    assert_eq!(pruned.optimality_gap.to_bits(), 0.0f64.to_bits());
+}
+
+#[test]
+fn warm_starts_certify_the_same_reward_as_cold() {
+    let space = DesignSpace::case_i();
+    let calib = Calib::default();
+    let domains = HeadDomains::capped(&space, &[3, 4, 4, 2, 2, 2, 2, 1, 1, 2, 2, 2, 2, 1]);
+
+    let mut driver = BnbDriver::new(calib.clone(), domains.clone());
+    let cold = certify(&space, &calib, &driver);
+    assert!(cold.complete);
+
+    // A mediocre warm start (the lexicographically-first point) and an
+    // optimal one (the cold run's own argmax): neither may change the
+    // certified reward, and the optimal one can only shrink the tree.
+    driver.warm_start = Some(domains.first_action());
+    let warm_mediocre = certify(&space, &calib, &driver);
+    driver.warm_start = Some(cold.best_action.clone());
+    let warm_optimal = certify(&space, &calib, &driver);
+
+    for out in [&warm_mediocre, &warm_optimal] {
+        assert!(out.complete);
+        assert_eq!(out.best_eval.reward.to_bits(), cold.best_eval.reward.to_bits());
+        assert_eq!(out.optimality_gap.to_bits(), 0.0f64.to_bits());
+    }
+    assert!(warm_optimal.nodes_expanded <= cold.nodes_expanded);
+}
+
+#[test]
+fn budgeted_run_on_the_full_case_i_space_certifies_a_finite_gap() {
+    let space = DesignSpace::case_i();
+    let calib = Calib::default();
+    let max_nodes = 300;
+    let mut driver = BnbDriver::new(calib.clone(), HeadDomains::full(&space));
+    driver.config = BnbConfig { max_nodes, prune: true };
+    driver.warm_start = Some(table6_case_i().to_vec());
+    let out = certify(&space, &calib, &driver);
+
+    assert!(!out.complete, "2e17 points cannot be exhausted in {max_nodes} nodes");
+    assert!(out.nodes_expanded <= max_nodes);
+    assert!(out.nodes_pruned > 0, "the warm incumbent must cut the early low-reward subtrees");
+    assert!(out.optimality_gap.is_finite());
+    assert!(out.optimality_gap >= 0.0);
+    assert!(
+        out.root_bound >= out.best_eval.reward,
+        "the root bound must dominate the incumbent ({} vs {})",
+        out.root_bound,
+        out.best_eval.reward
+    );
+    // The incumbent is at least the warm start: Table 6's point scores
+    // positively, so the certificate is about a real design.
+    let warm_reward = evaluate_action(&calib, &space, &table6_case_i()).reward;
+    assert!(out.best_eval.reward >= warm_reward);
+}
+
+#[test]
+fn bnb_scenario_lands_the_certificate_in_the_sweep_csvs() {
+    let mut s = Scenario::baseline();
+    s.name = "bnb-tiny".into();
+    s.optimizer = OptimizerChoice::Bnb;
+    s.budget.sa_iterations = 200;
+    s.budget.sa_seeds = vec![0];
+
+    let dir = std::env::temp_dir().join("chiplet_gym_bnb_sweep_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = SweepConfig { jobs: 1, out_dir: dir.clone(), budget: None };
+    let out = run_sweep(&[s], &cfg).unwrap();
+    let cert = out.results[0].certification.expect("bnb scenario must certify");
+    assert!(!cert.complete);
+    assert!(cert.nodes_pruned > 0);
+    assert!(cert.optimality_gap.is_finite() && cert.optimality_gap >= 0.0);
+
+    let scen = std::fs::read_to_string(dir.join("scenario_bnb-tiny.csv")).unwrap();
+    let mut lines = scen.lines();
+    assert_eq!(
+        lines.next().unwrap(),
+        "source,seed,reward,feasible,throughput_tops,energy_mj_per_task,e_op_pj,\
+         die_cost,pkg_cost,total_cost,n_chiplets_decoded,action,placement,\
+         max_hbm_hops,hbm_attach,optimality_gap,nodes_expanded,nodes_pruned"
+    );
+    let bnb_rows: Vec<&str> = lines.filter(|l| l.starts_with("bnb,")).collect();
+    assert_eq!(bnb_rows.len(), 1, "exactly one certification candidate");
+    let cells: Vec<&str> = scen.lines().nth(1).unwrap().rsplitn(4, ',').collect();
+    // rsplitn yields [pruned, expanded, gap, rest]: all three non-empty
+    assert_eq!(cells[0], cert.nodes_pruned.to_string());
+    assert_eq!(cells[1], cert.nodes_expanded.to_string());
+    assert!(!cells[2].is_empty(), "gap cell must be populated on a bnb scenario");
+
+    let best = std::fs::read_to_string(dir.join("sweep_best.csv")).unwrap();
+    assert_eq!(
+        best.lines().next().unwrap(),
+        "scenario,description,workload,tech_node,packaging,chiplet_cap,optimizer,\
+         placement,source,seed,reward,throughput_tops,energy_mj_per_task,total_cost,\
+         cache_hit_rate,wall_secs,action,optimality_gap,nodes_expanded,nodes_pruned"
+    );
+    let tail = format!(",{},{}", cert.nodes_expanded, cert.nodes_pruned);
+    assert!(best.lines().nth(1).unwrap().ends_with(&tail));
+}
