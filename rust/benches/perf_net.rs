@@ -1,0 +1,204 @@
+//! Kernel-layer throughput: `rl::net` forward / `ppo_update` ns per call
+//! against the frozen scalar oracle.
+//!
+//! Times [`NativeNet`] (blocked matmul + fused Adam, reusable scratch)
+//! and [`ScalarNet`] (the verbatim pre-kernel per-element loops from
+//! `kernels::oracle`) on the same inputs across the {14-head canonical,
+//! 15-head learned-placement} × {batch 1, 16, 64} grid, asserting
+//! bitwise-identical outputs before timing — a speedup that changed a
+//! single bit would be a bug, not a win. Writes `BENCH_net.json` (plus a
+//! CSV of the rows) under `bench_results/` and fails if throughput fell
+//! more than `REGRESSION_TOLERANCE` below the committed baseline.
+
+use chiplet_gym::kernels::oracle::ScalarNet;
+use chiplet_gym::model::space::DesignSpace;
+use chiplet_gym::report;
+use chiplet_gym::rl::init::init_param_entries;
+use chiplet_gym::rl::net::{NativeNet, NetShape};
+use chiplet_gym::util::bench::{
+    enforce_throughput_baseline, fmt_ns, Runner, REGRESSION_TOLERANCE,
+};
+use chiplet_gym::util::Rng;
+
+/// One benchmark cell: a net shape at a fixed minibatch size, with
+/// self-consistent PPO update inputs (old_logp comes from the net's own
+/// forward, so ratios start near 1 like a real first epoch).
+struct Cell {
+    obs: Vec<f32>,
+    actions: Vec<i32>,
+    old_logp: Vec<f32>,
+    advantages: Vec<f32>,
+    returns: Vec<f32>,
+}
+
+fn build_cell(net: &NativeNet, params: &[f32], m: usize, rng: &mut Rng) -> Cell {
+    let shape = &net.shape;
+    let (o, nh) = (shape.obs_dim, shape.n_heads());
+    let slices = shape.head_slices();
+    let obs: Vec<f32> = (0..m * o).map(|_| rng.f32()).collect();
+    let mut actions = Vec::with_capacity(m * nh);
+    for _ in 0..m {
+        for &d in &shape.dims {
+            actions.push(rng.below(d as u64) as i32);
+        }
+    }
+    let fwd = net.forward(params, &obs).expect("forward");
+    let a = shape.act_total();
+    let mut old_logp = Vec::with_capacity(m);
+    for b in 0..m {
+        let row = &fwd.logp_all[b * a..(b + 1) * a];
+        let mut lp = 0.0f64;
+        for (h, &(s, _e)) in slices.iter().enumerate() {
+            lp += row[s + actions[b * nh + h] as usize] as f64;
+        }
+        old_logp.push(lp as f32);
+    }
+    let advantages: Vec<f32> = (0..m).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+    let returns: Vec<f32> = (0..m).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+    Cell { obs, actions, old_logp, advantages, returns }
+}
+
+fn assert_identical(net: &NativeNet, oracle: &ScalarNet, params: &[f32], cell: &Cell, m: usize) {
+    let hyper = [3e-4f32, 0.2, 0.01];
+    let f_new = net.forward(params, &cell.obs).expect("kernel forward");
+    let f_old = oracle.forward(params, &cell.obs).expect("oracle forward");
+    assert_eq!(f_new.logp_all.len(), f_old.logp_all.len());
+    for (a, b) in f_new.logp_all.iter().zip(f_old.logp_all.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "forward logp diverged (batch {m})");
+    }
+    for (a, b) in f_new.value.iter().zip(f_old.value.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "forward value diverged (batch {m})");
+    }
+    let pc = params.len();
+    let (zm, zv) = (vec![0f32; pc], vec![0f32; pc]);
+    let u_new = net
+        .ppo_update(
+            params, &zm, &zv, 1.0, &cell.obs, &cell.actions, &cell.old_logp, &cell.advantages,
+            &cell.returns, hyper,
+        )
+        .expect("kernel update");
+    let u_old = oracle
+        .ppo_update(
+            params, &zm, &zv, 1.0, &cell.obs, &cell.actions, &cell.old_logp, &cell.advantages,
+            &cell.returns, hyper,
+        )
+        .expect("oracle update");
+    for (a, b) in u_new.params.iter().zip(u_old.params.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "updated params diverged (batch {m})");
+    }
+    for (a, b) in u_new.adam_m.iter().zip(u_old.adam_m.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "adam_m diverged (batch {m})");
+    }
+    for (a, b) in u_new.adam_v.iter().zip(u_old.adam_v.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "adam_v diverged (batch {m})");
+    }
+}
+
+fn main() {
+    // Committed baseline, read before this run overwrites it.
+    let baseline = std::fs::read_to_string(report::result_path("BENCH_net.json")).ok();
+    let hyper = [3e-4f32, 0.2, 0.01];
+    let cases = [
+        ("14-head", DesignSpace::case_i().layout()),
+        ("15-head", DesignSpace::case_i().with_placement_head().layout()),
+    ];
+    let batches = [1usize, 16, 64];
+
+    // (label, batch, forward ns kernel/oracle, update ns kernel/oracle)
+    let mut rows: Vec<(String, usize, f64, f64, f64, f64)> = Vec::new();
+    for (name, layout) in &cases {
+        let shape = NetShape::for_layout(layout);
+        let net = NativeNet::new(shape.clone());
+        let oracle = ScalarNet::new(shape.clone());
+        let params = init_param_entries(&shape.param_entries(), shape.param_count(), 0);
+        let pc = params.len();
+        let mut rng = Rng::new(42);
+        for &m in &batches {
+            let cell = build_cell(&net, &params, m, &mut rng);
+            assert_identical(&net, &oracle, &params, &cell, m);
+
+            let (zm, zv) = (vec![0f32; pc], vec![0f32; pc]);
+            let mut runner = Runner::new();
+            runner.bench(&format!("{name}/b{m}: forward (kernel)"), || {
+                std::hint::black_box(net.forward(&params, &cell.obs).unwrap());
+            });
+            let fwd_ns = runner.results().last().unwrap().ns_per_iter.mean;
+            runner.bench(&format!("{name}/b{m}: forward (oracle)"), || {
+                std::hint::black_box(oracle.forward(&params, &cell.obs).unwrap());
+            });
+            let fwd_oracle_ns = runner.results().last().unwrap().ns_per_iter.mean;
+            runner.bench(&format!("{name}/b{m}: ppo_update (kernel)"), || {
+                std::hint::black_box(
+                    net.ppo_update(
+                        &params, &zm, &zv, 1.0, &cell.obs, &cell.actions, &cell.old_logp,
+                        &cell.advantages, &cell.returns, hyper,
+                    )
+                    .unwrap(),
+                );
+            });
+            let upd_ns = runner.results().last().unwrap().ns_per_iter.mean;
+            runner.bench(&format!("{name}/b{m}: ppo_update (oracle)"), || {
+                std::hint::black_box(
+                    oracle
+                        .ppo_update(
+                            &params, &zm, &zv, 1.0, &cell.obs, &cell.actions, &cell.old_logp,
+                            &cell.advantages, &cell.returns, hyper,
+                        )
+                        .unwrap(),
+                );
+            });
+            let upd_oracle_ns = runner.results().last().unwrap().ns_per_iter.mean;
+
+            println!(
+                "{name:>8}/b{m:<2}: forward {} vs {} ({:.2}x), update {} vs {} ({:.2}x)",
+                fmt_ns(fwd_ns),
+                fmt_ns(fwd_oracle_ns),
+                fwd_oracle_ns / fwd_ns,
+                fmt_ns(upd_ns),
+                fmt_ns(upd_oracle_ns),
+                upd_oracle_ns / upd_ns
+            );
+            rows.push((format!("{name}/b{m}"), m, fwd_ns, fwd_oracle_ns, upd_ns, upd_oracle_ns));
+        }
+    }
+
+    let mut csv = report::csv(
+        "perf_net.csv",
+        &[
+            "case",
+            "batch",
+            "forward_ns",
+            "forward_oracle_ns",
+            "update_ns",
+            "update_oracle_ns",
+        ],
+    );
+    for (label, m, f, fo, u, uo) in &rows {
+        csv.labeled_row(label, &[*m as f64, *f, *fo, *u, *uo]).expect("csv row");
+    }
+    csv.flush().expect("csv flush");
+
+    // BENCH_net.json: machine-readable kernel-vs-oracle trajectory.
+    let mut json = String::from("{\n  \"cases\": {\n");
+    for (i, (label, m, f, fo, u, uo)) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    \"{label}\": {{\"batch\": {m}, \"forward_ns\": {f:.1}, \
+             \"forward_oracle_ns\": {fo:.1}, \"update_ns\": {u:.1}, \
+             \"update_oracle_ns\": {uo:.1}, \"forward_speedup\": {:.3}, \
+             \"update_speedup\": {:.3}, \"update_steps_per_sec\": {:.1}}}{}\n",
+            fo / f,
+            uo / u,
+            1e9 / u,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  }\n}\n");
+    let path = report::write_text("BENCH_net.json", &json);
+    println!("wrote {}", path.display());
+
+    let fresh: Vec<(String, f64)> = rows
+        .iter()
+        .map(|(label, _, _, _, u, _)| (format!("cases.{label}.update_steps_per_sec"), 1e9 / u))
+        .collect();
+    enforce_throughput_baseline("perf_net", baseline.as_deref(), &fresh, REGRESSION_TOLERANCE);
+}

@@ -10,13 +10,36 @@
 //! PRs.
 
 use chiplet_gym::cost::Calib;
+use chiplet_gym::kernels::HopField;
 use chiplet_gym::model::space::{paper_points, DesignSpace};
 use chiplet_gym::opt::search::DriverConfig;
-use chiplet_gym::place::{optimize_placement, PlaceConfig, Placement};
+use chiplet_gym::place::{optimize_placement, HbmAttach, PlaceConfig, Placement};
 use chiplet_gym::report;
-use chiplet_gym::util::bench::{fmt_ns, Runner};
+use chiplet_gym::util::bench::{
+    enforce_throughput_baseline, fmt_ns, Runner, REGRESSION_TOLERANCE,
+};
+use chiplet_gym::util::Rng;
+
+/// Full-grid placement with `k` random HBM attaches — the shape the
+/// attach-point optimizer scores thousands of times per search.
+fn grid_placement(m: usize, n: usize, k: usize, rng: &mut Rng) -> Placement {
+    let mut tiles = Vec::with_capacity(m * n);
+    for r in 0..m {
+        for c in 0..n {
+            tiles.push((r, c));
+        }
+    }
+    let hbm = (0..k)
+        .map(|_| HbmAttach {
+            tile: (rng.below(m as u64) as usize, rng.below(n as u64) as usize),
+            extra_hops: 1,
+        })
+        .collect();
+    Placement { m, n, tiles, hbm }
+}
 
 fn main() {
+    let baseline = std::fs::read_to_string(report::result_path("BENCH_place.json")).ok();
     let calib = Calib::default();
     let budget = 2_000usize;
     let cases = [
@@ -65,6 +88,67 @@ fn main() {
         ));
     }
 
+    // Batched attach-point scoring: the kernel-layer HopField (per-tile
+    // distance table, built once per occupied-tile set) vs the full
+    // O(tiles × HBM) coordinate rescan per candidate. Both paths score
+    // the same random candidate attach sets; identity is asserted
+    // before timing.
+    let meshes = [(5usize, 6usize), (8, 16), (12, 12)];
+    let n_candidates = 64usize;
+    // (label, tiles, scan ns/score, batched ns/score)
+    let mut score_rows: Vec<(String, usize, f64, f64)> = Vec::new();
+    let mut rng = Rng::new(7);
+    for &(m, n) in &meshes {
+        let proto = grid_placement(m, n, 4, &mut rng);
+        let ai = proto.hop_stats();
+        let field = HopField::new(m, n, &proto.tiles);
+        let candidates: Vec<Vec<HbmAttach>> = (0..n_candidates)
+            .map(|_| grid_placement(m, n, 4, &mut rng).hbm)
+            .collect();
+        let cells: Vec<Vec<(usize, usize)>> = candidates
+            .iter()
+            .map(|c| c.iter().map(|a| (a.tile.0 * n + a.tile.1, a.extra_hops)).collect())
+            .collect();
+        // identity: table lookup == coordinate scan, bit for bit
+        let mut scan = proto.clone();
+        for (cand, cell) in candidates.iter().zip(cells.iter()) {
+            scan.hbm = cand.clone();
+            let want = scan.hop_stats_with_ai(&ai);
+            let (max_hbm, mean_hbm) = field.hbm_stats(cell);
+            assert_eq!(max_hbm, want.max_hbm_hops, "{m}x{n} batched max diverged");
+            assert_eq!(
+                mean_hbm.to_bits(),
+                want.mean_hbm_hops.to_bits(),
+                "{m}x{n} batched mean diverged"
+            );
+        }
+
+        let label = format!("{m}x{n}");
+        let mut runner = Runner::new();
+        runner.bench(&format!("{label}: scan scoring ({n_candidates} candidates)"), || {
+            for cand in &candidates {
+                scan.hbm.clone_from(cand);
+                std::hint::black_box(scan.hop_stats_with_ai(&ai));
+            }
+        });
+        let scan_ns =
+            runner.results().last().unwrap().ns_per_iter.mean / n_candidates as f64;
+        runner.bench(&format!("{label}: batched scoring ({n_candidates} candidates)"), || {
+            for cell in &cells {
+                std::hint::black_box(field.hbm_stats(cell));
+            }
+        });
+        let batched_ns =
+            runner.results().last().unwrap().ns_per_iter.mean / n_candidates as f64;
+        println!(
+            "{label:>8}: score {} -> {} per candidate ({:.1}x)",
+            fmt_ns(scan_ns),
+            fmt_ns(batched_ns),
+            scan_ns / batched_ns
+        );
+        score_rows.push((label, m * n, scan_ns, batched_ns));
+    }
+
     let mut csv = report::csv(
         "perf_place.csv",
         &[
@@ -93,7 +177,29 @@ fn main() {
             if i + 1 < rows.len() { "," } else { "" }
         ));
     }
+    json.push_str("  },\n  \"batched_scoring\": {\n");
+    for (i, (label, tiles, scan_ns, batched_ns)) in score_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    \"{label}\": {{\"tiles\": {tiles}, \"scan_score_ns\": {scan_ns:.1}, \
+             \"batched_score_ns\": {batched_ns:.1}, \"batched_speedup\": {:.2}, \
+             \"batched_scores_per_sec\": {:.1}}}{}\n",
+            scan_ns / batched_ns,
+            1e9 / batched_ns,
+            if i + 1 < score_rows.len() { "," } else { "" }
+        ));
+    }
     json.push_str("  }\n}\n");
     let path = report::write_text("BENCH_place.json", &json);
     println!("wrote {}", path.display());
+
+    let mut fresh: Vec<(String, f64)> = rows
+        .iter()
+        .map(|(name, _, eps, ..)| (format!("cases.{name}.hop_stats_evals_per_sec"), *eps))
+        .collect();
+    fresh.extend(
+        score_rows
+            .iter()
+            .map(|(l, _, _, b)| (format!("batched_scoring.{l}.batched_scores_per_sec"), 1e9 / b)),
+    );
+    enforce_throughput_baseline("perf_place", baseline.as_deref(), &fresh, REGRESSION_TOLERANCE);
 }

@@ -14,6 +14,7 @@ use chiplet_gym::gym::ChipletGymEnv;
 use chiplet_gym::model::space::DesignSpace;
 use chiplet_gym::report;
 use chiplet_gym::rl::{train_ppo_native, PpoConfig};
+use chiplet_gym::util::bench::{enforce_throughput_baseline, REGRESSION_TOLERANCE};
 
 fn bench_cfg() -> PpoConfig {
     let mut cfg = PpoConfig::paper();
@@ -25,6 +26,7 @@ fn bench_cfg() -> PpoConfig {
 }
 
 fn main() {
+    let baseline = std::fs::read_to_string(report::result_path("BENCH_ppo.json")).ok();
     let full = std::env::var("CHIPLET_GYM_FULL").is_ok();
     let mut cfg = bench_cfg();
     if full {
@@ -90,4 +92,12 @@ fn main() {
     json.push_str("  }\n}\n");
     let path = report::write_text("BENCH_ppo.json", &json);
     println!("wrote {}", path.display());
+
+    // Short-timestep runs are noisier than micro-benches, but a >25%
+    // steps/sec drop on any cell still means a hot-path regression.
+    let fresh: Vec<(String, f64)> = rows
+        .iter()
+        .map(|(label, _, _, sps, _)| (format!("configs.{label}.steps_per_sec"), *sps))
+        .collect();
+    enforce_throughput_baseline("perf_ppo", baseline.as_deref(), &fresh, REGRESSION_TOLERANCE);
 }

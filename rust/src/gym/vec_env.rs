@@ -75,16 +75,28 @@ impl VecEnv {
     /// Equivalent to K sequential `env.step` calls in env order; returns
     /// one [`Step`] per env.
     pub fn step_batch<A: AsRef<[usize]>>(&mut self, actions: &[A]) -> Vec<Step> {
+        let mut out = Vec::with_capacity(self.envs.len());
+        self.step_batch_into(actions, &mut out);
+        out
+    }
+
+    /// [`VecEnv::step_batch`] writing into a caller-owned buffer — the
+    /// rollout hot loop reuses one `Vec<Step>` across every call, so
+    /// steady-state stepping allocates nothing. `out` is cleared and
+    /// refilled with one [`Step`] per env, in env order.
+    pub fn step_batch_into<A: AsRef<[usize]>>(&mut self, actions: &[A], out: &mut Vec<Step>) {
         assert_eq!(
             actions.len(),
             self.envs.len(),
             "step_batch needs one action per env"
         );
-        self.envs
-            .iter_mut()
-            .zip(actions.iter())
-            .map(|(env, action)| env.step(action.as_ref()))
-            .collect()
+        out.clear();
+        out.extend(
+            self.envs
+                .iter_mut()
+                .zip(actions.iter())
+                .map(|(env, action)| env.step(action.as_ref())),
+        );
     }
 
     /// Batched observation assembly: write the K current observations
@@ -178,6 +190,28 @@ mod tests {
             }
         }
         assert_eq!(vec_env.total_steps(), solos.iter().map(|e| e.total_steps()).sum());
+    }
+
+    #[test]
+    fn step_batch_into_matches_step_batch() {
+        let proto = ChipletGymEnv::case_i();
+        let mut a = VecEnv::replicate(&proto, 3);
+        let mut b = VecEnv::replicate(&proto, 3);
+        a.reset_all();
+        b.reset_all();
+        let mut rng = Rng::new(5);
+        let mut buf = Vec::new();
+        for _ in 0..6 {
+            let actions = random_actions(&proto.space, &mut rng, 3);
+            let want = a.step_batch(&actions);
+            b.step_batch_into(&actions, &mut buf);
+            assert_eq!(buf.len(), want.len());
+            for (got, want) in buf.iter().zip(want.iter()) {
+                assert_eq!(got.reward.to_bits(), want.reward.to_bits());
+                assert_eq!(got.done, want.done);
+                assert_eq!(got.obs, want.obs);
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,140 @@
+//! Fused bias-corrected Adam step and global grad-norm clip.
+//!
+//! The pre-kernel update cloned `params`/`adam_m`/`adam_v` (three full
+//! memcpys) and then re-indexed all three per entry. [`fused_step`]
+//! produces the three output vectors in one zipped pass — each entry is
+//! read once, updated with exactly the scalar loop's f64 op sequence,
+//! and pushed once — so the only writes are the final values. The
+//! `upd_sq` reduction accumulates in ascending-index order, matching the
+//! scalar loop bit for bit.
+
+/// Global gradient-norm clip (torch `clip_grad_norm_` semantics, the
+/// SB3 default): returns the pre-clip norm; scales `grad` in place only
+/// when the norm exceeds `max_norm`. Identical op sequence to the
+/// pre-kernel inline loop.
+pub fn clip_global_norm(grad: &mut [f32], max_norm: f64) -> f64 {
+    let gnorm = grad.iter().map(|&g| g as f64 * g as f64).sum::<f64>().sqrt();
+    let scale = (max_norm / (gnorm + 1e-12)).min(1.0);
+    if scale < 1.0 {
+        for g in grad.iter_mut() {
+            *g = (*g as f64 * scale) as f32;
+        }
+    }
+    gnorm
+}
+
+/// One bias-corrected Adam step over the flat parameter vector, fused
+/// into a single pass. Writes the stepped parameters and moment vectors
+/// into the (cleared) output Vecs and returns `Σ update²` — the squared
+/// update norm, accumulated in index order.
+///
+/// Per entry, the exact scalar sequence:
+/// `m₁ = β₁·m + (1−β₁)·g`, `v₁ = β₂·v + (1−β₂)·g²`,
+/// `update = lr·(m₁/c₁)/(√(v₁/c₂) + eps)`, `p' = (p − update) as f32`,
+/// with `c₁ = 1−β₁ᵗ`, `c₂ = 1−β₂ᵗ` and the *f64* moments (not their f32
+/// truncations) feeding the update — all unchanged from the loop this
+/// replaces.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_step(
+    params: &[f32],
+    m_in: &[f32],
+    v_in: &[f32],
+    grad: &[f32],
+    lr: f64,
+    beta1: f64,
+    beta2: f64,
+    eps: f64,
+    t: f64,
+    new_p: &mut Vec<f32>,
+    new_m: &mut Vec<f32>,
+    new_v: &mut Vec<f32>,
+) -> f64 {
+    let pc = params.len();
+    debug_assert!(m_in.len() == pc && v_in.len() == pc && grad.len() == pc);
+    new_p.clear();
+    new_m.clear();
+    new_v.clear();
+    new_p.reserve(pc);
+    new_m.reserve(pc);
+    new_v.reserve(pc);
+    let (c1, c2) = (1.0 - beta1.powf(t), 1.0 - beta2.powf(t));
+    let mut upd_sq = 0.0f64;
+    for (((&p, &m0), &v0), &g) in params.iter().zip(m_in).zip(v_in).zip(grad) {
+        let g = g as f64;
+        let m1 = beta1 * m0 as f64 + (1.0 - beta1) * g;
+        let v1 = beta2 * v0 as f64 + (1.0 - beta2) * g * g;
+        new_m.push(m1 as f32);
+        new_v.push(v1 as f32);
+        let update = lr * (m1 / c1) / ((v1 / c2).sqrt() + eps);
+        upd_sq += update * update;
+        new_p.push((p as f64 - update) as f32);
+    }
+    upd_sq
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn fused_matches_scalar_three_vector_loop() {
+        let mut rng = Rng::new(31);
+        let (beta1, beta2, eps) = (0.9f64, 0.999, 1e-5);
+        for &(pc, t) in &[(1usize, 1f64), (17, 1.0), (1000, 42.0)] {
+            let params: Vec<f32> = (0..pc).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+            let m_in: Vec<f32> = (0..pc).map(|_| rng.range_f64(-0.1, 0.1) as f32).collect();
+            let v_in: Vec<f32> = (0..pc).map(|_| rng.range_f64(0.0, 0.1) as f32).collect();
+            let grad: Vec<f32> = (0..pc).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect();
+            let lr = 3e-4f64;
+
+            // frozen scalar reference: clone-then-index, as pre-kernel
+            let mut wp = params.clone();
+            let mut wm = m_in.clone();
+            let mut wv = v_in.clone();
+            let mut want_sq = 0.0f64;
+            let (c1, c2) = (1.0 - beta1.powf(t), 1.0 - beta2.powf(t));
+            for i in 0..pc {
+                let g = grad[i] as f64;
+                let m1 = beta1 * wm[i] as f64 + (1.0 - beta1) * g;
+                let v1 = beta2 * wv[i] as f64 + (1.0 - beta2) * g * g;
+                wm[i] = m1 as f32;
+                wv[i] = v1 as f32;
+                let update = lr * (m1 / c1) / ((v1 / c2).sqrt() + eps);
+                want_sq += update * update;
+                wp[i] = (wp[i] as f64 - update) as f32;
+            }
+
+            let (mut np, mut nm, mut nv) = (Vec::new(), Vec::new(), Vec::new());
+            let got_sq = fused_step(
+                &params, &m_in, &v_in, &grad, lr, beta1, beta2, eps, t, &mut np, &mut nm,
+                &mut nv,
+            );
+            assert_eq!(got_sq.to_bits(), want_sq.to_bits());
+            for (a, b) in np.iter().zip(&wp) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            for (a, b) in nm.iter().zip(&wm) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            for (a, b) in nv.iter().zip(&wv) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn clip_scales_only_above_the_cap() {
+        let mut small = vec![0.1f32, -0.2, 0.05];
+        let before = small.clone();
+        let norm = clip_global_norm(&mut small, 0.5);
+        assert!(norm < 0.5);
+        assert_eq!(small, before, "below-cap gradients stay untouched");
+
+        let mut big = vec![3.0f32, -4.0];
+        let norm = clip_global_norm(&mut big, 0.5);
+        assert!((norm - 5.0).abs() < 1e-9);
+        let clipped: f64 = big.iter().map(|&g| g as f64 * g as f64).sum::<f64>().sqrt();
+        assert!((clipped - 0.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,264 @@
+//! Blocked dense kernels for the native PPO network.
+//!
+//! The scalar loops they replace (`kernels::oracle::ScalarNet`) walk one
+//! output at a time and read the weight matrix column-wise — on the
+//! 64×591 policy head that touches a fresh cache line every multiply.
+//! These kernels block over rows ([`MB`]) and output lanes ([`NB`]) so
+//! each pass over the inputs reads `w` contiguously and keeps `MB·NB`
+//! accumulators in registers, while every output's own reduction still
+//! adds terms in ascending-`k` order — the bitwise-identity contract of
+//! the kernel layer (`kernels` module docs).
+//!
+//! Weight layout is row-major `[k_dim][n]` (`w[k*n + j]`), the
+//! `model.py::param_spec()` convention the flat parameter vector uses.
+
+/// Row-block size: observation/minibatch rows processed together.
+const MB: usize = 2;
+/// Output-lane block size: independent output neurons per register block.
+const NB: usize = 8;
+
+/// `out[r*n + j] = post(b[j] + Σ_k x[r*k_dim + k] · w[k*n + j])` with the
+/// reduction strictly in ascending-`k` order for every `(r, j)`.
+#[inline(always)]
+fn matmul_bias_post(
+    x: &[f32],
+    rows: usize,
+    k_dim: usize,
+    w: &[f32],
+    bias: &[f32],
+    n: usize,
+    out: &mut [f32],
+    post: impl Fn(f64) -> f64,
+) {
+    debug_assert_eq!(x.len(), rows * k_dim);
+    debug_assert_eq!(w.len(), k_dim * n);
+    debug_assert_eq!(bias.len(), n);
+    debug_assert_eq!(out.len(), rows * n);
+    let mut r0 = 0;
+    while r0 < rows {
+        let mb = MB.min(rows - r0);
+        let mut j0 = 0;
+        while j0 < n {
+            let nb = NB.min(n - j0);
+            // acc[mi][ni] accumulates output (r0+mi, j0+ni): seeded with
+            // its bias, then one add per k — ascending, like the scalar
+            // loop, so the f64 op sequence per output is unchanged.
+            let mut acc = [[0f64; NB]; MB];
+            for (mi, row) in acc.iter_mut().enumerate().take(mb) {
+                for (ni, slot) in row.iter_mut().enumerate().take(nb) {
+                    *slot = bias[j0 + ni] as f64;
+                }
+            }
+            for k in 0..k_dim {
+                let wrow = &w[k * n + j0..k * n + j0 + nb];
+                for (mi, row) in acc.iter_mut().enumerate().take(mb) {
+                    let xv = x[(r0 + mi) * k_dim + k] as f64;
+                    for (ni, &wv) in wrow.iter().enumerate() {
+                        row[ni] += xv * wv as f64;
+                    }
+                }
+            }
+            for (mi, row) in acc.iter().enumerate().take(mb) {
+                for (ni, &v) in row.iter().enumerate().take(nb) {
+                    out[(r0 + mi) * n + j0 + ni] = post(v) as f32;
+                }
+            }
+            j0 += nb;
+        }
+        r0 += mb;
+    }
+}
+
+/// Dense layer with tanh activation (the MLP trunk layers).
+pub fn matmul_bias_tanh(
+    x: &[f32],
+    rows: usize,
+    k_dim: usize,
+    w: &[f32],
+    bias: &[f32],
+    n: usize,
+    out: &mut [f32],
+) {
+    matmul_bias_post(x, rows, k_dim, w, bias, n, out, f64::tanh);
+}
+
+/// Dense layer without activation (policy logits, value head).
+pub fn matmul_bias(
+    x: &[f32],
+    rows: usize,
+    k_dim: usize,
+    w: &[f32],
+    bias: &[f32],
+    n: usize,
+    out: &mut [f32],
+) {
+    matmul_bias_post(x, rows, k_dim, w, bias, n, out, |v| v);
+}
+
+/// Lane block for the backward kernel's `dx` accumulators.
+const GB: usize = 4;
+
+/// Backward outer-product + input-gradient kernel for one minibatch row.
+///
+/// For every input lane `i` (with activation `x[i]`, weight row
+/// `w[i*n..]`, gradient row `grad[i*n..]`):
+///
+/// * `grad[i*n + j] += (x[i] · d[j]) as f32` — each entry one f32 add,
+///   exactly the scalar loop's op;
+/// * `dx[i] = Σ_j d[j] · w[i*n + j]` — an f64 reduction strictly in
+///   ascending-`j` order (per-lane accumulator, never split).
+///
+/// Blocking over `GB` lanes shares each `d[j]` load across lanes without
+/// touching either contract: grad entries are written once per call and
+/// each `dx[i]` keeps its own sequential accumulator.
+pub fn grad_outer(x: &[f32], d: &[f64], w: &[f32], grad: &mut [f32], n: usize, dx: &mut [f64]) {
+    let lanes = x.len();
+    debug_assert_eq!(w.len(), lanes * n);
+    debug_assert_eq!(grad.len(), lanes * n);
+    debug_assert_eq!(d.len(), n);
+    debug_assert_eq!(dx.len(), lanes);
+    let mut i0 = 0;
+    while i0 < lanes {
+        let gb = GB.min(lanes - i0);
+        let mut acc = [0f64; GB];
+        let mut xi = [0f64; GB];
+        for (li, slot) in xi.iter_mut().enumerate().take(gb) {
+            *slot = x[i0 + li] as f64;
+        }
+        for (j, &dj) in d.iter().enumerate() {
+            for li in 0..gb {
+                let idx = (i0 + li) * n + j;
+                grad[idx] += (xi[li] * dj) as f32;
+                acc[li] += dj * w[idx] as f64;
+            }
+        }
+        for (li, &a) in acc.iter().enumerate().take(gb) {
+            dx[i0 + li] = a;
+        }
+        i0 += gb;
+    }
+}
+
+/// [`grad_outer`] without the input-gradient reduction — the first layer
+/// of a trunk has no upstream to propagate into.
+pub fn grad_outer_weights(x: &[f32], d: &[f64], grad: &mut [f32], n: usize) {
+    let lanes = x.len();
+    debug_assert_eq!(grad.len(), lanes * n);
+    debug_assert_eq!(d.len(), n);
+    for (i, &xv) in x.iter().enumerate() {
+        let xi = xv as f64;
+        let grow = &mut grad[i * n..(i + 1) * n];
+        for (g, &dj) in grow.iter_mut().zip(d.iter()) {
+            *g += (xi * dj) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randv(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.range_f64(-1.5, 1.5) as f32).collect()
+    }
+
+    /// The frozen scalar loop the blocked kernel must match bit for bit.
+    fn scalar_reference(
+        x: &[f32],
+        rows: usize,
+        k_dim: usize,
+        w: &[f32],
+        bias: &[f32],
+        n: usize,
+        tanh: bool,
+    ) -> Vec<f32> {
+        let mut out = vec![0f32; rows * n];
+        for r in 0..rows {
+            for j in 0..n {
+                let mut acc = bias[j] as f64;
+                for (k, &xv) in x[r * k_dim..(r + 1) * k_dim].iter().enumerate() {
+                    acc += xv as f64 * w[k * n + j] as f64;
+                }
+                out[r * n + j] = if tanh { acc.tanh() as f32 } else { acc as f32 };
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn blocked_matches_scalar_on_awkward_shapes() {
+        let mut rng = Rng::new(21);
+        // shapes straddling every block boundary, plus the real layer
+        // sizes (64-wide trunk, 591-wide policy head, width-1 value head)
+        for &(rows, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (1, 10, 64),
+            (2, 64, 8),
+            (3, 7, 9),
+            (5, 64, 591),
+            (4, 64, 1),
+            (64, 3, 13),
+            (7, 5, 17),
+        ] {
+            let x = randv(&mut rng, rows * k);
+            let w = randv(&mut rng, k * n);
+            let b = randv(&mut rng, n);
+            for tanh in [false, true] {
+                let want = scalar_reference(&x, rows, k, &w, &b, n, tanh);
+                let mut got = vec![0f32; rows * n];
+                if tanh {
+                    matmul_bias_tanh(&x, rows, k, &w, &b, n, &mut got);
+                } else {
+                    matmul_bias(&x, rows, k, &w, &b, n, &mut got);
+                }
+                for (g, wv) in got.iter().zip(want.iter()) {
+                    assert_eq!(g.to_bits(), wv.to_bits(), "rows {rows} k {k} n {n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grad_outer_matches_scalar_loop() {
+        let mut rng = Rng::new(22);
+        for &(lanes, n) in &[(1usize, 1usize), (4, 8), (5, 591), (64, 64), (7, 13)] {
+            let x = randv(&mut rng, lanes);
+            let d: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let w = randv(&mut rng, lanes * n);
+            let mut grad = randv(&mut rng, lanes * n);
+            let mut grad_want = grad.clone();
+            let mut dx_want = vec![0f64; lanes];
+            for i in 0..lanes {
+                let xi = x[i] as f64;
+                let mut acc = 0.0f64;
+                for j in 0..n {
+                    grad_want[i * n + j] += (xi * d[j]) as f32;
+                    acc += d[j] * w[i * n + j] as f64;
+                }
+                dx_want[i] = acc;
+            }
+            let mut dx = vec![0f64; lanes];
+            grad_outer(&x, &d, &w, &mut grad, n, &mut dx);
+            for (g, wv) in grad.iter().zip(grad_want.iter()) {
+                assert_eq!(g.to_bits(), wv.to_bits(), "lanes {lanes} n {n}");
+            }
+            for (g, wv) in dx.iter().zip(dx_want.iter()) {
+                assert_eq!(g.to_bits(), wv.to_bits(), "lanes {lanes} n {n}");
+            }
+
+            let mut grad2 = randv(&mut rng, lanes * n);
+            let mut grad2_want = grad2.clone();
+            for i in 0..lanes {
+                let xi = x[i] as f64;
+                for j in 0..n {
+                    grad2_want[i * n + j] += (xi * d[j]) as f32;
+                }
+            }
+            grad_outer_weights(&x, &d, &mut grad2, n);
+            for (g, wv) in grad2.iter().zip(grad2_want.iter()) {
+                assert_eq!(g.to_bits(), wv.to_bits());
+            }
+        }
+    }
+}

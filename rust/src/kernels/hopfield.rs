@@ -1,0 +1,198 @@
+//! Precomputed per-tile distance fields for batched HBM attach-point
+//! scoring.
+//!
+//! The placement search moves only HBM attach points; the occupied-tile
+//! set is fixed for a whole walk. The pre-kernel objective still paid a
+//! full `Placement::hop_stats_with_ai` rescan per candidate — for every
+//! occupied tile, recompute the Manhattan distance to every attach from
+//! coordinates. A [`HopField`] hoists that geometry: one table of
+//! distances from every grid cell to every occupied tile, built once per
+//! tile set, after which scoring a candidate attach list is `tiles ×
+//! attaches` table lookups (integer adds and mins — order-independent,
+//! so rescheduling is bitwise-safe; see the `kernels` module docs) with
+//! zero allocation.
+//!
+//! [`HopFieldCache`] memoizes fields per `(m, n, tiles)` key with the
+//! same cap/hits/misses discipline as `cost::cache::EvalCache`, so a
+//! sweep's repeated designs on one mesh share a single table.
+
+use std::collections::HashMap;
+
+/// Distances from every cell of an m×n grid to every occupied tile.
+#[derive(Clone, Debug)]
+pub struct HopField {
+    pub m: usize,
+    pub n: usize,
+    /// Occupied-tile count (the divisor of the mean-hop statistic).
+    n_tiles: usize,
+    /// `dist[i * m*n + cell]`: Manhattan hops from grid cell `cell`
+    /// (row-major, `r*n + c`) to occupied tile `i` — tile-major so one
+    /// tile's row is contiguous under the per-tile min scan.
+    dist: Vec<u16>,
+}
+
+impl HopField {
+    /// Build the field for one occupied-tile set on an m×n grid.
+    pub fn new(m: usize, n: usize, tiles: &[(usize, usize)]) -> HopField {
+        assert!(m > 0 && n > 0, "degenerate {m}x{n} grid");
+        assert!(!tiles.is_empty(), "hop field needs at least one occupied tile");
+        assert!(m + n <= u16::MAX as usize, "grid too large for u16 hop distances");
+        let cells = m * n;
+        let mut dist = vec![0u16; tiles.len() * cells];
+        for (i, &(tr, tc)) in tiles.iter().enumerate() {
+            assert!(tr < m && tc < n, "tile ({tr}, {tc}) outside {m}x{n} grid");
+            let row = &mut dist[i * cells..(i + 1) * cells];
+            for r in 0..m {
+                for (c, slot) in row[r * n..(r + 1) * n].iter_mut().enumerate() {
+                    *slot = (tr.abs_diff(r) + tc.abs_diff(c)) as u16;
+                }
+            }
+        }
+        HopField { m, n, n_tiles: tiles.len(), dist }
+    }
+
+    /// Occupied tiles the field was built over.
+    pub fn n_tiles(&self) -> usize {
+        self.n_tiles
+    }
+
+    /// Score one candidate attach list: `(worst, mean)` nearest-attach
+    /// supply hops over the occupied tiles. Each attach is `(cell,
+    /// extra_hops)` with `cell = r*n + c`.
+    ///
+    /// Bitwise identical to `Placement::hop_stats_with_ai`'s scan: the
+    /// per-tile distance is an integer `min` over attaches (exact, order
+    /// free), the sum accumulates in tile order as `usize`, and the mean
+    /// is the same single `usize as f64 / usize as f64` division.
+    pub fn hbm_stats(&self, attaches: &[(usize, usize)]) -> (usize, f64) {
+        assert!(!attaches.is_empty(), "at least one HBM attach point");
+        let cells = self.m * self.n;
+        let mut max_hbm = 0usize;
+        let mut sum_hbm = 0usize;
+        for i in 0..self.n_tiles {
+            let row = &self.dist[i * cells..(i + 1) * cells];
+            let mut d = usize::MAX;
+            for &(cell, extra) in attaches {
+                let v = row[cell] as usize + extra;
+                if v < d {
+                    d = v;
+                }
+            }
+            max_hbm = max_hbm.max(d);
+            sum_hbm += d;
+        }
+        (max_hbm, sum_hbm as f64 / self.n_tiles as f64)
+    }
+}
+
+/// Default insertion cap. A field is `tiles × cells` u16s — the full
+/// 128-footprint grid costs 32 KiB — so even a full cache stays small.
+pub const DEFAULT_FIELD_CACHE_CAP: usize = 256;
+
+/// Memoized [`HopField`]s keyed by `(m, n, occupied tiles)`, with the
+/// [`cost::cache::EvalCache`](crate::cost::cache::EvalCache) cap and
+/// hit/miss accounting. Over-cap misses build into a spare slot instead
+/// of inserting, so lookups never fail and memory stays bounded.
+#[derive(Debug, Default)]
+pub struct HopFieldCache {
+    map: HashMap<(usize, usize, Vec<(usize, usize)>), HopField>,
+    cap: usize,
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that built a fresh field.
+    pub misses: u64,
+    overflow: Option<HopField>,
+}
+
+impl HopFieldCache {
+    pub fn new(cap: usize) -> HopFieldCache {
+        HopFieldCache { map: HashMap::new(), cap, ..Default::default() }
+    }
+
+    /// The field for `(m, n, tiles)`, memoized.
+    pub fn field(&mut self, m: usize, n: usize, tiles: &[(usize, usize)]) -> &HopField {
+        let key = (m, n, tiles.to_vec());
+        if self.map.contains_key(&key) {
+            self.hits += 1;
+            return &self.map[&key];
+        }
+        self.misses += 1;
+        let f = HopField::new(m, n, tiles);
+        if self.map.len() < self.cap() {
+            self.map.entry(key).or_insert(f)
+        } else {
+            self.overflow = Some(f);
+            self.overflow.as_ref().expect("just set")
+        }
+    }
+
+    fn cap(&self) -> usize {
+        // Default::default() leaves cap 0; treat that as the default cap
+        // so `HopFieldCache::default()` is usable directly.
+        if self.cap == 0 {
+            DEFAULT_FIELD_CACHE_CAP
+        } else {
+            self.cap
+        }
+    }
+
+    /// Distinct fields retained.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn full_grid(m: usize, n: usize) -> Vec<(usize, usize)> {
+        (0..m).flat_map(|r| (0..n).map(move |c| (r, c))).collect()
+    }
+
+    #[test]
+    fn field_distances_are_manhattan() {
+        let tiles = full_grid(3, 4);
+        let f = HopField::new(3, 4, &tiles);
+        // single attach at cell (1,2) = row-major 6, extra 1: tile (0,0)
+        // is |1-0|+|2-0|+1 = 4 hops
+        let (max, mean) = f.hbm_stats(&[(6, 1)]);
+        assert_eq!(max, 4);
+        let want_sum: usize = tiles
+            .iter()
+            .map(|&(r, c)| r.abs_diff(1) + c.abs_diff(2) + 1)
+            .sum();
+        assert_eq!(mean.to_bits(), (want_sum as f64 / 12.0).to_bits());
+    }
+
+    #[test]
+    fn min_over_attaches_wins() {
+        let tiles = full_grid(1, 5);
+        let f = HopField::new(1, 5, &tiles);
+        // attaches at both ends, extras 0: every tile within 2 hops
+        let (max, _) = f.hbm_stats(&[(0, 0), (4, 0)]);
+        assert_eq!(max, 2);
+    }
+
+    #[test]
+    fn cache_hits_and_overflow_stay_correct() {
+        let mut cache = HopFieldCache::new(1);
+        let a = full_grid(2, 3);
+        let b = full_grid(3, 2);
+        let stats_a = cache.field(2, 3, &a).hbm_stats(&[(0, 1)]);
+        assert_eq!((cache.hits, cache.misses), (0, 1));
+        let again = cache.field(2, 3, &a).hbm_stats(&[(0, 1)]);
+        assert_eq!((cache.hits, cache.misses), (1, 1));
+        assert_eq!(stats_a.1.to_bits(), again.1.to_bits());
+        // over cap: still correct, not retained
+        let direct = HopField::new(3, 2, &b).hbm_stats(&[(5, 1)]);
+        let over = cache.field(3, 2, &b).hbm_stats(&[(5, 1)]);
+        assert_eq!(direct.1.to_bits(), over.1.to_bits());
+        assert_eq!(cache.len(), 1);
+        assert_eq!((cache.hits, cache.misses), (1, 2));
+    }
+}

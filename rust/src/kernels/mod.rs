@@ -1,0 +1,42 @@
+//! The kernel layer: cache-blocked, allocation-free inner loops behind
+//! the system's two hottest paths — the native PPO network (`rl::net`)
+//! and the placement attach-point search (`place::optimize`).
+//!
+//! Every kernel here is a *re-scheduling* of an existing scalar loop,
+//! never a re-derivation: no modeled equation changes, and every result
+//! is bitwise identical to the code it replaced. The rule that makes
+//! blocking safe is stated once and enforced everywhere:
+//!
+//! > **A floating-point reduction keeps its exact accumulation order.**
+//! > Independent outputs (different neurons, different gradient rows,
+//! > different mesh tiles) may be computed in any order and grouped into
+//! > register blocks freely — but the adds *into one accumulator* happen
+//! > in the same sequence the scalar loop used. Integer reductions and
+//! > `min`/`max` folds are order-independent and may be rescheduled at
+//! > will.
+//!
+//! Layout:
+//!
+//! * [`dense`] — row/lane-blocked dense (matmul + bias, optional tanh)
+//!   forward kernels and the fused backward outer-product kernel, all
+//!   with ascending-`k` per-output accumulation.
+//! * [`adam`] — the bias-corrected Adam step fused into a single pass
+//!   over the parameter vector, plus the global grad-norm clip.
+//! * [`hopfield`] — precomputed per-tile Manhattan-distance fields for
+//!   batched HBM attach-point scoring, memoized per occupied-tile set
+//!   ([`hopfield::HopFieldCache`], keyed like `cost::cache::EvalCache`).
+//! * [`oracle`] — the *frozen* pre-kernel scalar implementation of the
+//!   native net ([`oracle::ScalarNet`]), kept verbatim so tests and
+//!   benches can pin bitwise identity and measure speedups against the
+//!   exact code this layer replaced. Never call it from product paths.
+//!
+//! `tests/kernels.rs` holds the property tests; `benches/perf_net.rs`
+//! and `benches/perf_place.rs` record kernel-vs-oracle throughput in the
+//! CI-committed `BENCH_*.json` trajectory.
+
+pub mod adam;
+pub mod dense;
+pub mod hopfield;
+pub mod oracle;
+
+pub use hopfield::{HopField, HopFieldCache};

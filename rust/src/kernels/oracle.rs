@@ -1,0 +1,460 @@
+//! Frozen pre-kernel scalar network: the oracle the blocked kernels are
+//! pinned against.
+//!
+//! [`ScalarNet`] is a verbatim copy of `rl::net::NativeNet` as it stood
+//! before the kernel layer (per-element `dense_tanh` loops, per-call
+//! `ForwardCache` allocations, clone-then-index Adam). It exists only so
+//! `tests/kernels.rs` can assert bitwise identity and
+//! `benches/perf_net.rs` can measure kernel speedups against the exact
+//! code the kernels replaced — the same frozen-oracle technique
+//! `tests/rl_native.rs` uses for the training loop. **Never call this
+//! from product paths**, and never "improve" it: its value is that it
+//! does not change.
+
+use anyhow::{ensure, Result};
+
+use crate::rl::categorical;
+use crate::rl::net::NetShape;
+use crate::runtime::{ForwardOut, UpdateOut, UpdateStats};
+
+const VF_COEF: f64 = 0.5;
+const MAX_GRAD_NORM: f64 = 0.5;
+const ADAM_BETA1: f64 = 0.9;
+const ADAM_BETA2: f64 = 0.999;
+const ADAM_EPS: f64 = 1e-5;
+const ADV_EPS: f64 = 1e-8;
+
+/// Offsets of every tensor inside the flat parameter vector.
+#[derive(Clone, Copy, Debug)]
+struct Offsets {
+    pi_w1: usize,
+    pi_b1: usize,
+    pi_w2: usize,
+    pi_b2: usize,
+    pi_wh: usize,
+    pi_bh: usize,
+    vf_w1: usize,
+    vf_b1: usize,
+    vf_w2: usize,
+    vf_b2: usize,
+    vf_wh: usize,
+    vf_bh: usize,
+}
+
+/// The frozen scalar twin of `rl::net::NativeNet` (see module docs).
+#[derive(Clone, Debug)]
+pub struct ScalarNet {
+    pub shape: NetShape,
+    slices: Vec<(usize, usize)>,
+    off: Offsets,
+    param_count: usize,
+}
+
+/// Per-minibatch forward caches reused by loss and gradient.
+struct ForwardCache {
+    h1p: Vec<f32>,
+    h2p: Vec<f32>,
+    logp: Vec<f32>,
+    h1v: Vec<f32>,
+    h2v: Vec<f32>,
+    val: Vec<f32>,
+}
+
+impl ScalarNet {
+    pub fn new(shape: NetShape) -> ScalarNet {
+        let entries = shape.param_entries();
+        let at = |name: &str| entries.iter().find(|e| e.name == name).unwrap().offset;
+        let off = Offsets {
+            pi_w1: at("pi_w1"),
+            pi_b1: at("pi_b1"),
+            pi_w2: at("pi_w2"),
+            pi_b2: at("pi_b2"),
+            pi_wh: at("pi_wh"),
+            pi_bh: at("pi_bh"),
+            vf_w1: at("vf_w1"),
+            vf_b1: at("vf_b1"),
+            vf_w2: at("vf_w2"),
+            vf_b2: at("vf_b2"),
+            vf_wh: at("vf_wh"),
+            vf_bh: at("vf_bh"),
+        };
+        let slices = shape.head_slices();
+        let param_count = shape.param_count();
+        ScalarNet { shape, slices, off, param_count }
+    }
+
+    /// `out[j] = tanh(Σ_i in[i]·w[i·od + j] + b[j])` for one row.
+    fn dense_tanh(input: &[f32], w: &[f32], b: &[f32], out: &mut [f32]) {
+        let od = out.len();
+        for (j, slot) in out.iter_mut().enumerate() {
+            let mut acc = b[j] as f64;
+            for (i, &x) in input.iter().enumerate() {
+                acc += x as f64 * w[i * od + j] as f64;
+            }
+            *slot = acc.tanh() as f32;
+        }
+    }
+
+    /// Forward every row of `obs` (batch inferred from its length),
+    /// filling the caches; `logp` gets the per-head log-softmax.
+    fn forward_cache(&self, params: &[f32], obs: &[f32], m: usize) -> ForwardCache {
+        let (o, h, a) = (self.shape.obs_dim, self.shape.hidden, self.shape.act_total());
+        let f = &self.off;
+        let mut c = ForwardCache {
+            h1p: vec![0.0; m * h],
+            h2p: vec![0.0; m * h],
+            logp: vec![0.0; m * a],
+            h1v: vec![0.0; m * h],
+            h2v: vec![0.0; m * h],
+            val: vec![0.0; m],
+        };
+        let mut h1_scratch = vec![0.0f32; h];
+        for b in 0..m {
+            let x = &obs[b * o..(b + 1) * o];
+            // policy trunk
+            Self::dense_tanh(
+                x,
+                &params[f.pi_w1..f.pi_w1 + o * h],
+                &params[f.pi_b1..f.pi_b1 + h],
+                &mut c.h1p[b * h..(b + 1) * h],
+            );
+            h1_scratch.copy_from_slice(&c.h1p[b * h..(b + 1) * h]);
+            let h2p = &mut c.h2p[b * h..(b + 1) * h];
+            Self::dense_tanh(
+                &h1_scratch,
+                &params[f.pi_w2..f.pi_w2 + h * h],
+                &params[f.pi_b2..f.pi_b2 + h],
+                h2p,
+            );
+            // logits -> per-head log-softmax
+            let wh = &params[f.pi_wh..f.pi_wh + h * a];
+            let bh = &params[f.pi_bh..f.pi_bh + a];
+            let row = &mut c.logp[b * a..(b + 1) * a];
+            for (j, slot) in row.iter_mut().enumerate() {
+                let mut acc = bh[j] as f64;
+                for (i, &x2) in h2p.iter().enumerate() {
+                    acc += x2 as f64 * wh[i * a + j] as f64;
+                }
+                *slot = acc as f32;
+            }
+            for &(s, e) in &self.slices {
+                let seg = &mut row[s..e];
+                let max = seg.iter().fold(f32::NEG_INFINITY, |m2, &v| m2.max(v)) as f64;
+                let lse = max + seg.iter().map(|&v| (v as f64 - max).exp()).sum::<f64>().ln();
+                for v in seg.iter_mut() {
+                    *v = (*v as f64 - lse) as f32;
+                }
+            }
+            // value trunk
+            Self::dense_tanh(
+                x,
+                &params[f.vf_w1..f.vf_w1 + o * h],
+                &params[f.vf_b1..f.vf_b1 + h],
+                &mut c.h1v[b * h..(b + 1) * h],
+            );
+            h1_scratch.copy_from_slice(&c.h1v[b * h..(b + 1) * h]);
+            let h2v = &mut c.h2v[b * h..(b + 1) * h];
+            Self::dense_tanh(
+                &h1_scratch,
+                &params[f.vf_w2..f.vf_w2 + h * h],
+                &params[f.vf_b2..f.vf_b2 + h],
+                h2v,
+            );
+            let vwh = &params[f.vf_wh..f.vf_wh + h];
+            let mut v = params[f.vf_bh] as f64;
+            for (i, &x2) in h2v.iter().enumerate() {
+                v += x2 as f64 * vwh[i] as f64;
+            }
+            c.val[b] = v as f32;
+        }
+        c
+    }
+
+    /// Policy forward: per-head log-softmax + value for every row.
+    pub fn forward(&self, params: &[f32], obs: &[f32]) -> Result<ForwardOut> {
+        ensure!(
+            params.len() == self.param_count,
+            "params len {} != {}",
+            params.len(),
+            self.param_count
+        );
+        ensure!(
+            !obs.is_empty() && obs.len() % self.shape.obs_dim == 0,
+            "obs len {} not a multiple of obs_dim {}",
+            obs.len(),
+            self.shape.obs_dim
+        );
+        let m = obs.len() / self.shape.obs_dim;
+        let c = self.forward_cache(params, obs, m);
+        Ok(ForwardOut { logp_all: c.logp, value: c.val })
+    }
+
+    /// The SB3 PPO minibatch loss (forward only).
+    #[allow(clippy::too_many_arguments)]
+    pub fn ppo_loss(
+        &self,
+        params: &[f32],
+        obs: &[f32],
+        actions: &[i32],
+        old_logp: &[f32],
+        advantages: &[f32],
+        returns: &[f32],
+        hyper: [f32; 3],
+    ) -> f32 {
+        let m = old_logp.len();
+        let c = self.forward_cache(params, obs, m);
+        let (loss, ..) = self.loss_terms(&c, actions, old_logp, advantages, returns, hyper);
+        loss as f32
+    }
+
+    /// Loss pieces over a filled cache.
+    #[allow(clippy::type_complexity)]
+    fn loss_terms(
+        &self,
+        c: &ForwardCache,
+        actions: &[i32],
+        old_logp: &[f32],
+        advantages: &[f32],
+        returns: &[f32],
+        hyper: [f32; 3],
+    ) -> (f64, f64, f64, f64, f64, f64, Vec<f64>, Vec<f64>) {
+        let m = old_logp.len();
+        let a = self.shape.act_total();
+        let nh = self.shape.n_heads();
+        let (clip, ent_coef) = (hyper[1] as f64, hyper[2] as f64);
+
+        let mean = advantages.iter().map(|&x| x as f64).sum::<f64>() / m as f64;
+        let var = advantages.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / m as f64;
+        let std = var.sqrt();
+
+        let mut pi_loss = 0.0f64;
+        let mut vf_loss = 0.0f64;
+        let mut ent_sum = 0.0f64;
+        let mut kl_sum = 0.0f64;
+        let mut clipped = 0usize;
+        let mut dlp = vec![0.0f64; m];
+        let mut lps = vec![0.0f64; m];
+        for b in 0..m {
+            let row = &c.logp[b * a..(b + 1) * a];
+            let mut lp = 0.0f64;
+            for (h, &(s, _e)) in self.slices.iter().enumerate() {
+                lp += row[s + actions[b * nh + h] as usize] as f64;
+            }
+            lps[b] = lp;
+            let adv = (advantages[b] as f64 - mean) / (std + ADV_EPS);
+            let log_ratio = lp - old_logp[b] as f64;
+            let ratio = log_ratio.exp();
+            let unclipped = adv * ratio;
+            let cl = adv * ratio.clamp(1.0 - clip, 1.0 + clip);
+            pi_loss -= unclipped.min(cl) / m as f64;
+            if unclipped <= cl {
+                dlp[b] = -adv * ratio / m as f64;
+            }
+            if (ratio - 1.0).abs() > clip {
+                clipped += 1;
+            }
+            kl_sum += ratio - 1.0 - log_ratio;
+            vf_loss += (returns[b] as f64 - c.val[b] as f64).powi(2) / m as f64;
+            ent_sum += categorical::entropy(row, &self.slices);
+        }
+        let entropy = ent_sum / m as f64;
+        let loss = pi_loss + VF_COEF * vf_loss - ent_coef * entropy;
+        (
+            loss,
+            pi_loss,
+            vf_loss,
+            entropy,
+            kl_sum / m as f64,
+            clipped as f64 / m as f64,
+            dlp,
+            lps,
+        )
+    }
+
+    /// One PPO minibatch Adam step — the frozen scalar loop.
+    #[allow(clippy::too_many_arguments)]
+    pub fn ppo_update(
+        &self,
+        params: &[f32],
+        adam_m: &[f32],
+        adam_v: &[f32],
+        step: f32,
+        obs: &[f32],
+        actions: &[i32],
+        old_logp: &[f32],
+        advantages: &[f32],
+        returns: &[f32],
+        hyper: [f32; 3],
+    ) -> Result<UpdateOut> {
+        let pc = self.param_count;
+        ensure!(
+            params.len() == pc && adam_m.len() == pc && adam_v.len() == pc,
+            "param/adam vector length mismatch"
+        );
+        let m = old_logp.len();
+        let (o, h, a, nh) =
+            (self.shape.obs_dim, self.shape.hidden, self.shape.act_total(), self.shape.n_heads());
+        ensure!(
+            obs.len() == m * o
+                && actions.len() == m * nh
+                && advantages.len() == m
+                && returns.len() == m,
+            "minibatch shape mismatch (expected {m} rows)"
+        );
+
+        let c = self.forward_cache(params, obs, m);
+        let (loss, pi_loss, vf_loss, entropy, approx_kl, clip_frac, dlp, _lps) =
+            self.loss_terms(&c, actions, old_logp, advantages, returns, hyper);
+        let ent_coef = hyper[2] as f64;
+
+        // ---- backward ----
+        let f = &self.off;
+        let mut grad = vec![0f32; pc];
+        let mut dlogits = vec![0f64; a];
+        let mut dh = vec![0f64; h];
+        let mut dpre = vec![0f64; h];
+        for b in 0..m {
+            let row = &c.logp[b * a..(b + 1) * a];
+            for (hd, &(s, e)) in self.slices.iter().enumerate() {
+                let act = s + actions[b * nh + hd] as usize;
+                let head_ent = categorical::entropy(row, &[(s, e)]);
+                for j in s..e {
+                    let p = (row[j] as f64).exp();
+                    let sel = if j == act { 1.0 } else { 0.0 };
+                    dlogits[j] = dlp[b] * (sel - p)
+                        + (ent_coef / m as f64) * p * (row[j] as f64 + head_ent);
+                }
+            }
+            let h2p = &c.h2p[b * h..(b + 1) * h];
+            for i in 0..h {
+                let mut acc = 0.0f64;
+                let wrow = &params[f.pi_wh + i * a..f.pi_wh + (i + 1) * a];
+                let grow = &mut grad[f.pi_wh + i * a..f.pi_wh + (i + 1) * a];
+                let xi = h2p[i] as f64;
+                for j in 0..a {
+                    grow[j] += (xi * dlogits[j]) as f32;
+                    acc += dlogits[j] * wrow[j] as f64;
+                }
+                dh[i] = acc;
+            }
+            for j in 0..a {
+                grad[f.pi_bh + j] += dlogits[j] as f32;
+            }
+            Self::backprop_trunk(
+                params, &mut grad, f.pi_w1, f.pi_b1, f.pi_w2, f.pi_b2, o, h,
+                &obs[b * o..(b + 1) * o],
+                &c.h1p[b * h..(b + 1) * h],
+                h2p,
+                &mut dh,
+                &mut dpre,
+            );
+            let dv = VF_COEF * 2.0 * (c.val[b] as f64 - returns[b] as f64) / m as f64;
+            let h2v = &c.h2v[b * h..(b + 1) * h];
+            for i in 0..h {
+                grad[f.vf_wh + i] += (h2v[i] as f64 * dv) as f32;
+                dh[i] = dv * params[f.vf_wh + i] as f64;
+            }
+            grad[f.vf_bh] += dv as f32;
+            Self::backprop_trunk(
+                params, &mut grad, f.vf_w1, f.vf_b1, f.vf_w2, f.vf_b2, o, h,
+                &obs[b * o..(b + 1) * o],
+                &c.h1v[b * h..(b + 1) * h],
+                h2v,
+                &mut dh,
+                &mut dpre,
+            );
+        }
+
+        // global grad-norm clip
+        let gnorm = grad.iter().map(|&g| g as f64 * g as f64).sum::<f64>().sqrt();
+        let scale = (MAX_GRAD_NORM / (gnorm + 1e-12)).min(1.0);
+        if scale < 1.0 {
+            for g in &mut grad {
+                *g = (*g as f64 * scale) as f32;
+            }
+        }
+
+        // Adam with bias correction (torch semantics, matches model.py)
+        let lr = hyper[0] as f64;
+        let t = step as f64;
+        let mut new_p = params.to_vec();
+        let mut new_m = adam_m.to_vec();
+        let mut new_v = adam_v.to_vec();
+        let mut upd_sq = 0.0f64;
+        let (c1, c2) = (1.0 - ADAM_BETA1.powf(t), 1.0 - ADAM_BETA2.powf(t));
+        for i in 0..pc {
+            let g = grad[i] as f64;
+            let m1 = ADAM_BETA1 * new_m[i] as f64 + (1.0 - ADAM_BETA1) * g;
+            let v1 = ADAM_BETA2 * new_v[i] as f64 + (1.0 - ADAM_BETA2) * g * g;
+            new_m[i] = m1 as f32;
+            new_v[i] = v1 as f32;
+            let update = lr * (m1 / c1) / ((v1 / c2).sqrt() + ADAM_EPS);
+            upd_sq += update * update;
+            new_p[i] = (new_p[i] as f64 - update) as f32;
+        }
+
+        Ok(UpdateOut {
+            params: new_p,
+            adam_m: new_m,
+            adam_v: new_v,
+            stats: UpdateStats {
+                loss: loss as f32,
+                pi_loss: pi_loss as f32,
+                vf_loss: vf_loss as f32,
+                entropy: entropy as f32,
+                approx_kl: approx_kl as f32,
+                clip_frac: clip_frac as f32,
+                grad_norm: gnorm as f32,
+                update_norm: upd_sq.sqrt() as f32,
+            },
+        })
+    }
+
+    /// Backprop a two-layer tanh trunk given `dh` = dL/d(layer-2
+    /// activation); accumulates weight/bias grads and scratches `dh`.
+    #[allow(clippy::too_many_arguments)]
+    fn backprop_trunk(
+        params: &[f32],
+        grad: &mut [f32],
+        w1: usize,
+        b1: usize,
+        w2: usize,
+        b2: usize,
+        o: usize,
+        h: usize,
+        x: &[f32],
+        h1: &[f32],
+        h2: &[f32],
+        dh: &mut [f64],
+        dpre: &mut [f64],
+    ) {
+        // layer 2: pre-activation grad, weights, then dh1
+        for j in 0..h {
+            dpre[j] = dh[j] * (1.0 - (h2[j] as f64).powi(2));
+            grad[b2 + j] += dpre[j] as f32;
+        }
+        for i in 0..h {
+            let xi = h1[i] as f64;
+            let wrow = &params[w2 + i * h..w2 + (i + 1) * h];
+            let grow = &mut grad[w2 + i * h..w2 + (i + 1) * h];
+            let mut acc = 0.0f64;
+            for j in 0..h {
+                grow[j] += (xi * dpre[j]) as f32;
+                acc += dpre[j] * wrow[j] as f64;
+            }
+            dh[i] = acc;
+        }
+        // layer 1
+        for j in 0..h {
+            dpre[j] = dh[j] * (1.0 - (h1[j] as f64).powi(2));
+            grad[b1 + j] += dpre[j] as f32;
+        }
+        for i in 0..o {
+            let xi = x[i] as f64;
+            let grow = &mut grad[w1 + i * h..w1 + (i + 1) * h];
+            for j in 0..h {
+                grow[j] += (xi * dpre[j]) as f32;
+            }
+        }
+    }
+}

@@ -20,6 +20,11 @@
 //!   tables, a criterion-lite bench harness and a proptest-lite framework.
 //! * [`model`] — the design space of Table 1 and the packaging-technology
 //!   tables (Tables 3–4).
+//! * [`kernels`] — the compute-kernel layer: cache-blocked dense
+//!   matmul/backprop, fused Adam, and the memoized per-tile hop/distance
+//!   field ([`kernels::HopField`]) behind the placement optimizer — every
+//!   kernel bitwise-identical to the scalar loops it replaced (pinned
+//!   against [`kernels::oracle`] in `tests/kernels.rs`).
 //! * [`mesh`] — 2D-mesh Network-on-Package hop/latency model (Fig. 4).
 //! * [`place`] — the placement engine: explicit chiplet/HBM placement
 //!   ([`place::Placement`]: occupied tiles + HBM attach points, true
@@ -62,6 +67,7 @@
 pub mod config;
 pub mod cost;
 pub mod gym;
+pub mod kernels;
 pub mod mesh;
 pub mod model;
 pub mod opt;

@@ -319,6 +319,30 @@ impl Placement {
         }
     }
 
+    /// [`Placement::hop_stats_with_ai`] answered from a precomputed
+    /// [`crate::kernels::HopField`] built over this placement's `(m, n,
+    /// tiles)`: the per-tile nearest-attach scan becomes table lookups.
+    /// Bitwise identical to the coordinate scan (integer min over
+    /// attaches, same tile-order sum, same mean division) — pinned in
+    /// `tests/kernels.rs`. The attach-point search's inner loop skips
+    /// even this method's attach-list assembly and calls
+    /// `HopField::hbm_stats` on a reused buffer directly.
+    pub fn hop_stats_with_field(
+        &self,
+        ai: &HopStats,
+        field: &crate::kernels::HopField,
+    ) -> HopStats {
+        debug_assert_eq!((field.m, field.n), (self.m, self.n), "field from another grid");
+        debug_assert_eq!(field.n_tiles(), self.tiles.len(), "field over another tile set");
+        let attaches: Vec<(usize, usize)> = self
+            .hbm
+            .iter()
+            .map(|a| (a.tile.0 * self.n + a.tile.1, a.extra_hops))
+            .collect();
+        let (max_hbm, mean_hbm) = field.hbm_stats(&attaches);
+        HopStats { max_hbm_hops: max_hbm, mean_hbm_hops: mean_hbm, ..*ai }
+    }
+
     /// ASCII render of the attach layout: `H` = 2.5D attach tile, `S` =
     /// stacked attach tile, `.` = plain footprint (CLI `place` output).
     pub fn render(&self) -> String {
@@ -470,6 +494,23 @@ mod tests {
         assert_eq!(fast.max_ai_hops, full.max_ai_hops);
         assert_eq!(fast.mean_ai_hops.to_bits(), full.mean_ai_hops.to_bits());
         assert_eq!(fast.n_edges, full.n_edges);
+    }
+
+    #[test]
+    fn field_stats_match_the_coordinate_scan() {
+        let locs = locs_of(0b011110);
+        let canonical = Placement::canonical(30, &locs);
+        let ai = canonical.hop_stats();
+        let mut moved = canonical.clone();
+        moved.hbm[0].tile = (4, 5);
+        moved.hbm[2].tile = (0, 0);
+        let field = crate::kernels::HopField::new(moved.m, moved.n, &moved.tiles);
+        let got = moved.hop_stats_with_field(&ai, &field);
+        let want = moved.hop_stats_with_ai(&ai);
+        assert_eq!(got.max_hbm_hops, want.max_hbm_hops);
+        assert_eq!(got.mean_hbm_hops.to_bits(), want.mean_hbm_hops.to_bits());
+        assert_eq!(got.max_ai_hops, want.max_ai_hops);
+        assert_eq!(got.n_edges, want.n_edges);
     }
 
     #[test]

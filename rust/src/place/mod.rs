@@ -30,6 +30,7 @@ pub mod optimize;
 
 pub use layout::{HbmAttach, Placement, PlacementMode};
 pub use optimize::{
-    canonical_summary, comm_latency_ns_of, decode_placement, optimize_placement, refine_outcome,
-    PlaceConfig, PlacementOutcome, PlacementSummary, PLACE_HEADS,
+    canonical_summary, comm_latency_ns_of, decode_placement, optimize_placement,
+    optimize_placement_cached, refine_outcome, PlaceConfig, PlacementOutcome, PlacementSummary,
+    PLACE_HEADS,
 };

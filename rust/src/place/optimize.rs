@@ -13,7 +13,8 @@
 
 use crate::cost::throughput::{latencies_from_stats, latencies_placed};
 use crate::cost::{evaluate, evaluate_with_placement, Calib};
-use crate::mesh::grid::mesh_dims;
+use crate::kernels::HopFieldCache;
+use crate::mesh::grid::{mesh_dims, HopStats};
 use crate::model::space::{DesignPoint, DesignSpace, HbmLoc, N_HEADS};
 use crate::opt::combined::{reward_cmp, select_best, OptOutcome};
 use crate::opt::search::{DriverConfig, FnObjective};
@@ -172,9 +173,13 @@ pub fn refine_outcome(
     cfg: &PlaceConfig,
 ) -> Vec<PlacementSummary> {
     let mut summaries = Vec::with_capacity(outcome.candidates.len());
+    // one distance-field cache across all candidates: designs sharing a
+    // footprint count share one memoized table (sweeps repeat meshes a
+    // lot), so the per-candidate search pays only table lookups
+    let mut fields = HopFieldCache::default();
     for c in &mut outcome.candidates {
         let p = space.decode(&c.action);
-        let found = optimize_placement(space, calib, &p, cfg);
+        let found = optimize_placement_cached(space, calib, &p, cfg, &mut fields);
         let placed = evaluate_with_placement(calib, &p, Some(&found.placement));
         if reward_cmp(placed.reward, c.eval.reward).is_gt() {
             c.eval = placed;
@@ -204,6 +209,19 @@ pub fn optimize_placement(
     p: &DesignPoint,
     cfg: &PlaceConfig,
 ) -> PlacementOutcome {
+    optimize_placement_cached(space, calib, p, cfg, &mut HopFieldCache::default())
+}
+
+/// [`optimize_placement`] with a caller-owned [`HopFieldCache`], so
+/// batch callers ([`refine_outcome`], sweeps) share one memoized
+/// distance field per occupied-tile set across designs.
+pub fn optimize_placement_cached(
+    space: &DesignSpace,
+    calib: &Calib,
+    p: &DesignPoint,
+    cfg: &PlaceConfig,
+    fields: &mut HopFieldCache,
+) -> PlacementOutcome {
     let n_fp = p.n_footprints();
     let locs = p.hbm_locs();
 
@@ -223,17 +241,33 @@ pub fn optimize_placement(
     // latency as its reward, so every reused driver maximizes the right
     // thing without a placement-specific code path. The AI-side hop
     // fields never change while only attaches move, so they are hoisted
-    // once and the inner loop pays just the O(tiles·attaches) HBM scan
+    // once; the HBM side scores through a precomputed per-tile distance
+    // field (`kernels::HopField`, built once per tile set and memoized
+    // in `fields`), so each candidate pays tiles×attaches table lookups
+    // into a reused scratch buffer — bitwise identical to the
+    // `hop_stats_with_ai` coordinate rescan it replaced (pinned in
+    // `tests/kernels.rs`), and allocation-free per candidate
     // (the driver also spends permits mutating the 8 non-PLACE heads —
     // dead moves, accepted as the price of reusing the 14-head drivers
     // unchanged; the cheap objective keeps that waste in the noise).
     let base = evaluate(calib, p);
     let (m, n) = mesh_dims(n_fp);
-    let mut work = Placement::canonical(n_fp, &locs);
+    let work = Placement::canonical(n_fp, &locs);
     let ai_stats = work.hop_stats();
+    let field = fields.field(m, n, &work.tiles);
+    let n_tiles = m * n;
+    // per-site extra hops in locs order (0 for 3D-stacked, 1 for 2.5D),
+    // exactly what `attaches_for` would re-derive per candidate
+    let extras: Vec<usize> = work.hbm.iter().map(|a| a.extra_hops).collect();
+    let mut attach_scratch = vec![(0usize, 0usize); locs.len()];
     let mut obj = FnObjective(|a: &[usize]| {
-        work.hbm = attaches_for(&locs, a, m, n);
-        let lat = latencies_from_stats(p, &work.hop_stats_with_ai(&ai_stats));
+        for (j, slot) in attach_scratch.iter_mut().enumerate() {
+            // tile (idx/n, idx%n) is grid cell (idx/n)·n + idx%n = idx
+            *slot = (a[PLACE_HEADS[j]] % n_tiles, extras[j]);
+        }
+        let (max_hbm, mean_hbm) = field.hbm_stats(&attach_scratch);
+        let stats = HopStats { max_hbm_hops: max_hbm, mean_hbm_hops: mean_hbm, ..ai_stats };
+        let lat = latencies_from_stats(p, &stats);
         let mut e = base;
         e.reward = -(lat.ai2ai_ns + lat.hbm2ai_ns);
         e
@@ -335,6 +369,24 @@ mod tests {
         let b = optimize_placement(&space, &calib, &p, &cfg);
         assert_eq!(a.placement, b.placement);
         assert_eq!(a.optimized_ns.to_bits(), b.optimized_ns.to_bits());
+    }
+
+    #[test]
+    fn cached_fields_change_nothing() {
+        // A shared HopFieldCache must be a pure memoization: same walk,
+        // same layout, same ns figures — and actually hit on reuse.
+        let (space, p) = table6_point();
+        let calib = Calib::default();
+        let cfg = PlaceConfig { driver: DriverConfig::greedy_with_budget(400), seed: 3 };
+        let mut fields = HopFieldCache::default();
+        let a = optimize_placement_cached(&space, &calib, &p, &cfg, &mut fields);
+        let b = optimize_placement_cached(&space, &calib, &p, &cfg, &mut fields);
+        let c = optimize_placement(&space, &calib, &p, &cfg);
+        assert_eq!(a.placement, c.placement);
+        assert_eq!(a.optimized_ns.to_bits(), c.optimized_ns.to_bits());
+        assert_eq!(a.canonical_ns.to_bits(), c.canonical_ns.to_bits());
+        assert_eq!(b.placement, a.placement);
+        assert!(fields.hits >= 1, "second run must reuse the field");
     }
 
     #[test]

@@ -80,6 +80,27 @@ pub fn entropy(logp_all: &[f32], head_slices: &[(usize, usize)]) -> f64 {
     ent
 }
 
+/// [`entropy`] with the probabilities pre-materialized: `probs[i]` must
+/// be `exp(logp_all[i] as f64)` (e.g. the PPO update's per-row exp
+/// cache, computed once and shared across loss and gradient). Same
+/// slice/element order and the same `p · log p` f64 product as
+/// [`entropy`], so the result is bitwise identical — `exp` is
+/// deterministic, only the redundant re-exponentiation is skipped.
+pub fn entropy_from_probs(
+    logp_all: &[f32],
+    probs: &[f64],
+    head_slices: &[(usize, usize)],
+) -> f64 {
+    debug_assert_eq!(logp_all.len(), probs.len());
+    let mut ent = 0.0f64;
+    for &(start, end) in head_slices {
+        for (i, &lp) in logp_all[start..end].iter().enumerate() {
+            ent -= probs[start + i] * lp as f64;
+        }
+    }
+    ent
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,6 +168,23 @@ mod tests {
         let h1 = -(0.7 * 0.7f64.ln() + 0.3 * 0.3f64.ln());
         let h2 = -(0.2 * 0.2f64.ln() + 0.5 * 0.5f64.ln() + 0.3 * 0.3f64.ln());
         assert!((h - (h1 + h2)).abs() < 1e-6, "{h} vs {}", h1 + h2);
+    }
+
+    #[test]
+    fn entropy_from_probs_is_bitwise_entropy() {
+        let logp_all = logp_of(&[0.7, 0.3, 0.2, 0.5, 0.3]);
+        let slices = [(0, 2), (2, 5)];
+        let probs: Vec<f64> = logp_all.iter().map(|&lp| (lp as f64).exp()).collect();
+        let want = entropy(&logp_all, &slices);
+        let got = entropy_from_probs(&logp_all, &probs, &slices);
+        assert_eq!(got.to_bits(), want.to_bits());
+        // per-head calls (the gradient's usage) agree too
+        for &s in &slices {
+            assert_eq!(
+                entropy_from_probs(&logp_all, &probs, &[s]).to_bits(),
+                entropy(&logp_all, &[s]).to_bits()
+            );
+        }
     }
 
     /// Uniform per-head log-softmax for a layout: logp_i = −ln d per head.

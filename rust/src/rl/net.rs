@@ -18,9 +18,19 @@
 //! path is still the bit-pinned one), only algorithmic equivalence —
 //! `tests/rl_native.rs` checks the gradient against finite differences
 //! and the training loop against a frozen pre-refactor oracle.
+//!
+//! Inner loops run on the blocked kernels in [`crate::kernels`]
+//! (`dense` forward/backward, fused `adam`), which are bitwise
+//! identical to the scalar loops they replaced — pinned against the
+//! frozen [`crate::kernels::oracle::ScalarNet`] by `tests/kernels.rs`.
+//! All per-call buffers live in a [`Scratch`] behind a `RefCell`, so
+//! forwards and updates allocate nothing in steady state.
+
+use std::cell::RefCell;
 
 use anyhow::{ensure, Result};
 
+use crate::kernels::{adam, dense};
 use crate::model::space::ActionLayout;
 use crate::runtime::{ForwardOut, ParamEntry, UpdateOut, UpdateStats};
 
@@ -146,6 +156,9 @@ struct Offsets {
 /// The native execution engine: stateless math over caller-owned flat
 /// parameter vectors, mirroring the `runtime::Engine` call surface
 /// (`forward` ≙ `policy_forward`, `ppo_update` ≙ the update artifact).
+///
+/// Not `Sync`: the reusable [`Scratch`] sits behind a `RefCell`, so a
+/// net is single-threaded state — every rollout worker owns its own.
 #[derive(Clone, Debug)]
 pub struct NativeNet {
     pub shape: NetShape,
@@ -154,16 +167,37 @@ pub struct NativeNet {
     /// Cached `shape.param_count()` — the per-step rollout forward
     /// validates against this without rebuilding the entry list.
     param_count: usize,
+    /// Reusable forward/backward buffers; see [`Scratch`].
+    scratch: RefCell<Scratch>,
 }
 
-/// Per-minibatch forward caches reused by loss and gradient.
-struct ForwardCache {
+/// Every buffer a forward or update needs, owned by the net and reused
+/// across calls — resized (never reallocated, in steady state) to the
+/// current minibatch. Replaces the per-call `ForwardCache` Vecs and the
+/// per-update grad/dlogits/dh/dpre allocations of the scalar era.
+#[derive(Clone, Debug, Default)]
+struct Scratch {
+    // forward caches: [m × hidden] activations, [m × act_total] logp,
+    // [m] values
     h1p: Vec<f32>,
     h2p: Vec<f32>,
     logp: Vec<f32>,
     h1v: Vec<f32>,
     h2v: Vec<f32>,
     val: Vec<f32>,
+    /// `exp(logp)` per minibatch entry, computed once per update and
+    /// shared by the entropy terms and the logit gradient (the scalar
+    /// loop re-exponentiated three times).
+    probs: Vec<f64>,
+    /// Per-row d loss / d joint-logp.
+    dlp: Vec<f64>,
+    /// Per-row joint log-prob of the taken action.
+    lps: Vec<f64>,
+    // backward scratch
+    dlogits: Vec<f64>,
+    dh: Vec<f64>,
+    dpre: Vec<f64>,
+    grad: Vec<f32>,
 }
 
 impl NativeNet {
@@ -186,102 +220,105 @@ impl NativeNet {
         };
         let slices = shape.head_slices();
         let param_count = shape.param_count();
-        NativeNet { shape, slices, off, param_count }
+        NativeNet { shape, slices, off, param_count, scratch: RefCell::new(Scratch::default()) }
     }
 
-    /// `out[j] = tanh(Σ_i in[i]·w[i·od + j] + b[j])` for one row.
-    fn dense_tanh(input: &[f32], w: &[f32], b: &[f32], out: &mut [f32]) {
-        let od = out.len();
-        for (j, slot) in out.iter_mut().enumerate() {
-            let mut acc = b[j] as f64;
-            for (i, &x) in input.iter().enumerate() {
-                acc += x as f64 * w[i * od + j] as f64;
-            }
-            *slot = acc.tanh() as f32;
-        }
-    }
-
-    /// Forward every row of `obs` (batch inferred from its length),
-    /// filling the caches; `logp` gets the per-head log-softmax.
-    fn forward_cache(&self, params: &[f32], obs: &[f32], m: usize) -> ForwardCache {
+    /// Forward every row of `obs` into the scratch caches via the
+    /// blocked dense kernels; `logp` gets the per-head log-softmax.
+    /// Bitwise identical to the scalar per-row walk (`ScalarNet`): every
+    /// output's reduction keeps ascending-`k` order, and the in-place
+    /// log-softmax is the verbatim scalar loop.
+    fn forward_cache(&self, params: &[f32], obs: &[f32], m: usize, s: &mut Scratch) {
         let (o, h, a) = (self.shape.obs_dim, self.shape.hidden, self.shape.act_total());
         let f = &self.off;
-        let mut c = ForwardCache {
-            h1p: vec![0.0; m * h],
-            h2p: vec![0.0; m * h],
-            logp: vec![0.0; m * a],
-            h1v: vec![0.0; m * h],
-            h2v: vec![0.0; m * h],
-            val: vec![0.0; m],
-        };
-        // one scratch copy of the layer-1 activation per call (not per
-        // row): the borrow checker cannot split `c.h1p[row]` from
-        // `c.h2p[row]` through the dense_tanh call otherwise
-        let mut h1_scratch = vec![0.0f32; h];
+        s.h1p.resize(m * h, 0.0);
+        s.h2p.resize(m * h, 0.0);
+        s.logp.resize(m * a, 0.0);
+        s.h1v.resize(m * h, 0.0);
+        s.h2v.resize(m * h, 0.0);
+        s.val.resize(m, 0.0);
+        // policy trunk
+        dense::matmul_bias_tanh(
+            obs,
+            m,
+            o,
+            &params[f.pi_w1..f.pi_w1 + o * h],
+            &params[f.pi_b1..f.pi_b1 + h],
+            h,
+            &mut s.h1p,
+        );
+        dense::matmul_bias_tanh(
+            &s.h1p,
+            m,
+            h,
+            &params[f.pi_w2..f.pi_w2 + h * h],
+            &params[f.pi_b2..f.pi_b2 + h],
+            h,
+            &mut s.h2p,
+        );
+        // logits -> per-head log-softmax
+        dense::matmul_bias(
+            &s.h2p,
+            m,
+            h,
+            &params[f.pi_wh..f.pi_wh + h * a],
+            &params[f.pi_bh..f.pi_bh + a],
+            a,
+            &mut s.logp,
+        );
         for b in 0..m {
-            let x = &obs[b * o..(b + 1) * o];
-            // policy trunk
-            Self::dense_tanh(
-                x,
-                &params[f.pi_w1..f.pi_w1 + o * h],
-                &params[f.pi_b1..f.pi_b1 + h],
-                &mut c.h1p[b * h..(b + 1) * h],
-            );
-            h1_scratch.copy_from_slice(&c.h1p[b * h..(b + 1) * h]);
-            let h2p = &mut c.h2p[b * h..(b + 1) * h];
-            Self::dense_tanh(
-                &h1_scratch,
-                &params[f.pi_w2..f.pi_w2 + h * h],
-                &params[f.pi_b2..f.pi_b2 + h],
-                h2p,
-            );
-            // logits -> per-head log-softmax
-            let wh = &params[f.pi_wh..f.pi_wh + h * a];
-            let bh = &params[f.pi_bh..f.pi_bh + a];
-            let row = &mut c.logp[b * a..(b + 1) * a];
-            for (j, slot) in row.iter_mut().enumerate() {
-                let mut acc = bh[j] as f64;
-                for (i, &x2) in h2p.iter().enumerate() {
-                    acc += x2 as f64 * wh[i * a + j] as f64;
-                }
-                *slot = acc as f32;
-            }
-            for &(s, e) in &self.slices {
-                let seg = &mut row[s..e];
+            let row = &mut s.logp[b * a..(b + 1) * a];
+            for &(st, e) in &self.slices {
+                let seg = &mut row[st..e];
                 let max = seg.iter().fold(f32::NEG_INFINITY, |m2, &v| m2.max(v)) as f64;
                 let lse = max + seg.iter().map(|&v| (v as f64 - max).exp()).sum::<f64>().ln();
                 for v in seg.iter_mut() {
                     *v = (*v as f64 - lse) as f32;
                 }
             }
-            // value trunk
-            Self::dense_tanh(
-                x,
-                &params[f.vf_w1..f.vf_w1 + o * h],
-                &params[f.vf_b1..f.vf_b1 + h],
-                &mut c.h1v[b * h..(b + 1) * h],
-            );
-            h1_scratch.copy_from_slice(&c.h1v[b * h..(b + 1) * h]);
-            let h2v = &mut c.h2v[b * h..(b + 1) * h];
-            Self::dense_tanh(
-                &h1_scratch,
-                &params[f.vf_w2..f.vf_w2 + h * h],
-                &params[f.vf_b2..f.vf_b2 + h],
-                h2v,
-            );
-            let vwh = &params[f.vf_wh..f.vf_wh + h];
-            let mut v = params[f.vf_bh] as f64;
-            for (i, &x2) in h2v.iter().enumerate() {
-                v += x2 as f64 * vwh[i] as f64;
-            }
-            c.val[b] = v as f32;
         }
-        c
+        // value trunk + width-1 head
+        dense::matmul_bias_tanh(
+            obs,
+            m,
+            o,
+            &params[f.vf_w1..f.vf_w1 + o * h],
+            &params[f.vf_b1..f.vf_b1 + h],
+            h,
+            &mut s.h1v,
+        );
+        dense::matmul_bias_tanh(
+            &s.h1v,
+            m,
+            h,
+            &params[f.vf_w2..f.vf_w2 + h * h],
+            &params[f.vf_b2..f.vf_b2 + h],
+            h,
+            &mut s.h2v,
+        );
+        dense::matmul_bias(
+            &s.h2v,
+            m,
+            h,
+            &params[f.vf_wh..f.vf_wh + h],
+            &params[f.vf_bh..f.vf_bh + 1],
+            1,
+            &mut s.val,
+        );
     }
 
     /// Policy forward: per-head log-softmax + value for every
     /// observation row (the `runtime::Engine::policy_forward` shape).
     pub fn forward(&self, params: &[f32], obs: &[f32]) -> Result<ForwardOut> {
+        let mut out = ForwardOut { logp_all: Vec::new(), value: Vec::new() };
+        self.forward_into(params, obs, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`NativeNet::forward`] writing into a caller-owned `ForwardOut` —
+    /// the rollout hot path reuses one output across every step, so the
+    /// per-step forward allocates nothing in steady state.
+    pub fn forward_into(&self, params: &[f32], obs: &[f32], out: &mut ForwardOut) -> Result<()> {
         ensure!(
             params.len() == self.param_count,
             "params len {} != {}",
@@ -295,8 +332,13 @@ impl NativeNet {
             self.shape.obs_dim
         );
         let m = obs.len() / self.shape.obs_dim;
-        let c = self.forward_cache(params, obs, m);
-        Ok(ForwardOut { logp_all: c.logp, value: c.val })
+        let s = &mut *self.scratch.borrow_mut();
+        self.forward_cache(params, obs, m, s);
+        out.logp_all.clear();
+        out.logp_all.extend_from_slice(&s.logp);
+        out.value.clear();
+        out.value.extend_from_slice(&s.val);
+        Ok(())
     }
 
     /// The SB3 PPO minibatch loss (forward only) — shared by the update
@@ -313,24 +355,38 @@ impl NativeNet {
         hyper: [f32; 3],
     ) -> f32 {
         let m = old_logp.len();
-        let c = self.forward_cache(params, obs, m);
-        let (loss, ..) = self.loss_terms(&c, actions, old_logp, advantages, returns, hyper);
+        let a = self.shape.act_total();
+        let s = &mut *self.scratch.borrow_mut();
+        self.forward_cache(params, obs, m, s);
+        s.probs.resize(m * a, 0.0);
+        s.dlp.resize(m, 0.0);
+        s.lps.resize(m, 0.0);
+        let Scratch { logp, val, probs, dlp, lps, .. } = s;
+        let (loss, ..) = self.loss_terms(
+            logp, val, actions, old_logp, advantages, returns, hyper, probs, dlp, lps,
+        );
         loss as f32
     }
 
-    /// Loss pieces over a filled cache: (loss, pi_loss, vf_loss,
-    /// entropy, approx_kl, clip_frac, per-row d loss/d joint-logp,
-    /// per-row joint logp).
-    #[allow(clippy::type_complexity)]
+    /// Loss pieces over filled forward caches: (loss, pi_loss, vf_loss,
+    /// entropy, approx_kl, clip_frac). Writes `probs[b·a + j] =
+    /// exp(logp[b·a + j])` (exp'd once, shared with the backward pass),
+    /// the per-row d loss/d joint-logp into `dlp`, and the per-row joint
+    /// logp into `lps` — all pre-sized by the caller.
+    #[allow(clippy::too_many_arguments)]
     fn loss_terms(
         &self,
-        c: &ForwardCache,
+        logp: &[f32],
+        val: &[f32],
         actions: &[i32],
         old_logp: &[f32],
         advantages: &[f32],
         returns: &[f32],
         hyper: [f32; 3],
-    ) -> (f64, f64, f64, f64, f64, f64, Vec<f64>, Vec<f64>) {
+        probs: &mut [f64],
+        dlp: &mut [f64],
+        lps: &mut [f64],
+    ) -> (f64, f64, f64, f64, f64, f64) {
         let m = old_logp.len();
         let a = self.shape.act_total();
         let nh = self.shape.n_heads();
@@ -346,10 +402,12 @@ impl NativeNet {
         let mut ent_sum = 0.0f64;
         let mut kl_sum = 0.0f64;
         let mut clipped = 0usize;
-        let mut dlp = vec![0.0f64; m];
-        let mut lps = vec![0.0f64; m];
         for b in 0..m {
-            let row = &c.logp[b * a..(b + 1) * a];
+            let row = &logp[b * a..(b + 1) * a];
+            let prow = &mut probs[b * a..(b + 1) * a];
+            for (slot, &lp) in prow.iter_mut().zip(row.iter()) {
+                *slot = (lp as f64).exp();
+            }
             let mut lp = 0.0f64;
             for (h, &(s, _e)) in self.slices.iter().enumerate() {
                 lp += row[s + actions[b * nh + h] as usize] as f64;
@@ -364,30 +422,20 @@ impl NativeNet {
             // gradient of −min(unc, cl)/M w.r.t. lp: −adv·ratio/M through
             // whichever branch is active; the clipped branch saturates
             // (zero grad) exactly when it is the strict minimum.
-            if unclipped <= cl {
-                dlp[b] = -adv * ratio / m as f64;
-            }
+            dlp[b] = if unclipped <= cl { -adv * ratio / m as f64 } else { 0.0 };
             if (ratio - 1.0).abs() > clip {
                 clipped += 1;
             }
             kl_sum += ratio - 1.0 - log_ratio;
-            vf_loss += (returns[b] as f64 - c.val[b] as f64).powi(2) / m as f64;
+            vf_loss += (returns[b] as f64 - val[b] as f64).powi(2) / m as f64;
             // one definition of the MultiDiscrete entropy (same f64
-            // accumulation order as the sampling-side statistics)
-            ent_sum += categorical::entropy(row, &self.slices);
+            // accumulation order as the sampling-side statistics; exp
+            // values reused from `probs`, bitwise the same products)
+            ent_sum += categorical::entropy_from_probs(row, prow, &self.slices);
         }
         let entropy = ent_sum / m as f64;
         let loss = pi_loss + VF_COEF * vf_loss - ent_coef * entropy;
-        (
-            loss,
-            pi_loss,
-            vf_loss,
-            entropy,
-            kl_sum / m as f64,
-            clipped as f64 / m as f64,
-            dlp,
-            lps,
-        )
+        (loss, pi_loss, vf_loss, entropy, kl_sum / m as f64, clipped as f64 / m as f64)
     }
 
     /// One PPO minibatch Adam step — the native twin of
@@ -423,100 +471,99 @@ impl NativeNet {
             "minibatch shape mismatch (expected {m} rows)"
         );
 
-        let c = self.forward_cache(params, obs, m);
-        let (loss, pi_loss, vf_loss, entropy, approx_kl, clip_frac, dlp, _lps) =
-            self.loss_terms(&c, actions, old_logp, advantages, returns, hyper);
+        let s = &mut *self.scratch.borrow_mut();
+        self.forward_cache(params, obs, m, s);
+        s.probs.resize(m * a, 0.0);
+        s.dlp.resize(m, 0.0);
+        s.lps.resize(m, 0.0);
+        s.dlogits.resize(a, 0.0);
+        s.dh.resize(h, 0.0);
+        s.dpre.resize(h, 0.0);
+        s.grad.clear();
+        s.grad.resize(pc, 0.0);
+        let Scratch { h1p, h2p, logp, h1v, h2v, val, probs, dlp, lps, dlogits, dh, dpre, grad } =
+            s;
+        let (loss, pi_loss, vf_loss, entropy, approx_kl, clip_frac) = self.loss_terms(
+            logp, val, actions, old_logp, advantages, returns, hyper, probs, dlp, lps,
+        );
         let ent_coef = hyper[2] as f64;
 
         // ---- backward ----
         let f = &self.off;
-        let mut grad = vec![0f32; pc];
-        let mut dlogits = vec![0f64; a];
-        let mut dh = vec![0f64; h];
-        let mut dpre = vec![0f64; h];
         for b in 0..m {
-            let row = &c.logp[b * a..(b + 1) * a];
+            let row = &logp[b * a..(b + 1) * a];
+            let prow = &probs[b * a..(b + 1) * a];
             // d loss / d logits: policy-gradient term + entropy bonus
-            for (hd, &(s, e)) in self.slices.iter().enumerate() {
-                let act = s + actions[b * nh + hd] as usize;
-                let head_ent = categorical::entropy(row, &[(s, e)]);
-                for j in s..e {
-                    let p = (row[j] as f64).exp();
+            // (exp values reused from the loss pass)
+            for (hd, &(st, e)) in self.slices.iter().enumerate() {
+                let act = st + actions[b * nh + hd] as usize;
+                let head_ent = categorical::entropy_from_probs(row, prow, &[(st, e)]);
+                for j in st..e {
+                    let p = prow[j];
                     let sel = if j == act { 1.0 } else { 0.0 };
                     dlogits[j] = dlp[b] * (sel - p)
                         + (ent_coef / m as f64) * p * (row[j] as f64 + head_ent);
                 }
             }
-            // policy head: dWh, dbh, dh2p
-            let h2p = &c.h2p[b * h..(b + 1) * h];
-            for i in 0..h {
-                let mut acc = 0.0f64;
-                let wrow = &params[f.pi_wh + i * a..f.pi_wh + (i + 1) * a];
-                let grow = &mut grad[f.pi_wh + i * a..f.pi_wh + (i + 1) * a];
-                let xi = h2p[i] as f64;
-                for j in 0..a {
-                    grow[j] += (xi * dlogits[j]) as f32;
-                    acc += dlogits[j] * wrow[j] as f64;
-                }
-                dh[i] = acc;
-            }
+            // policy head: dWh, dbh, dh2p — the blocked backward kernel
+            let h2p_row = &h2p[b * h..(b + 1) * h];
+            dense::grad_outer(
+                h2p_row,
+                dlogits,
+                &params[f.pi_wh..f.pi_wh + h * a],
+                &mut grad[f.pi_wh..f.pi_wh + h * a],
+                a,
+                dh,
+            );
             for j in 0..a {
                 grad[f.pi_bh + j] += dlogits[j] as f32;
             }
             // through tanh -> layer 2 -> layer 1
             Self::backprop_trunk(
-                params, &mut grad, f.pi_w1, f.pi_b1, f.pi_w2, f.pi_b2, o, h,
+                params, grad, f.pi_w1, f.pi_b1, f.pi_w2, f.pi_b2, o, h,
                 &obs[b * o..(b + 1) * o],
-                &c.h1p[b * h..(b + 1) * h],
-                h2p,
-                &mut dh,
-                &mut dpre,
+                &h1p[b * h..(b + 1) * h],
+                h2p_row,
+                dh,
+                dpre,
             );
             // value branch
-            let dv = VF_COEF * 2.0 * (c.val[b] as f64 - returns[b] as f64) / m as f64;
-            let h2v = &c.h2v[b * h..(b + 1) * h];
+            let dv = VF_COEF * 2.0 * (val[b] as f64 - returns[b] as f64) / m as f64;
+            let h2v_row = &h2v[b * h..(b + 1) * h];
             for i in 0..h {
-                grad[f.vf_wh + i] += (h2v[i] as f64 * dv) as f32;
+                grad[f.vf_wh + i] += (h2v_row[i] as f64 * dv) as f32;
                 dh[i] = dv * params[f.vf_wh + i] as f64;
             }
             grad[f.vf_bh] += dv as f32;
             Self::backprop_trunk(
-                params, &mut grad, f.vf_w1, f.vf_b1, f.vf_w2, f.vf_b2, o, h,
+                params, grad, f.vf_w1, f.vf_b1, f.vf_w2, f.vf_b2, o, h,
                 &obs[b * o..(b + 1) * o],
-                &c.h1v[b * h..(b + 1) * h],
-                h2v,
-                &mut dh,
-                &mut dpre,
+                &h1v[b * h..(b + 1) * h],
+                h2v_row,
+                dh,
+                dpre,
             );
         }
 
-        // global grad-norm clip
-        let gnorm = grad.iter().map(|&g| g as f64 * g as f64).sum::<f64>().sqrt();
-        let scale = (MAX_GRAD_NORM / (gnorm + 1e-12)).min(1.0);
-        if scale < 1.0 {
-            for g in &mut grad {
-                *g = (*g as f64 * scale) as f32;
-            }
-        }
-
-        // Adam with bias correction (torch semantics, matches model.py)
+        // global grad-norm clip, then the fused bias-corrected Adam step
+        // (torch semantics, matches model.py) — one pass, no cloning
+        let gnorm = adam::clip_global_norm(grad, MAX_GRAD_NORM);
         let lr = hyper[0] as f64;
-        let t = step as f64;
-        let mut new_p = params.to_vec();
-        let mut new_m = adam_m.to_vec();
-        let mut new_v = adam_v.to_vec();
-        let mut upd_sq = 0.0f64;
-        let (c1, c2) = (1.0 - ADAM_BETA1.powf(t), 1.0 - ADAM_BETA2.powf(t));
-        for i in 0..pc {
-            let g = grad[i] as f64;
-            let m1 = ADAM_BETA1 * new_m[i] as f64 + (1.0 - ADAM_BETA1) * g;
-            let v1 = ADAM_BETA2 * new_v[i] as f64 + (1.0 - ADAM_BETA2) * g * g;
-            new_m[i] = m1 as f32;
-            new_v[i] = v1 as f32;
-            let update = lr * (m1 / c1) / ((v1 / c2).sqrt() + ADAM_EPS);
-            upd_sq += update * update;
-            new_p[i] = (new_p[i] as f64 - update) as f32;
-        }
+        let (mut new_p, mut new_m, mut new_v) = (Vec::new(), Vec::new(), Vec::new());
+        let upd_sq = adam::fused_step(
+            params,
+            adam_m,
+            adam_v,
+            grad,
+            lr,
+            ADAM_BETA1,
+            ADAM_BETA2,
+            ADAM_EPS,
+            step as f64,
+            &mut new_p,
+            &mut new_m,
+            &mut new_v,
+        );
 
         Ok(UpdateOut {
             params: new_p,
@@ -553,34 +600,19 @@ impl NativeNet {
         dh: &mut [f64],
         dpre: &mut [f64],
     ) {
-        // layer 2: pre-activation grad, weights, then dh1
+        // layer 2: pre-activation grad, then the blocked outer-product
+        // kernel for weights + dh1
         for j in 0..h {
             dpre[j] = dh[j] * (1.0 - (h2[j] as f64).powi(2));
             grad[b2 + j] += dpre[j] as f32;
         }
-        for i in 0..h {
-            let xi = h1[i] as f64;
-            let wrow = &params[w2 + i * h..w2 + (i + 1) * h];
-            let grow = &mut grad[w2 + i * h..w2 + (i + 1) * h];
-            let mut acc = 0.0f64;
-            for j in 0..h {
-                grow[j] += (xi * dpre[j]) as f32;
-                acc += dpre[j] * wrow[j] as f64;
-            }
-            dh[i] = acc;
-        }
-        // layer 1
+        dense::grad_outer(h1, dpre, &params[w2..w2 + h * h], &mut grad[w2..w2 + h * h], h, dh);
+        // layer 1: no upstream, weights only
         for j in 0..h {
             dpre[j] = dh[j] * (1.0 - (h1[j] as f64).powi(2));
             grad[b1 + j] += dpre[j] as f32;
         }
-        for i in 0..o {
-            let xi = x[i] as f64;
-            let grow = &mut grad[w1 + i * h..w1 + (i + 1) * h];
-            for j in 0..h {
-                grow[j] += (xi * dpre[j]) as f32;
-            }
-        }
+        dense::grad_outer_weights(x, dpre, &mut grad[w1..w1 + o * h], h);
     }
 }
 

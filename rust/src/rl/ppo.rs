@@ -18,9 +18,11 @@
 //! One call to [`train_ppo_with`] trains one agent from one seed —
 //! Alg. 1 launches many.
 
+use std::collections::VecDeque;
+
 use anyhow::{ensure, Result};
 
-use crate::gym::{ChipletGymEnv, VecEnv, OBS_DIM};
+use crate::gym::{ChipletGymEnv, Step, VecEnv, OBS_DIM};
 use crate::model::space::{Action, ActionLayout};
 use crate::runtime::{Engine, ForwardOut, UpdateOut};
 use crate::util::Rng;
@@ -211,10 +213,16 @@ enum Session<'a> {
 }
 
 impl Session<'_> {
-    fn forward(&self, obs: &[f32]) -> Result<ForwardOut> {
+    /// Forward into a caller-owned output. The native path is
+    /// allocation-free in steady state (`NativeNet::forward_into`); the
+    /// AOT path still materializes the engine's output and moves it in.
+    fn forward_into(&self, obs: &[f32], out: &mut ForwardOut) -> Result<()> {
         match self {
-            Session::Aot(s) => s.forward(obs),
-            Session::Native { net, params } => net.forward(params, obs),
+            Session::Aot(s) => {
+                *out = s.forward(obs)?;
+                Ok(())
+            }
+            Session::Native { net, params } => net.forward_into(params, obs, out),
         }
     }
 }
@@ -356,16 +364,23 @@ pub fn train_ppo_with(
     let mut vec_env = VecEnv::replicate(&env.fork(), n_envs);
 
     let mut buffer = RolloutBuffer::new(cfg.n_steps, n_heads);
-    let mut obs_batch = vec_env.reset_all();
     let mut actions: Vec<Action> = vec![vec![0usize; n_heads]; n_envs];
     let mut log_probs = vec![0f64; n_envs];
     let mut values = vec![0f32; n_envs];
+    // the K current observations, row-major — the single source the
+    // forward consumes and the buffer records (no per-env copies)
     let mut obs_flat = vec![0f32; n_envs * OBS_DIM];
+    vec_env.reset_all();
+    vec_env.write_obs_flat(&mut obs_flat);
     let mut last_values = vec![0f32; n_envs];
+    // reused per-step buffers: the rollout hot loop allocates nothing
+    // in steady state
+    let mut fwd = ForwardOut { logp_all: Vec::new(), value: Vec::new() };
+    let mut step_buf: Vec<Step> = Vec::with_capacity(n_envs);
 
     // episodic reward tracking (SB3's ep_info_buffer, window 100)
     let mut ep_acc = vec![0.0f64; n_envs];
-    let mut recent_eps: Vec<f64> = Vec::new();
+    let mut recent_eps: VecDeque<f64> = VecDeque::with_capacity(101);
 
     // minibatch scratch (rows sized from the runtime head count)
     let mb = cfg.batch_size;
@@ -414,7 +429,9 @@ pub fn train_ppo_with(
         let session = exec.forward_session(&params)?;
         for t in 0..t_len {
             for e in 0..n_envs {
-                let fwd = session.forward(&obs_batch[e])?;
+                // the policy consumes its env's row of obs_flat directly;
+                // the same rows are what the buffer records below
+                session.forward_into(&obs_flat[e * OBS_DIM..(e + 1) * OBS_DIM], &mut fwd)?;
                 log_probs[e] = categorical::sample_action(
                     &fwd.logp_all,
                     &head_slices,
@@ -422,31 +439,29 @@ pub fn train_ppo_with(
                     &mut actions[e],
                 );
                 values[e] = fwd.value[0];
-                // record exactly the observation the policy consumed
-                // (bitwise equal to VecEnv::write_obs_flat's output, but
-                // taken from the forward's input, not re-derived)
-                obs_flat[e * OBS_DIM..(e + 1) * OBS_DIM].copy_from_slice(&obs_batch[e]);
             }
             // one step_batch call fills the K transitions of rollout row t
-            let batch = vec_env.step_batch(&actions);
-            buffer.push_step_batch(t, &obs_flat, &actions, &log_probs, &values, &batch);
-            for (e, step) in batch.iter().enumerate() {
+            vec_env.step_batch_into(&actions, &mut step_buf);
+            buffer.push_step_batch(t, &obs_flat, &actions, &log_probs, &values, &step_buf);
+            for (e, step) in step_buf.iter().enumerate() {
                 ep_acc[e] += step.reward;
+                let row = &mut obs_flat[e * OBS_DIM..(e + 1) * OBS_DIM];
                 if step.done {
-                    recent_eps.push(ep_acc[e]);
+                    recent_eps.push_back(ep_acc[e]);
                     if recent_eps.len() > 100 {
-                        recent_eps.remove(0);
+                        recent_eps.pop_front();
                     }
                     ep_acc[e] = 0.0;
-                    obs_batch[e] = vec_env.reset(e);
+                    row.copy_from_slice(&vec_env.reset(e));
                 } else {
-                    obs_batch[e] = step.obs;
+                    row.copy_from_slice(&step.obs);
                 }
                 steps += 1;
             }
         }
         for e in 0..n_envs {
-            last_values[e] = session.forward(&obs_batch[e])?.value[0];
+            session.forward_into(&obs_flat[e * OBS_DIM..(e + 1) * OBS_DIM], &mut fwd)?;
+            last_values[e] = fwd.value[0];
         }
         drop(session);
         buffer.compute_gae_batched(&last_values, cfg.gamma, cfg.gae_lambda, cfg.reward_scale);

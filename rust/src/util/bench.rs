@@ -113,6 +113,81 @@ impl Runner {
     }
 }
 
+/// Default throughput-regression tolerance for bench baselines: a fresh
+/// run may be at most 25% slower than the committed `BENCH_*.json` before
+/// [`enforce_throughput_baseline`] fails the bench. Wide enough to absorb
+/// CI-runner noise, tight enough to catch a real hot-path regression.
+pub const REGRESSION_TOLERANCE: f64 = 0.25;
+
+/// Compare fresh throughput figures against a committed baseline JSON.
+///
+/// Each `(path, value)` pair in `fresh` names a dotted path into the
+/// baseline document (e.g. `"cases.14-head/b64.update_steps_per_sec"`)
+/// and the just-measured throughput (higher is better). A regression is
+/// `new < old * (1 - tolerance)` with `old > 0`. Paths absent from the
+/// baseline are skipped — new bench cases must not fail on the first run
+/// after they are added. Returns one human-readable message per
+/// regression; empty means pass.
+pub fn throughput_regressions(
+    baseline_json: &str,
+    fresh: &[(String, f64)],
+    tolerance: f64,
+) -> Vec<String> {
+    let baseline = match super::json::Json::parse(baseline_json) {
+        Ok(v) => v,
+        Err(e) => return vec![format!("baseline JSON unreadable: {e}")],
+    };
+    let mut failures = Vec::new();
+    for (path, new) in fresh {
+        let mut node = Some(&baseline);
+        for key in path.split('.') {
+            node = node.and_then(|n| n.get(key));
+        }
+        let Some(old) = node.and_then(super::json::Json::as_f64) else {
+            continue; // new case: no committed figure yet
+        };
+        if old > 0.0 && *new < old * (1.0 - tolerance) {
+            failures.push(format!(
+                "{path}: {new:.1}/s vs baseline {old:.1}/s ({:+.1}%, tolerance -{:.0}%)",
+                (new / old - 1.0) * 100.0,
+                tolerance * 100.0
+            ));
+        }
+    }
+    failures
+}
+
+/// Gate a bench on its committed baseline: print regressions and exit
+/// non-zero if any throughput fell more than `tolerance` below the
+/// committed figure. `baseline` is the committed `BENCH_*.json` text
+/// (read **before** the bench overwrites it); `None` — e.g. a fresh
+/// checkout with no committed baseline — skips the check with a note.
+pub fn enforce_throughput_baseline(
+    name: &str,
+    baseline: Option<&str>,
+    fresh: &[(String, f64)],
+    tolerance: f64,
+) {
+    let Some(baseline) = baseline else {
+        println!("[{name}] no committed baseline — regression check skipped");
+        return;
+    };
+    let failures = throughput_regressions(baseline, fresh, tolerance);
+    if failures.is_empty() {
+        println!(
+            "[{name}] throughput within {:.0}% of committed baseline ({} paths checked)",
+            tolerance * 100.0,
+            fresh.len()
+        );
+        return;
+    }
+    eprintln!("[{name}] throughput regression vs committed baseline:");
+    for f in &failures {
+        eprintln!("  {f}");
+    }
+    std::process::exit(1);
+}
+
 /// Human-format a nanosecond quantity.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -145,6 +220,32 @@ mod tests {
         assert!(res.ns_per_iter.mean > 0.0);
         assert!(res.iters > 0);
         assert!(r.report().contains("noop-ish"));
+    }
+
+    #[test]
+    fn regressions_flag_only_real_drops() {
+        let baseline = r#"{"cases": {"a/b64": {"steps_per_sec": 1000.0},
+                           "b/b64": {"steps_per_sec": 500.0}}}"#;
+        let fresh = vec![
+            ("cases.a/b64.steps_per_sec".to_string(), 800.0), // -20%: inside tolerance
+            ("cases.b/b64.steps_per_sec".to_string(), 300.0), // -40%: regression
+            ("cases.new-case.steps_per_sec".to_string(), 1.0), // absent: skipped
+        ];
+        let fails = throughput_regressions(baseline, &fresh, REGRESSION_TOLERANCE);
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("cases.b/b64"), "{}", fails[0]);
+        // tightening the tolerance catches the -20% case too
+        assert_eq!(throughput_regressions(baseline, &fresh, 0.1).len(), 2);
+        // and a faster run never fails
+        let faster = vec![("cases.a/b64.steps_per_sec".to_string(), 2000.0)];
+        assert!(throughput_regressions(baseline, &faster, REGRESSION_TOLERANCE).is_empty());
+    }
+
+    #[test]
+    fn unreadable_baseline_is_reported_not_ignored() {
+        let fails = throughput_regressions("{not json", &[], REGRESSION_TOLERANCE);
+        assert_eq!(fails.len(), 1);
+        assert!(fails[0].contains("unreadable"), "{}", fails[0]);
     }
 
     #[test]

@@ -1,0 +1,327 @@
+//! Kernel-layer bitwise-identity property tests.
+//!
+//! The `kernels` module re-implements three hot paths — the dense
+//! policy/value network, the fused Adam step, and placement hop
+//! scoring — under one contract: **identical bits, faster clock**. Each
+//! test here pins a kernel against its frozen oracle (the verbatim
+//! pre-kernel loops in `kernels::oracle`, or the coordinate-scan
+//! `Placement` evaluators) over randomized shapes, seeds and meshes,
+//! comparing with `to_bits` so a single ULP of drift fails loudly.
+
+use chiplet_gym::cost::Calib;
+use chiplet_gym::kernels::oracle::ScalarNet;
+use chiplet_gym::kernels::{HopField, HopFieldCache};
+use chiplet_gym::model::space::DesignSpace;
+use chiplet_gym::opt::search::DriverConfig;
+use chiplet_gym::place::{
+    optimize_placement, optimize_placement_cached, HbmAttach, PlaceConfig, Placement,
+};
+use chiplet_gym::rl::init::init_param_entries;
+use chiplet_gym::rl::net::{NativeNet, NetShape};
+use chiplet_gym::util::Rng;
+
+// ---------------------------------------------------------------- net --
+
+/// Random PPO minibatch inputs for a shape: uniform observations,
+/// in-range actions, old log-probs from the oracle's own forward.
+struct Batch {
+    obs: Vec<f32>,
+    actions: Vec<i32>,
+    old_logp: Vec<f32>,
+    advantages: Vec<f32>,
+    returns: Vec<f32>,
+}
+
+fn random_batch(oracle: &ScalarNet, params: &[f32], m: usize, rng: &mut Rng) -> Batch {
+    let shape = &oracle.shape;
+    let (o, a, nh) = (shape.obs_dim, shape.act_total(), shape.n_heads());
+    let slices = shape.head_slices();
+    let obs: Vec<f32> = (0..m * o).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+    let mut actions = Vec::with_capacity(m * nh);
+    for _ in 0..m {
+        for &d in &shape.dims {
+            actions.push(rng.below(d as u64) as i32);
+        }
+    }
+    let fwd = oracle.forward(params, &obs).expect("oracle forward");
+    let old_logp: Vec<f32> = (0..m)
+        .map(|b| {
+            let row = &fwd.logp_all[b * a..(b + 1) * a];
+            let mut lp = 0.0f64;
+            for (h, &(s, _e)) in slices.iter().enumerate() {
+                lp += row[s + actions[b * nh + h] as usize] as f64;
+            }
+            // perturb so clipping both triggers and skips across the batch
+            (lp + rng.range_f64(-0.3, 0.3)) as f32
+        })
+        .collect();
+    let advantages = (0..m).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect();
+    let returns = (0..m).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect();
+    Batch { obs, actions, old_logp, advantages, returns }
+}
+
+fn assert_bits_f32(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{what}[{i}]: {g} vs {w}");
+    }
+}
+
+/// Awkward geometries on purpose: single-logit heads, a head wider than
+/// the hidden width, non-power-of-two everything — plus the two real
+/// layouts the trainer actually runs.
+fn test_shapes() -> Vec<NetShape> {
+    let mut shapes = vec![
+        NetShape { obs_dim: 1, hidden: 3, dims: vec![1] },
+        NetShape { obs_dim: 3, hidden: 5, dims: vec![2, 1, 7] },
+        NetShape { obs_dim: 7, hidden: 13, dims: vec![4, 4, 4] },
+        NetShape { obs_dim: 5, hidden: 4, dims: vec![11, 2] },
+        NetShape::for_layout(&DesignSpace::case_i().layout()),
+        NetShape::for_layout(&DesignSpace::case_i().with_placement_head().layout()),
+    ];
+    shapes.dedup();
+    shapes
+}
+
+#[test]
+fn forward_matches_oracle_over_random_shapes() {
+    for (si, shape) in test_shapes().into_iter().enumerate() {
+        let net = NativeNet::new(shape.clone());
+        let oracle = ScalarNet::new(shape.clone());
+        let mut rng = Rng::new(100 + si as u64);
+        let params = init_param_entries(&shape.param_entries(), shape.param_count(), si as u64);
+        for m in [1usize, 2, 5, 17] {
+            let batch = random_batch(&oracle, &params, m, &mut rng);
+            let got = net.forward(&params, &batch.obs).unwrap();
+            let want = oracle.forward(&params, &batch.obs).unwrap();
+            assert_bits_f32(&got.logp_all, &want.logp_all, &format!("logp {shape:?} b{m}"));
+            assert_bits_f32(&got.value, &want.value, &format!("value {shape:?} b{m}"));
+        }
+    }
+}
+
+#[test]
+fn update_matches_oracle_over_random_shapes() {
+    let hyper = [3e-4f32, 0.2, 0.01];
+    for (si, shape) in test_shapes().into_iter().enumerate() {
+        let net = NativeNet::new(shape.clone());
+        let oracle = ScalarNet::new(shape.clone());
+        let mut rng = Rng::new(200 + si as u64);
+        let params = init_param_entries(&shape.param_entries(), shape.param_count(), si as u64);
+        let pc = params.len();
+        // non-zero optimizer state so the fused step exercises the
+        // moment decay terms, not just the zero-state special case
+        let adam_m: Vec<f32> = (0..pc).map(|_| rng.range_f64(-1e-3, 1e-3) as f32).collect();
+        let adam_v: Vec<f32> = (0..pc).map(|_| rng.range_f64(0.0, 1e-5) as f32).collect();
+        for (m, step) in [(1usize, 1.0f32), (4, 7.0), (16, 3.0)] {
+            let batch = random_batch(&oracle, &params, m, &mut rng);
+            let got = net
+                .ppo_update(
+                    &params, &adam_m, &adam_v, step, &batch.obs, &batch.actions,
+                    &batch.old_logp, &batch.advantages, &batch.returns, hyper,
+                )
+                .unwrap();
+            let want = oracle
+                .ppo_update(
+                    &params, &adam_m, &adam_v, step, &batch.obs, &batch.actions,
+                    &batch.old_logp, &batch.advantages, &batch.returns, hyper,
+                )
+                .unwrap();
+            let tag = format!("{shape:?} b{m} t{step}");
+            assert_bits_f32(&got.params, &want.params, &format!("params {tag}"));
+            assert_bits_f32(&got.adam_m, &want.adam_m, &format!("adam_m {tag}"));
+            assert_bits_f32(&got.adam_v, &want.adam_v, &format!("adam_v {tag}"));
+            let (g, w) = (got.stats, want.stats);
+            for (gs, ws, name) in [
+                (g.loss, w.loss, "loss"),
+                (g.pi_loss, w.pi_loss, "pi_loss"),
+                (g.vf_loss, w.vf_loss, "vf_loss"),
+                (g.entropy, w.entropy, "entropy"),
+                (g.approx_kl, w.approx_kl, "approx_kl"),
+                (g.clip_frac, w.clip_frac, "clip_frac"),
+                (g.grad_norm, w.grad_norm, "grad_norm"),
+                (g.update_norm, w.update_norm, "update_norm"),
+            ] {
+                assert_eq!(gs.to_bits(), ws.to_bits(), "{name} {tag}");
+            }
+            let gl = net.ppo_loss(
+                &params, &batch.obs, &batch.actions, &batch.old_logp, &batch.advantages,
+                &batch.returns, hyper,
+            );
+            let wl = oracle.ppo_loss(
+                &params, &batch.obs, &batch.actions, &batch.old_logp, &batch.advantages,
+                &batch.returns, hyper,
+            );
+            assert_eq!(gl.to_bits(), wl.to_bits(), "ppo_loss {tag}");
+        }
+    }
+}
+
+#[test]
+fn chained_updates_never_drift() {
+    // Feed each update's outputs back as the next update's state: a
+    // single-bit divergence anywhere would compound and fail here.
+    let shape = NetShape::for_layout(&DesignSpace::case_i().layout());
+    let net = NativeNet::new(shape.clone());
+    let oracle = ScalarNet::new(shape.clone());
+    let mut rng = Rng::new(9);
+    let hyper = [3e-4f32, 0.2, 0.01];
+    let mut params = init_param_entries(&shape.param_entries(), shape.param_count(), 0);
+    let mut params_o = params.clone();
+    let (mut m1, mut v1) = (vec![0f32; params.len()], vec![0f32; params.len()]);
+    let (mut m2, mut v2) = (m1.clone(), v1.clone());
+    for step in 1..=5 {
+        let batch = random_batch(&oracle, &params_o, 8, &mut rng);
+        let got = net
+            .ppo_update(
+                &params, &m1, &v1, step as f32, &batch.obs, &batch.actions, &batch.old_logp,
+                &batch.advantages, &batch.returns, hyper,
+            )
+            .unwrap();
+        let want = oracle
+            .ppo_update(
+                &params_o, &m2, &v2, step as f32, &batch.obs, &batch.actions, &batch.old_logp,
+                &batch.advantages, &batch.returns, hyper,
+            )
+            .unwrap();
+        assert_bits_f32(&got.params, &want.params, &format!("chained params, step {step}"));
+        params = got.params;
+        m1 = got.adam_m;
+        v1 = got.adam_v;
+        params_o = want.params;
+        m2 = want.adam_m;
+        v2 = want.adam_v;
+    }
+}
+
+#[test]
+fn scratch_survives_alternating_batch_sizes() {
+    // The net's reusable scratch resizes between calls; shrinking then
+    // growing must never leave stale values visible in the outputs.
+    let shape = NetShape::for_layout(&DesignSpace::case_i().with_placement_head().layout());
+    let net = NativeNet::new(shape.clone());
+    let oracle = ScalarNet::new(shape.clone());
+    let mut rng = Rng::new(31);
+    let params = init_param_entries(&shape.param_entries(), shape.param_count(), 2);
+    for m in [64usize, 1, 16, 3, 64, 1] {
+        let batch = random_batch(&oracle, &params, m, &mut rng);
+        let got = net.forward(&params, &batch.obs).unwrap();
+        let want = oracle.forward(&params, &batch.obs).unwrap();
+        assert_bits_f32(&got.logp_all, &want.logp_all, &format!("logp after resize to b{m}"));
+        assert_bits_f32(&got.value, &want.value, &format!("value after resize to b{m}"));
+    }
+}
+
+// ---------------------------------------------------------- placement --
+
+fn random_placement(rng: &mut Rng) -> Placement {
+    // degenerate strips, prime tile counts and sparse blobs included
+    let (m, n) = match rng.below(4) {
+        0 => (1, 1 + rng.below(16) as usize),
+        1 => (1 + rng.below(16) as usize, 1),
+        2 => (2 + rng.below(11) as usize, 2 + rng.below(11) as usize),
+        _ => (13, 1 + rng.below(7) as usize), // 13, 26, 39 … tiles if kept full
+    };
+    let mut tiles = Vec::new();
+    for r in 0..m {
+        for c in 0..n {
+            tiles.push((r, c));
+        }
+    }
+    if tiles.len() > 1 && rng.below(2) == 1 {
+        // sparse subset: drop a random half, keep at least one tile
+        rng.shuffle(&mut tiles);
+        let keep = 1 + rng.below(tiles.len() as u64) as usize;
+        tiles.truncate(keep);
+        tiles.sort_unstable();
+    }
+    let k = 1 + rng.below(6) as usize;
+    let hbm = (0..k)
+        .map(|_| HbmAttach {
+            tile: (rng.below(m as u64) as usize, rng.below(n as u64) as usize),
+            extra_hops: rng.below(3) as usize,
+        })
+        .collect();
+    Placement { m, n, tiles, hbm }
+}
+
+#[test]
+fn hop_field_matches_the_coordinate_scan_on_random_meshes() {
+    let mut rng = Rng::new(77);
+    for case in 0..200 {
+        let p = random_placement(&mut rng);
+        let ai = p.hop_stats();
+        let field = HopField::new(p.m, p.n, &p.tiles);
+        let got = p.hop_stats_with_field(&ai, &field);
+        let want = p.hop_stats_with_ai(&ai);
+        let tag = format!("case {case}: {}x{}, {} tiles", p.m, p.n, p.tiles.len());
+        assert_eq!(got.max_hbm_hops, want.max_hbm_hops, "{tag}");
+        assert_eq!(got.mean_hbm_hops.to_bits(), want.mean_hbm_hops.to_bits(), "{tag}");
+        // the AI-side fields pass through untouched
+        assert_eq!(got.max_ai_hops, want.max_ai_hops, "{tag}");
+        assert_eq!(got.mean_ai_hops.to_bits(), want.mean_ai_hops.to_bits(), "{tag}");
+        assert_eq!(got.n_edges, want.n_edges, "{tag}");
+
+        // re-scoring fresh attach sets against the same field (the
+        // optimizer's inner loop) stays identical too
+        for _ in 0..8 {
+            let mut q = p.clone();
+            q.hbm = (0..1 + rng.below(4) as usize)
+                .map(|_| HbmAttach {
+                    tile: (rng.below(p.m as u64) as usize, rng.below(p.n as u64) as usize),
+                    extra_hops: rng.below(3) as usize,
+                })
+                .collect();
+            let cells: Vec<(usize, usize)> =
+                q.hbm.iter().map(|a| (a.tile.0 * p.n + a.tile.1, a.extra_hops)).collect();
+            let (max_hbm, mean_hbm) = field.hbm_stats(&cells);
+            let want = q.hop_stats_with_ai(&ai);
+            assert_eq!(max_hbm, want.max_hbm_hops, "{tag} rescore");
+            assert_eq!(mean_hbm.to_bits(), want.mean_hbm_hops.to_bits(), "{tag} rescore");
+        }
+    }
+}
+
+#[test]
+fn field_cache_memoizes_by_tile_set() {
+    let mut rng = Rng::new(3);
+    let a = random_placement(&mut rng);
+    let mut cache = HopFieldCache::default();
+    let d1 = cache.field(a.m, a.n, &a.tiles).n_tiles();
+    assert_eq!((cache.hits, cache.misses), (0, 1));
+    let d2 = cache.field(a.m, a.n, &a.tiles).n_tiles();
+    assert_eq!((cache.hits, cache.misses), (1, 1));
+    assert_eq!(d1, d2);
+    // a different tile set is a different field
+    let mut tiles = a.tiles.clone();
+    tiles.push((a.m - 1, a.n - 1));
+    tiles.sort_unstable();
+    tiles.dedup();
+    if tiles.len() != a.tiles.len() {
+        cache.field(a.m, a.n, &tiles);
+        assert_eq!(cache.misses, 2);
+    }
+}
+
+#[test]
+fn cached_optimizer_is_bitwise_the_uncached_one() {
+    // The acceptance pin for routing `optimize_placement` through the
+    // HopField: same search walk, same layout, same latency figures,
+    // for random design points across both paper spaces — with one
+    // shared cache standing in for `refine_outcome`'s reuse pattern.
+    let calib = Calib::default();
+    let cfg = PlaceConfig { driver: DriverConfig::greedy_with_budget(150), seed: 11 };
+    for space in [DesignSpace::case_i(), DesignSpace::case_ii()] {
+        let mut rng = Rng::new(13);
+        let mut fields = HopFieldCache::default();
+        for _ in 0..12 {
+            let p = space.decode(&space.random_action(&mut rng));
+            let want = optimize_placement(&space, &calib, &p, &cfg);
+            let got = optimize_placement_cached(&space, &calib, &p, &cfg, &mut fields);
+            assert_eq!(got.placement, want.placement, "layout diverged for {p:?}");
+            assert_eq!(got.canonical_ns.to_bits(), want.canonical_ns.to_bits());
+            assert_eq!(got.optimized_ns.to_bits(), want.optimized_ns.to_bits());
+        }
+        assert!(fields.hits > 0, "repeated mesh shapes must hit the cache");
+    }
+}
