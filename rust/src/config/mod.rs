@@ -54,6 +54,13 @@ pub struct RunConfig {
     /// `sa`/`ga`/`greedy`/`portfolio`/`optimize` outcomes), or
     /// `learned` (gym placement action head).
     pub placement: PlacementMode,
+    /// `serve` bind address (config key `serve_addr` / CLI `--addr`);
+    /// port 0 binds an ephemeral port.
+    pub serve_addr: String,
+    /// Eval-cache snapshot directory for `serve` (config key
+    /// `serve_cache_dir` / CLI `--cache-dir`); the literal `none`
+    /// disables persistence.
+    pub serve_cache_dir: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -74,6 +81,8 @@ impl Default for RunConfig {
             scenario: None,
             arch_lock: None,
             placement: PlacementMode::Canonical,
+            serve_addr: "127.0.0.1:8844".into(),
+            serve_cache_dir: Some("serve_cache".into()),
         }
     }
 }
@@ -178,6 +187,12 @@ impl RunConfig {
             self.placement = PlacementMode::parse(pm)
                 .unwrap_or_else(|| panic!("config placement: unknown mode {pm:?}"));
         }
+        if let Some(s) = v.get("serve_addr").and_then(Json::as_str) {
+            self.serve_addr = s.to_string();
+        }
+        if let Some(s) = v.get("serve_cache_dir").and_then(Json::as_str) {
+            self.serve_cache_dir = parse_cache_dir(s);
+        }
     }
 
     /// Apply CLI overrides on top (CLI wins over config file).
@@ -216,6 +231,22 @@ impl RunConfig {
             self.placement = PlacementMode::parse(pm)
                 .unwrap_or_else(|| panic!("--placement: unknown mode {pm:?}"));
         }
+        if let Some(addr) = args.get("addr") {
+            self.serve_addr = addr.to_string();
+        }
+        if let Some(dir) = args.get("cache-dir") {
+            self.serve_cache_dir = parse_cache_dir(dir);
+        }
+    }
+}
+
+/// `none` (any case) disables snapshot persistence; anything else is a
+/// directory path.
+fn parse_cache_dir(s: &str) -> Option<String> {
+    if s.eq_ignore_ascii_case("none") {
+        None
+    } else {
+        Some(s.to_string())
     }
 }
 
@@ -340,6 +371,24 @@ mod tests {
             Args::parse("optimize --timesteps 99".split_whitespace().map(String::from));
         cfg.apply_args(&args);
         assert_eq!(cfg.ppo_total_timesteps, 99);
+    }
+
+    #[test]
+    fn serve_knobs_default_and_override() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.serve_addr, "127.0.0.1:8844");
+        assert_eq!(cfg.serve_cache_dir.as_deref(), Some("serve_cache"));
+        let v = Json::parse(r#"{"serve_addr": "0.0.0.0:9000", "serve_cache_dir": "warm"}"#)
+            .unwrap();
+        cfg.apply_json(&v);
+        assert_eq!(cfg.serve_addr, "0.0.0.0:9000");
+        assert_eq!(cfg.serve_cache_dir.as_deref(), Some("warm"));
+        let args = Args::parse(
+            "serve --addr 127.0.0.1:0 --cache-dir none".split_whitespace().map(String::from),
+        );
+        cfg.apply_args(&args);
+        assert_eq!(cfg.serve_addr, "127.0.0.1:0");
+        assert_eq!(cfg.serve_cache_dir, None, "'none' disables persistence");
     }
 
     #[test]

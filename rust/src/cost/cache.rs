@@ -23,12 +23,16 @@
 
 use std::borrow::Cow;
 use std::collections::HashMap;
+use std::fs;
+use std::io::{self, BufRead, BufReader, BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, MutexGuard};
 
-use crate::model::space::{Action, DesignSpace, N_HEADS, PLACEMENT_HEAD_DIM};
+use crate::model::space::{Action, ArchType, DesignSpace, N_HEADS, PLACEMENT_HEAD_DIM};
 
-use super::constants::Calib;
+use super::constants::{Calib, CALIB_KEYS};
 use super::delta::DeltaEvaluator;
-use super::ppac::{evaluate_action, Evaluation};
+use super::ppac::{evaluate_action, Evaluation, EVAL_RECORD_LEN};
 
 /// Default insertion cap (64Ki entries). An [`Evaluation`] plus its key
 /// is a few hundred bytes, so a full cache stays around ~25 MB — small
@@ -129,6 +133,247 @@ impl EvalCache {
         } else {
             self.hits as f64 / total as f64
         }
+    }
+
+    /// Write the retained design points to `path` as a versioned text
+    /// snapshot, atomically: the file is assembled under a `.tmp` name
+    /// in the same directory and `rename`d into place, so a reader (or
+    /// a crash mid-write) only ever sees the previous complete snapshot
+    /// or the new one. Entries are emitted in sorted key order so equal
+    /// caches produce byte-identical files. Hit/miss counters are *not*
+    /// persisted — they describe a process lifetime, not the table.
+    ///
+    /// `fingerprint` names the `(space, calib)` pair this cache belongs
+    /// to (see [`cache_fingerprint`]); the loader refuses snapshots
+    /// whose fingerprint differs, which is what makes a directory of
+    /// snapshots safe to share across scenarios.
+    pub fn snapshot_to(&self, path: &Path, fingerprint: u64) -> io::Result<()> {
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            fs::create_dir_all(dir)?;
+        }
+        let tmp = {
+            let mut s = path.as_os_str().to_owned();
+            s.push(".tmp");
+            PathBuf::from(s)
+        };
+        {
+            let mut out = BufWriter::new(fs::File::create(&tmp)?);
+            writeln!(
+                out,
+                "chiplet-gym evalcache v{SNAPSHOT_VERSION} fp={fingerprint:016x} entries={}",
+                self.map.len()
+            )?;
+            let mut keys: Vec<&Action> = self.map.keys().collect();
+            keys.sort();
+            for key in keys {
+                let rec = self.map[key].to_record();
+                let ks: Vec<String> = key.iter().map(|v| v.to_string()).collect();
+                let rs: Vec<String> = rec.iter().map(|v| format!("{v:016x}")).collect();
+                writeln!(out, "{}|{}", ks.join(" "), rs.join(" "))?;
+            }
+            writeln!(out, "end")?;
+            out.flush()?;
+        }
+        fs::rename(&tmp, path)
+    }
+
+    /// Strict inverse of [`EvalCache::snapshot_to`]: reload a snapshot,
+    /// rejecting anything anomalous — unreadable file, wrong
+    /// magic/version, fingerprint mismatch, malformed entry line, wrong
+    /// record length, missing `end` footer (truncation), or an entry
+    /// count that disagrees with the header. Loaded values are bitwise
+    /// the stored [`Evaluation`]s; counters start at zero. The load is
+    /// all-or-nothing: an error never returns a partially-filled cache.
+    pub fn load_snapshot(
+        path: &Path,
+        fingerprint: u64,
+        cap: usize,
+    ) -> Result<EvalCache, String> {
+        let file = fs::File::open(path).map_err(|e| format!("open failed: {e}"))?;
+        let mut lines = BufReader::new(file).lines();
+        let header = match lines.next() {
+            Some(Ok(line)) => line,
+            Some(Err(e)) => return Err(format!("read failed: {e}")),
+            None => return Err("empty file".to_string()),
+        };
+        let want =
+            format!("chiplet-gym evalcache v{SNAPSHOT_VERSION} fp={fingerprint:016x} entries=");
+        let declared: usize = header
+            .strip_prefix(&want)
+            .ok_or_else(|| format!("header mismatch (expected {want:?}…): {header:?}"))?
+            .parse()
+            .map_err(|_| format!("bad entry count in header: {header:?}"))?;
+        let mut cache = EvalCache::new(cap);
+        let mut footer = false;
+        for line in lines {
+            let line = line.map_err(|e| format!("read failed: {e}"))?;
+            if line == "end" {
+                footer = true;
+                break;
+            }
+            let (ks, rs) = line
+                .split_once('|')
+                .ok_or_else(|| format!("malformed entry line: {line:?}"))?;
+            let key: Action = ks
+                .split(' ')
+                .map(str::parse)
+                .collect::<Result<_, _>>()
+                .map_err(|_| format!("bad action key: {ks:?}"))?;
+            let rec: Vec<u64> = rs
+                .split(' ')
+                .map(|t| u64::from_str_radix(t, 16))
+                .collect::<Result<_, _>>()
+                .map_err(|_| format!("bad record word: {rs:?}"))?;
+            let rec: [u64; EVAL_RECORD_LEN] = rec
+                .try_into()
+                .map_err(|v: Vec<u64>| format!("record has {} words, want {EVAL_RECORD_LEN}", v.len()))?;
+            cache.map.insert(key, Evaluation::from_record(&rec));
+        }
+        if !footer {
+            return Err("missing end footer (truncated file?)".to_string());
+        }
+        if cache.map.len() != declared {
+            return Err(format!(
+                "entry count mismatch: header says {declared}, file holds {}",
+                cache.map.len()
+            ));
+        }
+        Ok(cache)
+    }
+
+    /// Corruption-tolerant loader for server startup: a missing file is
+    /// the normal cold-start case and loads silently empty; any other
+    /// anomaly warns on stderr and *also* loads empty rather than
+    /// failing — a damaged snapshot costs re-evaluation, never uptime.
+    pub fn load_snapshot_or_empty(path: &Path, fingerprint: u64, cap: usize) -> EvalCache {
+        if !path.exists() {
+            return EvalCache::new(cap);
+        }
+        match EvalCache::load_snapshot(path, fingerprint, cap) {
+            Ok(cache) => cache,
+            Err(err) => {
+                eprintln!(
+                    "warning: ignoring eval-cache snapshot {}: {err}",
+                    path.display()
+                );
+                EvalCache::new(cap)
+            }
+        }
+    }
+}
+
+/// On-disk snapshot format version. Bump whenever the header shape, the
+/// entry line grammar, or [`EVAL_RECORD_LEN`] changes; old snapshots
+/// then fail the header check and are re-derived rather than misread.
+const SNAPSHOT_VERSION: u32 = 1;
+
+/// Stable 64-bit identity of a `(space, calib)` pair, used to key
+/// persistent snapshots so one on-disk cache directory can serve many
+/// scenarios without ever crossing their memo tables (an `EvalCache` is
+/// only valid for the single pairing it was filled under). FNV-1a over
+/// the snapshot version, every [`DesignSpace`] field, and the f64 bits
+/// of every [`CALIB_KEYS`] constant in declaration order — so any knob
+/// that changes evaluation changes the fingerprint.
+pub fn cache_fingerprint(space: &DesignSpace, calib: &Calib) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |v: u64| {
+        for b in v.to_le_bytes() {
+            h = (h ^ u64::from(b)).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    mix(u64::from(SNAPSHOT_VERSION));
+    mix(space.chiplet_cap as u64);
+    mix(match space.arch_lock {
+        None => 0,
+        Some(ArchType::TwoPointFiveD) => 1,
+        Some(ArchType::MemOnLogic) => 2,
+        Some(ArchType::LogicOnLogic) => 3,
+    });
+    mix(u64::from(space.placement_head));
+    for &key in CALIB_KEYS {
+        mix(calib.get_key(key).expect("CALIB_KEYS entries are readable").to_bits());
+    }
+    h
+}
+
+/// Point-in-time counters of a shared cache, read under one lock so the
+/// three numbers are mutually consistent (e.g. for a `/metrics` report
+/// or a per-job before/after delta).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+impl CacheStats {
+    /// Fraction of lookups answered from the cache (0 when unused —
+    /// same zero-lookup convention as [`EvalCache::hit_rate`]).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// An [`EvalCache`] behind `Arc<Mutex<…>>` for cross-thread sharing —
+/// the resident server keeps one per `(space, calib)` fingerprint and
+/// every worker of every job routes lookups through it, so a design
+/// point evaluated once is never re-paid by any later request.
+///
+/// Locking is per-lookup (the mutex is held across the miss-path model
+/// evaluation, which keeps hit/miss accounting exact and the cache a
+/// drop-in for the unshared one). A poisoned mutex is recovered, not
+/// propagated: the cache holds only memoized pure-function results, so
+/// a panicking holder can't leave it logically inconsistent.
+#[derive(Clone)]
+pub struct SharedEvalCache {
+    inner: Arc<Mutex<EvalCache>>,
+}
+
+impl SharedEvalCache {
+    pub fn new(cache: EvalCache) -> SharedEvalCache {
+        SharedEvalCache { inner: Arc::new(Mutex::new(cache)) }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, EvalCache> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// [`EvalCache::evaluate`] through the shared handle.
+    pub fn evaluate(
+        &self,
+        calib: &Calib,
+        space: &DesignSpace,
+        action: &[usize],
+    ) -> Evaluation {
+        self.lock().evaluate(calib, space, action)
+    }
+
+    /// [`EvalCache::evaluate_via`] through the shared handle. The
+    /// `DeltaEvaluator` stays caller-owned (one per worker thread);
+    /// only the memo table is shared.
+    pub fn evaluate_via(
+        &self,
+        delta: &mut DeltaEvaluator,
+        calib: &Calib,
+        space: &DesignSpace,
+        action: &[usize],
+    ) -> Evaluation {
+        self.lock().evaluate_via(delta, calib, space, action)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let c = self.lock();
+        CacheStats { hits: c.hits, misses: c.misses, entries: c.len() }
+    }
+
+    /// [`EvalCache::snapshot_to`] through the shared handle.
+    pub fn snapshot_to(&self, path: &Path, fingerprint: u64) -> io::Result<()> {
+        self.lock().snapshot_to(path, fingerprint)
     }
 }
 
@@ -256,6 +501,133 @@ mod tests {
         assert_eq!(chained.hits, plain.hits, "cache stats must not diverge");
         assert_eq!(chained.misses, plain.misses);
         assert!(delta.full_evals > 0);
+    }
+
+    #[test]
+    fn hit_rate_is_zero_not_nan_on_zero_lookups() {
+        // Regression pin: this feeds /metrics JSON, where NaN is
+        // unserializable — an untouched cache must report 0.0.
+        let cache = EvalCache::new(4);
+        assert_eq!(cache.hit_rate(), 0.0);
+        assert!(cache.hit_rate().is_finite());
+        assert_eq!(CacheStats::default().hit_rate(), 0.0);
+    }
+
+    fn snap_dir(test: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("chiplet_gym_cache_{test}_{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn snapshot_round_trips_bitwise() {
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let fp = cache_fingerprint(&space, &calib);
+        let mut cache = EvalCache::new(DEFAULT_CACHE_CAP);
+        let mut rng = Rng::new(21);
+        let actions: Vec<_> = (0..30).map(|_| space.random_action(&mut rng)).collect();
+        for a in &actions {
+            cache.evaluate(&calib, &space, a);
+        }
+        let dir = snap_dir("roundtrip");
+        let path = dir.join("case_i.snap");
+        cache.snapshot_to(&path, fp).unwrap();
+        let loaded = EvalCache::load_snapshot(&path, fp, DEFAULT_CACHE_CAP).unwrap();
+        assert_eq!(loaded.len(), cache.len());
+        assert_eq!((loaded.hits, loaded.misses), (0, 0), "counters are per-process");
+        for (key, want) in &cache.map {
+            let got = loaded.map.get(key).expect("entry survived");
+            assert_eq!(got.to_record(), want.to_record(), "bitwise round-trip");
+        }
+        // snapshots are deterministic: same table → byte-identical file
+        let again = dir.join("case_i_2.snap");
+        cache.snapshot_to(&again, fp).unwrap();
+        assert_eq!(fs::read(&path).unwrap(), fs::read(&again).unwrap());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_or_mismatched_snapshots_load_empty_never_panic() {
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let fp = cache_fingerprint(&space, &calib);
+        let dir = snap_dir("corrupt");
+        let path = dir.join("c.snap");
+
+        // missing file: silently empty
+        let c = EvalCache::load_snapshot_or_empty(&path, fp, 64);
+        assert!(c.is_empty());
+
+        // write a valid snapshot to mutilate
+        let mut cache = EvalCache::new(64);
+        let mut rng = Rng::new(3);
+        for _ in 0..10 {
+            let a = space.random_action(&mut rng);
+            cache.evaluate(&calib, &space, &a);
+        }
+        cache.snapshot_to(&path, fp).unwrap();
+        let good = fs::read_to_string(&path).unwrap();
+
+        // truncated (footer gone): rejected
+        fs::write(&path, &good[..good.len() - 5]).unwrap();
+        assert!(EvalCache::load_snapshot(&path, fp, 64).is_err());
+        assert!(EvalCache::load_snapshot_or_empty(&path, fp, 64).is_empty());
+
+        // garbage bytes: rejected
+        fs::write(&path, b"\x00\xffnot a snapshot\n").unwrap();
+        assert!(EvalCache::load_snapshot_or_empty(&path, fp, 64).is_empty());
+
+        // wrong version: rejected
+        fs::write(&path, good.replacen("evalcache v1", "evalcache v999", 1)).unwrap();
+        assert!(EvalCache::load_snapshot_or_empty(&path, fp, 64).is_empty());
+
+        // wrong fingerprint (another calib's snapshot): rejected
+        fs::write(&path, &good).unwrap();
+        assert!(EvalCache::load_snapshot_or_empty(&path, fp ^ 1, 64).is_empty());
+
+        // mangled record word: rejected
+        fs::write(&path, good.replacen('|', "|zz", 1)).unwrap();
+        assert!(EvalCache::load_snapshot_or_empty(&path, fp, 64).is_empty());
+
+        // intact file still loads after all that
+        fs::write(&path, &good).unwrap();
+        assert_eq!(EvalCache::load_snapshot_or_empty(&path, fp, 64).len(), cache.len());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fingerprint_tracks_space_and_calib() {
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let base = cache_fingerprint(&space, &calib);
+        assert_eq!(base, cache_fingerprint(&space, &calib), "deterministic");
+        let mut tweaked = calib.clone();
+        assert!(tweaked.set_key("e_mac_pj", 0.123));
+        assert_ne!(base, cache_fingerprint(&space, &tweaked));
+        assert_ne!(base, cache_fingerprint(&space.with_placement_head(), &calib));
+    }
+
+    #[test]
+    fn shared_cache_matches_direct_and_counts_stats() {
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let shared = SharedEvalCache::new(EvalCache::new(DEFAULT_CACHE_CAP));
+        let mut rng = Rng::new(7);
+        let a = space.random_action(&mut rng);
+        let first = shared.evaluate(&calib, &space, &a);
+        assert_eq!(first.reward, evaluate(&calib, &space.decode(&a)).reward);
+        let mut delta = DeltaEvaluator::default();
+        let second = shared.evaluate_via(&mut delta, &calib, &space, &a);
+        assert_eq!(second.reward.to_bits(), first.reward.to_bits());
+        let stats = shared.stats();
+        assert_eq!((stats.hits, stats.misses, stats.entries), (1, 1, 1));
+        assert!((stats.hit_rate() - 0.5).abs() < 1e-12);
+        // clones share one table
+        let clone = shared.clone();
+        clone.evaluate(&calib, &space, &a);
+        assert_eq!(shared.stats().hits, 2);
     }
 
     #[test]

@@ -394,6 +394,74 @@ impl Calib {
         }
         true
     }
+
+    /// Read one calibration constant by key — the inverse surface of
+    /// [`Calib::set_key`], used to fingerprint a calibration for the
+    /// persistent evaluation cache (`cost::cache::cache_fingerprint`).
+    /// Non-f64 fields come back in the same numeric spellings `set_key`
+    /// accepts (`perfect_bonding` as 0/1, `mono_n_hbm` as a whole
+    /// number), so `set_key(k, get_key(k))` is always a no-op. Returns
+    /// `None` for unknown keys.
+    pub fn get_key(&self, key: &str) -> Option<f64> {
+        Some(match key {
+            "pkg_area_mm2" => self.pkg_area_mm2,
+            "max_chiplet_area_mm2" => self.max_chiplet_area_mm2,
+            "hbm_area_mm2" => self.hbm_area_mm2,
+            "hbm_capacity_gb" => self.hbm_capacity_gb,
+            "compute_frac" => self.compute_frac,
+            "sram_frac" => self.sram_frac,
+            "tsv_area_mm2" => self.tsv_area_mm2,
+            "tsv_keepout_frac" => self.tsv_keepout_frac,
+            "mac_per_mm2" => self.mac_per_mm2,
+            "freq_ghz" => self.freq_ghz,
+            "sram_mb_per_mm2" => self.sram_mb_per_mm2,
+            "default_u_chip" => self.default_u_chip,
+            "operands_per_mac" => self.operands_per_mac,
+            "operand_bits" => self.operand_bits,
+            "operand_reuse" => self.operand_reuse,
+            "hbm_fanout" => self.hbm_fanout,
+            "hbm_deliverable_tbps" => self.hbm_deliverable_tbps,
+            "latency_hiding_ops" => self.latency_hiding_ops,
+            "e_mac_pj" => self.e_mac_pj,
+            "e_dram_pj_bit" => self.e_dram_pj_bit,
+            "dram_bits_per_op" => self.dram_bits_per_op,
+            "link_bits_per_op" => self.link_bits_per_op,
+            "ai2ai_traffic_frac" => self.ai2ai_traffic_frac,
+            "e_ondie_pj_bit" => self.e_ondie_pj_bit,
+            "e_offboard_pj_bit" => self.e_offboard_pj_bit,
+            "mono_cross_traffic_frac" => self.mono_cross_traffic_frac,
+            "e_link_scale" => self.e_link_scale,
+            "defect_per_mm2" => self.defect_per_mm2,
+            "cluster_alpha" => self.cluster_alpha,
+            "kgd_exponent" => self.kgd_exponent,
+            "kgd_unit_cost" => self.kgd_unit_cost,
+            "wafer_cost" => self.wafer_cost,
+            "wafer_diameter_mm" => self.wafer_diameter_mm,
+            "pkg_mu0_per_mm2" => self.pkg_mu0_per_mm2,
+            "pkg_mu1_per_link" => self.pkg_mu1_per_link,
+            "pkg_mu2_low" => self.pkg_mu2_tier[0],
+            "pkg_mu2_medium" => self.pkg_mu2_tier[1],
+            "pkg_mu2_high" => self.pkg_mu2_tier[2],
+            "pkg_mu2_highest" => self.pkg_mu2_tier[3],
+            "bond_yield" => self.bond_yield,
+            "perfect_bonding" => {
+                if self.perfect_bonding {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            "mono_die_mm2" => self.mono_die_mm2,
+            "mono_u_chip" => self.mono_u_chip,
+            "mono_n_hbm" => self.mono_n_hbm as f64,
+            "ref_task_gmac" => self.ref_task_gmac,
+            "alpha" => self.alpha,
+            "beta" => self.beta,
+            "gamma" => self.gamma,
+            "infeasible_reward" => self.infeasible_reward,
+            _ => return None,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -422,6 +490,22 @@ mod tests {
         let before = c.clone();
         assert!(!c.set_key("no_such_constant", 1.0));
         assert_eq!(c, before, "unknown key must not mutate");
+    }
+
+    #[test]
+    fn get_key_is_a_set_key_fixed_point_for_every_listed_key() {
+        let c = Calib::default();
+        for &key in CALIB_KEYS {
+            assert!(c.get_key(key).is_some(), "listed key {key:?} unreadable");
+            // set∘get must be a no-op, including the coerced fields
+            // (perfect_bonding 0/1, mono_n_hbm whole-number).
+            let mut m = Calib::default();
+            assert!(m.set_key(key, 3.0));
+            let g = m.get_key(key).unwrap();
+            assert!(m.set_key(key, g));
+            assert_eq!(m.get_key(key), Some(g), "set(get({key:?})) drifted");
+        }
+        assert_eq!(c.get_key("no_such_constant"), None);
     }
 
     #[test]

@@ -19,7 +19,7 @@ pub mod throughput;
 pub mod yield_model;
 
 pub use bounds::{partial_upper_bound, HeadDomains};
-pub use cache::EvalCache;
+pub use cache::{cache_fingerprint, CacheStats, EvalCache, SharedEvalCache};
 pub use constants::{Calib, TechNode, CALIB_KEYS};
 pub use delta::DeltaEvaluator;
 pub use ppac::{evaluate, evaluate_action, evaluate_with_placement, Evaluation};

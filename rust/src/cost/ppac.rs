@@ -50,7 +50,75 @@ pub struct Evaluation {
     pub reward: f64,
 }
 
+/// Number of `u64` slots in [`Evaluation::to_record`]'s encoding: the
+/// feasibility flag, the three mesh-geometry counters, then every f64
+/// field in declaration order. Snapshot files (`cost::cache`) store one
+/// record per cached design point, so this count is part of the on-disk
+/// format and bumping it requires a snapshot version bump.
+pub const EVAL_RECORD_LEN: usize = 23;
+
 impl Evaluation {
+    /// Lossless encoding as [`EVAL_RECORD_LEN`] `u64`s: integers pass
+    /// through, f64s go via `to_bits`, so
+    /// `Evaluation::from_record(e.to_record())` reproduces `e` bit for
+    /// bit — the property the persistent `EvalCache` snapshot relies on.
+    pub fn to_record(&self) -> [u64; EVAL_RECORD_LEN] {
+        [
+            u64::from(self.feasible),
+            self.mesh_m as u64,
+            self.mesh_n as u64,
+            self.n_footprints as u64,
+            self.area_per_chiplet.to_bits(),
+            self.logic_area.to_bits(),
+            self.pe_per_chiplet.to_bits(),
+            self.sram_mb.to_bits(),
+            self.l_ai2ai_ns.to_bits(),
+            self.l_hbm2ai_ns.to_bits(),
+            self.cycles_per_op.to_bits(),
+            self.bw_req_hbm_tbps.to_bits(),
+            self.bw_act_hbm_tbps.to_bits(),
+            self.u_sys.to_bits(),
+            self.peak_tops.to_bits(),
+            self.throughput_tops.to_bits(),
+            self.e_comm_pj.to_bits(),
+            self.e_op_pj.to_bits(),
+            self.energy_mj_per_ref_task.to_bits(),
+            self.die_yield.to_bits(),
+            self.die_cost.to_bits(),
+            self.pkg_cost.to_bits(),
+            self.reward.to_bits(),
+        ]
+    }
+
+    /// Inverse of [`Evaluation::to_record`].
+    pub fn from_record(r: &[u64; EVAL_RECORD_LEN]) -> Evaluation {
+        Evaluation {
+            feasible: r[0] != 0,
+            mesh_m: r[1] as usize,
+            mesh_n: r[2] as usize,
+            n_footprints: r[3] as usize,
+            area_per_chiplet: f64::from_bits(r[4]),
+            logic_area: f64::from_bits(r[5]),
+            pe_per_chiplet: f64::from_bits(r[6]),
+            sram_mb: f64::from_bits(r[7]),
+            l_ai2ai_ns: f64::from_bits(r[8]),
+            l_hbm2ai_ns: f64::from_bits(r[9]),
+            cycles_per_op: f64::from_bits(r[10]),
+            bw_req_hbm_tbps: f64::from_bits(r[11]),
+            bw_act_hbm_tbps: f64::from_bits(r[12]),
+            u_sys: f64::from_bits(r[13]),
+            peak_tops: f64::from_bits(r[14]),
+            throughput_tops: f64::from_bits(r[15]),
+            e_comm_pj: f64::from_bits(r[16]),
+            e_op_pj: f64::from_bits(r[17]),
+            energy_mj_per_ref_task: f64::from_bits(r[18]),
+            die_yield: f64::from_bits(r[19]),
+            die_cost: f64::from_bits(r[20]),
+            pkg_cost: f64::from_bits(r[21]),
+            reward: f64::from_bits(r[22]),
+        }
+    }
+
     pub(crate) fn infeasible(c: &Calib, geo: &Geometry) -> Evaluation {
         Evaluation {
             feasible: false,
@@ -283,6 +351,33 @@ mod tests {
     use super::*;
     use crate::model::space::{DesignSpace, N_HEADS};
     use crate::util::Rng;
+
+    #[test]
+    fn evaluation_record_round_trips_bitwise() {
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let mut rng = Rng::new(31);
+        for _ in 0..50 {
+            let a = space.random_action(&mut rng);
+            let e = evaluate(&calib, &space.decode(&a));
+            let back = Evaluation::from_record(&e.to_record());
+            assert_eq!(e.feasible, back.feasible);
+            assert_eq!((e.mesh_m, e.mesh_n, e.n_footprints), (back.mesh_m, back.mesh_n, back.n_footprints));
+            assert_eq!(e.reward.to_bits(), back.reward.to_bits());
+            assert_eq!(e.throughput_tops.to_bits(), back.throughput_tops.to_bits());
+            assert_eq!(e.energy_mj_per_ref_task.to_bits(), back.energy_mj_per_ref_task.to_bits());
+            assert_eq!(e.die_cost.to_bits(), back.die_cost.to_bits());
+            assert_eq!(e.pkg_cost.to_bits(), back.pkg_cost.to_bits());
+            assert_eq!(e.to_record(), back.to_record(), "every field must survive");
+        }
+        // non-finite payloads survive too (from_bits/to_bits are total)
+        let mut e = evaluate(&calib, &space.decode(&space.random_action(&mut rng)));
+        e.reward = f64::NAN;
+        e.u_sys = f64::INFINITY;
+        let back = Evaluation::from_record(&e.to_record());
+        assert_eq!(e.reward.to_bits(), back.reward.to_bits());
+        assert_eq!(e.u_sys.to_bits(), back.u_sys.to_bits());
+    }
 
     fn paper_case_i_action() -> [usize; N_HEADS] {
         let mut a = [0usize; N_HEADS];

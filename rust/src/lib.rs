@@ -63,6 +63,10 @@
 //!   behind the off-by-default `pjrt` cargo feature; without it a stub
 //!   engine with the same API compiles and RL paths skip loudly.
 //! * [`report`] — CSV/series emitters used by the per-figure benches.
+//! * [`serve`] — optimizer-as-a-service: the resident `serve`
+//!   subcommand's hand-rolled HTTP/1.1 + JSON API, async job queue over
+//!   the same drivers, and persistent process-shared `EvalCache`
+//!   (bit-identical results to the one-shot subcommands).
 
 pub mod config;
 pub mod cost;
@@ -76,5 +80,6 @@ pub mod report;
 pub mod rl;
 pub mod runtime;
 pub mod scenario;
+pub mod serve;
 pub mod util;
 pub mod workloads;

@@ -11,6 +11,8 @@
 //!              warm start, then a certified optimality gap.
 //!   sweep      Scenario sweep: optimize each scenario, emit per-scenario
 //!              CSVs + a cross-scenario Pareto frontier (offline).
+//!   serve      Resident optimizer-as-a-service: HTTP/JSON job API over
+//!              the same drivers, persistent process-shared eval cache.
 //!   place      Optimize the HBM attach placement of one design point;
 //!              print canonical vs optimized layouts and metrics.
 //!   ppo        Train one PPO agent, print the convergence trace.
@@ -54,6 +56,7 @@ use chiplet_gym::rl::{train_ppo_auto, PpoConfig};
 use chiplet_gym::runtime::Engine;
 use chiplet_gym::scenario::sweep::{run_sweep, BudgetOverride, SweepConfig};
 use chiplet_gym::scenario::{registry, Scenario};
+use chiplet_gym::serve::ServeConfig;
 use chiplet_gym::util::cli::Args;
 use chiplet_gym::util::json::Json;
 use chiplet_gym::util::table::{fnum, Table};
@@ -755,6 +758,36 @@ fn cmd_info() -> Result<()> {
     Ok(())
 }
 
+/// `serve`: the resident optimizer-as-a-service process. Binds the
+/// configured address, prints the API surface, and runs until killed.
+/// Per-request knobs: `--addr HOST:PORT`, `--cache-dir DIR|none`
+/// (eval-cache snapshots across restarts), `--jobs N` (default worker
+/// count for jobs that don't set their own), `--timeout-ms N`
+/// (per-connection socket deadline).
+fn cmd_serve(cfg: &RunConfig, args: &Args) -> Result<()> {
+    let serve_cfg = ServeConfig {
+        addr: cfg.serve_addr.clone(),
+        default_jobs: cfg.jobs,
+        cache_dir: cfg.serve_cache_dir.clone().map(std::path::PathBuf::from),
+        read_timeout_ms: args.get_parse("timeout-ms", 10_000u64),
+    };
+    let cache_note = match &serve_cfg.cache_dir {
+        Some(d) => format!("eval-cache snapshots under {}", d.display()),
+        None => "eval cache memory-only (--cache-dir none)".to_string(),
+    };
+    let handle = chiplet_gym::serve::start(serve_cfg)?;
+    println!("chiplet-gym serve listening on http://{}", handle.addr());
+    println!("  {cache_note}");
+    println!("  POST   /jobs                  submit a scenario (TOML or JSON body)");
+    println!("  GET    /jobs/<id>             status + best candidate when done");
+    println!("  GET    /jobs/<id>/results.csv candidate table");
+    println!("  DELETE /jobs/<id>             cancel");
+    println!("  GET    /healthz               liveness");
+    println!("  GET    /metrics               queue + cache + throughput counters");
+    handle.join();
+    Ok(())
+}
+
 fn lookup_scenario(name: &str) -> Result<Scenario> {
     registry::find(name).ok_or_else(|| {
         anyhow::anyhow!("unknown scenario {name:?}; `sweep --scenarios list` shows the registry")
@@ -802,6 +835,7 @@ fn main() -> Result<()> {
         Some("portfolio") => cmd_portfolio(&cfg, "portfolio")?,
         Some("certify") => cmd_certify(&cfg, &args)?,
         Some("sweep") => cmd_sweep(&cfg, &args)?,
+        Some("serve") => cmd_serve(&cfg, &args)?,
         Some("place") => cmd_place(&cfg, &args)?,
         Some("ppo") => cmd_ppo(&cfg)?,
         Some("eval") => cmd_eval(&cfg, &args)?,
@@ -813,7 +847,7 @@ fn main() -> Result<()> {
             }
             eprintln!(
                 "usage: chiplet-gym \
-                 <optimize|sa|ga|greedy|portfolio|certify|sweep|place|ppo|eval|mlperf|info> \
+                 <optimize|sa|ga|greedy|portfolio|certify|sweep|serve|place|ppo|eval|mlperf|info> \
                  [--case i|ii] [--seeds 0,1,..] [--sa-iters N (= eval budget)] \
                  [--ga-pop N] [--jobs N (0 = all cores)] \
                  [optimize: --with-portfolio (add GA+greedy members)] \
@@ -824,6 +858,7 @@ fn main() -> Result<()> {
                  [sweep: --scenarios all|list|a,b --scenario-file f.toml \
                  --out-dir DIR] \
                  [certify: --nodes N --cap K (0 = full) --cold --no-prune] \
+                 [serve: --addr HOST:PORT --cache-dir DIR|none --timeout-ms N] \
                  [place: --action a,b,.. --place-budget N \
                  --place-method greedy|sa|random]"
             );

@@ -43,6 +43,7 @@ pub use ga::GaConfig;
 pub use greedy::GreedyConfig;
 pub use objective::{
     CachedDeltaObjective, CachedObjective, CostObjective, DeltaObjective, FnObjective, Objective,
+    SharedCachedDeltaObjective,
 };
 pub use rl::PpoDriver;
 pub use tracker::{BestTracker, SearchBudget, TraceRecorder};

@@ -126,6 +126,27 @@ impl Objective for CachedDeltaObjective<'_> {
     }
 }
 
+/// [`CachedDeltaObjective`] over a process-shared
+/// [`SharedEvalCache`](crate::cost::SharedEvalCache) instead of an
+/// exclusive `&mut EvalCache` — the serve-path variant, where every
+/// worker of every job memoizes into one persistent table. The
+/// `DeltaEvaluator` stays thread-private (it carries walk state); only
+/// the memo table crosses threads. Purity holds unchanged: the cache is
+/// transparent and the delta path bitwise-identical, so a driver walk
+/// through this objective matches the unshared one bit for bit.
+pub struct SharedCachedDeltaObjective<'a> {
+    pub cache: &'a crate::cost::SharedEvalCache,
+    pub delta: &'a mut DeltaEvaluator,
+    pub space: &'a DesignSpace,
+    pub calib: &'a Calib,
+}
+
+impl Objective for SharedCachedDeltaObjective<'_> {
+    fn evaluate(&mut self, action: &[usize]) -> Evaluation {
+        self.cache.evaluate_via(self.delta, self.calib, self.space, action)
+    }
+}
+
 /// Closure adapter, so ad-hoc evaluators (instrumented, fault-injecting,
 /// test doubles) plug into the same driver path without a named type.
 pub struct FnObjective<F>(pub F);

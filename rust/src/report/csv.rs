@@ -25,7 +25,7 @@ pub fn quote(cell: &str) -> Cow<'_, str> {
     }
 }
 
-fn write_record<S: AsRef<str>>(out: &mut BufWriter<File>, cells: &[S]) -> Result<()> {
+fn write_record<W: Write, S: AsRef<str>>(out: &mut W, cells: &[S]) -> Result<()> {
     for (i, cell) in cells.iter().enumerate() {
         if i > 0 {
             write!(out, ",")?;
@@ -83,8 +83,22 @@ pub fn write_candidates_csv(
     space: &DesignSpace,
     candidates: &[Candidate],
 ) -> Result<()> {
-    let mut w = CsvWriter::create(
-        path,
+    let mut out = BufWriter::new(File::create(path)?);
+    write_candidates_csv_to(&mut out, space, candidates)?;
+    out.flush()?;
+    Ok(())
+}
+
+/// [`write_candidates_csv`] into any `Write` sink — the serve API uses
+/// it to assemble `GET /jobs/<id>/results.csv` in memory, byte-identical
+/// to the file the one-shot subcommands would have written.
+pub fn write_candidates_csv_to<W: Write>(
+    out: &mut W,
+    space: &DesignSpace,
+    candidates: &[Candidate],
+) -> Result<()> {
+    write_record(
+        out,
         &[
             "source",
             "seed",
@@ -106,20 +120,23 @@ pub fn write_candidates_csv(
             .map(|x| x.to_string())
             .collect::<Vec<_>>()
             .join(",");
-        w.row_str(&[
-            c.source.clone(),
-            c.seed.to_string(),
-            format!("{}", c.eval.reward),
-            c.eval.feasible.to_string(),
-            format!("{}", c.eval.throughput_tops),
-            format!("{}", c.eval.energy_mj_per_ref_task),
-            format!("{}", c.eval.die_cost),
-            format!("{}", c.eval.pkg_cost),
-            p.n_chiplets.to_string(),
-            action,
-        ])?;
+        write_record(
+            out,
+            &[
+                c.source.clone(),
+                c.seed.to_string(),
+                format!("{}", c.eval.reward),
+                c.eval.feasible.to_string(),
+                format!("{}", c.eval.throughput_tops),
+                format!("{}", c.eval.energy_mj_per_ref_task),
+                format!("{}", c.eval.die_cost),
+                format!("{}", c.eval.pkg_cost),
+                p.n_chiplets.to_string(),
+                action,
+            ],
+        )?;
     }
-    w.flush()
+    Ok(())
 }
 
 /// [`write_candidates_csv`] plus the certification columns a
@@ -247,6 +264,24 @@ mod tests {
         assert!(text.contains("GA,1,"));
         // the 14-head action list lands in one RFC-4180-quoted cell
         assert!(text.contains("\"0,0,0"));
+    }
+
+    #[test]
+    fn in_memory_candidates_csv_is_byte_identical_to_the_file() {
+        use crate::cost::{evaluate, Calib};
+        use crate::model::space::N_HEADS;
+        let dir = std::env::temp_dir().join("chiplet_gym_csv_test6");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cands.csv");
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let action = vec![0usize; N_HEADS];
+        let eval = evaluate(&calib, &space.decode(&action));
+        let cands = vec![Candidate { source: "SA".into(), seed: 3, action, eval }];
+        write_candidates_csv(&path, &space, &cands).unwrap();
+        let mut buf: Vec<u8> = Vec::new();
+        write_candidates_csv_to(&mut buf, &space, &cands).unwrap();
+        assert_eq!(buf, std::fs::read(&path).unwrap());
     }
 
     #[test]

@@ -3,7 +3,7 @@
 
 pub mod csv;
 
-pub use csv::CsvWriter;
+pub use csv::{write_candidates_csv, write_candidates_csv_to, CsvWriter};
 
 use std::path::{Path, PathBuf};
 

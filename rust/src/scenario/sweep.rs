@@ -31,17 +31,21 @@
 //!   throughput / energy / total cost ([`super::pareto`]).
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::cost::cache::{EvalCache, DEFAULT_CACHE_CAP};
-use crate::cost::{Calib, DeltaEvaluator, HeadDomains};
+use crate::cost::{Calib, DeltaEvaluator, HeadDomains, SharedEvalCache};
 use crate::mesh::grid::hop_stats;
 use crate::model::space::DesignSpace;
 use crate::opt::combined::{rl_seed_candidates, select_best, Candidate, OptOutcome};
 use crate::opt::parallel::{parallel_map, portfolio_candidates_par};
-use crate::opt::search::{BnbConfig, BnbDriver, CachedDeltaObjective, Certification, PpoDriver};
+use crate::opt::search::{
+    BnbConfig, BnbDriver, CachedDeltaObjective, Certification, DriverConfig, PpoDriver,
+    SharedCachedDeltaObjective,
+};
 use crate::place::{refine_outcome, PlacementSummary};
 use crate::report::CsvWriter;
 
@@ -273,6 +277,137 @@ pub fn run_scenario(
         placements,
         cache_hits,
         cache_misses,
+        certification,
+        wall_secs: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// [`run_scenario`] for a resident process: every evaluator call routes
+/// through a caller-owned [`SharedEvalCache`] (the server keeps one per
+/// `(space, calib)` fingerprint, persisted across jobs and restarts),
+/// and the run aborts between stages when `cancel` is raised (`DELETE
+/// /jobs/<id>`).
+///
+/// The non-RL members always fan out through [`parallel_map`] over the
+/// flattened `(driver, seed)` list in member-then-seed order — the
+/// canonical order `opt::combined::portfolio_candidates` produces — so
+/// the candidate list, and therefore the argmax, is bit-identical to a
+/// one-shot `portfolio_optimize` run at any `jobs` value: each instance
+/// is a pure function of `(space, calib, driver, seed)`, the shared
+/// cache is transparent, the thread-private delta evaluators are
+/// bitwise-identical to the full model, and `parallel_map` returns
+/// results slot-ordered. The RL and B&B stages are unchanged from
+/// [`run_scenario`] except that B&B leaf evaluations also flow through
+/// the shared cache. Reported `cache_hits`/`cache_misses` are the
+/// shared counters' delta across this run (exact under the server's
+/// one-job-at-a-time queue).
+pub fn run_scenario_shared(
+    s: &Scenario,
+    budget_override: Option<&BudgetOverride>,
+    jobs: usize,
+    shared: &SharedEvalCache,
+    cancel: &AtomicBool,
+) -> Result<ScenarioResult> {
+    let cancelled = || cancel.load(Ordering::Relaxed);
+    let calib = s.calib().with_context(|| format!("scenario {:?}", s.name))?;
+    let space = s.space();
+    let budget = match budget_override {
+        Some(o) => o.merged_into(&s.budget),
+        None => s.budget.clone(),
+    };
+    if budget.sa_seeds.is_empty() {
+        anyhow::bail!("scenario {:?}: empty seed list", s.name);
+    }
+    let members = match budget_override.and_then(|o| o.ga_population) {
+        Some(p) => s.members_with(&budget, p),
+        None => s.members(&budget),
+    };
+    let t0 = Instant::now();
+    let stats0 = shared.stats();
+    if cancelled() {
+        anyhow::bail!("job cancelled");
+    }
+    let work: Vec<(DriverConfig, u64)> = members
+        .iter()
+        .flat_map(|m| m.seeds.iter().map(|&seed| (m.driver, seed)))
+        .collect();
+    let mut candidates: Vec<Candidate> = parallel_map(&work, jobs, |&(driver, seed)| {
+        let mut delta = DeltaEvaluator::default();
+        let trace = {
+            let mut obj = SharedCachedDeltaObjective {
+                cache: shared,
+                delta: &mut delta,
+                space: &space,
+                calib: &calib,
+            };
+            driver.run(&space, &mut obj, seed)
+        };
+        Candidate {
+            source: driver.name().into(),
+            seed,
+            action: trace.best_action,
+            eval: trace.best_eval,
+        }
+    });
+    if cancelled() {
+        anyhow::bail!("job cancelled");
+    }
+    let rl_seeds = s.rl_seeds(&budget);
+    if !rl_seeds.is_empty() {
+        let ppo = s.ppo_config(&budget);
+        let per_seed = parallel_map(&rl_seeds, jobs, |&seed| {
+            let driver = PpoDriver { engine: None, ppo, calib: calib.clone() };
+            rl_seed_candidates(&driver, &space, &calib, seed)
+        });
+        for seed_cands in per_seed {
+            candidates.extend(seed_cands?);
+        }
+    }
+    if cancelled() {
+        anyhow::bail!("job cancelled");
+    }
+    let mut certification = None;
+    if let Some(max_nodes) = s.bnb_nodes(&budget) {
+        let warm = select_best(&candidates).map(|c| c.action.clone());
+        let driver = BnbDriver {
+            calib: calib.clone(),
+            config: BnbConfig { max_nodes, prune: true },
+            domains: HeadDomains::full(&space),
+            warm_start: warm,
+        };
+        let mut delta = DeltaEvaluator::default();
+        let out = {
+            let mut obj = SharedCachedDeltaObjective {
+                cache: shared,
+                delta: &mut delta,
+                space: &space,
+                calib: &calib,
+            };
+            driver.certify(&space, &mut obj)
+        };
+        certification = Some(out.certification());
+        candidates.push(Candidate {
+            source: "bnb".into(),
+            seed: 0,
+            action: out.best_action,
+            eval: out.best_eval,
+        });
+    }
+    if cancelled() {
+        anyhow::bail!("job cancelled");
+    }
+    let best = select_best(&candidates)
+        .with_context(|| format!("scenario {:?} produced no candidates", s.name))?
+        .clone();
+    let mut outcome = OptOutcome { best, candidates };
+    let placements = apply_placement_pass(s, &space, &calib, &mut outcome);
+    let stats1 = shared.stats();
+    Ok(ScenarioResult {
+        scenario: s.clone(),
+        outcome,
+        placements,
+        cache_hits: stats1.hits - stats0.hits,
+        cache_misses: stats1.misses - stats0.misses,
         certification,
         wall_secs: t0.elapsed().as_secs_f64(),
     })

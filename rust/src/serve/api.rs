@@ -1,0 +1,307 @@
+//! Route table + JSON rendering: a pure function from
+//! `(ServerState, Request)` to `Response`, so the whole API surface is
+//! unit-testable without a socket.
+//!
+//! | method & path                | answer                                   |
+//! |------------------------------|------------------------------------------|
+//! | `POST /jobs`                 | 201 `{id}` — body is a scenario (TOML or JSON), optional top-level `jobs` override |
+//! | `GET /jobs/<id>`             | status + best candidate + gap when done  |
+//! | `GET /jobs/<id>/results.csv` | the candidate table (`report::csv` bytes)|
+//! | `DELETE /jobs/<id>`          | cancel (200) / conflict (409)            |
+//! | `GET /healthz`               | 200 `{"status":"ok"}`                    |
+//! | `GET /metrics`               | queue, cache, and throughput counters    |
+//!
+//! Floats are emitted through `util::json`'s shortest-round-trip
+//! `Display`, so every f64 in a response (`reward` above all) parses
+//! back to its exact bits — the property the bit-identity e2e test
+//! leans on.
+
+use crate::opt::combined::Candidate;
+use crate::scenario::Scenario;
+use crate::util::json::{obj, Json};
+use crate::util::toml;
+
+use super::http::{Request, Response};
+use super::state::{CancelOutcome, JobPhase, ServerState};
+
+/// Dispatch one request. Never panics on any input (the connection
+/// handler still wraps it in `catch_unwind` as a last line).
+pub fn handle(state: &ServerState, req: &Request) -> Response {
+    let path = req.path.split('?').next().unwrap_or("");
+    let segs: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["healthz"]) => json_ok(obj(vec![("status", Json::Str("ok".into()))])),
+        ("GET", ["metrics"]) => metrics(state),
+        ("POST", ["jobs"]) => submit(state, req),
+        ("GET", ["jobs", id]) => job_status(state, id),
+        ("GET", ["jobs", id, "results.csv"]) => job_csv(state, id),
+        ("DELETE", ["jobs", id]) => cancel(state, id),
+        // known paths, wrong verb
+        (_, ["healthz" | "metrics"]) | (_, ["jobs"]) | (_, ["jobs", _]) | (_, ["jobs", _, "results.csv"]) => {
+            error(405, "method not allowed for this path")
+        }
+        _ => error(404, "no such route"),
+    }
+}
+
+fn json_ok(v: Json) -> Response {
+    Response::json(200, v.to_string())
+}
+
+/// Uniform error body: `{"error": "<detail>"}`.
+pub fn error(status: u16, detail: &str) -> Response {
+    Response::json(status, obj(vec![("error", Json::Str(detail.into()))]).to_string())
+}
+
+fn metrics(state: &ServerState) -> Response {
+    let jobs = state.counts();
+    let cache = state.cache_totals();
+    let uptime = state.uptime_secs();
+    let evals_total = cache.hits + cache.misses;
+    let evals_per_sec = if uptime > 0.0 { evals_total as f64 / uptime } else { 0.0 };
+    json_ok(obj(vec![
+        ("uptime_secs", Json::Num(uptime)),
+        (
+            "jobs",
+            obj(vec![
+                ("queued", Json::Num(jobs.queued as f64)),
+                ("running", Json::Num(jobs.running as f64)),
+                ("done", Json::Num(jobs.done as f64)),
+                ("failed", Json::Num(jobs.failed as f64)),
+                ("cancelled", Json::Num(jobs.cancelled as f64)),
+            ]),
+        ),
+        (
+            "cache",
+            obj(vec![
+                ("entries", Json::Num(cache.entries as f64)),
+                ("hits", Json::Num(cache.hits as f64)),
+                ("misses", Json::Num(cache.misses as f64)),
+                ("hit_rate", Json::Num(cache.hit_rate())),
+            ]),
+        ),
+        ("evals_total", Json::Num(evals_total as f64)),
+        ("evals_per_sec", Json::Num(evals_per_sec)),
+    ]))
+}
+
+fn submit(state: &ServerState, req: &Request) -> Response {
+    let Ok(text) = std::str::from_utf8(&req.body) else {
+        return error(400, "body is not UTF-8");
+    };
+    if text.trim().is_empty() {
+        return error(400, "empty body; POST a scenario as TOML or JSON");
+    }
+    // JSON documents start with '{'; anything else is tried as TOML.
+    // Both parsers land on the same `Json` tree, which is exactly how
+    // `Scenario::from_toml_str` works for files.
+    let tree = if text.trim_start().starts_with('{') {
+        Json::parse(text)
+    } else {
+        toml::parse(text)
+    };
+    let tree = match tree {
+        Ok(t) => t,
+        Err(e) => return error(400, &format!("unparseable scenario: {e}")),
+    };
+    let scenario = match Scenario::from_json(&tree) {
+        Ok(s) => s,
+        Err(e) => return error(400, &format!("invalid scenario: {e:#}")),
+    };
+    // Optional top-level `jobs` key (ignored by Scenario::from_json):
+    // per-job worker count, defaulting to the server's --jobs.
+    let jobs = tree
+        .get("jobs")
+        .and_then(Json::as_usize)
+        .unwrap_or(state.default_jobs);
+    let id = state.submit(scenario, jobs);
+    Response::json(
+        201,
+        obj(vec![
+            ("id", Json::Num(id as f64)),
+            ("phase", Json::Str(JobPhase::Queued.name().into())),
+        ])
+        .to_string(),
+    )
+}
+
+/// Parse a path segment as a job id (ids are 1-based, so 0 is never
+/// valid and conveniently also what garbage must not alias to).
+fn parse_id(seg: &str) -> Option<u64> {
+    seg.parse::<u64>().ok().filter(|&id| id > 0)
+}
+
+fn job_status(state: &ServerState, seg: &str) -> Response {
+    let Some(id) = parse_id(seg) else {
+        return error(404, "bad job id");
+    };
+    let Some(body) = state.with_job(id, |job| {
+        let mut fields = vec![
+            ("id", Json::Num(job.id as f64)),
+            ("phase", Json::Str(job.phase.name().into())),
+            ("scenario", Json::Str(job.scenario.name.clone())),
+            ("jobs", Json::Num(job.jobs as f64)),
+        ];
+        if let Some(err) = &job.error {
+            fields.push(("error", Json::Str(err.clone())));
+        }
+        if let Some(res) = &job.result {
+            fields.push(("best", candidate_json(&res.best)));
+            fields.push(("candidates", Json::Num(res.n_candidates as f64)));
+            fields.push(("cache_hits", Json::Num(res.cache_hits as f64)));
+            fields.push(("cache_misses", Json::Num(res.cache_misses as f64)));
+            fields.push(("wall_secs", Json::Num(res.wall_secs)));
+            if let Some(cert) = &res.certification {
+                fields.push(("optimality_gap", Json::Num(cert.optimality_gap)));
+                fields.push(("certified_complete", Json::Bool(cert.complete)));
+            }
+        }
+        obj(fields)
+    }) else {
+        return error(404, "no such job");
+    };
+    json_ok(body)
+}
+
+/// A candidate as JSON: the same fields as a `report::csv` row, with
+/// floats full-precision and the action as a proper array.
+fn candidate_json(c: &Candidate) -> Json {
+    obj(vec![
+        ("source", Json::Str(c.source.clone())),
+        ("seed", Json::Num(c.seed as f64)),
+        ("reward", Json::Num(c.eval.reward)),
+        ("feasible", Json::Bool(c.eval.feasible)),
+        ("throughput_tops", Json::Num(c.eval.throughput_tops)),
+        ("energy_mj_per_task", Json::Num(c.eval.energy_mj_per_ref_task)),
+        ("die_cost", Json::Num(c.eval.die_cost)),
+        ("pkg_cost", Json::Num(c.eval.pkg_cost)),
+        (
+            "action",
+            Json::Arr(c.action.iter().map(|&x| Json::Num(x as f64)).collect()),
+        ),
+    ])
+}
+
+fn job_csv(state: &ServerState, seg: &str) -> Response {
+    let Some(id) = parse_id(seg) else {
+        return error(404, "bad job id");
+    };
+    match state.with_job(id, |job| (job.phase, job.result.clone())) {
+        None => error(404, "no such job"),
+        Some((_, Some(res))) => Response::csv(res.candidates_csv),
+        Some((phase, None)) => error(
+            409,
+            &format!("job is {}; results exist only once done", phase.name()),
+        ),
+    }
+}
+
+fn cancel(state: &ServerState, seg: &str) -> Response {
+    let Some(id) = parse_id(seg) else {
+        return error(404, "bad job id");
+    };
+    match state.cancel(id) {
+        CancelOutcome::NotFound => error(404, "no such job"),
+        CancelOutcome::AlreadyFinished => error(409, "job already finished"),
+        CancelOutcome::Cancelled => json_ok(obj(vec![
+            ("id", Json::Num(id as f64)),
+            ("phase", Json::Str(JobPhase::Cancelled.name().into())),
+        ])),
+        CancelOutcome::CancelRequested => json_ok(obj(vec![
+            ("id", Json::Num(id as f64)),
+            ("phase", Json::Str(JobPhase::Running.name().into())),
+            ("cancel_requested", Json::Bool(true)),
+        ])),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get(path: &str) -> Request {
+        Request {
+            method: "GET".into(),
+            path: path.into(),
+            headers: Vec::new(),
+            body: Vec::new(),
+        }
+    }
+
+    fn post(path: &str, body: &str) -> Request {
+        Request {
+            method: "POST".into(),
+            path: path.into(),
+            headers: Vec::new(),
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    #[test]
+    fn healthz_and_unknown_routes() {
+        let st = ServerState::new(None, 0);
+        assert_eq!(handle(&st, &get("/healthz")).status, 200);
+        assert_eq!(handle(&st, &get("/healthz?probe=1")).status, 200, "query ignored");
+        assert_eq!(handle(&st, &get("/nope")).status, 404);
+        assert_eq!(handle(&st, &get("/jobs/1/extra/deep")).status, 404);
+        let mut del = get("/healthz");
+        del.method = "DELETE".into();
+        assert_eq!(handle(&st, &del).status, 405);
+    }
+
+    #[test]
+    fn metrics_is_valid_json_with_zero_state() {
+        let st = ServerState::new(None, 0);
+        let resp = handle(&st, &get("/metrics"));
+        assert_eq!(resp.status, 200);
+        let v = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(v.req("jobs").req("queued").as_usize(), Some(0));
+        assert_eq!(v.req("cache").req("hit_rate").as_f64(), Some(0.0));
+        assert_eq!(v.req("evals_total").as_usize(), Some(0));
+    }
+
+    #[test]
+    fn submit_accepts_json_and_toml_and_rejects_garbage() {
+        let st = ServerState::new(None, 3);
+        let resp = handle(&st, &post("/jobs", r#"{"name":"a","sa_iterations":10}"#));
+        assert_eq!(resp.status, 201);
+        let v = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(v.req("id").as_usize(), Some(1));
+        assert_eq!(st.with_job(1, |j| j.jobs), Some(3), "server default jobs");
+
+        let resp = handle(&st, &post("/jobs", "name = \"b\"\nsa_iterations = 10\njobs = 1\n"));
+        assert_eq!(resp.status, 201);
+        assert_eq!(st.with_job(2, |j| j.jobs), Some(1), "per-job jobs override");
+
+        assert_eq!(handle(&st, &post("/jobs", "")).status, 400);
+        assert_eq!(handle(&st, &post("/jobs", "{not json")).status, 400);
+        assert_eq!(handle(&st, &post("/jobs", "{\"no_name\": 1}")).status, 400);
+        let mut bin = post("/jobs", "");
+        bin.body = vec![0xff, 0xfe, 0x00];
+        assert_eq!(handle(&st, &bin).status, 400);
+    }
+
+    #[test]
+    fn job_status_csv_and_cancel_cover_every_phase() {
+        let st = ServerState::new(None, 0);
+        assert_eq!(handle(&st, &get("/jobs/1")).status, 404);
+        assert_eq!(handle(&st, &get("/jobs/zzz")).status, 404);
+        assert_eq!(handle(&st, &get("/jobs/0")).status, 404);
+        handle(&st, &post("/jobs", r#"{"name":"a"}"#));
+        let resp = handle(&st, &get("/jobs/1"));
+        assert_eq!(resp.status, 200);
+        let v = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(v.req("phase").as_str(), Some("queued"));
+        assert!(v.get("best").is_none(), "no result while queued");
+        // csv before completion: 409
+        assert_eq!(handle(&st, &get("/jobs/1/results.csv")).status, 409);
+        // cancel queued: 200, then conflict on repeat
+        let mut del = get("/jobs/1");
+        del.method = "DELETE".into();
+        assert_eq!(handle(&st, &del).status, 200);
+        assert_eq!(handle(&st, &del).status, 409);
+        let resp = handle(&st, &get("/jobs/1"));
+        let v = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(v.req("phase").as_str(), Some("cancelled"));
+    }
+}

@@ -1,0 +1,399 @@
+//! A deliberately small HTTP/1.1 server-side reader/writer.
+//!
+//! Same zero-dependency, in-tree-parser precedent as `util::toml` and
+//! `util::json`: the serve API needs exactly one request shape (method
+//! + path + headers + optional body, one request per connection,
+//! `Connection: close`), so a full HTTP stack would be all liability.
+//! The reader is written against hostile input — every limit is
+//! explicit ([`Limits`]), every malformed byte maps to a typed
+//! [`HttpError`] carrying its 4xx/5xx status, and an abrupt disconnect
+//! maps to [`HttpError::Disconnected`], which the connection handler
+//! answers with a clean close instead of a response. Socket read/write
+//! deadlines are the *caller's* job (`serve::start` sets them on the
+//! accepted stream); the reader just translates the resulting
+//! `WouldBlock`/`TimedOut` errors into [`HttpError::Timeout`]. The
+//! robustness property tests live in `tests/serve.rs` (over a real
+//! socket) and below (over in-memory readers).
+
+use std::io::{self, Read, Write};
+
+/// Hard input bounds, enforced while reading — not after.
+#[derive(Clone, Copy, Debug)]
+pub struct Limits {
+    /// Request line + headers, including the blank-line terminator.
+    pub max_head_bytes: usize,
+    /// Header count (each also bounded by `max_head_bytes`).
+    pub max_headers: usize,
+    /// Declared `Content-Length` ceiling.
+    pub max_body_bytes: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Limits {
+        Limits {
+            max_head_bytes: 16 * 1024,
+            max_headers: 64,
+            // A scenario document is a few hundred bytes; 1 MiB is
+            // three orders of magnitude of slack.
+            max_body_bytes: 1 << 20,
+        }
+    }
+}
+
+/// One parsed request. Header names are lowercased on the way in
+/// (HTTP header names are case-insensitive); values keep their bytes.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First header with this (case-insensitive) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let want = name.to_ascii_lowercase();
+        self.headers.iter().find(|(n, _)| *n == want).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Everything that can go wrong reading a request, each variant mapped
+/// to the response the connection handler should write —
+/// [`Disconnected`](HttpError::Disconnected) alone gets no response
+/// (there is no one left to read it): the handler just closes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum HttpError {
+    /// Malformed request line, header, or content-length → 400.
+    BadRequest(String),
+    /// The socket deadline expired mid-request → 408.
+    Timeout,
+    /// Declared body over [`Limits::max_body_bytes`] → 413.
+    PayloadTooLarge,
+    /// Head over [`Limits::max_head_bytes`] or too many headers → 431.
+    HeaderTooLarge,
+    /// A method or transfer-encoding we don't speak → 501.
+    NotImplemented(String),
+    /// Peer closed (or reset) before a full request arrived.
+    Disconnected,
+}
+
+impl HttpError {
+    /// `(status, reason)` to answer with; `None` means close silently.
+    pub fn status(&self) -> Option<(u16, &'static str)> {
+        match self {
+            HttpError::BadRequest(_) => Some((400, "Bad Request")),
+            HttpError::Timeout => Some((408, "Request Timeout")),
+            HttpError::PayloadTooLarge => Some((413, "Payload Too Large")),
+            HttpError::HeaderTooLarge => Some((431, "Request Header Fields Too Large")),
+            HttpError::NotImplemented(_) => Some((501, "Not Implemented")),
+            HttpError::Disconnected => None,
+        }
+    }
+
+    /// Human-readable detail for the JSON error body.
+    pub fn message(&self) -> String {
+        match self {
+            HttpError::BadRequest(m) => format!("bad request: {m}"),
+            HttpError::Timeout => "request read deadline expired".to_string(),
+            HttpError::PayloadTooLarge => "request body too large".to_string(),
+            HttpError::HeaderTooLarge => "request head too large".to_string(),
+            HttpError::NotImplemented(m) => format!("not implemented: {m}"),
+            HttpError::Disconnected => "peer disconnected".to_string(),
+        }
+    }
+}
+
+/// Map an io error from a deadline-armed socket read onto the protocol:
+/// deadline expiry is [`HttpError::Timeout`]; anything else (reset,
+/// broken pipe, …) is the peer going away.
+fn read_err(e: io::Error) -> HttpError {
+    match e.kind() {
+        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => HttpError::Timeout,
+        io::ErrorKind::Interrupted => HttpError::Timeout,
+        _ => HttpError::Disconnected,
+    }
+}
+
+/// Position just past the `\r\n\r\n` head terminator, if present.
+fn head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n").map(|p| p + 4)
+}
+
+/// Read and parse one request. Bounded in every dimension by `limits`;
+/// never blocks past the socket's deadline; never panics on any byte
+/// sequence (`tests/serve.rs` fuzzes this over a real socket).
+pub fn read_request(r: &mut impl Read, limits: &Limits) -> Result<Request, HttpError> {
+    // -- head: accumulate until the blank line ---------------------------
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let head_len = loop {
+        if let Some(end) = head_end(&buf) {
+            break end;
+        }
+        if buf.len() > limits.max_head_bytes {
+            return Err(HttpError::HeaderTooLarge);
+        }
+        let n = match r.read(&mut chunk) {
+            Ok(0) => return Err(HttpError::Disconnected),
+            Ok(n) => n,
+            Err(e) => return Err(read_err(e)),
+        };
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    if head_len > limits.max_head_bytes {
+        return Err(HttpError::HeaderTooLarge);
+    }
+    let head = std::str::from_utf8(&buf[..head_len - 4])
+        .map_err(|_| HttpError::BadRequest("head is not UTF-8".to_string()))?;
+    let mut lines = head.split("\r\n");
+
+    // -- request line ----------------------------------------------------
+    let request_line = lines.next().unwrap_or("");
+    let parts: Vec<&str> = request_line.split(' ').collect();
+    let [method, target, version] = parts.as_slice() else {
+        return Err(HttpError::BadRequest(format!(
+            "malformed request line {request_line:?}"
+        )));
+    };
+    if !version.starts_with("HTTP/1") {
+        return Err(HttpError::BadRequest(format!("unsupported version {version:?}")));
+    }
+    if !matches!(*method, "GET" | "POST" | "DELETE") {
+        return Err(HttpError::NotImplemented(format!("method {method:?}")));
+    }
+    if !target.starts_with('/') {
+        return Err(HttpError::BadRequest(format!("bad request target {target:?}")));
+    }
+
+    // -- headers ---------------------------------------------------------
+    let mut headers = Vec::new();
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(HttpError::BadRequest(format!("malformed header {line:?}")));
+        };
+        if headers.len() >= limits.max_headers {
+            return Err(HttpError::HeaderTooLarge);
+        }
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let req = Request {
+        method: method.to_string(),
+        path: target.to_string(),
+        headers,
+        body: Vec::new(),
+    };
+    if req.header("transfer-encoding").is_some() {
+        return Err(HttpError::NotImplemented("transfer-encoding".to_string()));
+    }
+
+    // -- body ------------------------------------------------------------
+    let content_len = match req.header("content-length") {
+        None => 0,
+        Some(v) => v.trim().parse::<usize>().map_err(|_| {
+            HttpError::BadRequest(format!("bad content-length {v:?}"))
+        })?,
+    };
+    if content_len > limits.max_body_bytes {
+        return Err(HttpError::PayloadTooLarge);
+    }
+    let mut body = buf[head_len..].to_vec();
+    while body.len() < content_len {
+        let n = match r.read(&mut chunk) {
+            Ok(0) => return Err(HttpError::Disconnected),
+            Ok(n) => n,
+            Err(e) => return Err(read_err(e)),
+        };
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_len);
+    Ok(Request { body, ..req })
+}
+
+/// One response, written with `Connection: close` — the server speaks
+/// strictly one request per connection, which keeps the reader free of
+/// keep-alive/pipelining state.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, doc: String) -> Response {
+        Response { status, content_type: "application/json", body: doc.into_bytes() }
+    }
+
+    pub fn csv(body: String) -> Response {
+        Response { status: 200, content_type: "text/csv", body: body.into_bytes() }
+    }
+
+    pub fn write_to(&self, w: &mut impl Write) -> io::Result<()> {
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            self.status,
+            reason_phrase(self.status),
+            self.content_type,
+            self.body.len()
+        )?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+/// Reason phrase for every status the server emits.
+pub fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        201 => "Created",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        _ => "Unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn read(raw: &[u8]) -> Result<Request, HttpError> {
+        read_request(&mut Cursor::new(raw.to_vec()), &Limits::default())
+    }
+
+    #[test]
+    fn parses_a_plain_get() {
+        let r = read(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/healthz");
+        assert_eq!(r.header("host"), Some("x"));
+        assert_eq!(r.header("HOST"), Some("x"), "names are case-insensitive");
+        assert!(r.body.is_empty());
+    }
+
+    #[test]
+    fn parses_a_post_with_body_and_ignores_pipelined_extra() {
+        let r = read(b"POST /jobs HTTP/1.1\r\nContent-Length: 4\r\n\r\nabcdEXTRA").unwrap();
+        assert_eq!(r.body, b"abcd");
+    }
+
+    #[test]
+    fn malformed_request_lines_are_400_not_panics() {
+        for raw in [
+            &b"GARBAGE\r\n\r\n"[..],
+            b"GET\r\n\r\n",
+            b"GET /x\r\n\r\n",
+            b"GET  /x HTTP/1.1\r\n\r\n",   // double space → 4 parts
+            b"GET /x HTTP/1.1 junk\r\n\r\n",
+            b"GET /x SPDY/9\r\n\r\n",
+            b"GET x HTTP/1.1\r\n\r\n",     // target missing the slash
+            b"\r\n\r\n",
+            b"\xff\xfe /x HTTP/1.1\r\n\r\n",
+        ] {
+            assert!(
+                matches!(read(raw), Err(HttpError::BadRequest(_))),
+                "{raw:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_methods_and_chunked_bodies_are_501() {
+        assert!(matches!(
+            read(b"BREW /coffee HTTP/1.1\r\n\r\n"),
+            Err(HttpError::NotImplemented(_))
+        ));
+        assert!(matches!(
+            read(b"POST /jobs HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"),
+            Err(HttpError::NotImplemented(_))
+        ));
+    }
+
+    #[test]
+    fn bad_content_lengths_are_rejected() {
+        for v in ["banana", "-5", "1e3", ""] {
+            let raw = format!("POST /jobs HTTP/1.1\r\nContent-Length: {v}\r\n\r\n");
+            assert!(
+                matches!(read(raw.as_bytes()), Err(HttpError::BadRequest(_))),
+                "{v:?}"
+            );
+        }
+        let raw = format!(
+            "POST /jobs HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            usize::MAX
+        );
+        // usize::MAX parses fine — it must trip the body limit, never
+        // an allocation.
+        assert_eq!(read(raw.as_bytes()), Err(HttpError::PayloadTooLarge));
+    }
+
+    #[test]
+    fn oversized_heads_are_431() {
+        let raw = format!("GET /x HTTP/1.1\r\nA: {}\r\n\r\n", "y".repeat(64 * 1024));
+        assert_eq!(read(raw.as_bytes()), Err(HttpError::HeaderTooLarge));
+        // too many headers, each small
+        let mut raw = String::from("GET /x HTTP/1.1\r\n");
+        for i in 0..100 {
+            raw.push_str(&format!("h{i}: v\r\n"));
+        }
+        raw.push_str("\r\n");
+        assert_eq!(read(raw.as_bytes()), Err(HttpError::HeaderTooLarge));
+    }
+
+    #[test]
+    fn truncated_requests_are_disconnects() {
+        // EOF mid-head and EOF mid-body both map to Disconnected (the
+        // handler closes without a response).
+        assert_eq!(read(b"GET /x HTTP/1.1\r\nHos"), Err(HttpError::Disconnected));
+        assert_eq!(
+            read(b"POST /jobs HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc"),
+            Err(HttpError::Disconnected)
+        );
+        assert_eq!(read(b""), Err(HttpError::Disconnected));
+    }
+
+    #[test]
+    fn deadline_errors_map_to_timeout() {
+        struct Stall;
+        impl Read for Stall {
+            fn read(&mut self, _: &mut [u8]) -> io::Result<usize> {
+                Err(io::Error::new(io::ErrorKind::WouldBlock, "deadline"))
+            }
+        }
+        assert_eq!(
+            read_request(&mut Stall, &Limits::default()),
+            Err(HttpError::Timeout)
+        );
+    }
+
+    #[test]
+    fn response_wire_format_is_pinned() {
+        let mut out = Vec::new();
+        Response::json(200, "{\"ok\":true}".to_string()).write_to(&mut out).unwrap();
+        assert_eq!(
+            String::from_utf8(out).unwrap(),
+            "HTTP/1.1 200 OK\r\nContent-Type: application/json\r\n\
+             Content-Length: 11\r\nConnection: close\r\n\r\n{\"ok\":true}"
+        );
+    }
+
+    #[test]
+    fn random_bytes_never_panic_the_reader() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(0xfeed);
+        for _ in 0..200 {
+            let len = rng.below(2048) as usize;
+            let bytes: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            let _ = read(&bytes); // any Err is fine; a panic is not
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! Optimizer-as-a-service: the resident `serve` subcommand.
+//!
+//! A one-shot CLI re-pays every `cost::evaluate` from a cold cache and
+//! exits; a production deployment amortizes. This module keeps the
+//! optimizer resident behind a hand-rolled HTTP/1.1 + JSON API (zero
+//! new dependencies — [`http`] is the same in-tree-parser precedent as
+//! `util::toml`/`util::json`):
+//!
+//! * [`http`] — bounded, panic-free request reading and response
+//!   writing, one request per connection;
+//! * [`api`] — the route table (`POST /jobs`, `GET /jobs/<id>`,
+//!   `GET /jobs/<id>/results.csv`, `DELETE /jobs/<id>`, `GET /healthz`,
+//!   `GET /metrics`), a pure `(state, request) → response` function;
+//! * [`state`] — the job table, queue condvar, and per-fingerprint
+//!   registry of persistent [`SharedEvalCache`]s;
+//! * [`queue`] — the single worker thread running submitted scenarios
+//!   through `scenario::sweep::run_scenario_shared`.
+//!
+//! # Determinism contract
+//!
+//! A job's result is bit-identical to the equivalent one-shot run at
+//! any `jobs` value: every driver is a pure function of `(space,
+//! calib, driver-config, seed)`, candidates land in canonical
+//! member-then-seed order, the shared cache is transparent, and the
+//! JSON/CSV float rendering is shortest-round-trip. The cache only
+//! changes *when* evaluations happen, never what they return — which
+//! is what makes persisting it across jobs and restarts safe.
+//!
+//! [`SharedEvalCache`]: crate::cost::SharedEvalCache
+
+pub mod api;
+pub mod http;
+pub mod queue;
+pub mod state;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use self::http::Limits;
+use self::state::ServerState;
+
+/// Everything `serve` needs to start (CLI flags land here).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address; port 0 picks an ephemeral port (tests use this).
+    pub addr: String,
+    /// Default per-job worker count (0 = all cores) when a submission
+    /// carries no top-level `jobs` key.
+    pub default_jobs: usize,
+    /// Where eval-cache snapshots live across restarts; `None` keeps
+    /// the caches memory-only.
+    pub cache_dir: Option<PathBuf>,
+    /// Socket read/write deadline per connection — the bound that turns
+    /// a stalled client into a 408 instead of a leaked thread.
+    pub read_timeout_ms: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:8844".to_string(),
+            default_jobs: 0,
+            cache_dir: Some(PathBuf::from("serve_cache")),
+            read_timeout_ms: 10_000,
+        }
+    }
+}
+
+/// A running server: the bound address plus the threads to join.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    state: Arc<ServerState>,
+    acceptor: JoinHandle<()>,
+    worker: JoinHandle<()>,
+}
+
+impl ServerHandle {
+    /// The actually-bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn state(&self) -> &Arc<ServerState> {
+        &self.state
+    }
+
+    /// Graceful stop: raise the flag, wake the worker, poke the
+    /// acceptor loose with a self-connection, join both threads, and
+    /// snapshot every cache so a restart starts warm. In-flight
+    /// connection threads finish on their own deadlines.
+    pub fn shutdown(self) {
+        self.state.shutdown.store(true, Ordering::SeqCst);
+        self.state.notify();
+        let _ = TcpStream::connect(self.addr);
+        let _ = self.acceptor.join();
+        let _ = self.worker.join();
+        self.state.snapshot_all();
+    }
+
+    /// Run until the process dies (the CLI foreground mode).
+    pub fn join(self) {
+        let _ = self.acceptor.join();
+        let _ = self.worker.join();
+    }
+}
+
+/// Bind, spawn the acceptor and the job worker, return immediately.
+pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(&cfg.addr)
+        .with_context(|| format!("binding {}", cfg.addr))?;
+    let addr = listener.local_addr().context("resolving bound address")?;
+    let state = Arc::new(ServerState::new(cfg.cache_dir.clone(), cfg.default_jobs));
+    let worker = std::thread::spawn({
+        let state = state.clone();
+        move || queue::worker_loop(state)
+    });
+    let acceptor = std::thread::spawn({
+        let state = state.clone();
+        let timeout_ms = cfg.read_timeout_ms;
+        move || accept_loop(listener, state, timeout_ms)
+    });
+    Ok(ServerHandle { addr, state, acceptor, worker })
+}
+
+fn accept_loop(listener: TcpListener, state: Arc<ServerState>, timeout_ms: u64) {
+    for conn in listener.incoming() {
+        if state.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = conn else { continue };
+        let state = state.clone();
+        // Thread-per-connection: requests are one short read + one
+        // write (heavy work happens on the queue worker), so the thread
+        // lives milliseconds; the read deadline bounds the stragglers.
+        std::thread::spawn(move || handle_connection(stream, &state, timeout_ms));
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, state: &ServerState, timeout_ms: u64) {
+    let deadline = Duration::from_millis(timeout_ms.max(1));
+    let _ = stream.set_read_timeout(Some(deadline));
+    let _ = stream.set_write_timeout(Some(deadline));
+    let response = match http::read_request(&mut stream, &Limits::default()) {
+        Ok(req) => {
+            // Last line of defense: a panic anywhere in dispatch is a
+            // 500 on this connection, never a dead server.
+            match catch_unwind(AssertUnwindSafe(|| api::handle(state, &req))) {
+                Ok(resp) => resp,
+                Err(_) => api::error(500, "internal error handling request"),
+            }
+        }
+        Err(err) => match err.status() {
+            Some((status, _)) => api::error(status, &err.message()),
+            // Peer is gone: close without writing into the void.
+            None => return,
+        },
+    };
+    let _ = response.write_to(&mut stream);
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
+// Re-exports for the common embedding surface (tests, main.rs).
+pub use self::state::JobPhase;

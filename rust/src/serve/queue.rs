@@ -1,0 +1,75 @@
+//! The single worker thread draining the job queue.
+//!
+//! One job runs at a time; parallelism lives *inside* a job (its
+//! `jobs` knob fans `(driver, seed)` instances across the
+//! `opt::parallel` pool via `scenario::sweep::run_scenario_shared`).
+//! Serializing jobs keeps the shared-cache counter deltas exact per
+//! job and keeps two jobs from oversubscribing the cores against each
+//! other; queued jobs simply wait their turn. A panicking job is
+//! caught and recorded as `Failed` — the server itself never dies with
+//! a job.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::report::write_candidates_csv_to;
+use crate::scenario::sweep::run_scenario_shared;
+use crate::scenario::Scenario;
+
+use super::state::{JobResult, ServerState};
+
+/// Run until shutdown: pick up queued jobs FIFO, run each through the
+/// shared cache for its `(space, calib)` fingerprint, store the result.
+pub fn worker_loop(state: Arc<ServerState>) {
+    while let Some((id, scenario, jobs, cancel)) = state.wait_for_job() {
+        run_one(&state, id, &scenario, jobs, &cancel);
+    }
+}
+
+fn run_one(state: &ServerState, id: u64, scenario: &Scenario, jobs: usize, cancel: &AtomicBool) {
+    let calib = match scenario.calib() {
+        Ok(c) => c,
+        Err(e) => return state.fail(id, format!("{e:#}")),
+    };
+    let space = scenario.space();
+    let (fp, shared) = state.cache_for(&space, &calib);
+    let run = catch_unwind(AssertUnwindSafe(|| {
+        run_scenario_shared(scenario, None, jobs, &shared, cancel)
+    }));
+    match run {
+        Err(_) => state.fail(id, "job panicked (see server log)".to_string()),
+        // A raised cancel flag wins over whatever the run returned: an
+        // Err is the stage-boundary abort, an Ok raced the flag to the
+        // finish line — either way the requester asked for Cancelled.
+        Ok(_) if cancel.load(Ordering::SeqCst) => state.mark_cancelled(id),
+        Ok(Err(e)) => state.fail(id, format!("{e:#}")),
+        Ok(Ok(res)) => {
+            let mut csv: Vec<u8> = Vec::new();
+            if let Err(e) = write_candidates_csv_to(&mut csv, &space, &res.outcome.candidates)
+            {
+                return state.fail(id, format!("rendering results: {e:#}"));
+            }
+            state.complete(
+                id,
+                JobResult {
+                    best: res.outcome.best,
+                    n_candidates: res.outcome.candidates.len(),
+                    candidates_csv: String::from_utf8_lossy(&csv).into_owned(),
+                    certification: res.certification,
+                    cache_hits: res.cache_hits,
+                    cache_misses: res.cache_misses,
+                    wall_secs: res.wall_secs,
+                },
+            );
+            // Persist what this job learned so a restarted server
+            // answers the next identical sweep from disk.
+            if let Some(dir) = &state.cache_dir {
+                let path = super::state::snapshot_path(dir, fp);
+                if let Err(e) = shared.snapshot_to(&path, fp) {
+                    eprintln!("warning: eval-cache snapshot fp={fp:016x} failed: {e}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,380 @@
+//! Shared server state: the job table, the queue signal, and the
+//! per-fingerprint registry of persistent eval caches.
+//!
+//! Everything lives behind plain `Mutex`es (requests are short and the
+//! worker runs one job at a time, so contention is negligible), with
+//! poison recovery everywhere — a panicking connection thread must not
+//! wedge the server. Job ids are 1-based indices into an append-only
+//! table: records are never removed (a cancelled job keeps its row), so
+//! an id is valid forever once issued.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::cost::cache::DEFAULT_CACHE_CAP;
+use crate::cost::{cache_fingerprint, CacheStats, Calib, EvalCache, SharedEvalCache};
+use crate::model::space::DesignSpace;
+use crate::opt::combined::Candidate;
+use crate::opt::search::Certification;
+use crate::scenario::Scenario;
+
+/// Job lifecycle. `Queued → Running → Done | Failed | Cancelled`;
+/// `Queued → Cancelled` directly when cancelled before pickup.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobPhase {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobPhase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobPhase::Queued => "queued",
+            JobPhase::Running => "running",
+            JobPhase::Done => "done",
+            JobPhase::Failed => "failed",
+            JobPhase::Cancelled => "cancelled",
+        }
+    }
+
+    /// Terminal phases never change again (cancel returns 409).
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobPhase::Done | JobPhase::Failed | JobPhase::Cancelled)
+    }
+}
+
+/// What a completed job retains: everything the status and CSV
+/// endpoints serve, assembled once by the worker so reads are lock-in,
+/// copy-out.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub best: Candidate,
+    pub n_candidates: usize,
+    /// The full candidate table, pre-rendered via
+    /// `report::csv::write_candidates_csv_to` — byte-identical to the
+    /// file a one-shot run would write.
+    pub candidates_csv: String,
+    pub certification: Option<Certification>,
+    /// Shared-cache counter deltas across this job (exact under the
+    /// one-job-at-a-time worker).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub wall_secs: f64,
+}
+
+/// One row of the job table.
+#[derive(Clone, Debug)]
+pub struct JobRecord {
+    pub id: u64,
+    pub scenario: Scenario,
+    /// `--jobs` for this job (0 = all cores), from the submission's
+    /// top-level `jobs` key or the server default.
+    pub jobs: usize,
+    pub phase: JobPhase,
+    pub error: Option<String>,
+    pub result: Option<JobResult>,
+    /// Raised by `DELETE /jobs/<id>`; `run_scenario_shared` checks it
+    /// at stage boundaries and the worker re-checks it at completion.
+    pub cancel: Arc<AtomicBool>,
+}
+
+/// Counts for `/metrics`, one bucket per [`JobPhase`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct JobCounts {
+    pub queued: usize,
+    pub running: usize,
+    pub done: usize,
+    pub failed: usize,
+    pub cancelled: usize,
+}
+
+/// What `DELETE /jobs/<id>` did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelOutcome {
+    /// Still queued: marked cancelled on the spot.
+    Cancelled,
+    /// Running: flag raised, the worker will confirm at the next stage
+    /// boundary.
+    CancelRequested,
+    /// Already terminal → 409.
+    AlreadyFinished,
+    /// No such id → 404.
+    NotFound,
+}
+
+pub struct ServerState {
+    jobs: Mutex<Vec<JobRecord>>,
+    queue_cv: Condvar,
+    pub shutdown: AtomicBool,
+    started: Instant,
+    /// One persistent cache per `(space, calib)` fingerprint — the
+    /// invariant that an `EvalCache` serves exactly one pairing, held
+    /// across jobs and (via snapshots under `cache_dir`) restarts.
+    caches: Mutex<HashMap<u64, SharedEvalCache>>,
+    pub cache_dir: Option<PathBuf>,
+    pub default_jobs: usize,
+}
+
+impl ServerState {
+    pub fn new(cache_dir: Option<PathBuf>, default_jobs: usize) -> ServerState {
+        ServerState {
+            jobs: Mutex::new(Vec::new()),
+            queue_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            started: Instant::now(),
+            caches: Mutex::new(HashMap::new()),
+            cache_dir,
+            default_jobs,
+        }
+    }
+
+    fn lock_jobs(&self) -> MutexGuard<'_, Vec<JobRecord>> {
+        self.jobs.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Enqueue a scenario; returns its 1-based job id.
+    pub fn submit(&self, scenario: Scenario, jobs: usize) -> u64 {
+        let mut table = self.lock_jobs();
+        let id = table.len() as u64 + 1;
+        table.push(JobRecord {
+            id,
+            scenario,
+            jobs,
+            phase: JobPhase::Queued,
+            error: None,
+            result: None,
+            cancel: Arc::new(AtomicBool::new(false)),
+        });
+        self.queue_cv.notify_all();
+        id
+    }
+
+    /// Read one job under the lock. `None` for unknown ids.
+    pub fn with_job<R>(&self, id: u64, f: impl FnOnce(&JobRecord) -> R) -> Option<R> {
+        let table = self.lock_jobs();
+        table.get(id.checked_sub(1)? as usize).map(f)
+    }
+
+    /// Worker side: block until a queued job exists (marking it
+    /// running) or shutdown is raised (`None`). The wait is a timed
+    /// condvar loop so a shutdown with an empty queue is noticed within
+    /// ~200 ms even without a wakeup.
+    pub fn wait_for_job(&self) -> Option<(u64, Scenario, usize, Arc<AtomicBool>)> {
+        let mut table = self.lock_jobs();
+        loop {
+            if self.shutdown.load(Ordering::SeqCst) {
+                return None;
+            }
+            if let Some(job) = table.iter_mut().find(|j| j.phase == JobPhase::Queued) {
+                job.phase = JobPhase::Running;
+                return Some((job.id, job.scenario.clone(), job.jobs, job.cancel.clone()));
+            }
+            table = self
+                .queue_cv
+                .wait_timeout(table, Duration::from_millis(200))
+                .unwrap_or_else(|e| e.into_inner())
+                .0;
+        }
+    }
+
+    /// Wake the worker (used by shutdown).
+    pub fn notify(&self) {
+        self.queue_cv.notify_all();
+    }
+
+    pub fn complete(&self, id: u64, result: JobResult) {
+        self.finish(id, JobPhase::Done, None, Some(result));
+    }
+
+    pub fn fail(&self, id: u64, error: String) {
+        self.finish(id, JobPhase::Failed, Some(error), None);
+    }
+
+    pub fn mark_cancelled(&self, id: u64) {
+        self.finish(id, JobPhase::Cancelled, None, None);
+    }
+
+    fn finish(&self, id: u64, phase: JobPhase, error: Option<String>, result: Option<JobResult>) {
+        let mut table = self.lock_jobs();
+        if let Some(job) = table.get_mut(id as usize - 1) {
+            job.phase = phase;
+            job.error = error;
+            job.result = result;
+        }
+    }
+
+    /// `DELETE /jobs/<id>` semantics (see [`CancelOutcome`]).
+    pub fn cancel(&self, id: u64) -> CancelOutcome {
+        let Some(idx) = id.checked_sub(1) else {
+            return CancelOutcome::NotFound;
+        };
+        let mut table = self.lock_jobs();
+        let Some(job) = table.get_mut(idx as usize) else {
+            return CancelOutcome::NotFound;
+        };
+        match job.phase {
+            JobPhase::Queued => {
+                job.phase = JobPhase::Cancelled;
+                job.cancel.store(true, Ordering::SeqCst);
+                CancelOutcome::Cancelled
+            }
+            JobPhase::Running => {
+                job.cancel.store(true, Ordering::SeqCst);
+                CancelOutcome::CancelRequested
+            }
+            _ => CancelOutcome::AlreadyFinished,
+        }
+    }
+
+    pub fn counts(&self) -> JobCounts {
+        let table = self.lock_jobs();
+        let mut c = JobCounts::default();
+        for j in table.iter() {
+            match j.phase {
+                JobPhase::Queued => c.queued += 1,
+                JobPhase::Running => c.running += 1,
+                JobPhase::Done => c.done += 1,
+                JobPhase::Failed => c.failed += 1,
+                JobPhase::Cancelled => c.cancelled += 1,
+            }
+        }
+        c
+    }
+
+    fn lock_caches(&self) -> MutexGuard<'_, HashMap<u64, SharedEvalCache>> {
+        self.caches.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// The persistent cache for this `(space, calib)` pair, created on
+    /// first use — warm-loaded from its snapshot when `cache_dir` holds
+    /// one (tolerantly: a damaged snapshot loads empty with a warning).
+    pub fn cache_for(&self, space: &DesignSpace, calib: &Calib) -> (u64, SharedEvalCache) {
+        let fp = cache_fingerprint(space, calib);
+        let mut caches = self.lock_caches();
+        let cache = caches
+            .entry(fp)
+            .or_insert_with(|| {
+                let cache = match &self.cache_dir {
+                    Some(dir) => EvalCache::load_snapshot_or_empty(
+                        &snapshot_path(dir, fp),
+                        fp,
+                        DEFAULT_CACHE_CAP,
+                    ),
+                    None => EvalCache::new(DEFAULT_CACHE_CAP),
+                };
+                SharedEvalCache::new(cache)
+            })
+            .clone();
+        (fp, cache)
+    }
+
+    /// Aggregate counters across every live cache, for `/metrics`.
+    pub fn cache_totals(&self) -> CacheStats {
+        let caches = self.lock_caches();
+        let mut total = CacheStats::default();
+        for c in caches.values() {
+            let s = c.stats();
+            total.hits += s.hits;
+            total.misses += s.misses;
+            total.entries += s.entries;
+        }
+        total
+    }
+
+    /// Snapshot every live cache to `cache_dir` (no-op without one).
+    /// Returns the number written; failures warn and continue — losing
+    /// a snapshot costs re-evaluation, never correctness.
+    pub fn snapshot_all(&self) -> usize {
+        let Some(dir) = &self.cache_dir else {
+            return 0;
+        };
+        let caches = self.lock_caches();
+        let mut written = 0;
+        for (&fp, cache) in caches.iter() {
+            match cache.snapshot_to(&snapshot_path(dir, fp), fp) {
+                Ok(()) => written += 1,
+                Err(e) => eprintln!("warning: eval-cache snapshot fp={fp:016x} failed: {e}"),
+            }
+        }
+        written
+    }
+
+    pub fn uptime_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+}
+
+/// Snapshot file for one fingerprint, inside the cache directory.
+pub fn snapshot_path(dir: &Path, fingerprint: u64) -> PathBuf {
+    dir.join(format!("evalcache_{fingerprint:016x}.snap"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scenario() -> Scenario {
+        Scenario::baseline()
+    }
+
+    #[test]
+    fn submit_assigns_sequential_ids_and_queued_phase() {
+        let st = ServerState::new(None, 0);
+        assert_eq!(st.submit(scenario(), 1), 1);
+        assert_eq!(st.submit(scenario(), 1), 2);
+        assert_eq!(st.with_job(1, |j| j.phase), Some(JobPhase::Queued));
+        assert_eq!(st.with_job(3, |j| j.phase), None);
+        assert_eq!(st.with_job(0, |j| j.phase), None);
+        assert_eq!(st.counts().queued, 2);
+    }
+
+    #[test]
+    fn wait_for_job_picks_fifo_and_cancel_semantics_hold() {
+        let st = ServerState::new(None, 0);
+        let a = st.submit(scenario(), 1);
+        let b = st.submit(scenario(), 1);
+        let (id, _, _, cancel) = st.wait_for_job().unwrap();
+        assert_eq!(id, a, "FIFO pickup");
+        assert_eq!(st.with_job(a, |j| j.phase), Some(JobPhase::Running));
+        // queued job cancels instantly
+        assert_eq!(st.cancel(b), CancelOutcome::Cancelled);
+        assert_eq!(st.with_job(b, |j| j.phase), Some(JobPhase::Cancelled));
+        assert_eq!(st.cancel(b), CancelOutcome::AlreadyFinished);
+        // running job gets a flag, not a phase flip
+        assert_eq!(st.cancel(a), CancelOutcome::CancelRequested);
+        assert!(cancel.load(Ordering::SeqCst));
+        assert_eq!(st.with_job(a, |j| j.phase), Some(JobPhase::Running));
+        st.mark_cancelled(a);
+        assert_eq!(st.with_job(a, |j| j.phase), Some(JobPhase::Cancelled));
+        assert_eq!(st.cancel(99), CancelOutcome::NotFound);
+        // queue drained + shutdown → worker unblocks with None
+        st.shutdown.store(true, Ordering::SeqCst);
+        assert!(st.wait_for_job().is_none());
+    }
+
+    #[test]
+    fn cache_registry_is_per_fingerprint_and_shared() {
+        let st = ServerState::new(None, 0);
+        let space = DesignSpace::case_i();
+        let calib = Calib::default();
+        let (fp1, c1) = st.cache_for(&space, &calib);
+        let (fp2, c2) = st.cache_for(&space, &calib);
+        assert_eq!(fp1, fp2);
+        // same underlying table: counters accumulate across handles
+        c1.evaluate(&calib, &space, &[0; 14]);
+        c2.evaluate(&calib, &space, &[0; 14]);
+        assert_eq!(st.cache_totals(), CacheStats { hits: 1, misses: 1, entries: 1 });
+        // a different calib gets its own cache
+        let mut other = calib.clone();
+        assert!(other.set_key("e_mac_pj", 0.5));
+        let (fp3, _) = st.cache_for(&space, &other);
+        assert_ne!(fp1, fp3);
+    }
+}

@@ -266,7 +266,11 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                if !x.is_finite() {
+                    // JSON has no NaN/Infinity literal; emitting one
+                    // would make the whole document unparseable.
+                    write!(f, "null")
+                } else if x.fract() == 0.0 && x.abs() < 1e15 {
                     write!(f, "{}", *x as i64)
                 } else {
                     write!(f, "{x}")
@@ -364,6 +368,18 @@ mod tests {
     fn unicode_strings() {
         let v = Json::parse("\"αβ\\u0041\"").unwrap();
         assert_eq!(v.as_str(), Some("αβA"));
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // Regression: `{}` on a NaN/inf f64 wrote `NaN`/`inf`, which no
+        // JSON parser (ours included) accepts — /metrics and job-status
+        // responses must stay machine-readable whatever the floats did.
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "null");
+        let doc = obj(vec![("x", Json::Num(f64::NAN))]).to_string();
+        assert_eq!(Json::parse(&doc).unwrap().req("x"), &Json::Null);
     }
 
     #[test]

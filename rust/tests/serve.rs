@@ -1,0 +1,321 @@
+//! Socket-level integration tests for the `serve` subsystem: the full
+//! job lifecycle over a real TCP connection, the bit-identity of served
+//! results against the one-shot optimizer, eval-cache persistence
+//! across a server restart, HTTP robustness under hostile input, and
+//! cancellation.
+//!
+//! Every server binds port 0 (ephemeral) in-process; the raw-socket
+//! client below speaks just enough HTTP/1.1 to exercise the real wire
+//! path (the server closes after each response, so reads run to EOF).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use chiplet_gym::opt::combined::portfolio_optimize;
+use chiplet_gym::report::write_candidates_csv_to;
+use chiplet_gym::scenario::Scenario;
+use chiplet_gym::serve::{start, ServeConfig, ServerHandle};
+use chiplet_gym::util::json::Json;
+use chiplet_gym::util::Rng;
+
+fn serve(cache_dir: Option<std::path::PathBuf>, read_timeout_ms: u64) -> ServerHandle {
+    start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        default_jobs: 1,
+        cache_dir,
+        read_timeout_ms,
+    })
+    .expect("server start")
+}
+
+/// Send raw bytes, read the full response (server closes per request).
+fn raw(addr: SocketAddr, payload: &[u8]) -> Vec<u8> {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    // Ignore write errors: robustness cases intentionally provoke
+    // early server-side closes.
+    let _ = stream.write_all(payload);
+    let mut buf = Vec::new();
+    let _ = stream.read_to_end(&mut buf);
+    buf
+}
+
+/// Minimal HTTP client: returns (status, body).
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let payload = format!(
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    let bytes = raw(addr, payload.as_bytes());
+    let text = String::from_utf8_lossy(&bytes).into_owned();
+    let status: u16 = text
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("unparseable response: {text:?}"));
+    let body = text
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    (status, body)
+}
+
+fn get_json(addr: SocketAddr, path: &str) -> (u16, Json) {
+    let (status, body) = http(addr, "GET", path, "");
+    let v = Json::parse(&body).unwrap_or_else(|e| panic!("bad JSON from {path}: {e}\n{body}"));
+    (status, v)
+}
+
+/// Poll a job until its phase is terminal; panics after `deadline`.
+fn wait_terminal(addr: SocketAddr, id: u64, deadline: Duration) -> Json {
+    let t0 = Instant::now();
+    loop {
+        let (status, v) = get_json(addr, &format!("/jobs/{id}"));
+        assert_eq!(status, 200);
+        let phase = v.req("phase").as_str().unwrap().to_string();
+        if matches!(phase.as_str(), "done" | "failed" | "cancelled") {
+            return v;
+        }
+        assert!(
+            t0.elapsed() < deadline,
+            "job {id} still {phase} after {deadline:?}"
+        );
+        std::thread::sleep(Duration::from_millis(30));
+    }
+}
+
+fn tmp_dir(test: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("chiplet_gym_serve_{test}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The e2e scenario: small enough for a debug-build test, big enough
+/// that the portfolio walks a nontrivial slice of the space.
+const E2E_SCENARIO: &str =
+    r#"{"name":"serve-e2e","optimizer":"portfolio","sa_iterations":1200,"sa_seeds":[0,1],"jobs":1}"#;
+
+#[test]
+fn job_lifecycle_over_a_real_socket_is_bit_identical_to_one_shot() {
+    let server = serve(None, 10_000);
+    let addr = server.addr();
+
+    let (status, body) = http(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200, "{body}");
+
+    // submit → poll → done
+    let (status, body) = http(addr, "POST", "/jobs", E2E_SCENARIO);
+    assert_eq!(status, 201, "{body}");
+    let id = Json::parse(&body).unwrap().req("id").as_usize().unwrap() as u64;
+    assert_eq!(id, 1);
+    let job = wait_terminal(addr, id, Duration::from_secs(600));
+    assert_eq!(job.req("phase").as_str(), Some("done"), "{job}");
+
+    // The one-shot oracle: same scenario, same seeds, direct call.
+    let s = Scenario::from_json(&Json::parse(E2E_SCENARIO).unwrap()).unwrap();
+    let direct = portfolio_optimize(s.space(), &s.calib().unwrap(), &s.members(&s.budget));
+
+    // Best candidate is bit-identical: identity fields exactly, reward
+    // through the shortest-round-trip JSON float encoding.
+    let best = job.req("best");
+    assert_eq!(best.req("source").as_str(), Some(direct.best.source.as_str()));
+    assert_eq!(best.req("seed").as_usize(), Some(direct.best.seed as usize));
+    assert_eq!(best.req("action").as_usize_vec().unwrap(), direct.best.action);
+    assert_eq!(
+        best.req("reward").as_f64().unwrap().to_bits(),
+        direct.best.eval.reward.to_bits(),
+        "served reward must round-trip to the exact bits"
+    );
+    assert_eq!(
+        best.req("throughput_tops").as_f64().unwrap().to_bits(),
+        direct.best.eval.throughput_tops.to_bits()
+    );
+    assert_eq!(
+        job.req("candidates").as_usize(),
+        Some(direct.candidates.len())
+    );
+
+    // The CSV endpoint serves exactly the bytes the one-shot CSV
+    // emitter produces for the same candidate list.
+    let (status, csv) = http(addr, "GET", &format!("/jobs/{id}/results.csv"), "");
+    assert_eq!(status, 200);
+    let mut want: Vec<u8> = Vec::new();
+    write_candidates_csv_to(&mut want, &s.space(), &direct.candidates).unwrap();
+    assert_eq!(csv.into_bytes(), want, "served CSV differs from one-shot CSV");
+
+    // Metrics reflect the finished job and a live cache.
+    let (status, m) = get_json(addr, "/metrics");
+    assert_eq!(status, 200);
+    assert_eq!(m.req("jobs").req("done").as_usize(), Some(1));
+    assert!(m.req("cache").req("entries").as_usize().unwrap() > 0);
+    assert!(m.req("evals_total").as_usize().unwrap() > 0);
+
+    server.shutdown();
+}
+
+#[test]
+fn identical_job_after_restart_is_served_from_the_persisted_cache() {
+    let dir = tmp_dir("restart");
+    let scenario =
+        r#"{"name":"warm","optimizer":"sa","sa_iterations":800,"sa_seeds":[0],"jobs":1}"#;
+
+    // First server: cold cache, run the job, snapshot on shutdown (and
+    // after the job itself).
+    let server = serve(Some(dir.clone()), 10_000);
+    let addr = server.addr();
+    let (status, _) = http(addr, "POST", "/jobs", scenario);
+    assert_eq!(status, 201);
+    let first = wait_terminal(addr, 1, Duration::from_secs(600));
+    assert_eq!(first.req("phase").as_str(), Some("done"));
+    assert!(first.req("cache_misses").as_usize().unwrap() > 0, "cold run must miss");
+    server.shutdown();
+    assert!(
+        std::fs::read_dir(&dir).unwrap().count() > 0,
+        "shutdown must leave a snapshot in {}",
+        dir.display()
+    );
+
+    // Second server, same cache dir: warm from disk before any job.
+    let server = serve(Some(dir.clone()), 10_000);
+    let addr = server.addr();
+    let (_, body) = http(addr, "POST", "/jobs", scenario);
+    let id = Json::parse(&body).unwrap().req("id").as_usize().unwrap() as u64;
+    let second = wait_terminal(addr, id, Duration::from_secs(600));
+    assert_eq!(second.req("phase").as_str(), Some("done"));
+
+    // The acceptance bar: repeated identical job answered from the
+    // persisted cache — nonzero hits, and (the walk being deterministic
+    // and fully retained) zero misses.
+    assert!(
+        second.req("cache_hits").as_usize().unwrap() > 0,
+        "restarted server must hit the persisted cache: {second}"
+    );
+    assert_eq!(second.req("cache_misses").as_usize(), Some(0), "{second}");
+
+    // And the warm answer is bit-identical to the cold one.
+    assert_eq!(
+        second.req("best").req("reward").as_f64().unwrap().to_bits(),
+        first.req("best").req("reward").as_f64().unwrap().to_bits()
+    );
+    assert_eq!(
+        second.req("best").req("action").as_usize_vec(),
+        first.req("best").req("action").as_usize_vec()
+    );
+
+    let (_, m) = get_json(addr, "/metrics");
+    assert!(m.req("cache").req("entries").as_usize().unwrap() > 0);
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn hostile_input_yields_4xx_or_clean_close_never_a_hang() {
+    // Short read deadline so the stall cases resolve quickly.
+    let server = serve(None, 500);
+    let addr = server.addr();
+
+    let expect_status = |payload: &[u8], want: u16| {
+        let resp = String::from_utf8_lossy(&raw(addr, payload)).into_owned();
+        let got: Option<u16> =
+            resp.split(' ').nth(1).and_then(|s| s.parse().ok());
+        assert_eq!(got, Some(want), "payload {payload:?} → {resp:?}");
+    };
+
+    expect_status(b"GARBAGE\r\n\r\n", 400);
+    expect_status(b"GET\r\n\r\n", 400);
+    expect_status(b"GET /healthz SPDY/9\r\n\r\n", 400);
+    expect_status(b"BREW /coffee HTTP/1.1\r\n\r\n", 501);
+    expect_status(b"POST /jobs HTTP/1.1\r\nContent-Length: banana\r\n\r\n", 400);
+    expect_status(b"POST /jobs HTTP/1.1\r\nContent-Length: -5\r\n\r\n", 400);
+    expect_status(
+        b"POST /jobs HTTP/1.1\r\nContent-Length: 99999999999\r\n\r\n",
+        413,
+    );
+    expect_status(b"POST /jobs HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n", 501);
+    // Oversized head → 431, with one caveat: the server stops reading
+    // at the limit, so the unread tail can turn its close into a TCP
+    // reset that eats the buffered response on some kernels. A reset
+    // (empty read) is an acceptable clean close; a hang or panic is not.
+    let huge = format!("GET /x HTTP/1.1\r\nA: {}\r\n\r\n", "y".repeat(64 * 1024));
+    let resp = String::from_utf8_lossy(&raw(addr, huge.as_bytes())).into_owned();
+    assert!(
+        resp.is_empty() || resp.starts_with("HTTP/1.1 431"),
+        "oversized head → 431 or clean close, got {resp:?}"
+    );
+
+    // Partial request then client disconnect: the server must just
+    // close (no bytes, no panic, no stuck thread).
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"GET /healthz HTT").unwrap();
+        drop(s); // abrupt close mid-request-line
+    }
+
+    // Partial request then a stall: the read deadline turns it into a
+    // 408 instead of a leaked connection.
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        s.write_all(b"POST /jobs HTTP/1.1\r\nContent-Length: 10\r\n\r\nab").unwrap();
+        let mut buf = Vec::new();
+        let _ = s.read_to_end(&mut buf);
+        let resp = String::from_utf8_lossy(&buf);
+        assert!(resp.starts_with("HTTP/1.1 408"), "stalled body → 408, got {resp:?}");
+    }
+
+    // Seeded random binary garbage: any 4xx/close is fine, panics and
+    // hangs are not.
+    let mut rng = Rng::new(0xbad5eed);
+    for round in 0..16 {
+        let len = 1 + rng.below(2048) as usize;
+        let junk: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        let _ = raw(addr, &junk);
+        // The server must still be alive and sane after every round.
+        let (status, _) = http(addr, "GET", "/healthz", "");
+        assert_eq!(status, 200, "server unhealthy after junk round {round}");
+    }
+
+    server.shutdown();
+}
+
+#[test]
+fn cancellation_covers_queued_and_running_jobs() {
+    let server = serve(None, 10_000);
+    let addr = server.addr();
+
+    // Job 1 occupies the worker; job 2 sits queued behind it.
+    let slow =
+        r#"{"name":"slow","optimizer":"sa","sa_iterations":120000,"sa_seeds":[0,1],"jobs":1}"#;
+    let (status, _) = http(addr, "POST", "/jobs", slow);
+    assert_eq!(status, 201);
+    let (status, _) = http(addr, "POST", "/jobs", slow);
+    assert_eq!(status, 201);
+
+    // Cancelling the queued job flips it instantly.
+    let (status, body) = http(addr, "DELETE", "/jobs/2", "");
+    assert_eq!(status, 200, "{body}");
+    let (_, v) = get_json(addr, "/jobs/2");
+    assert_eq!(v.req("phase").as_str(), Some("cancelled"));
+    // csv for a cancelled job: 409, repeat cancel: 409
+    assert_eq!(http(addr, "GET", "/jobs/2/results.csv", "").0, 409);
+    assert_eq!(http(addr, "DELETE", "/jobs/2", "").0, 409);
+
+    // Cancelling job 1 (queued or already running, the race is fine):
+    // either way its terminal phase must be cancelled — the raised flag
+    // wins even if the run finishes first.
+    let (status, body) = http(addr, "DELETE", "/jobs/1", "");
+    assert_eq!(status, 200, "{body}");
+    let v = wait_terminal(addr, 1, Duration::from_secs(600));
+    assert_eq!(v.req("phase").as_str(), Some("cancelled"), "{v}");
+
+    let (_, m) = get_json(addr, "/metrics");
+    assert_eq!(m.req("jobs").req("cancelled").as_usize(), Some(2));
+
+    // Unknown ids and wrong verbs stay well-behaved.
+    assert_eq!(http(addr, "DELETE", "/jobs/99", "").0, 404);
+    assert_eq!(http(addr, "POST", "/jobs/1", "").0, 405);
+
+    server.shutdown();
+}
