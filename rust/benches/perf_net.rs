@@ -6,9 +6,13 @@
 //! `kernels::oracle`) on the same inputs across the {14-head canonical,
 //! 15-head learned-placement} × {batch 1, 16, 64} grid, asserting
 //! bitwise-identical outputs before timing — a speedup that changed a
-//! single bit would be a bug, not a win. Writes `BENCH_net.json` (plus a
-//! CSV of the rows) under `bench_results/` and fails if throughput fell
-//! more than `REGRESSION_TOLERANCE` below the committed baseline.
+//! single bit would be a bug, not a win. A threads axis then times the
+//! data-parallel update path (`NativeNet::with_jobs`, sharded over the
+//! worker pool) on the 15-head/b64 cell at jobs 1 and 4, again pinned
+//! bitwise against the serial kernel first. Writes `BENCH_net.json`
+//! (plus a CSV of the rows) under `bench_results/` and fails if
+//! throughput fell more than `REGRESSION_TOLERANCE` below the committed
+//! baseline.
 
 use chiplet_gym::kernels::oracle::ScalarNet;
 use chiplet_gym::model::space::DesignSpace;
@@ -162,6 +166,60 @@ fn main() {
         }
     }
 
+    // ---- threads axis: the pool-sharded parallel update on the
+    // 15-head/b64 perf-target cell. Outputs are asserted bitwise
+    // identical to the serial kernel before any timing (jobs-invariance
+    // is the whole contract — see tests/parallel_determinism.rs).
+    let mut jobs_rows: Vec<(String, usize, f64)> = Vec::new();
+    {
+        let shape = NetShape::for_layout(&cases[1].1);
+        let serial = NativeNet::new(shape.clone());
+        let params = init_param_entries(&shape.param_entries(), shape.param_count(), 0);
+        let pc = params.len();
+        let mut rng = Rng::new(42);
+        let m = 64usize;
+        let cell = build_cell(&serial, &params, m, &mut rng);
+        let (zm, zv) = (vec![0f32; pc], vec![0f32; pc]);
+        let want = serial
+            .ppo_update(
+                &params, &zm, &zv, 1.0, &cell.obs, &cell.actions, &cell.old_logp,
+                &cell.advantages, &cell.returns, hyper,
+            )
+            .expect("serial update");
+        for jobs in [1usize, 4] {
+            let net = NativeNet::new(shape.clone()).with_jobs(jobs);
+            let got = net
+                .ppo_update(
+                    &params, &zm, &zv, 1.0, &cell.obs, &cell.actions, &cell.old_logp,
+                    &cell.advantages, &cell.returns, hyper,
+                )
+                .expect("parallel update");
+            for (a, b) in got.params.iter().zip(want.params.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "jobs {jobs} params diverged");
+            }
+            let mut runner = Runner::new();
+            runner.bench(&format!("15-head/b64/j{jobs}: ppo_update"), || {
+                std::hint::black_box(
+                    net.ppo_update(
+                        &params, &zm, &zv, 1.0, &cell.obs, &cell.actions, &cell.old_logp,
+                        &cell.advantages, &cell.returns, hyper,
+                    )
+                    .unwrap(),
+                );
+            });
+            let ns = runner.results().last().unwrap().ns_per_iter.mean;
+            println!(
+                "15-head/b64 jobs {jobs} (effective {}): update {}",
+                net.jobs(),
+                fmt_ns(ns)
+            );
+            jobs_rows.push((format!("15-head/b64/j{jobs}"), jobs, ns));
+        }
+        if let [(_, _, n1), (_, _, n4)] = jobs_rows.as_slice() {
+            println!("15-head/b64 update jobs-4 speedup: {:.2}x", n1 / n4);
+        }
+    }
+
     let mut csv = report::csv(
         "perf_net.csv",
         &[
@@ -178,7 +236,8 @@ fn main() {
     }
     csv.flush().expect("csv flush");
 
-    // BENCH_net.json: machine-readable kernel-vs-oracle trajectory.
+    // BENCH_net.json: machine-readable kernel-vs-oracle trajectory,
+    // plus the threads-axis block.
     let mut json = String::from("{\n  \"cases\": {\n");
     for (i, (label, m, f, fo, u, uo)) in rows.iter().enumerate() {
         json.push_str(&format!(
@@ -192,13 +251,27 @@ fn main() {
             if i + 1 < rows.len() { "," } else { "" }
         ));
     }
+    json.push_str("  },\n  \"jobs\": {\n");
+    for (i, (label, jobs, ns)) in jobs_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    \"{label}\": {{\"jobs\": {jobs}, \"update_ns\": {ns:.1}, \
+             \"update_steps_per_sec\": {:.1}}}{}\n",
+            1e9 / ns,
+            if i + 1 < jobs_rows.len() { "," } else { "" }
+        ));
+    }
     json.push_str("  }\n}\n");
     let path = report::write_text("BENCH_net.json", &json);
     println!("wrote {}", path.display());
 
-    let fresh: Vec<(String, f64)> = rows
+    let mut fresh: Vec<(String, f64)> = rows
         .iter()
         .map(|(label, _, _, _, u, _)| (format!("cases.{label}.update_steps_per_sec"), 1e9 / u))
         .collect();
+    fresh.extend(
+        jobs_rows
+            .iter()
+            .map(|(label, _, ns)| (format!("jobs.{label}.update_steps_per_sec"), 1e9 / ns)),
+    );
     enforce_throughput_baseline("perf_net", baseline.as_deref(), &fresh, REGRESSION_TOLERANCE);
 }

@@ -2,10 +2,12 @@
 //! action-space training loop.
 //!
 //! Times `train_ppo_native` (rollout + GAE + minibatch Adam updates,
-//! all pure Rust — no artifacts needed) across the four cells of the
+//! all pure Rust — no artifacts needed) across the cells of the
 //! {14-head canonical, 15-head learned-placement} × {sequential n_envs
-//! 1, batched n_envs 4} grid, so the cost of the placement head and the
-//! benefit of batched rollouts are both on the record. Writes
+//! 1, batched n_envs 4, data-parallel n_envs 4 + jobs 4} grid, so the
+//! cost of the placement head, the benefit of batched rollouts, and the
+//! worker-pool speedup (`PpoConfig::jobs` — bit-identical results, see
+//! `tests/parallel_determinism.rs`) are all on the record. Writes
 //! `BENCH_ppo.json` (plus a CSV of the rows) under `bench_results/`,
 //! seeding the RL perf trajectory across PRs.
 
@@ -39,14 +41,22 @@ fn main() {
         ("14-head", DesignSpace::case_i()),
         ("15-head", DesignSpace::case_i().with_placement_head()),
     ];
-    let widths = [("sequential", 1usize), ("batched", 4usize)];
+    // (mode, n_envs, jobs): the original serial/batched cells keep
+    // their labels (and baseline keys) unchanged; the threads axis adds
+    // jobs-1 and jobs-4 cells on the batched rollout shape.
+    let widths = [
+        ("sequential", 1usize, 1usize),
+        ("batched", 4, 1),
+        ("batched-j4", 4, 4),
+    ];
 
-    // (label, heads, n_envs, steps/sec, best reward)
-    let mut rows: Vec<(String, usize, usize, f64, f64)> = Vec::new();
+    // (label, heads, n_envs, jobs, steps/sec, best reward)
+    let mut rows: Vec<(String, usize, usize, usize, f64, f64)> = Vec::new();
     for (case, space) in &cases {
-        for (mode, n_envs) in &widths {
+        for (mode, n_envs, jobs) in &widths {
             let mut run_cfg = cfg;
             run_cfg.n_envs = *n_envs;
+            run_cfg.jobs = *jobs;
             assert_eq!(run_cfg.n_steps % n_envs, 0);
             let mut env = ChipletGymEnv::new(*space, calib.clone(), run_cfg.episode_len);
             let t0 = std::time::Instant::now();
@@ -54,7 +64,7 @@ fn main() {
             let secs = t0.elapsed().as_secs_f64();
             let sps = trace.timesteps as f64 / secs;
             println!(
-                "{case:>8} {mode:>10} (n_envs {n_envs}): {} steps in {secs:.2}s \
+                "{case:>8} {mode:>10} (n_envs {n_envs}, jobs {jobs}): {} steps in {secs:.2}s \
                  = {sps:.0} steps/s, best {:.2}",
                 trace.timesteps, trace.best_reward
             );
@@ -62,18 +72,27 @@ fn main() {
                 format!("{case}/{mode}"),
                 space.layout().n_heads(),
                 *n_envs,
+                *jobs,
                 sps,
                 trace.best_reward,
             ));
         }
     }
 
+    // The acceptance headline: data-parallel speedup on the 15-head
+    // cell (results are bit-identical by construction, so this is free
+    // throughput). Printed, not asserted — CI runners vary in cores.
+    let sps_of = |label: &str| rows.iter().find(|r| r.0 == label).map(|r| r.4);
+    if let (Some(j1), Some(j4)) = (sps_of("15-head/batched"), sps_of("15-head/batched-j4")) {
+        println!("15-head jobs-4 speedup over jobs-1 (n_envs 4): {:.2}x", j4 / j1);
+    }
+
     let mut csv = report::csv(
         "perf_ppo.csv",
-        &["config", "heads", "n_envs", "steps_per_sec", "best_reward"],
+        &["config", "heads", "n_envs", "jobs", "steps_per_sec", "best_reward"],
     );
-    for (label, heads, n_envs, sps, best) in &rows {
-        csv.labeled_row(label, &[*heads as f64, *n_envs as f64, *sps, *best])
+    for (label, heads, n_envs, jobs, sps, best) in &rows {
+        csv.labeled_row(label, &[*heads as f64, *n_envs as f64, *jobs as f64, *sps, *best])
             .expect("csv row");
     }
     csv.flush().expect("csv flush");
@@ -82,9 +101,9 @@ fn main() {
     let mut json = String::from("{\n  \"timesteps\": ");
     json.push_str(&cfg.total_timesteps.to_string());
     json.push_str(",\n  \"configs\": {\n");
-    for (i, (label, heads, n_envs, sps, best)) in rows.iter().enumerate() {
+    for (i, (label, heads, n_envs, jobs, sps, best)) in rows.iter().enumerate() {
         json.push_str(&format!(
-            "    \"{label}\": {{\"heads\": {heads}, \"n_envs\": {n_envs}, \
+            "    \"{label}\": {{\"heads\": {heads}, \"n_envs\": {n_envs}, \"jobs\": {jobs}, \
              \"steps_per_sec\": {sps:.1}, \"best_reward\": {best:.4}}}{}\n",
             if i + 1 < rows.len() { "," } else { "" }
         ));
@@ -97,7 +116,7 @@ fn main() {
     // steps/sec drop on any cell still means a hot-path regression.
     let fresh: Vec<(String, f64)> = rows
         .iter()
-        .map(|(label, _, _, sps, _)| (format!("configs.{label}.steps_per_sec"), *sps))
+        .map(|(label, _, _, _, sps, _)| (format!("configs.{label}.steps_per_sec"), *sps))
         .collect();
     enforce_throughput_baseline("perf_ppo", baseline.as_deref(), &fresh, REGRESSION_TOLERANCE);
 }

@@ -99,6 +99,35 @@ impl VecEnv {
         );
     }
 
+    /// [`VecEnv::step_batch_into`] with the per-env work sharded across
+    /// the global worker pool. Each env is stepped by exactly one task
+    /// writing one disjoint `out` slot, and envs are fully independent,
+    /// so the result is bitwise identical to the sequential walk at any
+    /// worker count. Falls back to the sequential path when `jobs <= 1`,
+    /// for tiny batches, and on the first call (the parallel path writes
+    /// in place into the reused buffer; the sequential fill sizes it).
+    pub fn step_batch_par_into<A: AsRef<[usize]> + Sync>(
+        &mut self,
+        actions: &[A],
+        out: &mut Vec<Step>,
+        jobs: usize,
+    ) {
+        let k = self.envs.len();
+        assert_eq!(actions.len(), k, "step_batch needs one action per env");
+        if jobs <= 1 || k < 2 || out.len() != k {
+            self.step_batch_into(actions, out);
+            return;
+        }
+        let pool = crate::util::pool::global();
+        pool.scoped(|scope| {
+            for ((env, action), slot) in
+                self.envs.iter_mut().zip(actions.iter()).zip(out.iter_mut())
+            {
+                scope.execute(move || *slot = env.step(action.as_ref()));
+            }
+        });
+    }
+
     /// Batched observation assembly: write the K current observations
     /// contiguously (row-major, K x OBS_DIM) into `out`.
     pub fn write_obs_flat(&self, out: &mut [f32]) {
@@ -212,6 +241,31 @@ mod tests {
                 assert_eq!(got.obs, want.obs);
             }
         }
+    }
+
+    #[test]
+    fn step_batch_par_matches_sequential_bitwise() {
+        let proto = ChipletGymEnv::case_i();
+        let mut seq = VecEnv::replicate(&proto, 5);
+        let mut par = VecEnv::replicate(&proto, 5);
+        seq.reset_all();
+        par.reset_all();
+        let mut rng = Rng::new(7);
+        let (mut sbuf, mut pbuf) = (Vec::new(), Vec::new());
+        for _ in 0..8 {
+            let actions = random_actions(&proto.space, &mut rng, 5);
+            seq.step_batch_into(&actions, &mut sbuf);
+            par.step_batch_par_into(&actions, &mut pbuf, 4);
+            for (got, want) in pbuf.iter().zip(sbuf.iter()) {
+                assert_eq!(got.reward.to_bits(), want.reward.to_bits());
+                assert_eq!(got.done, want.done);
+                assert_eq!(got.obs, want.obs);
+            }
+        }
+        assert_eq!(seq.total_steps(), par.total_steps());
+        let (sb, _) = seq.best().unwrap();
+        let (pb, _) = par.best().unwrap();
+        assert_eq!(sb.to_bits(), pb.to_bits());
     }
 
     #[test]

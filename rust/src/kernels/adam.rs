@@ -72,10 +72,125 @@ pub fn fused_step(
     upd_sq
 }
 
+/// Fixed parameter-shard width for [`par_fused_step`]. Geometry depends
+/// only on the parameter count, never on worker count.
+pub const PAR_PARAM_SHARD: usize = 16384;
+
+/// Parallel [`fused_step`]: the per-entry moment/step math is sharded
+/// over fixed [`PAR_PARAM_SHARD`]-wide parameter slices (each entry's op
+/// sequence is exactly the serial one, and entries are independent), with
+/// each shard's `update` values stored into `upd`; the `Σ update²`
+/// reduction then runs serially in ascending-index order on the joining
+/// thread. The stored `update` is the full-precision f64 the serial loop
+/// squared in place, so the two-pass reduction adds the identical values
+/// in the identical order — bitwise equal to [`fused_step`] at any
+/// worker count.
+#[allow(clippy::too_many_arguments)]
+pub fn par_fused_step(
+    pool: &crate::util::pool::WorkerPool,
+    params: &[f32],
+    m_in: &[f32],
+    v_in: &[f32],
+    grad: &[f32],
+    lr: f64,
+    beta1: f64,
+    beta2: f64,
+    eps: f64,
+    t: f64,
+    new_p: &mut Vec<f32>,
+    new_m: &mut Vec<f32>,
+    new_v: &mut Vec<f32>,
+    upd: &mut Vec<f64>,
+) -> f64 {
+    let pc = params.len();
+    debug_assert!(m_in.len() == pc && v_in.len() == pc && grad.len() == pc);
+    if pc <= PAR_PARAM_SHARD {
+        return fused_step(
+            params, m_in, v_in, grad, lr, beta1, beta2, eps, t, new_p, new_m, new_v,
+        );
+    }
+    new_p.clear();
+    new_m.clear();
+    new_v.clear();
+    new_p.resize(pc, 0.0);
+    new_m.resize(pc, 0.0);
+    new_v.resize(pc, 0.0);
+    upd.clear();
+    upd.resize(pc, 0.0);
+    let (c1, c2) = (1.0 - beta1.powf(t), 1.0 - beta2.powf(t));
+    pool.scoped(|scope| {
+        let chunks = new_p
+            .chunks_mut(PAR_PARAM_SHARD)
+            .zip(new_m.chunks_mut(PAR_PARAM_SHARD))
+            .zip(new_v.chunks_mut(PAR_PARAM_SHARD))
+            .zip(upd.chunks_mut(PAR_PARAM_SHARD));
+        for (shard, (((np, nm), nv), u)) in chunks.enumerate() {
+            let off = shard * PAR_PARAM_SHARD;
+            let len = np.len();
+            scope.execute(move || {
+                let (ps, ms) = (&params[off..off + len], &m_in[off..off + len]);
+                let (vs, gs) = (&v_in[off..off + len], &grad[off..off + len]);
+                for i in 0..len {
+                    let g = gs[i] as f64;
+                    let m1 = beta1 * ms[i] as f64 + (1.0 - beta1) * g;
+                    let v1 = beta2 * vs[i] as f64 + (1.0 - beta2) * g * g;
+                    nm[i] = m1 as f32;
+                    nv[i] = v1 as f32;
+                    let update = lr * (m1 / c1) / ((v1 / c2).sqrt() + eps);
+                    u[i] = update;
+                    np[i] = (ps[i] as f64 - update) as f32;
+                }
+            });
+        }
+    });
+    let mut upd_sq = 0.0f64;
+    for &u in upd.iter() {
+        upd_sq += u * u;
+    }
+    upd_sq
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::Rng;
+
+    #[test]
+    fn par_fused_step_matches_fused_step_bitwise() {
+        let mut rng = Rng::new(32);
+        let (beta1, beta2, eps, lr) = (0.9f64, 0.999, 1e-5, 3e-4);
+        // Straddle the shard boundary: below (serial fallback), above.
+        for &(pc, t) in &[(100usize, 1f64), (PAR_PARAM_SHARD * 2 + 37, 7.0)] {
+            let params: Vec<f32> = (0..pc).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+            let m_in: Vec<f32> = (0..pc).map(|_| rng.range_f64(-0.1, 0.1) as f32).collect();
+            let v_in: Vec<f32> = (0..pc).map(|_| rng.range_f64(0.0, 0.1) as f32).collect();
+            let grad: Vec<f32> = (0..pc).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect();
+            let (mut wp, mut wm, mut wv) = (Vec::new(), Vec::new(), Vec::new());
+            let want_sq = fused_step(
+                &params, &m_in, &v_in, &grad, lr, beta1, beta2, eps, t, &mut wp, &mut wm,
+                &mut wv,
+            );
+            for workers in [1usize, 2, 8] {
+                let pool = crate::util::pool::WorkerPool::new(workers);
+                let (mut np, mut nm, mut nv) = (Vec::new(), Vec::new(), Vec::new());
+                let mut upd = Vec::new();
+                let got_sq = par_fused_step(
+                    &pool, &params, &m_in, &v_in, &grad, lr, beta1, beta2, eps, t, &mut np,
+                    &mut nm, &mut nv, &mut upd,
+                );
+                assert_eq!(got_sq.to_bits(), want_sq.to_bits(), "workers {workers} pc {pc}");
+                for (a, b) in np.iter().zip(&wp) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+                for (a, b) in nm.iter().zip(&wm) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+                for (a, b) in nv.iter().zip(&wv) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+        }
+    }
 
     #[test]
     fn fused_matches_scalar_three_vector_loop() {

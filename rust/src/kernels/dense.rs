@@ -11,11 +11,48 @@
 //!
 //! Weight layout is row-major `[k_dim][n]` (`w[k*n + j]`), the
 //! `model.py::param_spec()` convention the flat parameter vector uses.
+//!
+//! # Parallel variants
+//!
+//! The `par_*` kernels shard the same loops over a [`WorkerPool`] with a
+//! **fixed shard geometry**: shard sizes are compile-time constants
+//! derived from the problem shape alone, never from the worker count.
+//! Each shard owns a disjoint slice of the outputs and runs the serial
+//! kernel (or its exact per-entry op sequence) inside, so which worker
+//! executes which shard — and how many workers exist — cannot change a
+//! single bit of the result. Batched backward kernels
+//! ([`par_grad_outer_batch`], [`par_bias_accum`]) replay the minibatch
+//! dimension in ascending order inside every shard, preserving the
+//! serial per-entry accumulation sequence exactly.
+
+use crate::util::pool::WorkerPool;
 
 /// Row-block size: observation/minibatch rows processed together.
 const MB: usize = 2;
 /// Output-lane block size: independent output neurons per register block.
+/// This is the f32x8-style register tile: eight independent lane
+/// accumulators updated per `k` step.
 const NB: usize = 8;
+
+/// Fixed row-shard height for the parallel forward kernels. Geometry
+/// depends only on `rows`, never on worker count (jobs-invariance).
+pub const PAR_ROW_SHARD: usize = 8;
+/// Fixed input-lane shard width for [`par_grad_outer_batch`].
+pub const PAR_LANE_SHARD: usize = 16;
+/// Fixed (narrower) lane shard for [`par_grad_outer_weights_batch`] —
+/// first-layer inputs are only `OBS_DIM` lanes wide.
+pub const PAR_LANE_SHARD_NARROW: usize = 4;
+/// Fixed output-column shard for [`par_bias_accum`].
+pub const PAR_BIAS_SHARD: usize = 64;
+
+/// Raw output pointer that may cross into pool tasks. Soundness: every
+/// task writes a disjoint index set (enforced by the fixed shard
+/// geometry in the kernels below).
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+// SAFETY: the wrapped pointer is only dereferenced at task-disjoint
+// indices; sending it across threads adds no aliasing beyond that.
+unsafe impl<T: Send> Send for SendPtr<T> {}
 
 /// `out[r*n + j] = post(b[j] + Σ_k x[r*k_dim + k] · w[k*n + j])` with the
 /// reduction strictly in ascending-`k` order for every `(r, j)`.
@@ -95,6 +132,77 @@ pub fn matmul_bias(
     matmul_bias_post(x, rows, k_dim, w, bias, n, out, |v| v);
 }
 
+/// Row-sharded forward: split `rows` into [`PAR_ROW_SHARD`]-high shards
+/// and run the serial kernel on each. Every output row is produced by
+/// exactly one shard with the serial kernel's op sequence, so the result
+/// is bitwise identical to one serial call at any worker count.
+fn par_matmul_impl(
+    pool: &WorkerPool,
+    x: &[f32],
+    rows: usize,
+    k_dim: usize,
+    w: &[f32],
+    bias: &[f32],
+    n: usize,
+    out: &mut [f32],
+    tanh: bool,
+) {
+    debug_assert_eq!(x.len(), rows * k_dim);
+    debug_assert_eq!(out.len(), rows * n);
+    if rows <= PAR_ROW_SHARD {
+        if tanh {
+            matmul_bias_tanh(x, rows, k_dim, w, bias, n, out);
+        } else {
+            matmul_bias(x, rows, k_dim, w, bias, n, out);
+        }
+        return;
+    }
+    pool.scoped(|scope| {
+        for (x_chunk, out_chunk) in
+            x.chunks(PAR_ROW_SHARD * k_dim).zip(out.chunks_mut(PAR_ROW_SHARD * n))
+        {
+            let shard_rows = out_chunk.len() / n;
+            scope.execute(move || {
+                if tanh {
+                    matmul_bias_tanh(x_chunk, shard_rows, k_dim, w, bias, n, out_chunk);
+                } else {
+                    matmul_bias(x_chunk, shard_rows, k_dim, w, bias, n, out_chunk);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel [`matmul_bias_tanh`], sharded over output rows.
+#[allow(clippy::too_many_arguments)]
+pub fn par_matmul_bias_tanh(
+    pool: &WorkerPool,
+    x: &[f32],
+    rows: usize,
+    k_dim: usize,
+    w: &[f32],
+    bias: &[f32],
+    n: usize,
+    out: &mut [f32],
+) {
+    par_matmul_impl(pool, x, rows, k_dim, w, bias, n, out, true);
+}
+
+/// Parallel [`matmul_bias`], sharded over output rows.
+#[allow(clippy::too_many_arguments)]
+pub fn par_matmul_bias(
+    pool: &WorkerPool,
+    x: &[f32],
+    rows: usize,
+    k_dim: usize,
+    w: &[f32],
+    bias: &[f32],
+    n: usize,
+    out: &mut [f32],
+) {
+    par_matmul_impl(pool, x, rows, k_dim, w, bias, n, out, false);
+}
+
 /// Lane block for the backward kernel's `dx` accumulators.
 const GB: usize = 4;
 
@@ -141,6 +249,10 @@ pub fn grad_outer(x: &[f32], d: &[f64], w: &[f32], grad: &mut [f32], n: usize, d
 
 /// [`grad_outer`] without the input-gradient reduction — the first layer
 /// of a trunk has no upstream to propagate into.
+///
+/// The inner loop is manually unrolled 8 wide (f32x8 style): every grad
+/// entry receives exactly one independent `+=`, so unrolling regroups
+/// independent outputs only — no accumulation order changes.
 pub fn grad_outer_weights(x: &[f32], d: &[f64], grad: &mut [f32], n: usize) {
     let lanes = x.len();
     debug_assert_eq!(grad.len(), lanes * n);
@@ -148,10 +260,129 @@ pub fn grad_outer_weights(x: &[f32], d: &[f64], grad: &mut [f32], n: usize) {
     for (i, &xv) in x.iter().enumerate() {
         let xi = xv as f64;
         let grow = &mut grad[i * n..(i + 1) * n];
-        for (g, &dj) in grow.iter_mut().zip(d.iter()) {
+        let mut gc = grow.chunks_exact_mut(8);
+        let mut dc = d.chunks_exact(8);
+        for (gb, db) in (&mut gc).zip(&mut dc) {
+            gb[0] += (xi * db[0]) as f32;
+            gb[1] += (xi * db[1]) as f32;
+            gb[2] += (xi * db[2]) as f32;
+            gb[3] += (xi * db[3]) as f32;
+            gb[4] += (xi * db[4]) as f32;
+            gb[5] += (xi * db[5]) as f32;
+            gb[6] += (xi * db[6]) as f32;
+            gb[7] += (xi * db[7]) as f32;
+        }
+        for (g, &dj) in gc.into_remainder().iter_mut().zip(dc.remainder()) {
             *g += (xi * dj) as f32;
         }
     }
+}
+
+/// Batched, lane-sharded [`grad_outer`] over a whole minibatch.
+///
+/// Serial equivalent (what `NativeNet` used to run): for each row `b` in
+/// ascending order, `grad_outer(xs[b], ds[b], w, grad, n, dx_b)`. Here
+/// the *input-lane* axis is sharded into fixed [`PAR_LANE_SHARD`]-wide
+/// blocks; each shard replays `b = 0..m` ascending over its own lanes:
+///
+/// * `grad[i*n + j]` — owned by lane `i`'s shard; receives its `m` adds
+///   in the same ascending-`b` order the serial loop used.
+/// * `dxs[b*lanes + i]` — written once by lane `i`'s shard, with the
+///   serial ascending-`j` reduction (via [`grad_outer`] on the lane
+///   sub-range).
+///
+/// Shard geometry depends only on `lanes`, so the result is bitwise
+/// identical at any worker count — and to the serial replay.
+#[allow(clippy::too_many_arguments)]
+pub fn par_grad_outer_batch(
+    pool: &WorkerPool,
+    xs: &[f32],
+    m: usize,
+    lanes: usize,
+    ds: &[f64],
+    w: &[f32],
+    grad: &mut [f32],
+    n: usize,
+    dxs: &mut [f64],
+) {
+    debug_assert_eq!(xs.len(), m * lanes);
+    debug_assert_eq!(ds.len(), m * n);
+    debug_assert_eq!(w.len(), lanes * n);
+    debug_assert_eq!(grad.len(), lanes * n);
+    debug_assert_eq!(dxs.len(), m * lanes);
+    let dxs_ptr = SendPtr(dxs.as_mut_ptr());
+    pool.scoped(|scope| {
+        for (shard, grad_chunk) in grad.chunks_mut(PAR_LANE_SHARD * n).enumerate() {
+            let i0 = shard * PAR_LANE_SHARD;
+            let gb = grad_chunk.len() / n;
+            scope.execute(move || {
+                for b in 0..m {
+                    let xrow = &xs[b * lanes + i0..b * lanes + i0 + gb];
+                    let drow = &ds[b * n..(b + 1) * n];
+                    // SAFETY: this shard owns lanes [i0, i0+gb) of every
+                    // dxs row; shards are disjoint in `i`, so no two
+                    // tasks touch the same element.
+                    let dx_chunk = unsafe {
+                        std::slice::from_raw_parts_mut(dxs_ptr.0.add(b * lanes + i0), gb)
+                    };
+                    grad_outer(xrow, drow, &w[i0 * n..(i0 + gb) * n], grad_chunk, n, dx_chunk);
+                }
+            });
+        }
+    });
+}
+
+/// Batched, lane-sharded [`grad_outer_weights`]: the first-layer variant
+/// of [`par_grad_outer_batch`] (no input gradient). Shards the `lanes`
+/// axis into fixed [`PAR_LANE_SHARD_NARROW`] blocks and replays the
+/// minibatch ascending inside each.
+pub fn par_grad_outer_weights_batch(
+    pool: &WorkerPool,
+    xs: &[f32],
+    m: usize,
+    lanes: usize,
+    ds: &[f64],
+    grad: &mut [f32],
+    n: usize,
+) {
+    debug_assert_eq!(xs.len(), m * lanes);
+    debug_assert_eq!(ds.len(), m * n);
+    debug_assert_eq!(grad.len(), lanes * n);
+    pool.scoped(|scope| {
+        for (shard, grad_chunk) in grad.chunks_mut(PAR_LANE_SHARD_NARROW * n).enumerate() {
+            let i0 = shard * PAR_LANE_SHARD_NARROW;
+            let gb = grad_chunk.len() / n;
+            scope.execute(move || {
+                for b in 0..m {
+                    let xrow = &xs[b * lanes + i0..b * lanes + i0 + gb];
+                    let drow = &ds[b * n..(b + 1) * n];
+                    grad_outer_weights(xrow, drow, grad_chunk, n);
+                }
+            });
+        }
+    });
+}
+
+/// Batched, column-sharded bias gradient: `grad[j] += ds[b*n + j] as f32`
+/// for `b = 0..m` ascending — the serial per-row bias add, sharded over
+/// fixed [`PAR_BIAS_SHARD`]-wide output-column blocks. Each `grad[j]` is
+/// owned by one shard and accumulates in ascending-`b` order.
+pub fn par_bias_accum(pool: &WorkerPool, ds: &[f64], m: usize, n: usize, grad: &mut [f32]) {
+    debug_assert_eq!(ds.len(), m * n);
+    debug_assert_eq!(grad.len(), n);
+    pool.scoped(|scope| {
+        for (shard, grad_chunk) in grad.chunks_mut(PAR_BIAS_SHARD).enumerate() {
+            let j0 = shard * PAR_BIAS_SHARD;
+            scope.execute(move || {
+                for b in 0..m {
+                    let drow = &ds[b * n + j0..b * n + j0 + grad_chunk.len()];
+                    for (g, &dj) in grad_chunk.iter_mut().zip(drow.iter()) {
+                        *g += dj as f32;
+                    }
+                }
+            });
+        }
+    });
 }
 
 #[cfg(test)]
@@ -257,6 +488,107 @@ mod tests {
             }
             grad_outer_weights(&x, &d, &mut grad2, n);
             for (g, wv) in grad2.iter().zip(grad2_want.iter()) {
+                assert_eq!(g.to_bits(), wv.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn par_forward_matches_serial_bitwise_at_any_pool_size() {
+        let mut rng = Rng::new(23);
+        for &(rows, k, n) in &[(64usize, 10usize, 64usize), (33, 64, 591), (9, 64, 1), (8, 3, 5)]
+        {
+            let x = randv(&mut rng, rows * k);
+            let w = randv(&mut rng, k * n);
+            let b = randv(&mut rng, n);
+            let mut want = vec![0f32; rows * n];
+            matmul_bias_tanh(&x, rows, k, &w, &b, n, &mut want);
+            for workers in [1usize, 2, 7] {
+                let pool = WorkerPool::new(workers);
+                let mut got = vec![0f32; rows * n];
+                par_matmul_bias_tanh(&pool, &x, rows, k, &w, &b, n, &mut got);
+                for (g, wv) in got.iter().zip(want.iter()) {
+                    assert_eq!(g.to_bits(), wv.to_bits(), "workers {workers}");
+                }
+            }
+            let mut want2 = vec![0f32; rows * n];
+            matmul_bias(&x, rows, k, &w, &b, n, &mut want2);
+            let pool = WorkerPool::new(3);
+            let mut got2 = vec![0f32; rows * n];
+            par_matmul_bias(&pool, &x, rows, k, &w, &b, n, &mut got2);
+            for (g, wv) in got2.iter().zip(want2.iter()) {
+                assert_eq!(g.to_bits(), wv.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn par_batched_backward_matches_serial_replay_bitwise() {
+        let mut rng = Rng::new(24);
+        for &(m, lanes, n) in &[(7usize, 64usize, 591usize), (64, 64, 64), (5, 10, 64), (1, 16, 8)]
+        {
+            let xs = randv(&mut rng, m * lanes);
+            let ds: Vec<f64> = (0..m * n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let w = randv(&mut rng, lanes * n);
+
+            // Serial replay: per-row grad_outer in ascending-b order.
+            let mut grad_want = randv(&mut rng, lanes * n);
+            let grad_init = grad_want.clone();
+            let mut dxs_want = vec![0f64; m * lanes];
+            for b in 0..m {
+                let mut dx = vec![0f64; lanes];
+                grad_outer(
+                    &xs[b * lanes..(b + 1) * lanes],
+                    &ds[b * n..(b + 1) * n],
+                    &w,
+                    &mut grad_want,
+                    n,
+                    &mut dx,
+                );
+                dxs_want[b * lanes..(b + 1) * lanes].copy_from_slice(&dx);
+            }
+
+            for workers in [1usize, 2, 8] {
+                let pool = WorkerPool::new(workers);
+                let mut grad = grad_init.clone();
+                let mut dxs = vec![0f64; m * lanes];
+                par_grad_outer_batch(&pool, &xs, m, lanes, &ds, &w, &mut grad, n, &mut dxs);
+                for (g, wv) in grad.iter().zip(grad_want.iter()) {
+                    assert_eq!(g.to_bits(), wv.to_bits(), "workers {workers} m {m} n {n}");
+                }
+                for (g, wv) in dxs.iter().zip(dxs_want.iter()) {
+                    assert_eq!(g.to_bits(), wv.to_bits(), "workers {workers} m {m} n {n}");
+                }
+            }
+
+            // Weights-only variant vs its serial replay.
+            let mut gw_want = grad_init.clone();
+            for b in 0..m {
+                grad_outer_weights(
+                    &xs[b * lanes..(b + 1) * lanes],
+                    &ds[b * n..(b + 1) * n],
+                    &mut gw_want,
+                    n,
+                );
+            }
+            let pool = WorkerPool::new(4);
+            let mut gw = grad_init.clone();
+            par_grad_outer_weights_batch(&pool, &xs, m, lanes, &ds, &mut gw, n);
+            for (g, wv) in gw.iter().zip(gw_want.iter()) {
+                assert_eq!(g.to_bits(), wv.to_bits());
+            }
+
+            // Bias accumulation vs its serial replay.
+            let mut bias_want = randv(&mut rng, n);
+            let bias_init = bias_want.clone();
+            for b in 0..m {
+                for j in 0..n {
+                    bias_want[j] += ds[b * n + j] as f32;
+                }
+            }
+            let mut bias = bias_init.clone();
+            par_bias_accum(&pool, &ds, m, n, &mut bias);
+            for (g, wv) in bias.iter().zip(bias_want.iter()) {
                 assert_eq!(g.to_bits(), wv.to_bits());
             }
         }

@@ -15,13 +15,24 @@
 //! > `min`/`max` folds are order-independent and may be rescheduled at
 //! > will.
 //!
+//! The same rule extends to threads: the `par_*` kernel variants shard
+//! work over the persistent `util::pool::WorkerPool` with **fixed shard
+//! geometry** — shard boundaries derive from the problem shape alone,
+//! never from the worker count. Each shard owns a disjoint output slice
+//! and runs the serial op sequence inside, so results are jobs-invariant
+//! down to the bits: any thread count, same answer as the serial loop.
+//!
 //! Layout:
 //!
 //! * [`dense`] — row/lane-blocked dense (matmul + bias, optional tanh)
 //!   forward kernels and the fused backward outer-product kernel, all
-//!   with ascending-`k` per-output accumulation.
+//!   with ascending-`k` per-output accumulation; plus row-sharded
+//!   parallel forwards and lane/column-sharded batched backward kernels
+//!   (`par_matmul_bias*`, `par_grad_outer_batch`, `par_bias_accum`).
 //! * [`adam`] — the bias-corrected Adam step fused into a single pass
-//!   over the parameter vector, plus the global grad-norm clip.
+//!   over the parameter vector (parallel variant `par_fused_step`:
+//!   sharded per-entry math, serial ascending-index `Σ update²`), plus
+//!   the global grad-norm clip.
 //! * [`hopfield`] — precomputed per-tile Manhattan-distance fields for
 //!   batched HBM attach-point scoring, memoized per occupied-tile set
 //!   ([`hopfield::HopFieldCache`], keyed like `cost::cache::EvalCache`).

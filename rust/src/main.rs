@@ -542,6 +542,10 @@ fn rl_run_setup(
     ppo.episode_len = cfg.ppo_episode_len;
     ppo.ent_coef = cfg.ppo_ent_coef;
     ppo.n_envs = cfg.ppo_n_envs;
+    // --jobs: the native backend shards env stepping, minibatch kernels
+    // and the Adam step over the worker pool (bit-identical at any
+    // value); the AOT backend ignores it.
+    ppo.jobs = cfg.jobs;
     if ppo.n_envs >= 1 {
         ppo.n_steps = ppo.n_steps.div_ceil(ppo.n_envs) * ppo.n_envs;
     }

@@ -5,23 +5,27 @@
 //! the sequential driver in [`super::combined`] leaves every core but one
 //! idle. Each non-RL optimizer instance is a pure function of `(space,
 //! calib, driver, seed)`, so this module flattens the portfolio into
-//! `(DriverConfig, seed)` work items, shards them across
-//! `std::thread::scope` workers (capped at `available_parallelism`),
-//! writes each item's [`Candidate`] into its pre-assigned slot, and runs
-//! the same [`select_best`] argmax over the same candidate order as the
-//! sequential path — the output is therefore bit-identical at any thread
-//! count, which `tests/parallel_determinism.rs` proves for `--jobs`
-//! 1/2/8 across SA, GA and greedy.
+//! `(DriverConfig, seed)` work items, shards them across the persistent
+//! [`crate::util::pool::WorkerPool`] (capped at the pool's worker
+//! count), writes each item's [`Candidate`] into its pre-assigned slot,
+//! and runs the same [`select_best`] argmax over the same candidate
+//! order as the sequential path — the output is therefore bit-identical
+//! at any thread count, which `tests/parallel_determinism.rs` proves for
+//! `--jobs` 1/2/8 across SA, GA and greedy.
 //!
 //! The sharding itself is generic ([`parallel_map`]): the portfolio
 //! fan-out maps over (driver, seed) items, and the scenario sweep engine
 //! (`scenario::sweep::run_sweep`) maps over whole scenarios through the
 //! same pool.
 //!
-//! PPO agents stay on the caller's thread: the PJRT client is not `Sync`,
-//! and each HLO call is already internally parallel. The non-RL fan-out
-//! is where the wall-clock lives for the headless paths (see
-//! `benches/perf_parallel.rs` and `benches/perf_search.rs`).
+//! AOT PPO agents stay on the caller's thread (the PJRT client is not
+//! `Sync`, and each HLO call is already internally parallel), but the
+//! *native* PPO backend shards its env stepping, minibatch
+//! forward/backward kernels and Adam step through the same global pool
+//! (`PpoConfig::jobs`) — pool nesting is deadlock-free because joining
+//! threads execute queued tasks while they wait, so a sweep fanning
+//! scenarios over the pool can host PPO agents that themselves shard
+//! kernels through it.
 
 use anyhow::Result;
 
@@ -37,15 +41,13 @@ use super::search::{DeltaObjective, DriverConfig, PortfolioMember};
 use crate::cost::DeltaEvaluator;
 
 /// Resolve a requested `--jobs` value into a worker count: `0` means
-/// "all available cores"; explicit requests are capped at
-/// `available_parallelism` and at the number of work items, and the
-/// result is always at least 1.
+/// "all pool workers"; explicit requests are capped at the global
+/// [`crate::util::pool`]'s actual worker count
+/// ([`crate::util::pool::resolve_jobs`] — the pool owns the
+/// `available_parallelism()` fallback) and at the number of work items,
+/// and the result is always at least 1.
 pub fn effective_jobs(requested: usize, work_items: usize) -> usize {
-    let hw = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1);
-    let want = if requested == 0 { hw } else { requested.min(hw) };
-    want.min(work_items.max(1)).max(1)
+    crate::util::pool::resolve_jobs(requested).min(work_items.max(1)).max(1)
 }
 
 /// Seeds per worker: the one place the sharding arithmetic lives, so
@@ -75,8 +77,10 @@ pub fn worker_count(requested: usize, work_items: usize) -> usize {
 /// is positionally identical to `items.iter().map(f).collect()`
 /// regardless of scheduling — the order-determinism the portfolio
 /// fan-out and the scenario sweep both build their bit-for-bit
-/// guarantees on. With `jobs <= 1` (or a single item) no threads are
-/// spawned at all.
+/// guarantees on. With `jobs <= 1` (or a single item) everything runs
+/// on the calling thread; otherwise the chunks ride the persistent
+/// global [`crate::util::pool::WorkerPool`] instead of spawning fresh
+/// OS threads per call.
 pub fn parallel_map<T, R, F>(items: &[T], jobs: usize, f: F) -> Vec<R>
 where
     T: Sync,
@@ -91,9 +95,9 @@ where
     slots.resize_with(items.len(), || None);
     let chunk = chunk_size(jobs, items.len());
     let f = &f;
-    std::thread::scope(|scope| {
+    crate::util::pool::global().scoped(|scope| {
         for (item_chunk, slot_chunk) in items.chunks(chunk).zip(slots.chunks_mut(chunk)) {
-            scope.spawn(move || {
+            scope.execute(move || {
                 for (slot, item) in slot_chunk.iter_mut().zip(item_chunk.iter()) {
                     *slot = Some(f(item));
                 }

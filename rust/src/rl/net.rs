@@ -159,6 +159,11 @@ struct Offsets {
 ///
 /// Not `Sync`: the reusable [`Scratch`] sits behind a `RefCell`, so a
 /// net is single-threaded state — every rollout worker owns its own.
+/// With `jobs > 1` ([`NativeNet::with_jobs`]) the forward/backward/Adam
+/// phases dispatch output-sharded kernels through the global
+/// `util::pool::WorkerPool` from the calling thread; the fixed shard
+/// geometry keeps results bitwise identical to `jobs = 1` at any worker
+/// count (`tests/parallel_determinism.rs` pins this).
 #[derive(Clone, Debug)]
 pub struct NativeNet {
     pub shape: NetShape,
@@ -167,6 +172,8 @@ pub struct NativeNet {
     /// Cached `shape.param_count()` — the per-step rollout forward
     /// validates against this without rebuilding the entry list.
     param_count: usize,
+    /// `> 1`: shard forward/backward/Adam through the worker pool.
+    jobs: usize,
     /// Reusable forward/backward buffers; see [`Scratch`].
     scratch: RefCell<Scratch>,
 }
@@ -198,6 +205,15 @@ struct Scratch {
     dh: Vec<f64>,
     dpre: Vec<f64>,
     grad: Vec<f32>,
+    // whole-minibatch backward buffers for the parallel (`jobs > 1`)
+    // path: [m × act_total] logit grads, [m × hidden] activation /
+    // pre-activation grads, and the Adam per-entry update scratch
+    dlogits_all: Vec<f64>,
+    dh_all: Vec<f64>,
+    dpre_all: Vec<f64>,
+    dh1_all: Vec<f64>,
+    dv_all: Vec<f64>,
+    upd: Vec<f64>,
 }
 
 impl NativeNet {
@@ -220,7 +236,29 @@ impl NativeNet {
         };
         let slices = shape.head_slices();
         let param_count = shape.param_count();
-        NativeNet { shape, slices, off, param_count, scratch: RefCell::new(Scratch::default()) }
+        NativeNet {
+            shape,
+            slices,
+            off,
+            param_count,
+            jobs: 1,
+            scratch: RefCell::new(Scratch::default()),
+        }
+    }
+
+    /// Enable data-parallel kernels: with `jobs > 1` (`0` = all pool
+    /// workers, otherwise clamped to the pool's worker count),
+    /// forward/backward/Adam shards run on the worker pool. Results are
+    /// bitwise identical at every setting — `jobs` is purely a
+    /// throughput knob.
+    pub fn with_jobs(mut self, jobs: usize) -> NativeNet {
+        self.jobs = if jobs == 1 { 1 } else { crate::util::pool::resolve_jobs(jobs) };
+        self
+    }
+
+    /// The effective jobs setting (>= 1).
+    pub fn jobs(&self) -> usize {
+        self.jobs
     }
 
     /// Forward every row of `obs` into the scratch caches via the
@@ -307,6 +345,114 @@ impl NativeNet {
         );
     }
 
+    /// [`NativeNet::forward_cache`] when `jobs > 1`: the same kernel
+    /// sequence with the row-sharded `par_*` variants, plus a
+    /// row-sharded log-softmax. Every output row is produced by exactly
+    /// one shard running the serial op sequence, so the caches are
+    /// bitwise identical to the serial fill.
+    fn forward_cache_par(&self, params: &[f32], obs: &[f32], m: usize, s: &mut Scratch) {
+        let (o, h, a) = (self.shape.obs_dim, self.shape.hidden, self.shape.act_total());
+        let f = &self.off;
+        let pool = crate::util::pool::global();
+        s.h1p.resize(m * h, 0.0);
+        s.h2p.resize(m * h, 0.0);
+        s.logp.resize(m * a, 0.0);
+        s.h1v.resize(m * h, 0.0);
+        s.h2v.resize(m * h, 0.0);
+        s.val.resize(m, 0.0);
+        dense::par_matmul_bias_tanh(
+            pool,
+            obs,
+            m,
+            o,
+            &params[f.pi_w1..f.pi_w1 + o * h],
+            &params[f.pi_b1..f.pi_b1 + h],
+            h,
+            &mut s.h1p,
+        );
+        dense::par_matmul_bias_tanh(
+            pool,
+            &s.h1p,
+            m,
+            h,
+            &params[f.pi_w2..f.pi_w2 + h * h],
+            &params[f.pi_b2..f.pi_b2 + h],
+            h,
+            &mut s.h2p,
+        );
+        dense::par_matmul_bias(
+            pool,
+            &s.h2p,
+            m,
+            h,
+            &params[f.pi_wh..f.pi_wh + h * a],
+            &params[f.pi_bh..f.pi_bh + a],
+            a,
+            &mut s.logp,
+        );
+        // per-head log-softmax, sharded over rows (rows independent; the
+        // per-row loop is verbatim the serial one)
+        let slices = &self.slices;
+        pool.scoped(|scope| {
+            for logp_chunk in s.logp.chunks_mut(dense::PAR_ROW_SHARD * a) {
+                scope.execute(move || {
+                    for row in logp_chunk.chunks_mut(a) {
+                        for &(st, e) in slices {
+                            let seg = &mut row[st..e];
+                            let max =
+                                seg.iter().fold(f32::NEG_INFINITY, |m2, &v| m2.max(v)) as f64;
+                            let lse = max
+                                + seg.iter().map(|&v| (v as f64 - max).exp()).sum::<f64>().ln();
+                            for v in seg.iter_mut() {
+                                *v = (*v as f64 - lse) as f32;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        dense::par_matmul_bias_tanh(
+            pool,
+            obs,
+            m,
+            o,
+            &params[f.vf_w1..f.vf_w1 + o * h],
+            &params[f.vf_b1..f.vf_b1 + h],
+            h,
+            &mut s.h1v,
+        );
+        dense::par_matmul_bias_tanh(
+            pool,
+            &s.h1v,
+            m,
+            h,
+            &params[f.vf_w2..f.vf_w2 + h * h],
+            &params[f.vf_b2..f.vf_b2 + h],
+            h,
+            &mut s.h2v,
+        );
+        dense::matmul_bias(
+            &s.h2v,
+            m,
+            h,
+            &params[f.vf_wh..f.vf_wh + h],
+            &params[f.vf_bh..f.vf_bh + 1],
+            1,
+            &mut s.val,
+        );
+    }
+
+    /// Serial or pool-sharded cache fill, by the `jobs` knob. Both paths
+    /// are bitwise identical; small batches stay serial (shard overhead
+    /// would dominate a `PAR_ROW_SHARD`-or-less forward).
+    fn forward_cache_dispatch(&self, params: &[f32], obs: &[f32], m: usize, s: &mut Scratch) {
+        if self.jobs > 1 && m > dense::PAR_ROW_SHARD {
+            self.forward_cache_par(params, obs, m, s);
+        } else {
+            self.forward_cache(params, obs, m, s);
+        }
+    }
+
     /// Policy forward: per-head log-softmax + value for every
     /// observation row (the `runtime::Engine::policy_forward` shape).
     pub fn forward(&self, params: &[f32], obs: &[f32]) -> Result<ForwardOut> {
@@ -333,7 +479,7 @@ impl NativeNet {
         );
         let m = obs.len() / self.shape.obs_dim;
         let s = &mut *self.scratch.borrow_mut();
-        self.forward_cache(params, obs, m, s);
+        self.forward_cache_dispatch(params, obs, m, s);
         out.logp_all.clear();
         out.logp_all.extend_from_slice(&s.logp);
         out.value.clear();
@@ -357,7 +503,7 @@ impl NativeNet {
         let m = old_logp.len();
         let a = self.shape.act_total();
         let s = &mut *self.scratch.borrow_mut();
-        self.forward_cache(params, obs, m, s);
+        self.forward_cache_dispatch(params, obs, m, s);
         s.probs.resize(m * a, 0.0);
         s.dlp.resize(m, 0.0);
         s.lps.resize(m, 0.0);
@@ -470,6 +616,11 @@ impl NativeNet {
                 && returns.len() == m,
             "minibatch shape mismatch (expected {m} rows)"
         );
+        if self.jobs > 1 {
+            return self.ppo_update_par(
+                params, adam_m, adam_v, step, obs, actions, old_logp, advantages, returns, hyper,
+            );
+        }
 
         let s = &mut *self.scratch.borrow_mut();
         self.forward_cache(params, obs, m, s);
@@ -563,6 +714,242 @@ impl NativeNet {
             &mut new_p,
             &mut new_m,
             &mut new_v,
+        );
+
+        Ok(UpdateOut {
+            params: new_p,
+            adam_m: new_m,
+            adam_v: new_v,
+            stats: UpdateStats {
+                loss: loss as f32,
+                pi_loss: pi_loss as f32,
+                vf_loss: vf_loss as f32,
+                entropy: entropy as f32,
+                approx_kl: approx_kl as f32,
+                clip_frac: clip_frac as f32,
+                grad_norm: gnorm as f32,
+                update_norm: upd_sq.sqrt() as f32,
+            },
+        })
+    }
+
+    /// The `jobs > 1` twin of [`NativeNet::ppo_update`]: the same update
+    /// restructured into whole-minibatch phases so each phase can shard
+    /// across the worker pool with fixed, output-disjoint geometry.
+    ///
+    /// Bit-identity to the serial path: the serial loop interleaves
+    /// per-row head/trunk/value gradient work, but every gradient entry
+    /// still receives its `m` adds in ascending-row order, and every f64
+    /// reduction (`dh`, `dx`) is private to one (row, lane) pair.
+    /// Phasing the loop over the whole minibatch preserves exactly those
+    /// per-entry sequences, and the `par_*` kernels preserve them per
+    /// shard — so params, Adam moments, and stats match the serial
+    /// update bit for bit at any worker count
+    /// (`tests/parallel_determinism.rs`).
+    #[allow(clippy::too_many_arguments)]
+    fn ppo_update_par(
+        &self,
+        params: &[f32],
+        adam_m: &[f32],
+        adam_v: &[f32],
+        step: f32,
+        obs: &[f32],
+        actions: &[i32],
+        old_logp: &[f32],
+        advantages: &[f32],
+        returns: &[f32],
+        hyper: [f32; 3],
+    ) -> Result<UpdateOut> {
+        let pc = self.param_count;
+        let m = old_logp.len();
+        let (o, h, a, nh) =
+            (self.shape.obs_dim, self.shape.hidden, self.shape.act_total(), self.shape.n_heads());
+        let pool = crate::util::pool::global();
+        let s = &mut *self.scratch.borrow_mut();
+        self.forward_cache_dispatch(params, obs, m, s);
+        s.probs.resize(m * a, 0.0);
+        s.dlp.resize(m, 0.0);
+        s.lps.resize(m, 0.0);
+        s.dlogits_all.resize(m * a, 0.0);
+        s.dh_all.resize(m * h, 0.0);
+        s.dpre_all.resize(m * h, 0.0);
+        s.dh1_all.resize(m * h, 0.0);
+        s.dv_all.resize(m, 0.0);
+        s.grad.clear();
+        s.grad.resize(pc, 0.0);
+        let Scratch {
+            h1p,
+            h2p,
+            logp,
+            h1v,
+            h2v,
+            val,
+            probs,
+            dlp,
+            lps,
+            dlogits_all,
+            dh_all,
+            dpre_all,
+            dh1_all,
+            dv_all,
+            grad,
+            upd,
+            ..
+        } = s;
+        let (loss, pi_loss, vf_loss, entropy, approx_kl, clip_frac) = self.loss_terms(
+            logp, val, actions, old_logp, advantages, returns, hyper, probs, dlp, lps,
+        );
+        let ent_coef = hyper[2] as f64;
+        let f = &self.off;
+
+        // read-only views for the pool tasks
+        let (logp, probs, dlp) = (&logp[..], &probs[..], &dlp[..]);
+        let (h1p, h2p, h1v, h2v, val) = (&h1p[..], &h2p[..], &h1v[..], &h2v[..], &val[..]);
+        let slices = &self.slices;
+
+        // phase 1 — d loss / d logits for the whole minibatch, sharded
+        // over rows (rows are independent; the per-row loop is verbatim
+        // the serial one)
+        pool.scoped(|scope| {
+            for (rb, dl_chunk) in dlogits_all.chunks_mut(dense::PAR_ROW_SHARD * a).enumerate() {
+                let b0 = rb * dense::PAR_ROW_SHARD;
+                scope.execute(move || {
+                    for (bi, dlrow) in dl_chunk.chunks_mut(a).enumerate() {
+                        let b = b0 + bi;
+                        let row = &logp[b * a..(b + 1) * a];
+                        let prow = &probs[b * a..(b + 1) * a];
+                        for (hd, &(st, e)) in slices.iter().enumerate() {
+                            let act = st + actions[b * nh + hd] as usize;
+                            let head_ent =
+                                categorical::entropy_from_probs(row, prow, &[(st, e)]);
+                            for j in st..e {
+                                let p = prow[j];
+                                let sel = if j == act { 1.0 } else { 0.0 };
+                                dlrow[j] = dlp[b] * (sel - p)
+                                    + (ent_coef / m as f64) * p * (row[j] as f64 + head_ent);
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        let dlogits_all = &dlogits_all[..];
+
+        // phase 2 — policy head: weight grads + dh2 (lane-sharded
+        // batched kernel), bias grads (column-sharded); each entry gets
+        // its adds in ascending-row order, as the serial loop did
+        dense::par_grad_outer_batch(
+            pool,
+            h2p,
+            m,
+            h,
+            dlogits_all,
+            &params[f.pi_wh..f.pi_wh + h * a],
+            &mut grad[f.pi_wh..f.pi_wh + h * a],
+            a,
+            dh_all,
+        );
+        dense::par_bias_accum(pool, dlogits_all, m, a, &mut grad[f.pi_bh..f.pi_bh + a]);
+
+        // phase 3 — policy trunk. The tanh backward is elementwise (one
+        // independent write per entry) and cheap: it stays inline.
+        for (dp, (&dh2, &act)) in dpre_all.iter_mut().zip(dh_all.iter().zip(h2p.iter())) {
+            *dp = dh2 * (1.0 - (act as f64).powi(2));
+        }
+        dense::par_bias_accum(pool, &dpre_all[..], m, h, &mut grad[f.pi_b2..f.pi_b2 + h]);
+        dense::par_grad_outer_batch(
+            pool,
+            h1p,
+            m,
+            h,
+            &dpre_all[..],
+            &params[f.pi_w2..f.pi_w2 + h * h],
+            &mut grad[f.pi_w2..f.pi_w2 + h * h],
+            h,
+            dh1_all,
+        );
+        for (dp, (&dh1, &act)) in dpre_all.iter_mut().zip(dh1_all.iter().zip(h1p.iter())) {
+            *dp = dh1 * (1.0 - (act as f64).powi(2));
+        }
+        dense::par_bias_accum(pool, &dpre_all[..], m, h, &mut grad[f.pi_b1..f.pi_b1 + h]);
+        dense::par_grad_outer_weights_batch(
+            pool,
+            obs,
+            m,
+            o,
+            &dpre_all[..],
+            &mut grad[f.pi_w1..f.pi_w1 + o * h],
+            h,
+        );
+
+        // phase 4 — value branch. The width-1 head is m·hidden work:
+        // inline, in the serial loop's per-entry order.
+        for (dv, (&v, &r)) in dv_all.iter_mut().zip(val.iter().zip(returns.iter())) {
+            *dv = VF_COEF * 2.0 * (v as f64 - r as f64) / m as f64;
+        }
+        for b in 0..m {
+            let dv = dv_all[b];
+            let h2v_row = &h2v[b * h..(b + 1) * h];
+            for i in 0..h {
+                grad[f.vf_wh + i] += (h2v_row[i] as f64 * dv) as f32;
+            }
+            grad[f.vf_bh] += dv as f32;
+        }
+        for b in 0..m {
+            let dv = dv_all[b];
+            for (i, dst) in dh_all[b * h..(b + 1) * h].iter_mut().enumerate() {
+                *dst = dv * params[f.vf_wh + i] as f64;
+            }
+        }
+        for (dp, (&dhv, &act)) in dpre_all.iter_mut().zip(dh_all.iter().zip(h2v.iter())) {
+            *dp = dhv * (1.0 - (act as f64).powi(2));
+        }
+        dense::par_bias_accum(pool, &dpre_all[..], m, h, &mut grad[f.vf_b2..f.vf_b2 + h]);
+        dense::par_grad_outer_batch(
+            pool,
+            h1v,
+            m,
+            h,
+            &dpre_all[..],
+            &params[f.vf_w2..f.vf_w2 + h * h],
+            &mut grad[f.vf_w2..f.vf_w2 + h * h],
+            h,
+            dh1_all,
+        );
+        for (dp, (&dh1, &act)) in dpre_all.iter_mut().zip(dh1_all.iter().zip(h1v.iter())) {
+            *dp = dh1 * (1.0 - (act as f64).powi(2));
+        }
+        dense::par_bias_accum(pool, &dpre_all[..], m, h, &mut grad[f.vf_b1..f.vf_b1 + h]);
+        dense::par_grad_outer_weights_batch(
+            pool,
+            obs,
+            m,
+            o,
+            &dpre_all[..],
+            &mut grad[f.vf_w1..f.vf_w1 + o * h],
+            h,
+        );
+
+        // clip stays serial (one global ascending-index reduction), Adam
+        // shards per-entry math and reduces Σ update² serially
+        let gnorm = adam::clip_global_norm(grad, MAX_GRAD_NORM);
+        let lr = hyper[0] as f64;
+        let (mut new_p, mut new_m, mut new_v) = (Vec::new(), Vec::new(), Vec::new());
+        let upd_sq = adam::par_fused_step(
+            pool,
+            params,
+            adam_m,
+            adam_v,
+            grad,
+            lr,
+            ADAM_BETA1,
+            ADAM_BETA2,
+            ADAM_EPS,
+            step as f64,
+            &mut new_p,
+            &mut new_m,
+            &mut new_v,
+            upd,
         );
 
         Ok(UpdateOut {

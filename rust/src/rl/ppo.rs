@@ -56,6 +56,15 @@ pub struct PpoConfig {
     /// loop; larger values fill the rollout K transitions per
     /// `step_batch` call.
     pub n_envs: usize,
+    /// Worker threads for the native backend's data-parallel path:
+    /// env stepping, minibatch forward/backward shards and the Adam
+    /// step all ride `util::pool`. `1` (the default) keeps every
+    /// computation on the calling thread; `0` means all pool workers;
+    /// any other value is clamped to the pool size. Results are
+    /// bit-identical at every setting — shard geometry is fixed by the
+    /// problem shape, never by the worker count. The AOT backend
+    /// ignores this.
+    pub jobs: usize,
 }
 
 impl PpoConfig {
@@ -76,6 +85,7 @@ impl PpoConfig {
             episode_len: 2,
             reward_scale: 100.0,
             n_envs: 1,
+            jobs: 1,
         }
     }
 
@@ -95,6 +105,7 @@ impl PpoConfig {
             episode_len: h.episode_length,
             reward_scale: 100.0,
             n_envs: 1,
+            jobs: 1,
         }
     }
 
@@ -331,7 +342,7 @@ pub fn train_ppo_with(
         PpoBackend::Native => {
             let shape = NetShape::for_layout(&layout);
             let params = init_param_entries(&shape.param_entries(), shape.param_count(), seed);
-            (Exec::Native(NativeNet::new(shape)), params)
+            (Exec::Native(NativeNet::new(shape).with_jobs(cfg.jobs)), params)
         }
     };
 
@@ -423,25 +434,59 @@ pub fn train_ppo_with(
     let minibatches_per_iter = cfg.n_epoch * (cfg.n_steps / mb);
     let mut perm_flat = vec![0i32; minibatches_per_iter * mb];
 
+    // On the native backend the K per-env policy forwards collapse into
+    // one batched forward over all of `obs_flat`: the dense kernels
+    // treat rows independently, so every row of the batched output is
+    // bitwise identical to its single-row forward, and sampling still
+    // walks envs in ascending order (the RNG stream is unchanged). The
+    // AOT artifact is traced for single-row forwards and keeps the
+    // per-env loop.
+    let batched_fwd = matches!(exec, Exec::Native(_)) && n_envs > 1;
+    let act_total = head_slices.last().map_or(0, |&(_, end)| end);
+    // Env stepping fans the K independent env transitions out over the
+    // shared worker pool when `jobs` allows more than one thread.
+    let env_jobs = if cfg.jobs == 1 {
+        1
+    } else {
+        crate::util::pool::resolve_jobs(cfg.jobs)
+    };
+
     while steps < cfg.total_timesteps {
         // ---- rollout (device-resident params via ForwardSession) ----
         buffer.clear();
         let session = exec.forward_session(&params)?;
         for t in 0..t_len {
-            for e in 0..n_envs {
-                // the policy consumes its env's row of obs_flat directly;
-                // the same rows are what the buffer records below
-                session.forward_into(&obs_flat[e * OBS_DIM..(e + 1) * OBS_DIM], &mut fwd)?;
-                log_probs[e] = categorical::sample_action(
-                    &fwd.logp_all,
-                    &head_slices,
-                    &mut rng,
-                    &mut actions[e],
-                );
-                values[e] = fwd.value[0];
+            if batched_fwd {
+                // one forward over all K rows of obs_flat; rows are
+                // independent, so env e's slice is bitwise the same as
+                // its single-row forward
+                session.forward_into(&obs_flat, &mut fwd)?;
+                for e in 0..n_envs {
+                    log_probs[e] = categorical::sample_action(
+                        &fwd.logp_all[e * act_total..(e + 1) * act_total],
+                        &head_slices,
+                        &mut rng,
+                        &mut actions[e],
+                    );
+                    values[e] = fwd.value[e];
+                }
+            } else {
+                for e in 0..n_envs {
+                    // the policy consumes its env's row of obs_flat
+                    // directly; the same rows are what the buffer
+                    // records below
+                    session.forward_into(&obs_flat[e * OBS_DIM..(e + 1) * OBS_DIM], &mut fwd)?;
+                    log_probs[e] = categorical::sample_action(
+                        &fwd.logp_all,
+                        &head_slices,
+                        &mut rng,
+                        &mut actions[e],
+                    );
+                    values[e] = fwd.value[0];
+                }
             }
             // one step_batch call fills the K transitions of rollout row t
-            vec_env.step_batch_into(&actions, &mut step_buf);
+            vec_env.step_batch_par_into(&actions, &mut step_buf, env_jobs);
             buffer.push_step_batch(t, &obs_flat, &actions, &log_probs, &values, &step_buf);
             for (e, step) in step_buf.iter().enumerate() {
                 ep_acc[e] += step.reward;
@@ -459,9 +504,14 @@ pub fn train_ppo_with(
                 steps += 1;
             }
         }
-        for e in 0..n_envs {
-            session.forward_into(&obs_flat[e * OBS_DIM..(e + 1) * OBS_DIM], &mut fwd)?;
-            last_values[e] = fwd.value[0];
+        if batched_fwd {
+            session.forward_into(&obs_flat, &mut fwd)?;
+            last_values.copy_from_slice(&fwd.value);
+        } else {
+            for e in 0..n_envs {
+                session.forward_into(&obs_flat[e * OBS_DIM..(e + 1) * OBS_DIM], &mut fwd)?;
+                last_values[e] = fwd.value[0];
+            }
         }
         drop(session);
         buffer.compute_gae_batched(&last_values, cfg.gamma, cfg.gae_lambda, cfg.reward_scale);

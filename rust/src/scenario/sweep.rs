@@ -215,7 +215,12 @@ pub fn run_scenario(
     // driver.
     let rl_seeds = s.rl_seeds(&budget);
     if !rl_seeds.is_empty() {
-        let ppo = s.ppo_config(&budget);
+        let mut ppo = s.ppo_config(&budget);
+        // Each native agent also shards its own minibatch kernels and
+        // env stepping through the shared pool (`PpoConfig::jobs`) —
+        // jobs-invariant down to the bits, so the scenario result is
+        // unchanged by this inner fan-out.
+        ppo.jobs = jobs;
         let per_seed = parallel_map(&rl_seeds, jobs, |&seed| {
             // engine: None pins the native backend — pure in
             // (space, calib, ppo, seed), so the fan-out stays
@@ -354,7 +359,10 @@ pub fn run_scenario_shared(
     }
     let rl_seeds = s.rl_seeds(&budget);
     if !rl_seeds.is_empty() {
-        let ppo = s.ppo_config(&budget);
+        let mut ppo = s.ppo_config(&budget);
+        // Native agents shard minibatch kernels / env stepping through
+        // the shared pool too — bit-identical at any jobs value.
+        ppo.jobs = jobs;
         let per_seed = parallel_map(&rl_seeds, jobs, |&seed| {
             let driver = PpoDriver { engine: None, ppo, calib: calib.clone() };
             rl_seed_candidates(&driver, &space, &calib, seed)

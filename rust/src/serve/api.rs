@@ -9,7 +9,7 @@
 //! | `GET /jobs/<id>/results.csv` | the candidate table (`report::csv` bytes)|
 //! | `DELETE /jobs/<id>`          | cancel (200) / conflict (409)            |
 //! | `GET /healthz`               | 200 `{"status":"ok"}`                    |
-//! | `GET /metrics`               | queue, cache, and throughput counters    |
+//! | `GET /metrics`               | queue, cache, worker-pool and throughput counters (plus the running job's live evals/sec) |
 //!
 //! Floats are emitted through `util::json`'s shortest-round-trip
 //! `Display`, so every f64 in a response (`reward` above all) parses
@@ -59,7 +59,8 @@ fn metrics(state: &ServerState) -> Response {
     let uptime = state.uptime_secs();
     let evals_total = cache.hits + cache.misses;
     let evals_per_sec = if uptime > 0.0 { evals_total as f64 / uptime } else { 0.0 };
-    json_ok(obj(vec![
+    let pool = crate::util::pool::global();
+    let mut fields = vec![
         ("uptime_secs", Json::Num(uptime)),
         (
             "jobs",
@@ -80,9 +81,27 @@ fn metrics(state: &ServerState) -> Response {
                 ("hit_rate", Json::Num(cache.hit_rate())),
             ]),
         ),
+        (
+            "pool",
+            obj(vec![
+                ("workers", Json::Num(pool.workers() as f64)),
+                ("tasks_executed", Json::Num(pool.tasks_executed() as f64)),
+            ]),
+        ),
         ("evals_total", Json::Num(evals_total as f64)),
         ("evals_per_sec", Json::Num(evals_per_sec)),
-    ]))
+    ];
+    if let Some((id, evals, rate)) = state.running_job_rate() {
+        fields.push((
+            "running_job",
+            obj(vec![
+                ("id", Json::Num(id as f64)),
+                ("evals", Json::Num(evals as f64)),
+                ("evals_per_sec", Json::Num(rate)),
+            ]),
+        ));
+    }
+    json_ok(obj(fields))
 }
 
 fn submit(state: &ServerState, req: &Request) -> Response {
@@ -258,6 +277,24 @@ mod tests {
         assert_eq!(v.req("jobs").req("queued").as_usize(), Some(0));
         assert_eq!(v.req("cache").req("hit_rate").as_f64(), Some(0.0));
         assert_eq!(v.req("evals_total").as_usize(), Some(0));
+        assert!(v.req("pool").req("workers").as_usize().unwrap() >= 1);
+        assert!(v.req("pool").req("tasks_executed").as_usize().is_some());
+        assert!(v.get("running_job").is_none(), "idle server reports no running job");
+    }
+
+    #[test]
+    fn metrics_reports_running_job_rate_while_sampled() {
+        let st = ServerState::new(None, 0);
+        st.submit(crate::scenario::Scenario::baseline(), 1);
+        st.note_job_started(1);
+        let resp = handle(&st, &get("/metrics"));
+        let v = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(v.req("running_job").req("id").as_usize(), Some(1));
+        assert_eq!(v.req("running_job").req("evals").as_usize(), Some(0));
+        st.note_job_finished(1);
+        let resp = handle(&st, &get("/metrics"));
+        let v = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert!(v.get("running_job").is_none());
     }
 
     #[test]

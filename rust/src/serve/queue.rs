@@ -23,7 +23,11 @@ use super::state::{JobResult, ServerState};
 /// shared cache for its `(space, calib)` fingerprint, store the result.
 pub fn worker_loop(state: Arc<ServerState>) {
     while let Some((id, scenario, jobs, cancel)) = state.wait_for_job() {
+        // Bracket the run so /metrics can report the live job's
+        // evals/sec from the shared-cache counter delta.
+        state.note_job_started(id);
         run_one(&state, id, &scenario, jobs, &cancel);
+        state.note_job_finished(id);
     }
 }
 

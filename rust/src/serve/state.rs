@@ -109,6 +109,16 @@ pub enum CancelOutcome {
     NotFound,
 }
 
+/// Throughput sample for the currently running job: pickup time plus
+/// the cache-lookup total at pickup. One job runs at a time, so the
+/// counter delta since pickup is exactly this job's eval count.
+#[derive(Clone, Copy, Debug)]
+struct RunningEval {
+    id: u64,
+    started: Instant,
+    evals_at_start: u64,
+}
+
 pub struct ServerState {
     jobs: Mutex<Vec<JobRecord>>,
     queue_cv: Condvar,
@@ -118,6 +128,8 @@ pub struct ServerState {
     /// invariant that an `EvalCache` serves exactly one pairing, held
     /// across jobs and (via snapshots under `cache_dir`) restarts.
     caches: Mutex<HashMap<u64, SharedEvalCache>>,
+    /// `/metrics` live-throughput sample; set/cleared by the worker.
+    running_eval: Mutex<Option<RunningEval>>,
     pub cache_dir: Option<PathBuf>,
     pub default_jobs: usize,
 }
@@ -130,6 +142,7 @@ impl ServerState {
             shutdown: AtomicBool::new(false),
             started: Instant::now(),
             caches: Mutex::new(HashMap::new()),
+            running_eval: Mutex::new(None),
             cache_dir,
             default_jobs,
         }
@@ -304,6 +317,42 @@ impl ServerState {
             }
         }
         written
+    }
+
+    fn lock_running(&self) -> MutexGuard<'_, Option<RunningEval>> {
+        self.running_eval.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Worker side: job `id` was picked up — start the `/metrics`
+    /// throughput sample from the current cache-lookup totals.
+    pub fn note_job_started(&self, id: u64) {
+        let t = self.cache_totals();
+        *self.lock_running() = Some(RunningEval {
+            id,
+            started: Instant::now(),
+            evals_at_start: t.hits + t.misses,
+        });
+    }
+
+    /// Worker side: job `id` reached a terminal phase — stop sampling.
+    /// Ignores stale ids so a late call cannot clobber a newer sample.
+    pub fn note_job_finished(&self, id: u64) {
+        let mut slot = self.lock_running();
+        if slot.map(|r| r.id) == Some(id) {
+            *slot = None;
+        }
+    }
+
+    /// `/metrics` view of the running job: `(id, evals so far,
+    /// evals/sec)` from the shared-cache counter delta since pickup
+    /// (exact under the one-job-at-a-time worker). `None` when idle.
+    pub fn running_job_rate(&self) -> Option<(u64, u64, f64)> {
+        let r = (*self.lock_running())?;
+        let t = self.cache_totals();
+        let evals = (t.hits + t.misses).saturating_sub(r.evals_at_start);
+        let secs = r.started.elapsed().as_secs_f64();
+        let rate = if secs > 0.0 { evals as f64 / secs } else { 0.0 };
+        Some((r.id, evals, rate))
     }
 
     pub fn uptime_secs(&self) -> f64 {

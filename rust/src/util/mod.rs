@@ -7,12 +7,13 @@
 //! argument parser ([`cli`]), ASCII table rendering ([`table`]), a
 //! criterion-style micro-benchmark harness ([`bench`]), a
 //! proptest-style property-testing framework with shrinking
-//! ([`proptest`]) and a TOML-subset parser for scenario files
-//! ([`toml`]).
+//! ([`proptest`]), a TOML-subset parser for scenario files
+//! ([`toml`]) and a persistent scoped worker pool ([`pool`]).
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

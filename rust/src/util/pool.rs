@@ -1,0 +1,416 @@
+//! Persistent scoped worker pool.
+//!
+//! One pool of condvar-parked `std::thread` workers is created lazily per
+//! process ([`global`]) and reused for every parallel region: search-seed
+//! fan-out (`opt::parallel::parallel_map`), sharded net kernels
+//! (`rl::net`), and batched environment stepping (`gym::vec_env`). Reuse
+//! matters because PPO dispatches several parallel regions *per
+//! minibatch*: spawning OS threads at that frequency would dominate the
+//! kernels themselves.
+//!
+//! # Scoped tasks
+//!
+//! [`WorkerPool::scoped`] mirrors `std::thread::scope`: tasks submitted
+//! through the [`Scope`] may borrow from the caller's stack, and
+//! `scoped` does not return until every submitted task has finished.
+//! Internally the borrow lifetime is erased so tasks can sit in the
+//! shared queue; soundness rests on the join-before-return guarantee,
+//! which is upheld even when the closure panics (the scope joins in its
+//! `Drop`).
+//!
+//! # No deadlock under nesting
+//!
+//! The joining thread does not merely park: while its scope has pending
+//! tasks it pops and runs queued tasks itself. This keeps the pool
+//! deadlock-free under nested use — e.g. a sweep fanning scenarios across
+//! the pool while each scenario's PPO agent shards minibatch updates
+//! through the same pool — and means a pool of `N` workers sustains up to
+//! `N + joiners` concurrent tasks.
+//!
+//! # Panic containment
+//!
+//! Each task runs under `catch_unwind` (the same discipline
+//! `serve::queue` applies to jobs): a panicking task marks its scope,
+//! the panic is re-raised on the *joining* thread by `scoped`, and the
+//! pool itself — workers, queue, and unrelated scopes — is unaffected.
+//!
+//! # Ownership of the hardware fallback
+//!
+//! This module is the single place that consults
+//! `available_parallelism()` (and the `CHIPLET_POOL_WORKERS` override)
+//! and defines the fallback when it errors. Callers that need a job
+//! count clamp through [`resolve_jobs`] / `opt::parallel::effective_jobs`
+//! instead of re-deriving hardware counts.
+
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::thread::JoinHandle;
+
+/// A queued task: the erased closure plus the scope it belongs to.
+struct Task {
+    job: Box<dyn FnOnce() + Send + 'static>,
+    scope: Arc<ScopeState>,
+}
+
+/// Per-scope bookkeeping. `pending` is only mutated while holding the
+/// pool's state mutex, so condvar waits on it are race-free; the atomics
+/// just avoid a second mutex.
+struct ScopeState {
+    pending: AtomicUsize,
+    panicked: AtomicBool,
+}
+
+struct PoolState {
+    queue: VecDeque<Task>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Workers park here; notified when a task is pushed or on shutdown.
+    work_cv: Condvar,
+    /// Joiners park here; notified when some scope's pending count hits 0.
+    done_cv: Condvar,
+    tasks_executed: AtomicU64,
+}
+
+impl Shared {
+    fn lock(&self) -> MutexGuard<'_, PoolState> {
+        // Tasks panic inside catch_unwind, never while holding this lock,
+        // but stay poison-tolerant by policy (same idiom as serve::state).
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Run one task and retire it: containment via catch_unwind, pending
+    /// decrement under the state lock, completion broadcast.
+    fn run_task(&self, task: Task) {
+        let Task { job, scope } = task;
+        if catch_unwind(AssertUnwindSafe(job)).is_err() {
+            scope.panicked.store(true, Ordering::Relaxed);
+        }
+        self.tasks_executed.fetch_add(1, Ordering::Relaxed);
+        let st = self.lock();
+        let left = scope.pending.fetch_sub(1, Ordering::Relaxed) - 1;
+        drop(st);
+        if left == 0 {
+            self.done_cv.notify_all();
+        }
+    }
+}
+
+/// A persistent pool of parked worker threads with a scoped task API.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: usize,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Create a pool with `workers` parked threads (clamped to >= 1).
+    pub fn new(workers: usize) -> WorkerPool {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState { queue: VecDeque::new(), shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            tasks_executed: AtomicU64::new(0),
+        });
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let sh = Arc::clone(&shared);
+            let handle = std::thread::Builder::new()
+                .name(format!("chiplet-pool-{i}"))
+                .spawn(move || worker_loop(&sh))
+                .expect("spawn worker pool thread");
+            handles.push(handle);
+        }
+        WorkerPool { shared, workers, handles }
+    }
+
+    /// Number of worker threads (excluding joining threads, which also
+    /// execute tasks while they wait).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Total tasks executed over the pool's lifetime (workers + joiners).
+    pub fn tasks_executed(&self) -> u64 {
+        self.shared.tasks_executed.load(Ordering::Relaxed)
+    }
+
+    /// Run `f` with a [`Scope`] for submitting borrowing tasks; returns
+    /// only after every submitted task has finished. If any task
+    /// panicked, the panic is re-raised here (the pool stays usable).
+    pub fn scoped<'pool, 'scope, R>(
+        &'pool self,
+        f: impl FnOnce(&Scope<'pool, 'scope>) -> R,
+    ) -> R {
+        let scope = Scope {
+            pool: self,
+            state: Arc::new(ScopeState {
+                pending: AtomicUsize::new(0),
+                panicked: AtomicBool::new(false),
+            }),
+            _marker: PhantomData,
+        };
+        let ret = f(&scope); // on panic, Scope::drop still joins
+        scope.join(true);
+        ret
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.lock();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let task = {
+            let mut st = shared.lock();
+            loop {
+                if let Some(task) = st.queue.pop_front() {
+                    break task;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared
+                    .work_cv
+                    .wait(st)
+                    .unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        shared.run_task(task);
+    }
+}
+
+/// Handle for submitting tasks that borrow from the enclosing stack
+/// frame. Created by [`WorkerPool::scoped`]; all tasks are joined before
+/// `scoped` returns.
+pub struct Scope<'pool, 'scope> {
+    pool: &'pool WorkerPool,
+    state: Arc<ScopeState>,
+    /// Invariant in `'scope` so the borrow lifetime cannot be shortened.
+    _marker: PhantomData<std::cell::Cell<&'scope mut ()>>,
+}
+
+impl<'pool, 'scope> Scope<'pool, 'scope> {
+    /// Submit a task. It may run on any worker thread, or on the joining
+    /// thread while it waits for the scope to drain.
+    pub fn execute<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'scope,
+    {
+        let job: Box<dyn FnOnce() + Send + 'scope> = Box::new(f);
+        // SAFETY: the closure may borrow data with lifetime 'scope. The
+        // erased box never outlives that data because Scope joins all
+        // pending tasks before `scoped` returns — including on unwind,
+        // via Scope::drop below.
+        let job: Box<dyn FnOnce() + Send + 'static> = unsafe {
+            std::mem::transmute::<
+                Box<dyn FnOnce() + Send + 'scope>,
+                Box<dyn FnOnce() + Send + 'static>,
+            >(job)
+        };
+        let shared = &self.pool.shared;
+        {
+            let mut st = shared.lock();
+            self.state.pending.fetch_add(1, Ordering::Relaxed);
+            st.queue.push_back(Task { job, scope: Arc::clone(&self.state) });
+        }
+        shared.work_cv.notify_one();
+    }
+
+    /// Wait until every task of this scope has finished, running queued
+    /// tasks on this thread while waiting (work-conserving, and the
+    /// reason nested scopes cannot deadlock). With `propagate`, re-raise
+    /// a contained task panic once the scope is drained.
+    fn join(&self, propagate: bool) {
+        let shared = &self.pool.shared;
+        let mut st = shared.lock();
+        loop {
+            if self.state.pending.load(Ordering::Relaxed) == 0 {
+                break;
+            }
+            if let Some(task) = st.queue.pop_front() {
+                drop(st);
+                shared.run_task(task);
+                st = shared.lock();
+            } else {
+                st = shared
+                    .done_cv
+                    .wait(st)
+                    .unwrap_or_else(|e| e.into_inner());
+            }
+        }
+        drop(st);
+        if propagate && self.state.panicked.load(Ordering::Relaxed) {
+            panic!("worker pool task panicked");
+        }
+    }
+}
+
+impl<'pool, 'scope> Drop for Scope<'pool, 'scope> {
+    fn drop(&mut self) {
+        // Joining here (without propagation) upholds the soundness
+        // guarantee when the scoped closure itself unwinds; the normal
+        // path already joined, making this a no-op.
+        self.join(false);
+    }
+}
+
+/// The process-wide pool, created on first use with [`default_workers`]
+/// threads. Never torn down; workers park when idle.
+pub fn global() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| WorkerPool::new(default_workers()))
+}
+
+/// Worker count for the global pool: the `CHIPLET_POOL_WORKERS` env var
+/// when set to a positive integer (CI uses this to run the determinism
+/// suite at fixed pool sizes), otherwise `available_parallelism()`,
+/// falling back to 1 when the hardware count is unavailable. This is the
+/// single place that fallback lives.
+pub fn default_workers() -> usize {
+    if let Ok(raw) = std::env::var("CHIPLET_POOL_WORKERS") {
+        if let Ok(n) = raw.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Map a requested job count to an effective one: `0` means "all
+/// workers", anything else is clamped to the global pool's actual worker
+/// count. Always >= 1.
+pub fn resolve_jobs(requested: usize) -> usize {
+    let workers = global().workers();
+    if requested == 0 {
+        workers.max(1)
+    } else {
+        requested.min(workers).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn executes_all_tasks_with_borrows() {
+        let pool = WorkerPool::new(4);
+        let mut out = vec![0usize; 64];
+        pool.scoped(|scope| {
+            for (i, slot) in out.iter_mut().enumerate() {
+                scope.execute(move || *slot = i * i);
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i * i);
+        }
+        assert_eq!(pool.tasks_executed(), 64);
+    }
+
+    #[test]
+    fn nested_scopes_do_not_deadlock() {
+        // More nested scopes than workers: only safe because joiners
+        // execute queued tasks while they wait.
+        let pool = WorkerPool::new(2);
+        let total = AtomicUsize::new(0);
+        pool.scoped(|outer| {
+            for _ in 0..8 {
+                let (pool, total) = (&pool, &total);
+                outer.execute(move || {
+                    pool.scoped(|inner| {
+                        for _ in 0..4 {
+                            inner.execute(|| {
+                                total.fetch_add(1, Ordering::Relaxed);
+                            });
+                        }
+                    });
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn panicking_task_does_not_poison_the_pool() {
+        let pool = WorkerPool::new(2);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scoped(|scope| {
+                scope.execute(|| panic!("task boom"));
+                for _ in 0..4 {
+                    scope.execute(|| {});
+                }
+            });
+        }));
+        assert!(result.is_err(), "scoped must re-raise the task panic");
+        // The pool survives and runs subsequent scopes normally.
+        let count = AtomicUsize::new(0);
+        pool.scoped(|scope| {
+            for _ in 0..16 {
+                scope.execute(|| {
+                    count.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 16);
+        assert!(pool.tasks_executed() >= 21);
+    }
+
+    #[test]
+    fn panicking_scope_closure_still_joins_in_flight_tasks() {
+        let pool = WorkerPool::new(2);
+        let ran = AtomicUsize::new(0);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scoped(|scope| {
+                for _ in 0..8 {
+                    scope.execute(|| {
+                        ran.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+                panic!("closure boom");
+            });
+        }));
+        assert!(result.is_err());
+        // Drop-join must have drained the scope before unwinding past
+        // the borrowed counter.
+        assert_eq!(ran.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn drop_shuts_workers_down() {
+        let pool = WorkerPool::new(3);
+        pool.scoped(|scope| {
+            for _ in 0..6 {
+                scope.execute(|| {});
+            }
+        });
+        drop(pool); // joins all workers; must not hang
+    }
+
+    #[test]
+    fn resolve_jobs_clamps_to_pool_workers() {
+        let workers = global().workers();
+        assert!(workers >= 1);
+        assert_eq!(resolve_jobs(0), workers.max(1));
+        assert_eq!(resolve_jobs(1), 1);
+        assert!(resolve_jobs(usize::MAX) <= workers.max(1));
+    }
+}

@@ -3,6 +3,13 @@
 //! value — for SA, GA, greedy and mixed portfolios, and for
 //! placement-optimized scenario sweeps — plus the NaN-argmax
 //! regression tests.
+//!
+//! The back half extends the contract to the native PPO backend's
+//! data-parallel path (`PpoConfig::jobs`): chained minibatch updates
+//! pinned bitwise against the frozen `kernels::oracle::ScalarNet`, and
+//! whole training runs bit-identical at jobs 1/2/8/0. CI re-runs this
+//! file under `CHIPLET_POOL_WORKERS` 1/2/8, so the same assertions hold
+//! at genuinely different pool sizes.
 
 use chiplet_gym::cost::{evaluate, Calib};
 use chiplet_gym::scenario::registry;
@@ -220,4 +227,158 @@ fn reward_cmp_total_order_on_specials() {
     assert_eq!(reward_cmp(f64::NAN, f64::NAN), Ordering::Equal);
     assert_eq!(reward_cmp(f64::NEG_INFINITY, f64::NAN), Ordering::Greater);
     assert_eq!(reward_cmp(f64::INFINITY, f64::NEG_INFINITY), Ordering::Greater);
+}
+
+// ---- native PPO data parallelism: `PpoConfig::jobs` bit-identity ----
+
+use chiplet_gym::gym::{ChipletGymEnv, OBS_DIM};
+use chiplet_gym::kernels::oracle::ScalarNet;
+use chiplet_gym::rl::{
+    init::init_param_entries, train_ppo_native, NativeNet, NetShape, PpoConfig,
+};
+use chiplet_gym::util::Rng;
+
+/// One synthetic PPO minibatch of `m` rows for a given action layout.
+#[allow(clippy::type_complexity)]
+fn synthetic_batch(
+    dims: &[usize],
+    m: usize,
+    rng: &mut Rng,
+) -> (Vec<f32>, Vec<i32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let obs: Vec<f32> = (0..m * OBS_DIM).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+    let mut act = Vec::with_capacity(m * dims.len());
+    for _ in 0..m {
+        for &d in dims {
+            act.push(rng.below(d as u64) as i32);
+        }
+    }
+    let lp: Vec<f32> = (0..m).map(|_| rng.range_f64(-6.0, -0.5) as f32).collect();
+    let adv: Vec<f32> = (0..m).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect();
+    let ret: Vec<f32> = (0..m).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+    (obs, act, lp, adv, ret)
+}
+
+#[test]
+fn native_net_chained_updates_match_the_oracle_at_jobs_1_2_8() {
+    // The 15-head learned-placement layout, batch 64 — the perf
+    // target's shape. Four chained updates amplify any divergence:
+    // one wrong bit in update t corrupts every later step.
+    let layout = DesignSpace::case_i().with_placement_head().layout();
+    let shape = NetShape::for_layout(&layout);
+    let dims = shape.dims.clone();
+    let hyper = [3e-4f32, 0.2, 0.1];
+    let m = 64usize;
+
+    let mut rng = Rng::new(11);
+    let p0 = init_param_entries(&shape.param_entries(), shape.param_count(), 0);
+    let batches: Vec<_> = (0..4).map(|_| synthetic_batch(&dims, m, &mut rng)).collect();
+
+    // Frozen scalar oracle chain: the ground truth every jobs value
+    // must hit bit for bit.
+    let oracle = ScalarNet::new(shape.clone());
+    let (mut p, mut am, mut av) = (p0.clone(), vec![0f32; p0.len()], vec![0f32; p0.len()]);
+    let mut want = Vec::new();
+    for (t, (obs, act, lp, adv, ret)) in batches.iter().enumerate() {
+        let out = oracle
+            .ppo_update(&p, &am, &av, (t + 1) as f32, obs, act, lp, adv, ret, hyper)
+            .unwrap();
+        p = out.params.clone();
+        am = out.adam_m.clone();
+        av = out.adam_v.clone();
+        want.push(out);
+    }
+
+    for jobs in [1usize, 2, 8] {
+        let net = NativeNet::new(shape.clone()).with_jobs(jobs);
+        let (mut p, mut am, mut av) = (p0.clone(), vec![0f32; p0.len()], vec![0f32; p0.len()]);
+        for (t, (obs, act, lp, adv, ret)) in batches.iter().enumerate() {
+            let out = net
+                .ppo_update(&p, &am, &av, (t + 1) as f32, obs, act, lp, adv, ret, hyper)
+                .unwrap();
+            let w = &want[t];
+            for (i, (a, b)) in out.params.iter().zip(w.params.iter()).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "jobs {jobs} update {t} param {i}");
+            }
+            for (a, b) in out.adam_m.iter().zip(w.adam_m.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "jobs {jobs} update {t} adam_m");
+            }
+            for (a, b) in out.adam_v.iter().zip(w.adam_v.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "jobs {jobs} update {t} adam_v");
+            }
+            for (g, wv, name) in [
+                (out.stats.loss, w.stats.loss, "loss"),
+                (out.stats.pi_loss, w.stats.pi_loss, "pi_loss"),
+                (out.stats.vf_loss, w.stats.vf_loss, "vf_loss"),
+                (out.stats.entropy, w.stats.entropy, "entropy"),
+                (out.stats.approx_kl, w.stats.approx_kl, "approx_kl"),
+                (out.stats.clip_frac, w.stats.clip_frac, "clip_frac"),
+                (out.stats.grad_norm, w.stats.grad_norm, "grad_norm"),
+                (out.stats.update_norm, w.stats.update_norm, "update_norm"),
+            ] {
+                assert_eq!(g.to_bits(), wv.to_bits(), "jobs {jobs} update {t} {name}");
+            }
+            p = out.params;
+            am = out.adam_m;
+            av = out.adam_v;
+        }
+    }
+}
+
+#[test]
+fn native_ppo_training_is_bit_identical_at_jobs_1_2_8() {
+    // Full train_ppo_native runs over a multi-env rollout: every
+    // iteration statistic, the best design and the final policy must be
+    // bitwise independent of the jobs setting (0 = all pool workers).
+    let mut cfg = PpoConfig::paper();
+    cfg.total_timesteps = 256;
+    cfg.n_steps = 128;
+    cfg.batch_size = 32;
+    cfg.n_epoch = 2;
+    cfg.n_envs = 4;
+    let run = |jobs: usize| {
+        let mut c = cfg;
+        c.jobs = jobs;
+        let mut env = ChipletGymEnv::case_i();
+        train_ppo_native(&mut env, &c, 9).expect("native ppo")
+    };
+    let base = run(1);
+    for jobs in [2usize, 8, 0] {
+        let t = run(jobs);
+        assert_eq!(t.best_action, base.best_action, "jobs {jobs}");
+        assert_eq!(t.best_reward.to_bits(), base.best_reward.to_bits(), "jobs {jobs}");
+        assert_eq!(t.final_policy_action, base.final_policy_action, "jobs {jobs}");
+        assert_eq!(t.timesteps, base.timesteps, "jobs {jobs}");
+        assert_eq!(t.history.len(), base.history.len(), "jobs {jobs}");
+        for (a, b) in t.history.iter().zip(base.history.iter()) {
+            assert_eq!(a.ep_rew_mean.to_bits(), b.ep_rew_mean.to_bits(), "jobs {jobs}");
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "jobs {jobs}");
+            assert_eq!(a.entropy.to_bits(), b.entropy.to_bits(), "jobs {jobs}");
+            assert_eq!(a.approx_kl.to_bits(), b.approx_kl.to_bits(), "jobs {jobs}");
+        }
+    }
+}
+
+#[test]
+fn learned_placement_training_is_jobs_invariant_too() {
+    // Same contract on the 15-head space, where the parallel gradient
+    // shards cross the policy-head/value-branch split differently.
+    let mut cfg = PpoConfig::paper();
+    cfg.total_timesteps = 128;
+    cfg.n_steps = 64;
+    cfg.batch_size = 32;
+    cfg.n_epoch = 2;
+    let run = |jobs: usize| {
+        let mut c = cfg;
+        c.jobs = jobs;
+        let space = DesignSpace::case_i().with_placement_head();
+        let mut env = ChipletGymEnv::new(space, Calib::default(), c.episode_len);
+        train_ppo_native(&mut env, &c, 3).expect("15-head ppo")
+    };
+    let base = run(1);
+    for jobs in [2usize, 8] {
+        let t = run(jobs);
+        assert_eq!(t.best_action, base.best_action, "jobs {jobs}");
+        assert_eq!(t.best_reward.to_bits(), base.best_reward.to_bits(), "jobs {jobs}");
+        assert_eq!(t.final_policy_action, base.final_policy_action, "jobs {jobs}");
+    }
 }
